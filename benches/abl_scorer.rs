@@ -1,0 +1,51 @@
+//! Ablation: Pallas/PJRT placement scorer vs the pure-Rust reference.
+//! Checks (a) decision agreement on identical inputs and (b) throughput
+//! (scorings/second) — the PJRT path pays artifact-execution overhead at
+//! this tiny shape on CPU, which is the documented trade-off (on real TPU
+//! hardware the roles invert at scale; DESIGN.md §7).
+
+use rucio::benchkit::{bench, section};
+use rucio::placement::DEFAULT_WEIGHTS;
+use rucio::runtime::{artifacts_available, ref_placement_score, Runtime};
+
+fn main() {
+    section("Ablation: PJRT (Pallas) scorer vs pure-Rust reference");
+    if !artifacts_available() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load_default().unwrap();
+    let d = rt.manifest.n_features;
+    let n = 64usize;
+    let features: Vec<f32> = (0..n * d).map(|i| ((i * 31 % 17) as f32 - 8.0) / 5.0).collect();
+    let mask: Vec<f32> = (0..n).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+    let weights = DEFAULT_WEIGHTS.to_vec();
+
+    // agreement
+    let (s_ref, p_ref) = ref_placement_score(&features, &weights, &mask);
+    let (s_pjrt, p_pjrt) = rt.placement_score(&features, &weights, &mask).unwrap();
+    let argmax = |v: &[f32]| {
+        v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    };
+    assert_eq!(argmax(&p_ref), argmax(&p_pjrt), "identical decisions");
+    let max_delta = s_ref
+        .iter()
+        .zip(&s_pjrt)
+        .filter(|(r, _)| **r > -1e29)
+        .map(|(r, p)| (r - p).abs())
+        .fold(0f32, f32::max);
+    println!("max |score delta| on valid rows: {max_delta:.2e}\n");
+
+    // throughput
+    let r_ref = bench("rust reference scorer (64 cand)", 20, 200, || {
+        std::hint::black_box(ref_placement_score(&features, &weights, &mask));
+    });
+    let r_pjrt = bench("PJRT Pallas scorer     (64 cand)", 20, 200, || {
+        std::hint::black_box(rt.placement_score(&features, &weights, &mask).unwrap());
+    });
+    println!(
+        "\nPJRT/ref time ratio: {:.1}x (CPU interpret path; structure, not wallclock, is the TPU signal)",
+        r_pjrt.mean_ns / r_ref.mean_ns
+    );
+    println!("abl_scorer bench OK");
+}

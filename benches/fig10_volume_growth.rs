@@ -1,0 +1,57 @@
+//! Fig 10 reproduction: total managed volume over time — the paper shows
+//! near-linear growth "both during and between data taking periods",
+//! approaching 450 PB at the end of 2018. Shape check: monotone growth
+//! with a roughly constant daily increment once deletion reaches steady
+//! state.
+
+use rucio::benchkit::{section, Table};
+use rucio::common::clock::MINUTE_MS;
+use rucio::common::config::Config;
+use rucio::common::units::fmt_bytes;
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::GridSpec;
+use rucio::sim::workload::WorkloadSpec;
+
+fn main() {
+    section("Fig 10: total managed volume over time");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, ..Default::default() },
+        WorkloadSpec::default(),
+        Config::new(),
+    );
+    let days = 14;
+    driver.run_days(days, 10 * MINUTE_MS);
+
+    let mut table = Table::new("managed volume by day", &["day", "volume", "files", "replicas"]);
+    for d in &driver.days {
+        table.row(&[
+            d.day.to_string(),
+            fmt_bytes(d.bytes_managed),
+            d.files.to_string(),
+            d.replicas.to_string(),
+        ]);
+    }
+    table.print();
+
+    // shape: strictly growing in the accumulation phase
+    let vols: Vec<u64> = driver.days.iter().map(|d| d.bytes_managed).collect();
+    let grew = vols.windows(2).filter(|w| w[1] > w[0]).count();
+    println!(
+        "\ngrowth days: {grew}/{} | first={} last={}",
+        vols.len() - 1,
+        fmt_bytes(vols[0]),
+        fmt_bytes(*vols.last().unwrap())
+    );
+    assert!(
+        grew as f64 >= (vols.len() - 1) as f64 * 0.8,
+        "volume must grow on >=80% of days (linear growth shape)"
+    );
+    // roughly linear: second-half increment within 3x of first-half
+    let mid = vols.len() / 2;
+    let inc1 = vols[mid].saturating_sub(vols[0]).max(1);
+    let inc2 = vols.last().unwrap().saturating_sub(vols[mid]).max(1);
+    let ratio = inc2 as f64 / inc1 as f64;
+    println!("half-to-half increment ratio: {ratio:.2} (1.0 = perfectly linear)");
+    assert!((0.3..3.0).contains(&ratio), "growth should be near-linear");
+    println!("fig10 bench OK");
+}

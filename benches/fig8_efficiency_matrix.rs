@@ -1,0 +1,64 @@
+//! Fig 8 reproduction: the region×region transfer-efficiency matrix.
+//! We do not match absolute cells (our substrate is a simulator); the
+//! *structure* must hold: CERN/CA/ND/RU rows strong, DE/ES/US rows weak,
+//! overall efficiencies in the 40–100% band the paper shows.
+
+use rucio::benchkit::section;
+use rucio::common::clock::MINUTE_MS;
+use rucio::common::config::Config;
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::{GridSpec, REGIONS};
+use rucio::sim::workload::WorkloadSpec;
+
+fn main() {
+    section("Fig 8: transfer efficiency matrix (src region x dst region)");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, ..Default::default() },
+        WorkloadSpec { analysis_accesses_per_day: 200, ..Default::default() },
+        Config::new(),
+    );
+    driver.run_days(12, 10 * MINUTE_MS);
+    let matrix = driver.efficiency_matrix();
+
+    print!("{:>6}", "");
+    for dst in REGIONS {
+        print!("{dst:>6}");
+    }
+    println!();
+    let mut row_means: Vec<(String, f64)> = Vec::new();
+    for src in REGIONS {
+        print!("{src:>6}");
+        let mut sum = 0.0;
+        let mut n = 0;
+        for dst in REGIONS {
+            match matrix.get(&(src.to_string(), dst.to_string())) {
+                Some(eff) => {
+                    print!("{:>5.0}%", eff * 100.0);
+                    sum += eff;
+                    n += 1;
+                }
+                None => print!("{:>6}", "-"),
+            }
+        }
+        println!();
+        if n > 0 {
+            row_means.push((src.to_string(), sum / n as f64));
+        }
+    }
+
+    println!("\nrow means (source reliability ordering):");
+    let mut sorted = row_means.clone();
+    sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (r, m) in &sorted {
+        println!("  {r:>5}: {:.0}%", m * 100.0);
+    }
+    // structural checks: CERN among the best rows, DE/ES/US in lower half
+    let mean_of = |r: &str| row_means.iter().find(|(x, _)| x == r).map(|(_, m)| *m);
+    if let (Some(cern), Some(de)) = (mean_of("CERN"), mean_of("DE")) {
+        assert!(cern > de, "CERN row ({cern:.2}) must beat DE row ({de:.2})");
+    }
+    for (_, m) in &row_means {
+        assert!(*m > 0.3 && *m <= 1.0, "efficiencies in the paper's band");
+    }
+    println!("fig8 bench OK");
+}

@@ -1,0 +1,177 @@
+//! §6.3 reproduction: T³C transfer-time prediction. The paper's extension
+//! "allows use of simultaneous models and features the ability to easily
+//! compare their performance" — we train the MLP (AOT Pallas artifact,
+//! online SGD in Rust), the linear baseline, and the naive mean on
+//! transfer telemetry from a contended grid, then compare holdout MAE on
+//! log-durations. Expected ordering: learned models beat the naive mean
+//! (durations vary with size, link, and queue depth).
+//!
+//! Setup: three links of very different bandwidth, log-normal file sizes,
+//! submissions in concurrent waves so fair-share contention and queue
+//! waits spread the durations continuously.
+
+use std::sync::Arc;
+
+use rucio::benchkit::{section, Table};
+use rucio::common::clock::Clock;
+use rucio::common::config::Config;
+use rucio::common::prng::Prng;
+use rucio::core::rse::Rse;
+use rucio::core::Catalog;
+use rucio::daemons::Ctx;
+use rucio::ftssim::{FtsServer, TransferJob, TransferState};
+use rucio::mq::Broker;
+use rucio::netsim::{Link, Network};
+use rucio::storagesim::{synthetic_adler32_for, Fleet, StorageKind, StorageSystem};
+use rucio::daemons::Daemon;
+use rucio::t3c::{features, Sample, T3c};
+
+fn main() {
+    section("§6.3: T3C transfer-time prediction model comparison");
+    // --- contended rig
+    let catalog = Arc::new(Catalog::new(Clock::sim_at(0), Config::new()));
+    catalog.add_scope("data18", "root").unwrap();
+    let fleet = Arc::new(Fleet::new());
+    let net = Arc::new(Network::new());
+    let dsts = ["FAST-DST", "MID-DST", "SLOW-DST"];
+    let bws: [u64; 3] = [200_000_000, 20_000_000, 2_000_000]; // B/s
+    catalog.add_rse(Rse::new("SRC", 0).with_attr("site", "SRC")).unwrap();
+    fleet.add(StorageSystem::new("SRC", StorageKind::Disk, u64::MAX));
+    for (d, bw) in dsts.iter().zip(bws) {
+        catalog.add_rse(Rse::new(d, 0).with_attr("site", d)).unwrap();
+        fleet.add(StorageSystem::new(d, StorageKind::Disk, u64::MAX));
+        net.set_link("SRC", d, Link::new(bw, 10, 1.0));
+        catalog.set_distance("SRC", d, 2).unwrap();
+    }
+    let broker = Broker::new();
+    let fts = Arc::new(FtsServer::new("fts1", net.clone(), fleet.clone(), Some(broker.clone())));
+    let ctx = Ctx::new(catalog.clone(), fleet.clone(), net, vec![fts.clone()], broker.clone());
+
+    let mut t3c = T3c::new(ctx.clone());
+    if t3c.mlp.runtime.is_none() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let sim = match &catalog.clock {
+        Clock::Sim(s) => s.clone(),
+        _ => unreachable!(),
+    };
+
+    // --- generate waves of concurrent transfers with varied sizes
+    let mut rng = Prng::new(63);
+    let mut submit_wave = |wave: usize, n: usize| -> Vec<u64> {
+        let now = catalog.now();
+        let mut jobs = Vec::new();
+        for i in 0..n {
+            let bytes = rng.lognormal(50_000_000.0, 1.0) as u64; // ~50 MB median
+            let name = format!("w{wave}f{i}");
+            let pfn = format!("/src/{name}");
+            fleet.get("SRC").unwrap().put(&pfn, bytes, now).unwrap();
+            let dst = dsts[rng.range_usize(0, 3)];
+            jobs.push(TransferJob {
+                request_id: (wave * 1000 + i) as u64,
+                src_rse: "SRC".into(),
+                dst_rse: dst.to_string(),
+                src_site: "SRC".into(),
+                dst_site: dst.to_string(),
+                src_pfn: pfn.clone(),
+                dst_pfn: format!("/dst/{name}"),
+                bytes,
+                adler32: synthetic_adler32_for(&name, bytes),
+                activity: "Production".into(),
+            });
+        }
+        fts.submit(jobs, now)
+    };
+    let mut drive_until_done = |ids: &[u64]| {
+        let mut guard = 0;
+        loop {
+            fts.advance(catalog.now());
+            sim.advance(5_000); // 5 s resolution
+            fts.advance(catalog.now());
+            let done = fts
+                .poll(ids)
+                .iter()
+                .filter(|t| matches!(t.state, TransferState::Done | TransferState::Failed))
+                .count();
+            guard += 1;
+            if done == ids.len() || guard > 20_000 {
+                break;
+            }
+        }
+    };
+
+    // training waves (varied concurrency → varied queue pressure)
+    for wave in 0..20 {
+        let n = 5 + (wave % 4) * 10;
+        let ids = submit_wave(wave, n);
+        drive_until_done(&ids);
+        t3c.tick(catalog.now());
+    }
+    println!(
+        "training: {} samples, {} MLP steps, last loss {:.3}",
+        t3c.samples_seen, t3c.mlp.steps, t3c.mlp.last_loss
+    );
+    assert!(t3c.mlp.steps >= 5, "enough online training happened");
+
+    // holdout waves: harvest without training
+    let holdout_sub = broker.subscribe("transfer.fts", Some("transfer-done"));
+    for wave in 20..26 {
+        let n = 5 + (wave % 4) * 10;
+        let ids = submit_wave(wave, n);
+        drive_until_done(&ids);
+    }
+    let mut holdout: Vec<Sample> = Vec::new();
+    loop {
+        let msgs = broker.poll("transfer.fts", holdout_sub, 1000);
+        if msgs.is_empty() {
+            break;
+        }
+        for m in msgs {
+            let (Some(bytes), Some(sub), Some(fin), Some(src), Some(dst)) = (
+                m.payload.opt_u64("bytes"),
+                m.payload.opt_i64("submitted_at"),
+                m.payload.opt_i64("finished_at"),
+                m.payload.opt_str("src_rse"),
+                m.payload.opt_str("dst_rse"),
+            ) else {
+                continue;
+            };
+            let x = features(&ctx, bytes, Some(src), dst, "Production", fin);
+            let y = (((fin - sub).max(1) as f32) / 1000.0 + 1.0).ln();
+            holdout.push(Sample { x, y });
+        }
+    }
+    println!("holdout: {} samples", holdout.len());
+    assert!(holdout.len() > 30, "need a meaningful holdout");
+    // sanity: durations actually vary
+    let ys: Vec<f32> = holdout.iter().map(|s| s.y).collect();
+    let mean_y = ys.iter().sum::<f32>() / ys.len() as f32;
+    let var_y = ys.iter().map(|y| (y - mean_y).powi(2)).sum::<f32>() / ys.len() as f32;
+    println!("holdout log-duration variance: {var_y:.3}");
+    assert!(var_y > 0.05, "durations must vary for prediction to mean anything");
+
+    let mae = |pred: &dyn Fn(&Sample) -> f32| -> f64 {
+        holdout.iter().map(|s| (pred(s) - s.y).abs() as f64).sum::<f64>() / holdout.len() as f64
+    };
+    let mlp_mae = mae(&|s| t3c.mlp.predict(&s.x));
+    let lin_mae = mae(&|s| t3c.linear.predict(&s.x));
+    let naive_mae = mae(&|s| t3c.naive.predict(&s.x));
+
+    let mut table = Table::new(
+        "holdout MAE on log-duration (lower = better)",
+        &["model", "MAE", "vs naive"],
+    );
+    for (name, v) in
+        [("MLP (Pallas/PJRT)", mlp_mae), ("linear SGD", lin_mae), ("naive mean", naive_mae)]
+    {
+        table.row(&[name.into(), format!("{v:.3}"), format!("{:.2}x", v / naive_mae)]);
+    }
+    table.print();
+
+    assert!(
+        mlp_mae < naive_mae,
+        "the learned model must beat the naive mean ({mlp_mae:.3} vs {naive_mae:.3})"
+    );
+    println!("sec63 bench OK");
+}

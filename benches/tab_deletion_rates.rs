@@ -1,0 +1,90 @@
+//! §5.3 deletion table: "up to 100 million files commonly deleted per
+//! month, amounting to 30 Petabytes and more, with an error rate of 10 to
+//! 20 million per month". We measure reaper throughput in greedy mode,
+//! the error-rate behaviour under flaky storage, and the non-greedy
+//! (cache/LRU) ablation.
+
+use rucio::benchkit::{bench_throughput, section};
+use rucio::common::clock::Clock;
+use rucio::common::config::Config;
+use rucio::core::types::{DidKey, ReplicaState};
+use rucio::daemons::reaper::Reaper;
+use rucio::daemons::Daemon;
+use rucio::sim::grid::{build_grid, GridSpec};
+use rucio::storagesim::synthetic_adler32_for;
+
+fn seed(ctx: &rucio::daemons::Ctx, rse: &str, n: usize, prefix: &str) {
+    let cat = &ctx.catalog;
+    let sys = ctx.fleet.get(rse).unwrap();
+    for i in 0..n {
+        let name = format!("{prefix}{i:06}");
+        let adler = synthetic_adler32_for(&name, 1_000);
+        cat.add_file("data18", &name, "prod", 1_000, &adler, None).unwrap();
+        let key = DidKey::new("data18", &name);
+        let rep = cat.add_replica(rse, &key, ReplicaState::Available, None).unwrap();
+        // retry writes (flaky grids inject write failures)
+        for _ in 0..50 {
+            if sys.put(&rep.pfn, 1_000, 0).is_ok() {
+                break;
+            }
+        }
+        // unprotected → tombstoned at birth → reaper-eligible
+    }
+}
+
+fn main() {
+    section("Tab §5.3: deletion throughput (reaper)");
+    let ctx = build_grid(
+        &GridSpec { t2_per_region: 1, storage_flakiness: 0.0, ..Default::default() },
+        Clock::sim_at(0),
+        Config::new(),
+    );
+    let n = 50_000usize;
+    seed(&ctx, "FR-T1-DISK", n, "del");
+    let mut reaper = Reaper::new(ctx.clone(), "r1");
+    reaper.bulk = 10_000;
+    // past the 24h birth-grace window (cache semantics, §4.3)
+    if let Clock::Sim(s) = &ctx.catalog.clock {
+        s.advance(25 * 3_600_000);
+    }
+    bench_throughput("greedy deletion", n, || {
+        let mut guard = 0;
+        while ctx.catalog.deletable_replicas("FR-T1-DISK", ctx.catalog.now(), 1).len() > 0 {
+            reaper.tick(ctx.catalog.now());
+            guard += 1;
+            assert!(guard < 100, "reaper stuck");
+        }
+    });
+    let deleted = ctx.catalog.metrics.counter("reaper.deleted");
+    println!("deleted={deleted} errors={}", ctx.catalog.metrics.counter("reaper.errors"));
+    assert_eq!(deleted as usize, n);
+
+    // error-rate shape under flaky storage (paper: 10-20% deletion errors)
+    section("deletion under flaky storage (error-rate shape)");
+    let flaky = build_grid(
+        &GridSpec { t2_per_region: 1, storage_flakiness: 0.075, ..Default::default() }, // delete_fail = 15%
+        Clock::sim_at(0),
+        Config::new(),
+    );
+    seed(&flaky, "DE-T1-DISK", 5_000, "flk");
+    let mut reaper2 = Reaper::new(flaky.clone(), "r2");
+    reaper2.bulk = 10_000;
+    if let Clock::Sim(s) = &flaky.catalog.clock {
+        s.advance(25 * 3_600_000);
+    }
+    reaper2.tick(flaky.catalog.now());
+    let del = flaky.catalog.metrics.counter("reaper.deleted");
+    let err = flaky.catalog.metrics.counter("reaper.errors");
+    let rate = err as f64 / (del + err).max(1) as f64;
+    println!("first pass: deleted={del} errors={err} ({:.0}% error rate; paper: 10-20%)", rate * 100.0);
+    assert!((0.05..0.30).contains(&rate), "error rate in the paper's band");
+    // retries eventually clear the backlog
+    let mut guard = 0;
+    while flaky.catalog.deletable_replicas("DE-T1-DISK", flaky.catalog.now(), 1).len() > 0 {
+        reaper2.tick(flaky.catalog.now());
+        guard += 1;
+        assert!(guard < 200, "retries must converge");
+    }
+    println!("backlog cleared after {guard} retry sweeps");
+    println!("tab_deletion_rates bench OK");
+}

@@ -1,0 +1,78 @@
+//! §5.3 server-performance table: the paper reports a 250 Hz average
+//! interaction rate (spikes 400–500 Hz) with <50 ms average response on
+//! 15 four-core nodes. We drive the REST server over loopback with
+//! concurrent clients and report rate + latency percentiles; the p50
+//! target is the paper's 50 ms bound, the rate target is 500 Hz on one
+//! node (the paper's fleet is ~10x over-provisioned, §5.3).
+
+use std::sync::Arc;
+
+use rucio::benchkit::{fmt_ns, section};
+use rucio::client::RucioClient;
+use rucio::core::types::{AccountType, AuthType};
+use rucio::core::Catalog;
+use rucio::mq::Broker;
+
+fn main() {
+    section("Tab §5.3: REST server interaction rate + latency");
+    let catalog = Arc::new(Catalog::new_for_tests());
+    catalog.add_account("alice", AccountType::User, "a@x").unwrap();
+    catalog
+        .add_identity("alice", AuthType::UserPass, "alice", Some("pw"))
+        .unwrap();
+    catalog.add_scope("data18", "root").unwrap();
+    for i in 0..500 {
+        catalog
+            .add_file("data18", &format!("f{i:05}"), "root", 1000, "aabbccdd", None)
+            .unwrap();
+    }
+    let server =
+        rucio::server::serve(catalog.clone(), Broker::new(), "127.0.0.1:0", 8).unwrap();
+    let url = server.url();
+
+    let n_clients = 8;
+    let reqs_per_client = 500;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let url = url.clone();
+        handles.push(std::thread::spawn(move || {
+            let client = RucioClient::connect(&url, "alice", "alice", "pw").unwrap();
+            let mut lat_ns: Vec<f64> = Vec::with_capacity(reqs_per_client);
+            for i in 0..reqs_per_client {
+                let t = std::time::Instant::now();
+                match (c + i) % 3 {
+                    0 => {
+                        client.ping().unwrap();
+                    }
+                    1 => {
+                        client.get_did("data18", &format!("f{:05}", i % 500)).unwrap();
+                    }
+                    _ => {
+                        client.list_replicas("data18", &format!("f{:05}", i % 500)).unwrap();
+                    }
+                }
+                lat_ns.push(t.elapsed().as_nanos() as f64);
+            }
+            lat_ns
+        }));
+    }
+    let mut all: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let elapsed = t0.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = all.len();
+    let rate = total as f64 / elapsed;
+    let pct = |p: f64| all[((p * (total - 1) as f64) as usize).min(total - 1)];
+
+    println!("\nrequests: {total} over {elapsed:.2}s from {n_clients} concurrent clients");
+    println!("interaction rate: {rate:.0} Hz (paper: 250 Hz avg, 400-500 Hz spikes)");
+    println!(
+        "latency: p50 {}  p95 {}  p99 {}",
+        fmt_ns(pct(0.5)),
+        fmt_ns(pct(0.95)),
+        fmt_ns(pct(0.99))
+    );
+    assert!(rate > 500.0, "must sustain a paper-spike-level 500 Hz");
+    assert!(pct(0.5) < 50e6, "p50 under the paper's 50 ms bound");
+    println!("tab_server_rate bench OK");
+}

@@ -1,0 +1,114 @@
+//! Quickstart: boot an embedded Rucio (REST server + daemon fleet over a
+//! simulated grid), then drive it purely through the client API:
+//! create an account, register data, place a replication rule, watch the
+//! daemons satisfy it, and check quota accounting.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use rucio::client::RucioClient;
+use rucio::common::clock::Clock;
+use rucio::common::config::Config;
+use rucio::core::types::AuthType;
+use rucio::sim::driver::Driver;
+use rucio::sim::grid::{build_grid, GridSpec};
+
+fn main() {
+    rucio::common::logx::init(0);
+    // 1. boot the deployment (real clock: daemons on threads)
+    let ctx = build_grid(&GridSpec::default(), Clock::real(), Config::new());
+    ctx.catalog
+        .add_identity("root", AuthType::UserPass, "root", Some("secret"))
+        .unwrap();
+    let server = rucio::server::serve(ctx.catalog.clone(), ctx.broker.clone(), "127.0.0.1:0", 4)
+        .expect("server start");
+    let stop = Arc::new(AtomicBool::new(false));
+    let daemons = Driver::standard_daemons(&ctx);
+    let handles = rucio::daemons::run_threaded(daemons, stop.clone());
+    println!("server: {}  daemons: {}", server.url(), handles.len());
+
+    // FTS progression thread (the simulated middleware's own clock)
+    let fts = ctx.fts.clone();
+    let stop2 = stop.clone();
+    let fts_thread = std::thread::spawn(move || {
+        while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+            let now = Clock::Real.now_ms();
+            for f in &fts {
+                f.advance(now);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    });
+
+    // 2. connect as root, set up alice
+    let root = RucioClient::connect(&server.url(), "root", "root", "secret").unwrap();
+    root.ping().unwrap();
+    root.add_account("carol", "carolpw").unwrap();
+    let alice = RucioClient::connect(&server.url(), "carol", "carol", "carolpw").unwrap();
+
+    // 3. register a dataset with two files, upload them at CERN
+    alice.add_dataset("user.carol", "myanalysis").unwrap();
+    for (name, content) in [("hist1.root", b"histogram-data-1".as_ref()), ("hist2.root", b"xyz".as_ref())] {
+        let adler = rucio::common::checksum::adler32_hex(content);
+        alice
+            .add_file("user.carol", name, content.len() as u64, &adler)
+            .unwrap();
+        let rep = alice
+            .register_replica("CERN-PROD", "user.carol", name, None)
+            .unwrap();
+        let pfn = rep.req_str("pfn").unwrap();
+        ctx.fleet
+            .get("CERN-PROD")
+            .unwrap()
+            .put_bytes(pfn, content, ctx.catalog.now())
+            .unwrap();
+        alice.attach("user.carol", "myanalysis", "user.carol", name).unwrap();
+        alice.send_trace("upload", "CERN-PROD", "user.carol", name).unwrap();
+    }
+
+    // 4. paper §2.5 example: "2 copies of user.carol:myanalysis at
+    //    country=US with 48 hours of lifetime" — scaled to 1 copy here
+    let rule_id = alice
+        .add_rule("user.carol", "myanalysis", "region=US&type=disk", 1, Some(48 * 3_600_000))
+        .unwrap();
+    println!("rule {rule_id} placed: replicate to a US disk RSE");
+
+    // 5. wait for the conveyor + FTS to satisfy it
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let rule = alice.get_rule(rule_id).unwrap();
+        let state = rule.req_str("state").unwrap().to_string();
+        println!(
+            "  rule state: {state} (ok={}, replicating={})",
+            rule.req_u64("locks_ok").unwrap(),
+            rule.req_u64("locks_replicating").unwrap()
+        );
+        if state == "OK" {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "rule did not converge in time"
+        );
+        std::thread::sleep(std::time::Duration::from_secs(1));
+    }
+
+    // 6. replicas + usage
+    for f in ["hist1.root", "hist2.root"] {
+        let reps = alice.list_replicas("user.carol", f).unwrap();
+        let rses: Vec<&str> = reps.iter().filter_map(|r| r.opt_str("rse")).collect();
+        println!("  {f}: replicas at {rses:?}");
+        assert_eq!(reps.len(), 2, "CERN + US copy");
+    }
+    let (bytes, files) = alice.usage("carol", "CERN-PROD").unwrap();
+    println!("alice usage at CERN-PROD: {bytes} bytes, {files} files (rule-derived)");
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    let _ = fts_thread.join();
+    println!("quickstart OK");
+}

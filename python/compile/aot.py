@@ -1,0 +1,124 @@
+"""AOT compilation: lower the L2 JAX models to HLO *text* artifacts the
+Rust runtime loads via PJRT.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts():
+    """(name, lowered, manifest metadata) for every artifact."""
+    n, d = model.PLACEMENT_N, model.N_FEATURES
+    b, h = model.T3C_BATCH, model.T3C_HIDDEN
+
+    arts = []
+
+    lowered = jax.jit(model.placement_score).lower(f32(n, d), f32(d), f32(n))
+    arts.append(
+        (
+            "placement_score",
+            lowered,
+            {
+                "inputs": [[n, d], [d], [n]],
+                "outputs": [[n], [n]],
+                "doc": "masked scores + softmax probs over candidates",
+            },
+        )
+    )
+
+    lowered = jax.jit(model.t3c_predict).lower(
+        f32(d, h), f32(h), f32(h, 1), f32(1), f32(b, d)
+    )
+    arts.append(
+        (
+            "t3c_predict",
+            lowered,
+            {
+                "inputs": [[d, h], [h], [h, 1], [1], [b, d]],
+                "outputs": [[b]],
+                "doc": "T3C MLP forward: predicted log-duration per row",
+            },
+        )
+    )
+
+    lowered = jax.jit(model.t3c_train_step).lower(
+        f32(d, h), f32(h), f32(h, 1), f32(1), f32(b, d), f32(b), f32(b), f32()
+    )
+    arts.append(
+        (
+            "t3c_train_step",
+            lowered,
+            {
+                "inputs": [[d, h], [h], [h, 1], [1], [b, d], [b], [b], []],
+                "outputs": [[], [d, h], [h], [h, 1], [1]],
+                "doc": "one SGD step: loss + updated params (fwd/bwd via jax.grad)",
+            },
+        )
+    )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "placement_n": model.PLACEMENT_N,
+        "n_features": model.N_FEATURES,
+        "t3c_batch": model.T3C_BATCH,
+        "t3c_hidden": model.T3C_HIDDEN,
+        "artifacts": {},
+    }
+    for name, lowered, meta in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["artifacts"][name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Initial t3c parameters, row-major little-endian f32, for Rust.
+    import numpy as np
+
+    params = model.t3c_init()
+    flat = np.concatenate([np.asarray(p).ravel() for p in params]).astype("<f4")
+    with open(os.path.join(args.out, "t3c_params.bin"), "wb") as fh:
+        fh.write(flat.tobytes())
+    manifest["t3c_params_layout"] = [list(np.asarray(p).shape) for p in params]
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: fused dense layer (matmul + bias + optional ReLU) for
+the T³C transfer-time predictor (paper §6.3).
+
+The paper's T³C models transfer-stage durations with offline Python
+analytics; re-thought for the TPU execution model this is a small MLP
+whose layers are fused matmul+bias+activation tiles: a (BLOCK_B x D_in)
+activation tile and the full (D_in x D_out) weight panel sit in VMEM and
+feed one MXU matmul per grid step — the Pallas analog of a tensor-core
+GEMM epilogue fusion.
+
+Autodiff: interpret-mode ``pallas_call`` has no built-in VJP, so ``dense``
+carries a ``jax.custom_vjp`` — the activation gradient (``g @ W^T``)
+re-enters the same Pallas tile (batch-tiled MXU matmul), while the weight
+and bias gradients are batch reductions left to XLA fusion.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile (rows per grid step).
+BLOCK_B = 32
+
+
+def _dense_kernel(relu, x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]            # (BLOCK_B, D_in)
+    w = w_ref[...]            # (D_in, D_out)
+    b = b_ref[...]            # (1, D_out)
+    # MXU matmul with f32 accumulation.
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _dense_impl(x, w, b, relu):
+    bsz, d_in = x.shape
+    d_in2, d_out = w.shape
+    assert d_in == d_in2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert bsz % BLOCK_B == 0, f"B={bsz} must be a multiple of {BLOCK_B}"
+    grid = (bsz // BLOCK_B,)
+    kernel = functools.partial(_dense_kernel, relu)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, d_out), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, d_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, d_out), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w, b.reshape(1, -1))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dense_vjp(x, w, b, relu):
+    return _dense_impl(x, w, b, relu)
+
+
+def _dense_fwd(x, w, b, relu):
+    y = _dense_impl(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _dense_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0.0).astype(g.dtype)
+    # Activation gradient re-enters the Pallas tile: dx = g @ W^T.
+    zero_bias = jnp.zeros((w.shape[0],), dtype=g.dtype)
+    dx = _dense_impl(g, w.T, zero_bias, False)
+    # Weight/bias grads are batch reductions; XLA fuses these.
+    dw = x.T @ g
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+_dense_vjp.defvjp(_dense_fwd, _dense_bwd)
+
+
+def dense(x, w, b, relu=False):
+    """Fused y = act(x @ w + b). ``x`` is [B, D_in] with B a multiple of
+    BLOCK_B; ``w`` is [D_in, D_out]; ``b`` is [D_out]. Differentiable."""
+    return _dense_vjp(x, w, b, relu)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+the pytest/hypothesis suite checks against (charter deliverable c)."""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def placement_scores_ref(features, weights, mask):
+    """Reference masked weighted-sum scoring."""
+    s = features @ weights
+    return jnp.where(mask > 0.5, s, NEG_INF)
+
+
+def dense_ref(x, w, b, relu=False):
+    """Reference dense layer."""
+    y = x @ w + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def mlp_ref(params, x):
+    """Reference 2-layer MLP (the T³C predictor)."""
+    w1, b1, w2, b2 = params
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return (h @ w2 + b2)[:, 0]

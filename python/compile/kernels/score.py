@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: masked placement scoring (paper §6.1).
+
+The dynamic-data-placement daemon (C3PO) scores candidate RSEs for a
+dataset replica: each candidate is a feature row (free space, source
+bandwidth, queued files, recent-replica penalty, popularity, distance,
+load, bias) and the score is a weighted sum with invalid candidates
+masked to -inf.
+
+TPU-shaped: candidates are tiled in blocks of ``BLOCK_N`` rows that live
+in VMEM (BLOCK_N x D x 4 B = 4 KiB per tile at the default shape); the
+row-reduction feeds the VPU/MXU-friendly dot. ``interpret=True`` is
+mandatory on this CPU image (real-TPU lowering emits Mosaic custom calls
+the CPU PJRT client cannot run — see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape: one VMEM-resident block of candidates.
+BLOCK_N = 128
+# Feature dimension (fixed across the stack; see rust/src/placement).
+N_FEATURES = 8
+
+NEG_INF = -1e30
+
+
+def _score_kernel(f_ref, w_ref, m_ref, o_ref):
+    """One block: scores = mask ? F @ w : -inf."""
+    f = f_ref[...]          # (BLOCK_N, D)  VMEM
+    w = w_ref[...]          # (1, D)        VMEM (broadcast row)
+    m = m_ref[...]          # (BLOCK_N,)    VMEM
+    # Weighted sum over features — a rank-1 matmul on the MXU.
+    s = jnp.sum(f * w, axis=1)
+    o_ref[...] = jnp.where(m > 0.5, s, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def placement_scores(features, weights, mask):
+    """Score ``features`` [N, D] with ``weights`` [D], masking by ``mask``
+    [N]. N must be a multiple of BLOCK_N (callers pad with mask=0 rows).
+    """
+    n, d = features.shape
+    assert n % BLOCK_N == 0, f"N={n} must be a multiple of {BLOCK_N}"
+    assert d == N_FEATURES, f"D={d} != {N_FEATURES}"
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        _score_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        interpret=True,
+    )(features, weights.reshape(1, -1), mask)

@@ -1,0 +1,86 @@
+"""L2 — JAX decision models for the paper's §6 advanced features, calling
+the L1 Pallas kernels. Lowered once by ``aot.py``; never imported at
+request time (the Rust coordinator executes the compiled artifacts via
+PJRT).
+
+Models:
+* ``placement_score`` — C3PO dynamic-placement scoring (§6.1): masked
+  weighted scores + a softmax distribution over candidates.
+* ``t3c_predict`` — T³C transfer-time prediction MLP forward (§6.3).
+* ``t3c_train_step`` — full fwd/bwd (jax.grad) + SGD update, exported so
+  the Rust t3c daemon trains *online* from completed-transfer telemetry.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import mlp, score
+
+# ---------------------------------------------------------------------
+# shapes (fixed at AOT time; the Rust side pads to these)
+# ---------------------------------------------------------------------
+
+#: candidate rows for placement scoring (2 VMEM tiles of 128).
+PLACEMENT_N = 256
+#: shared feature dimension.
+N_FEATURES = score.N_FEATURES
+#: t3c batch rows (1 tile of 32) and hidden width.
+T3C_BATCH = 32
+T3C_HIDDEN = 32
+
+
+def placement_score(features, weights, mask):
+    """Masked scores + softmax selection distribution.
+
+    Returns ``(scores [N], probs [N])``; invalid rows get -inf / 0.
+    """
+    s = score.placement_scores(features, weights, mask)
+    # Numerically-stable masked softmax over the valid rows.
+    m = jnp.max(s)
+    e = jnp.where(mask > 0.5, jnp.exp(s - m), 0.0)
+    z = jnp.sum(e) + 1e-30
+    return s, e / z
+
+
+def t3c_init(key=None):
+    """Deterministic parameter init (He-ish) for the T³C MLP."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (N_FEATURES, T3C_HIDDEN)) * (2.0 / N_FEATURES) ** 0.5
+    b1 = jnp.zeros((T3C_HIDDEN,))
+    w2 = jax.random.normal(k2, (T3C_HIDDEN, 1)) * (2.0 / T3C_HIDDEN) ** 0.5
+    b2 = jnp.zeros((1,))
+    return (
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+    )
+
+
+def t3c_predict(w1, b1, w2, b2, x):
+    """Forward pass: predicted log-seconds-to-complete per row of ``x``."""
+    h = mlp.dense(x, w1, b1, relu=True)
+    y = mlp.dense(h, w2, b2, relu=False)
+    return y[:, 0]
+
+
+def t3c_loss(params, x, y, sample_mask):
+    """Masked MSE on log-durations (padding rows carry mask 0)."""
+    w1, b1, w2, b2 = params
+    pred = t3c_predict(w1, b1, w2, b2, x)
+    se = (pred - y) ** 2 * sample_mask
+    return jnp.sum(se) / (jnp.sum(sample_mask) + 1e-9)
+
+
+def t3c_train_step(w1, b1, w2, b2, x, y, sample_mask, lr):
+    """One SGD step: returns (loss, new_w1, new_b1, new_w2, new_b2).
+
+    ``jax.value_and_grad`` differentiates through the Pallas kernels —
+    the paper-charter L2 fwd/bwd requirement.
+    """
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(t3c_loss)(params, x, y, sample_mask)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (loss,) + new

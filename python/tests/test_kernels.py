@@ -1,0 +1,105 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle — the CORE
+correctness signal of the compile path. Hypothesis sweeps shapes and data.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp, ref, score
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------
+# placement scoring kernel
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_score_matches_ref_over_shapes(tiles, seed):
+    r = rng(seed)
+    n = tiles * score.BLOCK_N
+    f = r.normal(size=(n, score.N_FEATURES)).astype(np.float32)
+    w = r.normal(size=(score.N_FEATURES,)).astype(np.float32)
+    m = (r.random(n) > 0.3).astype(np.float32)
+    got = score.placement_scores(jnp.array(f), jnp.array(w), jnp.array(m))
+    want = ref.placement_scores_ref(f, w, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_score_masks_invalid_rows():
+    n = score.BLOCK_N
+    f = np.ones((n, score.N_FEATURES), dtype=np.float32)
+    w = np.ones(score.N_FEATURES, dtype=np.float32)
+    m = np.zeros(n, dtype=np.float32)
+    m[3] = 1.0
+    got = np.asarray(score.placement_scores(jnp.array(f), jnp.array(w), jnp.array(m)))
+    assert got[3] == pytest.approx(score.N_FEATURES)
+    assert (got[np.arange(n) != 3] <= ref.NEG_INF / 2).all()
+
+
+def test_score_rejects_unpadded_shapes():
+    f = np.zeros((100, score.N_FEATURES), dtype=np.float32)
+    w = np.zeros(score.N_FEATURES, dtype=np.float32)
+    m = np.zeros(100, dtype=np.float32)
+    with pytest.raises(AssertionError):
+        score.placement_scores(jnp.array(f), jnp.array(w), jnp.array(m))
+
+
+# ---------------------------------------------------------------------
+# fused dense kernel
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    btiles=st.integers(min_value=1, max_value=4),
+    d_in=st.sampled_from([4, 8, 16]),
+    d_out=st.sampled_from([1, 8, 32]),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dense_matches_ref_over_shapes(btiles, d_in, d_out, relu, seed):
+    r = rng(seed)
+    b = btiles * mlp.BLOCK_B
+    x = r.normal(size=(b, d_in)).astype(np.float32)
+    w = r.normal(size=(d_in, d_out)).astype(np.float32)
+    bias = r.normal(size=(d_out,)).astype(np.float32)
+    got = mlp.dense(jnp.array(x), jnp.array(w), jnp.array(bias), relu=relu)
+    want = ref.dense_ref(x, w, bias, relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_relu_clamps_negative():
+    b, d = mlp.BLOCK_B, 4
+    x = -np.ones((b, d), dtype=np.float32)
+    w = np.eye(d, dtype=np.float32)
+    bias = np.zeros(d, dtype=np.float32)
+    got = np.asarray(mlp.dense(jnp.array(x), jnp.array(w), jnp.array(bias), relu=True))
+    assert (got == 0).all()
+
+
+# ---------------------------------------------------------------------
+# full MLP via kernels vs oracle
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_mlp_forward_matches_ref(seed):
+    from compile import model
+
+    r = rng(seed)
+    params = model.t3c_init()
+    x = r.normal(size=(model.T3C_BATCH, model.N_FEATURES)).astype(np.float32)
+    got = model.t3c_predict(*params, jnp.array(x))
+    want = ref.mlp_ref(params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,77 @@
+"""L2 model tests: placement softmax semantics, t3c training dynamics, and
+AOT artifact generation (golden shape of the HLO text)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_placement_softmax_is_distribution():
+    n, d = model.PLACEMENT_N, model.N_FEATURES
+    r = np.random.default_rng(1)
+    f = r.normal(size=(n, d)).astype(np.float32)
+    w = r.normal(size=(d,)).astype(np.float32)
+    m = np.zeros(n, dtype=np.float32)
+    m[:10] = 1.0
+    scores, probs = model.placement_score(jnp.array(f), jnp.array(w), jnp.array(m))
+    probs = np.asarray(probs)
+    assert probs.shape == (n,)
+    assert probs[10:].sum() == 0.0, "masked rows carry no probability"
+    np.testing.assert_allclose(probs.sum(), 1.0, rtol=1e-5)
+    # argmax of probs == argmax of scores among valid rows
+    assert probs.argmax() == np.asarray(scores)[:10].argmax()
+
+
+def test_placement_single_valid_row_gets_all_mass():
+    n, d = model.PLACEMENT_N, model.N_FEATURES
+    f = np.zeros((n, d), dtype=np.float32)
+    w = np.ones(d, dtype=np.float32)
+    m = np.zeros(n, dtype=np.float32)
+    m[7] = 1.0
+    _, probs = model.placement_score(jnp.array(f), jnp.array(w), jnp.array(m))
+    np.testing.assert_allclose(np.asarray(probs)[7], 1.0, rtol=1e-6)
+
+
+def test_t3c_training_reduces_loss():
+    r = np.random.default_rng(2)
+    params = model.t3c_init()
+    b, d = model.T3C_BATCH, model.N_FEATURES
+    # synthetic target: a fixed linear function of the features
+    true_w = r.normal(size=(d,)).astype(np.float32)
+    losses = []
+    for step in range(60):
+        x = r.normal(size=(b, d)).astype(np.float32)
+        y = x @ true_w
+        mask = np.ones(b, dtype=np.float32)
+        out = model.t3c_train_step(
+            *params, jnp.array(x), jnp.array(y), jnp.array(mask), jnp.float32(0.05)
+        )
+        losses.append(float(out[0]))
+        params = tuple(out[1:])
+    assert losses[-1] < losses[0] * 0.5, f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_t3c_masked_rows_do_not_train():
+    params = model.t3c_init()
+    b, d = model.T3C_BATCH, model.N_FEATURES
+    x = np.ones((b, d), dtype=np.float32)
+    y = np.full(b, 100.0, dtype=np.float32)
+    mask = np.zeros(b, dtype=np.float32)
+    out = model.t3c_train_step(
+        *params, jnp.array(x), jnp.array(y), jnp.array(mask), jnp.float32(0.1)
+    )
+    # zero mask → zero effective loss and unchanged params
+    assert float(out[0]) == 0.0
+    for p_old, p_new in zip(params, out[1:]):
+        np.testing.assert_allclose(np.asarray(p_old), np.asarray(p_new))
+
+
+def test_aot_artifacts_lower_to_hlo_text():
+    for name, lowered, meta in aot.build_artifacts():
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text, name
+        assert len(meta["inputs"]) >= 1
+        # fixed shapes show up in the module signature
+        assert "f32[" in text

@@ -1,0 +1,164 @@
+//! Internal metrics — the pystats/statsd/Graphite stand-in (paper §4.6:
+//! counters and timers aggregated centrally, flushed periodically).
+//!
+//! Counters and gauges are plain named integers; timers keep reservoir
+//! samples for percentile dashboards. Everything is cheap enough to call
+//! from hot paths.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+const RESERVOIR: usize = 4096;
+
+#[derive(Default)]
+struct TimerState {
+    samples: Vec<f64>,
+    count: u64,
+    sum: f64,
+}
+
+/// The process-wide metric registry. Cheap to clone (shared state).
+#[derive(Clone, Default)]
+pub struct Metrics {
+    counters: Arc<Mutex<BTreeMap<String, Arc<AtomicU64>>>>,
+    gauges: Arc<Mutex<BTreeMap<String, Arc<AtomicU64>>>>,
+    timers: Arc<Mutex<BTreeMap<String, TimerState>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn counter_handle(&self, name: &str) -> Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Increment a counter by `n`.
+    pub fn incr(&self, name: &str, n: u64) {
+        self.counter_handle(name).fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Set a gauge to an absolute value (queue sizes, §4.6 probes).
+    pub fn gauge_set(&self, name: &str, value: u64) {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string())
+            .or_default()
+            .store(value, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a timing sample in milliseconds.
+    pub fn time_ms(&self, name: &str, ms: f64) {
+        let mut map = self.timers.lock().unwrap();
+        let t = map.entry(name.to_string()).or_default();
+        t.count += 1;
+        t.sum += ms;
+        if t.samples.len() < RESERVOIR {
+            t.samples.push(ms);
+        } else {
+            // Reservoir sampling keeps percentiles unbiased.
+            let idx = (t.count as usize * 2654435761) % t.count as usize;
+            if idx < RESERVOIR {
+                t.samples[idx] = ms;
+            }
+        }
+    }
+
+    /// (count, mean, p50, p95, p99) for a timer.
+    pub fn timer_stats(&self, name: &str) -> Option<(u64, f64, f64, f64, f64)> {
+        let map = self.timers.lock().unwrap();
+        let t = map.get(name)?;
+        if t.count == 0 {
+            return None;
+        }
+        let mut s = t.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| s[((p * (s.len() - 1) as f64).round() as usize).min(s.len() - 1)];
+        Some((t.count, t.sum / t.count as f64, pct(0.5), pct(0.95), pct(0.99)))
+    }
+
+    /// Flush-style snapshot of all counters and gauges.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        let mut out = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.insert(format!("counter.{k}"), v.load(Ordering::Relaxed));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.insert(format!("gauge.{k}"), v.load(Ordering::Relaxed));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("transfers.done", 1);
+        m.incr("transfers.done", 4);
+        assert_eq!(m.counter("transfers.done"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.gauge_set("queue.depth", 10);
+        m.gauge_set("queue.depth", 3);
+        assert_eq!(m.gauge("queue.depth"), 3);
+    }
+
+    #[test]
+    fn timer_percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 0..1000 {
+            m.time_ms("api.get", i as f64);
+        }
+        let (count, mean, p50, p95, p99) = m.timer_stats("api.get").unwrap();
+        assert_eq!(count, 1000);
+        assert!(mean > 0.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((400.0..600.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn snapshot_includes_both() {
+        let m = Metrics::new();
+        m.incr("a", 1);
+        m.gauge_set("b", 2);
+        let s = m.snapshot();
+        assert_eq!(s["counter.a"], 1);
+        assert_eq!(s["gauge.b"], 2);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m.incr("x", 7);
+        assert_eq!(m2.counter("x"), 7);
+    }
+}

@@ -1,0 +1,8 @@
+//! Monitoring + analytics (paper §4.6): internal metrics, traces, and the
+//! report/accounting pipelines (CSV lists) — the Graphite/Elasticsearch/
+//! Hadoop stack collapsed to in-process equivalents.
+
+pub mod metrics;
+pub mod reports;
+
+pub use metrics::Metrics;

@@ -1,0 +1,237 @@
+//! Benchmark harness — the criterion substitute (criterion is not
+//! available offline). Used by every `benches/*.rs` target with
+//! `harness = false`.
+//!
+//! Two modes:
+//! * [`bench`] — timed micro/meso benchmarks with warmup, percentiles, and
+//!   throughput, printed as aligned rows;
+//! * [`Table`] — free-form result tables for the paper-figure
+//!   reproductions (efficiency matrices, per-month volumes, …) where the
+//!   measurement is a simulation outcome rather than wall time.
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    /// Operations per second implied by the mean.
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            return f64::INFINITY;
+        }
+        1e9 / self.mean_ns
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} it  mean {:>12}  p50 {:>12}  p95 {:>12}  p99 {:>12}  {:>14.0} op/s",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.p99_ns),
+            self.ops_per_sec()
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured iterations,
+/// print the row, and return the stats. `f` runs once per iteration.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let result = summarize(name, &mut samples);
+    println!("{}", result.row());
+    result
+}
+
+/// Like [`bench`] but `f` receives the iteration index (for pre-generated
+/// distinct inputs without timing the generation).
+pub fn bench_indexed<F: FnMut(usize)>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> BenchResult {
+    for i in 0..warmup {
+        f(i);
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        f(warmup + i);
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let result = summarize(name, &mut samples);
+    println!("{}", result.row());
+    result
+}
+
+/// Measure one batch run of `n_ops` operations; reports per-op figures.
+pub fn bench_throughput<F: FnOnce()>(name: &str, n_ops: usize, f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let total_ns = t0.elapsed().as_nanos() as f64;
+    let per_op = total_ns / n_ops.max(1) as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: n_ops,
+        mean_ns: per_op,
+        p50_ns: per_op,
+        p95_ns: per_op,
+        p99_ns: per_op,
+        min_ns: per_op,
+        max_ns: per_op,
+    };
+    println!(
+        "{:<44} {:>10} ops  total {:>12}  per-op {:>12}  {:>14.0} op/s",
+        name,
+        n_ops,
+        fmt_ns(total_ns),
+        fmt_ns(per_op),
+        result.ops_per_sec()
+    );
+    result
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let pct = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: pct(0.50),
+        p95_ns: pct(0.95),
+        p99_ns: pct(0.99),
+        min_ns: samples.first().copied().unwrap_or(0.0),
+        max_ns: samples.last().copied().unwrap_or(0.0),
+    }
+}
+
+/// Section banner for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} {}", "=".repeat(70_usize.saturating_sub(title.len())));
+}
+
+/// A free-form result table (paper figures: efficiency matrix, volume
+/// series, …). Prints aligned columns.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.rows.push(cells.iter().map(|c| format!("{c}")).collect());
+    }
+
+    pub fn print(&self) {
+        println!("\n--- {} ---", self.title);
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::new();
+            for (i, cell) in cells.iter().enumerate().take(ncols) {
+                line.push_str(&format!("{:>w$}  ", cell, w = widths[i]));
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncols));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-ish", 5, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns && r.p95_ns <= r.max_ns);
+        assert!(r.ops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn throughput_counts_ops() {
+        let r = bench_throughput("batch", 1000, || {
+            std::hint::black_box((0..1000).map(|i| i * 2).sum::<u64>());
+        });
+        assert_eq!(r.iters, 1000);
+    }
+
+    #[test]
+    fn format_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_000_000.0), "2.00 ms");
+        assert_eq!(fmt_ns(3e9), "3.00 s");
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("efficiency", &["src", "dst", "eff"]);
+        t.row(&["CA".into(), "CERN".into(), "97%".into()]);
+        t.row_display(&[&"DE", &"FR", &0.56]);
+        t.print();
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,214 @@
+//! Client API (paper §3.2): the `BaseClient`/`Client` split of the Python
+//! client layer — token acquisition + caching on top of HTTP, typed
+//! wrappers for the REST surface, and upload/download helpers that move
+//! bytes against the storage fleet while emitting traces.
+
+use crate::common::error::{Result, RucioError};
+use crate::httpd::HttpClient;
+use crate::jsonx::Json;
+
+/// A connected, authenticated Rucio client.
+pub struct RucioClient {
+    http: HttpClient,
+    pub account: String,
+}
+
+impl RucioClient {
+    /// Authenticate with username/password and cache the token
+    /// (the `BaseClient` behaviour of §3.2).
+    pub fn connect(base_url: &str, account: &str, user: &str, password: &str) -> Result<Self> {
+        let http = HttpClient::new(base_url);
+        let mut req = crate::httpd::Request::new("GET", "/auth/userpass");
+        req.headers.insert("x-rucio-account".into(), account.into());
+        req.headers.insert("x-rucio-username".into(), user.into());
+        req.headers.insert("x-rucio-password".into(), password.into());
+        let resp = http.send(req)?;
+        if !resp.ok() {
+            return Err(RucioError::CannotAuthenticate(format!(
+                "auth failed: {}",
+                String::from_utf8_lossy(&resp.body)
+            )));
+        }
+        let token = resp
+            .header("x-rucio-auth-token")
+            .ok_or_else(|| RucioError::CannotAuthenticate("no token in reply".into()))?;
+        http.set_header("x-rucio-auth-token", token);
+        Ok(RucioClient { http, account: account.to_string() })
+    }
+
+    pub fn ping(&self) -> Result<Json> {
+        self.expect_json(self.http.get("/ping")?)
+    }
+
+    fn expect_ok(&self, resp: crate::httpd::Response) -> Result<()> {
+        if resp.ok() {
+            Ok(())
+        } else {
+            Err(http_error(&resp))
+        }
+    }
+
+    fn expect_json(&self, resp: crate::httpd::Response) -> Result<Json> {
+        if resp.ok() {
+            resp.body_json()
+        } else {
+            Err(http_error(&resp))
+        }
+    }
+
+    fn expect_ndjson(&self, resp: crate::httpd::Response) -> Result<Vec<Json>> {
+        if resp.ok() {
+            resp.body_ndjson()
+        } else {
+            Err(http_error(&resp))
+        }
+    }
+
+    // -------------- scopes / dids --------------
+
+    pub fn add_scope(&self, scope: &str, owner: &str) -> Result<()> {
+        self.expect_ok(self.http.post_json(
+            &format!("/scopes/{scope}"),
+            &Json::obj().with("account", owner),
+        )?)
+    }
+
+    pub fn add_file(&self, scope: &str, name: &str, bytes: u64, adler32: &str) -> Result<()> {
+        self.expect_ok(self.http.post_json(
+            &format!("/dids/{scope}/{name}"),
+            &Json::obj()
+                .with("type", "FILE")
+                .with("bytes", bytes)
+                .with("adler32", adler32),
+        )?)
+    }
+
+    pub fn add_dataset(&self, scope: &str, name: &str) -> Result<()> {
+        self.expect_ok(self.http.post_json(
+            &format!("/dids/{scope}/{name}"),
+            &Json::obj().with("type", "DATASET"),
+        )?)
+    }
+
+    pub fn add_container(&self, scope: &str, name: &str) -> Result<()> {
+        self.expect_ok(self.http.post_json(
+            &format!("/dids/{scope}/{name}"),
+            &Json::obj().with("type", "CONTAINER"),
+        )?)
+    }
+
+    pub fn attach(&self, pscope: &str, pname: &str, cscope: &str, cname: &str) -> Result<()> {
+        self.expect_ok(self.http.post_json(
+            &format!("/attachments/{pscope}/{pname}"),
+            &Json::obj()
+                .with("child_scope", cscope)
+                .with("child_name", cname),
+        )?)
+    }
+
+    pub fn get_did(&self, scope: &str, name: &str) -> Result<Json> {
+        self.expect_json(self.http.get(&format!("/dids/{scope}/{name}"))?)
+    }
+
+    pub fn list_dids(&self, scope: &str) -> Result<Vec<Json>> {
+        self.expect_ndjson(self.http.get(&format!("/dids/{scope}"))?)
+    }
+
+    // -------------- replicas --------------
+
+    pub fn list_replicas(&self, scope: &str, name: &str) -> Result<Vec<Json>> {
+        self.expect_ndjson(self.http.get(&format!("/replicas/{scope}/{name}"))?)
+    }
+
+    pub fn register_replica(&self, rse: &str, scope: &str, name: &str, pfn: Option<&str>) -> Result<Json> {
+        let mut body = Json::obj();
+        if let Some(p) = pfn {
+            body.set("pfn", p);
+        }
+        self.expect_json(self.http.post_json(&format!("/replicas/{rse}/{scope}/{name}"), &body)?)
+    }
+
+    // -------------- rules --------------
+
+    pub fn add_rule(
+        &self,
+        scope: &str,
+        name: &str,
+        rse_expression: &str,
+        copies: u32,
+        lifetime_ms: Option<i64>,
+    ) -> Result<u64> {
+        let mut body = Json::obj()
+            .with("scope", scope)
+            .with("name", name)
+            .with("rse_expression", rse_expression)
+            .with("copies", copies as u64);
+        if let Some(l) = lifetime_ms {
+            body.set("lifetime_ms", l);
+        }
+        let j = self.expect_json(self.http.post_json("/rules", &body)?)?;
+        j.req_u64("rule_id")
+    }
+
+    pub fn get_rule(&self, rule_id: u64) -> Result<Json> {
+        self.expect_json(self.http.get(&format!("/rules/{rule_id}"))?)
+    }
+
+    pub fn delete_rule(&self, rule_id: u64) -> Result<()> {
+        self.expect_ok(self.http.delete(&format!("/rules/{rule_id}"))?)
+    }
+
+    pub fn list_rules(&self, scope: &str, name: &str) -> Result<Vec<Json>> {
+        self.expect_ndjson(self.http.get(&format!("/dids/{scope}/{name}/rules"))?)
+    }
+
+    // -------------- admin --------------
+
+    pub fn add_rse(&self, name: &str, tape: bool) -> Result<()> {
+        self.expect_ok(
+            self.http
+                .post_json(&format!("/rses/{name}"), &Json::obj().with("tape", tape))?,
+        )
+    }
+
+    pub fn list_rses(&self) -> Result<Vec<Json>> {
+        self.expect_ndjson(self.http.get("/rses")?)
+    }
+
+    pub fn add_account(&self, name: &str, password: &str) -> Result<()> {
+        self.expect_ok(self.http.post_json(
+            &format!("/accounts/{name}"),
+            &Json::obj().with("type", "USER").with("password", password),
+        )?)
+    }
+
+    pub fn usage(&self, account: &str, rse: &str) -> Result<(u64, u64)> {
+        let j = self.expect_json(self.http.get(&format!("/accounts/{account}/usage/{rse}"))?)?;
+        Ok((j.req_u64("bytes")?, j.req_u64("files")?))
+    }
+
+    // -------------- traces --------------
+
+    pub fn send_trace(&self, event: &str, rse: &str, scope: &str, name: &str) -> Result<()> {
+        self.expect_ok(self.http.post_json(
+            "/traces",
+            &Json::obj()
+                .with("event", event)
+                .with("rse", rse)
+                .with("scope", scope)
+                .with("name", name),
+        )?)
+    }
+}
+
+fn http_error(resp: &crate::httpd::Response) -> RucioError {
+    let body = String::from_utf8_lossy(&resp.body);
+    match resp.status {
+        401 => RucioError::CannotAuthenticate(body.into_owned()),
+        403 => RucioError::AccessDenied(body.into_owned()),
+        404 => RucioError::DidNotFound(body.into_owned()),
+        409 => RucioError::Duplicate(body.into_owned()),
+        413 => RucioError::QuotaExceeded(body.into_owned()),
+        _ => RucioError::HttpError(format!("status {}: {}", resp.status, body)),
+    }
+}

@@ -1,0 +1,164 @@
+//! Wall-clock abstraction: real time for production mode, virtual time for
+//! the discrete-event simulation driver (DESIGN.md §1 `sim/driver`).
+//!
+//! All timestamps in the system are milliseconds since the UNIX epoch
+//! (`i64`), matching the granularity Rucio cares about (second-level
+//! lifetimes, hour-level grace periods).
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Milliseconds since the UNIX epoch.
+pub type EpochMs = i64;
+
+pub const SECOND_MS: i64 = 1_000;
+pub const MINUTE_MS: i64 = 60 * SECOND_MS;
+pub const HOUR_MS: i64 = 60 * MINUTE_MS;
+pub const DAY_MS: i64 = 24 * HOUR_MS;
+pub const WEEK_MS: i64 = 7 * DAY_MS;
+/// 30-day month used by the workload calendar.
+pub const MONTH_MS: i64 = 30 * DAY_MS;
+
+/// A clock every component reads time through. Cheap to clone.
+#[derive(Clone)]
+pub enum Clock {
+    /// Real wall-clock time.
+    Real,
+    /// Simulated time, advanced explicitly by the discrete-event driver.
+    Sim(SimClock),
+}
+
+impl Clock {
+    pub fn real() -> Self {
+        Clock::Real
+    }
+
+    pub fn sim_at(start: EpochMs) -> Self {
+        Clock::Sim(SimClock::new(start))
+    }
+
+    /// Current time in epoch milliseconds.
+    pub fn now_ms(&self) -> EpochMs {
+        match self {
+            Clock::Real => SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_millis() as i64)
+                .unwrap_or(0),
+            Clock::Sim(s) => s.now_ms(),
+        }
+    }
+
+    /// True when this is a simulated clock (daemons then never sleep for
+    /// real; the driver advances time instead).
+    pub fn is_sim(&self) -> bool {
+        matches!(self, Clock::Sim(_))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::Real
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Clock::Real => write!(f, "Clock::Real"),
+            Clock::Sim(s) => write!(f, "Clock::Sim({})", s.now_ms()),
+        }
+    }
+}
+
+/// Shared simulated clock. The driver owns advancement; everything else
+/// only reads.
+#[derive(Clone)]
+pub struct SimClock {
+    now: Arc<AtomicI64>,
+}
+
+impl SimClock {
+    pub fn new(start: EpochMs) -> Self {
+        SimClock { now: Arc::new(AtomicI64::new(start)) }
+    }
+
+    pub fn now_ms(&self) -> EpochMs {
+        self.now.load(Ordering::Acquire)
+    }
+
+    /// Advance by `delta_ms`; returns the new now.
+    pub fn advance(&self, delta_ms: i64) -> EpochMs {
+        debug_assert!(delta_ms >= 0, "simulated time cannot go backwards");
+        self.now.fetch_add(delta_ms, Ordering::AcqRel) + delta_ms
+    }
+
+    /// Jump to an absolute time (must not go backwards).
+    pub fn set(&self, t: EpochMs) {
+        let prev = self.now.swap(t, Ordering::AcqRel);
+        debug_assert!(t >= prev, "simulated time cannot go backwards");
+    }
+}
+
+/// Render an epoch-ms timestamp as a compact UTC-ish string for logs and
+/// reports. Purely arithmetic (no tz database): `YYYY-MM-DD HH:MM:SS`.
+pub fn format_ts(ms: EpochMs) -> String {
+    // Civil-from-days algorithm (Howard Hinnant).
+    let secs = ms.div_euclid(1000);
+    let days = secs.div_euclid(86_400);
+    let rem = secs.rem_euclid(86_400);
+    let (h, m, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let mo = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if mo <= 2 { y + 1 } else { y };
+    format!("{y:04}-{mo:02}-{d:02} {h:02}:{m:02}:{s:02}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = Clock::sim_at(1_000);
+        assert_eq!(c.now_ms(), 1_000);
+        if let Clock::Sim(s) = &c {
+            assert_eq!(s.advance(500), 1_500);
+        }
+        assert_eq!(c.now_ms(), 1_500);
+        assert!(c.is_sim());
+    }
+
+    #[test]
+    fn real_clock_is_monotonic_enough() {
+        let c = Clock::real();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+        assert!(a > 1_600_000_000_000); // after 2020
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let s = SimClock::new(0);
+        let s2 = s.clone();
+        s.advance(42);
+        assert_eq!(s2.now_ms(), 42);
+    }
+
+    #[test]
+    fn format_known_timestamps() {
+        assert_eq!(format_ts(0), "1970-01-01 00:00:00");
+        // 2018-11-01 00:00:00 UTC = 1541030400
+        assert_eq!(format_ts(1_541_030_400_000), "2018-11-01 00:00:00");
+        // leap-year day: 2016-02-29 12:00:00 = 1456747200
+        assert_eq!(format_ts(1_456_747_200_000), "2016-02-29 12:00:00");
+    }
+}

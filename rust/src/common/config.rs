@@ -1,0 +1,230 @@
+//! Configuration system: an INI-style format (sections, `key = value`),
+//! mirroring upstream Rucio's `rucio.cfg`. Values support strings, ints,
+//! floats, bools, byte sizes, and durations. Overlay semantics let a
+//! scenario file override the defaults, and components read through typed
+//! accessors with defaults.
+
+use std::collections::BTreeMap;
+
+use crate::common::clock;
+use crate::common::error::{Result, RucioError};
+use crate::common::units;
+
+/// Parsed configuration: `section -> key -> raw string value`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse INI text. `#` and `;` start comments; whitespace is trimmed;
+    /// later duplicate keys win (overlay-friendly).
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let mut section = String::from("default");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(RucioError::ConfigError(format!(
+                        "line {}: malformed section header: {raw}",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(RucioError::ConfigError(format!(
+                    "line {}: expected key = value: {raw}",
+                    lineno + 1
+                )));
+            };
+            let key = line[..eq].trim().to_string();
+            let value = line[eq + 1..].trim().to_string();
+            if key.is_empty() {
+                return Err(RucioError::ConfigError(format!("line {}: empty key", lineno + 1)));
+            }
+            cfg.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| RucioError::ConfigError(format!("{path}: {e}")))?;
+        Self::parse(&text)
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn merge(&mut self, other: &Config) {
+        for (sec, kv) in &other.sections {
+            let dst = self.sections.entry(sec.clone()).or_default();
+            for (k, v) in kv {
+                dst.insert(k.clone(), v.clone());
+            }
+        }
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: impl Into<String>) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.into());
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key).map(|s| s.to_ascii_lowercase()) {
+            Some(v) => matches!(v.as_str(), "1" | "true" | "yes" | "on"),
+            None => default,
+        }
+    }
+
+    /// Byte sizes: `catalog.max_volume = 500GB`.
+    pub fn get_bytes(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key).and_then(units::parse_bytes).unwrap_or(default)
+    }
+
+    /// Durations in ms: accepts `500ms`, `30s`, `5m`, `2h`, `7d`, `1w`.
+    pub fn get_duration_ms(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(parse_duration_ms).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = (&String, &BTreeMap<String, String>)> {
+        self.sections.iter()
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, String>> {
+        self.sections.get(name)
+    }
+
+    /// Serialize back to INI text (stable order for golden tests).
+    pub fn to_ini(&self) -> String {
+        let mut out = String::new();
+        for (sec, kv) in &self.sections {
+            out.push_str(&format!("[{sec}]\n"));
+            for (k, v) in kv {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find(|c| c == '#' || c == ';') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Parse `"30s"`-style durations into milliseconds.
+pub fn parse_duration_ms(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let split = s.find(|c: char| c.is_ascii_alphabetic()).unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let value: f64 = num.trim().parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "ms" => 1,
+        "" | "s" => clock::SECOND_MS,
+        "m" | "min" => clock::MINUTE_MS,
+        "h" => clock::HOUR_MS,
+        "d" => clock::DAY_MS,
+        "w" => clock::WEEK_MS,
+        _ => return None,
+    };
+    Some((value * mult as f64).round() as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# rucio.cfg style
+[common]
+instance = atlas-sim
+debug = true
+
+[conveyor]
+bulk = 500           ; batch size
+poll_interval = 30s
+max_volume = 1.5TB
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("common", "instance", ""), "atlas-sim");
+        assert!(c.get_bool("common", "debug", false));
+        assert_eq!(c.get_i64("conveyor", "bulk", 0), 500);
+        assert_eq!(c.get_duration_ms("conveyor", "poll_interval", 0), 30_000);
+        assert_eq!(c.get_bytes("conveyor", "max_volume", 0), 1_500_000_000_000);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_str("nope", "k", "dflt"), "dflt");
+        assert_eq!(c.get_i64("nope", "k", 9), 9);
+        assert!(!c.get_bool("nope", "k", false));
+    }
+
+    #[test]
+    fn merge_overlays() {
+        let mut base = Config::parse("[a]\nx = 1\ny = 2\n").unwrap();
+        let over = Config::parse("[a]\nx = 10\n[b]\nz = 3\n").unwrap();
+        base.merge(&over);
+        assert_eq!(base.get_i64("a", "x", 0), 10);
+        assert_eq!(base.get_i64("a", "y", 0), 2);
+        assert_eq!(base.get_i64("b", "z", 0), 3);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::parse("[broken").is_err());
+        assert!(Config::parse("justtext").is_err());
+        assert!(Config::parse("= value").is_err());
+    }
+
+    #[test]
+    fn ini_round_trip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let again = Config::parse(&c.to_ini()).unwrap();
+        assert_eq!(c, again);
+    }
+
+    #[test]
+    fn duration_forms() {
+        assert_eq!(parse_duration_ms("500ms"), Some(500));
+        assert_eq!(parse_duration_ms("2h"), Some(7_200_000));
+        assert_eq!(parse_duration_ms("1w"), Some(604_800_000));
+        assert_eq!(parse_duration_ms("1.5s"), Some(1500));
+        assert_eq!(parse_duration_ms("xyz"), None);
+    }
+}

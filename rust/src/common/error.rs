@@ -1,0 +1,123 @@
+//! Crate-wide error type.
+//!
+//! Mirrors the exception taxonomy of the upstream Python Rucio
+//! (`rucio.common.exception`): a client can distinguish "does not exist",
+//! "already exists", "denied", "quota exceeded", etc. — the REST layer maps
+//! these onto HTTP status codes.
+
+use thiserror::Error;
+
+/// Convenience result alias used across the crate.
+pub type Result<T> = std::result::Result<T, RucioError>;
+
+/// The crate-wide error enum.
+#[derive(Error, Debug, Clone, PartialEq, Eq)]
+pub enum RucioError {
+    #[error("DID not found: {0}")]
+    DidNotFound(String),
+    #[error("DID already exists: {0}")]
+    DidAlreadyExists(String),
+    #[error("unsupported operation: {0}")]
+    UnsupportedOperation(String),
+    #[error("scope not found: {0}")]
+    ScopeNotFound(String),
+    #[error("account not found: {0}")]
+    AccountNotFound(String),
+    #[error("RSE not found: {0}")]
+    RseNotFound(String),
+    #[error("rule not found: {0}")]
+    RuleNotFound(String),
+    #[error("replica not found: {0}")]
+    ReplicaNotFound(String),
+    #[error("subscription not found: {0}")]
+    SubscriptionNotFound(String),
+    #[error("duplicate: {0}")]
+    Duplicate(String),
+    #[error("access denied: {0}")]
+    AccessDenied(String),
+    #[error("authentication failed: {0}")]
+    CannotAuthenticate(String),
+    #[error("quota exceeded: {0}")]
+    QuotaExceeded(String),
+    #[error("invalid RSE expression: {0}")]
+    InvalidRseExpression(String),
+    #[error("RSE expression resolved to empty set: {0}")]
+    RseExpressionEmpty(String),
+    #[error("invalid name: {0}")]
+    InvalidObject(String),
+    #[error("invalid value: {0}")]
+    InvalidValue(String),
+    #[error("checksum mismatch: {0}")]
+    ChecksumMismatch(String),
+    #[error("file on storage not found: {0}")]
+    SourceNotFound(String),
+    #[error("no space left on RSE: {0}")]
+    NoSpaceLeft(String),
+    #[error("storage error: {0}")]
+    StorageError(String),
+    #[error("transfer tool error: {0}")]
+    TransferToolError(String),
+    #[error("database error: {0}")]
+    DatabaseError(String),
+    #[error("transaction conflict: {0}")]
+    TxnConflict(String),
+    #[error("config error: {0}")]
+    ConfigError(String),
+    #[error("json error: {0}")]
+    JsonError(String),
+    #[error("http error: {0}")]
+    HttpError(String),
+    #[error("runtime (PJRT) error: {0}")]
+    RuntimeError(String),
+    #[error("io error: {0}")]
+    Io(String),
+    #[error("internal error: {0}")]
+    Internal(String),
+}
+
+impl From<std::io::Error> for RucioError {
+    fn from(e: std::io::Error) -> Self {
+        RucioError::Io(e.to_string())
+    }
+}
+
+impl RucioError {
+    /// HTTP status code for the REST layer (paper §3.3).
+    pub fn http_status(&self) -> u16 {
+        use RucioError::*;
+        match self {
+            DidNotFound(_) | ScopeNotFound(_) | AccountNotFound(_) | RseNotFound(_)
+            | RuleNotFound(_) | ReplicaNotFound(_) | SubscriptionNotFound(_)
+            | SourceNotFound(_) => 404,
+            DidAlreadyExists(_) | Duplicate(_) | TxnConflict(_) => 409,
+            AccessDenied(_) => 403,
+            CannotAuthenticate(_) => 401,
+            QuotaExceeded(_) | NoSpaceLeft(_) => 413,
+            InvalidRseExpression(_) | RseExpressionEmpty(_) | InvalidObject(_)
+            | InvalidValue(_) | JsonError(_) | UnsupportedOperation(_) => 400,
+            ChecksumMismatch(_) => 422,
+            _ => 500,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_codes_map() {
+        assert_eq!(RucioError::DidNotFound("x".into()).http_status(), 404);
+        assert_eq!(RucioError::AccessDenied("x".into()).http_status(), 403);
+        assert_eq!(RucioError::CannotAuthenticate("x".into()).http_status(), 401);
+        assert_eq!(RucioError::Duplicate("x".into()).http_status(), 409);
+        assert_eq!(RucioError::InvalidValue("x".into()).http_status(), 400);
+        assert_eq!(RucioError::Internal("x".into()).http_status(), 500);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: RucioError = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(matches!(e, RucioError::Io(_)));
+    }
+}

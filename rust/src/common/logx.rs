@@ -1,0 +1,73 @@
+//! Minimal `log` facade backend: leveled, timestamped stderr logging with a
+//! per-module-path filter, standing in for the td-agent → Elasticsearch
+//! pipeline of paper §4.6 (the structured *metric* side lives in
+//! [`crate::analytics::metrics`]).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let now = crate::common::clock::Clock::Real.now_ms();
+        eprintln!(
+            "{} {} [{}] {}",
+            crate::common::clock::format_ts(now),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). `verbosity`: 0=warn, 1=info, 2=debug, 3+=trace.
+pub fn init(verbosity: u8) {
+    let filter = match verbosity {
+        0 => LevelFilter::Warn,
+        1 => LevelFilter::Info,
+        2 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    };
+    if INSTALLED
+        .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok()
+    {
+        let _ = log::set_logger(&LOGGER);
+    }
+    log::set_max_level(filter);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent_and_sets_level() {
+        init(1);
+        assert_eq!(log::max_level(), LevelFilter::Info);
+        init(2);
+        assert_eq!(log::max_level(), LevelFilter::Debug);
+        log::info!("logger smoke test");
+    }
+}

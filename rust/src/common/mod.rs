@@ -1,0 +1,19 @@
+//! Cross-cutting plumbing: errors, clocks, PRNG, checksums, config, units,
+//! logging, id generation, and a tiny property-testing harness.
+//!
+//! Everything here is dependency-free (std only) because the build image has
+//! no network access to crates.io; see DESIGN.md §1.
+
+pub mod checksum;
+pub mod clock;
+pub mod config;
+pub mod error;
+pub mod idgen;
+pub mod logx;
+pub mod prng;
+pub mod proptest;
+pub mod units;
+
+pub use clock::{Clock, SimClock};
+pub use error::{Result, RucioError};
+pub use prng::Prng;

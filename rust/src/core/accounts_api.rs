@@ -1,0 +1,430 @@
+//! Accounts, identities, authentication, tokens, and the permission
+//! policy (paper §2.3 + §4.1).
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+use crate::common::clock::HOUR_MS;
+use crate::common::error::{Result, RucioError};
+use crate::common::idgen::hex_token;
+
+use super::types::*;
+use super::Catalog;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Operations gated by the permission policy (paper §4.1: "each
+/// client-facing operation ... is validated through a permission
+/// function").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    AddScope,
+    AddDid,
+    AttachDid,
+    DetachDid,
+    SetMetadata,
+    AddRule,
+    DeleteRule,
+    AddRse,
+    AdminRse,
+    AddAccount,
+    SetQuota,
+    DeclareBadReplica,
+    AddSubscription,
+    GetUsage,
+}
+
+impl Catalog {
+    // ------------------------------------------------------------------
+    // accounts
+    // ------------------------------------------------------------------
+
+    pub fn add_account(&self, name: &str, account_type: AccountType, email: &str) -> Result<()> {
+        validate_name(name, 25)?;
+        let now = self.now();
+        self.accounts.insert(
+            Account {
+                name: name.to_string(),
+                account_type,
+                email: email.to_string(),
+                created_at: now,
+                suspended: false,
+                admin: false,
+            },
+            now,
+        )?;
+        // §2.3: "each account has an associated scope", like a home dir.
+        let scope_name = match account_type {
+            AccountType::User => format!("user.{name}"),
+            AccountType::Group => format!("group.{name}"),
+            AccountType::Service => name.to_string(),
+        };
+        let _ = self.scopes.insert(
+            Scope { name: scope_name, account: name.to_string(), created_at: now },
+            now,
+        );
+        self.metrics.incr("accounts.added", 1);
+        Ok(())
+    }
+
+    pub fn get_account(&self, name: &str) -> Result<Account> {
+        self.accounts
+            .get(&name.to_string())
+            .ok_or_else(|| RucioError::AccountNotFound(name.to_string()))
+    }
+
+    pub fn set_admin(&self, name: &str, admin: bool) -> Result<()> {
+        self.get_account(name)?;
+        self.accounts.update(&name.to_string(), self.now(), |a| a.admin = admin);
+        Ok(())
+    }
+
+    pub fn suspend_account(&self, name: &str) -> Result<()> {
+        self.get_account(name)?;
+        self.accounts.update(&name.to_string(), self.now(), |a| a.suspended = true);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // identities (paper Fig 2: many-to-many identity ↔ account)
+    // ------------------------------------------------------------------
+
+    /// Map an identity to an account. For `UserPass` the secret is the
+    /// password (stored salted+hashed); for `Ssh` it is the public key.
+    pub fn add_identity(
+        &self,
+        identity: &str,
+        auth_type: AuthType,
+        account: &str,
+        secret: Option<&str>,
+    ) -> Result<()> {
+        self.get_account(account)?;
+        let stored_secret = match (auth_type, secret) {
+            (AuthType::UserPass, Some(pw)) => Some(self.hash_secret(identity, pw)),
+            (_, s) => s.map(|x| x.to_string()),
+        };
+        self.identities.insert(
+            Identity {
+                identity: identity.to_string(),
+                auth_type,
+                account: account.to_string(),
+                secret: stored_secret,
+            },
+            self.now(),
+        )?;
+        Ok(())
+    }
+
+    /// Accounts an identity may act as.
+    pub fn identity_accounts(&self, identity: &str, auth_type: AuthType) -> Vec<String> {
+        self.identities
+            .scan(|i| i.identity == identity && i.auth_type == auth_type)
+            .into_iter()
+            .map(|i| i.account)
+            .collect()
+    }
+
+    fn hash_secret(&self, identity: &str, secret: &str) -> String {
+        let mut mac = HmacSha256::new_from_slice(format!("salt:{identity}").as_bytes()).unwrap();
+        mac.update(secret.as_bytes());
+        let out = mac.finalize().into_bytes();
+        out.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // authentication → tokens (paper §4.1)
+    // ------------------------------------------------------------------
+
+    /// Username/password authentication (native implementation, §4.1).
+    pub fn auth_userpass(&self, account: &str, username: &str, password: &str) -> Result<Token> {
+        let matches = self.identities.scan(|i| {
+            i.identity == username && i.auth_type == AuthType::UserPass && i.account == account
+        });
+        let Some(id) = matches.first() else {
+            return Err(RucioError::CannotAuthenticate(format!(
+                "no userpass identity {username} for account {account}"
+            )));
+        };
+        if id.secret.as_deref() != Some(self.hash_secret(username, password).as_str()) {
+            return Err(RucioError::CannotAuthenticate("wrong credentials".into()));
+        }
+        self.issue_token(account)
+    }
+
+    /// X.509 DN authentication (GridSite stand-in: the DN string is the
+    /// identity; transport-level verification is assumed).
+    pub fn auth_x509(&self, account: &str, dn: &str) -> Result<Token> {
+        self.auth_by_identity(account, dn, AuthType::X509)
+    }
+
+    /// GSSAPI/Kerberos principal authentication (ModAuthKerb stand-in).
+    pub fn auth_gss(&self, account: &str, principal: &str) -> Result<Token> {
+        self.auth_by_identity(account, principal, AuthType::Gss)
+    }
+
+    /// SSH public-key authentication: the client signs a server challenge;
+    /// here the "signature" is an HMAC with the registered key material
+    /// (cryptographic transport is out of scope for the simulation).
+    pub fn auth_ssh(&self, account: &str, key_id: &str, signature: &str) -> Result<Token> {
+        let matches = self.identities.scan(|i| {
+            i.identity == key_id && i.auth_type == AuthType::Ssh && i.account == account
+        });
+        let Some(id) = matches.first() else {
+            return Err(RucioError::CannotAuthenticate(format!("unknown ssh key {key_id}")));
+        };
+        let expected = self.hash_secret(key_id, id.secret.as_deref().unwrap_or(""));
+        if signature != expected {
+            return Err(RucioError::CannotAuthenticate("bad ssh signature".into()));
+        }
+        self.issue_token(account)
+    }
+
+    /// The challenge an SSH client must answer (see [`Catalog::auth_ssh`]).
+    pub fn ssh_challenge(&self, key_id: &str, pubkey: &str) -> String {
+        self.hash_secret(key_id, pubkey)
+    }
+
+    fn auth_by_identity(&self, account: &str, identity: &str, t: AuthType) -> Result<Token> {
+        let ok = self
+            .identities
+            .scan(|i| i.identity == identity && i.auth_type == t && i.account == account);
+        if ok.is_empty() {
+            return Err(RucioError::CannotAuthenticate(format!(
+                "identity {identity} cannot act as {account}"
+            )));
+        }
+        self.issue_token(account)
+    }
+
+    fn issue_token(&self, account: &str) -> Result<Token> {
+        let acc = self.get_account(account)?;
+        if acc.suspended {
+            return Err(RucioError::CannotAuthenticate(format!("account {account} suspended")));
+        }
+        let now = self.now();
+        let lifetime = self.cfg.get_duration_ms("auth", "token_lifetime", HOUR_MS);
+        let token = Token {
+            token: format!("{}-{}", account, hex_token(self.next_id(), self.token_salt)),
+            account: account.to_string(),
+            expires_at: now + lifetime,
+            issued_at: now,
+        };
+        self.tokens.insert(token.clone(), now)?;
+        self.metrics.incr("auth.tokens_issued", 1);
+        Ok(token)
+    }
+
+    /// Validate an `X-Rucio-Auth-Token`; returns the account.
+    pub fn validate_token(&self, token: &str) -> Result<String> {
+        let t = self
+            .tokens
+            .get(&token.to_string())
+            .ok_or_else(|| RucioError::CannotAuthenticate("unknown token".into()))?;
+        if t.expires_at < self.now() {
+            return Err(RucioError::CannotAuthenticate("token expired".into()));
+        }
+        Ok(t.account)
+    }
+
+    /// Drop expired tokens (housekeeping daemon path).
+    pub fn purge_expired_tokens(&self) -> usize {
+        let now = self.now();
+        let expired: Vec<String> = self
+            .tokens
+            .scan(|t| t.expires_at < now)
+            .into_iter()
+            .map(|t| t.token)
+            .collect();
+        for tok in &expired {
+            self.tokens.remove(tok, now);
+        }
+        expired.len()
+    }
+
+    // ------------------------------------------------------------------
+    // permission policy (paper §4.1, §2.3)
+    // ------------------------------------------------------------------
+
+    /// The default policy: admins may do anything; regular accounts get
+    /// read everywhere, write into their own scopes, and rule management
+    /// on their own rules. "These access permissions can be
+    /// programmatically specified" — instances customize by overriding
+    /// config keys `permissions.<action> = admin|any`.
+    pub fn check_permission(&self, account: &str, action: Action, scope: Option<&str>) -> Result<()> {
+        let acc = self.get_account(account)?;
+        if acc.admin {
+            return Ok(());
+        }
+        let action_key = format!("{action:?}").to_lowercase();
+        match self.cfg.get_str("permissions", &action_key, "").as_str() {
+            "any" => return Ok(()),
+            "admin" => {
+                return Err(RucioError::AccessDenied(format!(
+                    "{account}: {action:?} requires admin"
+                )))
+            }
+            _ => {}
+        }
+        use Action::*;
+        let allowed = match action {
+            // admin-only surface
+            AddRse | AdminRse | AddAccount | SetQuota | AddSubscription | AddScope
+            | DeclareBadReplica => false,
+            // write actions need scope ownership
+            AddDid | AttachDid | DetachDid | SetMetadata => match scope {
+                Some(s) => self.scope_owned_by(s, account),
+                None => false,
+            },
+            // rules: any account may place rules (quota enforces limits)
+            AddRule | DeleteRule => true,
+            GetUsage => true,
+        };
+        if allowed {
+            Ok(())
+        } else {
+            Err(RucioError::AccessDenied(format!(
+                "{account} may not {action:?} on scope {scope:?}"
+            )))
+        }
+    }
+
+    pub(crate) fn scope_owned_by(&self, scope: &str, account: &str) -> bool {
+        self.scopes
+            .get(&scope.to_string())
+            .map(|s| s.account == account)
+            .unwrap_or(false)
+    }
+}
+
+/// Identifier validation shared by accounts/scopes/RSE names.
+pub fn validate_name(name: &str, max_len: usize) -> Result<()> {
+    if name.is_empty() || name.len() > max_len {
+        return Err(RucioError::InvalidObject(format!(
+            "name '{name}' must be 1..={max_len} chars"
+        )));
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+    {
+        return Err(RucioError::InvalidObject(format!("invalid characters in '{name}'")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Catalog;
+
+    fn catalog_with_alice() -> Catalog {
+        let c = Catalog::new_for_tests();
+        c.add_account("alice", AccountType::User, "alice@cern.ch").unwrap();
+        c.add_identity("alice", AuthType::UserPass, "alice", Some("hunter2")).unwrap();
+        c
+    }
+
+    #[test]
+    fn account_creation_makes_home_scope() {
+        let c = catalog_with_alice();
+        let s = c.scopes.get(&"user.alice".to_string()).unwrap();
+        assert_eq!(s.account, "alice");
+        assert!(c.scope_owned_by("user.alice", "alice"));
+        assert!(!c.scope_owned_by("user.alice", "bob"));
+    }
+
+    #[test]
+    fn duplicate_account_rejected() {
+        let c = catalog_with_alice();
+        assert!(c.add_account("alice", AccountType::User, "x").is_err());
+    }
+
+    #[test]
+    fn bad_account_names_rejected() {
+        let c = Catalog::new_for_tests();
+        assert!(c.add_account("", AccountType::User, "x").is_err());
+        assert!(c.add_account("has space", AccountType::User, "x").is_err());
+        assert!(c
+            .add_account("waaaaaaaaaaaaaaaaaaaaaaaaaytoolong", AccountType::User, "x")
+            .is_err());
+    }
+
+    #[test]
+    fn userpass_auth_round_trip() {
+        let c = catalog_with_alice();
+        let tok = c.auth_userpass("alice", "alice", "hunter2").unwrap();
+        assert_eq!(c.validate_token(&tok.token).unwrap(), "alice");
+        assert!(c.auth_userpass("alice", "alice", "wrong").is_err());
+        assert!(c.auth_userpass("alice", "nobody", "hunter2").is_err());
+    }
+
+    #[test]
+    fn x509_multi_account_mapping() {
+        let c = catalog_with_alice();
+        c.add_account("prod", AccountType::Service, "prod@cern.ch").unwrap();
+        let dn = "/DC=ch/DC=cern/CN=Alice Adams";
+        c.add_identity(dn, AuthType::X509, "alice", None).unwrap();
+        c.add_identity(dn, AuthType::X509, "prod", None).unwrap();
+        // Fig 2: one identity, many accounts.
+        let mut accts = c.identity_accounts(dn, AuthType::X509);
+        accts.sort();
+        assert_eq!(accts, vec!["alice", "prod"]);
+        assert!(c.auth_x509("alice", dn).is_ok());
+        assert!(c.auth_x509("prod", dn).is_ok());
+        assert!(c.auth_x509("root", dn).is_err());
+    }
+
+    #[test]
+    fn ssh_challenge_auth() {
+        let c = catalog_with_alice();
+        c.add_identity("key-1", AuthType::Ssh, "alice", Some("ssh-rsa AAAA...")).unwrap();
+        let sig = c.ssh_challenge("key-1", "ssh-rsa AAAA...");
+        assert!(c.auth_ssh("alice", "key-1", &sig).is_ok());
+        assert!(c.auth_ssh("alice", "key-1", "forged").is_err());
+    }
+
+    #[test]
+    fn token_expiry_and_purge() {
+        let c = catalog_with_alice();
+        let tok = c.auth_userpass("alice", "alice", "hunter2").unwrap();
+        if let crate::common::clock::Clock::Sim(s) = &c.clock {
+            s.advance(2 * crate::common::clock::HOUR_MS);
+        }
+        assert!(c.validate_token(&tok.token).is_err());
+        assert_eq!(c.purge_expired_tokens(), 1);
+        assert_eq!(c.tokens.len(), 0);
+    }
+
+    #[test]
+    fn suspended_account_cannot_auth() {
+        let c = catalog_with_alice();
+        c.suspend_account("alice").unwrap();
+        assert!(c.auth_userpass("alice", "alice", "hunter2").is_err());
+    }
+
+    #[test]
+    fn permission_policy_defaults() {
+        let c = catalog_with_alice();
+        // alice can write her own scope
+        assert!(c.check_permission("alice", Action::AddDid, Some("user.alice")).is_ok());
+        // but not someone else's, nor admin surface
+        assert!(c.check_permission("alice", Action::AddDid, Some("root")).is_err());
+        assert!(c.check_permission("alice", Action::AddRse, None).is_err());
+        // rules are open to all
+        assert!(c.check_permission("alice", Action::AddRule, None).is_ok());
+        // root does everything
+        assert!(c.check_permission("root", Action::AddRse, None).is_ok());
+        assert!(c.check_permission("root", Action::AddDid, Some("user.alice")).is_ok());
+    }
+
+    #[test]
+    fn permission_policy_configurable() {
+        let mut cfg = crate::common::config::Config::new();
+        cfg.set("permissions", "addrule", "admin");
+        cfg.set("permissions", "adddid", "any");
+        let c = Catalog::new(crate::common::clock::Clock::sim_at(0), cfg);
+        c.add_account("bob", AccountType::User, "b@x").unwrap();
+        assert!(c.check_permission("bob", Action::AddRule, None).is_err());
+        assert!(c.check_permission("bob", Action::AddDid, Some("root")).is_ok());
+    }
+}

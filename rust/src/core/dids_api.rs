@@ -1,0 +1,679 @@
+//! Namespace operations: scopes, DIDs, attachments, metadata, archives
+//! (paper §2.2).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::common::clock::EpochMs;
+use crate::common::error::{Result, RucioError};
+
+use super::accounts_api::validate_name;
+use super::types::*;
+use super::Catalog;
+
+/// Maximum DID name length ("limits on overall character length, e.g., to
+/// reflect file system limitations", §2.2).
+pub const MAX_NAME_LEN: usize = 250;
+
+impl Catalog {
+    // ------------------------------------------------------------------
+    // scopes
+    // ------------------------------------------------------------------
+
+    pub fn add_scope(&self, scope: &str, account: &str) -> Result<()> {
+        validate_name(scope, 30)?;
+        self.get_account(account)?;
+        let now = self.now();
+        self.scopes.insert(
+            Scope { name: scope.to_string(), account: account.to_string(), created_at: now },
+            now,
+        )?;
+        Ok(())
+    }
+
+    pub fn get_scope(&self, scope: &str) -> Result<Scope> {
+        self.scopes
+            .get(&scope.to_string())
+            .ok_or_else(|| RucioError::ScopeNotFound(scope.to_string()))
+    }
+
+    pub fn list_scopes(&self) -> Vec<String> {
+        self.scopes.keys()
+    }
+
+    // ------------------------------------------------------------------
+    // DID creation
+    // ------------------------------------------------------------------
+
+    /// Register a file DID (paper §2.2: "new files enter the system
+    /// usually by registering first the file").
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_file(
+        &self,
+        scope: &str,
+        name: &str,
+        account: &str,
+        bytes: u64,
+        adler32: &str,
+        guid: Option<&str>,
+    ) -> Result<()> {
+        self.add_did_impl(scope, name, DidType::File, account, bytes, adler32, guid)
+    }
+
+    pub fn add_dataset(&self, scope: &str, name: &str, account: &str) -> Result<()> {
+        self.add_did_impl(scope, name, DidType::Dataset, account, 0, "", None)
+    }
+
+    pub fn add_container(&self, scope: &str, name: &str, account: &str) -> Result<()> {
+        self.add_did_impl(scope, name, DidType::Container, account, 0, "", None)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn add_did_impl(
+        &self,
+        scope: &str,
+        name: &str,
+        did_type: DidType,
+        account: &str,
+        bytes: u64,
+        adler32: &str,
+        guid: Option<&str>,
+    ) -> Result<()> {
+        self.get_scope(scope)?;
+        self.validate_did_name(name)?;
+        let key = DidKey::new(scope, name);
+        // §2.2: "a DID, once used, can never be reused to refer to anything
+        // else at all, not even if the data it referred to has been deleted".
+        if self.name_tombstones.contains(&key) {
+            return Err(RucioError::DidAlreadyExists(format!(
+                "{key} was used historically and can never be reused"
+            )));
+        }
+        if let Some(g) = guid {
+            // GUID uniqueness enforcement (§2.2).
+            let clash = self
+                .dids
+                .scan_limit(1, |d| d.guid.as_deref() == Some(g));
+            if !clash.is_empty() {
+                return Err(RucioError::Duplicate(format!("guid {g} already registered")));
+            }
+        }
+        let now = self.now();
+        let is_coll = did_type.is_collection();
+        self.dids.insert(
+            Did {
+                key,
+                did_type,
+                account: account.to_string(),
+                bytes,
+                adler32: adler32.to_string(),
+                md5: None,
+                guid: guid.map(|s| s.to_string()),
+                open: is_coll, // collections are created open (§2.2)
+                monotonic: false,
+                suppressed: false,
+                availability: if is_coll {
+                    Availability::Available
+                } else {
+                    Availability::Deleted // no replicas yet
+                },
+                meta: BTreeMap::new(),
+                created_at: now,
+                expired_at: None,
+                constituent_of: None,
+            },
+            now,
+        )?;
+        self.metrics.incr("dids.added", 1);
+        if is_coll {
+            // Subscription matching is asynchronous: the judge-injector
+            // consumes this event (upstream transmogrifier, §2.5).
+            self.notify(
+                "did-created",
+                crate::jsonx::Json::obj()
+                    .with("scope", scope)
+                    .with("name", name)
+                    .with("did_type", did_type.as_str()),
+            );
+        }
+        Ok(())
+    }
+
+    /// Naming convention enforcement (§2.2): length plus an optional
+    /// configured regex schema (`naming.schema` config key).
+    fn validate_did_name(&self, name: &str) -> Result<()> {
+        if name.is_empty() || name.len() > MAX_NAME_LEN {
+            return Err(RucioError::InvalidObject(format!(
+                "DID name length must be 1..={MAX_NAME_LEN}"
+            )));
+        }
+        if !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | '/' | '+'))
+        {
+            return Err(RucioError::InvalidObject(format!("invalid characters in '{name}'")));
+        }
+        if let Some(pattern) = self.cfg.get("naming", "schema") {
+            let re = regex::Regex::new(pattern)
+                .map_err(|e| RucioError::ConfigError(format!("naming.schema: {e}")))?;
+            if !re.is_match(name) {
+                return Err(RucioError::InvalidObject(format!(
+                    "name '{name}' violates naming schema"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get_did(&self, key: &DidKey) -> Result<Did> {
+        self.dids
+            .get(key)
+            .ok_or_else(|| RucioError::DidNotFound(key.to_string()))
+    }
+
+    // ------------------------------------------------------------------
+    // hierarchy (Fig 1)
+    // ------------------------------------------------------------------
+
+    /// Attach `child` to collection `parent`. Containers hold collections;
+    /// datasets hold files (Fig 1). Returns the set of *file* DIDs newly
+    /// reachable (rule engine extends covering rules over them).
+    pub fn attach(&self, parent: &DidKey, child: &DidKey) -> Result<Vec<DidKey>> {
+        let p = self.get_did(parent)?;
+        let c = self.get_did(child)?;
+        match (p.did_type, c.did_type) {
+            (DidType::Dataset, DidType::File) => {}
+            (DidType::Container, DidType::Dataset) | (DidType::Container, DidType::Container) => {}
+            _ => {
+                return Err(RucioError::UnsupportedOperation(format!(
+                    "cannot attach {} to {}",
+                    c.did_type.as_str(),
+                    p.did_type.as_str()
+                )))
+            }
+        }
+        if !p.open {
+            return Err(RucioError::UnsupportedOperation(format!(
+                "collection {parent} is closed"
+            )));
+        }
+        if parent == child || self.is_ancestor(child, parent) {
+            return Err(RucioError::UnsupportedOperation(format!(
+                "attaching {child} to {parent} would create a cycle"
+            )));
+        }
+        let now = self.now();
+        self.attachments.insert(
+            Attachment { parent: parent.clone(), child: child.clone(), created_at: now },
+            now,
+        )?;
+        self.metrics.incr("dids.attached", 1);
+        let files = self.resolve_files(child);
+        // Rule engine hook: extend rules covering `parent` (and ancestors).
+        self.on_content_added(parent, &files)?;
+        Ok(files.into_iter().map(|f| f.key).collect())
+    }
+
+    /// Detach `child` from `parent` (only open, non-monotonic parents;
+    /// §2.2: "if the monotonic attribute is set, content cannot be removed
+    /// from an open collection").
+    pub fn detach(&self, parent: &DidKey, child: &DidKey) -> Result<()> {
+        let p = self.get_did(parent)?;
+        if !p.open {
+            return Err(RucioError::UnsupportedOperation(format!(
+                "collection {parent} is closed"
+            )));
+        }
+        if p.monotonic {
+            return Err(RucioError::UnsupportedOperation(format!(
+                "collection {parent} is monotonic"
+            )));
+        }
+        let now = self.now();
+        if self
+            .attachments
+            .remove(&(parent.clone(), child.clone()), now)
+            .is_none()
+        {
+            return Err(RucioError::DidNotFound(format!("{child} not attached to {parent}")));
+        }
+        let files = self.resolve_files(child);
+        self.on_content_removed(parent, &files)?;
+        self.metrics.incr("dids.detached", 1);
+        Ok(())
+    }
+
+    fn is_ancestor(&self, maybe_ancestor: &DidKey, of: &DidKey) -> bool {
+        let mut queue = VecDeque::from([of.clone()]);
+        let mut seen = BTreeSet::new();
+        while let Some(cur) = queue.pop_front() {
+            for (parent, _) in self
+                .att_by_child
+                .get(&cur)
+                .into_iter()
+                .map(|(p, c)| (p, c))
+            {
+                if &parent == maybe_ancestor {
+                    return true;
+                }
+                if seen.insert(parent.clone()) {
+                    queue.push_back(parent);
+                }
+            }
+        }
+        false
+    }
+
+    /// Direct children of a collection.
+    pub fn list_content(&self, parent: &DidKey, include_suppressed: bool) -> Vec<Did> {
+        self.att_by_parent
+            .get(parent)
+            .into_iter()
+            .filter_map(|(_, child)| self.dids.get(&child))
+            .filter(|d| include_suppressed || !d.suppressed)
+            .collect()
+    }
+
+    /// All *file* DIDs reachable from a DID (BFS through the hierarchy) —
+    /// the unit the rule engine operates on. Files include themselves.
+    pub fn resolve_files(&self, did: &DidKey) -> Vec<Did> {
+        let mut files = Vec::new();
+        let mut seen = BTreeSet::new();
+        let mut queue = VecDeque::from([did.clone()]);
+        while let Some(cur) = queue.pop_front() {
+            if !seen.insert(cur.clone()) {
+                continue;
+            }
+            let Some(d) = self.dids.get(&cur) else { continue };
+            if d.did_type == DidType::File {
+                files.push(d);
+            } else {
+                for (_, child) in self.att_by_parent.get(&cur) {
+                    queue.push_back(child);
+                }
+            }
+        }
+        files
+    }
+
+    /// Direct parents of a DID.
+    pub fn list_parents(&self, did: &DidKey) -> Vec<DidKey> {
+        self.att_by_child
+            .get(did)
+            .into_iter()
+            .map(|(parent, _)| parent)
+            .collect()
+    }
+
+    /// All ancestors (transitive parents) of a DID, nearest first.
+    pub fn ancestors(&self, did: &DidKey) -> Vec<DidKey> {
+        let mut out = Vec::new();
+        let mut seen = BTreeSet::new();
+        let mut queue = VecDeque::from([did.clone()]);
+        while let Some(cur) = queue.pop_front() {
+            for (parent, _) in self.att_by_child.get(&cur) {
+                if seen.insert(parent.clone()) {
+                    out.push(parent.clone());
+                    queue.push_back(parent);
+                }
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // collection status (§2.2)
+    // ------------------------------------------------------------------
+
+    /// Close a collection ("once closed they cannot be opened again").
+    pub fn close(&self, did: &DidKey) -> Result<()> {
+        let d = self.get_did(did)?;
+        if !d.did_type.is_collection() {
+            return Err(RucioError::UnsupportedOperation("cannot close a file".into()));
+        }
+        self.dids.update(did, self.now(), |d| d.open = false);
+        Ok(())
+    }
+
+    /// Set monotonic (one-way; "once set to monotonic, this cannot be
+    /// reversed").
+    pub fn set_monotonic(&self, did: &DidKey) -> Result<()> {
+        let d = self.get_did(did)?;
+        if !d.did_type.is_collection() {
+            return Err(RucioError::UnsupportedOperation("files cannot be monotonic".into()));
+        }
+        self.dids.update(did, self.now(), |d| d.monotonic = true);
+        Ok(())
+    }
+
+    /// Suppression flag (§2.2): hidden from default listings.
+    pub fn set_suppressed(&self, did: &DidKey, suppressed: bool) -> Result<()> {
+        self.get_did(did)?;
+        self.dids.update(did, self.now(), |d| d.suppressed = suppressed);
+        Ok(())
+    }
+
+    /// A collection is *complete* when every reachable file has at least
+    /// one available replica (derived attribute, §2.2).
+    pub fn is_complete(&self, did: &DidKey) -> Result<bool> {
+        self.get_did(did)?;
+        Ok(self
+            .resolve_files(did)
+            .iter()
+            .all(|f| f.availability == Availability::Available))
+    }
+
+    /// Aggregate byte size of all reachable files.
+    pub fn did_bytes(&self, did: &DidKey) -> u64 {
+        self.resolve_files(did).iter().map(|f| f.bytes).sum()
+    }
+
+    // ------------------------------------------------------------------
+    // metadata (§2.2)
+    // ------------------------------------------------------------------
+
+    pub fn set_metadata(&self, did: &DidKey, key: &str, value: &str) -> Result<()> {
+        self.get_did(did)?;
+        self.dids.update(did, self.now(), |d| {
+            d.meta.insert(key.to_string(), value.to_string());
+        });
+        Ok(())
+    }
+
+    pub fn get_metadata(&self, did: &DidKey) -> Result<BTreeMap<String, String>> {
+        Ok(self.get_did(did)?.meta)
+    }
+
+    /// DID lifetime: the undertaker removes DIDs past expiry.
+    pub fn set_did_expiry(&self, did: &DidKey, expired_at: Option<EpochMs>) -> Result<()> {
+        self.get_did(did)?;
+        self.dids.update(did, self.now(), |d| d.expired_at = expired_at);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // listing / search
+    // ------------------------------------------------------------------
+
+    /// List DIDs in a scope, optionally filtered by a name glob (`*`
+    /// wildcard) and type. Suppressed DIDs are hidden (§2.2) unless asked.
+    pub fn list_dids(
+        &self,
+        scope: &str,
+        name_glob: Option<&str>,
+        did_type: Option<DidType>,
+        include_suppressed: bool,
+    ) -> Vec<Did> {
+        let re = name_glob.map(glob_to_regex);
+        self.dids.scan(|d| {
+            d.key.scope == scope
+                && (include_suppressed || !d.suppressed)
+                && did_type.map(|t| d.did_type == t).unwrap_or(true)
+                && re.as_ref().map(|r| r.is_match(&d.key.name)).unwrap_or(true)
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // deletion (undertaker path)
+    // ------------------------------------------------------------------
+
+    /// Remove a DID from the namespace, writing a permanent name
+    /// tombstone. Callers (undertaker) must have removed rules first.
+    pub fn erase_did(&self, did: &DidKey) -> Result<()> {
+        let d = self.get_did(did)?;
+        if !self.rules_by_did.get(did).is_empty() {
+            return Err(RucioError::UnsupportedOperation(format!(
+                "{did} still has rules"
+            )));
+        }
+        let now = self.now();
+        // Detach from parents and drop own attachment edges.
+        for (parent, child) in self.att_by_child.get(did) {
+            self.attachments.remove(&(parent, child), now);
+        }
+        for (parent, child) in self.att_by_parent.get(did) {
+            self.attachments.remove(&(parent, child), now);
+        }
+        self.dids.remove(did, now);
+        let _ = self.name_tombstones.insert(
+            NameTombstone { key: did.clone(), deleted_at: now },
+            now,
+        );
+        self.metrics.incr("dids.erased", 1);
+        let _ = d;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // archives (§2.2)
+    // ------------------------------------------------------------------
+
+    /// Register `constituent` as content of archive file `archive` (e.g.
+    /// a ZIP). Resolving replicas of the constituent will use the
+    /// archive's replicas.
+    pub fn register_constituent(&self, archive: &DidKey, constituent: &DidKey) -> Result<()> {
+        let a = self.get_did(archive)?;
+        let c = self.get_did(constituent)?;
+        if a.did_type != DidType::File || c.did_type != DidType::File {
+            return Err(RucioError::UnsupportedOperation(
+                "archives and constituents must be files".into(),
+            ));
+        }
+        self.dids.update(constituent, self.now(), |d| {
+            d.constituent_of = Some(archive.clone())
+        });
+        Ok(())
+    }
+}
+
+fn glob_to_regex(glob: &str) -> regex::Regex {
+    let mut pattern = String::from("^");
+    for c in glob.chars() {
+        match c {
+            '*' => pattern.push_str(".*"),
+            '?' => pattern.push('.'),
+            c if "\\.+()[]{}|^$".contains(c) => {
+                pattern.push('\\');
+                pattern.push(c);
+            }
+            c => pattern.push(c),
+        }
+    }
+    pattern.push('$');
+    regex::Regex::new(&pattern).unwrap_or_else(|_| regex::Regex::new("^$").unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Catalog;
+
+    fn catalog() -> Catalog {
+        let c = Catalog::new_for_tests();
+        c.add_account("alice", AccountType::User, "a@x").unwrap();
+        c.add_scope("data18", "root").unwrap();
+        c
+    }
+
+    fn add_files(c: &Catalog, scope: &str, prefix: &str, n: usize) -> Vec<DidKey> {
+        (0..n)
+            .map(|i| {
+                let name = format!("{prefix}.{i:04}");
+                c.add_file(scope, &name, "root", 1000 + i as u64, "aabbccdd", None)
+                    .unwrap();
+                DidKey::new(scope, &name)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fig1_hierarchy() {
+        // Reproduce the paper's Fig 1 shape: containers of containers of
+        // datasets of files, with overlap.
+        let c = catalog();
+        c.add_container("data18", "experiment", "root").unwrap();
+        c.add_container("data18", "detector_data", "root").unwrap();
+        c.add_dataset("data18", "dataset_f5f6", "root").unwrap();
+        let files = add_files(&c, "data18", "f", 2);
+        let exp = DidKey::new("data18", "experiment");
+        let det = DidKey::new("data18", "detector_data");
+        let ds = DidKey::new("data18", "dataset_f5f6");
+        c.attach(&exp, &det).unwrap();
+        c.attach(&det, &ds).unwrap();
+        c.attach(&ds, &files[0]).unwrap();
+        c.attach(&ds, &files[1]).unwrap();
+        // Alice's analysis dataset shares F6 (overlapping DIDs).
+        c.add_dataset("user.alice", "alices_analysis", "alice").unwrap();
+        let ana = DidKey::new("user.alice", "alices_analysis");
+        c.attach(&ana, &files[1]).unwrap();
+
+        let resolved = c.resolve_files(&exp);
+        assert_eq!(resolved.len(), 2);
+        assert_eq!(c.resolve_files(&ana).len(), 1);
+        assert_eq!(c.list_parents(&files[1]).len(), 2);
+        let anc = c.ancestors(&files[0]);
+        assert!(anc.contains(&exp) && anc.contains(&det) && anc.contains(&ds));
+    }
+
+    #[test]
+    fn type_rules_enforced() {
+        let c = catalog();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        c.add_container("data18", "cont", "root").unwrap();
+        let files = add_files(&c, "data18", "f", 1);
+        let ds = DidKey::new("data18", "ds");
+        let cont = DidKey::new("data18", "cont");
+        // dataset cannot hold datasets; container cannot hold files
+        assert!(c.attach(&cont, &files[0]).is_err());
+        assert!(c.attach(&files[0], &ds).is_err());
+        assert!(c.attach(&ds, &cont).is_err());
+        // legal edges
+        c.attach(&ds, &files[0]).unwrap();
+        c.attach(&cont, &ds).unwrap();
+    }
+
+    #[test]
+    fn cycles_rejected() {
+        let c = catalog();
+        c.add_container("data18", "a", "root").unwrap();
+        c.add_container("data18", "b", "root").unwrap();
+        let a = DidKey::new("data18", "a");
+        let b = DidKey::new("data18", "b");
+        c.attach(&a, &b).unwrap();
+        assert!(c.attach(&b, &a).is_err());
+        assert!(c.attach(&a, &a).is_err());
+    }
+
+    #[test]
+    fn closed_and_monotonic_flags() {
+        let c = catalog();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        let files = add_files(&c, "data18", "f", 3);
+        c.attach(&ds, &files[0]).unwrap();
+        // monotonic prevents detach but allows attach
+        c.set_monotonic(&ds).unwrap();
+        c.attach(&ds, &files[1]).unwrap();
+        assert!(c.detach(&ds, &files[0]).is_err());
+        // closed prevents attach
+        c.close(&ds).unwrap();
+        assert!(c.attach(&ds, &files[2]).is_err());
+        assert!(c.detach(&ds, &files[0]).is_err());
+    }
+
+    #[test]
+    fn names_are_forever() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 1);
+        c.erase_did(&files[0]).unwrap();
+        // §2.2: the name can never be reused.
+        assert!(c
+            .add_file("data18", "f.0000", "root", 1, "00000000", None)
+            .is_err());
+    }
+
+    #[test]
+    fn guid_uniqueness() {
+        let c = catalog();
+        c.add_file("data18", "g1", "root", 1, "x", Some("GUID-123")).unwrap();
+        assert!(c.add_file("data18", "g2", "root", 1, "x", Some("GUID-123")).is_err());
+        c.add_file("data18", "g3", "root", 1, "x", Some("GUID-456")).unwrap();
+    }
+
+    #[test]
+    fn suppression_hides_from_listing() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 2);
+        c.set_suppressed(&files[0], true).unwrap();
+        let listed = c.list_dids("data18", None, None, false);
+        assert_eq!(listed.len(), 1);
+        let all = c.list_dids("data18", None, None, true);
+        assert_eq!(all.len(), 2);
+        // deep check: content listing of collections can include suppressed
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        c.attach(&ds, &files[0]).unwrap();
+        assert_eq!(c.list_content(&ds, false).len(), 0);
+        assert_eq!(c.list_content(&ds, true).len(), 1);
+    }
+
+    #[test]
+    fn glob_listing() {
+        let c = catalog();
+        add_files(&c, "data18", "raw", 3);
+        add_files(&c, "data18", "aod", 2);
+        assert_eq!(c.list_dids("data18", Some("raw.*"), None, false).len(), 3);
+        assert_eq!(c.list_dids("data18", Some("*.0001"), None, false).len(), 2);
+        assert_eq!(
+            c.list_dids("data18", None, Some(DidType::File), false).len(),
+            5
+        );
+    }
+
+    #[test]
+    fn naming_schema_enforced() {
+        let mut cfg = crate::common::config::Config::new();
+        cfg.set("naming", "schema", "^(raw|aod)\\.[0-9]+$");
+        let c = Catalog::new(crate::common::clock::Clock::sim_at(0), cfg);
+        c.add_scope("data18", "root").unwrap();
+        assert!(c.add_file("data18", "raw.001", "root", 1, "x", None).is_ok());
+        assert!(c.add_file("data18", "freeform", "root", 1, "x", None).is_err());
+    }
+
+    #[test]
+    fn metadata_round_trip() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 1);
+        c.set_metadata(&files[0], "datatype", "RAW").unwrap();
+        c.set_metadata(&files[0], "run", "358031").unwrap();
+        let m = c.get_metadata(&files[0]).unwrap();
+        assert_eq!(m["datatype"], "RAW");
+        assert_eq!(m["run"], "358031");
+    }
+
+    #[test]
+    fn archive_constituents() {
+        let c = catalog();
+        c.add_file("data18", "archive.zip", "root", 1000, "x", None).unwrap();
+        c.add_file("data18", "inner.root", "root", 400, "y", None).unwrap();
+        let arch = DidKey::new("data18", "archive.zip");
+        let inner = DidKey::new("data18", "inner.root");
+        c.register_constituent(&arch, &inner).unwrap();
+        assert_eq!(c.get_did(&inner).unwrap().constituent_of, Some(arch.clone()));
+        // collections cannot be archives
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        assert!(c.register_constituent(&ds, &inner).is_err());
+    }
+
+    #[test]
+    fn did_bytes_aggregates() {
+        let c = catalog();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        let files = add_files(&c, "data18", "f", 3); // 1000+1001+1002
+        for f in &files {
+            c.attach(&ds, f).unwrap();
+        }
+        assert_eq!(c.did_bytes(&ds), 3003);
+    }
+}

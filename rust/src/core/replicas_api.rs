@@ -1,0 +1,426 @@
+//! Replica catalog operations: registration, state transitions,
+//! tombstones, access traces, bad/suspicious handling (paper §2.4, §4.3,
+//! §4.4).
+
+use crate::common::clock::EpochMs;
+use crate::common::error::{Result, RucioError};
+
+use super::types::*;
+use super::Catalog;
+
+impl Catalog {
+    /// Register a replica for an existing file DID. For deterministic RSEs
+    /// the pfn comes from lfn2pfn; for non-deterministic RSEs the caller
+    /// must provide it ("continue to provide full paths", §2.4).
+    pub fn add_replica(
+        &self,
+        rse: &str,
+        did: &DidKey,
+        state: ReplicaState,
+        pfn: Option<&str>,
+    ) -> Result<Replica> {
+        let d = self.get_did(did)?;
+        if d.did_type != DidType::File {
+            return Err(RucioError::UnsupportedOperation(format!(
+                "{did} is not a file"
+            )));
+        }
+        let r = self.get_rse(rse)?;
+        let pfn = match (pfn, r.lfn2pfn(&did.scope, &did.name)) {
+            (Some(p), _) => p.to_string(),
+            (None, Some(p)) => p,
+            (None, None) => {
+                return Err(RucioError::InvalidValue(format!(
+                    "RSE {rse} is non-deterministic: pfn required"
+                )))
+            }
+        };
+        let now = self.now();
+        let replica = Replica {
+            rse: rse.to_string(),
+            did: did.clone(),
+            bytes: d.bytes,
+            state,
+            pfn,
+            lock_count: 0,
+            tombstone: if state == ReplicaState::Available {
+                // Unprotected from birth until a rule locks it (§2.5) —
+                // but with the cache grace period, so in-flight transfers
+                // sourcing from it are not starved by the reaper.
+                Some(now + self.cfg.get_duration_ms("reaper", "tombstone_grace", 24 * 3_600_000))
+            } else {
+                None
+            },
+            accessed_at: now,
+            created_at: now,
+            error_count: 0,
+        };
+        self.replicas.insert(replica.clone(), now)?;
+        if state == ReplicaState::Available {
+            self.refresh_availability(did);
+        }
+        self.metrics.incr("replicas.added", 1);
+        Ok(replica)
+    }
+
+    pub fn get_replica(&self, rse: &str, did: &DidKey) -> Result<Replica> {
+        self.replicas
+            .get(&(rse.to_string(), did.clone()))
+            .ok_or_else(|| RucioError::ReplicaNotFound(format!("{did} @ {rse}")))
+    }
+
+    /// All replicas of a DID. For archive constituents this resolves to
+    /// the archive's replicas (§2.2: "the appropriate archive files will
+    /// be used instead").
+    pub fn list_replicas(&self, did: &DidKey) -> Vec<Replica> {
+        let direct: Vec<Replica> = self
+            .replicas_by_did
+            .get(did)
+            .into_iter()
+            .filter_map(|k| self.replicas.get(&k))
+            .collect();
+        if direct.is_empty() {
+            if let Ok(d) = self.get_did(did) {
+                if let Some(archive) = d.constituent_of {
+                    return self.list_replicas(&archive);
+                }
+            }
+        }
+        direct
+    }
+
+    /// Available replicas only (download/transfer source candidates).
+    pub fn available_replicas(&self, did: &DidKey) -> Vec<Replica> {
+        self.list_replicas(did)
+            .into_iter()
+            .filter(|r| r.state == ReplicaState::Available)
+            .collect()
+    }
+
+    /// Rank source replicas by distance to `dst_rse` (§2.4: "distance
+    /// influences the sorting of files when considering sources").
+    /// Unconnected sources are excluded.
+    pub fn ranked_sources(&self, did: &DidKey, dst_rse: &str) -> Vec<(Replica, u32)> {
+        let mut sources: Vec<(Replica, u32)> = self
+            .available_replicas(did)
+            .into_iter()
+            .filter(|r| r.rse != dst_rse)
+            .filter_map(|r| self.distance(&r.rse, dst_rse).map(|d| (r, d)))
+            .collect();
+        sources.sort_by_key(|(r, d)| (*d, r.rse.clone()));
+        sources
+    }
+
+    /// Flip a replica to Available (transfer-finisher / upload path).
+    pub fn replica_available(&self, rse: &str, did: &DidKey) -> Result<()> {
+        self.get_replica(rse, did)?;
+        let now = self.now();
+        self.replicas.update(&(rse.to_string(), did.clone()), now, |r| {
+            r.state = ReplicaState::Available;
+            r.error_count = 0;
+        });
+        self.refresh_availability(did);
+        Ok(())
+    }
+
+    /// Record an access (trace ingestion): bumps replica access time and
+    /// DID popularity (LRU + placement signals, §4.3/§6.1).
+    pub fn touch_replica(&self, rse: &str, did: &DidKey) {
+        let now = self.now();
+        self.replicas.update(&(rse.to_string(), did.clone()), now, |r| {
+            r.accessed_at = now;
+        });
+        self.touch_popularity(did, now);
+        // Dataset-level popularity: bump immediate parents too.
+        for parent in self.list_parents(did) {
+            self.touch_popularity(&parent, now);
+        }
+    }
+
+    pub(crate) fn touch_popularity(&self, did: &DidKey, now: EpochMs) {
+        let window = self.cfg.get_duration_ms("popularity", "window", 14 * 24 * 3_600_000);
+        if self.popularity.contains(did) {
+            self.popularity.update(did, now, |p| {
+                p.accesses += 1;
+                p.last_access = now;
+                if now - p.window_start > window {
+                    p.window_accesses = 1;
+                    p.window_start = now;
+                } else {
+                    p.window_accesses += 1;
+                }
+            });
+        } else {
+            let _ = self.popularity.insert(
+                Popularity {
+                    did: did.clone(),
+                    accesses: 1,
+                    last_access: now,
+                    window_accesses: 1,
+                    window_start: now,
+                },
+                now,
+            );
+        }
+    }
+
+    /// Declare a replica suspicious (download failure, checksum mismatch).
+    /// Escalates to Bad after `suspicious_threshold` strikes (§2.4: "the
+    /// replica will be flagged as suspicious"; §4.4).
+    pub fn declare_suspicious(&self, rse: &str, did: &DidKey, reason: &str) -> Result<()> {
+        let threshold = self.cfg.get_i64("replicas", "suspicious_threshold", 3) as u32;
+        let rep = self.get_replica(rse, did)?;
+        let now = self.now();
+        if rep.error_count + 1 >= threshold {
+            self.declare_bad(rse, did, reason, "system")?;
+        } else {
+            self.replicas.update(&(rse.to_string(), did.clone()), now, |r| {
+                r.error_count += 1;
+                r.state = ReplicaState::Suspicious;
+            });
+            self.metrics.incr("replicas.suspicious", 1);
+        }
+        Ok(())
+    }
+
+    /// Declare a replica bad (privileged accounts or Rucio itself, §4.4);
+    /// the necromancer daemon recovers it.
+    pub fn declare_bad(&self, rse: &str, did: &DidKey, reason: &str, by: &str) -> Result<()> {
+        self.get_replica(rse, did)?;
+        let now = self.now();
+        self.replicas.update(&(rse.to_string(), did.clone()), now, |r| {
+            r.state = ReplicaState::Bad;
+        });
+        self.bad_replicas.upsert(
+            BadReplica {
+                rse: rse.to_string(),
+                did: did.clone(),
+                reason: reason.to_string(),
+                declared_by: by.to_string(),
+                declared_at: now,
+                resolved: false,
+            },
+            now,
+        );
+        self.refresh_availability(did);
+        self.metrics.incr("replicas.declared_bad", 1);
+        self.notify(
+            "bad-replica",
+            crate::jsonx::Json::obj()
+                .with("rse", rse)
+                .with("scope", did.scope.as_str())
+                .with("name", did.name.as_str())
+                .with("reason", reason),
+        );
+        Ok(())
+    }
+
+    /// Physically-gone replica removal (reaper success path / necromancer
+    /// last-copy handling). Adjusts DID availability.
+    pub fn remove_replica(&self, rse: &str, did: &DidKey) -> Result<Replica> {
+        let now = self.now();
+        let rep = self
+            .replicas
+            .remove(&(rse.to_string(), did.clone()), now)
+            .ok_or_else(|| RucioError::ReplicaNotFound(format!("{did} @ {rse}")))?;
+        self.refresh_availability(did);
+        self.metrics.incr("replicas.removed", 1);
+        Ok(rep)
+    }
+
+    /// Derive and store the availability attribute (§2.2: available /
+    /// lost / deleted is "a derived attribute from the contents of the
+    /// Rucio replica catalog").
+    pub(crate) fn refresh_availability(&self, did: &DidKey) {
+        let has_available = self
+            .list_replicas(did)
+            .iter()
+            .any(|r| r.state == ReplicaState::Available);
+        let has_rules = !self.rules_by_did.get(did).is_empty()
+            || self
+                .ancestors(did)
+                .iter()
+                .any(|a| !self.rules_by_did.get(a).is_empty());
+        let availability = if has_available {
+            Availability::Available
+        } else if has_rules {
+            Availability::Lost
+        } else {
+            Availability::Deleted
+        };
+        self.dids.update(did, self.now(), |d| d.availability = availability);
+    }
+
+    /// Replicas eligible for deletion on an RSE: tombstone ≤ now
+    /// (the reaper work queue; uses the partial tombstone index).
+    pub fn deletable_replicas(&self, rse: &str, now: EpochMs, limit: usize) -> Vec<Replica> {
+        self.replicas_by_tombstone
+            .range_limit(&(rse.to_string(), i64::MIN), &(rse.to_string(), now + 1), limit)
+            .into_iter()
+            .filter_map(|k| self.replicas.get(&k))
+            .filter(|r| r.lock_count == 0)
+            .collect()
+    }
+
+    /// Manually (un)tombstone — used by the volatile-RSE cache API.
+    pub fn set_tombstone(&self, rse: &str, did: &DidKey, tombstone: Option<EpochMs>) -> Result<()> {
+        self.get_replica(rse, did)?;
+        self.replicas.update(&(rse.to_string(), did.clone()), self.now(), |r| {
+            r.tombstone = tombstone;
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rse::Rse;
+    use crate::core::Catalog;
+
+    fn catalog() -> Catalog {
+        let c = Catalog::new_for_tests();
+        let now = c.now();
+        c.add_scope("data18", "root").unwrap();
+        for name in ["A-DISK", "B-DISK", "C-DISK"] {
+            c.add_rse(Rse::new(name, now)).unwrap();
+        }
+        c.add_file("data18", "f1", "root", 1000, "aabbccdd", None).unwrap();
+        c
+    }
+
+    fn f1() -> DidKey {
+        DidKey::new("data18", "f1")
+    }
+
+    #[test]
+    fn add_and_list_replicas() {
+        let c = catalog();
+        let rep = c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        assert!(rep.pfn.starts_with("/data18/"));
+        assert_eq!(c.list_replicas(&f1()).len(), 1);
+        assert_eq!(c.available_replicas(&f1()).len(), 1);
+        // file availability becomes Available
+        assert_eq!(c.get_did(&f1()).unwrap().availability, Availability::Available);
+    }
+
+    #[test]
+    fn duplicate_replica_rejected() {
+        let c = catalog();
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        assert!(c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).is_err());
+    }
+
+    #[test]
+    fn replica_for_collection_rejected() {
+        let c = catalog();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        assert!(c
+            .add_replica("A-DISK", &DidKey::new("data18", "ds"), ReplicaState::Available, None)
+            .is_err());
+    }
+
+    #[test]
+    fn nondeterministic_requires_pfn() {
+        let c = catalog();
+        let now = c.now();
+        let mut rse = Rse::new("TAPE-ND", now);
+        rse.path_algorithm = crate::core::rse::PathAlgorithm::NonDeterministic;
+        c.add_rse(rse).unwrap();
+        assert!(c.add_replica("TAPE-ND", &f1(), ReplicaState::Available, None).is_err());
+        let rep = c
+            .add_replica("TAPE-ND", &f1(), ReplicaState::Available, Some("/tape/group7/f1"))
+            .unwrap();
+        assert_eq!(rep.pfn, "/tape/group7/f1");
+    }
+
+    #[test]
+    fn unprotected_available_replica_is_tombstoned_at_birth() {
+        let c = catalog();
+        let rep = c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        // tombstoned at birth, but with the cache grace period
+        assert!(rep.tombstone.unwrap() > c.now());
+        assert!(c.deletable_replicas("A-DISK", c.now(), 10).is_empty());
+        let eligible = c.deletable_replicas("A-DISK", c.now() + 25 * 3_600_000, 10);
+        assert_eq!(eligible.len(), 1);
+    }
+
+    #[test]
+    fn ranked_sources_by_distance() {
+        let c = catalog();
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.add_replica("B-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.set_distance("A-DISK", "C-DISK", 3).unwrap();
+        c.set_distance("B-DISK", "C-DISK", 1).unwrap();
+        let sources = c.ranked_sources(&f1(), "C-DISK");
+        assert_eq!(sources.len(), 2);
+        assert_eq!(sources[0].0.rse, "B-DISK");
+        // zero distance = unconnected → excluded
+        c.set_distance("A-DISK", "C-DISK", 0).unwrap();
+        let sources = c.ranked_sources(&f1(), "C-DISK");
+        assert_eq!(sources.len(), 1);
+    }
+
+    #[test]
+    fn suspicious_escalates_to_bad() {
+        let c = catalog();
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.declare_suspicious("A-DISK", &f1(), "checksum mismatch").unwrap();
+        c.declare_suspicious("A-DISK", &f1(), "checksum mismatch").unwrap();
+        assert_eq!(c.get_replica("A-DISK", &f1()).unwrap().state, ReplicaState::Suspicious);
+        c.declare_suspicious("A-DISK", &f1(), "checksum mismatch").unwrap();
+        assert_eq!(c.get_replica("A-DISK", &f1()).unwrap().state, ReplicaState::Bad);
+        assert_eq!(c.bad_replicas.len(), 1);
+        // last available copy went bad + no rules → DELETED availability
+        assert_eq!(c.get_did(&f1()).unwrap().availability, Availability::Deleted);
+    }
+
+    #[test]
+    fn touch_updates_popularity_and_parents() {
+        let c = catalog();
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        c.attach(&ds, &f1()).unwrap();
+        c.touch_replica("A-DISK", &f1());
+        c.touch_replica("A-DISK", &f1());
+        assert_eq!(c.popularity.get(&f1()).unwrap().accesses, 2);
+        assert_eq!(c.popularity.get(&ds).unwrap().accesses, 2);
+    }
+
+    #[test]
+    fn archive_constituent_resolves_archive_replicas() {
+        let c = catalog();
+        c.add_file("data18", "arch.zip", "root", 5000, "zz", None).unwrap();
+        c.add_file("data18", "inner.root", "root", 100, "yy", None).unwrap();
+        let arch = DidKey::new("data18", "arch.zip");
+        let inner = DidKey::new("data18", "inner.root");
+        c.register_constituent(&arch, &inner).unwrap();
+        c.add_replica("A-DISK", &arch, ReplicaState::Available, None).unwrap();
+        let reps = c.list_replicas(&inner);
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].did, arch);
+    }
+
+    #[test]
+    fn remove_replica_refreshes_availability() {
+        let c = catalog();
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.add_replica("B-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.remove_replica("A-DISK", &f1()).unwrap();
+        assert_eq!(c.get_did(&f1()).unwrap().availability, Availability::Available);
+        c.remove_replica("B-DISK", &f1()).unwrap();
+        assert_eq!(c.get_did(&f1()).unwrap().availability, Availability::Deleted);
+        assert!(c.remove_replica("B-DISK", &f1()).is_err());
+    }
+
+    #[test]
+    fn deletable_respects_future_tombstones() {
+        let c = catalog();
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        let future = c.now() + 1_000_000;
+        c.set_tombstone("A-DISK", &f1(), Some(future)).unwrap();
+        assert!(c.deletable_replicas("A-DISK", c.now(), 10).is_empty());
+        assert_eq!(c.deletable_replicas("A-DISK", future, 10).len(), 1);
+    }
+}

@@ -1,0 +1,343 @@
+//! Rucio Storage Elements (paper §2.4): the minimal unit of globally
+//! addressable storage — a *description* of a storage endpoint, not
+//! software at the site.
+//!
+//! Includes: attributes/kv-pairs, protocol sets with per-operation
+//! priorities and fallbacks, deterministic + non-deterministic lfn2pfn
+//! path algorithms (§4.2), distance ranking (§2.4), and volatile flags.
+
+use std::collections::BTreeMap;
+
+use crate::common::checksum;
+use crate::common::clock::EpochMs;
+use crate::db::Row;
+
+/// Storage operation kinds with independent protocol priorities (§2.4:
+/// "protocol priority for read, write, deletion, and third party copy").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operation {
+    Read,
+    Write,
+    Delete,
+    ThirdPartyCopy,
+}
+
+/// A protocol an RSE speaks (paper §1.3: gsiftp, SRM, ROOT, WebDAV, S3).
+#[derive(Debug, Clone)]
+pub struct Protocol {
+    /// Scheme, e.g. `root`, `davs`, `gsiftp`, `srm`, `s3`.
+    pub scheme: String,
+    pub hostname: String,
+    pub port: u16,
+    /// Path prefix on the endpoint.
+    pub prefix: String,
+    /// Priority per operation; 0 = unsupported, 1 = first choice.
+    pub read_priority: u8,
+    pub write_priority: u8,
+    pub delete_priority: u8,
+    pub tpc_priority: u8,
+}
+
+impl Protocol {
+    pub fn priority_for(&self, op: Operation) -> u8 {
+        match op {
+            Operation::Read => self.read_priority,
+            Operation::Write => self.write_priority,
+            Operation::Delete => self.delete_priority,
+            Operation::ThirdPartyCopy => self.tpc_priority,
+        }
+    }
+
+    /// Render a full URL for a pfn.
+    pub fn url(&self, pfn: &str) -> String {
+        format!(
+            "{}://{}:{}{}{}",
+            self.scheme, self.hostname, self.port, self.prefix, pfn
+        )
+    }
+}
+
+/// lfn→pfn path algorithm choice (paper §4.2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PathAlgorithm {
+    /// The "hash" deterministic algorithm: md5-prefix directory fan-out.
+    HashDeterministic,
+    /// Flat deterministic layout: `/scope/name` (small instances).
+    FlatDeterministic,
+    /// Non-deterministic: the client/workflow supplies full paths; the
+    /// catalog is authoritative (tape co-location etc.).
+    NonDeterministic,
+}
+
+/// An RSE row.
+#[derive(Debug, Clone)]
+pub struct Rse {
+    pub name: String,
+    /// Disk or tape semantic (mirrors the attached simulator backend).
+    pub is_tape: bool,
+    /// Volatile RSEs may lose data outside Rucio's control (§2.4).
+    pub volatile: bool,
+    /// Deterministic RSEs compute paths from the DID alone (§2.4).
+    pub path_algorithm: PathAlgorithm,
+    /// Availability toggles (an RSE can be read-only, e.g. decommissioning).
+    pub availability_read: bool,
+    pub availability_write: bool,
+    pub availability_delete: bool,
+    /// Arbitrary key-value attributes ("all tape storage in Asia", §2.4).
+    pub attributes: BTreeMap<String, String>,
+    pub protocols: Vec<Protocol>,
+    pub created_at: EpochMs,
+    /// Soft deletion marker (decommissioned RSEs stay for history).
+    pub deleted: bool,
+}
+
+impl Row for Rse {
+    type Key = String;
+    fn key(&self) -> String {
+        self.name.clone()
+    }
+}
+
+impl Rse {
+    pub fn new(name: &str, now: EpochMs) -> Self {
+        let mut attributes = BTreeMap::new();
+        // Upstream convention: an RSE's own name is a true attribute.
+        attributes.insert(name.to_string(), "true".to_string());
+        Rse {
+            name: name.to_string(),
+            is_tape: false,
+            volatile: false,
+            path_algorithm: PathAlgorithm::HashDeterministic,
+            availability_read: true,
+            availability_write: true,
+            availability_delete: true,
+            attributes,
+            protocols: vec![Protocol {
+                scheme: "root".into(),
+                hostname: format!("{}.example.org", name.to_lowercase()),
+                port: 1094,
+                prefix: "/rucio".into(),
+                read_priority: 1,
+                write_priority: 1,
+                delete_priority: 1,
+                tpc_priority: 1,
+            }],
+            created_at: now,
+            deleted: false,
+        }
+    }
+
+    pub fn with_attr(mut self, key: &str, value: &str) -> Self {
+        self.attributes.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn with_tape(mut self) -> Self {
+        self.is_tape = true;
+        self.attributes.insert("tape".into(), "true".into());
+        self.attributes.insert("type".into(), "tape".into());
+        self
+    }
+
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attributes.get(key).map(|s| s.as_str())
+    }
+
+    /// Site attribute (network endpoint identity); defaults to own name.
+    pub fn site(&self) -> &str {
+        self.attr("site").unwrap_or(&self.name)
+    }
+
+    /// Best protocol for an operation (lowest non-zero priority), with
+    /// fallbacks in priority order.
+    pub fn protocols_for(&self, op: Operation) -> Vec<&Protocol> {
+        let mut ps: Vec<&Protocol> =
+            self.protocols.iter().filter(|p| p.priority_for(op) > 0).collect();
+        ps.sort_by_key(|p| p.priority_for(op));
+        ps
+    }
+
+    pub fn best_protocol(&self, op: Operation) -> Option<&Protocol> {
+        self.protocols_for(op).into_iter().next()
+    }
+
+    /// lfn→pfn (paper §4.2). For non-deterministic RSEs the caller must
+    /// supply the path via the replica record; this returns `None` then.
+    pub fn lfn2pfn(&self, scope: &str, name: &str) -> Option<String> {
+        match self.path_algorithm {
+            PathAlgorithm::HashDeterministic => Some(hash_pfn(scope, name)),
+            PathAlgorithm::FlatDeterministic => Some(format!("/{scope}/{name}")),
+            PathAlgorithm::NonDeterministic => None,
+        }
+    }
+}
+
+/// The upstream "hash" algorithm: `/scope/XX/YY/name` where XX/YY are the
+/// first two md5 bytes of `scope:name` — even directory fan-out (§4.2:
+/// "the files are distributed evenly over the directories").
+pub fn hash_pfn(scope: &str, name: &str) -> String {
+    let digest = checksum::md5_hex(format!("{scope}:{name}").as_bytes());
+    format!("/{}/{}/{}/{}", scope, &digest[0..2], &digest[2..4], name)
+}
+
+/// Distance entry between two RSEs (paper §2.4): "functional distance is
+/// always a non zero value with increasing integer steps, and zero
+/// distance indicates no connection".
+#[derive(Debug, Clone)]
+pub struct Distance {
+    pub src: String,
+    pub dst: String,
+    /// 0 = no connection; 1 = closest.
+    pub ranking: u32,
+}
+
+impl Row for Distance {
+    type Key = (String, String);
+    fn key(&self) -> (String, String) {
+        (self.src.clone(), self.dst.clone())
+    }
+}
+
+/// Convert an observed throughput (bytes/s) into a distance ranking:
+/// higher throughput → closer (§2.4: "higher network throughput represents
+/// closer distance ... updated periodically and automatically").
+pub fn ranking_from_throughput(bps: f64) -> u32 {
+    // log-decade binning: >=1 GB/s → 1, >=100 MB/s → 2, ... <100 KB/s → 6
+    let mut rank = 1u32;
+    let mut threshold = 1e9;
+    while bps < threshold && rank < 6 {
+        rank += 1;
+        threshold /= 10.0;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::forall;
+
+    #[test]
+    fn hash_pfn_shape_and_determinism() {
+        let p1 = hash_pfn("data18", "raw.0001");
+        let p2 = hash_pfn("data18", "raw.0001");
+        assert_eq!(p1, p2);
+        assert!(p1.starts_with("/data18/"));
+        assert!(p1.ends_with("/raw.0001"));
+        let parts: Vec<&str> = p1.split('/').collect();
+        assert_eq!(parts.len(), 5);
+        assert_eq!(parts[2].len(), 2);
+        assert_eq!(parts[3].len(), 2);
+    }
+
+    #[test]
+    fn hash_pfn_fans_out_evenly() {
+        use std::collections::BTreeMap;
+        let mut dirs: BTreeMap<String, usize> = BTreeMap::new();
+        for i in 0..4096 {
+            let p = hash_pfn("mc20", &format!("evnt.{i:06}.root"));
+            let dir = p.split('/').nth(2).unwrap().to_string();
+            *dirs.entry(dir).or_insert(0) += 1;
+        }
+        // 256 possible first-level dirs; expect near-uniform 16 ± slack
+        assert!(dirs.len() > 200, "only {} dirs used", dirs.len());
+        let max = dirs.values().max().unwrap();
+        assert!(*max < 40, "hot dir with {max} files");
+    }
+
+    #[test]
+    fn path_algorithms() {
+        let now = 0;
+        let det = Rse::new("A", now);
+        assert!(det.lfn2pfn("s", "n").unwrap().starts_with("/s/"));
+        let mut flat = Rse::new("B", now);
+        flat.path_algorithm = PathAlgorithm::FlatDeterministic;
+        assert_eq!(flat.lfn2pfn("s", "n").unwrap(), "/s/n");
+        let mut nondet = Rse::new("C", now);
+        nondet.path_algorithm = PathAlgorithm::NonDeterministic;
+        assert_eq!(nondet.lfn2pfn("s", "n"), None);
+    }
+
+    #[test]
+    fn protocol_priorities_and_fallbacks() {
+        let mut rse = Rse::new("X", 0);
+        rse.protocols = vec![
+            Protocol {
+                scheme: "davs".into(),
+                hostname: "h".into(),
+                port: 443,
+                prefix: "/p".into(),
+                read_priority: 2,
+                write_priority: 1,
+                delete_priority: 1,
+                tpc_priority: 2,
+            },
+            Protocol {
+                scheme: "root".into(),
+                hostname: "h".into(),
+                port: 1094,
+                prefix: "/p".into(),
+                read_priority: 1,
+                write_priority: 0, // unsupported for write
+                delete_priority: 2,
+                tpc_priority: 1,
+            },
+        ];
+        assert_eq!(rse.best_protocol(Operation::Read).unwrap().scheme, "root");
+        assert_eq!(rse.best_protocol(Operation::Write).unwrap().scheme, "davs");
+        let reads = rse.protocols_for(Operation::Read);
+        assert_eq!(reads.len(), 2);
+        assert_eq!(reads[1].scheme, "davs"); // fallback order
+        let writes = rse.protocols_for(Operation::Write);
+        assert_eq!(writes.len(), 1);
+    }
+
+    #[test]
+    fn protocol_url_render() {
+        let rse = Rse::new("SITE-DISK", 0);
+        let p = rse.best_protocol(Operation::Read).unwrap();
+        let url = p.url("/scope/aa/bb/file");
+        assert_eq!(url, "root://site-disk.example.org:1094/rucio/scope/aa/bb/file");
+    }
+
+    #[test]
+    fn own_name_is_true_attribute() {
+        let rse = Rse::new("CERN-PROD", 0).with_attr("tier", "0");
+        assert_eq!(rse.attr("CERN-PROD"), Some("true"));
+        assert_eq!(rse.attr("tier"), Some("0"));
+        assert_eq!(rse.site(), "CERN-PROD");
+        let sited = Rse::new("CERN-PROD", 0).with_attr("site", "CERN");
+        assert_eq!(sited.site(), "CERN");
+    }
+
+    #[test]
+    fn tape_builder_sets_attributes() {
+        let rse = Rse::new("FZK-TAPE", 0).with_tape();
+        assert!(rse.is_tape);
+        assert_eq!(rse.attr("tape"), Some("true"));
+    }
+
+    #[test]
+    fn throughput_ranking_bins() {
+        assert_eq!(ranking_from_throughput(2e9), 1);
+        assert_eq!(ranking_from_throughput(5e8), 2);
+        assert_eq!(ranking_from_throughput(5e7), 3);
+        assert_eq!(ranking_from_throughput(5e6), 4);
+        assert_eq!(ranking_from_throughput(5e5), 5);
+        assert_eq!(ranking_from_throughput(5e4), 6);
+        assert_eq!(ranking_from_throughput(0.0), 6);
+    }
+
+    #[test]
+    fn prop_ranking_monotonic_in_throughput() {
+        forall(200, |g| {
+            let a = g.f64() * 2e9;
+            let b = g.f64() * 2e9;
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            assert!(
+                ranking_from_throughput(hi) <= ranking_from_throughput(lo),
+                "faster must not be farther"
+            );
+        });
+    }
+}

@@ -1,0 +1,250 @@
+//! RSE registry operations: registration, attributes, protocols,
+//! distances, and RSE-expression resolution (paper §2.4).
+
+use std::collections::BTreeSet;
+
+use crate::common::error::{Result, RucioError};
+
+use super::accounts_api::validate_name;
+use super::rse::{ranking_from_throughput, Distance, Rse};
+use super::rseexpr::{self, RseUniverse};
+use super::Catalog;
+
+impl Catalog {
+    pub fn add_rse(&self, rse: Rse) -> Result<()> {
+        validate_name(&rse.name, 60)?;
+        self.rses.insert(rse, self.now())?;
+        self.metrics.incr("rses.added", 1);
+        Ok(())
+    }
+
+    pub fn get_rse(&self, name: &str) -> Result<Rse> {
+        self.rses
+            .get(&name.to_string())
+            .filter(|r| !r.deleted)
+            .ok_or_else(|| RucioError::RseNotFound(name.to_string()))
+    }
+
+    pub fn list_rses(&self) -> Vec<Rse> {
+        self.rses.scan(|r| !r.deleted)
+    }
+
+    pub fn set_rse_attribute(&self, name: &str, key: &str, value: &str) -> Result<()> {
+        self.get_rse(name)?;
+        self.rses.update(&name.to_string(), self.now(), |r| {
+            r.attributes.insert(key.to_string(), value.to_string());
+        });
+        Ok(())
+    }
+
+    /// Toggle availability (read/write/delete) — decommissioning leans on
+    /// write=false, delete-disabled protects archival data (§4.3).
+    pub fn set_rse_availability(
+        &self,
+        name: &str,
+        read: bool,
+        write: bool,
+        delete: bool,
+    ) -> Result<()> {
+        self.get_rse(name)?;
+        self.rses.update(&name.to_string(), self.now(), |r| {
+            r.availability_read = read;
+            r.availability_write = write;
+            r.availability_delete = delete;
+        });
+        Ok(())
+    }
+
+    /// Soft-delete an RSE (after decommissioning).
+    pub fn delete_rse(&self, name: &str) -> Result<()> {
+        self.get_rse(name)?;
+        self.rses.update(&name.to_string(), self.now(), |r| r.deleted = true);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // RSE expressions (§2.5)
+    // ------------------------------------------------------------------
+
+    /// Resolve an RSE expression to a set of live RSE names. Empty results
+    /// are an error here ("RSE expression resolved to empty set") because
+    /// every caller in the rule path requires candidates.
+    pub fn resolve_rse_expression(&self, expression: &str) -> Result<Vec<String>> {
+        let set = self.resolve_rse_expression_allow_empty(expression)?;
+        if set.is_empty() {
+            return Err(RucioError::RseExpressionEmpty(expression.to_string()));
+        }
+        Ok(set.into_iter().collect())
+    }
+
+    pub fn resolve_rse_expression_allow_empty(
+        &self,
+        expression: &str,
+    ) -> Result<BTreeSet<String>> {
+        let universe = CatalogUniverse { catalog: self };
+        rseexpr::resolve(expression, &universe)
+    }
+
+    // ------------------------------------------------------------------
+    // distances (§2.4)
+    // ------------------------------------------------------------------
+
+    /// Set the functional distance between two RSEs (0 = no connection).
+    pub fn set_distance(&self, src: &str, dst: &str, ranking: u32) -> Result<()> {
+        self.get_rse(src)?;
+        self.get_rse(dst)?;
+        self.distances.upsert(
+            Distance { src: src.to_string(), dst: dst.to_string(), ranking },
+            self.now(),
+        );
+        Ok(())
+    }
+
+    /// Distance ranking; `None` when unconnected (ranking 0 or unset pairs
+    /// fall back to a configurable default so new links still work).
+    pub fn distance(&self, src: &str, dst: &str) -> Option<u32> {
+        match self.distances.get(&(src.to_string(), dst.to_string())) {
+            Some(d) if d.ranking == 0 => None,
+            Some(d) => Some(d.ranking),
+            None => {
+                let default = self.cfg.get_i64("rse", "default_distance", 4) as u32;
+                Some(default)
+            }
+        }
+    }
+
+    /// Periodic distance re-evaluation from observed throughput (§2.4:
+    /// "periodic re-evaluation of the collected average throughput ...
+    /// helps to dynamically adjust and update the distances"). Takes
+    /// (src_site, dst_site, bytes/s) samples; updates every RSE pair on
+    /// those sites. Returns the number of updated pairs.
+    pub fn update_distances_from_throughput(&self, samples: &[(String, String, f64)]) -> usize {
+        let rses = self.list_rses();
+        let mut updated = 0;
+        for (src_site, dst_site, bps) in samples {
+            let ranking = ranking_from_throughput(*bps);
+            for src in rses.iter().filter(|r| r.site() == src_site) {
+                for dst in rses.iter().filter(|r| r.site() == dst_site) {
+                    if src.name == dst.name {
+                        continue;
+                    }
+                    self.distances.upsert(
+                        Distance { src: src.name.clone(), dst: dst.name.clone(), ranking },
+                        self.now(),
+                    );
+                    updated += 1;
+                }
+            }
+        }
+        updated
+    }
+}
+
+struct CatalogUniverse<'a> {
+    catalog: &'a Catalog,
+}
+
+impl RseUniverse for CatalogUniverse<'_> {
+    fn all_rses(&self) -> Vec<String> {
+        self.catalog
+            .rses
+            .scan(|r| !r.deleted)
+            .into_iter()
+            .map(|r| r.name)
+            .collect()
+    }
+
+    fn attribute(&self, rse: &str, key: &str) -> Option<String> {
+        self.catalog
+            .rses
+            .get(&rse.to_string())
+            .filter(|r| !r.deleted)
+            .and_then(|r| r.attributes.get(key).cloned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Catalog;
+
+    fn catalog_with_grid() -> Catalog {
+        let c = Catalog::new_for_tests();
+        let now = c.now();
+        for (name, tier, country) in [
+            ("CERN-PROD", "0", "CH"),
+            ("IN2P3-DISK", "1", "FR"),
+            ("GRIF", "2", "FR"),
+            ("DESY", "2", "DE"),
+        ] {
+            c.add_rse(
+                Rse::new(name, now)
+                    .with_attr("tier", tier)
+                    .with_attr("country", country)
+                    .with_attr("site", name),
+            )
+            .unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn expression_resolution_against_catalog() {
+        let c = catalog_with_grid();
+        let got = c.resolve_rse_expression("tier=2&(country=FR|country=DE)").unwrap();
+        assert_eq!(got, vec!["DESY", "GRIF"]);
+        assert!(matches!(
+            c.resolve_rse_expression("country=JP"),
+            Err(RucioError::RseExpressionEmpty(_))
+        ));
+    }
+
+    #[test]
+    fn deleted_rses_leave_the_universe() {
+        let c = catalog_with_grid();
+        c.delete_rse("GRIF").unwrap();
+        let got = c.resolve_rse_expression("country=FR").unwrap();
+        assert_eq!(got, vec!["IN2P3-DISK"]);
+        assert!(c.get_rse("GRIF").is_err());
+    }
+
+    #[test]
+    fn attributes_updateable() {
+        let c = catalog_with_grid();
+        c.set_rse_attribute("DESY", "freespace", "120").unwrap();
+        assert_eq!(c.resolve_rse_expression("freespace>100").unwrap(), vec!["DESY"]);
+    }
+
+    #[test]
+    fn distances_with_default() {
+        let c = catalog_with_grid();
+        c.set_distance("CERN-PROD", "IN2P3-DISK", 1).unwrap();
+        c.set_distance("CERN-PROD", "DESY", 0).unwrap(); // no connection
+        assert_eq!(c.distance("CERN-PROD", "IN2P3-DISK"), Some(1));
+        assert_eq!(c.distance("CERN-PROD", "DESY"), None);
+        // unset pair → default
+        assert_eq!(c.distance("GRIF", "DESY"), Some(4));
+    }
+
+    #[test]
+    fn throughput_updates_distances() {
+        let c = catalog_with_grid();
+        let n = c.update_distances_from_throughput(&[(
+            "CERN-PROD".into(),
+            "GRIF".into(),
+            2e9, // 2 GB/s → ranking 1
+        )]);
+        assert_eq!(n, 1);
+        assert_eq!(c.distance("CERN-PROD", "GRIF"), Some(1));
+        c.update_distances_from_throughput(&[("CERN-PROD".into(), "GRIF".into(), 5e5)]);
+        assert_eq!(c.distance("CERN-PROD", "GRIF"), Some(5));
+    }
+
+    #[test]
+    fn availability_toggles() {
+        let c = catalog_with_grid();
+        c.set_rse_availability("DESY", true, false, false).unwrap();
+        let r = c.get_rse("DESY").unwrap();
+        assert!(r.availability_read && !r.availability_write && !r.availability_delete);
+    }
+}

@@ -1,0 +1,470 @@
+//! The RSE expression language (paper §2.5, ref [19]): a set-complete
+//! language over RSE attributes, defined by a formal grammar.
+//!
+//! Grammar (recursive descent):
+//! ```text
+//! expr    := term (('|' term) | ('\' term))*      union / difference
+//! term    := factor ('&' factor)*                 intersection
+//! factor  := '(' expr ')' | '*' | primitive
+//! primitive := IDENT '=' VALUE                    attribute equality
+//!            | IDENT '<' NUM | IDENT '>' NUM      numeric comparison
+//!            | IDENT                              RSE name, or boolean attr
+//! ```
+//!
+//! "An attribute match of the grammar always results in a set of RSEs,
+//! which could also be empty" — evaluation returns an ordered set; the
+//! *caller* (rule engine) decides whether empty is an error.
+
+use std::collections::BTreeSet;
+
+use crate::common::error::{Result, RucioError};
+
+/// Attribute lookup the evaluator runs against. Implemented by the RSE
+/// registry; a simple map-backed impl exists for tests.
+pub trait RseUniverse {
+    /// All RSE names.
+    fn all_rses(&self) -> Vec<String>;
+    /// Attribute value for an RSE (`None` when unset). Every RSE
+    /// implicitly has its own name as a true attribute (upstream
+    /// convention), which the evaluator handles itself.
+    fn attribute(&self, rse: &str, key: &str) -> Option<String>;
+}
+
+/// Map-backed universe for tests and standalone evaluation.
+pub struct MapUniverse {
+    pub rses: Vec<(String, std::collections::BTreeMap<String, String>)>,
+}
+
+impl RseUniverse for MapUniverse {
+    fn all_rses(&self) -> Vec<String> {
+        self.rses.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    fn attribute(&self, rse: &str, key: &str) -> Option<String> {
+        self.rses
+            .iter()
+            .find(|(n, _)| n == rse)
+            .and_then(|(_, attrs)| attrs.get(key).cloned())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Value(String),
+    And,
+    Or,
+    Minus,
+    Eq,
+    Lt,
+    Gt,
+    LParen,
+    RParen,
+    Star,
+}
+
+fn lex(input: &str) -> Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let bytes = input.as_bytes();
+    let mut i = 0;
+    let is_word =
+        |c: u8| c.is_ascii_alphanumeric() || matches!(c, b'_' | b'-' | b'.' | b':' | b'*');
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b' ' | b'\t' => i += 1,
+            b'&' => {
+                toks.push(Tok::And);
+                i += 1;
+            }
+            b'|' => {
+                toks.push(Tok::Or);
+                i += 1;
+            }
+            b'\\' => {
+                toks.push(Tok::Minus);
+                i += 1;
+            }
+            b'=' => {
+                toks.push(Tok::Eq);
+                i += 1;
+            }
+            b'<' => {
+                toks.push(Tok::Lt);
+                i += 1;
+            }
+            b'>' => {
+                toks.push(Tok::Gt);
+                i += 1;
+            }
+            b'(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            c if is_word(c) => {
+                let start = i;
+                while i < bytes.len() && is_word(bytes[i]) {
+                    i += 1;
+                }
+                let word = std::str::from_utf8(&bytes[start..i]).unwrap().to_string();
+                if word == "*" {
+                    toks.push(Tok::Star);
+                } else if matches!(toks.last(), Some(Tok::Eq) | Some(Tok::Lt) | Some(Tok::Gt)) {
+                    toks.push(Tok::Value(word));
+                } else {
+                    toks.push(Tok::Ident(word));
+                }
+            }
+            other => {
+                return Err(RucioError::InvalidRseExpression(format!(
+                    "unexpected character '{}' at {i} in '{input}'",
+                    other as char
+                )))
+            }
+        }
+    }
+    Ok(toks)
+}
+
+/// Parsed expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    All,
+    /// Bare identifier: RSE name if one matches, else boolean attribute.
+    Name(String),
+    AttrEq(String, String),
+    AttrLt(String, f64),
+    AttrGt(String, f64),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Minus(Box<Expr>, Box<Expr>),
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let mut left = self.term()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Or) => {
+                    self.next();
+                    let right = self.term()?;
+                    left = Expr::Or(Box::new(left), Box::new(right));
+                }
+                Some(Tok::Minus) => {
+                    self.next();
+                    let right = self.term()?;
+                    left = Expr::Minus(Box::new(left), Box::new(right));
+                }
+                _ => return Ok(left),
+            }
+        }
+    }
+
+    fn term(&mut self) -> Result<Expr> {
+        let mut left = self.factor()?;
+        while self.peek() == Some(&Tok::And) {
+            self.next();
+            let right = self.factor()?;
+            left = Expr::And(Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn factor(&mut self) -> Result<Expr> {
+        match self.next() {
+            Some(Tok::LParen) => {
+                let e = self.expr()?;
+                if self.next() != Some(Tok::RParen) {
+                    return Err(RucioError::InvalidRseExpression("missing ')'".into()));
+                }
+                Ok(e)
+            }
+            Some(Tok::Star) => Ok(Expr::All),
+            Some(Tok::Ident(name)) => match self.peek() {
+                Some(Tok::Eq) => {
+                    self.next();
+                    match self.next() {
+                        Some(Tok::Value(v)) | Some(Tok::Ident(v)) => Ok(Expr::AttrEq(name, v)),
+                        _ => Err(RucioError::InvalidRseExpression(format!(
+                            "expected value after '{name}='"
+                        ))),
+                    }
+                }
+                Some(Tok::Lt) => {
+                    self.next();
+                    let v = self.numeric_value(&name)?;
+                    Ok(Expr::AttrLt(name, v))
+                }
+                Some(Tok::Gt) => {
+                    self.next();
+                    let v = self.numeric_value(&name)?;
+                    Ok(Expr::AttrGt(name, v))
+                }
+                _ => Ok(Expr::Name(name)),
+            },
+            other => Err(RucioError::InvalidRseExpression(format!(
+                "unexpected token {other:?}"
+            ))),
+        }
+    }
+
+    fn numeric_value(&mut self, attr: &str) -> Result<f64> {
+        match self.next() {
+            Some(Tok::Value(v)) | Some(Tok::Ident(v)) => v.parse().map_err(|_| {
+                RucioError::InvalidRseExpression(format!("non-numeric comparison for {attr}: {v}"))
+            }),
+            _ => Err(RucioError::InvalidRseExpression(format!(
+                "expected number after comparison on {attr}"
+            ))),
+        }
+    }
+}
+
+/// Parse an expression string to an AST.
+pub fn parse(input: &str) -> Result<Expr> {
+    let trimmed = input.trim();
+    if trimmed.is_empty() {
+        return Err(RucioError::InvalidRseExpression("empty expression".into()));
+    }
+    let toks = lex(trimmed)?;
+    let mut p = Parser { toks, pos: 0 };
+    let e = p.expr()?;
+    if p.pos != p.toks.len() {
+        return Err(RucioError::InvalidRseExpression(format!(
+            "trailing tokens in '{input}'"
+        )));
+    }
+    Ok(e)
+}
+
+/// Evaluate an AST against a universe → ordered RSE set.
+pub fn eval(expr: &Expr, universe: &dyn RseUniverse) -> BTreeSet<String> {
+    match expr {
+        Expr::All => universe.all_rses().into_iter().collect(),
+        Expr::Name(name) => {
+            let all = universe.all_rses();
+            // Exact RSE-name match wins (upstream convention)...
+            if all.iter().any(|r| r == name) {
+                return std::iter::once(name.clone()).collect();
+            }
+            // ...else boolean attribute (attr present and truthy).
+            all.into_iter()
+                .filter(|r| {
+                    universe
+                        .attribute(r, name)
+                        .map(|v| v != "false" && v != "0" && !v.is_empty())
+                        .unwrap_or(false)
+                })
+                .collect()
+        }
+        Expr::AttrEq(key, value) => universe
+            .all_rses()
+            .into_iter()
+            .filter(|r| universe.attribute(r, key).as_deref() == Some(value.as_str()))
+            .collect(),
+        Expr::AttrLt(key, num) => numeric_filter(universe, key, |v| v < *num),
+        Expr::AttrGt(key, num) => numeric_filter(universe, key, |v| v > *num),
+        Expr::And(a, b) => {
+            let sa = eval(a, universe);
+            let sb = eval(b, universe);
+            sa.intersection(&sb).cloned().collect()
+        }
+        Expr::Or(a, b) => {
+            let mut sa = eval(a, universe);
+            sa.extend(eval(b, universe));
+            sa
+        }
+        Expr::Minus(a, b) => {
+            let sa = eval(a, universe);
+            let sb = eval(b, universe);
+            sa.difference(&sb).cloned().collect()
+        }
+    }
+}
+
+fn numeric_filter(
+    universe: &dyn RseUniverse,
+    key: &str,
+    pred: impl Fn(f64) -> bool,
+) -> BTreeSet<String> {
+    universe
+        .all_rses()
+        .into_iter()
+        .filter(|r| {
+            universe
+                .attribute(r, key)
+                .and_then(|v| v.parse::<f64>().ok())
+                .map(&pred)
+                .unwrap_or(false)
+        })
+        .collect()
+}
+
+/// Parse + evaluate in one call.
+pub fn resolve(input: &str, universe: &dyn RseUniverse) -> Result<BTreeSet<String>> {
+    Ok(eval(&parse(input)?, universe))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn universe() -> MapUniverse {
+        let mk = |name: &str, pairs: &[(&str, &str)]| {
+            let mut m = BTreeMap::new();
+            for (k, v) in pairs {
+                m.insert(k.to_string(), v.to_string());
+            }
+            (name.to_string(), m)
+        };
+        MapUniverse {
+            rses: vec![
+                mk("CERN-PROD", &[("tier", "0"), ("country", "CH"), ("type", "disk")]),
+                mk("CERN-TAPE", &[("tier", "0"), ("country", "CH"), ("type", "tape"), ("tape", "true")]),
+                mk("IN2P3-DISK", &[("tier", "1"), ("country", "FR"), ("type", "disk")]),
+                mk("GRIF", &[("tier", "2"), ("country", "FR"), ("type", "disk")]),
+                mk("DESY", &[("tier", "2"), ("country", "DE"), ("type", "disk"), ("freespace", "120")]),
+                mk("FZK-TAPE", &[("tier", "1"), ("country", "DE"), ("type", "tape"), ("tape", "true"), ("freespace", "40")]),
+            ],
+        }
+    }
+
+    fn names(set: BTreeSet<String>) -> Vec<String> {
+        set.into_iter().collect()
+    }
+
+    #[test]
+    fn paper_example_expression() {
+        // "tier=2&(country=FR|country=DE)" — the §2.5 example.
+        let u = universe();
+        let got = names(resolve("tier=2&(country=FR|country=DE)", &u).unwrap());
+        assert_eq!(got, vec!["DESY", "GRIF"]);
+    }
+
+    #[test]
+    fn star_matches_all() {
+        let u = universe();
+        assert_eq!(resolve("*", &u).unwrap().len(), 6);
+    }
+
+    #[test]
+    fn bare_rse_name() {
+        let u = universe();
+        assert_eq!(names(resolve("CERN-PROD", &u).unwrap()), vec!["CERN-PROD"]);
+    }
+
+    #[test]
+    fn bare_boolean_attribute() {
+        let u = universe();
+        assert_eq!(
+            names(resolve("tape", &u).unwrap()),
+            vec!["CERN-TAPE", "FZK-TAPE"]
+        );
+    }
+
+    #[test]
+    fn difference_operator() {
+        let u = universe();
+        let got = names(resolve("country=DE\\tape", &u).unwrap());
+        assert_eq!(got, vec!["DESY"]);
+    }
+
+    #[test]
+    fn union_and_precedence() {
+        // & binds tighter than |
+        let u = universe();
+        let got = names(resolve("tier=1&country=FR|tier=0&type=disk", &u).unwrap());
+        assert_eq!(got, vec!["CERN-PROD", "IN2P3-DISK"]);
+    }
+
+    #[test]
+    fn numeric_comparisons() {
+        let u = universe();
+        assert_eq!(names(resolve("freespace>100", &u).unwrap()), vec!["DESY"]);
+        assert_eq!(names(resolve("freespace<100", &u).unwrap()), vec!["FZK-TAPE"]);
+    }
+
+    #[test]
+    fn empty_result_is_ok_not_error() {
+        let u = universe();
+        assert!(resolve("country=JP", &u).unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_expressions_error() {
+        let u = universe();
+        for bad in ["", "tier=", "(tier=1", "tier=1)", "&tier=1", "tier=1 country=FR", "a=b=c"] {
+            assert!(resolve(bad, &u).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn nested_parentheses() {
+        let u = universe();
+        let got = names(
+            resolve("((country=FR|country=DE)&type=disk)\\(tier=2&country=DE)", &u).unwrap(),
+        );
+        assert_eq!(got, vec!["GRIF", "IN2P3-DISK"]);
+    }
+
+    #[test]
+    fn prop_set_algebra_laws() {
+        use crate::common::proptest::forall;
+        let u = universe();
+        let atoms = [
+            "tier=0", "tier=1", "tier=2", "country=FR", "country=DE", "country=CH", "type=disk",
+            "tape", "*",
+        ];
+        forall(100, |g| {
+            let a = *g.pick(&atoms);
+            let b = *g.pick(&atoms);
+            // commutativity
+            assert_eq!(
+                resolve(&format!("{a}&{b}"), &u).unwrap(),
+                resolve(&format!("{b}&{a}"), &u).unwrap()
+            );
+            assert_eq!(
+                resolve(&format!("{a}|{b}"), &u).unwrap(),
+                resolve(&format!("{b}|{a}"), &u).unwrap()
+            );
+            // idempotence
+            assert_eq!(
+                resolve(&format!("{a}&{a}"), &u).unwrap(),
+                resolve(a, &u).unwrap()
+            );
+            // A \ B ⊆ A and disjoint from B
+            let diff = resolve(&format!("{a}\\{b}"), &u).unwrap();
+            let sa = resolve(a, &u).unwrap();
+            let sb = resolve(b, &u).unwrap();
+            assert!(diff.is_subset(&sa));
+            assert!(diff.intersection(&sb).next().is_none());
+            // (A|B) == (A\B) | B
+            let lhs = resolve(&format!("{a}|{b}"), &u).unwrap();
+            let mut rhs = diff.clone();
+            rhs.extend(sb);
+            assert_eq!(lhs, rhs);
+        });
+    }
+}

@@ -1,0 +1,1284 @@
+//! The replication-rule engine (paper §2.5 + §4.2): rule creation with
+//! RSE selection and quota checks, replica locks, transfer-request
+//! creation, completion/failure handling, repair, content-change
+//! re-evaluation, and lifetime expiry.
+//!
+//! Invariants maintained everywhere:
+//! * `locks_ok + locks_replicating + locks_stuck == Σ locks(rule)`;
+//! * `replica.lock_count == #locks on that (rse, did)`;
+//! * a replica with `lock_count > 0` never carries a tombstone;
+//! * account usage equals the Σ bytes of the account's locks per RSE
+//!   ("the accounts are only charged for the files they actively set
+//!   replication rules on", §2.5);
+//! * rule evaluation is idempotent/additive — re-evaluating never removes
+//!   other rules' replicas ("there is no possibility of having
+//!   conflicting rules", §2.5).
+
+use std::collections::BTreeSet;
+
+use crate::common::clock::EpochMs;
+use crate::common::error::{Result, RucioError};
+use crate::jsonx::Json;
+
+use super::types::*;
+use super::Catalog;
+
+/// Parameters for rule creation (paper §2.5: "a replication rule requires
+/// a minimum of four parameters": DID, RSE expression, copies, lifetime).
+#[derive(Debug, Clone)]
+pub struct RuleSpec {
+    pub account: String,
+    pub did: DidKey,
+    pub rse_expression: String,
+    pub copies: u32,
+    /// Relative lifetime; `None` = forever.
+    pub lifetime_ms: Option<i64>,
+    /// Weight attribute name for placement skew (§2.5).
+    pub weight: Option<String>,
+    pub activity: String,
+    pub purge_replicas: bool,
+    pub subscription_id: Option<u64>,
+}
+
+impl RuleSpec {
+    pub fn new(account: &str, did: DidKey, rse_expression: &str, copies: u32) -> Self {
+        RuleSpec {
+            account: account.to_string(),
+            did,
+            rse_expression: rse_expression.to_string(),
+            copies,
+            lifetime_ms: None,
+            weight: None,
+            activity: "User Subscriptions".to_string(),
+            purge_replicas: false,
+            subscription_id: None,
+        }
+    }
+
+    pub fn with_lifetime(mut self, ms: i64) -> Self {
+        self.lifetime_ms = Some(ms);
+        self
+    }
+
+    pub fn with_activity(mut self, activity: &str) -> Self {
+        self.activity = activity.to_string();
+        self
+    }
+
+    pub fn with_weight(mut self, attr: &str) -> Self {
+        self.weight = Some(attr.to_string());
+        self
+    }
+}
+
+/// One planned lock before application.
+struct PlannedLock {
+    did: DidKey,
+    bytes: u64,
+    adler32: String,
+    rse: String,
+    /// Replica already available there (lock will be Ok, no transfer).
+    have_available: bool,
+    /// Replica exists in Copying (another rule's transfer is inbound).
+    have_copying: bool,
+}
+
+impl Catalog {
+    // ------------------------------------------------------------------
+    // rule creation (§2.5 / §4.2 step 1)
+    // ------------------------------------------------------------------
+
+    pub fn add_rule(&self, spec: RuleSpec) -> Result<u64> {
+        let now = self.now();
+        self.get_account(&spec.account)?;
+        self.get_did(&spec.did)?;
+        if spec.copies == 0 {
+            return Err(RucioError::InvalidValue("copies must be >= 1".into()));
+        }
+        let candidates = self.resolve_rse_expression(&spec.rse_expression)?;
+        let writable: Vec<String> = candidates
+            .iter()
+            .filter(|r| self.get_rse(r).map(|x| x.availability_write).unwrap_or(false))
+            .cloned()
+            .collect();
+        if (candidates.len() as u32) < spec.copies {
+            return Err(RucioError::InvalidValue(format!(
+                "expression '{}' yields {} RSEs < {} copies",
+                spec.rse_expression,
+                candidates.len(),
+                spec.copies
+            )));
+        }
+
+        let files = self.resolve_files(&spec.did);
+        // Plan phase: choose target RSEs per file without mutating.
+        let mut plan: Vec<PlannedLock> = Vec::with_capacity(files.len() * spec.copies as usize);
+        for f in &files {
+            let chosen = self.select_rses_for_file(
+                &f.key,
+                &candidates,
+                &writable,
+                spec.copies,
+                spec.weight.as_deref(),
+                &BTreeSet::new(),
+            )?;
+            for (rse, have_available, have_copying) in chosen {
+                plan.push(PlannedLock {
+                    did: f.key.clone(),
+                    bytes: f.bytes,
+                    adler32: f.adler32.clone(),
+                    rse,
+                    have_available,
+                    have_copying,
+                });
+            }
+        }
+
+        // Quota phase (§2.5: "when requesting the replication rule Rucio
+        // validates the available quota").
+        let mut needed: std::collections::BTreeMap<String, u64> = Default::default();
+        for p in &plan {
+            *needed.entry(p.rse.clone()).or_insert(0) += p.bytes;
+        }
+        for (rse, bytes) in &needed {
+            self.check_quota(&spec.account, rse, *bytes)?;
+        }
+
+        // Apply phase.
+        let rule_id = self.next_id();
+        let expires_at = spec.lifetime_ms.map(|l| now + l);
+        self.rules.insert(
+            Rule {
+                id: rule_id,
+                account: spec.account.clone(),
+                did: spec.did.clone(),
+                rse_expression: spec.rse_expression.clone(),
+                copies: spec.copies,
+                state: RuleState::Replicating, // fixed up below
+                locks_ok: 0,
+                locks_replicating: 0,
+                locks_stuck: 0,
+                expires_at,
+                weight: spec.weight.clone(),
+                activity: spec.activity.clone(),
+                created_at: now,
+                updated_at: now,
+                child_rule: None,
+                subscription_id: spec.subscription_id,
+                purge_replicas: spec.purge_replicas,
+                stuck_at: None,
+            },
+            now,
+        )?;
+        for p in plan {
+            self.apply_planned_lock(rule_id, &spec.account, &spec.activity, p)?;
+        }
+        self.refresh_rule_state(rule_id);
+        self.metrics.incr("rules.added", 1);
+        self.notify(
+            "rule-created",
+            Json::obj()
+                .with("rule_id", rule_id)
+                .with("account", spec.account.as_str())
+                .with("scope", spec.did.scope.as_str())
+                .with("name", spec.did.name.as_str())
+                .with("rse_expression", spec.rse_expression.as_str())
+                .with("copies", spec.copies as u64),
+        );
+        Ok(rule_id)
+    }
+
+    /// RSE selection for one file (§2.5: "Rucio primarily tries to
+    /// minimize the amount of transfers created, thus it prioritizes RSEs
+    /// where data is partially already available. Otherwise RSEs are
+    /// selected randomly unless the weight parameter ... is used").
+    /// Returns (rse, have_available, have_copying) triples.
+    fn select_rses_for_file(
+        &self,
+        file: &DidKey,
+        candidates: &[String],
+        writable: &[String],
+        copies: u32,
+        weight: Option<&str>,
+        exclude: &BTreeSet<String>,
+    ) -> Result<Vec<(String, bool, bool)>> {
+        let replicas = self.list_replicas(file);
+        let mut chosen: Vec<(String, bool, bool)> = Vec::new();
+        let candidate_set: BTreeSet<&String> = candidates.iter().collect();
+
+        // 1. existing available replicas in the candidate set
+        for r in replicas.iter().filter(|r| r.state == ReplicaState::Available) {
+            if chosen.len() as u32 >= copies {
+                break;
+            }
+            if candidate_set.contains(&r.rse) && !exclude.contains(&r.rse) {
+                chosen.push((r.rse.clone(), true, false));
+            }
+        }
+        // 2. inbound copies (share the pending transfer)
+        for r in replicas.iter().filter(|r| r.state == ReplicaState::Copying) {
+            if chosen.len() as u32 >= copies {
+                break;
+            }
+            if candidate_set.contains(&r.rse)
+                && !exclude.contains(&r.rse)
+                && !chosen.iter().any(|(c, _, _)| c == &r.rse)
+            {
+                chosen.push((r.rse.clone(), false, true));
+            }
+        }
+        // 3. fresh targets: weighted/random among writable candidates
+        let mut pool: Vec<String> = writable
+            .iter()
+            .filter(|r| !exclude.contains(*r) && !chosen.iter().any(|(c, _, _)| c == *r))
+            .cloned()
+            .collect();
+        while (chosen.len() as u32) < copies {
+            if pool.is_empty() {
+                return Err(RucioError::InvalidValue(format!(
+                    "not enough writable RSEs for {file}: need {copies}, have {}",
+                    chosen.len()
+                )));
+            }
+            let idx = match weight {
+                Some(attr) => {
+                    let weights: Vec<f64> = pool
+                        .iter()
+                        .map(|r| {
+                            self.get_rse(r)
+                                .ok()
+                                .and_then(|x| x.attr(attr).and_then(|v| v.parse().ok()))
+                                .unwrap_or(1.0f64)
+                                .max(0.0)
+                        })
+                        .collect();
+                    if weights.iter().sum::<f64>() <= 0.0 {
+                        self.rng.lock().unwrap().range_usize(0, pool.len())
+                    } else {
+                        self.rng.lock().unwrap().weighted(&weights)
+                    }
+                }
+                None => self.rng.lock().unwrap().range_usize(0, pool.len()),
+            };
+            let rse = pool.swap_remove(idx);
+            chosen.push((rse, false, false));
+        }
+        Ok(chosen)
+    }
+
+    /// Materialize one planned lock: replica upsert, lock row, transfer
+    /// request (deduplicated), usage charge.
+    fn apply_planned_lock(
+        &self,
+        rule_id: u64,
+        account: &str,
+        activity: &str,
+        p: PlannedLock,
+    ) -> Result<()> {
+        let now = self.now();
+        let replica_key = (p.rse.clone(), p.did.clone());
+        let lock_state = if p.have_available { LockState::Ok } else { LockState::Replicating };
+
+        match self.replicas.get(&replica_key) {
+            Some(_) => {
+                // Protect the replica: bump lock_count, clear tombstone
+                // (§2.5: "replica locks ... lock a replica on a certain RSE").
+                self.replicas.update(&replica_key, now, |r| {
+                    r.lock_count += 1;
+                    r.tombstone = None;
+                });
+            }
+            None => {
+                // New stub in Copying; a transfer will fill it.
+                let rse = self.get_rse(&p.rse)?;
+                let pfn = rse
+                    .lfn2pfn(&p.did.scope, &p.did.name)
+                    .unwrap_or_else(|| format!("/nondet/{}/{}", p.did.scope, p.did.name));
+                self.replicas.insert(
+                    Replica {
+                        rse: p.rse.clone(),
+                        did: p.did.clone(),
+                        bytes: p.bytes,
+                        state: ReplicaState::Copying,
+                        pfn,
+                        lock_count: 1,
+                        tombstone: None,
+                        accessed_at: now,
+                        created_at: now,
+                        error_count: 0,
+                    },
+                    now,
+                )?;
+            }
+        }
+
+        self.locks.insert(
+            ReplicaLock {
+                rule_id,
+                rse: p.rse.clone(),
+                did: p.did.clone(),
+                state: lock_state,
+                bytes: p.bytes,
+            },
+            now,
+        )?;
+        self.rules.update(&rule_id, now, |r| match lock_state {
+            LockState::Ok => r.locks_ok += 1,
+            LockState::Replicating => r.locks_replicating += 1,
+            LockState::Stuck => r.locks_stuck += 1,
+        });
+        self.charge_usage(account, &p.rse, p.bytes as i64, 1);
+
+        // Transfer request, unless data is (or is becoming) available.
+        if !p.have_available && !p.have_copying {
+            let existing = self.requests_by_dest.get(&(p.rse.clone(), p.did.clone()));
+            if existing.is_empty() {
+                let req_id = self.next_id();
+                self.requests.insert(
+                    TransferRequest {
+                        id: req_id,
+                        did: p.did.clone(),
+                        dst_rse: p.rse.clone(),
+                        rule_id,
+                        bytes: p.bytes,
+                        adler32: p.adler32.clone(),
+                        activity: activity.to_string(),
+                        state: RequestState::Queued,
+                        attempts: 0,
+                        src_rse: None,
+                        external_id: None,
+                        fts_server: None,
+                        created_at: now,
+                        updated_at: now,
+                        retry_after: None,
+                        last_error: None,
+                    },
+                    now,
+                )?;
+                self.metrics.incr("requests.created", 1);
+            }
+        }
+        Ok(())
+    }
+
+    /// Recompute a rule's state from its lock tallies; notify on OK.
+    pub(crate) fn refresh_rule_state(&self, rule_id: u64) {
+        let now = self.now();
+        let Some(rule) = self.rules.get(&rule_id) else { return };
+        let new_state = if rule.locks_stuck > 0 {
+            RuleState::Stuck
+        } else if rule.locks_replicating > 0 {
+            RuleState::Replicating
+        } else {
+            RuleState::Ok
+        };
+        if new_state != rule.state {
+            self.rules.update(&rule_id, now, |r| {
+                r.state = new_state;
+                r.updated_at = now;
+                if new_state == RuleState::Stuck {
+                    r.stuck_at = Some(now);
+                }
+            });
+            // §2.5: "notifications are always provided for state changes of
+            // rules" — workflow systems key off rule-ok.
+            let event = match new_state {
+                RuleState::Ok => "rule-ok",
+                RuleState::Stuck => "rule-stuck",
+                _ => "rule-progress",
+            };
+            self.notify(
+                event,
+                Json::obj()
+                    .with("rule_id", rule_id)
+                    .with("scope", rule.did.scope.as_str())
+                    .with("name", rule.did.name.as_str())
+                    .with("state", new_state.as_str()),
+            );
+        }
+    }
+
+    pub fn get_rule(&self, rule_id: u64) -> Result<Rule> {
+        self.rules
+            .get(&rule_id)
+            .ok_or_else(|| RucioError::RuleNotFound(rule_id.to_string()))
+    }
+
+    pub fn list_rules_for_did(&self, did: &DidKey) -> Vec<Rule> {
+        self.rules_by_did
+            .get(did)
+            .into_iter()
+            .filter_map(|id| self.rules.get(&id))
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // transfer outcome handling (§4.2 step 4: transfer-finisher)
+    // ------------------------------------------------------------------
+
+    /// A transfer finished successfully: replica becomes available, all
+    /// replicating locks on it flip to OK, covering rules update.
+    pub fn on_transfer_done(&self, request_id: u64) -> Result<()> {
+        let now = self.now();
+        let req = self
+            .requests
+            .get(&request_id)
+            .ok_or_else(|| RucioError::Internal(format!("request {request_id} unknown")))?;
+        self.requests.update(&request_id, now, |r| {
+            r.state = RequestState::Done;
+            r.updated_at = now;
+        });
+        self.replica_available(&req.dst_rse, &req.did)?;
+        let replica_key = (req.dst_rse.clone(), req.did.clone());
+        // Orphaned arrival (rule deleted mid-flight): leave it cache-like.
+        if self.replicas.get(&replica_key).map(|r| r.lock_count).unwrap_or(0) == 0 {
+            self.replicas.update(&replica_key, now, |r| r.tombstone = Some(now));
+        }
+        for lock_key in self.locks_by_replica.get(&replica_key) {
+            let Some(lock) = self.locks.get(&lock_key) else { continue };
+            if lock.state != LockState::Replicating {
+                continue;
+            }
+            self.locks.update(&lock_key, now, |l| l.state = LockState::Ok);
+            self.rules.update(&lock.rule_id, now, |r| {
+                r.locks_replicating = r.locks_replicating.saturating_sub(1);
+                r.locks_ok += 1;
+                r.updated_at = now;
+            });
+            self.refresh_rule_state(lock.rule_id);
+        }
+        self.metrics.incr("transfers.done", 1);
+        Ok(())
+    }
+
+    /// A transfer failed: retry with backoff, then mark locks STUCK
+    /// (§4.2: "for failed transfer requests the transfer-finisher will
+    /// update the associated replication rule as STUCK").
+    pub fn on_transfer_failed(&self, request_id: u64, reason: &str) -> Result<()> {
+        let now = self.now();
+        let req = self
+            .requests
+            .get(&request_id)
+            .ok_or_else(|| RucioError::Internal(format!("request {request_id} unknown")))?;
+        let max_attempts = self.cfg.get_i64("conveyor", "max_attempts", 3) as u32;
+        let retry_delay = self.cfg.get_duration_ms("conveyor", "retry_delay", 600_000);
+        let attempts = req.attempts + 1;
+        if attempts < max_attempts {
+            self.requests.update(&request_id, now, |r| {
+                r.attempts = attempts;
+                r.state = RequestState::Retry;
+                r.retry_after = Some(now + retry_delay);
+                r.last_error = Some(reason.to_string());
+                r.updated_at = now;
+                r.external_id = None;
+            });
+            self.metrics.incr("transfers.retried", 1);
+            return Ok(());
+        }
+        self.requests.update(&request_id, now, |r| {
+            r.attempts = attempts;
+            r.state = RequestState::Failed;
+            r.last_error = Some(reason.to_string());
+            r.updated_at = now;
+        });
+        let replica_key = (req.dst_rse.clone(), req.did.clone());
+        for lock_key in self.locks_by_replica.get(&replica_key) {
+            let Some(lock) = self.locks.get(&lock_key) else { continue };
+            if lock.state != LockState::Replicating {
+                continue;
+            }
+            self.locks.update(&lock_key, now, |l| l.state = LockState::Stuck);
+            self.rules.update(&lock.rule_id, now, |r| {
+                r.locks_replicating = r.locks_replicating.saturating_sub(1);
+                r.locks_stuck += 1;
+                r.updated_at = now;
+            });
+            self.refresh_rule_state(lock.rule_id);
+        }
+        self.metrics.incr("transfers.failed", 1);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // repair (§4.2: rule-repairer "will either decide to submit a new
+    // transfer request for an alternative destination RSE or re-submit,
+    // after some delay, a transfer request for the same RSE")
+    // ------------------------------------------------------------------
+
+    pub fn repair_rule(&self, rule_id: u64) -> Result<()> {
+        let now = self.now();
+        let rule = self.get_rule(rule_id)?;
+        if rule.state != RuleState::Stuck {
+            return Ok(());
+        }
+        let candidates = self.resolve_rse_expression(&rule.rse_expression)?;
+        let writable: Vec<String> = candidates
+            .iter()
+            .filter(|r| self.get_rse(r).map(|x| x.availability_write).unwrap_or(false))
+            .cloned()
+            .collect();
+
+        for lock_key in self.locks_by_rule.get(&rule_id) {
+            let Some(lock) = self.locks.get(&lock_key) else { continue };
+            if lock.state != LockState::Stuck {
+                continue;
+            }
+            // RSEs this rule already uses for the file (any state).
+            let used: BTreeSet<String> = self
+                .locks_by_rule
+                .get(&rule_id)
+                .into_iter()
+                .filter_map(|k| self.locks.get(&k))
+                .filter(|l| l.did == lock.did)
+                .map(|l| l.rse)
+                .collect();
+            let alternative = self
+                .select_rses_for_file(&lock.did, &candidates, &writable, 1, rule.weight.as_deref(), &used)
+                .ok()
+                .and_then(|v| v.into_iter().next());
+
+            match alternative {
+                Some((new_rse, have_available, have_copying)) => {
+                    // Move the lock to the alternative RSE.
+                    self.release_lock(&lock, &rule.account, now, rule.purge_replicas);
+                    self.rules.update(&rule_id, now, |r| {
+                        r.locks_stuck = r.locks_stuck.saturating_sub(1);
+                    });
+                    self.apply_planned_lock(
+                        rule_id,
+                        &rule.account,
+                        &rule.activity,
+                        PlannedLock {
+                            did: lock.did.clone(),
+                            bytes: lock.bytes,
+                            adler32: self
+                                .get_did(&lock.did)
+                                .map(|d| d.adler32)
+                                .unwrap_or_default(),
+                            rse: new_rse,
+                            have_available,
+                            have_copying,
+                        },
+                    )?;
+                }
+                None => {
+                    // Same-RSE delayed retry: fresh request, lock back to
+                    // Replicating.
+                    self.locks.update(&lock_key, now, |l| l.state = LockState::Replicating);
+                    self.rules.update(&rule_id, now, |r| {
+                        r.locks_stuck = r.locks_stuck.saturating_sub(1);
+                        r.locks_replicating += 1;
+                    });
+                    let existing = self
+                        .requests_by_dest
+                        .get(&(lock.rse.clone(), lock.did.clone()));
+                    if existing.is_empty() {
+                        let req_id = self.next_id();
+                        let adler32 =
+                            self.get_did(&lock.did).map(|d| d.adler32).unwrap_or_default();
+                        self.requests.insert(
+                            TransferRequest {
+                                id: req_id,
+                                did: lock.did.clone(),
+                                dst_rse: lock.rse.clone(),
+                                rule_id,
+                                bytes: lock.bytes,
+                                adler32,
+                                activity: rule.activity.clone(),
+                                state: RequestState::Queued,
+                                attempts: 0,
+                                src_rse: None,
+                                external_id: None,
+                                fts_server: None,
+                                created_at: now,
+                                updated_at: now,
+                                retry_after: None,
+                                last_error: None,
+                            },
+                            now,
+                        )?;
+                    }
+                }
+            }
+        }
+        self.refresh_rule_state(rule_id);
+        self.metrics.incr("rules.repaired", 1);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // rule removal + expiry (§4.3)
+    // ------------------------------------------------------------------
+
+    /// Remove a rule: locks released, usage refunded, replicas tombstoned
+    /// when unprotected ("at the end of the rule lifetime replicas become
+    /// eligible for deletion").
+    pub fn delete_rule(&self, rule_id: u64) -> Result<()> {
+        let now = self.now();
+        let rule = self.get_rule(rule_id)?;
+        for lock_key in self.locks_by_rule.get(&rule_id) {
+            if let Some(lock) = self.locks.get(&lock_key) {
+                self.release_lock(&lock, &rule.account, now, rule.purge_replicas);
+            }
+        }
+        self.rules.remove(&rule_id, now);
+        self.metrics.incr("rules.deleted", 1);
+        self.notify(
+            "rule-deleted",
+            Json::obj()
+                .with("rule_id", rule_id)
+                .with("scope", rule.did.scope.as_str())
+                .with("name", rule.did.name.as_str()),
+        );
+        Ok(())
+    }
+
+    /// Release one lock: remove the row, decrement replica lock_count,
+    /// tombstone the replica if now unprotected, refund usage.
+    fn release_lock(&self, lock: &ReplicaLock, account: &str, now: EpochMs, purge: bool) {
+        self.locks
+            .remove(&(lock.rule_id, lock.rse.clone(), lock.did.clone()), now);
+        let replica_key = (lock.rse.clone(), lock.did.clone());
+        // §4.3: "all rule removals are configured with a 24h delay to undo
+        // any potential changes" — the grace period before eligibility.
+        let grace = if purge {
+            0
+        } else {
+            self.cfg.get_duration_ms("reaper", "tombstone_grace", 24 * 3_600_000)
+        };
+        if let Some(rep) = self.replicas.get(&replica_key) {
+            let new_count = rep.lock_count.saturating_sub(1);
+            self.replicas.update(&replica_key, now, |r| {
+                r.lock_count = new_count;
+                if new_count == 0 {
+                    r.tombstone = Some(now + grace);
+                }
+            });
+            // A never-completed Copying stub with no locks left: drop it
+            // immediately (nothing physical exists yet).
+            if new_count == 0 && rep.state == ReplicaState::Copying {
+                self.replicas.remove(&replica_key, now);
+                self.refresh_availability(&lock.did);
+            }
+        }
+        self.charge_usage(account, &lock.rse, -(lock.bytes as i64), -1);
+    }
+
+    /// Expired rules (judge-cleaner work queue): delete up to `limit`
+    /// rules whose expiry passed.
+    pub fn process_expired_rules(&self, limit: usize) -> usize {
+        let now = self.now();
+        let expired = self.rules_by_expiry.range_limit(&i64::MIN, &now, limit);
+        let n = expired.len();
+        for rule_id in expired {
+            let _ = self.delete_rule(rule_id);
+        }
+        n
+    }
+
+    // ------------------------------------------------------------------
+    // content-change re-evaluation (§2.5: "when files are added or removed
+    // from a dataset, the replication rule also reflects these changes")
+    // ------------------------------------------------------------------
+
+    /// Called by `attach`: extend rules covering `parent` (or any of its
+    /// ancestors) over the newly reachable files.
+    pub(crate) fn on_content_added(&self, parent: &DidKey, files: &[Did]) -> Result<()> {
+        if files.is_empty() {
+            return Ok(());
+        }
+        let mut covering: Vec<u64> = self.rules_by_did.get(parent);
+        for anc in self.ancestors(parent) {
+            covering.extend(self.rules_by_did.get(&anc));
+        }
+        covering.sort();
+        covering.dedup();
+        for rule_id in covering {
+            let Some(rule) = self.rules.get(&rule_id) else { continue };
+            let Ok(candidates) = self.resolve_rse_expression(&rule.rse_expression) else {
+                continue;
+            };
+            let writable: Vec<String> = candidates
+                .iter()
+                .filter(|r| self.get_rse(r).map(|x| x.availability_write).unwrap_or(false))
+                .cloned()
+                .collect();
+            for f in files {
+                // Skip files the rule already covers.
+                let has_lock = self
+                    .locks_by_rule
+                    .get(&rule_id)
+                    .into_iter()
+                    .filter_map(|k| self.locks.get(&k))
+                    .any(|l| l.did == f.key);
+                if has_lock {
+                    continue;
+                }
+                let copies = rule.copies.min(candidates.len() as u32);
+                if let Ok(chosen) = self.select_rses_for_file(
+                    &f.key,
+                    &candidates,
+                    &writable,
+                    copies,
+                    rule.weight.as_deref(),
+                    &BTreeSet::new(),
+                ) {
+                    for (rse, have_available, have_copying) in chosen {
+                        self.apply_planned_lock(
+                            rule_id,
+                            &rule.account,
+                            &rule.activity,
+                            PlannedLock {
+                                did: f.key.clone(),
+                                bytes: f.bytes,
+                                adler32: f.adler32.clone(),
+                                rse,
+                                have_available,
+                                have_copying,
+                            },
+                        )?;
+                    }
+                }
+            }
+            self.refresh_rule_state(rule_id);
+        }
+        Ok(())
+    }
+
+    /// Called by `detach`: drop locks of rules that no longer reach the
+    /// removed files.
+    pub(crate) fn on_content_removed(&self, parent: &DidKey, files: &[Did]) -> Result<()> {
+        if files.is_empty() {
+            return Ok(());
+        }
+        let now = self.now();
+        let mut covering: Vec<u64> = self.rules_by_did.get(parent);
+        for anc in self.ancestors(parent) {
+            covering.extend(self.rules_by_did.get(&anc));
+        }
+        covering.sort();
+        covering.dedup();
+        for rule_id in covering {
+            let Some(rule) = self.rules.get(&rule_id) else { continue };
+            let still_reachable: BTreeSet<DidKey> =
+                self.resolve_files(&rule.did).into_iter().map(|d| d.key).collect();
+            for f in files {
+                if still_reachable.contains(&f.key) {
+                    continue;
+                }
+                for lock_key in self.locks_by_rule.get(&rule_id) {
+                    let Some(lock) = self.locks.get(&lock_key) else { continue };
+                    if lock.did != f.key {
+                        continue;
+                    }
+                    self.rules.update(&rule_id, now, |r| match lock.state {
+                        LockState::Ok => r.locks_ok = r.locks_ok.saturating_sub(1),
+                        LockState::Replicating => {
+                            r.locks_replicating = r.locks_replicating.saturating_sub(1)
+                        }
+                        LockState::Stuck => r.locks_stuck = r.locks_stuck.saturating_sub(1),
+                    });
+                    self.release_lock(&lock, &rule.account, now, rule.purge_replicas);
+                }
+            }
+            self.refresh_rule_state(rule_id);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // quota (§2.5)
+    // ------------------------------------------------------------------
+
+    pub fn set_account_limit(&self, account: &str, rse: &str, bytes: u64) -> Result<()> {
+        self.get_account(account)?;
+        self.get_rse(rse)?;
+        self.limits.upsert(
+            AccountLimit { account: account.to_string(), rse: rse.to_string(), bytes },
+            self.now(),
+        );
+        Ok(())
+    }
+
+    pub fn get_account_limit(&self, account: &str, rse: &str) -> Option<u64> {
+        self.limits
+            .get(&(account.to_string(), rse.to_string()))
+            .map(|l| l.bytes)
+    }
+
+    pub fn get_account_usage(&self, account: &str, rse: &str) -> AccountUsage {
+        self.usages
+            .get(&(account.to_string(), rse.to_string()))
+            .unwrap_or(AccountUsage {
+                account: account.to_string(),
+                rse: rse.to_string(),
+                bytes: 0,
+                files: 0,
+            })
+    }
+
+    fn check_quota(&self, account: &str, rse: &str, additional: u64) -> Result<()> {
+        // Admin accounts bypass quota (root protects detector data with
+        // unlimited rules, §4.3).
+        if self.accounts.get(&account.to_string()).map(|a| a.admin).unwrap_or(false) {
+            return Ok(());
+        }
+        if let Some(limit) = self.get_account_limit(account, rse) {
+            let usage = self.get_account_usage(account, rse);
+            if usage.bytes + additional > limit {
+                return Err(RucioError::QuotaExceeded(format!(
+                    "{account} on {rse}: {} + {additional} > {limit}",
+                    usage.bytes
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn charge_usage(&self, account: &str, rse: &str, bytes_delta: i64, files_delta: i64) {
+        let key = (account.to_string(), rse.to_string());
+        let now = self.now();
+        if self.usages.contains(&key) {
+            self.usages.update(&key, now, |u| {
+                u.bytes = (u.bytes as i64 + bytes_delta).max(0) as u64;
+                u.files = (u.files as i64 + files_delta).max(0) as u64;
+            });
+        } else {
+            let _ = self.usages.insert(
+                AccountUsage {
+                    account: account.to_string(),
+                    rse: rse.to_string(),
+                    bytes: bytes_delta.max(0) as u64,
+                    files: files_delta.max(0) as u64,
+                },
+                now,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rse::Rse;
+    use crate::core::Catalog;
+
+    /// Catalog with alice + 4 disk RSEs (2 FR, 2 DE) + one tape.
+    fn catalog() -> Catalog {
+        let c = Catalog::new_for_tests();
+        let now = c.now();
+        c.add_account("alice", AccountType::User, "a@x").unwrap();
+        c.add_scope("data18", "root").unwrap();
+        for (name, country) in
+            [("FR-A", "FR"), ("FR-B", "FR"), ("DE-A", "DE"), ("DE-B", "DE")]
+        {
+            c.add_rse(
+                Rse::new(name, now)
+                    .with_attr("country", country)
+                    .with_attr("type", "disk"),
+            )
+            .unwrap();
+        }
+        c.add_rse(Rse::new("DE-TAPE", now).with_attr("country", "DE").with_tape())
+            .unwrap();
+        c
+    }
+
+    fn file(c: &Catalog, name: &str, bytes: u64) -> DidKey {
+        c.add_file("data18", name, "root", bytes, "aabbccdd", None).unwrap();
+        DidKey::new("data18", name)
+    }
+
+    fn assert_lock_invariant(c: &Catalog, rule_id: u64) {
+        let rule = c.get_rule(rule_id).unwrap();
+        let locks: Vec<ReplicaLock> = c
+            .locks_by_rule
+            .get(&rule_id)
+            .into_iter()
+            .filter_map(|k| c.locks.get(&k))
+            .collect();
+        let ok = locks.iter().filter(|l| l.state == LockState::Ok).count() as u32;
+        let repl = locks.iter().filter(|l| l.state == LockState::Replicating).count() as u32;
+        let stuck = locks.iter().filter(|l| l.state == LockState::Stuck).count() as u32;
+        assert_eq!((rule.locks_ok, rule.locks_replicating, rule.locks_stuck), (ok, repl, stuck));
+        // replica lock_count matches locks across all rules
+        for l in &locks {
+            let rep = c.get_replica(&l.rse, &l.did).unwrap();
+            let total = c.locks_by_replica.get(&(l.rse.clone(), l.did.clone())).len() as u32;
+            assert_eq!(rep.lock_count, total);
+            assert!(rep.tombstone.is_none(), "locked replica must not be tombstoned");
+        }
+    }
+
+    #[test]
+    fn rule_without_replicas_creates_transfer() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let rid = c
+            .add_rule(RuleSpec::new("root", f.clone(), "country=FR", 1))
+            .unwrap();
+        let rule = c.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Replicating);
+        assert_eq!(rule.locks_replicating, 1);
+        assert_eq!(c.requests.len(), 1);
+        let reqs = c.requests.scan(|_| true);
+        assert_eq!(reqs[0].state, RequestState::Queued);
+        assert!(reqs[0].dst_rse.starts_with("FR-"));
+        // replica stub in Copying
+        let rep = c.get_replica(&reqs[0].dst_rse, &f).unwrap();
+        assert_eq!(rep.state, ReplicaState::Copying);
+        assert_eq!(rep.lock_count, 1);
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn rule_on_existing_replica_is_instant_ok() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        c.add_replica("FR-A", &f, ReplicaState::Available, None).unwrap();
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "country=FR", 1)).unwrap();
+        let rule = c.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Ok);
+        assert_eq!(c.requests.len(), 0, "minimize transfers: reuse FR-A");
+        // the replica is now protected
+        let rep = c.get_replica("FR-A", &f).unwrap();
+        assert_eq!(rep.lock_count, 1);
+        assert!(rep.tombstone.is_none());
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn transfer_done_completes_rule_and_notifies() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "DE-A", 1)).unwrap();
+        let req = c.requests.scan(|_| true)[0].clone();
+        c.on_transfer_done(req.id).unwrap();
+        let rule = c.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Ok);
+        assert_eq!(c.get_replica("DE-A", &f).unwrap().state, ReplicaState::Available);
+        assert_eq!(c.get_did(&f).unwrap().availability, Availability::Available);
+        // rule-ok notification queued
+        let events: Vec<String> =
+            c.outbox.scan(|_| true).into_iter().map(|m| m.event_type).collect();
+        assert!(events.contains(&"rule-ok".to_string()), "{events:?}");
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn transfer_failure_retries_then_sticks() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "DE-A", 1)).unwrap();
+        let req = c.requests.scan(|_| true)[0].clone();
+        // two failures → Retry
+        c.on_transfer_failed(req.id, "SOURCE gone").unwrap();
+        assert_eq!(c.requests.get(&req.id).unwrap().state, RequestState::Retry);
+        assert_eq!(c.get_rule(rid).unwrap().state, RuleState::Replicating);
+        c.on_transfer_failed(req.id, "SOURCE gone").unwrap();
+        assert_eq!(c.requests.get(&req.id).unwrap().attempts, 2);
+        // third failure exhausts attempts → STUCK
+        c.on_transfer_failed(req.id, "SOURCE gone").unwrap();
+        assert_eq!(c.requests.get(&req.id).unwrap().state, RequestState::Failed);
+        let rule = c.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Stuck);
+        assert_eq!(rule.locks_stuck, 1);
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn repair_moves_to_alternative_rse() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "country=DE&type=disk", 1)).unwrap();
+        let req = c.requests.scan(|_| true)[0].clone();
+        let original_rse = req.dst_rse.clone();
+        for _ in 0..3 {
+            c.on_transfer_failed(req.id, "DESTINATION broken").unwrap();
+        }
+        assert_eq!(c.get_rule(rid).unwrap().state, RuleState::Stuck);
+        c.repair_rule(rid).unwrap();
+        let rule = c.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Replicating);
+        // lock moved to the other DE disk RSE
+        let locks: Vec<ReplicaLock> = c
+            .locks_by_rule
+            .get(&rid)
+            .into_iter()
+            .filter_map(|k| c.locks.get(&k))
+            .collect();
+        assert_eq!(locks.len(), 1);
+        assert_ne!(locks[0].rse, original_rse);
+        // a fresh request exists for the new destination
+        let queued = c.requests.scan(|r| r.state == RequestState::Queued);
+        assert_eq!(queued.len(), 1);
+        assert_eq!(queued[0].dst_rse, locks[0].rse);
+        // old Copying stub dropped
+        assert!(c.get_replica(&original_rse, &f).is_err());
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn repair_requeues_same_rse_when_no_alternative() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "DE-A", 1)).unwrap();
+        let req = c.requests.scan(|_| true)[0].clone();
+        for _ in 0..3 {
+            c.on_transfer_failed(req.id, "x").unwrap();
+        }
+        c.repair_rule(rid).unwrap();
+        let rule = c.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Replicating);
+        let queued = c.requests.scan(|r| r.state == RequestState::Queued);
+        assert_eq!(queued.len(), 1);
+        assert_eq!(queued[0].dst_rse, "DE-A");
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn two_rules_one_physical_copy_both_charged() {
+        // §2.5: "the files are shared with only one physical copy, but ...
+        // both accounts are charged for this file".
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        c.add_replica("FR-A", &f, ReplicaState::Available, None).unwrap();
+        let r1 = c.add_rule(RuleSpec::new("root", f.clone(), "FR-A", 1)).unwrap();
+        let r2 = c.add_rule(RuleSpec::new("alice", f.clone(), "FR-A", 1)).unwrap();
+        assert_eq!(c.get_replica("FR-A", &f).unwrap().lock_count, 2);
+        assert_eq!(c.get_account_usage("root", "FR-A").bytes, 1000);
+        assert_eq!(c.get_account_usage("alice", "FR-A").bytes, 1000);
+        // deleting one rule keeps the replica protected (no conflict)
+        c.delete_rule(r1).unwrap();
+        let rep = c.get_replica("FR-A", &f).unwrap();
+        assert_eq!(rep.lock_count, 1);
+        assert!(rep.tombstone.is_none());
+        assert_eq!(c.get_account_usage("root", "FR-A").bytes, 0);
+        // deleting the second frees it (tombstone with grace)
+        c.delete_rule(r2).unwrap();
+        let rep = c.get_replica("FR-A", &f).unwrap();
+        assert_eq!(rep.lock_count, 0);
+        assert!(rep.tombstone.unwrap() > c.now(), "24h grace applies");
+    }
+
+    #[test]
+    fn quota_enforced_for_regular_accounts() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        c.set_account_limit("alice", "FR-A", 500).unwrap();
+        c.set_account_limit("alice", "FR-B", 500).unwrap();
+        let err = c.add_rule(RuleSpec::new("alice", f.clone(), "country=FR", 1));
+        assert!(matches!(err, Err(RucioError::QuotaExceeded(_))), "{err:?}");
+        // nothing leaked
+        assert_eq!(c.rules.len(), 0);
+        assert_eq!(c.locks.len(), 0);
+        // admin bypasses quota
+        c.set_account_limit("alice", "FR-A", 0).unwrap();
+        assert!(c.add_rule(RuleSpec::new("root", f, "FR-A", 1)).is_ok());
+    }
+
+    #[test]
+    fn copies_2_spreads_over_distinct_rses() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "type=disk", 2)).unwrap();
+        let locks: Vec<ReplicaLock> = c
+            .locks_by_rule
+            .get(&rid)
+            .into_iter()
+            .filter_map(|k| c.locks.get(&k))
+            .collect();
+        assert_eq!(locks.len(), 2);
+        assert_ne!(locks[0].rse, locks[1].rse);
+        assert_eq!(c.requests.len(), 2);
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn copies_exceeding_candidates_rejected() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        assert!(c.add_rule(RuleSpec::new("root", f, "country=FR", 3)).is_err());
+    }
+
+    #[test]
+    fn shared_request_dedup() {
+        // Two rules needing the same (file, rse) share one transfer.
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let r1 = c.add_rule(RuleSpec::new("root", f.clone(), "DE-A", 1)).unwrap();
+        let r2 = c.add_rule(RuleSpec::new("alice", f.clone(), "DE-A", 1)).unwrap();
+        assert_eq!(c.requests.len(), 1, "deduplicated transfer");
+        let req = c.requests.scan(|_| true)[0].clone();
+        c.on_transfer_done(req.id).unwrap();
+        assert_eq!(c.get_rule(r1).unwrap().state, RuleState::Ok);
+        assert_eq!(c.get_rule(r2).unwrap().state, RuleState::Ok);
+        assert_eq!(c.get_replica("DE-A", &f).unwrap().lock_count, 2);
+    }
+
+    #[test]
+    fn dataset_rule_covers_all_files_and_extends_on_attach() {
+        let c = catalog();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        let f1 = file(&c, "f1", 100);
+        c.attach(&ds, &f1).unwrap();
+        let rid = c.add_rule(RuleSpec::new("root", ds.clone(), "FR-A", 1)).unwrap();
+        assert_eq!(c.locks_by_rule.get(&rid).len(), 1);
+        // attach another file later → rule extends (§2.5)
+        let f2 = file(&c, "f2", 200);
+        c.attach(&ds, &f2).unwrap();
+        assert_eq!(c.locks_by_rule.get(&rid).len(), 2);
+        assert_eq!(c.requests.len(), 2);
+        assert_lock_invariant(&c, rid);
+        // container-level rules extend too
+        c.add_container("data18", "cont", "root").unwrap();
+        let cont = DidKey::new("data18", "cont");
+        c.attach(&cont, &ds).unwrap();
+        let rid2 = c.add_rule(RuleSpec::new("root", cont.clone(), "DE-A", 1)).unwrap();
+        assert_eq!(c.locks_by_rule.get(&rid2).len(), 2);
+        let f3 = file(&c, "f3", 300);
+        c.attach(&ds, &f3).unwrap();
+        assert_eq!(c.locks_by_rule.get(&rid).len(), 3, "dataset rule");
+        assert_eq!(c.locks_by_rule.get(&rid2).len(), 3, "container rule via ancestor");
+        assert_lock_invariant(&c, rid2);
+    }
+
+    #[test]
+    fn detach_removes_locks() {
+        let c = catalog();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        let f1 = file(&c, "f1", 100);
+        let f2 = file(&c, "f2", 200);
+        c.attach(&ds, &f1).unwrap();
+        c.attach(&ds, &f2).unwrap();
+        c.add_replica("FR-A", &f1, ReplicaState::Available, None).unwrap();
+        c.add_replica("FR-A", &f2, ReplicaState::Available, None).unwrap();
+        let rid = c.add_rule(RuleSpec::new("root", ds.clone(), "FR-A", 1)).unwrap();
+        assert_eq!(c.get_account_usage("root", "FR-A").bytes, 300);
+        c.detach(&ds, &f2).unwrap();
+        assert_eq!(c.locks_by_rule.get(&rid).len(), 1);
+        assert_eq!(c.get_account_usage("root", "FR-A").bytes, 100);
+        // detached file's replica becomes unprotected
+        assert!(c.get_replica("FR-A", &f2).unwrap().tombstone.is_some());
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn expired_rules_cleaned() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        c.add_replica("FR-A", &f, ReplicaState::Available, None).unwrap();
+        let _rid = c
+            .add_rule(RuleSpec::new("root", f.clone(), "FR-A", 1).with_lifetime(10_000))
+            .unwrap();
+        assert_eq!(c.process_expired_rules(10), 0, "not expired yet");
+        if let crate::common::clock::Clock::Sim(s) = &c.clock {
+            s.advance(20_000);
+        }
+        assert_eq!(c.process_expired_rules(10), 1);
+        assert_eq!(c.rules.len(), 0);
+        assert!(c.get_replica("FR-A", &f).unwrap().tombstone.is_some());
+    }
+
+    #[test]
+    fn purge_replicas_tombstones_immediately() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        c.add_replica("FR-A", &f, ReplicaState::Available, None).unwrap();
+        let mut spec = RuleSpec::new("root", f.clone(), "FR-A", 1);
+        spec.purge_replicas = true;
+        let rid = c.add_rule(spec).unwrap();
+        c.delete_rule(rid).unwrap();
+        let rep = c.get_replica("FR-A", &f).unwrap();
+        assert!(rep.tombstone.unwrap() <= c.now(), "purge = no grace");
+    }
+
+    #[test]
+    fn weighted_selection_prefers_heavy_rse() {
+        let c = catalog();
+        c.set_rse_attribute("FR-A", "w", "99").unwrap();
+        c.set_rse_attribute("FR-B", "w", "1").unwrap();
+        let mut fr_a = 0;
+        for i in 0..60 {
+            let f = file(&c, &format!("wf{i}"), 10);
+            let rid = c
+                .add_rule(RuleSpec::new("root", f, "country=FR", 1).with_weight("w"))
+                .unwrap();
+            let lock_key = &c.locks_by_rule.get(&rid)[0];
+            if c.locks.get(lock_key).unwrap().rse == "FR-A" {
+                fr_a += 1;
+            }
+        }
+        assert!(fr_a > 50, "weight 99:1 should dominate, got {fr_a}/60");
+    }
+
+    #[test]
+    fn orphan_transfer_arrival_is_cached_not_protected() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "DE-A", 1)).unwrap();
+        let req = c.requests.scan(|_| true)[0].clone();
+        // rule removed while transfer in flight
+        c.delete_rule(rid).unwrap();
+        // replica stub is gone (never completed); re-arrival registers
+        // nothing since the stub was dropped — done handler tolerates it.
+        assert!(c.on_transfer_done(req.id).is_err() || c.get_replica("DE-A", &f).is_err());
+    }
+
+    #[test]
+    fn prop_rule_lifecycle_invariants() {
+        use crate::common::proptest::forall;
+        forall(25, |g| {
+            let c = catalog();
+            let n_files = g.usize(1, 5);
+            c.add_dataset("data18", "ds", "root").unwrap();
+            let ds = DidKey::new("data18", "ds");
+            let mut files = Vec::new();
+            for i in 0..n_files {
+                let f = file(&c, &format!("pf{i}"), g.u64(1, 10_000));
+                // some files pre-placed
+                if g.bool() {
+                    let rse = *g.pick(&["FR-A", "FR-B", "DE-A", "DE-B"]);
+                    c.add_replica(rse, &f, ReplicaState::Available, None).unwrap();
+                }
+                c.attach(&ds, &f).unwrap();
+                files.push(f);
+            }
+            let copies = g.usize(1, 3) as u32;
+            let expr = *g.pick(&["type=disk", "country=FR|country=DE", "*"]);
+            let rid = match c.add_rule(RuleSpec::new("root", ds.clone(), expr, copies)) {
+                Ok(r) => r,
+                Err(_) => return, // e.g. copies > candidates on '*'? fine
+            };
+            assert_lock_invariant(&c, rid);
+            let rule = c.get_rule(rid).unwrap();
+            assert_eq!(
+                (rule.locks_ok + rule.locks_replicating + rule.locks_stuck) as usize,
+                n_files * copies as usize,
+                "locks == copies × files"
+            );
+            // drive all requests to done or failed
+            for req in c.requests.scan(|r| r.state == RequestState::Queued) {
+                if g.chance(0.8) {
+                    c.on_transfer_done(req.id).unwrap();
+                } else {
+                    for _ in 0..3 {
+                        c.on_transfer_failed(req.id, "x").unwrap();
+                    }
+                }
+            }
+            assert_lock_invariant(&c, rid);
+            if c.get_rule(rid).unwrap().state == RuleState::Stuck {
+                c.repair_rule(rid).unwrap();
+                assert_lock_invariant(&c, rid);
+            }
+            // delete and verify full cleanup
+            c.delete_rule(rid).unwrap();
+            assert_eq!(c.locks_by_rule.get(&rid).len(), 0);
+            assert_eq!(c.get_account_usage("root", "FR-A").bytes, 0);
+            assert_eq!(c.get_account_usage("root", "DE-B").bytes, 0);
+        });
+    }
+}

@@ -1,0 +1,313 @@
+//! Subscriptions (paper §2.5): standing dataflow policies — "data
+//! placement requests for future incoming DIDs". A metadata filter is
+//! matched against every new DID; positive matches create the subscribed
+//! replication rules on behalf of the owning account.
+
+use std::collections::BTreeMap;
+
+use crate::common::clock::EpochMs;
+use crate::common::error::{Result, RucioError};
+use crate::db::Row;
+
+use super::rules_api::RuleSpec;
+use super::types::*;
+use super::Catalog;
+
+/// The metadata filter of a subscription (e.g. "all RAW data coming from
+/// the detector").
+#[derive(Debug, Clone, Default)]
+pub struct SubscriptionFilter {
+    /// Match DIDs in any of these scopes (empty = all scopes).
+    pub scopes: Vec<String>,
+    /// Name pattern (regex, matched on the DID name).
+    pub name_pattern: Option<String>,
+    /// Restrict to DID types (empty = datasets only, the usual unit).
+    pub did_types: Vec<DidType>,
+    /// Required metadata key → value equalities.
+    pub meta: BTreeMap<String, String>,
+}
+
+impl SubscriptionFilter {
+    pub fn matches(&self, did: &Did) -> bool {
+        if !self.scopes.is_empty() && !self.scopes.iter().any(|s| *s == did.key.scope) {
+            return false;
+        }
+        let type_ok = if self.did_types.is_empty() {
+            did.did_type == DidType::Dataset
+        } else {
+            self.did_types.contains(&did.did_type)
+        };
+        if !type_ok {
+            return false;
+        }
+        if let Some(p) = &self.name_pattern {
+            match regex::Regex::new(p) {
+                Ok(re) if re.is_match(&did.key.name) => {}
+                _ => return false,
+            }
+        }
+        for (k, v) in &self.meta {
+            if did.meta.get(k) != Some(v) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// A rule template the subscription instantiates per matching DID.
+#[derive(Debug, Clone)]
+pub struct SubscriptionRule {
+    pub rse_expression: String,
+    pub copies: u32,
+    pub lifetime_ms: Option<i64>,
+    pub activity: String,
+}
+
+/// A standing subscription.
+#[derive(Debug, Clone)]
+pub struct Subscription {
+    pub id: u64,
+    pub name: String,
+    pub account: String,
+    pub filter: SubscriptionFilter,
+    pub rules: Vec<SubscriptionRule>,
+    pub enabled: bool,
+    pub created_at: EpochMs,
+    /// How many DIDs this subscription has matched (monitoring).
+    pub matched: u64,
+}
+
+impl Row for Subscription {
+    type Key = u64;
+    fn key(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Catalog {
+    pub fn add_subscription(
+        &self,
+        name: &str,
+        account: &str,
+        filter: SubscriptionFilter,
+        rules: Vec<SubscriptionRule>,
+    ) -> Result<u64> {
+        self.get_account(account)?;
+        if rules.is_empty() {
+            return Err(RucioError::InvalidValue("subscription needs >= 1 rule".into()));
+        }
+        // Validate expressions up front (empty is allowed at definition
+        // time — RSEs may appear later).
+        for r in &rules {
+            self.resolve_rse_expression_allow_empty(&r.rse_expression)?;
+        }
+        let now = self.now();
+        let id = self.next_id();
+        self.subscriptions.insert(
+            Subscription {
+                id,
+                name: name.to_string(),
+                account: account.to_string(),
+                filter,
+                rules,
+                enabled: true,
+                created_at: now,
+                matched: 0,
+            },
+            now,
+        )?;
+        self.metrics.incr("subscriptions.added", 1);
+        Ok(id)
+    }
+
+    pub fn set_subscription_enabled(&self, id: u64, enabled: bool) -> Result<()> {
+        self.subscriptions
+            .update(&id, self.now(), |s| s.enabled = enabled)
+            .ok_or_else(|| RucioError::SubscriptionNotFound(id.to_string()))?;
+        Ok(())
+    }
+
+    /// Match a (new) DID against all enabled subscriptions, creating the
+    /// subscribed rules ("after the creation of a DID its metadata is
+    /// matched with the filter of all subscriptions", §2.5). Returns
+    /// created rule ids. Idempotent per (subscription, did): existing
+    /// subscription rules on the DID are not duplicated.
+    pub fn match_subscriptions(&self, did_key: &DidKey) -> Result<Vec<u64>> {
+        let did = self.get_did(did_key)?;
+        let mut created = Vec::new();
+        for sub in self.subscriptions.scan(|s| s.enabled) {
+            if !sub.filter.matches(&did) {
+                continue;
+            }
+            let already = self
+                .list_rules_for_did(did_key)
+                .iter()
+                .any(|r| r.subscription_id == Some(sub.id));
+            if already {
+                continue;
+            }
+            self.subscriptions.update(&sub.id, self.now(), |s| s.matched += 1);
+            for tpl in &sub.rules {
+                let mut spec = RuleSpec::new(&sub.account, did_key.clone(), &tpl.rse_expression, tpl.copies)
+                    .with_activity(&tpl.activity);
+                if let Some(l) = tpl.lifetime_ms {
+                    spec = spec.with_lifetime(l);
+                }
+                spec.subscription_id = Some(sub.id);
+                match self.add_rule(spec) {
+                    Ok(rule_id) => created.push(rule_id),
+                    Err(e) => {
+                        // Don't fail the whole matching sweep on one bad
+                        // template (e.g. expression currently empty).
+                        log::warn!("subscription {} rule failed on {did_key}: {e}", sub.name);
+                    }
+                }
+            }
+        }
+        Ok(created)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rse::Rse;
+    use crate::core::Catalog;
+
+    fn catalog() -> Catalog {
+        let c = Catalog::new_for_tests();
+        let now = c.now();
+        c.add_scope("data18", "root").unwrap();
+        for (name, country) in [("CERN-DISK", "CH"), ("BNL-TAPE", "US"), ("FZK-TAPE", "DE")] {
+            let mut rse = Rse::new(name, now).with_attr("country", country);
+            if name.ends_with("TAPE") {
+                rse = rse.with_tape();
+            }
+            c.add_rse(rse).unwrap();
+        }
+        c
+    }
+
+    fn raw_filter() -> SubscriptionFilter {
+        SubscriptionFilter {
+            scopes: vec!["data18".into()],
+            name_pattern: Some("^raw\\.".into()),
+            did_types: vec![],
+            meta: BTreeMap::from([("datatype".to_string(), "RAW".to_string())]),
+        }
+    }
+
+    fn tape_rule() -> SubscriptionRule {
+        SubscriptionRule {
+            rse_expression: "tape".into(),
+            copies: 1,
+            lifetime_ms: None,
+            activity: "T0 Export".into(),
+        }
+    }
+
+    #[test]
+    fn filter_matching_semantics() {
+        let c = catalog();
+        c.add_dataset("data18", "raw.001", "root").unwrap();
+        let key = DidKey::new("data18", "raw.001");
+        c.set_metadata(&key, "datatype", "RAW").unwrap();
+        let did = c.get_did(&key).unwrap();
+        assert!(raw_filter().matches(&did));
+
+        // wrong scope
+        let mut f = raw_filter();
+        f.scopes = vec!["mc20".into()];
+        assert!(!f.matches(&did));
+        // wrong meta
+        let mut f = raw_filter();
+        f.meta.insert("datatype".into(), "AOD".into());
+        assert!(!f.matches(&did));
+        // wrong name
+        let mut f = raw_filter();
+        f.name_pattern = Some("^aod\\.".into());
+        assert!(!f.matches(&did));
+        // files don't match by default (datasets only)
+        c.add_file("data18", "raw.file", "root", 1, "x", None).unwrap();
+        let mut fdid = c.get_did(&DidKey::new("data18", "raw.file")).unwrap();
+        fdid.meta.insert("datatype".into(), "RAW".into());
+        assert!(!raw_filter().matches(&fdid));
+    }
+
+    #[test]
+    fn matching_creates_rules_idempotently() {
+        let c = catalog();
+        c.add_subscription("raw-to-tape", "root", raw_filter(), vec![tape_rule()]).unwrap();
+        c.add_dataset("data18", "raw.002", "root").unwrap();
+        let key = DidKey::new("data18", "raw.002");
+        c.set_metadata(&key, "datatype", "RAW").unwrap();
+        let created = c.match_subscriptions(&key).unwrap();
+        assert_eq!(created.len(), 1);
+        let rule = c.get_rule(created[0]).unwrap();
+        assert_eq!(rule.account, "root");
+        assert_eq!(rule.activity, "T0 Export");
+        assert!(rule.subscription_id.is_some());
+        // Re-matching does not duplicate.
+        assert!(c.match_subscriptions(&key).unwrap().is_empty());
+        assert_eq!(c.subscriptions.get(&created[0].min(u64::MAX)).is_none(), true);
+    }
+
+    #[test]
+    fn non_matching_did_creates_nothing() {
+        let c = catalog();
+        c.add_subscription("raw-to-tape", "root", raw_filter(), vec![tape_rule()]).unwrap();
+        c.add_dataset("data18", "aod.001", "root").unwrap();
+        let key = DidKey::new("data18", "aod.001");
+        assert!(c.match_subscriptions(&key).unwrap().is_empty());
+    }
+
+    #[test]
+    fn disabled_subscription_skipped() {
+        let c = catalog();
+        let id = c
+            .add_subscription("raw-to-tape", "root", raw_filter(), vec![tape_rule()])
+            .unwrap();
+        c.set_subscription_enabled(id, false).unwrap();
+        c.add_dataset("data18", "raw.003", "root").unwrap();
+        let key = DidKey::new("data18", "raw.003");
+        c.set_metadata(&key, "datatype", "RAW").unwrap();
+        assert!(c.match_subscriptions(&key).unwrap().is_empty());
+    }
+
+    #[test]
+    fn multiple_rule_templates() {
+        let c = catalog();
+        let two_rules = vec![
+            tape_rule(),
+            SubscriptionRule {
+                rse_expression: "CERN-DISK".into(),
+                copies: 1,
+                lifetime_ms: Some(1000),
+                activity: "Data Consolidation".into(),
+            },
+        ];
+        c.add_subscription("raw-two", "root", raw_filter(), two_rules).unwrap();
+        c.add_dataset("data18", "raw.004", "root").unwrap();
+        let key = DidKey::new("data18", "raw.004");
+        c.set_metadata(&key, "datatype", "RAW").unwrap();
+        let created = c.match_subscriptions(&key).unwrap();
+        assert_eq!(created.len(), 2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let c = catalog();
+        assert!(c.add_subscription("x", "root", raw_filter(), vec![]).is_err());
+        let bad_rule = SubscriptionRule {
+            rse_expression: "((broken".into(),
+            copies: 1,
+            lifetime_ms: None,
+            activity: "A".into(),
+        };
+        assert!(c.add_subscription("x", "root", raw_filter(), vec![bad_rule]).is_err());
+        assert!(c
+            .add_subscription("x", "ghost-account", raw_filter(), vec![tape_rule()])
+            .is_err());
+    }
+}

@@ -1,0 +1,561 @@
+//! Core row types: the Rucio schema (paper §2, §3.6) as typed tables.
+
+use std::collections::BTreeMap;
+
+use crate::common::clock::EpochMs;
+use crate::db::Row;
+
+/// A Data IDentifier key: the `(scope, name)` tuple of paper §2.2
+/// ("The combination of scope and name must be unique").
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DidKey {
+    pub scope: String,
+    pub name: String,
+}
+
+impl DidKey {
+    pub fn new(scope: &str, name: &str) -> Self {
+        DidKey { scope: scope.to_string(), name: name.to_string() }
+    }
+}
+
+impl std::fmt::Display for DidKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.scope, self.name)
+    }
+}
+
+/// Granularity of a DID (paper §2.2, Fig 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DidType {
+    File,
+    Dataset,
+    Container,
+}
+
+impl DidType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DidType::File => "FILE",
+            DidType::Dataset => "DATASET",
+            DidType::Container => "CONTAINER",
+        }
+    }
+
+    pub fn is_collection(&self) -> bool {
+        !matches!(self, DidType::File)
+    }
+}
+
+/// File availability (paper §2.2): derived from the replica catalog but
+/// materialized for cheap listing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Availability {
+    Available,
+    Lost,
+    Deleted,
+}
+
+impl Availability {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Availability::Available => "AVAILABLE",
+            Availability::Lost => "LOST",
+            Availability::Deleted => "DELETED",
+        }
+    }
+}
+
+/// A DID row: file, dataset, or container.
+#[derive(Debug, Clone)]
+pub struct Did {
+    pub key: DidKey,
+    pub did_type: DidType,
+    /// Owning account.
+    pub account: String,
+    /// File size (files only; collections aggregate lazily).
+    pub bytes: u64,
+    /// Adler-32 checksum (files; enforced on access/transfer, §2.2).
+    pub adler32: String,
+    /// MD5, optionally recorded alongside (§2.2 supports both).
+    pub md5: Option<String>,
+    /// GUID-style experiment identifier (unique when present).
+    pub guid: Option<String>,
+    /// Collections: open for content addition (§2.2). Files: always false.
+    pub open: bool,
+    /// Monotonic collections never shrink (§2.2).
+    pub monotonic: bool,
+    /// Suppressed DIDs are hidden from default listings (§2.2).
+    pub suppressed: bool,
+    pub availability: Availability,
+    /// Generic metadata (paper §2.2 "experiment-internal metadata").
+    pub meta: BTreeMap<String, String>,
+    pub created_at: EpochMs,
+    /// Lifetime expiry for the DID itself (undertaker input).
+    pub expired_at: Option<EpochMs>,
+    /// Archive constituents support (§2.2): Some(archive DID) when this
+    /// file lives inside a registered archive.
+    pub constituent_of: Option<DidKey>,
+}
+
+impl Row for Did {
+    type Key = DidKey;
+    fn key(&self) -> DidKey {
+        self.key.clone()
+    }
+}
+
+/// Parent→child edge in the collection hierarchy (Fig 1).
+#[derive(Debug, Clone)]
+pub struct Attachment {
+    pub parent: DidKey,
+    pub child: DidKey,
+    pub created_at: EpochMs,
+}
+
+impl Row for Attachment {
+    type Key = (DidKey, DidKey);
+    fn key(&self) -> (DidKey, DidKey) {
+        (self.parent.clone(), self.child.clone())
+    }
+}
+
+/// Tombstoned names: "DIDs are identified forever" (§2.2) — once used, a
+/// name may never be reused, even after deletion.
+#[derive(Debug, Clone)]
+pub struct NameTombstone {
+    pub key: DidKey,
+    pub deleted_at: EpochMs,
+}
+
+impl Row for NameTombstone {
+    type Key = DidKey;
+    fn key(&self) -> DidKey {
+        self.key.clone()
+    }
+}
+
+/// Replica state on an RSE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ReplicaState {
+    Available,
+    /// Being created by a queued/active transfer.
+    Copying,
+    /// Declared bad (checksum mismatch / repeated failures, §4.4).
+    Bad,
+    /// Flagged suspicious after download errors; necromancer triages.
+    Suspicious,
+}
+
+impl ReplicaState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplicaState::Available => "AVAILABLE",
+            ReplicaState::Copying => "COPYING",
+            ReplicaState::Bad => "BAD",
+            ReplicaState::Suspicious => "SUSPICIOUS",
+        }
+    }
+}
+
+/// A physical replica (paper §2.4: "file locations are commonly called
+/// replicas").
+#[derive(Debug, Clone)]
+pub struct Replica {
+    pub rse: String,
+    pub did: DidKey,
+    pub bytes: u64,
+    pub state: ReplicaState,
+    /// Physical file name on storage (lfn2pfn output).
+    pub pfn: String,
+    /// Number of replica locks protecting this replica. >0 ⇒ undeletable
+    /// (§2.5 "replication rules ... protect this data from deletion").
+    pub lock_count: u32,
+    /// Deletion eligibility marker: set when the last lock is removed
+    /// (reaper input; §4.3 "timed markers on such expired entries").
+    pub tombstone: Option<EpochMs>,
+    /// Last access (traces drive LRU deletion, §4.3).
+    pub accessed_at: EpochMs,
+    pub created_at: EpochMs,
+    /// Error counter feeding suspicious→bad escalation.
+    pub error_count: u32,
+}
+
+impl Row for Replica {
+    type Key = (String, DidKey);
+    fn key(&self) -> (String, DidKey) {
+        (self.rse.clone(), self.did.clone())
+    }
+}
+
+/// Replication rule state (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleState {
+    Ok,
+    Replicating,
+    Stuck,
+    Suspended,
+}
+
+impl RuleState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleState::Ok => "OK",
+            RuleState::Replicating => "REPLICATING",
+            RuleState::Stuck => "STUCK",
+            RuleState::Suspended => "SUSPENDED",
+        }
+    }
+}
+
+/// A replication rule (paper §2.5): the central policy object.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub id: u64,
+    pub account: String,
+    pub did: DidKey,
+    /// RSE expression (paper §2.5, ref [19]).
+    pub rse_expression: String,
+    pub copies: u32,
+    pub state: RuleState,
+    /// Lock tallies (invariant: ok+replicating+stuck == copies × files).
+    pub locks_ok: u32,
+    pub locks_replicating: u32,
+    pub locks_stuck: u32,
+    /// Absolute expiry (creation + lifetime), None = forever.
+    pub expires_at: Option<EpochMs>,
+    /// Optional placement weight attribute name (§2.5).
+    pub weight: Option<String>,
+    /// Transfer activity tag (Fig 6 accounting + FTS shares).
+    pub activity: String,
+    pub created_at: EpochMs,
+    pub updated_at: EpochMs,
+    /// Rebalancing linkage (§6.2: "links the original replication rule
+    /// with the newly created one").
+    pub child_rule: Option<u64>,
+    /// Subscription that spawned this rule, if any.
+    pub subscription_id: Option<u64>,
+    /// Delete replicas immediately when the rule goes (vs tombstone grace).
+    pub purge_replicas: bool,
+    /// Repair bookkeeping.
+    pub stuck_at: Option<EpochMs>,
+}
+
+impl Row for Rule {
+    type Key = u64;
+    fn key(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Replica lock state mirrors the transfer progress per (rule, file, rse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LockState {
+    Ok,
+    Replicating,
+    Stuck,
+}
+
+/// A replica lock (paper §2.5: "the system internal bookkeeping of these
+/// selection decisions are called replica locks").
+#[derive(Debug, Clone)]
+pub struct ReplicaLock {
+    pub rule_id: u64,
+    pub rse: String,
+    pub did: DidKey,
+    pub state: LockState,
+    pub bytes: u64,
+}
+
+impl Row for ReplicaLock {
+    type Key = (u64, String, DidKey);
+    fn key(&self) -> (u64, String, DidKey) {
+        (self.rule_id, self.rse.clone(), self.did.clone())
+    }
+}
+
+/// Transfer request lifecycle (paper §4.2 workflow steps 1–4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RequestState {
+    Queued,
+    Submitted,
+    Done,
+    Failed,
+    /// Waiting for a retry slot after a failure (repairer delay).
+    Retry,
+}
+
+impl RequestState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestState::Queued => "QUEUED",
+            RequestState::Submitted => "SUBMITTED",
+            RequestState::Done => "DONE",
+            RequestState::Failed => "FAILED",
+            RequestState::Retry => "RETRY",
+        }
+    }
+}
+
+/// A transfer request created by the rule engine (paper §4.2 step 1).
+#[derive(Debug, Clone)]
+pub struct TransferRequest {
+    pub id: u64,
+    pub did: DidKey,
+    pub dst_rse: String,
+    pub rule_id: u64,
+    pub bytes: u64,
+    pub adler32: String,
+    pub activity: String,
+    pub state: RequestState,
+    pub attempts: u32,
+    /// Chosen source RSE (submitter fills this).
+    pub src_rse: Option<String>,
+    /// FTS transfer id once submitted.
+    pub external_id: Option<u64>,
+    /// Which FTS server got it.
+    pub fts_server: Option<usize>,
+    pub created_at: EpochMs,
+    pub updated_at: EpochMs,
+    /// Earliest time a Retry request may be re-queued.
+    pub retry_after: Option<EpochMs>,
+    pub last_error: Option<String>,
+}
+
+impl Row for TransferRequest {
+    type Key = u64;
+    fn key(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Account type (paper §2.3: individual users, groups, organized
+/// activities).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccountType {
+    User,
+    Group,
+    Service,
+}
+
+#[derive(Debug, Clone)]
+pub struct Account {
+    pub name: String,
+    pub account_type: AccountType,
+    pub email: String,
+    pub created_at: EpochMs,
+    /// Suspended accounts cannot authenticate.
+    pub suspended: bool,
+    /// Admin accounts bypass the default permission policy ("privileged
+    /// accounts can circumvent this restriction", §2.3).
+    pub admin: bool,
+}
+
+impl Row for Account {
+    type Key = String;
+    fn key(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Authentication mechanism (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AuthType {
+    UserPass,
+    X509,
+    Gss,
+    Ssh,
+}
+
+impl AuthType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AuthType::UserPass => "userpass",
+            AuthType::X509 => "x509",
+            AuthType::Gss => "gss",
+            AuthType::Ssh => "ssh",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AuthType> {
+        match s {
+            "userpass" => Some(AuthType::UserPass),
+            "x509" => Some(AuthType::X509),
+            "gss" => Some(AuthType::Gss),
+            "ssh" => Some(AuthType::Ssh),
+            _ => None,
+        }
+    }
+}
+
+/// An identity→account mapping (paper Fig 2: many-to-many).
+#[derive(Debug, Clone)]
+pub struct Identity {
+    /// e.g. DN string, username, SSH key fingerprint, Kerberos principal.
+    pub identity: String,
+    pub auth_type: AuthType,
+    pub account: String,
+    /// Secret material for userpass (salted hash) / ssh (public key).
+    pub secret: Option<String>,
+}
+
+impl Row for Identity {
+    type Key = (String, AuthType, String);
+    fn key(&self) -> (String, AuthType, String) {
+        (self.identity.clone(), self.auth_type, self.account.clone())
+    }
+}
+
+/// A short-lived auth token (paper §4.1).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub token: String,
+    pub account: String,
+    pub expires_at: EpochMs,
+    pub issued_at: EpochMs,
+}
+
+impl Row for Token {
+    type Key = String;
+    fn key(&self) -> String {
+        self.token.clone()
+    }
+}
+
+/// Account quota limit on an RSE expression resolution (paper §2.5:
+/// "quotas, which are policy limits which Rucio enforces on accounts").
+#[derive(Debug, Clone)]
+pub struct AccountLimit {
+    pub account: String,
+    pub rse: String,
+    pub bytes: u64,
+}
+
+impl Row for AccountLimit {
+    type Key = (String, String);
+    fn key(&self) -> (String, String) {
+        (self.account.clone(), self.rse.clone())
+    }
+}
+
+/// Rule-derived account usage per RSE (paper §2.5: "accounts are only
+/// charged for the files they actively set replication rules on").
+#[derive(Debug, Clone, Default)]
+pub struct AccountUsage {
+    pub account: String,
+    pub rse: String,
+    pub bytes: u64,
+    pub files: u64,
+}
+
+impl Row for AccountUsage {
+    type Key = (String, String);
+    fn key(&self) -> (String, String) {
+        (self.account.clone(), self.rse.clone())
+    }
+}
+
+/// Outbound hermes message (paper §4.5).
+#[derive(Debug, Clone)]
+pub struct OutboxMessage {
+    pub id: u64,
+    pub event_type: String,
+    pub payload: crate::jsonx::Json,
+    pub created_at: EpochMs,
+}
+
+impl Row for OutboxMessage {
+    type Key = u64;
+    fn key(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Bad-replica triage entry (paper §4.4).
+#[derive(Debug, Clone)]
+pub struct BadReplica {
+    pub rse: String,
+    pub did: DidKey,
+    pub reason: String,
+    pub declared_by: String,
+    pub declared_at: EpochMs,
+    /// Handled by the necromancer yet?
+    pub resolved: bool,
+}
+
+impl Row for BadReplica {
+    type Key = (String, DidKey);
+    fn key(&self) -> (String, DidKey) {
+        (self.rse.clone(), self.did.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn did_key_display() {
+        let k = DidKey::new("data18", "raw.0001");
+        assert_eq!(format!("{k}"), "data18:raw.0001");
+    }
+
+    #[test]
+    fn did_type_properties() {
+        assert!(DidType::Dataset.is_collection());
+        assert!(DidType::Container.is_collection());
+        assert!(!DidType::File.is_collection());
+        assert_eq!(DidType::File.as_str(), "FILE");
+    }
+
+    #[test]
+    fn auth_type_round_trip() {
+        for t in [AuthType::UserPass, AuthType::X509, AuthType::Gss, AuthType::Ssh] {
+            assert_eq!(AuthType::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(AuthType::parse("oidc"), None);
+    }
+
+    #[test]
+    fn state_strings() {
+        assert_eq!(RuleState::Stuck.as_str(), "STUCK");
+        assert_eq!(RequestState::Queued.as_str(), "QUEUED");
+        assert_eq!(ReplicaState::Suspicious.as_str(), "SUSPICIOUS");
+        assert_eq!(Availability::Lost.as_str(), "LOST");
+    }
+}
+
+/// A namespace scope (paper §2.2: "the scope thus partitions the global
+/// namespace"; §2.3: each account has an associated scope).
+#[derive(Debug, Clone)]
+pub struct Scope {
+    pub name: String,
+    pub account: String,
+    pub created_at: EpochMs,
+}
+
+impl Row for Scope {
+    type Key = String;
+    fn key(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Access popularity per DID (traces feed this; placement + LRU deletion
+/// read it — paper §4.3, §6.1).
+#[derive(Debug, Clone)]
+pub struct Popularity {
+    pub did: DidKey,
+    pub accesses: u64,
+    pub last_access: EpochMs,
+    /// Accesses in the current sliding window (placement signal).
+    pub window_accesses: u64,
+    pub window_start: EpochMs,
+}
+
+impl Row for Popularity {
+    type Key = DidKey;
+    fn key(&self) -> DidKey {
+        self.did.clone()
+    }
+}

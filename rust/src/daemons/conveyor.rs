@@ -1,0 +1,499 @@
+//! The conveyor — transfer orchestration daemons (paper §4.2):
+//! * [`Submitter`]: ranks sources, picks protocols, batches submissions
+//!   to the transfer tool (FTS);
+//! * [`Poller`]: actively polls FTS for terminal transfers;
+//! * [`Receiver`]: passively consumes FTS completion events from the
+//!   message queue ("most transfers are checked by the transfer-receiver,
+//!   as its passive workflow decreases the load on the transfer tool");
+//! * the *finisher* step — updating the associated rules — is the
+//!   `Catalog::on_transfer_{done,failed}` logic both invoke.
+
+use crate::common::clock::EpochMs;
+use crate::core::types::{ReplicaState, RequestState, TransferRequest};
+use crate::db::assigned_to;
+use crate::ftssim::{TransferJob, TransferState};
+use crate::mq::SubId;
+
+use super::{Ctx, Daemon};
+
+/// Ranks sources and submits queued transfer requests to FTS in bunches.
+pub struct Submitter {
+    pub ctx: Ctx,
+    pub instance: String,
+    /// Submission batch size ("submits transfers in bunches").
+    pub bulk: usize,
+}
+
+impl Submitter {
+    pub fn new(ctx: Ctx, instance: &str) -> Self {
+        let bulk = ctx.catalog.cfg.get_i64("conveyor", "bulk", 200) as usize;
+        Submitter { ctx, instance: instance.to_string(), bulk }
+    }
+
+    /// Pick the FTS server for a request ("if there are multiple FTS
+    /// servers available, Rucio is able to orchestrate transfers among
+    /// them", §1.3) — stable hash over the destination.
+    fn fts_for(&self, req: &TransferRequest) -> usize {
+        if self.ctx.fts.len() <= 1 {
+            return 0;
+        }
+        (crate::db::shard_hash(req.dst_rse.as_bytes()) % self.ctx.fts.len() as u64) as usize
+    }
+}
+
+impl Daemon for Submitter {
+    fn name(&self) -> &'static str {
+        "conveyor-submitter"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        5_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        let cat = &self.ctx.catalog;
+        let (worker, n_workers) = self.ctx.heartbeats.beat("submitter", &self.instance, now);
+
+        // Promote due retries back to the queue (index-driven: O(retries),
+        // not O(all requests) — see EXPERIMENTS.md §Perf).
+        for id in cat.requests_by_state.get(&RequestState::Retry) {
+            let due = cat
+                .requests
+                .get(&id)
+                .map(|r| r.retry_after.map(|t| t <= now).unwrap_or(true))
+                .unwrap_or(false);
+            if due {
+                cat.requests.update(&id, now, |r| {
+                    r.state = RequestState::Queued;
+                    r.retry_after = None;
+                });
+            }
+        }
+
+        // Our shard of the queue.
+        let queued: Vec<TransferRequest> = cat
+            .requests_by_state
+            .get_limit(&RequestState::Queued, self.bulk * n_workers)
+            .into_iter()
+            .filter(|id| assigned_to(*id, worker, n_workers))
+            .take(self.bulk)
+            .filter_map(|id| cat.requests.get(&id))
+            .collect();
+
+        let mut jobs_per_fts: Vec<Vec<(u64, TransferJob)>> =
+            vec![Vec::new(); self.ctx.fts.len().max(1)];
+        let mut processed = 0;
+
+        for req in queued {
+            processed += 1;
+            // Source ranking by distance (§4.2 step 2).
+            let sources = cat.ranked_sources(&req.did, &req.dst_rse);
+            let Some((src, _dist)) = sources.first() else {
+                // No available source — count a failure attempt so it
+                // retries (it may appear later) and eventually sticks.
+                let _ = cat.on_transfer_failed(req.id, "no source replica available");
+                continue;
+            };
+            // Tape sources must be staged first (§1.3: "clients will have
+            // to wait for the tape robot").
+            if let Ok(src_rse) = cat.get_rse(&src.rse) {
+                if src_rse.is_tape {
+                    if let Some(sys) = self.ctx.fleet.get(&src.rse) {
+                        match sys.stat(&src.pfn) {
+                            Ok(f) if !f.staged => {
+                                let _ = sys.stage(&src.pfn, now);
+                                continue; // stays Queued; submit once staged
+                            }
+                            Ok(_) => {}
+                            Err(_) => {
+                                // transient stat error while waiting for the
+                                // robot: stay Queued, re-check next tick
+                                continue;
+                            }
+                        }
+                    }
+                }
+            }
+            // Protocol matching (§4.2: "selects the matching protocols of
+            // source and destination storage based on protocol priorities").
+            let (src_site, dst_site) = {
+                let s = cat.get_rse(&src.rse).map(|r| r.site().to_string());
+                let d = cat.get_rse(&req.dst_rse).map(|r| r.site().to_string());
+                match (s, d) {
+                    (Ok(a), Ok(b)) => (a, b),
+                    _ => {
+                        let _ = cat.on_transfer_failed(req.id, "rse vanished");
+                        continue;
+                    }
+                }
+            };
+            let dst_pfn = cat
+                .get_replica(&req.dst_rse, &req.did)
+                .map(|r| r.pfn)
+                .unwrap_or_else(|_| format!("/lost/{}", req.did));
+            let fts_idx = self.fts_for(&req);
+            jobs_per_fts[fts_idx].push((
+                req.id,
+                TransferJob {
+                    request_id: req.id,
+                    src_rse: src.rse.clone(),
+                    dst_rse: req.dst_rse.clone(),
+                    src_site,
+                    dst_site,
+                    src_pfn: src.pfn.clone(),
+                    dst_pfn,
+                    bytes: req.bytes,
+                    adler32: req.adler32.clone(),
+                    activity: req.activity.clone(),
+                },
+            ));
+            cat.requests.update(&req.id, now, |r| {
+                r.state = RequestState::Submitted;
+                r.src_rse = Some(src.rse.clone());
+                r.fts_server = Some(fts_idx);
+                r.updated_at = now;
+            });
+        }
+
+        // Bulk submission per FTS server.
+        for (fts_idx, batch) in jobs_per_fts.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let (req_ids, jobs): (Vec<u64>, Vec<TransferJob>) = batch.into_iter().unzip();
+            let external = self.ctx.fts[fts_idx].submit(jobs, now);
+            for (req_id, ext) in req_ids.iter().zip(external.iter()) {
+                cat.requests.update(req_id, now, |r| r.external_id = Some(*ext));
+            }
+            cat.metrics.incr("conveyor.submitted", req_ids.len() as u64);
+        }
+        processed
+    }
+}
+
+/// Actively polls FTS for terminal transfers (§4.2 step 3).
+pub struct Poller {
+    pub ctx: Ctx,
+    pub instance: String,
+}
+
+impl Poller {
+    pub fn new(ctx: Ctx, instance: &str) -> Self {
+        Poller { ctx, instance: instance.to_string() }
+    }
+}
+
+impl Daemon for Poller {
+    fn name(&self) -> &'static str {
+        "conveyor-poller"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        10_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        let cat = &self.ctx.catalog;
+        let (worker, n_workers) = self.ctx.heartbeats.beat("poller", &self.instance, now);
+        let submitted: Vec<TransferRequest> = cat
+            .requests_by_state
+            .get(&RequestState::Submitted)
+            .into_iter()
+            .filter(|id| assigned_to(*id, worker, n_workers))
+            .filter_map(|id| cat.requests.get(&id))
+            .collect();
+        let mut processed = 0;
+        // Group by FTS server for bulk polling.
+        for (fts_idx, fts) in self.ctx.fts.iter().enumerate() {
+            let ids: Vec<u64> = submitted
+                .iter()
+                .filter(|r| r.fts_server == Some(fts_idx))
+                .filter_map(|r| r.external_id)
+                .collect();
+            if ids.is_empty() {
+                continue;
+            }
+            for t in fts.poll(&ids) {
+                match t.state {
+                    TransferState::Done => {
+                        let _ = cat.on_transfer_done(t.job.request_id);
+                        processed += 1;
+                    }
+                    TransferState::Failed => {
+                        let reason = t.reason.unwrap_or_else(|| "unknown".into());
+                        let _ = cat.on_transfer_failed(t.job.request_id, &reason);
+                        processed += 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        cat.metrics.gauge_set(
+            "conveyor.submitted_queue",
+            cat.requests_by_state.count(&RequestState::Submitted) as u64,
+        );
+        processed
+    }
+}
+
+/// Passively consumes FTS completion events from the broker (§4.2:
+/// preferred over polling).
+pub struct Receiver {
+    pub ctx: Ctx,
+    sub: SubId,
+}
+
+impl Receiver {
+    pub fn new(ctx: Ctx) -> Self {
+        let sub = ctx.broker.subscribe("transfer.fts", None);
+        Receiver { ctx, sub }
+    }
+}
+
+impl Daemon for Receiver {
+    fn name(&self) -> &'static str {
+        "conveyor-receiver"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        2_000
+    }
+
+    fn tick(&mut self, _now: EpochMs) -> usize {
+        let cat = &self.ctx.catalog;
+        let mut processed = 0;
+        loop {
+            let msgs = self.ctx.broker.poll("transfer.fts", self.sub, 500);
+            if msgs.is_empty() {
+                break;
+            }
+            for m in &msgs {
+                let Some(request_id) = m.payload.opt_u64("request_id") else { continue };
+                // Dedup vs poller: only act on still-Submitted requests.
+                let Some(req) = cat.requests.get(&request_id) else { continue };
+                if req.state != RequestState::Submitted {
+                    continue;
+                }
+                match m.event_type.as_str() {
+                    "transfer-done" => {
+                        let _ = cat.on_transfer_done(request_id);
+                        processed += 1;
+                    }
+                    "transfer-failed" => {
+                        let reason = m.payload.opt_str("reason").unwrap_or("unknown");
+                        let _ = cat.on_transfer_failed(request_id, reason);
+                        processed += 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        processed
+    }
+}
+
+/// Advance replicas whose destination write happened through FTS into the
+/// catalog-visible Available state is handled by on_transfer_done; this
+/// helper re-drives any Copying replica whose file actually exists on
+/// storage (crash recovery sweep, run rarely).
+pub fn reconcile_copying(ctx: &Ctx, limit: usize) -> usize {
+    let cat = &ctx.catalog;
+    let copying = cat.replicas.scan_limit(limit, |r| r.state == ReplicaState::Copying);
+    let mut fixed = 0;
+    for rep in copying {
+        if let Some(sys) = ctx.fleet.get(&rep.rse) {
+            if sys.stat(&rep.pfn).is_ok() && cat.replica_available(&rep.rse, &rep.did).is_ok() {
+                fixed += 1;
+            }
+        }
+    }
+    fixed
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::core::rse::Rse;
+    use crate::core::rules_api::RuleSpec;
+    use crate::core::types::{DidKey, RuleState};
+    use crate::core::Catalog;
+    use crate::ftssim::FtsServer;
+    use crate::mq::Broker;
+    use crate::netsim::{Link, Network};
+    use crate::storagesim::{Fleet, StorageKind, StorageSystem};
+    use std::sync::Arc;
+
+    /// Full conveyor test rig: catalog + 3 RSEs + network + FTS + broker.
+    pub(crate) fn rig() -> (Ctx, Arc<Catalog>) {
+        let catalog = Arc::new(Catalog::new_for_tests());
+        let now = catalog.now();
+        catalog.add_scope("data18", "root").unwrap();
+        let fleet = Arc::new(Fleet::new());
+        let net = Arc::new(Network::new());
+        for name in ["SRC-DISK", "DST-A", "DST-B"] {
+            catalog
+                .add_rse(Rse::new(name, now).with_attr("site", name).with_attr("type", "disk"))
+                .unwrap();
+            fleet.add(StorageSystem::new(name, StorageKind::Disk, u64::MAX));
+        }
+        for a in ["SRC-DISK", "DST-A", "DST-B"] {
+            for b in ["SRC-DISK", "DST-A", "DST-B"] {
+                if a != b {
+                    net.set_link(a, b, Link::new(100_000_000, 5, 1.0));
+                }
+            }
+        }
+        let broker = Broker::new();
+        let fts = vec![Arc::new(FtsServer::new(
+            "fts1",
+            net.clone(),
+            fleet.clone(),
+            Some(broker.clone()),
+        ))];
+        let ctx = Ctx::new(catalog.clone(), fleet, net, fts, broker);
+        (ctx, catalog)
+    }
+
+    /// Register a file + physical source replica.
+    pub(crate) fn seed_file(ctx: &Ctx, name: &str, bytes: u64) -> DidKey {
+        let cat = &ctx.catalog;
+        let adler = crate::storagesim::synthetic_adler32_for(name, bytes);
+        cat.add_file("data18", name, "root", bytes, &adler, None).unwrap();
+        let key = DidKey::new("data18", name);
+        let rep = cat
+            .add_replica("SRC-DISK", &key, ReplicaState::Available, None)
+            .unwrap();
+        ctx.fleet
+            .get("SRC-DISK")
+            .unwrap()
+            .put(&rep.pfn, bytes, cat.now())
+            .unwrap();
+        key
+    }
+
+    fn advance(ctx: &Ctx, ms: i64) -> EpochMs {
+        // start anything queued at the current instant...
+        for fts in &ctx.fts {
+            fts.advance(ctx.catalog.now());
+        }
+        if let crate::common::clock::Clock::Sim(s) = &ctx.catalog.clock {
+            s.advance(ms);
+        }
+        // ...then integrate progress over the window
+        let now = ctx.catalog.now();
+        for fts in &ctx.fts {
+            fts.advance(now);
+        }
+        now
+    }
+
+    #[test]
+    fn end_to_end_rule_to_replica_via_poller() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f1", 1_000_000);
+        let rid = cat.add_rule(RuleSpec::new("root", f.clone(), "DST-A", 1)).unwrap();
+        let mut submitter = Submitter::new(ctx.clone(), "sub-1");
+        let mut poller = Poller::new(ctx.clone(), "poll-1");
+
+        let now = ctx.catalog.now();
+        assert_eq!(submitter.tick(now), 1);
+        let req = cat.requests.scan(|_| true)[0].clone();
+        assert_eq!(req.state, RequestState::Submitted);
+        assert_eq!(req.src_rse.as_deref(), Some("SRC-DISK"));
+        assert!(req.external_id.is_some());
+
+        // let FTS move the bytes (100 MB/s, 1 MB file)
+        let now = advance(&ctx, 5_000);
+        poller.tick(now);
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok);
+        // physical file landed
+        let dst_pfn = cat.get_replica("DST-A", &f).unwrap().pfn;
+        assert!(ctx.fleet.get("DST-A").unwrap().stat(&dst_pfn).is_ok());
+    }
+
+    #[test]
+    fn receiver_consumes_broker_events() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f2", 1_000_000);
+        let rid = cat.add_rule(RuleSpec::new("root", f, "DST-B", 1)).unwrap();
+        let mut submitter = Submitter::new(ctx.clone(), "sub-1");
+        let mut receiver = Receiver::new(ctx.clone());
+        submitter.tick(ctx.catalog.now());
+        let now = advance(&ctx, 5_000);
+        let n = receiver.tick(now);
+        assert_eq!(n, 1);
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok);
+    }
+
+    #[test]
+    fn no_source_fails_towards_stuck() {
+        let (ctx, cat) = rig();
+        // file with no replica anywhere
+        cat.add_file("data18", "ghost", "root", 10, "x", None).unwrap();
+        let f = DidKey::new("data18", "ghost");
+        let rid = cat.add_rule(RuleSpec::new("root", f, "DST-A", 1)).unwrap();
+        let mut submitter = Submitter::new(ctx.clone(), "sub-1");
+        for i in 0..5 {
+            let now = ctx.catalog.now() + i;
+            // clear retry delay quickly
+            for req in cat.requests.scan(|_| true) {
+                cat.requests.update(&req.id, now, |r| {
+                    if r.state == RequestState::Retry {
+                        r.retry_after = Some(now);
+                    }
+                });
+            }
+            submitter.tick(now);
+        }
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Stuck);
+    }
+
+    #[test]
+    fn tape_source_staged_before_submission() {
+        let (ctx, cat) = rig();
+        let now = cat.now();
+        cat.add_rse(Rse::new("SRC-TAPE", now).with_attr("site", "SRC-TAPE").with_tape())
+            .unwrap();
+        ctx.fleet
+            .add(StorageSystem::new("SRC-TAPE", StorageKind::Tape, u64::MAX));
+        let adler = crate::storagesim::synthetic_adler32_for("cold", 1000);
+        cat.add_file("data18", "cold", "root", 1000, &adler, None).unwrap();
+        let f = DidKey::new("data18", "cold");
+        let rep = cat.add_replica("SRC-TAPE", &f, ReplicaState::Available, None).unwrap();
+        ctx.fleet.get("SRC-TAPE").unwrap().put(&rep.pfn, 1000, now).unwrap();
+
+        cat.add_rule(RuleSpec::new("root", f.clone(), "DST-A", 1)).unwrap();
+        let mut submitter = Submitter::new(ctx.clone(), "sub-1");
+        submitter.tick(cat.now());
+        // still queued: staging requested, not submitted yet
+        let req = cat.requests.scan(|_| true)[0].clone();
+        assert_eq!(req.state, RequestState::Queued);
+        // let the robot stage (4 min default), tick storages
+        if let crate::common::clock::Clock::Sim(s) = &cat.clock {
+            s.advance(5 * 60 * 1000);
+        }
+        ctx.fleet.tick(cat.now());
+        submitter.tick(cat.now());
+        let req = cat.requests.scan(|_| true)[0].clone();
+        assert_eq!(req.state, RequestState::Submitted, "staged tape submits");
+    }
+
+    #[test]
+    fn sharding_splits_queue_between_instances() {
+        let (ctx, cat) = rig();
+        for i in 0..20 {
+            let f = seed_file(&ctx, &format!("s{i}"), 1000);
+            cat.add_rule(RuleSpec::new("root", f, "DST-A", 1)).unwrap();
+        }
+        let mut sub_a = Submitter::new(ctx.clone(), "a");
+        let mut sub_b = Submitter::new(ctx.clone(), "b");
+        let now = cat.now();
+        // register both heartbeats first so they see each other
+        ctx.heartbeats.beat("submitter", "a", now);
+        ctx.heartbeats.beat("submitter", "b", now);
+        let a = sub_a.tick(now);
+        let b = sub_b.tick(now);
+        assert_eq!(a + b, 20, "all requests handled once: {a}+{b}");
+        assert!(a > 0 && b > 0, "both shards get work: {a}/{b}");
+    }
+}

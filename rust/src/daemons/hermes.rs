@@ -1,0 +1,87 @@
+//! Hermes — the messaging daemon (paper §4.5): drains the outbox table
+//! and delivers events to the STOMP-compatible broker topic
+//! `rucio.events`, plus an email sink for messages addressed to users.
+
+use crate::common::clock::EpochMs;
+use crate::mq::Message;
+
+use super::{Ctx, Daemon};
+
+pub struct Hermes {
+    pub ctx: Ctx,
+    pub bulk: usize,
+    /// "Emails" delivered (necromancer lost-data notifications etc.).
+    pub emails_sent: u64,
+}
+
+impl Hermes {
+    pub fn new(ctx: Ctx) -> Self {
+        let bulk = ctx.catalog.cfg.get_i64("hermes", "bulk", 1000) as usize;
+        Hermes { ctx, bulk, emails_sent: 0 }
+    }
+}
+
+impl Daemon for Hermes {
+    fn name(&self) -> &'static str {
+        "hermes"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        5_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        let cat = &self.ctx.catalog;
+        let batch = cat.outbox.scan_limit(self.bulk, |_| true);
+        let n = batch.len();
+        for msg in batch {
+            // Email events go to the mail sink, everything to the broker.
+            if msg.event_type.starts_with("email-") {
+                self.emails_sent += 1;
+            }
+            self.ctx.broker.publish(
+                "rucio.events",
+                Message::new(&msg.event_type, msg.payload.clone(), now),
+            );
+            cat.outbox.remove(&msg.id, now);
+        }
+        cat.metrics.incr("hermes.delivered", n as u64);
+        cat.metrics.gauge_set("hermes.outbox_depth", cat.outbox.len() as u64);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::daemons::conveyor::tests::rig;
+    use crate::jsonx::Json;
+
+    #[test]
+    fn outbox_drained_to_broker() {
+        let (ctx, cat) = rig();
+        let sub = ctx.broker.subscribe("rucio.events", None);
+        cat.notify("rule-ok", Json::obj().with("rule_id", 1));
+        cat.notify("email-lost-data", Json::obj().with("account", "alice"));
+        let mut hermes = Hermes::new(ctx.clone());
+        let n = hermes.tick(cat.now());
+        assert_eq!(n, 2);
+        assert_eq!(cat.outbox.len(), 0);
+        assert_eq!(hermes.emails_sent, 1);
+        let msgs = ctx.broker.poll("rucio.events", sub, 10);
+        assert_eq!(msgs.len(), 2);
+    }
+
+    #[test]
+    fn event_type_filtering_for_listeners() {
+        let (ctx, cat) = rig();
+        // §4.5: "the event-type can be used by queue listeners to filter"
+        let only_deletions = ctx.broker.subscribe("rucio.events", Some("deletion-done"));
+        cat.notify("rule-ok", Json::obj());
+        cat.notify("deletion-done", Json::obj().with("rse", "X"));
+        Hermes::new(ctx.clone()).tick(cat.now());
+        let msgs = ctx.broker.poll("rucio.events", only_deletions, 10);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].event_type, "deletion-done");
+    }
+}

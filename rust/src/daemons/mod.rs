@@ -1,0 +1,144 @@
+//! The daemons layer (paper §3.4): "continuously running active
+//! components that asynchronously orchestrate the collaborative work of
+//! the entire system".
+//!
+//! Every daemon implements [`Daemon::tick`] — one bounded work cycle — so
+//! the same code runs both ways:
+//! * **production mode**: [`run_threaded`] spawns one thread per daemon
+//!   instance, ticking at its interval;
+//! * **simulation mode**: the discrete-event driver
+//!   ([`crate::sim::driver`]) calls ticks in virtual-time order.
+//!
+//! Work partitioning follows the paper's heartbeat + hash scheme
+//! ([`heartbeat::Heartbeats`], §3.4/§3.6): instances of the same daemon
+//! type register heartbeats and shard rows by `hash(key) mod n_live`,
+//! giving lock-free parallelism and automatic failover.
+
+pub mod auditor;
+pub mod conveyor;
+pub mod heartbeat;
+pub mod hermes;
+pub mod judge;
+pub mod necromancer;
+pub mod reaper;
+pub mod tracer;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::common::clock::EpochMs;
+use crate::core::Catalog;
+use crate::ftssim::FtsServer;
+use crate::mq::Broker;
+use crate::netsim::Network;
+use crate::storagesim::Fleet;
+
+/// Shared handles every daemon gets.
+#[derive(Clone)]
+pub struct Ctx {
+    pub catalog: Arc<Catalog>,
+    pub fleet: Arc<Fleet>,
+    pub net: Arc<Network>,
+    pub fts: Vec<Arc<FtsServer>>,
+    pub broker: Broker,
+    pub heartbeats: Arc<heartbeat::Heartbeats>,
+}
+
+impl Ctx {
+    pub fn new(
+        catalog: Arc<Catalog>,
+        fleet: Arc<Fleet>,
+        net: Arc<Network>,
+        fts: Vec<Arc<FtsServer>>,
+        broker: Broker,
+    ) -> Self {
+        Ctx {
+            catalog,
+            fleet,
+            net,
+            fts,
+            broker,
+            heartbeats: Arc::new(heartbeat::Heartbeats::new()),
+        }
+    }
+}
+
+/// A daemon: one bounded unit of asynchronous work per tick.
+pub trait Daemon: Send {
+    fn name(&self) -> &'static str;
+    /// Run one work cycle; returns the number of items processed.
+    fn tick(&mut self, now: EpochMs) -> usize;
+    /// Preferred interval between ticks (production mode; the sim driver
+    /// uses the same value in virtual time).
+    fn interval_ms(&self) -> i64 {
+        10_000
+    }
+}
+
+/// Run daemons on real threads until `stop` is set (production mode,
+/// paper §5.2: "each daemon can be instantiated multiple times in
+/// parallel").
+pub fn run_threaded(
+    daemons: Vec<Box<dyn Daemon>>,
+    stop: Arc<AtomicBool>,
+) -> Vec<JoinHandle<()>> {
+    daemons
+        .into_iter()
+        .map(|mut d| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let interval = d.interval_ms().max(10) as u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let now = crate::common::clock::Clock::Real.now_ms();
+                    let _ = d.tick(now);
+                    // Sleep in small slices so shutdown is responsive.
+                    let mut remaining = interval;
+                    while remaining > 0 && !stop.load(Ordering::Relaxed) {
+                        let slice = remaining.min(50);
+                        std::thread::sleep(std::time::Duration::from_millis(slice));
+                        remaining -= slice;
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct CountingDaemon {
+        count: Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    impl Daemon for CountingDaemon {
+        fn name(&self) -> &'static str {
+            "counter"
+        }
+        fn tick(&mut self, _now: EpochMs) -> usize {
+            self.count.fetch_add(1, Ordering::Relaxed);
+            1
+        }
+        fn interval_ms(&self) -> i64 {
+            10
+        }
+    }
+
+    #[test]
+    fn threaded_runner_ticks_and_stops() {
+        let count = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles = run_threaded(
+            vec![Box::new(CountingDaemon { count: count.clone() })],
+            stop.clone(),
+        );
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(count.load(Ordering::Relaxed) >= 2);
+    }
+}

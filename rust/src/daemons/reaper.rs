@@ -1,0 +1,274 @@
+//! The reaper — data deletion daemon (paper §4.3).
+//!
+//! Two modes per RSE:
+//! * **greedy** — "removes data as soon as it is marked, which maximizes
+//!   the free space on storage";
+//! * **non-greedy** — "deletes the minimum amount of data required to
+//!   fulfill new rules entering the system, and keeps the existing data
+//!   around for caching purposes": deletion only happens when free space
+//!   falls below a per-RSE watermark, and evicts Least-Recently-Used
+//!   first (access timestamps from traces).
+
+use crate::common::clock::EpochMs;
+use crate::core::types::Replica;
+use crate::db::assigned_to;
+
+use super::{Ctx, Daemon};
+
+/// Deletion policy for one RSE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReaperMode {
+    Greedy,
+    /// Keep cached data until free space < `min_free_bytes`.
+    NonGreedy { min_free_bytes: u64 },
+}
+
+pub struct Reaper {
+    pub ctx: Ctx,
+    pub instance: String,
+    pub bulk: usize,
+}
+
+impl Reaper {
+    pub fn new(ctx: Ctx, instance: &str) -> Self {
+        let bulk = ctx.catalog.cfg.get_i64("reaper", "bulk", 500) as usize;
+        Reaper { ctx, instance: instance.to_string(), bulk }
+    }
+
+    /// Mode for an RSE: `reaper.greedy` config default, overridable per
+    /// RSE via the `greedy` attribute and watermark via `min_free`.
+    fn mode_for(&self, rse: &crate::core::rse::Rse) -> ReaperMode {
+        let default_greedy = self.ctx.catalog.cfg.get_bool("reaper", "greedy", true);
+        let greedy = rse
+            .attr("greedy")
+            .map(|v| v == "true" || v == "1")
+            .unwrap_or(default_greedy);
+        if greedy {
+            ReaperMode::Greedy
+        } else {
+            let min_free = rse
+                .attr("min_free")
+                .and_then(crate::common::units::parse_bytes)
+                .unwrap_or(0);
+            ReaperMode::NonGreedy { min_free_bytes: min_free }
+        }
+    }
+
+    /// Delete one replica from storage + catalog. Returns true on
+    /// success; storage failures leave the replica for a later sweep
+    /// (the paper's deletion error rate).
+    fn delete_one(&self, rep: &Replica, _now: EpochMs) -> bool {
+        let cat = &self.ctx.catalog;
+        if let Some(sys) = self.ctx.fleet.get(&rep.rse) {
+            match sys.delete(&rep.pfn) {
+                Ok(()) => {}
+                Err(crate::common::error::RucioError::SourceNotFound(_)) => {
+                    // already gone from storage: clean the catalog anyway
+                }
+                Err(_) => {
+                    cat.metrics.incr("reaper.errors", 1);
+                    return false;
+                }
+            }
+        }
+        if cat.remove_replica(&rep.rse, &rep.did).is_ok() {
+            cat.metrics.incr("reaper.deleted", 1);
+            cat.metrics.incr("reaper.deleted_bytes", rep.bytes);
+            cat.notify(
+                "deletion-done",
+                crate::jsonx::Json::obj()
+                    .with("rse", rep.rse.as_str())
+                    .with("scope", rep.did.scope.as_str())
+                    .with("name", rep.did.name.as_str())
+                    .with("bytes", rep.bytes),
+            );
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Daemon for Reaper {
+    fn name(&self) -> &'static str {
+        "reaper"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        30_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        let cat = &self.ctx.catalog;
+        let (worker, n_workers) = self.ctx.heartbeats.beat("reaper", &self.instance, now);
+        let mut deleted = 0;
+        for rse in cat.list_rses() {
+            // Shard whole RSEs across reaper instances (paper §3.6 hash
+            // partitioning; per-RSE granularity keeps deletions batched).
+            if !assigned_to(crate::db::shard_hash(rse.name.as_bytes()), worker, n_workers) {
+                continue;
+            }
+            if !rse.availability_delete {
+                continue; // §4.3: archival RSEs with deletion disabled
+            }
+            let eligible = cat.deletable_replicas(&rse.name, now, self.bulk);
+            if eligible.is_empty() {
+                continue;
+            }
+            match self.mode_for(&rse) {
+                ReaperMode::Greedy => {
+                    for rep in eligible {
+                        if self.delete_one(&rep, now) {
+                            deleted += 1;
+                        }
+                    }
+                }
+                ReaperMode::NonGreedy { min_free_bytes } => {
+                    let Some(sys) = self.ctx.fleet.get(&rse.name) else { continue };
+                    let mut free = sys.free();
+                    if free >= min_free_bytes {
+                        continue; // plenty of space: keep caches warm
+                    }
+                    // LRU order (§4.3: "selection of files to remove is
+                    // automatically derived from their popularity ...
+                    // access timestamps").
+                    let mut lru = eligible;
+                    lru.sort_by_key(|r| r.accessed_at);
+                    for rep in lru {
+                        if free >= min_free_bytes {
+                            break;
+                        }
+                        if self.delete_one(&rep, now) {
+                            free += rep.bytes;
+                            deleted += 1;
+                        }
+                    }
+                }
+            }
+        }
+        deleted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::types::{DidKey, ReplicaState};
+    use crate::daemons::conveyor::tests::{rig, seed_file};
+    use crate::storagesim::{FailurePolicy, StorageKind, StorageSystem};
+
+    fn advance(ctx: &Ctx, ms: i64) -> EpochMs {
+        if let crate::common::clock::Clock::Sim(s) = &ctx.catalog.clock {
+            s.advance(ms);
+        }
+        ctx.catalog.now()
+    }
+
+    #[test]
+    fn greedy_deletes_tombstoned_replicas() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f1", 1000); // unprotected → tombstoned at birth
+        let mut reaper = Reaper::new(ctx.clone(), "r1");
+        let now = advance(&ctx, 25 * 3_600_000); // past the birth grace
+        let n = reaper.tick(now);
+        assert_eq!(n, 1);
+        assert!(cat.get_replica("SRC-DISK", &f).is_err());
+        assert_eq!(ctx.fleet.get("SRC-DISK").unwrap().file_count(), 0);
+        // deletion event queued
+        let events: Vec<String> =
+            cat.outbox.scan(|_| true).into_iter().map(|m| m.event_type).collect();
+        assert!(events.contains(&"deletion-done".to_string()));
+    }
+
+    #[test]
+    fn locked_replicas_survive() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f1", 1000);
+        cat.add_rule(crate::core::rules_api::RuleSpec::new("root", f.clone(), "SRC-DISK", 1))
+            .unwrap();
+        let mut reaper = Reaper::new(ctx.clone(), "r1");
+        assert_eq!(reaper.tick(cat.now()), 0);
+        assert!(cat.get_replica("SRC-DISK", &f).is_ok());
+    }
+
+    #[test]
+    fn grace_period_respected_after_rule_removal() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f1", 1000);
+        let rid = cat
+            .add_rule(crate::core::rules_api::RuleSpec::new("root", f.clone(), "SRC-DISK", 1))
+            .unwrap();
+        cat.delete_rule(rid).unwrap();
+        let mut reaper = Reaper::new(ctx.clone(), "r1");
+        // §4.3: 24h undo window
+        assert_eq!(reaper.tick(cat.now()), 0, "still in grace");
+        let now = advance(&ctx, 25 * 3_600_000);
+        assert_eq!(reaper.tick(now), 1);
+    }
+
+    #[test]
+    fn non_greedy_keeps_cache_until_watermark() {
+        let (ctx, cat) = rig();
+        // dedicated small cache RSE
+        let now = cat.now();
+        cat.add_rse(
+            crate::core::rse::Rse::new("CACHE", now)
+                .with_attr("greedy", "false")
+                .with_attr("min_free", "3000"),
+        )
+        .unwrap();
+        ctx.fleet.add(StorageSystem::new("CACHE", StorageKind::Disk, 10_000));
+        // 3 unprotected files of 2500 → used 7500, free 2500 < 3000
+        for i in 0..3 {
+            let name = format!("c{i}");
+            let adler = crate::storagesim::synthetic_adler32_for(&name, 2500);
+            cat.add_file("data18", &name, "root", 2500, &adler, None).unwrap();
+            let key = DidKey::new("data18", &name);
+            let rep = cat.add_replica("CACHE", &key, ReplicaState::Available, None).unwrap();
+            ctx.fleet.get("CACHE").unwrap().put(&rep.pfn, 2500, now).unwrap();
+            // stagger access times for LRU: c0 oldest
+            if let crate::common::clock::Clock::Sim(s) = &cat.clock {
+                s.advance(1000);
+            }
+            cat.touch_replica("CACHE", &key);
+        }
+        let mut reaper = Reaper::new(ctx.clone(), "r1");
+        let now = advance(&ctx, 25 * 3_600_000); // past the birth grace
+        let n = reaper.tick(now);
+        // needs to free until >= 3000: delete exactly one (oldest)
+        assert_eq!(n, 1);
+        assert!(cat.get_replica("CACHE", &DidKey::new("data18", "c0")).is_err(), "LRU first");
+        assert!(cat.get_replica("CACHE", &DidKey::new("data18", "c1")).is_ok());
+    }
+
+    #[test]
+    fn deletion_disabled_rse_protected() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f1", 1000);
+        cat.set_rse_availability("SRC-DISK", true, true, false).unwrap();
+        let mut reaper = Reaper::new(ctx.clone(), "r1");
+        assert_eq!(reaper.tick(cat.now()), 0);
+        assert!(cat.get_replica("SRC-DISK", &f).is_ok());
+    }
+
+    #[test]
+    fn storage_delete_failure_retries_later() {
+        let (ctx, cat) = rig();
+        let now = cat.now();
+        cat.add_rse(crate::core::rse::Rse::new("FLAKY", now)).unwrap();
+        ctx.fleet.add(
+            StorageSystem::new("FLAKY", StorageKind::Disk, u64::MAX)
+                .with_policy(FailurePolicy { delete_fail: 1.0, ..Default::default() }),
+        );
+        let adler = crate::storagesim::synthetic_adler32_for("f", 10);
+        cat.add_file("data18", "f", "root", 10, &adler, None).unwrap();
+        let key = DidKey::new("data18", "f");
+        let rep = cat.add_replica("FLAKY", &key, ReplicaState::Available, None).unwrap();
+        ctx.fleet.get("FLAKY").unwrap().put(&rep.pfn, 10, now).unwrap();
+        let mut reaper = Reaper::new(ctx.clone(), "r1");
+        let now = advance(&ctx, 25 * 3_600_000); // past the birth grace
+        assert_eq!(reaper.tick(now), 0, "delete failed");
+        assert!(cat.get_replica("FLAKY", &key).is_ok(), "replica stays for retry");
+        assert!(cat.metrics.counter("reaper.errors") >= 1);
+    }
+}

@@ -1,0 +1,143 @@
+//! The tracer — access-trace ingestion (paper §4.6): "every time a file
+//! has been used as input for a job ... a trace is created that is then
+//! sent to the central Rucio server"; the server forwards them to the
+//! broker topic `traces`, and this daemon folds them into replica access
+//! timestamps + DID popularity (LRU deletion §4.3, dynamic placement
+//! §6.1).
+
+use crate::common::clock::EpochMs;
+use crate::core::types::DidKey;
+use crate::jsonx::Json;
+use crate::mq::{Message, SubId};
+
+use super::{Ctx, Daemon};
+
+/// Emit a trace to the broker (used by the server's /traces endpoint and
+/// by the download/upload client helpers).
+pub fn emit_trace(
+    broker: &crate::mq::Broker,
+    now: EpochMs,
+    event: &str, // "download" | "upload" | "get" (job input) | "put" (job output)
+    rse: &str,
+    scope: &str,
+    name: &str,
+) {
+    broker.publish(
+        "traces",
+        Message::new(
+            event,
+            Json::obj()
+                .with("rse", rse)
+                .with("scope", scope)
+                .with("name", name),
+            now,
+        ),
+    );
+}
+
+pub struct Tracer {
+    pub ctx: Ctx,
+    sub: SubId,
+}
+
+impl Tracer {
+    pub fn new(ctx: Ctx) -> Self {
+        let sub = ctx.broker.subscribe("traces", None);
+        Tracer { ctx, sub }
+    }
+}
+
+impl Daemon for Tracer {
+    fn name(&self) -> &'static str {
+        "tracer"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        5_000
+    }
+
+    fn tick(&mut self, _now: EpochMs) -> usize {
+        let mut processed = 0;
+        loop {
+            let msgs = self.ctx.broker.poll("traces", self.sub, 1000);
+            if msgs.is_empty() {
+                break;
+            }
+            for m in msgs {
+                let (Some(rse), Some(scope), Some(name)) = (
+                    m.payload.opt_str("rse"),
+                    m.payload.opt_str("scope"),
+                    m.payload.opt_str("name"),
+                ) else {
+                    continue;
+                };
+                self.ctx
+                    .catalog
+                    .touch_replica(rse, &DidKey::new(scope, name));
+                processed += 1;
+            }
+        }
+        self.ctx.catalog.metrics.incr("traces.processed", processed as u64);
+        processed
+    }
+}
+
+/// Distance re-evaluation sweep (paper §2.4): folds the network's observed
+/// throughput EWMA into the RSE distance table. Cheap enough to live in
+/// the tracer family.
+pub struct DistanceUpdater {
+    pub ctx: Ctx,
+}
+
+impl Daemon for DistanceUpdater {
+    fn name(&self) -> &'static str {
+        "distance-updater"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        300_000
+    }
+
+    fn tick(&mut self, _now: EpochMs) -> usize {
+        let samples = self.ctx.net.observed_pairs();
+        self.ctx.catalog.update_distances_from_throughput(&samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::types::ReplicaState;
+    use crate::daemons::conveyor::tests::{rig, seed_file};
+
+    #[test]
+    fn traces_update_popularity() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f1", 100);
+        let mut tracer = Tracer::new(ctx.clone());
+        emit_trace(&ctx.broker, cat.now(), "download", "SRC-DISK", "data18", "f1");
+        emit_trace(&ctx.broker, cat.now(), "get", "SRC-DISK", "data18", "f1");
+        assert_eq!(tracer.tick(cat.now()), 2);
+        assert_eq!(cat.popularity.get(&f).unwrap().accesses, 2);
+        let _ = ReplicaState::Available;
+    }
+
+    #[test]
+    fn distance_updater_folds_network_ewma() {
+        let (ctx, cat) = rig();
+        ctx.net.record_throughput("SRC-DISK", "DST-A", 2e9);
+        let mut du = DistanceUpdater { ctx: ctx.clone() };
+        let n = du.tick(cat.now());
+        assert!(n >= 1);
+        assert_eq!(cat.distance("SRC-DISK", "DST-A"), Some(1));
+    }
+
+    #[test]
+    fn malformed_traces_skipped() {
+        let (ctx, cat) = rig();
+        let mut tracer = Tracer::new(ctx.clone());
+        ctx.broker
+            .publish("traces", Message::new("download", Json::obj().with("junk", 1), 0));
+        assert_eq!(tracer.tick(cat.now()), 0);
+    }
+}

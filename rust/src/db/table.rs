@@ -1,0 +1,556 @@
+//! Typed tables with secondary indexes and history logs.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, RwLock};
+
+use crate::common::clock::EpochMs;
+use crate::common::error::{Result, RucioError};
+
+/// A row stored in a [`Table`]. The key must be stable for the lifetime of
+/// the row (mutating a row's key is a delete + insert).
+pub trait Row: Clone + Send + Sync + 'static {
+    type Key: Ord + Clone + Send + Sync + 'static;
+    fn key(&self) -> Self::Key;
+}
+
+/// Mutation kind recorded in history logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Insert,
+    Update,
+    Delete,
+}
+
+/// Maintenance hook a secondary index registers with its table.
+trait IndexMaint<V>: Send + Sync {
+    fn on_insert(&self, row: &V);
+    fn on_remove(&self, row: &V);
+}
+
+struct Inner<V: Row> {
+    rows: BTreeMap<V::Key, V>,
+    history: Option<Vec<(EpochMs, Op, V)>>,
+}
+
+/// A typed, thread-safe, ordered table.
+pub struct Table<V: Row> {
+    name: &'static str,
+    inner: RwLock<Inner<V>>,
+    indexes: RwLock<Vec<Arc<dyn IndexMaint<V>>>>,
+}
+
+impl<V: Row> Table<V> {
+    pub fn new(name: &'static str) -> Self {
+        Table {
+            name,
+            inner: RwLock::new(Inner { rows: BTreeMap::new(), history: None }),
+            indexes: RwLock::new(Vec::new()),
+        }
+    }
+
+    /// Enable the history log (paper §3.6 "storing of deleted rows in
+    /// historical tables").
+    pub fn with_history(self) -> Self {
+        self.inner.write().unwrap().history = Some(Vec::new());
+        self
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Attach a secondary index. Must be called before rows exist (indexes
+    /// do not back-fill); enforced with an error otherwise.
+    pub fn add_index<IK>(&self, index: &Index<V, IK>) -> Result<()>
+    where
+        IK: Ord + Clone + Send + Sync + 'static,
+    {
+        if !self.inner.read().unwrap().rows.is_empty() {
+            return Err(RucioError::DatabaseError(format!(
+                "table {}: add_index on non-empty table",
+                self.name
+            )));
+        }
+        self.indexes.write().unwrap().push(index.maint.clone());
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert a new row; errors on duplicate key.
+    pub fn insert(&self, row: V, now: EpochMs) -> Result<()> {
+        let mut inner = self.inner.write().unwrap();
+        let key = row.key();
+        if inner.rows.contains_key(&key) {
+            return Err(RucioError::Duplicate(format!("table {}: duplicate key", self.name)));
+        }
+        for idx in self.indexes.read().unwrap().iter() {
+            idx.on_insert(&row);
+        }
+        if let Some(h) = &mut inner.history {
+            h.push((now, Op::Insert, row.clone()));
+        }
+        inner.rows.insert(key, row);
+        Ok(())
+    }
+
+    /// Insert or replace.
+    pub fn upsert(&self, row: V, now: EpochMs) {
+        let mut inner = self.inner.write().unwrap();
+        let key = row.key();
+        let indexes = self.indexes.read().unwrap();
+        if let Some(old) = inner.rows.get(&key) {
+            for idx in indexes.iter() {
+                idx.on_remove(old);
+            }
+        }
+        for idx in indexes.iter() {
+            idx.on_insert(&row);
+        }
+        if let Some(h) = &mut inner.history {
+            h.push((now, Op::Update, row.clone()));
+        }
+        inner.rows.insert(key, row);
+    }
+
+    pub fn get(&self, key: &V::Key) -> Option<V> {
+        self.inner.read().unwrap().rows.get(key).cloned()
+    }
+
+    pub fn contains(&self, key: &V::Key) -> bool {
+        self.inner.read().unwrap().rows.contains_key(key)
+    }
+
+    /// In-place mutation through a closure; index entries are refreshed.
+    /// Returns the updated row, or `None` if absent.
+    pub fn update<F: FnOnce(&mut V)>(&self, key: &V::Key, now: EpochMs, f: F) -> Option<V> {
+        let mut inner = self.inner.write().unwrap();
+        let row = inner.rows.get(key)?.clone();
+        let indexes = self.indexes.read().unwrap();
+        for idx in indexes.iter() {
+            idx.on_remove(&row);
+        }
+        let mut new_row = row;
+        f(&mut new_row);
+        debug_assert!(new_row.key() == *key, "update must not change the primary key");
+        for idx in indexes.iter() {
+            idx.on_insert(&new_row);
+        }
+        if let Some(h) = &mut inner.history {
+            h.push((now, Op::Update, new_row.clone()));
+        }
+        inner.rows.insert(key.clone(), new_row.clone());
+        Some(new_row)
+    }
+
+    pub fn remove(&self, key: &V::Key, now: EpochMs) -> Option<V> {
+        let mut inner = self.inner.write().unwrap();
+        let row = inner.rows.remove(key)?;
+        for idx in self.indexes.read().unwrap().iter() {
+            idx.on_remove(&row);
+        }
+        if let Some(h) = &mut inner.history {
+            h.push((now, Op::Delete, row.clone()));
+        }
+        Some(row)
+    }
+
+    /// Snapshot scan with a filter (clones matching rows).
+    pub fn scan<F: FnMut(&V) -> bool>(&self, mut pred: F) -> Vec<V> {
+        self.inner
+            .read()
+            .unwrap()
+            .rows
+            .values()
+            .filter(|v| pred(v))
+            .cloned()
+            .collect()
+    }
+
+    /// Scan at most `limit` matching rows (the daemon "read a batch" path —
+    /// keeps reaper/conveyor scans O(batch) when combined with indexes).
+    pub fn scan_limit<F: FnMut(&V) -> bool>(&self, limit: usize, mut pred: F) -> Vec<V> {
+        let inner = self.inner.read().unwrap();
+        let mut out = Vec::new();
+        for v in inner.rows.values() {
+            if pred(v) {
+                out.push(v.clone());
+                if out.len() >= limit {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Fold over all rows without cloning.
+    pub fn fold<A, F: FnMut(A, &V) -> A>(&self, init: A, mut f: F) -> A {
+        let inner = self.inner.read().unwrap();
+        let mut acc = init;
+        for v in inner.rows.values() {
+            acc = f(acc, v);
+        }
+        acc
+    }
+
+    /// Visit every row (no clone); used by reports.
+    pub fn for_each<F: FnMut(&V)>(&self, mut f: F) {
+        let inner = self.inner.read().unwrap();
+        for v in inner.rows.values() {
+            f(v);
+        }
+    }
+
+    /// All keys (cheap-ish snapshot for iteration patterns).
+    pub fn keys(&self) -> Vec<V::Key> {
+        self.inner.read().unwrap().rows.keys().cloned().collect()
+    }
+
+    /// History snapshot (empty if history is disabled).
+    pub fn history(&self) -> Vec<(EpochMs, Op, V)> {
+        self.inner.read().unwrap().history.clone().unwrap_or_default()
+    }
+}
+
+struct IndexInner<V: Row, IK: Ord> {
+    map: BTreeMap<IK, BTreeSet<V::Key>>,
+}
+
+struct IndexMaintImpl<V: Row, IK: Ord> {
+    extract: Box<dyn Fn(&V) -> Option<IK> + Send + Sync>,
+    inner: RwLock<IndexInner<V, IK>>,
+}
+
+impl<V: Row, IK: Ord + Clone + Send + Sync + 'static> IndexMaint<V> for IndexMaintImpl<V, IK> {
+    fn on_insert(&self, row: &V) {
+        if let Some(ik) = (self.extract)(row) {
+            self.inner
+                .write()
+                .unwrap()
+                .map
+                .entry(ik)
+                .or_default()
+                .insert(row.key());
+        }
+    }
+
+    fn on_remove(&self, row: &V) {
+        if let Some(ik) = (self.extract)(row) {
+            let mut inner = self.inner.write().unwrap();
+            if let Some(set) = inner.map.get_mut(&ik) {
+                set.remove(&row.key());
+                if set.is_empty() {
+                    inner.map.remove(&ik);
+                }
+            }
+        }
+    }
+}
+
+/// A secondary index over a [`Table`]: maps an extracted key to the set of
+/// primary keys. Rows whose extractor returns `None` are simply not indexed
+/// (partial index — e.g. "only STUCK rules", the hot daemon queues).
+pub struct Index<V: Row, IK: Ord + Clone + Send + Sync + 'static> {
+    maint: Arc<IndexMaintImpl<V, IK>>,
+}
+
+impl<V: Row, IK: Ord + Clone + Send + Sync + 'static> Index<V, IK> {
+    pub fn new<F: Fn(&V) -> Option<IK> + Send + Sync + 'static>(extract: F) -> Self {
+        Index {
+            maint: Arc::new(IndexMaintImpl {
+                extract: Box::new(extract),
+                inner: RwLock::new(IndexInner { map: BTreeMap::new() }),
+            }),
+        }
+    }
+
+    /// Primary keys with exactly this index key.
+    pub fn get(&self, ik: &IK) -> Vec<V::Key> {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .get(ik)
+            .map(|s| s.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Up to `limit` primary keys with this index key.
+    pub fn get_limit(&self, ik: &IK, limit: usize) -> Vec<V::Key> {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .get(ik)
+            .map(|s| s.iter().take(limit).cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Primary keys for index keys in `[lo, hi)` — range scans (e.g.
+    /// "expiration timestamp before now", the reaper/judge work queues).
+    pub fn range(&self, lo: &IK, hi: &IK) -> Vec<V::Key> {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .range(lo.clone()..hi.clone())
+            .flat_map(|(_, s)| s.iter().cloned())
+            .collect()
+    }
+
+    /// Up to `limit` primary keys for index keys in `[lo, hi)`, smallest
+    /// index keys first (FIFO work queues keyed by timestamp).
+    pub fn range_limit(&self, lo: &IK, hi: &IK, limit: usize) -> Vec<V::Key> {
+        let inner = self.maint.inner.read().unwrap();
+        let mut out = Vec::new();
+        for (_, s) in inner.map.range(lo.clone()..hi.clone()) {
+            for k in s {
+                out.push(k.clone());
+                if out.len() >= limit {
+                    return out;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn count(&self, ik: &IK) -> usize {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .get(ik)
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// Number of distinct index keys.
+    pub fn cardinality(&self) -> usize {
+        self.maint.inner.read().unwrap().map.len()
+    }
+
+    /// Total indexed rows.
+    pub fn len(&self) -> usize {
+        self.maint.inner.read().unwrap().map.values().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Distinct index keys (snapshot).
+    pub fn index_keys(&self) -> Vec<IK> {
+        self.maint.inner.read().unwrap().map.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::forall;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Item {
+        id: u64,
+        state: &'static str,
+        rse: String,
+    }
+
+    impl Row for Item {
+        type Key = u64;
+        fn key(&self) -> u64 {
+            self.id
+        }
+    }
+
+    fn item(id: u64, state: &'static str, rse: &str) -> Item {
+        Item { id, state, rse: rse.to_string() }
+    }
+
+    #[test]
+    fn crud_basics() {
+        let t: Table<Item> = Table::new("items");
+        t.insert(item(1, "new", "A"), 0).unwrap();
+        t.insert(item(2, "new", "B"), 0).unwrap();
+        assert_eq!(t.len(), 2);
+        assert!(t.insert(item(1, "dup", "A"), 0).is_err());
+        assert_eq!(t.get(&1).unwrap().state, "new");
+        t.update(&1, 1, |r| r.state = "done");
+        assert_eq!(t.get(&1).unwrap().state, "done");
+        assert_eq!(t.remove(&2, 2).unwrap().rse, "B");
+        assert_eq!(t.len(), 1);
+        assert!(t.remove(&2, 3).is_none());
+    }
+
+    #[test]
+    fn index_tracks_mutations() {
+        let t: Table<Item> = Table::new("items");
+        let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+        t.add_index(&by_state).unwrap();
+
+        t.insert(item(1, "new", "A"), 0).unwrap();
+        t.insert(item(2, "new", "B"), 0).unwrap();
+        t.insert(item(3, "done", "A"), 0).unwrap();
+        assert_eq!(by_state.get(&"new"), vec![1, 2]);
+        assert_eq!(by_state.count(&"done"), 1);
+
+        t.update(&1, 1, |r| r.state = "done");
+        assert_eq!(by_state.get(&"new"), vec![2]);
+        assert_eq!(by_state.get(&"done"), vec![1, 3]);
+
+        t.remove(&3, 2);
+        assert_eq!(by_state.get(&"done"), vec![1]);
+    }
+
+    #[test]
+    fn partial_index_skips_none() {
+        let t: Table<Item> = Table::new("items");
+        let stuck: Index<Item, u64> =
+            Index::new(|r: &Item| if r.state == "stuck" { Some(r.id) } else { None });
+        t.add_index(&stuck).unwrap();
+        t.insert(item(1, "new", "A"), 0).unwrap();
+        t.insert(item(2, "stuck", "A"), 0).unwrap();
+        assert_eq!(stuck.len(), 1);
+        t.update(&1, 1, |r| r.state = "stuck");
+        assert_eq!(stuck.len(), 2);
+        t.update(&2, 2, |r| r.state = "done");
+        assert_eq!(stuck.len(), 1);
+    }
+
+    #[test]
+    fn range_queries_work() {
+        let t: Table<Item> = Table::new("items");
+        let by_id_band: Index<Item, u64> = Index::new(|r: &Item| Some(r.id * 10));
+        t.add_index(&by_id_band).unwrap();
+        for i in 1..=10 {
+            t.insert(item(i, "new", "A"), 0).unwrap();
+        }
+        let keys = by_id_band.range(&20, &51); // ids 2..=5
+        assert_eq!(keys, vec![2, 3, 4, 5]);
+        let limited = by_id_band.range_limit(&0, &1000, 3);
+        assert_eq!(limited.len(), 3);
+        assert_eq!(limited, vec![1, 2, 3]); // smallest index keys first
+    }
+
+    #[test]
+    fn add_index_on_nonempty_rejected() {
+        let t: Table<Item> = Table::new("items");
+        t.insert(item(1, "new", "A"), 0).unwrap();
+        let idx: Index<Item, u64> = Index::new(|r: &Item| Some(r.id));
+        assert!(t.add_index(&idx).is_err());
+    }
+
+    #[test]
+    fn history_records_ops() {
+        let t: Table<Item> = Table::new("items").with_history();
+        t.insert(item(1, "new", "A"), 10).unwrap();
+        t.update(&1, 20, |r| r.state = "done");
+        t.remove(&1, 30);
+        let h = t.history();
+        assert_eq!(h.len(), 3);
+        assert_eq!(h[0].1, Op::Insert);
+        assert_eq!(h[1].1, Op::Update);
+        assert_eq!(h[2].1, Op::Delete);
+        assert_eq!(h[2].0, 30);
+    }
+
+    #[test]
+    fn upsert_replaces_and_reindexes() {
+        let t: Table<Item> = Table::new("items");
+        let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+        t.add_index(&by_state).unwrap();
+        t.upsert(item(1, "new", "A"), 0);
+        t.upsert(item(1, "done", "B"), 1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(by_state.count(&"new"), 0);
+        assert_eq!(by_state.count(&"done"), 1);
+    }
+
+    #[test]
+    fn scan_limit_stops_early() {
+        let t: Table<Item> = Table::new("items");
+        for i in 0..100 {
+            t.insert(item(i, "new", "A"), 0).unwrap();
+        }
+        assert_eq!(t.scan_limit(7, |_| true).len(), 7);
+        assert_eq!(t.scan(|r| r.id < 5).len(), 5);
+    }
+
+    #[test]
+    fn prop_index_consistent_under_random_ops() {
+        forall(60, |g| {
+            let t: Table<Item> = Table::new("items");
+            let states = ["a", "b", "c"];
+            let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+            t.add_index(&by_state).unwrap();
+            let mut live = std::collections::BTreeMap::new();
+            for step in 0..g.usize(10, 200) {
+                let id = g.u64(0, 30);
+                match g.usize(0, 3) {
+                    0 => {
+                        let st = *g.pick(&states);
+                        if t.insert(item(id, st, "X"), step as i64).is_ok() {
+                            live.insert(id, st);
+                        }
+                    }
+                    1 => {
+                        let st = *g.pick(&states);
+                        if t.update(&id, step as i64, |r| r.state = st).is_some() {
+                            live.insert(id, st);
+                        }
+                    }
+                    _ => {
+                        t.remove(&id, step as i64);
+                        live.remove(&id);
+                    }
+                }
+            }
+            // Model equivalence: index contents == reference map.
+            for st in states {
+                let mut expect: Vec<u64> = live
+                    .iter()
+                    .filter(|(_, v)| **v == st)
+                    .map(|(k, _)| *k)
+                    .collect();
+                expect.sort();
+                assert_eq!(by_state.get(&st), expect, "state {st}");
+            }
+            assert_eq!(t.len(), live.len());
+        });
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers() {
+        use std::sync::Arc;
+        let t: Arc<Table<Item>> = Arc::new(Table::new("items"));
+        let mut handles = vec![];
+        for w in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let id = w * 1000 + i;
+                    t.insert(item(id, "new", "A"), 0).unwrap();
+                    if i % 3 == 0 {
+                        t.update(&id, 1, |r| r.state = "done");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 2000);
+        let done = t.scan(|r| r.state == "done");
+        assert_eq!(done.len(), 4 * 167);
+    }
+}

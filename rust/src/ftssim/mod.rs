@@ -1,0 +1,506 @@
+//! FTS simulator — the File Transfer Service middleware substitute
+//! (paper §1.3: "FTS is a hard dependency for Rucio instances which
+//! require third party copy ... Rucio decides which files to move, groups
+//! them in transfer requests, submits the transfer requests to FTS,
+//! monitors the progress of the transfers, retries in case of errors").
+//!
+//! Lifecycle per transfer: `Submitted → Active → Done | Failed`.
+//! * A configurable number of transfers are active per directed link;
+//!   the rest wait in per-link FIFO queues (FTS's own scheduling).
+//! * Active transfers progress by integrating the fair-share bandwidth
+//!   from [`crate::netsim::Network`] over virtual time.
+//! * On completion the file materializes on the destination
+//!   [`crate::storagesim::StorageSystem`]; source-read and destination-
+//!   write failures, link quality, and checksum mismatches produce
+//!   `Failed` states with reasons — exactly the signal the conveyor's
+//!   poller/receiver/finisher chain consumes.
+//! * Completion events are published to the [`crate::mq::Broker`] topic
+//!   `transfer.fts` (the paper's "transfer-receiver daemon observes a
+//!   message queue" path).
+//!
+//! Multiple independent [`FtsServer`]s model the paper's redundant global
+//! FTS deployment; the conveyor shards jobs across them.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::common::clock::EpochMs;
+use crate::common::prng::Prng;
+use crate::jsonx::Json;
+use crate::mq::{Broker, Message};
+use crate::netsim::Network;
+use crate::storagesim::Fleet;
+#[cfg(test)]
+use crate::storagesim::synthetic_adler32;
+
+/// Transfer request handed to FTS by the conveyor submitter.
+#[derive(Debug, Clone)]
+pub struct TransferJob {
+    /// Rucio request id this transfer satisfies (round-trips in events).
+    pub request_id: u64,
+    pub src_rse: String,
+    pub dst_rse: String,
+    /// Sites for network lookup (RSE attribute `site`).
+    pub src_site: String,
+    pub dst_site: String,
+    pub src_pfn: String,
+    pub dst_pfn: String,
+    pub bytes: u64,
+    /// Expected checksum (catalog value); verified on arrival.
+    pub adler32: String,
+    /// Activity share (paper Fig 6: "requests submitted to FTS split by
+    /// activity").
+    pub activity: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferState {
+    Submitted,
+    Active,
+    Done,
+    Failed,
+}
+
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    pub id: u64,
+    pub job: TransferJob,
+    pub state: TransferState,
+    pub submitted_at: EpochMs,
+    pub started_at: Option<EpochMs>,
+    pub finished_at: Option<EpochMs>,
+    pub bytes_done: f64,
+    pub reason: Option<String>,
+}
+
+struct Inner {
+    next_id: u64,
+    transfers: BTreeMap<u64, Transfer>,
+    /// Per-link FIFO of submitted transfer ids.
+    queues: BTreeMap<(String, String), VecDeque<u64>>,
+    /// Active ids per link (bounded by `max_active_per_link`).
+    active: BTreeMap<(String, String), Vec<u64>>,
+    last_advance: EpochMs,
+    rng: Prng,
+    // counters for fig6 / monitoring
+    submitted_total: u64,
+    submitted_by_activity: BTreeMap<String, u64>,
+    done_total: u64,
+    failed_total: u64,
+}
+
+/// One FTS server instance.
+pub struct FtsServer {
+    pub name: String,
+    pub max_active_per_link: usize,
+    net: Arc<Network>,
+    fleet: Arc<Fleet>,
+    broker: Option<Broker>,
+    inner: Mutex<Inner>,
+}
+
+impl FtsServer {
+    pub fn new(name: &str, net: Arc<Network>, fleet: Arc<Fleet>, broker: Option<Broker>) -> Self {
+        FtsServer {
+            name: name.to_string(),
+            max_active_per_link: 20,
+            net,
+            fleet,
+            broker,
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                transfers: BTreeMap::new(),
+                queues: BTreeMap::new(),
+                active: BTreeMap::new(),
+                last_advance: 0,
+                rng: Prng::new(0xF75),
+                submitted_total: 0,
+                submitted_by_activity: BTreeMap::new(),
+                done_total: 0,
+                failed_total: 0,
+            }),
+        }
+    }
+
+    pub fn with_max_active(mut self, n: usize) -> Self {
+        self.max_active_per_link = n;
+        self
+    }
+
+    /// Submit a batch of jobs; returns FTS transfer ids (same order).
+    pub fn submit(&self, jobs: Vec<TransferJob>, now: EpochMs) -> Vec<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut ids = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let id = inner.next_id;
+            inner.next_id += 1;
+            let link = (job.src_site.clone(), job.dst_site.clone());
+            inner.submitted_total += 1;
+            *inner
+                .submitted_by_activity
+                .entry(job.activity.clone())
+                .or_insert(0) += 1;
+            inner.transfers.insert(
+                id,
+                Transfer {
+                    id,
+                    job,
+                    state: TransferState::Submitted,
+                    submitted_at: now,
+                    started_at: None,
+                    finished_at: None,
+                    bytes_done: 0.0,
+                    reason: None,
+                },
+            );
+            inner.queues.entry(link).or_default().push_back(id);
+            ids.push(id);
+        }
+        ids
+    }
+
+    /// Poll transfer states (conveyor-poller path). Unknown ids are skipped.
+    pub fn poll(&self, ids: &[u64]) -> Vec<Transfer> {
+        let inner = self.inner.lock().unwrap();
+        ids.iter()
+            .filter_map(|id| inner.transfers.get(id).cloned())
+            .collect()
+    }
+
+    /// Cancel a submitted/active transfer.
+    pub fn cancel(&self, id: u64, now: EpochMs) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(t) = inner.transfers.get(&id) else { return false };
+        if matches!(t.state, TransferState::Done | TransferState::Failed) {
+            return false;
+        }
+        let link = (t.job.src_site.clone(), t.job.dst_site.clone());
+        let was_active = t.state == TransferState::Active;
+        if let Some(q) = inner.queues.get_mut(&link) {
+            q.retain(|x| *x != id);
+        }
+        if let Some(a) = inner.active.get_mut(&link) {
+            a.retain(|x| *x != id);
+        }
+        if was_active {
+            self.net.release(&link.0, &link.1);
+        }
+        let t = inner.transfers.get_mut(&id).unwrap();
+        t.state = TransferState::Failed;
+        t.finished_at = Some(now);
+        t.reason = Some("canceled".into());
+        true
+    }
+
+    /// Advance the transfer engine to `now`: start queued transfers up to
+    /// the per-link cap, integrate progress, complete/fail.
+    pub fn advance(&self, now: EpochMs) {
+        let mut inner = self.inner.lock().unwrap();
+        let dt_ms = (now - inner.last_advance).max(0);
+        inner.last_advance = now;
+
+        // 1. progress active transfers
+        let active_snapshot: Vec<(String, String, u64)> = inner
+            .active
+            .iter()
+            .flat_map(|((s, d), ids)| ids.iter().map(move |id| (s.clone(), d.clone(), *id)))
+            .collect();
+        let mut finished: Vec<(u64, bool, Option<String>)> = Vec::new();
+        for (src, dst, id) in active_snapshot {
+            let share = self.net.share_bps(&src, &dst) as f64;
+            let t = inner.transfers.get_mut(&id).unwrap();
+            t.bytes_done += share * dt_ms as f64 / 1000.0;
+            if t.bytes_done >= t.job.bytes as f64 {
+                // Completion: roll link quality, verify checksum, write dst.
+                let quality = self.net.link(&src, &dst).quality;
+                let ok = {
+                    let roll = inner.rng.f64();
+                    roll < quality
+                };
+                if !ok {
+                    finished.push((id, false, Some("TRANSFER network error".into())));
+                    continue;
+                }
+                let t = inner.transfers.get(&id).unwrap().clone();
+                // checksum verification against the catalog value (§2.2:
+                // checksums are enforced whenever a file is transferred)
+                let src_sys = self.fleet.get(&t.job.src_rse);
+                let src_ok = match &src_sys {
+                    Some(sys) => match sys.stat(&t.job.src_pfn) {
+                        Ok(f) => Some(f.adler32),
+                        Err(e) => {
+                            finished.push((id, false, Some(format!("SOURCE {e}"))));
+                            None
+                        }
+                    },
+                    None => {
+                        finished.push((id, false, Some("SOURCE rse unknown".into())));
+                        None
+                    }
+                };
+                let Some(src_adler) = src_ok else { continue };
+                if src_adler != t.job.adler32 {
+                    finished.push((id, false, Some("CHECKSUM mismatch at source".into())));
+                    continue;
+                }
+                match self.fleet.get(&t.job.dst_rse) {
+                    Some(dst_sys) => match dst_sys.put(&t.job.dst_pfn, t.job.bytes, now) {
+                        Ok(()) => finished.push((id, true, None)),
+                        Err(e) => finished.push((id, false, Some(format!("DESTINATION {e}")))),
+                    },
+                    None => finished.push((id, false, Some("DESTINATION rse unknown".into()))),
+                }
+            }
+        }
+
+        // 2. apply completions
+        for (id, ok, reason) in finished {
+            let (link, job, submitted_at, started_at) = {
+                let t = inner.transfers.get_mut(&id).unwrap();
+                t.state = if ok { TransferState::Done } else { TransferState::Failed };
+                t.finished_at = Some(now);
+                t.reason = reason.clone();
+                (
+                    (t.job.src_site.clone(), t.job.dst_site.clone()),
+                    t.job.clone(),
+                    t.submitted_at,
+                    t.started_at.unwrap_or(now),
+                )
+            };
+            if let Some(a) = inner.active.get_mut(&link) {
+                a.retain(|x| *x != id);
+            }
+            self.net.release(&link.0, &link.1);
+            if ok {
+                inner.done_total += 1;
+                let elapsed = (now - started_at).max(1);
+                self.net
+                    .record_throughput(&link.0, &link.1, job.bytes as f64 * 1000.0 / elapsed as f64);
+            } else {
+                inner.failed_total += 1;
+            }
+            if let Some(broker) = &self.broker {
+                let event = if ok { "transfer-done" } else { "transfer-failed" };
+                let payload = Json::obj()
+                    .with("request_id", job.request_id)
+                    .with("transfer_id", id)
+                    .with("fts", self.name.as_str())
+                    .with("src_rse", job.src_rse.as_str())
+                    .with("dst_rse", job.dst_rse.as_str())
+                    .with("bytes", job.bytes)
+                    .with("activity", job.activity.as_str())
+                    .with("submitted_at", submitted_at)
+                    .with("started_at", started_at)
+                    .with("finished_at", now)
+                    .with("reason", reason.as_deref().unwrap_or(""));
+                broker.publish("transfer.fts", Message::new(event, payload, now));
+            }
+        }
+
+        // 3. start queued transfers where capacity is free
+        let links: Vec<(String, String)> = inner.queues.keys().cloned().collect();
+        for link in links {
+            loop {
+                let active_n = inner.active.get(&link).map(|v| v.len()).unwrap_or(0);
+                if active_n >= self.max_active_per_link {
+                    break;
+                }
+                let Some(id) = inner.queues.get_mut(&link).and_then(|q| q.pop_front()) else {
+                    break;
+                };
+                let t = inner.transfers.get_mut(&id).unwrap();
+                t.state = TransferState::Active;
+                t.started_at = Some(now);
+                inner.active.entry(link.clone()).or_default().push(id);
+                self.net.acquire(&link.0, &link.1);
+            }
+        }
+    }
+
+    /// Remove terminal transfers older than `keep_ms` (bookkeeping GC).
+    pub fn gc(&self, now: EpochMs, keep_ms: i64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.transfers.retain(|_, t| {
+            !(matches!(t.state, TransferState::Done | TransferState::Failed)
+                && t.finished_at.map(|f| now - f > keep_ms).unwrap_or(false))
+        });
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.queues.values().map(|q| q.len()).sum()
+    }
+
+    pub fn active_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.active.values().map(|v| v.len()).sum()
+    }
+
+    /// (submitted, done, failed) totals.
+    pub fn totals(&self) -> (u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.submitted_total, inner.done_total, inner.failed_total)
+    }
+
+    /// Fig 6 source data: cumulative submissions per activity.
+    pub fn submitted_by_activity(&self) -> BTreeMap<String, u64> {
+        self.inner.lock().unwrap().submitted_by_activity.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Link;
+    use crate::storagesim::{StorageKind, StorageSystem};
+
+    fn setup() -> (Arc<Network>, Arc<Fleet>, Broker) {
+        let net = Arc::new(Network::new());
+        net.set_link("SITE-A", "SITE-B", Link::new(1_000_000, 5, 1.0)); // 1 MB/s
+        let fleet = Arc::new(Fleet::new());
+        fleet.add(StorageSystem::new("A-DISK", StorageKind::Disk, u64::MAX));
+        fleet.add(StorageSystem::new("B-DISK", StorageKind::Disk, u64::MAX));
+        (net, fleet, Broker::new())
+    }
+
+    fn job(req: u64, bytes: u64) -> TransferJob {
+        TransferJob {
+            request_id: req,
+            src_rse: "A-DISK".into(),
+            dst_rse: "B-DISK".into(),
+            src_site: "SITE-A".into(),
+            dst_site: "SITE-B".into(),
+            src_pfn: format!("/a/f{req}"),
+            dst_pfn: format!("/b/f{req}"),
+            bytes,
+            adler32: synthetic_adler32(&format!("/a/f{req}"), bytes),
+            activity: "Production".into(),
+        }
+    }
+
+    fn seed_source(fleet: &Fleet, j: &TransferJob) {
+        fleet.get(&j.src_rse).unwrap().put(&j.src_pfn, j.bytes, 0).unwrap();
+    }
+
+    #[test]
+    fn transfer_completes_after_bandwidth_time() {
+        let (net, fleet, broker) = setup();
+        let sub = broker.subscribe("transfer.fts", None);
+        let fts = FtsServer::new("fts1", net, fleet.clone(), Some(broker.clone()));
+        let j = job(1, 2_000_000); // 2 MB over 1 MB/s = 2s
+        seed_source(&fleet, &j);
+        let ids = fts.submit(vec![j], 0);
+        fts.advance(0); // starts it
+        assert_eq!(fts.poll(&ids)[0].state, TransferState::Active);
+        fts.advance(1_000);
+        assert_eq!(fts.poll(&ids)[0].state, TransferState::Active);
+        fts.advance(2_100);
+        let t = &fts.poll(&ids)[0];
+        assert_eq!(t.state, TransferState::Done, "reason={:?}", t.reason);
+        // destination file exists
+        assert!(fleet.get("B-DISK").unwrap().stat("/b/f1").is_ok());
+        // event published
+        let msgs = broker.poll("transfer.fts", sub, 10);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].event_type, "transfer-done");
+        assert_eq!(msgs[0].payload.req_u64("request_id").unwrap(), 1);
+    }
+
+    #[test]
+    fn missing_source_fails_with_reason() {
+        let (net, fleet, broker) = setup();
+        let fts = FtsServer::new("fts1", net, fleet, Some(broker));
+        let j = job(2, 1000); // never seeded on source
+        let ids = fts.submit(vec![j], 0);
+        fts.advance(0);
+        fts.advance(10_000);
+        let t = &fts.poll(&ids)[0];
+        assert_eq!(t.state, TransferState::Failed);
+        assert!(t.reason.as_ref().unwrap().contains("SOURCE"), "{:?}", t.reason);
+    }
+
+    #[test]
+    fn per_link_cap_queues_excess() {
+        let (net, fleet, _b) = setup();
+        let fts = FtsServer::new("fts1", net, fleet.clone(), None).with_max_active(2);
+        let jobs: Vec<TransferJob> = (0..5).map(|i| job(10 + i, 10_000_000)).collect();
+        for j in &jobs {
+            seed_source(&fleet, j);
+        }
+        fts.submit(jobs, 0);
+        fts.advance(0);
+        assert_eq!(fts.active_count(), 2);
+        assert_eq!(fts.queue_depth(), 3);
+    }
+
+    #[test]
+    fn fair_share_slows_concurrent_transfers() {
+        let (net, fleet, _b) = setup();
+        let fts = FtsServer::new("fts1", net, fleet.clone(), None);
+        let j1 = job(21, 1_000_000);
+        let j2 = job(22, 1_000_000);
+        seed_source(&fleet, &j1);
+        seed_source(&fleet, &j2);
+        let ids = fts.submit(vec![j1, j2], 0);
+        fts.advance(0);
+        // two transfers share 1 MB/s → each needs ~2s
+        fts.advance(1_200);
+        let polled = fts.poll(&ids);
+        assert_eq!(polled[0].state, TransferState::Active);
+        assert_eq!(polled[1].state, TransferState::Active);
+        fts.advance(2_300);
+        let polled = fts.poll(&ids);
+        assert_eq!(polled[0].state, TransferState::Done);
+        assert_eq!(polled[1].state, TransferState::Done);
+    }
+
+    #[test]
+    fn poor_quality_link_fails_some() {
+        let (net, fleet, _b) = setup();
+        net.set_link("SITE-A", "SITE-B", Link::new(100_000_000, 5, 0.5));
+        let fts = FtsServer::new("fts1", net, fleet.clone(), None);
+        let jobs: Vec<TransferJob> = (0..100).map(|i| job(100 + i, 1000)).collect();
+        for j in &jobs {
+            seed_source(&fleet, j);
+        }
+        fts.submit(jobs, 0);
+        for t in 1..30 {
+            fts.advance(t * 1000);
+        }
+        let (sub, done, failed) = fts.totals();
+        assert_eq!(sub, 100);
+        assert_eq!(done + failed, 100);
+        assert!((25..75).contains(&(failed as i64)), "failed={failed}");
+    }
+
+    #[test]
+    fn activity_accounting_for_fig6() {
+        let (net, fleet, _b) = setup();
+        let fts = FtsServer::new("fts1", net, fleet.clone(), None);
+        let mut j1 = job(300, 1000);
+        j1.activity = "T0 Export".into();
+        let j2 = job(301, 1000);
+        seed_source(&fleet, &j1);
+        seed_source(&fleet, &j2);
+        fts.submit(vec![j1, j2], 0);
+        let by_act = fts.submitted_by_activity();
+        assert_eq!(by_act["T0 Export"], 1);
+        assert_eq!(by_act["Production"], 1);
+    }
+
+    #[test]
+    fn cancel_submitted_and_gc() {
+        let (net, fleet, _b) = setup();
+        let fts = FtsServer::new("fts1", net.clone(), fleet.clone(), None);
+        let j = job(400, 1_000_000_000);
+        seed_source(&fleet, &j);
+        let ids = fts.submit(vec![j], 0);
+        assert!(fts.cancel(ids[0], 500));
+        assert!(!fts.cancel(ids[0], 600));
+        fts.advance(1000);
+        assert_eq!(fts.poll(&ids)[0].state, TransferState::Failed);
+        fts.gc(100_000, 10_000);
+        assert!(fts.poll(&ids).is_empty());
+        assert_eq!(net.active_on("SITE-A", "SITE-B"), 0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Blocking HTTP client with connection reuse — the `requests.Session`
+//! analog the Rucio client layer builds on.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{read_request, write_response, Request, Response};
+use crate::common::error::{Result, RucioError};
+
+/// A client bound to one base URL (e.g. `http://127.0.0.1:8080`), holding a
+/// persistent connection and default headers (auth token).
+pub struct HttpClient {
+    host: String,
+    port: u16,
+    default_headers: Mutex<Vec<(String, String)>>,
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl HttpClient {
+    /// `base`: `http://host:port` (scheme optional).
+    pub fn new(base: &str) -> Self {
+        let trimmed = base.trim_start_matches("http://").trim_end_matches('/');
+        let (host, port) = match trimmed.rsplit_once(':') {
+            Some((h, p)) => (h.to_string(), p.parse().unwrap_or(80)),
+            None => (trimmed.to_string(), 80),
+        };
+        HttpClient {
+            host,
+            port,
+            default_headers: Mutex::new(Vec::new()),
+            conn: Mutex::new(None),
+        }
+    }
+
+    /// Set (or replace) a default header sent with every request — the
+    /// `X-Rucio-Auth-Token` slot.
+    pub fn set_header(&self, name: &str, value: &str) {
+        let mut hs = self.default_headers.lock().unwrap();
+        hs.retain(|(k, _)| !k.eq_ignore_ascii_case(name));
+        hs.push((name.to_ascii_lowercase(), value.to_string()));
+    }
+
+    pub fn get(&self, path: &str) -> Result<Response> {
+        self.send(Request::new("GET", path))
+    }
+
+    pub fn delete(&self, path: &str) -> Result<Response> {
+        self.send(Request::new("DELETE", path))
+    }
+
+    pub fn post_json(&self, path: &str, body: &crate::jsonx::Json) -> Result<Response> {
+        let mut req = Request::new("POST", path);
+        req.body = body.to_string().into_bytes();
+        req.headers
+            .insert("content-type".into(), "application/json".into());
+        self.send(req)
+    }
+
+    pub fn put_json(&self, path: &str, body: &crate::jsonx::Json) -> Result<Response> {
+        let mut req = Request::new("PUT", path);
+        req.body = body.to_string().into_bytes();
+        req.headers
+            .insert("content-type".into(), "application/json".into());
+        self.send(req)
+    }
+
+    pub fn send(&self, mut req: Request) -> Result<Response> {
+        for (k, v) in self.default_headers.lock().unwrap().iter() {
+            req.headers.entry(k.clone()).or_insert_with(|| v.clone());
+        }
+        // One retry on a stale pooled connection.
+        match self.send_once(&req, true) {
+            Ok(resp) => Ok(resp),
+            Err(_) => self.send_once(&req, false),
+        }
+    }
+
+    fn send_once(&self, req: &Request, reuse: bool) -> Result<Response> {
+        let mut guard = self.conn.lock().unwrap();
+        let stream = match (reuse, guard.take()) {
+            (true, Some(s)) => s,
+            _ => {
+                let s = TcpStream::connect((self.host.as_str(), self.port))
+                    .map_err(|e| RucioError::HttpError(format!("connect: {e}")))?;
+                s.set_read_timeout(Some(Duration::from_secs(60)))?;
+                s.set_nodelay(true)?;
+                s
+            }
+        };
+        let mut writer = stream.try_clone()?;
+        write_client_request(&mut writer, req)?;
+        let mut reader = BufReader::new(stream);
+        let resp = read_response(&mut reader)?;
+        // Return connection to the pool.
+        *guard = Some(reader.into_inner());
+        Ok(resp)
+    }
+}
+
+fn write_client_request<W: std::io::Write>(w: &mut W, req: &Request) -> Result<()> {
+    let mut target = req.path.clone();
+    if !req.query.is_empty() {
+        let qs: Vec<String> = req
+            .query
+            .iter()
+            .map(|(k, v)| format!("{}={}", super::percent_encode(k), super::percent_encode(v)))
+            .collect();
+        target.push('?');
+        target.push_str(&qs.join("&"));
+    }
+    let mut head = format!("{} {} HTTP/1.1\r\n", req.method, target);
+    head.push_str(&format!("host: dummy\r\ncontent-length: {}\r\n", req.body.len()));
+    for (k, v) in &req.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(&req.body)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_response<R: std::io::Read>(reader: &mut BufReader<R>) -> Result<Response> {
+    use std::io::BufRead;
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    if n == 0 {
+        return Err(RucioError::HttpError("connection closed".into()));
+    }
+    let mut parts = line.trim_end().splitn(3, ' ');
+    let _version = parts.next();
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| RucioError::HttpError(format!("bad status line: {line}")))?;
+    let mut resp = Response::new(status);
+    loop {
+        let mut hl = String::new();
+        let n = reader.read_line(&mut hl)?;
+        if n == 0 {
+            return Err(RucioError::HttpError("eof in response headers".into()));
+        }
+        let t = hl.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            resp.headers
+                .insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = resp
+        .header("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        std::io::Read::read_exact(reader, &mut body)?;
+        resp.body = body;
+    }
+    Ok(resp)
+}
+
+// Silence unused warnings for symmetry helpers used only in tests today.
+#[allow(dead_code)]
+fn _helpers_used(req: &mut BufReader<&[u8]>) {
+    let _ = read_request(req);
+    let _ = write_response(&mut Vec::new(), &Response::new(200), false);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_url_parsing() {
+        let c = HttpClient::new("http://127.0.0.1:8080/");
+        assert_eq!(c.host, "127.0.0.1");
+        assert_eq!(c.port, 8080);
+        let c = HttpClient::new("localhost:99");
+        assert_eq!(c.host, "localhost");
+        assert_eq!(c.port, 99);
+    }
+
+    #[test]
+    fn default_headers_attached() {
+        let c = HttpClient::new("http://x:1");
+        c.set_header("X-Rucio-Auth-Token", "abc");
+        c.set_header("x-rucio-auth-token", "def"); // replaces
+        let hs = c.default_headers.lock().unwrap();
+        assert_eq!(hs.len(), 1);
+        assert_eq!(hs[0].1, "def");
+    }
+
+    #[test]
+    fn query_string_encoding() {
+        let mut req = Request::new("GET", "/list");
+        req.query.insert("name".into(), "a b".into());
+        let mut out = Vec::new();
+        write_client_request(&mut out, &req).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("GET /list?name=a%20b HTTP/1.1\r\n"), "{text}");
+    }
+}

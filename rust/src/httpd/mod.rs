@@ -1,0 +1,375 @@
+//! HTTP/1.1 server + client over `std::net` — the Apache/mod_wsgi +
+//! `requests` substitute (paper §3.3: "Incoming REST calls are received by
+//! a web server ... and relayed to a WSGI container").
+//!
+//! Scope: exactly what the Rucio REST surface needs — request-line +
+//! headers + `Content-Length` bodies, a path router with `{placeholders}`,
+//! query strings, keep-alive, streamed (chunked) NDJSON list responses,
+//! and a blocking client. TLS is out of scope (the paper's transport
+//! security is terminated at the load balancer anyway).
+
+pub mod client;
+pub mod router;
+pub mod server;
+
+pub use client::HttpClient;
+pub use router::{Handler, Router};
+pub use server::HttpServer;
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+use crate::common::error::{Result, RucioError};
+
+/// Maximum accepted header block + body sizes (sanity bounds).
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, percent-decoded.
+    pub path: String,
+    /// Query parameters (later duplicates win).
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    /// Path placeholders filled in by the router (`{scope}` → value).
+    pub params: BTreeMap<String, String>,
+}
+
+impl Request {
+    pub fn new(method: &str, path: &str) -> Self {
+        let (p, q) = split_query(path);
+        Request {
+            method: method.to_uppercase(),
+            path: p,
+            query: q,
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+            params: BTreeMap::new(),
+        }
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn param(&self, name: &str) -> Result<&str> {
+        self.params
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| RucioError::HttpError(format!("missing path param {name}")))
+    }
+
+    pub fn query_get(&self, name: &str) -> Option<&str> {
+        self.query.get(name).map(|s| s.as_str())
+    }
+
+    pub fn body_json(&self) -> Result<crate::jsonx::Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| RucioError::JsonError("body is not utf-8".into()))?;
+        crate::jsonx::Json::parse(text)
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Self {
+        Response { status, headers: BTreeMap::new(), body: Vec::new() }
+    }
+
+    pub fn json(status: u16, v: &crate::jsonx::Json) -> Self {
+        let mut r = Response::new(status);
+        r.headers
+            .insert("content-type".into(), "application/json".into());
+        r.body = v.to_string().into_bytes();
+        r
+    }
+
+    /// Newline-delimited JSON stream body (the paper's streamed list
+    /// replies: "streaming the content of the replies can extend the total
+    /// connection duration ... this does not block other clients").
+    pub fn ndjson(status: u16, items: impl IntoIterator<Item = crate::jsonx::Json>) -> Self {
+        let mut r = Response::new(status);
+        r.headers
+            .insert("content-type".into(), "application/x-ndjson".into());
+        let mut body = String::new();
+        for item in items {
+            body.push_str(&item.to_string());
+            body.push('\n');
+        }
+        r.body = body.into_bytes();
+        r
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        let mut r = Response::new(status);
+        r.headers.insert("content-type".into(), "text/plain".into());
+        r.body = body.as_bytes().to_vec();
+        r
+    }
+
+    pub fn error(e: &RucioError) -> Self {
+        let body = crate::jsonx::Json::obj()
+            .with("error", format!("{e}"))
+            .with("status", e.http_status() as u64);
+        Response::json(e.http_status(), &body)
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Self {
+        self.headers.insert(name.to_ascii_lowercase(), value.to_string());
+        self
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn body_json(&self) -> Result<crate::jsonx::Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| RucioError::JsonError("body is not utf-8".into()))?;
+        crate::jsonx::Json::parse(text)
+    }
+
+    /// Parse an NDJSON body into values.
+    pub fn body_ndjson(&self) -> Result<Vec<crate::jsonx::Json>> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| RucioError::JsonError("body is not utf-8".into()))?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(crate::jsonx::Json::parse)
+            .collect()
+    }
+
+    pub fn ok(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+}
+
+fn split_query(path_and_query: &str) -> (String, BTreeMap<String, String>) {
+    match path_and_query.split_once('?') {
+        None => (percent_decode(path_and_query), BTreeMap::new()),
+        Some((p, q)) => {
+            let mut map = BTreeMap::new();
+            for pair in q.split('&') {
+                if pair.is_empty() {
+                    continue;
+                }
+                let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+                map.insert(percent_decode(k), percent_decode(v));
+            }
+            (percent_decode(p), map)
+        }
+    }
+}
+
+/// Percent-decode a URL component (also turns `+` into space in queries —
+/// we accept it everywhere for simplicity).
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() + 1 && i + 2 < bytes.len() + 1 => {
+                if i + 2 < bytes.len() {
+                    let hi = (bytes[i + 1] as char).to_digit(16);
+                    let lo = (bytes[i + 2] as char).to_digit(16);
+                    if let (Some(h), Some(l)) = (hi, lo) {
+                        out.push((h * 16 + l) as u8);
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b'%');
+                i += 1;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Percent-encode a URL path segment.
+pub fn percent_encode(s: &str) -> String {
+    let mut out = String::new();
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// Read one HTTP request from a stream. Returns `Ok(None)` on clean EOF
+/// (keep-alive connection closed by peer).
+pub(crate) fn read_request<R: Read>(reader: &mut BufReader<R>) -> Result<Option<Request>> {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.trim_end().split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| RucioError::HttpError("empty request line".into()))?;
+    let target = parts
+        .next()
+        .ok_or_else(|| RucioError::HttpError("missing request target".into()))?;
+    let _version = parts.next().unwrap_or("HTTP/1.1");
+
+    let mut req = Request::new(method, target);
+    let mut header_bytes = 0usize;
+    loop {
+        let mut hl = String::new();
+        let n = reader.read_line(&mut hl)?;
+        if n == 0 {
+            return Err(RucioError::HttpError("eof in headers".into()));
+        }
+        header_bytes += n;
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(RucioError::HttpError("header block too large".into()));
+        }
+        let t = hl.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            req.headers
+                .insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = req
+        .header("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        return Err(RucioError::HttpError("body too large".into()));
+    }
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+pub(crate) fn write_response<W: Write>(w: &mut W, resp: &Response, keep_alive: bool) -> Result<()> {
+    let reason = match resp.status {
+        200 => "OK",
+        201 => "Created",
+        204 => "No Content",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    };
+    let mut head = format!("HTTP/1.1 {} {}\r\n", resp.status, reason);
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("content-length: {}\r\n", resp.body.len()));
+    head.push_str(if keep_alive {
+        "connection: keep-alive\r\n"
+    } else {
+        "connection: close\r\n"
+    });
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_parses_query_and_path() {
+        let r = Request::new("get", "/dids/data18/list?limit=5&long=1&name=a%20b");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/dids/data18/list");
+        assert_eq!(r.query_get("limit"), Some("5"));
+        assert_eq!(r.query_get("name"), Some("a b"));
+    }
+
+    #[test]
+    fn percent_round_trip() {
+        let s = "user.alice:my analysis/v1+x";
+        assert_eq!(percent_decode(&percent_encode(s)), s);
+        assert_eq!(percent_decode("a%2Fb"), "a/b");
+        assert_eq!(percent_decode("bad%zz"), "bad%zz");
+    }
+
+    #[test]
+    fn read_request_round_trip() {
+        let raw = b"POST /rules HTTP/1.1\r\ncontent-length: 7\r\nx-rucio-auth-token: tok\r\n\r\n{\"a\":1}";
+        let mut reader = BufReader::new(&raw[..]);
+        let req = read_request(&mut reader).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/rules");
+        assert_eq!(req.header("x-rucio-auth-token"), Some("tok"));
+        assert_eq!(req.body_json().unwrap().req_i64("a").unwrap(), 1);
+    }
+
+    #[test]
+    fn read_request_eof_is_none() {
+        let raw: &[u8] = b"";
+        let mut reader = BufReader::new(raw);
+        assert!(read_request(&mut reader).unwrap().is_none());
+    }
+
+    #[test]
+    fn write_response_format() {
+        let mut out = Vec::new();
+        let resp = Response::text(200, "hello");
+        write_response(&mut out, &resp, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-length: 5\r\n"));
+        assert!(text.ends_with("\r\n\r\nhello"));
+    }
+
+    #[test]
+    fn response_helpers() {
+        let e = RucioError::DidNotFound("scope:name".into());
+        let r = Response::error(&e);
+        assert_eq!(r.status, 404);
+        assert!(String::from_utf8_lossy(&r.body).contains("scope:name"));
+
+        let nd = Response::ndjson(
+            200,
+            vec![crate::jsonx::Json::obj().with("i", 1), crate::jsonx::Json::obj().with("i", 2)],
+        );
+        let items = nd.body_ndjson().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].req_i64("i").unwrap(), 2);
+    }
+}

@@ -1,0 +1,186 @@
+//! Path router with `{placeholder}` segments, shared by the REST server.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::{Request, Response};
+
+/// A route handler. Receives the request with `params` filled in.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+struct Route {
+    method: String,
+    /// Split pattern segments; `{name}` binds one segment, `{name...}`
+    /// binds the rest of the path (greedy tail — DID names contain `/`).
+    segments: Vec<String>,
+    handler: Handler,
+}
+
+/// Method+path dispatch table.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add<F>(&mut self, method: &str, pattern: &str, handler: F)
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.routes.push(Route {
+            method: method.to_uppercase(),
+            segments: pattern
+                .trim_matches('/')
+                .split('/')
+                .map(|s| s.to_string())
+                .collect(),
+            handler: Arc::new(handler),
+        });
+    }
+
+    pub fn get<F>(&mut self, pattern: &str, h: F)
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.add("GET", pattern, h)
+    }
+
+    pub fn post<F>(&mut self, pattern: &str, h: F)
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.add("POST", pattern, h)
+    }
+
+    pub fn put<F>(&mut self, pattern: &str, h: F)
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.add("PUT", pattern, h)
+    }
+
+    pub fn delete<F>(&mut self, pattern: &str, h: F)
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        self.add("DELETE", pattern, h)
+    }
+
+    /// Dispatch a request: fills `req.params` from the matched pattern.
+    /// 404 when no path matches, 405 when the path matches another method.
+    pub fn dispatch(&self, mut req: Request) -> Response {
+        let path_segs: Vec<&str> = req.path.trim_matches('/').split('/').collect();
+        let mut path_matched = false;
+        for route in &self.routes {
+            if let Some(params) = match_segments(&route.segments, &path_segs) {
+                path_matched = true;
+                if route.method == req.method {
+                    req.params = params;
+                    return (route.handler)(&req);
+                }
+            }
+        }
+        if path_matched {
+            Response::text(405, "method not allowed")
+        } else {
+            Response::text(404, "not found")
+        }
+    }
+}
+
+fn match_segments(pattern: &[String], path: &[&str]) -> Option<BTreeMap<String, String>> {
+    let mut params = BTreeMap::new();
+    let mut pi = 0;
+    for (i, seg) in pattern.iter().enumerate() {
+        if seg.starts_with('{') && seg.ends_with("...}") {
+            // Greedy tail: bind the remaining path (must be non-empty).
+            let name = &seg[1..seg.len() - 4];
+            if pi >= path.len() {
+                return None;
+            }
+            params.insert(name.to_string(), path[pi..].join("/"));
+            // Tail must be the final pattern segment.
+            return if i == pattern.len() - 1 { Some(params) } else { None };
+        }
+        if pi >= path.len() {
+            return None;
+        }
+        if seg.starts_with('{') && seg.ends_with('}') {
+            params.insert(seg[1..seg.len() - 1].to_string(), path[pi].to_string());
+        } else if seg != path[pi] {
+            return None;
+        }
+        pi += 1;
+    }
+    if pi == path.len() {
+        Some(params)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(method: &str, path: &str) -> Request {
+        Request::new(method, path)
+    }
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        r.get("/ping", |_| Response::text(200, "pong"));
+        r.get("/dids/{scope}/{name}", |rq| {
+            Response::text(
+                200,
+                &format!("{}:{}", rq.params["scope"], rq.params["name"]),
+            )
+        });
+        r.post("/dids/{scope}/{name}", |_| Response::text(201, "created"));
+        r.get("/replicas/{scope}/{name...}", |rq| {
+            Response::text(200, &rq.params["name"].clone())
+        });
+        r
+    }
+
+    #[test]
+    fn static_route() {
+        let r = router();
+        let resp = r.dispatch(req("GET", "/ping"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"pong");
+    }
+
+    #[test]
+    fn placeholder_binding() {
+        let r = router();
+        let resp = r.dispatch(req("GET", "/dids/data18/raw.001"));
+        assert_eq!(resp.body, b"data18:raw.001");
+    }
+
+    #[test]
+    fn greedy_tail_binds_slashes() {
+        let r = router();
+        let resp = r.dispatch(req("GET", "/replicas/user.alice/some/deep/name"));
+        assert_eq!(resp.body, b"some/deep/name");
+    }
+
+    #[test]
+    fn wrong_method_is_405_missing_is_404() {
+        let r = router();
+        assert_eq!(r.dispatch(req("DELETE", "/ping")).status, 405);
+        assert_eq!(r.dispatch(req("GET", "/nope")).status, 404);
+        assert_eq!(r.dispatch(req("GET", "/dids/onlyscope")).status, 404);
+    }
+
+    #[test]
+    fn method_dispatch_distinguishes() {
+        let r = router();
+        assert_eq!(r.dispatch(req("POST", "/dids/a/b")).status, 201);
+        assert_eq!(r.dispatch(req("GET", "/dids/a/b")).status, 200);
+    }
+}

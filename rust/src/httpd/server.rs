@@ -1,0 +1,228 @@
+//! Thread-pooled HTTP server: the "web server spawns multiple instances,
+//! each controlling multiple WSGI containers" of paper §5.2, collapsed to
+//! one process with N worker threads.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{read_request, write_response, Response, Router};
+use crate::common::error::Result;
+
+/// A running HTTP server. Dropping it (or calling [`HttpServer::shutdown`])
+/// stops the accept loop and joins the workers.
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    /// Served request counter (the §5.3 interaction-rate metric source).
+    pub requests_served: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// Bind to `host:port` (port 0 picks a free port) and serve `router`
+    /// with `n_workers` threads.
+    pub fn start(bind: &str, router: Router, n_workers: usize) -> Result<HttpServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let router = Arc::new(router);
+        let requests_served = Arc::new(AtomicU64::new(0));
+
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let rx = rx.clone();
+            let router = router.clone();
+            let stop = stop.clone();
+            let served = requests_served.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let stream = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv_timeout(Duration::from_millis(100))
+                };
+                match stream {
+                    Ok(s) => handle_connection(s, &router, &served),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            }));
+        }
+
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = tx.send(stream);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        Ok(HttpServer {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            workers,
+            requests_served,
+        })
+    }
+
+    /// The bound address, e.g. `127.0.0.1:37211`.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(stream: TcpStream, router: &Router, served: &AtomicU64) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    // Nagle + delayed-ACK between the two response writes costs ~40 ms
+    // per request without this (EXPERIMENTS.md §Perf step 3).
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    // Keep-alive loop: serve requests until the client closes or errors.
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return,
+            Err(_) => {
+                let _ = write_response(&mut writer, &Response::text(400, "bad request"), false);
+                return;
+            }
+        };
+        let keep_alive = req
+            .header("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        let resp = router.dispatch(req);
+        served.fetch_add(1, Ordering::Relaxed);
+        if write_response(&mut writer, &resp, keep_alive).is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::httpd::HttpClient;
+    use crate::jsonx::Json;
+
+    fn test_server() -> HttpServer {
+        let mut router = Router::new();
+        router.get("/ping", |_| Response::text(200, "pong"));
+        router.post("/echo", |req| {
+            Response::new(200).with_header("content-type", "application/json").clone_body(req)
+        });
+        router.get("/item/{id}", |req| {
+            Response::json(200, &Json::obj().with("id", req.params["id"].as_str()))
+        });
+        HttpServer::start("127.0.0.1:0", router, 4).unwrap()
+    }
+
+    impl Response {
+        fn clone_body(mut self, req: &super::super::Request) -> Response {
+            self.body = req.body.clone();
+            self
+        }
+    }
+
+    #[test]
+    fn serves_basic_requests() {
+        let server = test_server();
+        let client = HttpClient::new(&server.url());
+        let resp = client.get("/ping").unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"pong");
+    }
+
+    #[test]
+    fn serves_json_and_params() {
+        let server = test_server();
+        let client = HttpClient::new(&server.url());
+        let resp = client.get("/item/42").unwrap();
+        assert_eq!(resp.body_json().unwrap().req_str("id").unwrap(), "42");
+
+        let resp = client
+            .post_json("/echo", &Json::obj().with("hello", "world"))
+            .unwrap();
+        assert_eq!(resp.body_json().unwrap().req_str("hello").unwrap(), "world");
+    }
+
+    #[test]
+    fn keep_alive_reuses_connection() {
+        let server = test_server();
+        let client = HttpClient::new(&server.url());
+        for _ in 0..10 {
+            assert_eq!(client.get("/ping").unwrap().status, 200);
+        }
+        assert_eq!(server.requests_served.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = test_server();
+        let url = server.url();
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let url = url.clone();
+            handles.push(std::thread::spawn(move || {
+                let client = HttpClient::new(&url);
+                for _ in 0..20 {
+                    assert_eq!(client.get("/ping").unwrap().status, 200);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.requests_served.load(Ordering::Relaxed), 160);
+    }
+
+    #[test]
+    fn unknown_route_404s() {
+        let server = test_server();
+        let client = HttpClient::new(&server.url());
+        assert_eq!(client.get("/nope").unwrap().status, 404);
+    }
+}

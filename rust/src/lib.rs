@@ -1,0 +1,39 @@
+//! # rucio-rs — a Rust + JAX/Pallas reproduction of *Rucio — Scientific data management*
+//!
+//! This crate implements the full Rucio system described in Barisits et al.,
+//! Computing and Software for Big Science (2019), DOI 10.1007/s41781-019-0026-3,
+//! on top of simulated grid infrastructure (storage, network, FTS), with the
+//! paper's §6 numeric decision models (dynamic placement scoring, transfer-time
+//! prediction) AOT-compiled from JAX/Pallas and executed through PJRT.
+//!
+//! Layering (see DESIGN.md):
+//! * substrates: [`common`], [`jsonx`], [`db`], [`httpd`], [`mq`], [`netsim`],
+//!   [`storagesim`], [`ftssim`], [`benchkit`]
+//! * core concepts (paper §2): [`core`]
+//! * daemons (paper §3.4/§4): [`daemons`]
+//! * server + clients (paper §3.2/§3.3): [`server`], [`client`]
+//! * §6 advanced features: [`placement`], [`rebalance`], [`t3c`], backed by
+//!   [`runtime`] (PJRT artifact execution)
+//! * simulation + analytics: [`sim`], [`analytics`]
+
+pub mod common;
+pub mod jsonx;
+pub mod db;
+pub mod httpd;
+pub mod mq;
+pub mod netsim;
+pub mod storagesim;
+pub mod ftssim;
+pub mod benchkit;
+pub mod core;
+pub mod daemons;
+pub mod runtime;
+pub mod placement;
+pub mod rebalance;
+pub mod t3c;
+pub mod server;
+pub mod client;
+pub mod sim;
+pub mod analytics;
+
+pub use common::error::{Result, RucioError};

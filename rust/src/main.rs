@@ -1,0 +1,154 @@
+//! `rucio` — the leader binary: run the REST server + daemon fleet, run
+//! simulation scenarios, or act as a CLI client (paper §3.2's bin/rucio
+//! and bin/rucio-admin collapsed into subcommands).
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use rucio::common::clock::{Clock, MINUTE_MS};
+use rucio::common::config::Config;
+use rucio::common::units::fmt_bytes;
+use rucio::sim::driver::{standard_driver, Driver};
+use rucio::sim::grid::GridSpec;
+use rucio::sim::workload::WorkloadSpec;
+
+fn main() {
+    rucio::common::logx::init(1);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "serve" => serve(&flags),
+        "sim" => sim(&flags),
+        "ping" => client_ping(&flags),
+        "stats" => client_stats(&flags),
+        _ => help(),
+    }
+}
+
+fn parse_flags(args: &[String]) -> std::collections::BTreeMap<String, String> {
+    let mut map = std::collections::BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let value = args.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+            map.insert(key.to_string(), value);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn help() {
+    println!(
+        r#"rucio-rs — Rucio scientific data management (paper reproduction)
+
+USAGE:
+  rucio serve [--bind 127.0.0.1:8080] [--workers 8] [--config rucio.cfg]
+      run the REST server + full daemon fleet on a simulated grid
+  rucio sim [--days 30] [--tick-min 10] [--t2 2] [--report out.csv]
+      run the discrete-event simulation and print daily stats
+  rucio ping [--url http://127.0.0.1:8080]
+  rucio stats [--days ...]   alias of sim with a summary table
+"#
+    );
+}
+
+fn load_config(flags: &std::collections::BTreeMap<String, String>) -> Config {
+    match flags.get("config") {
+        Some(path) => Config::from_file(path).expect("config parse error"),
+        None => Config::new(),
+    }
+}
+
+/// Production-style mode: real clock, REST server + threaded daemons.
+fn serve(flags: &std::collections::BTreeMap<String, String>) {
+    let bind = flags.get("bind").map(|s| s.as_str()).unwrap_or("127.0.0.1:8080");
+    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let cfg = load_config(flags);
+    let ctx = rucio::sim::grid::build_grid(&GridSpec::default(), Clock::real(), cfg);
+    // default userpass identities for interactive use
+    ctx.catalog
+        .add_identity("root", rucio::core::types::AuthType::UserPass, "root", Some("root"))
+        .ok();
+    let server = rucio::server::serve(ctx.catalog.clone(), ctx.broker.clone(), bind, workers)
+        .expect("bind failed");
+    println!("rucio server listening on {}", server.url());
+    let stop = Arc::new(AtomicBool::new(false));
+    let daemons = Driver::standard_daemons(&ctx);
+    let handles = rucio::daemons::run_threaded(daemons, stop.clone());
+    println!("{} daemons running; Ctrl-C to stop", handles.len());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn sim(flags: &std::collections::BTreeMap<String, String>) {
+    let days: u32 = flags.get("days").and_then(|s| s.parse().ok()).unwrap_or(30);
+    let tick_min: i64 = flags.get("tick-min").and_then(|s| s.parse().ok()).unwrap_or(10);
+    let t2: usize = flags.get("t2").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let cfg = load_config(flags);
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: t2, ..Default::default() },
+        WorkloadSpec::default(),
+        cfg,
+    );
+    let t0 = std::time::Instant::now();
+    driver.run_days(days, tick_min * MINUTE_MS);
+    println!(
+        "simulated {days} days in {:.1}s wall-clock",
+        t0.elapsed().as_secs_f64()
+    );
+    println!("\nday  volume-managed  transferred  done  failed  deletions");
+    for d in &driver.days {
+        println!(
+            "{:>3}  {:>14}  {:>11}  {:>5}  {:>6}  {:>9}",
+            d.day,
+            fmt_bytes(d.bytes_managed),
+            fmt_bytes(d.bytes_transferred),
+            d.transfers_done,
+            d.transfers_failed,
+            d.deletions
+        );
+    }
+    if let Some(path) = flags.get("report") {
+        let rows: Vec<Vec<String>> = driver
+            .days
+            .iter()
+            .map(|d| {
+                vec![
+                    d.day.to_string(),
+                    d.bytes_managed.to_string(),
+                    d.bytes_transferred.to_string(),
+                    d.transfers_done.to_string(),
+                    d.transfers_failed.to_string(),
+                    d.deletions.to_string(),
+                ]
+            })
+            .collect();
+        let csv = rucio::analytics::reports::to_csv(
+            &["day", "bytes_managed", "bytes_transferred", "done", "failed", "deletions"],
+            &rows,
+        );
+        std::fs::write(path, csv).expect("write report");
+        println!("wrote {path}");
+    }
+}
+
+fn client_ping(flags: &std::collections::BTreeMap<String, String>) {
+    let url = flags.get("url").map(|s| s.as_str()).unwrap_or("http://127.0.0.1:8080");
+    let http = rucio::httpd::HttpClient::new(url);
+    match http.get("/ping") {
+        Ok(resp) => println!("{}", String::from_utf8_lossy(&resp.body)),
+        Err(e) => {
+            eprintln!("ping failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn client_stats(flags: &std::collections::BTreeMap<String, String>) {
+    sim(flags)
+}

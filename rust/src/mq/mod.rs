@@ -1,0 +1,322 @@
+//! In-process STOMP-style message broker — the ActiveMQ substitute
+//! (paper §4.5: "Rucio supports STOMP protocol compatible queuing
+//! services"; §4.6: traces/events fan out through topics into per-consumer
+//! queues).
+//!
+//! Semantics implemented:
+//! * **topics** — publish/subscribe: every subscriber's queue receives a
+//!   copy of each message published after it subscribed;
+//! * **queues** — point-to-point: competing consumers, each message
+//!   delivered to exactly one consumer;
+//! * event-type **filters** on subscriptions (the "event-type can be used
+//!   by queue listeners to filter for messages" of §4.5);
+//! * bounded queues with drop-oldest overflow (a real broker's TTL stand-in)
+//!   plus drop counters for monitoring.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::common::clock::EpochMs;
+use crate::jsonx::Json;
+
+/// A broker message: event type + schema-free JSON payload (paper §4.5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub event_type: String,
+    pub payload: Json,
+    pub created_at: EpochMs,
+}
+
+impl Message {
+    pub fn new(event_type: &str, payload: Json, now: EpochMs) -> Self {
+        Message { event_type: event_type.to_string(), payload, created_at: now }
+    }
+}
+
+#[derive(Debug, Default)]
+struct SubQueue {
+    buf: VecDeque<Message>,
+    filter: Option<String>,
+    dropped: u64,
+}
+
+#[derive(Debug, Default)]
+struct TopicState {
+    subs: BTreeMap<u64, SubQueue>,
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    buf: VecDeque<Message>,
+    dropped: u64,
+}
+
+#[derive(Debug, Default)]
+struct BrokerInner {
+    topics: BTreeMap<String, TopicState>,
+    queues: BTreeMap<String, QueueState>,
+    next_sub: u64,
+    capacity: usize,
+    published: u64,
+}
+
+/// The broker handle (cheap to clone; all clones share state).
+#[derive(Clone)]
+pub struct Broker {
+    inner: Arc<Mutex<BrokerInner>>,
+}
+
+/// A topic subscription handle; poll with [`Broker::poll`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubId {
+    topic_hash: u64,
+    id: u64,
+}
+
+const DEFAULT_CAPACITY: usize = 100_000;
+
+impl Default for Broker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Broker {
+    pub fn new() -> Self {
+        Broker {
+            inner: Arc::new(Mutex::new(BrokerInner {
+                capacity: DEFAULT_CAPACITY,
+                ..Default::default()
+            })),
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        let b = Broker::new();
+        b.inner.lock().unwrap().capacity = cap;
+        b
+    }
+
+    /// Subscribe to a topic, optionally filtering on an event type.
+    pub fn subscribe(&self, topic: &str, filter: Option<&str>) -> SubId {
+        let mut inner = self.inner.lock().unwrap();
+        inner.next_sub += 1;
+        let id = inner.next_sub;
+        let t = inner.topics.entry(topic.to_string()).or_default();
+        t.subs.insert(
+            id,
+            SubQueue { buf: VecDeque::new(), filter: filter.map(|s| s.to_string()), dropped: 0 },
+        );
+        SubId { topic_hash: crate::db::shard_hash(topic.as_bytes()), id }
+    }
+
+    /// Publish to a topic: fanned out to all (matching) subscribers.
+    pub fn publish(&self, topic: &str, msg: Message) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.published += 1;
+        let cap = inner.capacity;
+        if let Some(t) = inner.topics.get_mut(topic) {
+            for sub in t.subs.values_mut() {
+                if let Some(f) = &sub.filter {
+                    if f != &msg.event_type {
+                        continue;
+                    }
+                }
+                sub.buf.push_back(msg.clone());
+                if sub.buf.len() > cap {
+                    sub.buf.pop_front();
+                    sub.dropped += 1;
+                }
+            }
+        }
+    }
+
+    /// Drain up to `max` messages from a topic subscription.
+    pub fn poll(&self, topic: &str, sub: SubId, max: usize) -> Vec<Message> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(t) = inner.topics.get_mut(topic) else {
+            return Vec::new();
+        };
+        let Some(q) = t.subs.get_mut(&sub.id) else {
+            return Vec::new();
+        };
+        let n = max.min(q.buf.len());
+        q.buf.drain(..n).collect()
+    }
+
+    pub fn unsubscribe(&self, topic: &str, sub: SubId) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(t) = inner.topics.get_mut(topic) {
+            t.subs.remove(&sub.id);
+        }
+    }
+
+    /// Point-to-point send (named queue, competing consumers).
+    pub fn send(&self, queue: &str, msg: Message) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.published += 1;
+        let cap = inner.capacity;
+        let q = inner.queues.entry(queue.to_string()).or_default();
+        q.buf.push_back(msg);
+        if q.buf.len() > cap {
+            q.buf.pop_front();
+            q.dropped += 1;
+        }
+    }
+
+    /// Competing-consumer receive: up to `max` messages, each delivered once.
+    pub fn receive(&self, queue: &str, max: usize) -> Vec<Message> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(q) = inner.queues.get_mut(queue) else {
+            return Vec::new();
+        };
+        let n = max.min(q.buf.len());
+        q.buf.drain(..n).collect()
+    }
+
+    /// Queue depth (monitoring probe surface).
+    pub fn queue_depth(&self, queue: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .queues
+            .get(queue)
+            .map(|q| q.buf.len())
+            .unwrap_or(0)
+    }
+
+    pub fn topic_depth(&self, topic: &str, sub: SubId) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .topics
+            .get(topic)
+            .and_then(|t| t.subs.get(&sub.id))
+            .map(|q| q.buf.len())
+            .unwrap_or(0)
+    }
+
+    pub fn total_published(&self) -> u64 {
+        self.inner.lock().unwrap().published
+    }
+
+    pub fn total_dropped(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.queues.values().map(|q| q.dropped).sum::<u64>()
+            + inner
+                .topics
+                .values()
+                .flat_map(|t| t.subs.values().map(|s| s.dropped))
+                .sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(event: &str, i: i64) -> Message {
+        Message::new(event, Json::obj().with("i", i), i)
+    }
+
+    #[test]
+    fn topic_fans_out_to_all_subscribers() {
+        let b = Broker::new();
+        let s1 = b.subscribe("events", None);
+        let s2 = b.subscribe("events", None);
+        b.publish("events", msg("transfer-done", 1));
+        assert_eq!(b.poll("events", s1, 10).len(), 1);
+        assert_eq!(b.poll("events", s2, 10).len(), 1);
+        // Polling again yields nothing.
+        assert_eq!(b.poll("events", s1, 10).len(), 0);
+    }
+
+    #[test]
+    fn subscription_starts_empty() {
+        let b = Broker::new();
+        b.publish("events", msg("transfer-done", 1));
+        let late = b.subscribe("events", None);
+        assert_eq!(b.poll("events", late, 10).len(), 0);
+    }
+
+    #[test]
+    fn event_type_filter_applies() {
+        let b = Broker::new();
+        let s = b.subscribe("events", Some("deletion-done"));
+        b.publish("events", msg("transfer-done", 1));
+        b.publish("events", msg("deletion-done", 2));
+        let got = b.poll("events", s, 10);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].event_type, "deletion-done");
+    }
+
+    #[test]
+    fn queue_delivers_each_message_once() {
+        let b = Broker::new();
+        for i in 0..10 {
+            b.send("work", msg("job", i));
+        }
+        let a = b.receive("work", 6);
+        let c = b.receive("work", 6);
+        assert_eq!(a.len(), 6);
+        assert_eq!(c.len(), 4);
+        assert_eq!(b.receive("work", 6).len(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest() {
+        let b = Broker::with_capacity(3);
+        for i in 0..5 {
+            b.send("q", msg("e", i));
+        }
+        let got = b.receive("q", 10);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].payload.req_i64("i").unwrap(), 2);
+        assert_eq!(b.total_dropped(), 2);
+    }
+
+    #[test]
+    fn depths_and_counters() {
+        let b = Broker::new();
+        let s = b.subscribe("t", None);
+        b.publish("t", msg("e", 1));
+        b.send("q", msg("e", 2));
+        assert_eq!(b.topic_depth("t", s), 1);
+        assert_eq!(b.queue_depth("q"), 1);
+        assert_eq!(b.total_published(), 2);
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let b = Broker::new();
+        let s = b.subscribe("t", None);
+        b.unsubscribe("t", s);
+        b.publish("t", msg("e", 1));
+        assert_eq!(b.poll("t", s, 10).len(), 0);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let b = Broker::new();
+        let mut handles = vec![];
+        for w in 0..4 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    b.send("work", msg("job", (w * 1000 + i) as i64));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut total = 0;
+        while !b.receive("work", 100).is_empty() {
+            total += 100.min(1000 - total);
+            if total >= 1000 {
+                break;
+            }
+        }
+        assert_eq!(b.queue_depth("work"), 0);
+    }
+}

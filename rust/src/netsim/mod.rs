@@ -1,0 +1,245 @@
+//! Network simulator — the NREN/LHCOPN/LHCONE substitute (paper §1.3).
+//!
+//! Model: sites (data centres) connected by directed links with a
+//! bandwidth, a latency, and a *quality* (per-transfer success
+//! probability — standing in for the storage/network configuration
+//! problems that cause the paper's ~10–20 % failure rates and the Fig 8
+//! efficiency structure). Unknown pairs fall back to a configurable
+//! commodity-internet default link.
+//!
+//! Concurrent transfers on a link share its bandwidth equally (fair-share
+//! approximation of TCP on a bottleneck); the FTS simulator integrates
+//! progress over virtual time through [`Network::share_bps`].
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, RwLock};
+
+use crate::common::units::GB;
+
+/// Identifies a site (data centre). RSEs map to sites in their attributes.
+pub type Site = String;
+
+/// A directed network link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Capacity in bytes/second.
+    pub bandwidth_bps: u64,
+    /// One-way latency in milliseconds (adds transfer startup cost).
+    pub latency_ms: i64,
+    /// Probability a single transfer over this link succeeds.
+    pub quality: f64,
+}
+
+impl Link {
+    pub fn new(bandwidth_bps: u64, latency_ms: i64, quality: f64) -> Self {
+        Link { bandwidth_bps, latency_ms, quality: quality.clamp(0.0, 1.0) }
+    }
+
+    /// A 100 Gbps LHCOPN-class link.
+    pub fn lhcopn() -> Self {
+        Link::new(100 * GB / 8, 15, 0.98)
+    }
+
+    /// A 40 Gbps institute link.
+    pub fn institute() -> Self {
+        Link::new(40 * GB / 8, 30, 0.95)
+    }
+
+    /// Commodity-internet fallback (paper §1.3: "Traffic can also be routed
+    /// over the commodity internet as a fallback").
+    pub fn commodity() -> Self {
+        Link::new(10 * GB / 8, 80, 0.90)
+    }
+}
+
+#[derive(Debug, Default)]
+struct LoadState {
+    /// Active transfer count per directed pair.
+    active: BTreeMap<(Site, Site), usize>,
+}
+
+/// The network: link table + live load tracking + transfer telemetry used
+/// for dynamic distance re-evaluation (paper §2.4).
+pub struct Network {
+    links: RwLock<BTreeMap<(Site, Site), Link>>,
+    default_link: RwLock<Link>,
+    load: Mutex<LoadState>,
+    /// Exponentially-weighted achieved throughput per pair (bytes/s),
+    /// updated on transfer completion — the "periodic re-evaluation of the
+    /// collected average throughput" signal.
+    ewma_bps: Mutex<BTreeMap<(Site, Site), f64>>,
+}
+
+impl Default for Network {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Network {
+    pub fn new() -> Self {
+        Network {
+            links: RwLock::new(BTreeMap::new()),
+            default_link: RwLock::new(Link::commodity()),
+            load: Mutex::new(LoadState::default()),
+            ewma_bps: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn set_link(&self, src: &str, dst: &str, link: Link) {
+        self.links
+            .write()
+            .unwrap()
+            .insert((src.to_string(), dst.to_string()), link);
+    }
+
+    /// Symmetric convenience.
+    pub fn set_link_bidir(&self, a: &str, b: &str, link: Link) {
+        self.set_link(a, b, link.clone());
+        self.set_link(b, a, link);
+    }
+
+    pub fn set_default_link(&self, link: Link) {
+        *self.default_link.write().unwrap() = link;
+    }
+
+    pub fn link(&self, src: &str, dst: &str) -> Link {
+        self.links
+            .read()
+            .unwrap()
+            .get(&(src.to_string(), dst.to_string()))
+            .cloned()
+            .unwrap_or_else(|| self.default_link.read().unwrap().clone())
+    }
+
+    /// Register a transfer starting on a pair (affects fair-share).
+    pub fn acquire(&self, src: &str, dst: &str) {
+        *self
+            .load
+            .lock()
+            .unwrap()
+            .active
+            .entry((src.to_string(), dst.to_string()))
+            .or_insert(0) += 1;
+    }
+
+    /// Transfer finished (success or failure) — release the slot.
+    pub fn release(&self, src: &str, dst: &str) {
+        let mut load = self.load.lock().unwrap();
+        let key = (src.to_string(), dst.to_string());
+        if let Some(n) = load.active.get_mut(&key) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                load.active.remove(&key);
+            }
+        }
+    }
+
+    pub fn active_on(&self, src: &str, dst: &str) -> usize {
+        self.load
+            .lock()
+            .unwrap()
+            .active
+            .get(&(src.to_string(), dst.to_string()))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Current fair-share bandwidth (bytes/s) one transfer gets on a pair.
+    pub fn share_bps(&self, src: &str, dst: &str) -> u64 {
+        let link = self.link(src, dst);
+        let n = self.active_on(src, dst).max(1) as u64;
+        (link.bandwidth_bps / n).max(1)
+    }
+
+    /// Record achieved throughput of a completed transfer; feeds distance
+    /// re-evaluation (EWMA with alpha = 0.2).
+    pub fn record_throughput(&self, src: &str, dst: &str, bps: f64) {
+        let mut ewma = self.ewma_bps.lock().unwrap();
+        let key = (src.to_string(), dst.to_string());
+        let entry = ewma.entry(key).or_insert(bps);
+        *entry = 0.8 * *entry + 0.2 * bps;
+    }
+
+    /// Observed average throughput (bytes/s), if any transfers completed.
+    pub fn observed_bps(&self, src: &str, dst: &str) -> Option<f64> {
+        self.ewma_bps
+            .lock()
+            .unwrap()
+            .get(&(src.to_string(), dst.to_string()))
+            .copied()
+    }
+
+    /// All pairs with observed throughput (for the distance daemon sweep).
+    pub fn observed_pairs(&self) -> Vec<(Site, Site, f64)> {
+        self.ewma_bps
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((s, d), bps)| (s.clone(), d.clone(), *bps))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_link_for_unknown_pairs() {
+        let net = Network::new();
+        let l = net.link("X", "Y");
+        assert_eq!(l.bandwidth_bps, Link::commodity().bandwidth_bps);
+        net.set_link("X", "Y", Link::lhcopn());
+        assert_eq!(net.link("X", "Y").bandwidth_bps, Link::lhcopn().bandwidth_bps);
+        // direction matters
+        assert_eq!(net.link("Y", "X").bandwidth_bps, Link::commodity().bandwidth_bps);
+    }
+
+    #[test]
+    fn fair_share_divides_bandwidth() {
+        let net = Network::new();
+        net.set_link("A", "B", Link::new(1000, 1, 1.0));
+        assert_eq!(net.share_bps("A", "B"), 1000);
+        net.acquire("A", "B");
+        net.acquire("A", "B");
+        assert_eq!(net.active_on("A", "B"), 2);
+        assert_eq!(net.share_bps("A", "B"), 500);
+        net.release("A", "B");
+        assert_eq!(net.share_bps("A", "B"), 1000);
+        net.release("A", "B");
+        net.release("A", "B"); // over-release is safe
+        assert_eq!(net.active_on("A", "B"), 0);
+    }
+
+    #[test]
+    fn throughput_ewma_converges() {
+        let net = Network::new();
+        assert!(net.observed_bps("A", "B").is_none());
+        for _ in 0..60 {
+            net.record_throughput("A", "B", 100.0);
+        }
+        let v = net.observed_bps("A", "B").unwrap();
+        assert!((v - 100.0).abs() < 1.0);
+        for _ in 0..60 {
+            net.record_throughput("A", "B", 50.0);
+        }
+        let v = net.observed_bps("A", "B").unwrap();
+        assert!((v - 50.0).abs() < 1.0, "v={v}");
+    }
+
+    #[test]
+    fn bidir_sets_both_directions() {
+        let net = Network::new();
+        net.set_link_bidir("A", "B", Link::institute());
+        assert_eq!(net.link("A", "B").latency_ms, 30);
+        assert_eq!(net.link("B", "A").latency_ms, 30);
+        assert_eq!(net.observed_pairs().len(), 0);
+    }
+
+    #[test]
+    fn quality_clamped() {
+        let l = Link::new(1, 1, 7.3);
+        assert_eq!(l.quality, 1.0);
+    }
+}

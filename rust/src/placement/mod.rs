@@ -1,0 +1,437 @@
+//! C3PO — dynamic data placement (paper §6.1): "dynamic data placement
+//! helps to exploit computing and storage resources by ... creating
+//! additional replicas of popular [datasets] at different RSEs".
+//!
+//! The algorithm follows the paper's description: scan incoming access
+//! pressure (popularity from traces, standing in for the PanDA queued-job
+//! signal), check recent-placement cool-down and the existing replica
+//! count, then weigh candidate RSEs by free space, network connectivity,
+//! queued files, and recent placements — and create a replication rule
+//! for the winner. Scoring runs through the AOT-compiled Pallas kernel
+//! ([`crate::runtime::Runtime::placement_score`]); a pure-Rust
+//! [`RefScorer`] covers artifact-less tests and the ablation bench.
+
+use std::collections::BTreeMap;
+
+use crate::common::clock::{DAY_MS, EpochMs};
+use crate::common::error::Result;
+use crate::common::units::GB;
+use crate::core::rules_api::RuleSpec;
+use crate::core::types::{DidKey, DidType, RequestState};
+use crate::jsonx::Json;
+use crate::runtime::{ref_placement_score, Runtime};
+
+use crate::daemons::{Ctx, Daemon};
+
+/// Shared feature dimension (must equal `python/compile/kernels/score.py`).
+pub const N_FEATURES: usize = 8;
+
+/// Default scoring weights: free space and closeness dominate; queue
+/// depth, recent placements, and link load repel.
+pub const DEFAULT_WEIGHTS: [f32; N_FEATURES] = [2.0, 1.0, -1.0, -0.5, 0.3, 1.5, -0.5, 0.0];
+
+/// Scoring backend.
+pub trait Scorer: Send {
+    fn score(&mut self, features: &[f32], weights: &[f32], mask: &[f32])
+        -> Result<(Vec<f32>, Vec<f32>)>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust scorer (mirror of the Pallas kernel's oracle).
+pub struct RefScorer;
+
+impl Scorer for RefScorer {
+    fn score(
+        &mut self,
+        features: &[f32],
+        weights: &[f32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        Ok(ref_placement_score(features, weights, mask))
+    }
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+}
+
+/// PJRT-backed scorer executing the Pallas artifact.
+pub struct PjrtScorer {
+    pub rt: Runtime,
+}
+
+impl PjrtScorer {
+    pub fn load_default() -> Result<Self> {
+        Ok(PjrtScorer { rt: Runtime::load_default()? })
+    }
+}
+
+impl Scorer for PjrtScorer {
+    fn score(
+        &mut self,
+        features: &[f32],
+        weights: &[f32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.rt.placement_score(features, weights, mask)
+    }
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// One logged placement decision (the paper writes these to Elasticsearch
+/// "for further analysis by operators").
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub at: EpochMs,
+    pub dataset: DidKey,
+    pub chosen_rse: String,
+    pub prob: f32,
+    pub rule_id: u64,
+    pub candidates: usize,
+}
+
+/// The C3PO daemon.
+pub struct C3po {
+    pub ctx: Ctx,
+    pub scorer: Box<dyn Scorer>,
+    pub weights: [f32; N_FEATURES],
+    /// Popularity threshold (window accesses) triggering placement.
+    pub threshold: u64,
+    /// Max total replicas of a dataset before we stop adding more.
+    pub max_replicas: usize,
+    /// Per-dataset cool-down ("checks if there has already been a replica
+    /// created in the recent past").
+    pub cooldown_ms: i64,
+    /// Lifetime of dynamic replicas (cache semantics).
+    pub lifetime_ms: i64,
+    pub per_tick: usize,
+    last_placed: BTreeMap<DidKey, EpochMs>,
+    recent_per_rse: BTreeMap<String, (EpochMs, u32)>,
+    pub decisions: Vec<Decision>,
+}
+
+impl C3po {
+    pub fn new(ctx: Ctx, scorer: Box<dyn Scorer>) -> Self {
+        let cfg = &ctx.catalog.cfg;
+        C3po {
+            threshold: cfg.get_i64("c3po", "threshold", 5) as u64,
+            max_replicas: cfg.get_i64("c3po", "max_replicas", 5) as usize,
+            cooldown_ms: cfg.get_duration_ms("c3po", "cooldown", 3 * DAY_MS),
+            lifetime_ms: cfg.get_duration_ms("c3po", "lifetime", 14 * DAY_MS),
+            per_tick: cfg.get_i64("c3po", "per_tick", 8) as usize,
+            ctx,
+            scorer,
+            weights: DEFAULT_WEIGHTS,
+            last_placed: BTreeMap::new(),
+            recent_per_rse: BTreeMap::new(),
+            decisions: Vec::new(),
+        }
+    }
+
+    /// Candidate datasets: popular in the current window, cooled down.
+    fn hot_datasets(&self, now: EpochMs) -> Vec<DidKey> {
+        let cat = &self.ctx.catalog;
+        let mut hot: Vec<(u64, DidKey)> = Vec::new();
+        cat.popularity.for_each(|p| {
+            if p.window_accesses >= self.threshold {
+                if let Some(t) = self.last_placed.get(&p.did) {
+                    if now - *t < self.cooldown_ms {
+                        return;
+                    }
+                }
+                if let Ok(d) = cat.get_did(&p.did) {
+                    if d.did_type == DidType::Dataset {
+                        hot.push((p.window_accesses, p.did.clone()));
+                    }
+                }
+            }
+        });
+        hot.sort_by(|a, b| b.0.cmp(&a.0));
+        hot.into_iter().take(self.per_tick).map(|(_, k)| k).collect()
+    }
+
+    /// RSEs currently holding (available) data of the dataset, plus the
+    /// subset holding a *complete* copy (every file) — the unit the paper
+    /// counts as "how many replicas already exist".
+    fn holding_rses(&self, dataset: &DidKey) -> (Vec<String>, Vec<String>) {
+        let cat = &self.ctx.catalog;
+        let files = cat.resolve_files(dataset);
+        let mut per_rse: BTreeMap<String, usize> = BTreeMap::new();
+        for f in &files {
+            for r in cat.available_replicas(&f.key) {
+                *per_rse.entry(r.rse).or_insert(0) += 1;
+            }
+        }
+        let any: Vec<String> = per_rse.keys().cloned().collect();
+        let full: Vec<String> = per_rse
+            .iter()
+            .filter(|(_, n)| **n == files.len() && !files.is_empty())
+            .map(|(r, _)| r.clone())
+            .collect();
+        (any, full)
+    }
+
+    /// Build the candidate feature matrix for a dataset. Returns
+    /// (rse names, features row-major, mask).
+    pub fn build_features(
+        &self,
+        dataset: &DidKey,
+        now: EpochMs,
+    ) -> (Vec<String>, Vec<f32>, Vec<f32>) {
+        let cat = &self.ctx.catalog;
+        let (holding, full_holders) = self.holding_rses(dataset);
+        let popularity = cat
+            .popularity
+            .get(dataset)
+            .map(|p| p.window_accesses)
+            .unwrap_or(0) as f32;
+        let mut names = Vec::new();
+        let mut features = Vec::new();
+        let mut mask = Vec::new();
+        // Queued requests per destination RSE (queue-pressure signal).
+        let mut queued: BTreeMap<String, u32> = BTreeMap::new();
+        for id in cat.requests_by_state.get(&RequestState::Queued) {
+            if let Some(r) = cat.requests.get(&id) {
+                *queued.entry(r.dst_rse).or_insert(0) += 1;
+            }
+        }
+        let ds_bytes = cat.did_bytes(dataset);
+        for rse in cat.list_rses() {
+            if rse.is_tape || !rse.availability_write || full_holders.contains(&rse.name) {
+                continue;
+            }
+            // Free-space feature: log-scaled absolute headroom (a big empty
+            // site beats a small empty site); candidates that cannot hold
+            // the dataset with 2x headroom are masked out entirely.
+            let free_bytes = match self.ctx.fleet.get(&rse.name) {
+                Some(sys) => sys.free(),
+                None => 100 * GB, // unknown backend: assume roomy
+            };
+            if free_bytes < ds_bytes.saturating_mul(2) {
+                continue;
+            }
+            let free_feat = (free_bytes as f32).max(1.0).log10() / 12.0;
+            // Best observed bandwidth from any holding site into this RSE.
+            let mut best_bw = 0f32;
+            let mut best_dist = 6u32;
+            for src in &holding {
+                let src_site = cat.get_rse(src).map(|r| r.site().to_string()).unwrap_or_default();
+                if let Some(bps) = self.ctx.net.observed_bps(&src_site, rse.site()) {
+                    best_bw = best_bw.max(bps as f32);
+                }
+                if let Some(d) = cat.distance(src, &rse.name) {
+                    best_dist = best_dist.min(d);
+                }
+            }
+            let recent = self
+                .recent_per_rse
+                .get(&rse.name)
+                .filter(|(t, _)| now - *t < DAY_MS)
+                .map(|(_, n)| *n)
+                .unwrap_or(0) as f32;
+            let load = self
+                .ctx
+                .net
+                .active_on(
+                    holding.first().map(|s| s.as_str()).unwrap_or(""),
+                    rse.site(),
+                ) as f32;
+            names.push(rse.name.clone());
+            features.extend_from_slice(&[
+                free_feat,                          // f0: log free space
+                (best_bw / GB as f32).min(4.0),     // f1: observed bw (GB/s)
+                (queued.get(&rse.name).copied().unwrap_or(0) as f32 / 100.0).min(4.0), // f2
+                (recent / 10.0).min(4.0),           // f3: recent placements
+                (popularity / 20.0).min(4.0),       // f4: dataset popularity
+                (6.0 - best_dist as f32) / 5.0,     // f5: closeness
+                (load / 20.0).min(4.0),             // f6: link load
+                1.0,                                // f7: bias
+            ]);
+            mask.push(1.0);
+        }
+        (names, features, mask)
+    }
+
+    /// Run placement for one dataset; returns the created rule id.
+    pub fn place(&mut self, dataset: &DidKey, now: EpochMs) -> Result<Option<u64>> {
+        let cat = self.ctx.catalog.clone();
+        let (holding, full_holders) = self.holding_rses(dataset);
+        // The cap counts complete dataset replicas (the paper's "how many
+        // replicas already exist below a configurable threshold").
+        if holding.is_empty() || full_holders.len() >= self.max_replicas {
+            return Ok(None);
+        }
+        let (names, features, mask) = self.build_features(dataset, now);
+        if names.is_empty() {
+            return Ok(None);
+        }
+        let weights = self.weights;
+        let (_scores, probs) = self.scorer.score(&features, &weights, &mask)?;
+        let best = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, p)| (i, *p));
+        let Some((idx, prob)) = best else { return Ok(None) };
+        let rse = names[idx].clone();
+        let rule_id = cat.add_rule(
+            RuleSpec::new("root", dataset.clone(), &rse, 1)
+                .with_lifetime(self.lifetime_ms)
+                .with_activity("Dynamic Placement"),
+        )?;
+        self.last_placed.insert(dataset.clone(), now);
+        let entry = self.recent_per_rse.entry(rse.clone()).or_insert((now, 0));
+        if now - entry.0 > DAY_MS {
+            *entry = (now, 1);
+        } else {
+            entry.1 += 1;
+        }
+        self.decisions.push(Decision {
+            at: now,
+            dataset: dataset.clone(),
+            chosen_rse: rse.clone(),
+            prob,
+            rule_id,
+            candidates: names.len(),
+        });
+        cat.notify(
+            "c3po-decision",
+            Json::obj()
+                .with("scope", dataset.scope.as_str())
+                .with("name", dataset.name.as_str())
+                .with("rse", rse.as_str())
+                .with("prob", prob as f64)
+                .with("rule_id", rule_id),
+        );
+        cat.metrics.incr("c3po.placements", 1);
+        Ok(Some(rule_id))
+    }
+}
+
+impl Daemon for C3po {
+    fn name(&self) -> &'static str {
+        "c3po"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        60_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        let hot = self.hot_datasets(now);
+        let mut placed = 0;
+        for ds in hot {
+            match self.place(&ds, now) {
+                Ok(Some(_)) => placed += 1,
+                Ok(None) => {
+                    // cap reached or no candidates: cool down anyway so we
+                    // do not rescan it every tick
+                    self.last_placed.insert(ds, now);
+                }
+                Err(e) => log::warn!("c3po: placement failed for {ds}: {e}"),
+            }
+        }
+        placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rse::Rse;
+    use crate::daemons::conveyor::tests::{rig, seed_file};
+    use crate::storagesim::{StorageKind, StorageSystem};
+
+    fn hot_rig() -> (Ctx, DidKey) {
+        let (ctx, cat) = rig();
+        let now = cat.now();
+        // extra candidate RSEs with differing free space
+        for (name, cap) in [("BIG-DISK", 1_000_000_000u64), ("SMALL-DISK", 1_000u64)] {
+            cat.add_rse(Rse::new(name, now).with_attr("site", name)).unwrap();
+            ctx.fleet.add(StorageSystem::new(name, StorageKind::Disk, cap));
+        }
+        cat.add_dataset("data18", "hot.ds", "root").unwrap();
+        let ds = DidKey::new("data18", "hot.ds");
+        let f = seed_file(&ctx, "hot.f1", 500);
+        cat.attach(&ds, &f).unwrap();
+        // make it popular
+        for _ in 0..5 {
+            cat.touch_replica("SRC-DISK", &f);
+        }
+        (ctx, ds)
+    }
+
+    #[test]
+    fn popular_dataset_gets_placed_on_spacious_rse() {
+        let (ctx, ds) = hot_rig();
+        let cat = ctx.catalog.clone();
+        let mut c3po = C3po::new(ctx, Box::new(RefScorer));
+        let placed = c3po.tick(cat.now());
+        assert_eq!(placed, 1);
+        let d = &c3po.decisions[0];
+        assert_eq!(d.dataset, ds);
+        // free-space weight dominates → BIG-DISK (SMALL-DISK can't even
+        // hold the file, free_frac low)
+        assert_ne!(d.chosen_rse, "SMALL-DISK");
+        let rule = cat.get_rule(d.rule_id).unwrap();
+        assert_eq!(rule.activity, "Dynamic Placement");
+        assert!(rule.expires_at.is_some(), "dynamic replicas have lifetimes");
+    }
+
+    #[test]
+    fn cooldown_prevents_thrash() {
+        let (ctx, _ds) = hot_rig();
+        let cat = ctx.catalog.clone();
+        let mut c3po = C3po::new(ctx, Box::new(RefScorer));
+        assert_eq!(c3po.tick(cat.now()), 1);
+        assert_eq!(c3po.tick(cat.now()), 0, "cooldown holds");
+    }
+
+    #[test]
+    fn unpopular_dataset_ignored() {
+        let (ctx, cat) = rig();
+        cat.add_dataset("data18", "cold.ds", "root").unwrap();
+        let ds = DidKey::new("data18", "cold.ds");
+        let f = seed_file(&ctx, "cold.f1", 100);
+        cat.attach(&ds, &f).unwrap();
+        cat.touch_replica("SRC-DISK", &f); // 1 access < threshold 3
+        let mut c3po = C3po::new(ctx, Box::new(RefScorer));
+        assert_eq!(c3po.tick(cat.now()), 0);
+    }
+
+    #[test]
+    fn max_replica_cap_respected() {
+        let (ctx, ds) = hot_rig();
+        let cat = ctx.catalog.clone();
+        let mut c3po = C3po::new(ctx.clone(), Box::new(RefScorer));
+        c3po.max_replicas = 1; // already holding on SRC-DISK
+        assert_eq!(c3po.tick(cat.now()), 0);
+        let _ = ds;
+    }
+
+    #[test]
+    fn pjrt_and_ref_scorers_agree_on_decision() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let (ctx, ds) = hot_rig();
+        let cat = ctx.catalog.clone();
+        let now = cat.now();
+        let probe = C3po::new(ctx.clone(), Box::new(RefScorer));
+        let (names, features, mask) = probe.build_features(&ds, now);
+        let mut ref_s = RefScorer;
+        let mut pjrt_s = PjrtScorer::load_default().unwrap();
+        let (_, p_ref) = ref_s.score(&features, &DEFAULT_WEIGHTS, &mask).unwrap();
+        let (_, p_pjrt) = pjrt_s.score(&features, &DEFAULT_WEIGHTS, &mask).unwrap();
+        let argmax = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmax(&p_ref), argmax(&p_pjrt), "{names:?}");
+    }
+}

@@ -1,0 +1,368 @@
+//! BB8 — automated data rebalancing (paper §6.2), three modes:
+//! * **background**: equalize the primary/secondary byte ratio across
+//!   participating RSEs (attribute `bb8=true`), preferring old, unpopular,
+//!   long-lifetime rules;
+//! * **decommission**: drain an RSE entirely, honouring each rule's
+//!   original RSE expression;
+//! * **manual**: move a requested volume away from an RSE.
+//!
+//! Moves are expressed as new linked rules ("the service links the
+//! original replication rule with the newly created one and only allows
+//! the removal of the original rule once the data has been fully
+//! replicated"); a per-day volume cap protects the network.
+
+use std::collections::BTreeMap;
+
+use crate::common::clock::{DAY_MS, EpochMs};
+use crate::common::error::{Result, RucioError};
+use crate::core::rules_api::RuleSpec;
+use crate::core::types::{LockState, Rule, RuleState};
+
+use crate::daemons::{Ctx, Daemon};
+
+/// An in-flight move: delete `old_rule` once `new_rule` is OK.
+#[derive(Debug, Clone)]
+pub struct Move {
+    pub old_rule: u64,
+    pub new_rule: u64,
+    pub bytes: u64,
+    pub started_at: EpochMs,
+}
+
+pub struct Bb8 {
+    pub ctx: Ctx,
+    /// Max bytes moved per day (config `bb8.max_daily_bytes`).
+    pub max_daily_bytes: u64,
+    day_start: EpochMs,
+    moved_today: u64,
+    pub in_flight: Vec<Move>,
+    pub completed_moves: u64,
+}
+
+impl Bb8 {
+    pub fn new(ctx: Ctx) -> Self {
+        let max_daily =
+            ctx.catalog.cfg.get_bytes("bb8", "max_daily_bytes", 50 * crate::common::units::TB);
+        Bb8 {
+            ctx,
+            max_daily_bytes: max_daily,
+            day_start: 0,
+            moved_today: 0,
+            in_flight: Vec::new(),
+            completed_moves: 0,
+        }
+    }
+
+    /// Rules wholly resident (all locks OK) on `rse`, rebalancing-eligible:
+    /// not already linked, expression not pinning that single RSE.
+    fn movable_rules(&self, rse: &str) -> Vec<Rule> {
+        let cat = &self.ctx.catalog;
+        let mut out = Vec::new();
+        cat.rules.for_each(|r| {
+            if r.state != RuleState::Ok || r.child_rule.is_some() {
+                return;
+            }
+            // the expression must allow other destinations
+            if r.rse_expression == rse {
+                return;
+            }
+            let locks = cat.locks_by_rule.get(&r.id);
+            if locks.is_empty() {
+                return;
+            }
+            let all_here = locks
+                .iter()
+                .filter_map(|k| cat.locks.get(k))
+                .all(|l| l.rse == rse && l.state == LockState::Ok);
+            if all_here {
+                out.push(r.clone());
+            }
+        });
+        // Prefer old, unpopular data (paper: "older, unpopular data, with
+        // a long lifetime is preferred").
+        out.sort_by_key(|r| {
+            let pop = self
+                .ctx
+                .catalog
+                .popularity
+                .get(&r.did)
+                .map(|p| p.window_accesses)
+                .unwrap_or(0);
+            (pop, r.created_at)
+        });
+        out
+    }
+
+    fn rule_bytes(&self, rule_id: u64) -> u64 {
+        self.ctx
+            .catalog
+            .locks_by_rule
+            .get(&rule_id)
+            .iter()
+            .filter_map(|k| self.ctx.catalog.locks.get(k))
+            .map(|l| l.bytes)
+            .sum()
+    }
+
+    /// Move one rule away from `src_rse`: create the linked child rule on
+    /// `(<original expression>)\SRC`, following the original policy.
+    pub fn move_rule(&mut self, rule: &Rule, src_rse: &str, now: EpochMs) -> Result<u64> {
+        let cat = &self.ctx.catalog;
+        let dest_expr = format!("({})\\{}", rule.rse_expression, src_rse);
+        // Destination must be non-empty.
+        let resolved = cat.resolve_rse_expression(&dest_expr).map_err(|_| {
+            RucioError::InvalidValue(format!(
+                "rule {} has no alternative destination ({dest_expr})",
+                rule.id
+            ))
+        })?;
+        let _ = resolved;
+        let mut spec = RuleSpec::new(&rule.account, rule.did.clone(), &dest_expr, rule.copies)
+            .with_activity("Data Rebalancing");
+        if let Some(exp) = rule.expires_at {
+            spec = spec.with_lifetime((exp - now).max(60_000));
+        }
+        let new_rule = cat.add_rule(spec)?;
+        cat.rules.update(&rule.id, now, |r| r.child_rule = Some(new_rule));
+        let bytes = self.rule_bytes(rule.id);
+        self.in_flight.push(Move { old_rule: rule.id, new_rule, bytes, started_at: now });
+        self.moved_today += bytes;
+        cat.metrics.incr("bb8.moves_started", 1);
+        cat.metrics.incr("bb8.bytes_scheduled", bytes);
+        Ok(new_rule)
+    }
+
+    /// Finish moves whose child rule is OK: delete the original rule
+    /// (freeing the source replicas for the reaper).
+    pub fn finalize_moves(&mut self) -> usize {
+        let cat = self.ctx.catalog.clone();
+        let mut done = 0;
+        let mut remaining = Vec::new();
+        for mv in self.in_flight.drain(..) {
+            match cat.rules.get(&mv.new_rule) {
+                Some(child) if child.state == RuleState::Ok => {
+                    let _ = cat.delete_rule(mv.old_rule);
+                    done += 1;
+                    cat.metrics.incr("bb8.moves_completed", 1);
+                }
+                Some(_) => remaining.push(mv),
+                None => {
+                    // child vanished (expired?) — drop the link
+                    cat.rules.update(&mv.old_rule, cat.now(), |r| r.child_rule = None);
+                }
+            }
+        }
+        self.in_flight = remaining;
+        self.completed_moves += done as u64;
+        done
+    }
+
+    /// Background mode: equalize locked-bytes share across `bb8=true`
+    /// RSEs — move rules off RSEs above the average until the daily cap.
+    pub fn background_pass(&mut self, now: EpochMs) -> usize {
+        let cat = self.ctx.catalog.clone();
+        // locked (primary) bytes per participating RSE
+        let mut primary: BTreeMap<String, u64> = BTreeMap::new();
+        let participants: Vec<String> = cat
+            .list_rses()
+            .into_iter()
+            .filter(|r| r.attr("bb8") == Some("true"))
+            .map(|r| r.name)
+            .collect();
+        if participants.len() < 2 {
+            return 0;
+        }
+        for rse in &participants {
+            primary.insert(rse.clone(), 0);
+        }
+        cat.locks.for_each(|l| {
+            if let Some(v) = primary.get_mut(&l.rse) {
+                *v += l.bytes;
+            }
+        });
+        let avg: u64 = primary.values().sum::<u64>() / participants.len() as u64;
+        let mut started = 0;
+        for (rse, bytes) in primary.iter() {
+            if *bytes <= avg {
+                continue;
+            }
+            let mut excess = *bytes - avg;
+            for rule in self.movable_rules(rse) {
+                if excess == 0 || self.moved_today >= self.max_daily_bytes {
+                    break;
+                }
+                let rb = self.rule_bytes(rule.id);
+                if self.move_rule(&rule, rse, now).is_ok() {
+                    excess = excess.saturating_sub(rb);
+                    started += 1;
+                }
+            }
+        }
+        started
+    }
+
+    /// Decommission mode: drain everything off `rse` (paper: "selects all
+    /// data resident on the RSE and moves it to a different RSE, following
+    /// the original RSE expression policies"). Also disables writes.
+    pub fn decommission(&mut self, rse: &str, now: EpochMs) -> Result<usize> {
+        let cat = self.ctx.catalog.clone();
+        cat.set_rse_availability(rse, true, false, true)?;
+        let mut moved = 0;
+        for rule in self.movable_rules(rse) {
+            if self.move_rule(&rule, rse, now).is_ok() {
+                moved += 1;
+            }
+        }
+        cat.metrics.incr("bb8.decommissions", 1);
+        Ok(moved)
+    }
+
+    /// Manual mode: move ~`bytes` off `rse`.
+    pub fn manual(&mut self, rse: &str, bytes: u64, now: EpochMs) -> Result<usize> {
+        let mut remaining = bytes as i64;
+        let mut moved = 0;
+        for rule in self.movable_rules(rse) {
+            if remaining <= 0 {
+                break;
+            }
+            let rb = self.rule_bytes(rule.id) as i64;
+            if self.move_rule(&rule, rse, now).is_ok() {
+                remaining -= rb;
+                moved += 1;
+            }
+        }
+        Ok(moved)
+    }
+}
+
+impl Daemon for Bb8 {
+    fn name(&self) -> &'static str {
+        "bb8"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        300_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        if now - self.day_start > DAY_MS {
+            self.day_start = now;
+            self.moved_today = 0;
+        }
+        let finalized = self.finalize_moves();
+        let started = if self.moved_today < self.max_daily_bytes {
+            self.background_pass(now)
+        } else {
+            0
+        };
+        finalized + started
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::types::RequestState;
+    use crate::daemons::conveyor::tests::{rig, seed_file};
+
+    /// Build: SRC-DISK over-full with 3 rules, DST-A/DST-B empty, all bb8.
+    fn unbalanced() -> (Ctx, Bb8) {
+        let (ctx, cat) = rig();
+        for rse in ["SRC-DISK", "DST-A", "DST-B"] {
+            cat.set_rse_attribute(rse, "bb8", "true").unwrap();
+        }
+        for i in 0..3 {
+            let f = seed_file(&ctx, &format!("b{i}"), 1000);
+            cat.add_rule(
+                RuleSpec::new("root", f, "SRC-DISK|DST-A|DST-B", 1), // already satisfied at SRC
+            )
+            .unwrap();
+        }
+        let bb8 = Bb8::new(ctx.clone());
+        (ctx, bb8)
+    }
+
+    fn drive_transfers(ctx: &Ctx) {
+        // complete all queued requests instantly (unit-test shortcut)
+        let cat = &ctx.catalog;
+        loop {
+            let queued = cat.requests_by_state.get(&RequestState::Queued);
+            if queued.is_empty() {
+                break;
+            }
+            for id in queued {
+                cat.on_transfer_done(id).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn background_equalizes_and_links_rules() {
+        let (ctx, mut bb8) = unbalanced();
+        let cat = ctx.catalog.clone();
+        let started = bb8.background_pass(cat.now());
+        assert!(started >= 1, "moves started");
+        // old rule is linked to the child
+        let mv = bb8.in_flight[0].clone();
+        let old = cat.get_rule(mv.old_rule).unwrap();
+        assert_eq!(old.child_rule, Some(mv.new_rule));
+        // original rule NOT deleted while the child replicates
+        assert_eq!(bb8.finalize_moves(), 0);
+        assert!(cat.get_rule(mv.old_rule).is_ok());
+        // child's destination excludes the source
+        let child = cat.get_rule(mv.new_rule).unwrap();
+        assert!(child.rse_expression.contains("\\SRC-DISK"));
+        // complete transfers → finalize deletes the original
+        drive_transfers(&ctx);
+        let done = bb8.finalize_moves();
+        assert!(done >= 1);
+        assert!(cat.get_rule(mv.old_rule).is_err(), "original removed after move");
+    }
+
+    #[test]
+    fn decommission_drains_and_disables_writes() {
+        let (ctx, mut bb8) = unbalanced();
+        let cat = ctx.catalog.clone();
+        let moved = bb8.decommission("SRC-DISK", cat.now()).unwrap();
+        assert_eq!(moved, 3, "all resident rules scheduled away");
+        assert!(!cat.get_rse("SRC-DISK").unwrap().availability_write);
+        drive_transfers(&ctx);
+        bb8.finalize_moves();
+        // no rule keeps locks on the drained RSE
+        let mut locks_on_src = 0;
+        cat.locks.for_each(|l| {
+            if l.rse == "SRC-DISK" {
+                locks_on_src += 1;
+            }
+        });
+        assert_eq!(locks_on_src, 0);
+    }
+
+    #[test]
+    fn manual_moves_requested_volume() {
+        let (ctx, mut bb8) = unbalanced();
+        let cat = ctx.catalog.clone();
+        let moved = bb8.manual("SRC-DISK", 1500, cat.now()).unwrap();
+        assert_eq!(moved, 2, "two 1000-byte rules cover 1500 bytes");
+    }
+
+    #[test]
+    fn daily_cap_limits_moves() {
+        let (ctx, mut bb8) = unbalanced();
+        bb8.max_daily_bytes = 1000; // one rule's worth
+        let started = bb8.background_pass(ctx.catalog.now());
+        assert_eq!(started, 1);
+    }
+
+    #[test]
+    fn single_rse_expression_rules_not_movable() {
+        let (ctx, cat) = rig();
+        cat.set_rse_attribute("SRC-DISK", "bb8", "true").unwrap();
+        cat.set_rse_attribute("DST-A", "bb8", "true").unwrap();
+        let f = seed_file(&ctx, "pin", 1000);
+        cat.add_rule(RuleSpec::new("root", f, "SRC-DISK", 1)).unwrap();
+        let mut bb8 = Bb8::new(ctx.clone());
+        // pinned rule's expression has no alternative → not movable
+        assert_eq!(bb8.background_pass(cat.now()), 0);
+    }
+}

@@ -1,0 +1,427 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path —
+//! Python never runs at request time.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are lowered with
+//! `return_tuple=True`, so every execution returns one tuple literal that
+//! is unpacked here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::common::error::{Result, RucioError};
+use crate::jsonx::Json;
+
+fn rt_err<E: std::fmt::Display>(what: &'static str) -> impl FnOnce(E) -> RucioError {
+    move |e| RucioError::RuntimeError(format!("{what}: {e}"))
+}
+
+/// Artifact manifest (artifacts/manifest.json).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub placement_n: usize,
+    pub n_features: usize,
+    pub t3c_batch: usize,
+    pub t3c_hidden: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+        Ok(Manifest {
+            placement_n: j.req_u64("placement_n")? as usize,
+            n_features: j.req_u64("n_features")? as usize,
+            t3c_batch: j.req_u64("t3c_batch")? as usize,
+            t3c_hidden: j.req_u64("t3c_hidden")? as usize,
+        })
+    }
+}
+
+/// T³C MLP parameters (mirrors `model.t3c_init` layout).
+#[derive(Debug, Clone)]
+pub struct T3cParams {
+    pub w1: Vec<f32>, // (d, h) row-major
+    pub b1: Vec<f32>, // (h)
+    pub w2: Vec<f32>, // (h, 1)
+    pub b2: Vec<f32>, // (1)
+    pub d: usize,
+    pub h: usize,
+}
+
+impl T3cParams {
+    /// Load the Python-initialized parameters (artifacts/t3c_params.bin).
+    pub fn load(dir: &Path, d: usize, h: usize) -> Result<T3cParams> {
+        let bytes = std::fs::read(dir.join("t3c_params.bin"))?;
+        let total = d * h + h + h + 1;
+        if bytes.len() != total * 4 {
+            return Err(RucioError::RuntimeError(format!(
+                "t3c_params.bin: expected {} floats, got {} bytes",
+                total,
+                bytes.len()
+            )));
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let (w1, rest) = floats.split_at(d * h);
+        let (b1, rest) = rest.split_at(h);
+        let (w2, b2) = rest.split_at(h);
+        Ok(T3cParams {
+            w1: w1.to_vec(),
+            b1: b1.to_vec(),
+            w2: w2.to_vec(),
+            b2: b2.to_vec(),
+            d,
+            h,
+        })
+    }
+}
+
+/// The PJRT runtime holding compiled executables.
+///
+/// NOT `Sync` (PJRT handles are raw pointers); each daemon owns its own
+/// `Runtime` instance — compilation is cheap at these shapes.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    execs: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+// SAFETY: `Runtime` is moved wholesale into a single daemon thread and
+// never shared (`!Sync` stays). The inner `Rc` is never cloned across
+// threads and PJRT CPU handles are not thread-affine, so transferring
+// ownership between threads is sound.
+unsafe impl Send for Runtime {}
+
+/// Default artifact directory (repo-relative, overridable via env).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("RUCIO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// True when `make artifacts` has been run.
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+impl Runtime {
+    /// Load + compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
+        let mut execs = BTreeMap::new();
+        for name in ["placement_score", "t3c_predict", "t3c_train_step"] {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| RucioError::RuntimeError("non-utf8 path".into()))?,
+            )
+            .map_err(rt_err("parse hlo"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(rt_err("compile"))?;
+            execs.insert(name.to_string(), exe);
+        }
+        Ok(Runtime { client, execs, manifest, dir: dir.to_path_buf() })
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&default_artifact_dir())
+    }
+
+    /// Execute an artifact on f32 tensors: `(data, shape)` per input.
+    /// Returns the flattened f32 data of every tuple output element.
+    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| RucioError::RuntimeError(format!("unknown artifact {name}")))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(rt_err("reshape"))?;
+            literals.push(lit);
+        }
+        let mut result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(rt_err("execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(rt_err("fetch"))?;
+        let tuple = result.decompose_tuple().map_err(rt_err("untuple"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>().map_err(rt_err("to_vec"))?);
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // typed wrappers
+    // ------------------------------------------------------------------
+
+    /// C3PO placement scoring: features [n×d] (row-major), weights [d],
+    /// mask [n]; pads to the artifact shape. Returns (scores, probs),
+    /// truncated back to the caller's n.
+    pub fn placement_score(
+        &self,
+        features: &[f32],
+        weights: &[f32],
+        mask: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (n_art, d) = (self.manifest.placement_n, self.manifest.n_features);
+        let n = mask.len();
+        if n > n_art {
+            return Err(RucioError::RuntimeError(format!(
+                "too many candidates: {n} > artifact capacity {n_art}"
+            )));
+        }
+        if features.len() != n * d || weights.len() != d {
+            return Err(RucioError::RuntimeError("feature shape mismatch".into()));
+        }
+        let mut f_pad = vec![0f32; n_art * d];
+        f_pad[..n * d].copy_from_slice(features);
+        let mut m_pad = vec![0f32; n_art];
+        m_pad[..n].copy_from_slice(mask);
+        let out = self.run_f32(
+            "placement_score",
+            &[(&f_pad, &[n_art, d]), (weights, &[d]), (&m_pad, &[n_art])],
+        )?;
+        let scores = out[0][..n].to_vec();
+        let probs = out[1][..n].to_vec();
+        Ok((scores, probs))
+    }
+
+    /// T³C forward: predicts log-durations for up to `t3c_batch` feature
+    /// rows (padded internally).
+    pub fn t3c_predict(&self, params: &T3cParams, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let (b, d, h) =
+            (self.manifest.t3c_batch, self.manifest.n_features, self.manifest.t3c_hidden);
+        if rows > b || x.len() != rows * d {
+            return Err(RucioError::RuntimeError(format!(
+                "t3c_predict: rows={rows} (cap {b}), xlen={}",
+                x.len()
+            )));
+        }
+        let mut x_pad = vec![0f32; b * d];
+        x_pad[..rows * d].copy_from_slice(x);
+        let out = self.run_f32(
+            "t3c_predict",
+            &[
+                (&params.w1, &[d, h]),
+                (&params.b1, &[h]),
+                (&params.w2, &[h, 1]),
+                (&params.b2, &[1]),
+                (&x_pad, &[b, d]),
+            ],
+        )?;
+        Ok(out[0][..rows].to_vec())
+    }
+
+    /// One online SGD step on a (padded) batch; returns (loss, params').
+    pub fn t3c_train_step(
+        &self,
+        params: &T3cParams,
+        x: &[f32],
+        y: &[f32],
+        rows: usize,
+        lr: f32,
+    ) -> Result<(f32, T3cParams)> {
+        let (b, d, h) =
+            (self.manifest.t3c_batch, self.manifest.n_features, self.manifest.t3c_hidden);
+        if rows > b || rows == 0 {
+            return Err(RucioError::RuntimeError(format!("bad batch rows={rows}")));
+        }
+        let mut x_pad = vec![0f32; b * d];
+        x_pad[..rows * d].copy_from_slice(x);
+        let mut y_pad = vec![0f32; b];
+        y_pad[..rows].copy_from_slice(y);
+        let mut m_pad = vec![0f32; b];
+        m_pad[..rows].iter_mut().for_each(|v| *v = 1.0);
+        let lr_arr = [lr];
+        let out = self.run_f32(
+            "t3c_train_step",
+            &[
+                (&params.w1, &[d, h]),
+                (&params.b1, &[h]),
+                (&params.w2, &[h, 1]),
+                (&params.b2, &[1]),
+                (&x_pad, &[b, d]),
+                (&y_pad, &[b]),
+                (&m_pad, &[b]),
+                (&lr_arr, &[]),
+            ],
+        )?;
+        let loss = out[0][0];
+        let new = T3cParams {
+            w1: out[1].clone(),
+            b1: out[2].clone(),
+            w2: out[3].clone(),
+            b2: out[4].clone(),
+            d,
+            h,
+        };
+        Ok((loss, new))
+    }
+}
+
+/// Pure-Rust reference scorer — mirror of `kernels/ref.py`. Used as the
+/// fallback when artifacts are not built, and as the ablation baseline
+/// (`benches/abl_scorer.rs`).
+pub fn ref_placement_score(
+    features: &[f32],
+    weights: &[f32],
+    mask: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let d = weights.len();
+    let n = mask.len();
+    let mut scores = vec![0f32; n];
+    for i in 0..n {
+        let row = &features[i * d..(i + 1) * d];
+        let s: f32 = row.iter().zip(weights).map(|(a, b)| a * b).sum();
+        scores[i] = if mask[i] > 0.5 { s } else { -1e30 };
+    }
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs = vec![0f32; n];
+    let mut z = 0f32;
+    for i in 0..n {
+        if mask[i] > 0.5 {
+            probs[i] = (scores[i] - m).exp();
+            z += probs[i];
+        }
+    }
+    if z > 0.0 {
+        probs.iter_mut().for_each(|p| *p /= z);
+    }
+    (scores, probs)
+}
+
+/// Pure-Rust T³C forward (mirror of `ref.mlp_ref`) — fallback predictor.
+pub fn ref_t3c_predict(params: &T3cParams, x: &[f32], rows: usize) -> Vec<f32> {
+    let (d, h) = (params.d, params.h);
+    let mut out = vec![0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut acc = 0f32;
+        for j in 0..h {
+            let mut hj = params.b1[j];
+            for i in 0..d {
+                hj += xr[i] * params.w1[i * h + j];
+            }
+            if hj > 0.0 {
+                acc += hj * params.w2[j];
+            }
+        }
+        out[r] = acc + params.b2[0];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skip() -> bool {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return true;
+        }
+        false
+    }
+
+    #[test]
+    fn ref_scorer_masks_and_normalizes() {
+        let d = 8;
+        let features: Vec<f32> = (0..3 * d).map(|i| (i % 5) as f32).collect();
+        let weights = vec![1.0; d];
+        let mask = vec![1.0, 0.0, 1.0];
+        let (scores, probs) = ref_placement_score(&features, &weights, &mask);
+        assert!(scores[1] < -1e29);
+        assert_eq!(probs[1], 0.0);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pjrt_placement_matches_ref() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::load_default().unwrap();
+        let d = rt.manifest.n_features;
+        let n = 10;
+        let features: Vec<f32> =
+            (0..n * d).map(|i| ((i * 37 % 11) as f32 - 5.0) / 3.0).collect();
+        let weights: Vec<f32> = (0..d).map(|i| (i as f32 - 3.5) / 2.0).collect();
+        let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let (s_pjrt, p_pjrt) = rt.placement_score(&features, &weights, &mask).unwrap();
+        let (s_ref, p_ref) = ref_placement_score(&features, &weights, &mask);
+        for i in 0..n {
+            if mask[i] > 0.5 {
+                assert!((s_pjrt[i] - s_ref[i]).abs() < 1e-3, "score {i}");
+            }
+            assert!((p_pjrt[i] - p_ref[i]).abs() < 1e-4, "prob {i}");
+        }
+    }
+
+    #[test]
+    fn pjrt_t3c_predict_matches_ref() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::load_default().unwrap();
+        let params =
+            T3cParams::load(&rt.dir, rt.manifest.n_features, rt.manifest.t3c_hidden).unwrap();
+        let rows = 5;
+        let x: Vec<f32> = (0..rows * params.d)
+            .map(|i| ((i * 17 % 13) as f32 - 6.0) / 4.0)
+            .collect();
+        let got = rt.t3c_predict(&params, &x, rows).unwrap();
+        let want = ref_t3c_predict(&params, &x, rows);
+        for i in 0..rows {
+            assert!((got[i] - want[i]).abs() < 1e-3, "{i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn pjrt_training_reduces_loss() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::load_default().unwrap();
+        let mut params =
+            T3cParams::load(&rt.dir, rt.manifest.n_features, rt.manifest.t3c_hidden).unwrap();
+        let d = params.d;
+        let rows = rt.manifest.t3c_batch;
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        let mut seed = 12345u64;
+        for step in 0..60 {
+            let mut x = vec![0f32; rows * d];
+            let mut y = vec![0f32; rows];
+            for r in 0..rows {
+                let mut s = 0f32;
+                for i in 0..d {
+                    seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    let v = ((seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5;
+                    x[r * d + i] = v;
+                    s += v;
+                }
+                y[r] = s / 2.0;
+            }
+            let (loss, new_params) = rt.t3c_train_step(&params, &x, &y, rows, 0.05).unwrap();
+            params = new_params;
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first * 0.5, "no learning via PJRT: {first} -> {last}");
+    }
+}

@@ -1,0 +1,248 @@
+//! Grid topology builder: the Fig-8 world — 12 regions (CA, CERN, DE, ES,
+//! FR, IT, ND, NL, RU, TW, UK, US), Tier-0/1/2 sites with disk + tape,
+//! LHCOPN/LHCONE-like links whose per-pair quality *causes* the paper's
+//! efficiency-matrix structure, and RSE distances derived from bandwidth.
+
+use std::sync::Arc;
+
+use crate::common::clock::Clock;
+use crate::common::config::Config;
+use crate::common::units::{GB, TB};
+use crate::core::rse::Rse;
+use crate::core::subscriptions::{SubscriptionFilter, SubscriptionRule};
+use crate::core::types::AccountType;
+use crate::core::Catalog;
+use crate::daemons::Ctx;
+use crate::ftssim::FtsServer;
+use crate::mq::Broker;
+use crate::netsim::{Link, Network};
+use crate::storagesim::{FailurePolicy, Fleet, StorageKind, StorageSystem};
+
+/// The Fig-8 regions.
+pub const REGIONS: [&str; 12] =
+    ["CA", "CERN", "DE", "ES", "FR", "IT", "ND", "NL", "RU", "TW", "UK", "US"];
+
+/// Per-region transfer reliability personalities — tuned so the simulated
+/// efficiency matrix reproduces the paper's *structure* (strong CERN/CA/
+/// ND/RU rows, weak DE→FR / ES / IT→US cells). These multiply pairwise.
+fn region_reliability(region: &str) -> f64 {
+    match region {
+        "CERN" => 0.995,
+        "CA" | "ND" | "RU" | "TW" => 0.98,
+        "FR" | "NL" | "UK" => 0.96,
+        "IT" => 0.93,
+        "DE" => 0.91,
+        "ES" | "US" => 0.90,
+        _ => 0.95,
+    }
+}
+
+/// Scale knobs for the simulated grid.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// Tier-2 disk RSEs per region (besides the T1 disk+tape).
+    pub t2_per_region: usize,
+    pub disk_capacity: u64,
+    pub tape_capacity: u64,
+    /// Storage-level failure injection (drives part of the error rates).
+    pub storage_flakiness: f64,
+    /// Number of redundant FTS servers (paper: CERN + US + UK).
+    pub fts_servers: usize,
+    pub seed: u64,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec {
+            t2_per_region: 2,
+            disk_capacity: 50 * TB,
+            tape_capacity: 400 * TB,
+            storage_flakiness: 0.02,
+            fts_servers: 3,
+            seed: 42,
+        }
+    }
+}
+
+/// Build the full simulated deployment: catalog (with RSEs, accounts,
+/// subscriptions), storage fleet, network, FTS servers, broker.
+pub fn build_grid(spec: &GridSpec, clock: Clock, cfg: Config) -> Ctx {
+    let catalog = Arc::new(Catalog::new(clock, cfg));
+    let fleet = Arc::new(Fleet::new());
+    let net = Arc::new(Network::new());
+    let broker = Broker::new();
+    let now = catalog.now();
+
+    // ---- accounts + scopes
+    for (acc, t) in [
+        ("prod", AccountType::Service),
+        ("tzero", AccountType::Service),
+        ("alice", AccountType::User),
+        ("bob", AccountType::User),
+    ] {
+        catalog.add_account(acc, t, &format!("{acc}@example.org")).unwrap();
+    }
+    catalog.set_admin("prod", true).unwrap();
+    catalog.set_admin("tzero", true).unwrap();
+    for scope in ["data18", "mc20"] {
+        catalog.add_scope(scope, "prod").unwrap();
+    }
+
+    // ---- RSEs + storage
+    let policy = FailurePolicy {
+        write_fail: spec.storage_flakiness,
+        read_fail: spec.storage_flakiness / 2.0,
+        corrupt: spec.storage_flakiness / 20.0,
+        delete_fail: spec.storage_flakiness * 2.0,
+        ..Default::default()
+    };
+    let add_rse = |name: &str, region: &str, tier: &str, tape: bool, cap: u64| {
+        let mut rse = Rse::new(name, now)
+            .with_attr("region", region)
+            .with_attr("country", region)
+            .with_attr("tier", tier)
+            .with_attr("site", name)
+            .with_attr("type", if tape { "tape" } else { "disk" });
+        if tape {
+            rse = rse.with_tape();
+        }
+        catalog.add_rse(rse).unwrap();
+        let kind = if tape { StorageKind::Tape } else { StorageKind::Disk };
+        fleet.add(StorageSystem::new(name, kind, cap).with_policy(policy.clone()));
+    };
+
+    for region in REGIONS {
+        if region == "CERN" {
+            add_rse("CERN-PROD", region, "0", false, spec.disk_capacity * 4);
+            add_rse("CERN-TAPE", region, "0", true, spec.tape_capacity * 2);
+            continue;
+        }
+        add_rse(&format!("{region}-T1-DISK"), region, "1", false, spec.disk_capacity * 2);
+        add_rse(&format!("{region}-T1-TAPE"), region, "1", true, spec.tape_capacity);
+        for i in 1..=spec.t2_per_region {
+            add_rse(&format!("{region}-T2-{i}"), region, "2", false, spec.disk_capacity);
+        }
+    }
+
+    // ---- network: per-site links with region personalities
+    let rses = catalog.list_rses();
+    for a in &rses {
+        for b in &rses {
+            if a.name == b.name {
+                continue;
+            }
+            let (ra, rb) = (
+                a.attr("region").unwrap().to_string(),
+                b.attr("region").unwrap().to_string(),
+            );
+            let quality = region_reliability(&ra) * region_reliability(&rb);
+            let (bw, lat) = if ra == rb {
+                (100 * GB / 8, 5) // intra-region
+            } else if ra == "CERN" || rb == "CERN" {
+                (100 * GB / 8, 15) // LHCOPN
+            } else if a.attr("tier") == Some("1") && b.attr("tier") == Some("1") {
+                (100 * GB / 8, 40) // T1 mesh over LHCONE
+            } else {
+                (40 * GB / 8, 60) // institute links
+            };
+            net.set_link(a.site(), b.site(), Link::new(bw, lat, quality));
+        }
+    }
+    // seed distances from nominal bandwidth
+    let mut samples: Vec<(String, String, f64)> = Vec::new();
+    for a in &rses {
+        for b in &rses {
+            if a.name != b.name {
+                let l = net.link(a.site(), b.site());
+                samples.push((a.site().to_string(), b.site().to_string(), l.bandwidth_bps as f64));
+            }
+        }
+    }
+    catalog.update_distances_from_throughput(&samples);
+
+    // ---- standing subscriptions (paper §2.5): RAW → tape + T1 disk
+    catalog
+        .add_subscription(
+            "raw-tape-archival",
+            "tzero",
+            SubscriptionFilter {
+                scopes: vec!["data18".into()],
+                name_pattern: None,
+                did_types: vec![],
+                meta: [("datatype".to_string(), "RAW".to_string())].into(),
+            },
+            vec![
+                SubscriptionRule {
+                    rse_expression: "tape".into(),
+                    copies: 1,
+                    lifetime_ms: None,
+                    activity: "T0 Export".into(),
+                },
+                SubscriptionRule {
+                    rse_expression: "tier=1&type=disk".into(),
+                    copies: 1,
+                    lifetime_ms: None,
+                    activity: "T0 Export".into(),
+                },
+            ],
+        )
+        .unwrap();
+
+    // ---- FTS servers
+    let fts: Vec<Arc<FtsServer>> = (0..spec.fts_servers.max(1))
+        .map(|i| {
+            Arc::new(FtsServer::new(
+                &format!("fts{}", i + 1),
+                net.clone(),
+                fleet.clone(),
+                Some(broker.clone()),
+            ))
+        })
+        .collect();
+
+    Ctx::new(catalog, fleet, net, fts, broker)
+}
+
+/// Region of an RSE (for the Fig-8/Fig-11 aggregations).
+pub fn region_of(catalog: &Catalog, rse: &str) -> String {
+    catalog
+        .get_rse(rse)
+        .ok()
+        .and_then(|r| r.attr("region").map(|s| s.to_string()))
+        .unwrap_or_else(|| "??".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_expected_shape() {
+        let spec = GridSpec::default();
+        let ctx = build_grid(&spec, Clock::sim_at(0), Config::new());
+        let rses = ctx.catalog.list_rses();
+        // CERN: 2; 11 other regions: 2 + t2_per_region each
+        assert_eq!(rses.len(), 2 + 11 * (2 + spec.t2_per_region));
+        assert!(ctx.fleet.get("CERN-PROD").is_some());
+        assert!(ctx.fleet.get("DE-T1-TAPE").is_some());
+        // expressions over the grid resolve
+        let tapes = ctx.catalog.resolve_rse_expression("tape").unwrap();
+        assert_eq!(tapes.len(), 12); // CERN + 11 T1 tapes
+        let t2_fr = ctx.catalog.resolve_rse_expression("tier=2&region=FR").unwrap();
+        assert_eq!(t2_fr.len(), spec.t2_per_region);
+    }
+
+    #[test]
+    fn link_quality_reflects_personalities() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        let good = ctx.net.link("CERN-PROD", "CA-T1-DISK").quality;
+        let bad = ctx.net.link("DE-T1-DISK", "ES-T1-DISK").quality;
+        assert!(good > bad, "CERN→CA ({good}) should beat DE→ES ({bad})");
+    }
+
+    #[test]
+    fn distances_seeded() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        assert!(ctx.catalog.distance("CERN-PROD", "FR-T1-DISK").is_some());
+    }
+}

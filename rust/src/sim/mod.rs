@@ -1,0 +1,8 @@
+//! Simulation: the ATLAS-like grid ([`grid`]), the synthetic workload
+//! generator ([`workload`]), and the discrete-event driver ([`driver`])
+//! that runs the full stack — catalog, daemons, FTS, network, storage —
+//! under virtual time to regenerate the paper's evaluation figures.
+
+pub mod driver;
+pub mod grid;
+pub mod workload;

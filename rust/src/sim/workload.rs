@@ -1,0 +1,340 @@
+//! ATLAS-like workload generator: detector RAW streams, Monte-Carlo /
+//! derivation production chains, and Zipf-skewed user analysis — the
+//! dataflow shape behind Figs 6/10/11 and the §6.1 reuse statistics.
+
+use crate::common::clock::{DAY_MS, EpochMs, HOUR_MS};
+use crate::common::prng::Prng;
+use crate::core::rules_api::RuleSpec;
+use crate::core::types::{DidKey, ReplicaState};
+use crate::daemons::Ctx;
+use crate::storagesim::synthetic_adler32_for;
+
+/// Workload scale knobs (all per simulated day unless noted).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// RAW datasets produced by the detector per day.
+    pub raw_datasets_per_day: usize,
+    /// Files per dataset.
+    pub files_per_dataset: usize,
+    /// Median file size (log-normal sigma 0.5).
+    pub median_file_bytes: u64,
+    /// Derivation jobs per day (RAW → AOD at a T1).
+    pub derivations_per_day: usize,
+    /// User analysis accesses per day (traces; Zipf over recent AODs).
+    pub analysis_accesses_per_day: usize,
+    /// AOD rule lifetime (drives the deletion workload).
+    pub aod_lifetime_ms: i64,
+    /// Days with boosted analysis (conference crunch, paper §5.3:
+    /// "few bursts with the exception of weeks leading up to physics
+    /// conferences") as (start_day, end_day, multiplier).
+    pub burst: Option<(u32, u32, f64)>,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            raw_datasets_per_day: 12,
+            files_per_dataset: 8,
+            median_file_bytes: 2_000_000_000, // 2 GB
+            derivations_per_day: 8,
+            analysis_accesses_per_day: 120,
+            aod_lifetime_ms: 20 * DAY_MS,
+            burst: None,
+            seed: 7,
+        }
+    }
+}
+
+/// Generator state.
+pub struct Workload {
+    pub spec: WorkloadSpec,
+    rng: Prng,
+    raw_count: u64,
+    aod_count: u64,
+    /// Recent AOD datasets (analysis targets), most recent last.
+    pub aods: Vec<DidKey>,
+    /// Recent RAW datasets awaiting derivation.
+    raws: Vec<DidKey>,
+    carry_raw: f64,
+    carry_der: f64,
+    carry_ana: f64,
+}
+
+impl Workload {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        let rng = Prng::new(spec.seed);
+        Workload {
+            spec,
+            rng,
+            raw_count: 0,
+            aod_count: 0,
+            aods: Vec::new(),
+            raws: Vec::new(),
+            carry_raw: 0.0,
+            carry_der: 0.0,
+            carry_ana: 0.0,
+        }
+    }
+
+    /// Advance the workload by `dt_ms` of virtual time at `now`, `day`
+    /// being the simulation day index (for bursts).
+    pub fn step(&mut self, ctx: &Ctx, now: EpochMs, dt_ms: i64, day: u32) {
+        let frac = dt_ms as f64 / DAY_MS as f64;
+        self.carry_raw += self.spec.raw_datasets_per_day as f64 * frac;
+        while self.carry_raw >= 1.0 {
+            self.carry_raw -= 1.0;
+            self.produce_raw(ctx, now);
+        }
+        // Conference crunches surge both analysis reads and the derivation
+        // production feeding them (paper §5.3: "weeks leading up to
+        // physics conferences").
+        let mult = match self.spec.burst {
+            Some((s, e, m)) if day >= s && day < e => m,
+            _ => 1.0,
+        };
+        self.carry_der += self.spec.derivations_per_day as f64 * frac * mult;
+        while self.carry_der >= 1.0 {
+            self.carry_der -= 1.0;
+            self.derive(ctx, now);
+        }
+        self.carry_ana += self.spec.analysis_accesses_per_day as f64 * frac * mult;
+        while self.carry_ana >= 1.0 {
+            self.carry_ana -= 1.0;
+            self.analyze(ctx, now);
+        }
+    }
+
+    fn file_size(&mut self) -> u64 {
+        self.rng.lognormal(self.spec.median_file_bytes as f64, 0.5) as u64
+    }
+
+    /// Detector output: a RAW dataset registered + uploaded at the Tier-0
+    /// (paper §4.2: the Tier-0 facility populates storage, Rucio registers
+    /// for later distribution). Subscriptions then archive it.
+    fn produce_raw(&mut self, ctx: &Ctx, now: EpochMs) {
+        let cat = &ctx.catalog;
+        self.raw_count += 1;
+        let ds_name = format!("raw.run{:06}", self.raw_count);
+        if cat.add_dataset("data18", &ds_name, "tzero").is_err() {
+            return;
+        }
+        let ds = DidKey::new("data18", &ds_name);
+        let _ = cat.set_metadata(&ds, "datatype", "RAW");
+        let t0 = ctx.fleet.get("CERN-PROD");
+        for i in 0..self.spec.files_per_dataset {
+            let fname = format!("{ds_name}.f{i:04}");
+            let bytes = self.file_size();
+            let adler = synthetic_adler32_for(&fname, bytes);
+            if cat.add_file("data18", &fname, "tzero", bytes, &adler, None).is_err() {
+                continue;
+            }
+            let key = DidKey::new("data18", &fname);
+            if let Ok(rep) = cat.add_replica("CERN-PROD", &key, ReplicaState::Available, None) {
+                if let Some(sys) = &t0 {
+                    let _ = sys.put(&rep.pfn, bytes, now);
+                }
+            }
+            let _ = cat.attach(&ds, &key);
+        }
+        let _ = cat.close(&ds);
+        // pin the fresh RAW at the T0 briefly (buffer semantics)
+        let _ = cat.add_rule(
+            RuleSpec::new("tzero", ds.clone(), "CERN-PROD", 1)
+                .with_lifetime(7 * DAY_MS)
+                .with_activity("T0 Export"),
+        );
+        self.raws.push(ds);
+        if self.raws.len() > 200 {
+            self.raws.remove(0);
+        }
+    }
+
+    /// Derivation production: RAW → AOD, output registered where the T1
+    /// processing ran, then consolidated to two T2s with a lifetime.
+    fn derive(&mut self, ctx: &Ctx, now: EpochMs) {
+        let cat = &ctx.catalog;
+        if self.raws.is_empty() {
+            return;
+        }
+        let raw = self.raws[self.rng.range_usize(0, self.raws.len())].clone();
+        self.aod_count += 1;
+        let ds_name = format!("aod.{:06}", self.aod_count);
+        if cat.add_dataset("mc20", &ds_name, "prod").is_err() {
+            return;
+        }
+        let ds = DidKey::new("mc20", &ds_name);
+        let _ = cat.set_metadata(&ds, "datatype", "AOD");
+        // processing site: the T1 disk of a random region
+        let t1s = cat
+            .resolve_rse_expression("tier=1&type=disk")
+            .unwrap_or_default();
+        if t1s.is_empty() {
+            return;
+        }
+        let site = t1s[self.rng.range_usize(0, t1s.len())].clone();
+        let n_files = (self.spec.files_per_dataset / 2).max(1);
+        for i in 0..n_files {
+            let fname = format!("{ds_name}.f{i:04}");
+            let bytes = self.file_size() / 4; // AODs are smaller
+            let adler = synthetic_adler32_for(&fname, bytes);
+            if cat.add_file("mc20", &fname, "prod", bytes, &adler, None).is_err() {
+                continue;
+            }
+            let key = DidKey::new("mc20", &fname);
+            if let Ok(rep) = cat.add_replica(&site, &key, ReplicaState::Available, None) {
+                if let Some(sys) = ctx.fleet.get(&site) {
+                    let _ = sys.put(&rep.pfn, bytes, now);
+                }
+            }
+            let _ = cat.attach(&ds, &key);
+        }
+        let _ = cat.close(&ds);
+        // job input accounting: reading RAW (tape recall pressure occasionally)
+        for f in cat.resolve_files(&raw).into_iter().take(2) {
+            if let Some(rep) = cat.available_replicas(&f.key).first() {
+                crate::daemons::tracer::emit_trace(
+                    &ctx.broker,
+                    now,
+                    "get",
+                    &rep.rse,
+                    &f.key.scope,
+                    &f.key.name,
+                );
+            }
+        }
+        // consolidation rule: 2 T2 copies with lifetime (deletion pressure)
+        let _ = cat.add_rule(
+            RuleSpec::new("prod", ds.clone(), "tier=2", 2)
+                .with_lifetime(self.spec.aod_lifetime_ms)
+                .with_activity("Production"),
+        );
+        self.aods.push(ds);
+        if self.aods.len() > 500 {
+            self.aods.remove(0);
+        }
+    }
+
+    /// User analysis: Zipf-pick a recent AOD and download some files —
+    /// traces feed popularity (→ C3PO + LRU deletion).
+    fn analyze(&mut self, ctx: &Ctx, now: EpochMs) {
+        let cat = &ctx.catalog;
+        if self.aods.is_empty() {
+            return;
+        }
+        // most recent = rank 0 (newest data is hottest)
+        let rank = self.rng.zipf(self.aods.len(), 1.3);
+        let idx = self.aods.len() - 1 - rank;
+        let ds = self.aods[idx].clone();
+        for f in cat.resolve_files(&ds).into_iter().take(3) {
+            if let Some(rep) = cat.available_replicas(&f.key).first() {
+                crate::daemons::tracer::emit_trace(
+                    &ctx.broker,
+                    now,
+                    "download",
+                    &rep.rse,
+                    &f.key.scope,
+                    &f.key.name,
+                );
+            }
+        }
+    }
+
+    /// Occasional tape recall campaign (paper §5.3 tape numbers): request
+    /// a disk copy of an old RAW dataset whose disk replicas are gone.
+    pub fn recall_campaign(&mut self, ctx: &Ctx, _now: EpochMs) {
+        let cat = &ctx.catalog;
+        if self.raws.is_empty() {
+            return;
+        }
+        let raw = self.raws[self.rng.range_usize(0, self.raws.len() / 2 + 1)].clone();
+        let _ = cat.add_rule(
+            RuleSpec::new("prod", raw, "tier=1&type=disk", 1)
+                .with_lifetime(7 * DAY_MS)
+                .with_activity("Staging"),
+        );
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.raw_count, self.aod_count)
+    }
+}
+
+/// Hour-of-day activity modulation (diurnal shape for Fig 6).
+pub fn diurnal_factor(now: EpochMs) -> f64 {
+    let hour = ((now / HOUR_MS) % 24) as f64;
+    1.0 + 0.3 * (2.0 * std::f64::consts::PI * (hour - 14.0) / 24.0).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::clock::Clock;
+    use crate::common::config::Config;
+    use crate::sim::grid::{build_grid, GridSpec};
+
+    #[test]
+    fn raw_production_registers_and_uploads() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        let mut wl = Workload::new(WorkloadSpec::default());
+        wl.produce_raw(&ctx, ctx.catalog.now());
+        let (raws, _) = wl.stats();
+        assert_eq!(raws, 1);
+        let dids = ctx.catalog.list_dids("data18", Some("raw.*"), None, false);
+        assert_eq!(dids.len(), 1 + WorkloadSpec::default().files_per_dataset);
+        assert!(ctx.fleet.get("CERN-PROD").unwrap().file_count() > 0);
+    }
+
+    #[test]
+    fn derivation_follows_raw() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        let mut wl = Workload::new(WorkloadSpec::default());
+        wl.produce_raw(&ctx, 0);
+        wl.derive(&ctx, 0);
+        assert_eq!(wl.aods.len(), 1);
+        // consolidation rule exists with 2 copies
+        let rules = ctx.catalog.list_rules_for_did(&wl.aods[0]);
+        assert_eq!(rules.len(), 1);
+        assert_eq!(rules[0].copies, 2);
+        assert!(rules[0].expires_at.is_some());
+    }
+
+    #[test]
+    fn step_rates_integrate() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        let mut wl = Workload::new(WorkloadSpec {
+            raw_datasets_per_day: 4,
+            derivations_per_day: 2,
+            analysis_accesses_per_day: 0,
+            ..Default::default()
+        });
+        // a full day in 1h steps
+        for h in 0..24 {
+            wl.step(&ctx, h * HOUR_MS, HOUR_MS, 0);
+        }
+        let (raws, aods) = wl.stats();
+        // carry accumulation is float-based: allow the off-by-one ulp case
+        assert!((3..=4).contains(&raws), "raws={raws}");
+        assert!((1..=2).contains(&aods), "aods={aods}");
+    }
+
+    #[test]
+    fn burst_multiplies_analysis() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        let mut wl = Workload::new(WorkloadSpec {
+            raw_datasets_per_day: 1,
+            derivations_per_day: 1,
+            analysis_accesses_per_day: 10,
+            burst: Some((5, 6, 3.0)),
+            ..Default::default()
+        });
+        wl.produce_raw(&ctx, 0);
+        wl.derive(&ctx, 0);
+        let traces_sub = ctx.broker.subscribe("traces", None);
+        wl.step(&ctx, 0, DAY_MS, 0);
+        let normal = ctx.broker.poll("traces", traces_sub, 100_000).len();
+        wl.step(&ctx, DAY_MS, DAY_MS, 5);
+        let burst = ctx.broker.poll("traces", traces_sub, 100_000).len();
+        assert!(burst > normal * 2, "burst {burst} vs normal {normal}");
+    }
+}

@@ -1,0 +1,510 @@
+//! Storage-system simulator — the EOS/dCache/XrootD/StoRM/DPM/CASTOR
+//! substitute (paper §1.3).
+//!
+//! Each [`StorageSystem`] models one site storage endpoint:
+//! * **disk** — immediate reads/writes bounded by capacity;
+//! * **tape** — asynchronous write buffer ("efficient packing of files on
+//!   the magnetic bands") and staged reads through a robot queue with
+//!   mount latency (paper §1.3: "clients will have to wait for the tape
+//!   robot to stage the file");
+//! * failure/corruption injection per-operation (drives suspicious/bad
+//!   replica handling, STUCK rules, and the Fig 8 efficiency structure
+//!   together with [`crate::netsim`]);
+//! * storage dumps (the plain-text file lists "provided periodically by
+//!   the storage administrators", §4.4) for the consistency auditor.
+//!
+//! Files are metadata records (size + checksum), not real bytes — except
+//! that small files can carry real content for the end-user upload/download
+//! paths in the examples. The *checksum* of a synthetic file is a
+//! deterministic function of (pfn, size) so corruption is detectable
+//! exactly like a real Adler-32 mismatch.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::common::checksum;
+use crate::common::clock::EpochMs;
+use crate::common::error::{Result, RucioError};
+
+/// Kind of backend (paper §2.4 / §1.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageKind {
+    Disk,
+    Tape,
+    /// Volatile cache: content may disappear outside Rucio's control
+    /// (paper §2.4 "volatile" RSEs).
+    Volatile,
+}
+
+/// A stored file record.
+#[derive(Debug, Clone)]
+pub struct StoredFile {
+    pub pfn: String,
+    pub bytes: u64,
+    /// Adler-32 hex the storage will report for this file.
+    pub adler32: String,
+    /// Real content for small example files (None for synthetic files).
+    pub content: Option<Vec<u8>>,
+    pub created_at: EpochMs,
+    /// Tape only: file is on a mounted/staged buffer and readable now.
+    pub staged: bool,
+}
+
+/// Expected checksum of a synthetic (metadata-only) file, derived from
+/// the *file name* (last path segment) + size so the same logical file has
+/// the same checksum at every RSE, regardless of the lfn2pfn layout.
+pub fn synthetic_adler32(pfn: &str, bytes: u64) -> String {
+    let base = pfn.rsplit('/').next().unwrap_or(pfn);
+    synthetic_adler32_for(base, bytes)
+}
+
+/// Checksum for a DID name directly (what the catalog registers).
+pub fn synthetic_adler32_for(name: &str, bytes: u64) -> String {
+    let seed = format!("{name}:{bytes}");
+    checksum::adler32_hex(seed.as_bytes())
+}
+
+/// Per-operation failure knobs.
+#[derive(Debug, Clone)]
+pub struct FailurePolicy {
+    /// Probability a write fails outright.
+    pub write_fail: f64,
+    /// Probability a read/stat fails ("storage configuration problems").
+    pub read_fail: f64,
+    /// Probability a write lands corrupted (checksum mismatch later).
+    pub corrupt: f64,
+    /// Probability a delete fails (the paper's deletion "error rate of 10
+    /// to 20 million per month ... mostly ... authorisation").
+    pub delete_fail: f64,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> Self {
+        FailurePolicy { write_fail: 0.0, read_fail: 0.0, corrupt: 0.0, delete_fail: 0.0 }
+    }
+}
+
+struct Inner {
+    files: BTreeMap<String, StoredFile>,
+    used: u64,
+    staging_queue: Vec<(String, EpochMs)>, // (pfn, ready_at)
+    rng_state: u64,
+    // op counters for monitoring
+    writes: u64,
+    reads: u64,
+    deletes: u64,
+    failures: u64,
+}
+
+/// One simulated storage endpoint.
+pub struct StorageSystem {
+    pub name: String,
+    pub kind: StorageKind,
+    pub capacity: u64,
+    pub policy: FailurePolicy,
+    /// Tape robot staging latency (ms) for a cold file.
+    pub stage_latency_ms: i64,
+    inner: Mutex<Inner>,
+}
+
+impl StorageSystem {
+    pub fn new(name: &str, kind: StorageKind, capacity: u64) -> Self {
+        StorageSystem {
+            name: name.to_string(),
+            kind,
+            capacity,
+            policy: FailurePolicy::default(),
+            stage_latency_ms: 4 * 60 * 1000, // 4 min robot mount+seek
+            inner: Mutex::new(Inner {
+                files: BTreeMap::new(),
+                used: 0,
+                staging_queue: Vec::new(),
+                rng_state: 0x5EED,
+                writes: 0,
+                reads: 0,
+                deletes: 0,
+                failures: 0,
+            }),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: FailurePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    fn roll(inner: &mut Inner, p: f64) -> bool {
+        // xorshift64* — deterministic per storage system.
+        let mut x = inner.rng_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        inner.rng_state = x;
+        let u = (x.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64 / (1u64 << 53) as f64;
+        u < p
+    }
+
+    /// Write a synthetic file (metadata only). Fails on capacity, policy,
+    /// or duplicate pfn. Corruption silently stores a wrong checksum.
+    pub fn put(&self, pfn: &str, bytes: u64, now: EpochMs) -> Result<()> {
+        self.put_impl(pfn, bytes, None, now)
+    }
+
+    /// Write a real-content file (example/user paths).
+    pub fn put_bytes(&self, pfn: &str, content: &[u8], now: EpochMs) -> Result<()> {
+        self.put_impl(pfn, content.len() as u64, Some(content.to_vec()), now)
+    }
+
+    fn put_impl(&self, pfn: &str, bytes: u64, content: Option<Vec<u8>>, now: EpochMs) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.writes += 1;
+        if Self::roll(&mut inner, self.policy.write_fail) {
+            inner.failures += 1;
+            return Err(RucioError::StorageError(format!("{}: write failed", self.name)));
+        }
+        if inner.files.contains_key(pfn) {
+            return Err(RucioError::Duplicate(format!("{}: pfn exists: {pfn}", self.name)));
+        }
+        if inner.used + bytes > self.capacity {
+            inner.failures += 1;
+            return Err(RucioError::NoSpaceLeft(self.name.clone()));
+        }
+        let mut adler = match &content {
+            Some(c) => checksum::adler32_hex(c),
+            None => synthetic_adler32(pfn, bytes),
+        };
+        if Self::roll(&mut inner, self.policy.corrupt) {
+            // Corrupted write: stored checksum differs from the expected one.
+            adler = checksum::adler32_hex(format!("CORRUPT:{pfn}").as_bytes());
+        }
+        let staged = self.kind != StorageKind::Tape; // tape files start cold
+        inner.used += bytes;
+        inner.files.insert(
+            pfn.to_string(),
+            StoredFile {
+                pfn: pfn.to_string(),
+                bytes,
+                adler32: adler,
+                content,
+                created_at: now,
+                staged,
+            },
+        );
+        Ok(())
+    }
+
+    /// stat(): existence + size + checksum, honoring read-failure policy.
+    pub fn stat(&self, pfn: &str) -> Result<StoredFile> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.reads += 1;
+        if Self::roll(&mut inner, self.policy.read_fail) {
+            inner.failures += 1;
+            return Err(RucioError::StorageError(format!("{}: read failed", self.name)));
+        }
+        inner
+            .files
+            .get(pfn)
+            .cloned()
+            .ok_or_else(|| RucioError::SourceNotFound(format!("{}:{pfn}", self.name)))
+    }
+
+    /// Read for transfer/download. Tape requires the file to be staged.
+    pub fn get(&self, pfn: &str) -> Result<StoredFile> {
+        let f = self.stat(pfn)?;
+        if self.kind == StorageKind::Tape && !f.staged {
+            return Err(RucioError::StorageError(format!(
+                "{}: {pfn} not staged (tape cold read)",
+                self.name
+            )));
+        }
+        Ok(f)
+    }
+
+    /// Request staging of a tape file; readable after the robot latency.
+    pub fn stage(&self, pfn: &str, now: EpochMs) -> Result<EpochMs> {
+        if self.kind != StorageKind::Tape {
+            return Ok(now);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.files.contains_key(pfn) {
+            return Err(RucioError::SourceNotFound(format!("{}:{pfn}", self.name)));
+        }
+        // Queue depth adds linear delay (robot contention).
+        let ready = now + self.stage_latency_ms + (inner.staging_queue.len() as i64) * 30_000;
+        inner.staging_queue.push((pfn.to_string(), ready));
+        Ok(ready)
+    }
+
+    /// Advance staging: mark files whose ready time has passed as staged.
+    pub fn tick(&self, now: EpochMs) {
+        let mut inner = self.inner.lock().unwrap();
+        let due: Vec<String> = inner
+            .staging_queue
+            .iter()
+            .filter(|(_, t)| *t <= now)
+            .map(|(p, _)| p.clone())
+            .collect();
+        inner.staging_queue.retain(|(_, t)| *t > now);
+        for pfn in due {
+            if let Some(f) = inner.files.get_mut(&pfn) {
+                f.staged = true;
+            }
+        }
+    }
+
+    pub fn delete(&self, pfn: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.deletes += 1;
+        if Self::roll(&mut inner, self.policy.delete_fail) {
+            inner.failures += 1;
+            return Err(RucioError::StorageError(format!("{}: delete denied", self.name)));
+        }
+        match inner.files.remove(pfn) {
+            Some(f) => {
+                inner.used -= f.bytes;
+                Ok(())
+            }
+            None => Err(RucioError::SourceNotFound(format!("{}:{pfn}", self.name))),
+        }
+    }
+
+    /// Out-of-band removal (volatile caches, dark-file injection in tests):
+    /// removes without going through the delete policy.
+    pub fn vanish(&self, pfn: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.files.remove(pfn) {
+            Some(f) => {
+                inner.used -= f.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Out-of-band write (dark files: "must have been put on Rucio-managed
+    /// storage areas through unsupported methods", §4.4).
+    pub fn plant_dark(&self, pfn: &str, bytes: u64, now: EpochMs) {
+        let mut inner = self.inner.lock().unwrap();
+        let adler = synthetic_adler32(pfn, bytes);
+        inner.used += bytes;
+        inner.files.insert(
+            pfn.to_string(),
+            StoredFile {
+                pfn: pfn.to_string(),
+                bytes,
+                adler32: adler,
+                content: None,
+                created_at: now,
+                staged: true,
+            },
+        );
+    }
+
+    /// Corrupt an existing file in place (bit rot injection).
+    pub fn corrupt(&self, pfn: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.files.get_mut(pfn) {
+            Some(f) => {
+                f.adler32 = checksum::adler32_hex(format!("BITROT:{pfn}").as_bytes());
+                f.content = None;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used())
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.inner.lock().unwrap().files.len()
+    }
+
+    /// The periodic storage dump for the consistency auditor (§4.4): all
+    /// pfns with sizes, as of "now".
+    pub fn dump(&self) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .files
+            .values()
+            .map(|f| (f.pfn.clone(), f.bytes))
+            .collect()
+    }
+
+    /// (writes, reads, deletes, failures) counters.
+    pub fn op_counters(&self) -> (u64, u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.writes, inner.reads, inner.deletes, inner.failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disk_put_get_delete_cycle() {
+        let s = StorageSystem::new("DISK1", StorageKind::Disk, 1000);
+        s.put("/a/f1", 400, 0).unwrap();
+        assert_eq!(s.used(), 400);
+        let f = s.get("/a/f1").unwrap();
+        assert_eq!(f.bytes, 400);
+        assert_eq!(f.adler32, synthetic_adler32("/a/f1", 400));
+        s.delete("/a/f1").unwrap();
+        assert_eq!(s.used(), 0);
+        assert!(s.get("/a/f1").is_err());
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let s = StorageSystem::new("SMALL", StorageKind::Disk, 100);
+        s.put("/f1", 60, 0).unwrap();
+        assert!(matches!(s.put("/f2", 60, 0), Err(RucioError::NoSpaceLeft(_))));
+        s.put("/f3", 40, 0).unwrap();
+        assert_eq!(s.free(), 0);
+    }
+
+    #[test]
+    fn duplicate_pfn_rejected() {
+        let s = StorageSystem::new("D", StorageKind::Disk, 1000);
+        s.put("/f", 10, 0).unwrap();
+        assert!(matches!(s.put("/f", 10, 0), Err(RucioError::Duplicate(_))));
+    }
+
+    #[test]
+    fn real_content_checksum() {
+        let s = StorageSystem::new("D", StorageKind::Disk, 1000);
+        s.put_bytes("/real", b"hello world", 0).unwrap();
+        let f = s.get("/real").unwrap();
+        assert_eq!(f.adler32, checksum::adler32_hex(b"hello world"));
+        assert_eq!(f.content.as_deref(), Some(b"hello world".as_ref()));
+    }
+
+    #[test]
+    fn tape_requires_staging() {
+        let s = StorageSystem::new("TAPE", StorageKind::Tape, 10_000);
+        s.put("/t/f1", 100, 0).unwrap();
+        assert!(s.get("/t/f1").is_err(), "cold tape read must fail");
+        let ready = s.stage("/t/f1", 1000).unwrap();
+        assert!(ready > 1000);
+        s.tick(ready - 1);
+        assert!(s.get("/t/f1").is_err(), "not ready yet");
+        s.tick(ready);
+        assert!(s.get("/t/f1").is_ok(), "staged read works");
+    }
+
+    #[test]
+    fn staging_queue_adds_contention_delay() {
+        let s = StorageSystem::new("TAPE", StorageKind::Tape, 10_000);
+        s.put("/t/a", 1, 0).unwrap();
+        s.put("/t/b", 1, 0).unwrap();
+        let r1 = s.stage("/t/a", 0).unwrap();
+        let r2 = s.stage("/t/b", 0).unwrap();
+        assert!(r2 > r1);
+    }
+
+    #[test]
+    fn failure_policy_fires() {
+        let s = StorageSystem::new("FLAKY", StorageKind::Disk, u64::MAX)
+            .with_policy(FailurePolicy { write_fail: 0.5, ..Default::default() });
+        let mut fails = 0;
+        for i in 0..200 {
+            if s.put(&format!("/f{i}"), 1, 0).is_err() {
+                fails += 1;
+            }
+        }
+        assert!((60..140).contains(&fails), "fails={fails}");
+        let (_, _, _, failures) = s.op_counters();
+        assert_eq!(failures as usize, fails);
+    }
+
+    #[test]
+    fn corruption_changes_checksum() {
+        let s = StorageSystem::new("D", StorageKind::Disk, 1000);
+        s.put("/f", 10, 0).unwrap();
+        assert!(s.corrupt("/f"));
+        let f = s.get("/f").unwrap();
+        assert_ne!(f.adler32, synthetic_adler32("/f", 10));
+    }
+
+    #[test]
+    fn dark_and_vanish_bypass_policy() {
+        let s = StorageSystem::new("D", StorageKind::Disk, 1000);
+        s.put("/known", 10, 0).unwrap();
+        s.plant_dark("/dark", 20, 0);
+        assert_eq!(s.file_count(), 2);
+        let dump = s.dump();
+        assert_eq!(dump.len(), 2);
+        assert!(s.vanish("/known"));
+        assert!(!s.vanish("/known"));
+        assert_eq!(s.used(), 20);
+    }
+
+    #[test]
+    fn corrupt_write_policy_mismatches_expected() {
+        let s = StorageSystem::new("ROT", StorageKind::Disk, u64::MAX)
+            .with_policy(FailurePolicy { corrupt: 1.0, ..Default::default() });
+        s.put("/f", 10, 0).unwrap();
+        let f = s.stat("/f").unwrap();
+        assert_ne!(f.adler32, synthetic_adler32("/f", 10));
+    }
+}
+
+/// A registry of all storage endpoints, keyed by RSE name. Shared by the
+/// FTS simulator, the reaper, the auditor, and the client upload/download
+/// paths.
+#[derive(Default)]
+pub struct Fleet {
+    systems: std::sync::RwLock<BTreeMap<String, std::sync::Arc<StorageSystem>>>,
+}
+
+impl Fleet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, system: StorageSystem) -> std::sync::Arc<StorageSystem> {
+        let arc = std::sync::Arc::new(system);
+        self.systems
+            .write()
+            .unwrap()
+            .insert(arc.name.clone(), arc.clone());
+        arc
+    }
+
+    pub fn get(&self, rse: &str) -> Option<std::sync::Arc<StorageSystem>> {
+        self.systems.read().unwrap().get(rse).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.systems.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Advance tape staging queues everywhere.
+    pub fn tick(&self, now: EpochMs) {
+        for s in self.systems.read().unwrap().values() {
+            s.tick(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod fleet_tests {
+    use super::*;
+
+    #[test]
+    fn fleet_registers_and_resolves() {
+        let fleet = Fleet::new();
+        fleet.add(StorageSystem::new("A-DISK", StorageKind::Disk, 100));
+        fleet.add(StorageSystem::new("B-TAPE", StorageKind::Tape, 100));
+        assert!(fleet.get("A-DISK").is_some());
+        assert!(fleet.get("NOPE").is_none());
+        assert_eq!(fleet.names(), vec!["A-DISK", "B-TAPE"]);
+    }
+}

@@ -1,0 +1,38 @@
+use rucio::common::clock::MINUTE_MS;
+use rucio::common::config::Config;
+use rucio::placement::{C3po, RefScorer};
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::GridSpec;
+use rucio::sim::workload::WorkloadSpec;
+use rucio::daemons::Daemon;
+
+#[test]
+fn c3po_places_under_driver_workload() {
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 2, ..Default::default() },
+        WorkloadSpec { analysis_accesses_per_day: 400, ..Default::default() },
+        Config::new(),
+    );
+    let ctx = driver.ctx.clone();
+    let mut c3po = C3po::new(ctx.clone(), Box::new(RefScorer));
+    let mut placed = 0;
+    for day in 0..6 {
+        driver.run_days(1, 10 * MINUTE_MS);
+        // debug: how many popularity rows are hot datasets?
+        let mut hot = 0;
+        let mut ds_pop = 0;
+        ctx.catalog.popularity.for_each(|p| {
+            if let Ok(d) = ctx.catalog.get_did(&p.did) {
+                if d.did_type == rucio::core::types::DidType::Dataset {
+                    ds_pop += 1;
+                    if p.window_accesses >= 3 { hot += 1; }
+                }
+            }
+        });
+        let n = c3po.tick(ctx.catalog.now());
+        placed += n;
+        eprintln!("day {day}: ds_pop={ds_pop} hot={hot} placed_now={n} decisions={}", c3po.decisions.len());
+    }
+    eprintln!("total placed {placed}");
+    assert!(placed > 0);
+}

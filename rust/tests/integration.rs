@@ -1,0 +1,76 @@
+//! Cross-layer integration tests: full rule→transfer→replica convergence
+//! through the daemon fleet under virtual time, failure recovery, and
+//! the monitoring surfaces.
+
+use rucio::common::clock::MINUTE_MS;
+use rucio::common::config::Config;
+use rucio::core::types::RuleState;
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::GridSpec;
+use rucio::sim::workload::WorkloadSpec;
+
+#[test]
+fn one_week_convergence_and_monitoring() {
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 6,
+            derivations_per_day: 4,
+            analysis_accesses_per_day: 60,
+            ..Default::default()
+        },
+        Config::new(),
+    );
+    driver.run_days(7, 10 * MINUTE_MS);
+    let cat = driver.ctx.catalog.clone();
+
+    // most rules converge to OK
+    let total = cat.rules.len();
+    let ok = cat.rules_by_state.count(&RuleState::Ok);
+    assert!(total > 50, "rules created: {total}");
+    assert!(
+        ok as f64 > total as f64 * 0.7,
+        "most rules OK: {ok}/{total}"
+    );
+
+    // volume grew and transfers happened
+    let last = driver.days.last().unwrap();
+    assert!(last.bytes_managed > 0);
+    let done: u64 = driver.days.iter().map(|d| d.transfers_done).sum();
+    let failed: u64 = driver.days.iter().map(|d| d.transfers_failed).sum();
+    assert!(done > 200, "transfers done: {done}");
+    let fail_rate = failed as f64 / (done + failed) as f64;
+    assert!(fail_rate < 0.35, "failure rate sane: {fail_rate:.2}");
+
+    // deletions happened (lifetimes + reaper)
+    let deletions: u64 = driver.days.iter().map(|d| d.deletions).sum();
+    assert!(deletions > 0, "reaper active");
+
+    // monitoring surfaces populated
+    assert!(cat.metrics.counter("transfers.done") > 0);
+    let acc = rucio::analytics::reports::storage_accounting(&cat);
+    assert!(!acc.is_empty());
+    // every report row matches a real RSE
+    for rse in acc.keys() {
+        assert!(cat.get_rse(rse).is_ok());
+    }
+
+    // efficiency matrix sane
+    for (_, eff) in driver.efficiency_matrix() {
+        assert!((0.0..=1.0).contains(&eff));
+    }
+}
+
+#[test]
+fn heartbeat_failover_rebalances_work() {
+    use rucio::daemons::heartbeat::Heartbeats;
+    let h = Heartbeats::with_ttl(1000);
+    let (_, n1) = h.beat("conveyor", "a", 0);
+    assert_eq!(n1, 1);
+    h.beat("conveyor", "b", 100);
+    let (_, n2) = h.beat("conveyor", "a", 200);
+    assert_eq!(n2, 2);
+    // b dies; a takes over after TTL
+    let (_, n3) = h.beat("conveyor", "a", 5000);
+    assert_eq!(n3, 1);
+}
