@@ -122,6 +122,17 @@ pub fn problem_files(catalog: &Catalog) -> Vec<Vec<String>> {
     rows
 }
 
+/// Table-size report off the monitoring registry (paper §4.6: "a probe
+/// regularly checks the database" — queue depths and catalog scale).
+pub fn table_sizes(catalog: &Catalog) -> Vec<Vec<String>> {
+    catalog
+        .registry
+        .snapshot()
+        .into_iter()
+        .map(|(name, rows)| vec![name, rows.to_string()])
+        .collect()
+}
+
 /// Default idle horizon for unused-dataset reports.
 pub fn default_idle_ms() -> i64 {
     4 * WEEK_MS
@@ -159,6 +170,11 @@ mod tests {
         assert_eq!(acc["A"], (150, 2));
         assert_eq!(replicas_per_rse(&c, "A").len(), 2);
         assert_eq!(problem_files(&c).len(), 1);
+
+        // registry-backed sizes reflect live rows
+        let sizes = table_sizes(&c);
+        let replicas_row = sizes.iter().find(|r| r[0] == "replicas").unwrap();
+        assert_eq!(replicas_row[1], "2");
 
         c.add_dataset("s", "ds", "root").unwrap();
         let unused = unused_datasets(&c, c.now() + 10 * WEEK_MS, default_idle_ms());

@@ -114,6 +114,27 @@ impl RucioClient {
         self.expect_ndjson(self.http.get(&format!("/dids/{scope}"))?)
     }
 
+    /// One page of a scope's DIDs. `cursor` is the opaque
+    /// `x-rucio-next-cursor` value of the previous page (or `None` to
+    /// start); returns the rows plus the next cursor (`None` = done).
+    pub fn list_dids_page(
+        &self,
+        scope: &str,
+        cursor: Option<&str>,
+        limit: usize,
+    ) -> Result<(Vec<Json>, Option<String>)> {
+        let mut path = format!("/dids/{scope}?limit={limit}");
+        if let Some(c) = cursor {
+            path.push_str(&format!("&cursor={c}"));
+        }
+        let resp = self.http.get(&path)?;
+        if !resp.ok() {
+            return Err(http_error(&resp));
+        }
+        let next = resp.header("x-rucio-next-cursor").map(|s| s.to_string());
+        Ok((resp.body_ndjson()?, next))
+    }
+
     // -------------- replicas --------------
 
     pub fn list_replicas(&self, scope: &str, name: &str) -> Result<Vec<Json>> {
@@ -126,6 +147,39 @@ impl RucioClient {
             body.set("pfn", p);
         }
         self.expect_json(self.http.post_json(&format!("/replicas/{rse}/{scope}/{name}"), &body)?)
+    }
+
+    /// Register many replicas on one RSE in a single request (the
+    /// server-side batched commit). Returns the number added.
+    pub fn register_replicas_bulk(&self, rse: &str, dids: &[(String, String)]) -> Result<u64> {
+        let items: Vec<Json> = dids
+            .iter()
+            .map(|(scope, name)| {
+                Json::obj().with("scope", scope.as_str()).with("name", name.as_str())
+            })
+            .collect();
+        let body = Json::obj().with("rse", rse).with("replicas", Json::Arr(items));
+        let j = self.expect_json(self.http.post_json("/replicas/bulk", &body)?)?;
+        j.req_u64("added")
+    }
+
+    /// One page of the global replica list (cursor from the previous
+    /// page's `x-rucio-next-cursor`, `None` to start).
+    pub fn list_replicas_page(
+        &self,
+        cursor: Option<&str>,
+        limit: usize,
+    ) -> Result<(Vec<Json>, Option<String>)> {
+        let mut path = format!("/replicas?limit={limit}");
+        if let Some(c) = cursor {
+            path.push_str(&format!("&cursor={c}"));
+        }
+        let resp = self.http.get(&path)?;
+        if !resp.ok() {
+            return Err(http_error(&resp));
+        }
+        let next = resp.header("x-rucio-next-cursor").map(|s| s.to_string());
+        Ok((resp.body_ndjson()?, next))
     }
 
     // -------------- rules --------------
@@ -148,6 +202,28 @@ impl RucioClient {
         }
         let j = self.expect_json(self.http.post_json("/rules", &body)?)?;
         j.req_u64("rule_id")
+    }
+
+    /// Create many rules in one request; each entry is
+    /// `(scope, name, rse_expression, copies)`. Returns the rule ids.
+    pub fn add_rules_bulk(&self, specs: &[(String, String, String, u32)]) -> Result<Vec<u64>> {
+        let items: Vec<Json> = specs
+            .iter()
+            .map(|(scope, name, expr, copies)| {
+                Json::obj()
+                    .with("scope", scope.as_str())
+                    .with("name", name.as_str())
+                    .with("rse_expression", expr.as_str())
+                    .with("copies", *copies as u64)
+            })
+            .collect();
+        let body = Json::obj().with("rules", Json::Arr(items));
+        let j = self.expect_json(self.http.post_json("/rules/bulk", &body)?)?;
+        let arr = j
+            .get("rule_ids")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RucioError::JsonError("rule_ids missing".into()))?;
+        Ok(arr.iter().filter_map(Json::as_u64).collect())
     }
 
     pub fn get_rule(&self, rule_id: u64) -> Result<Json> {

@@ -5,75 +5,63 @@
 //! "already exists", "denied", "quota exceeded", etc. — the REST layer maps
 //! these onto HTTP status codes.
 
-use thiserror::Error;
-
 /// Convenience result alias used across the crate.
 pub type Result<T> = std::result::Result<T, RucioError>;
 
-/// The crate-wide error enum.
-#[derive(Error, Debug, Clone, PartialEq, Eq)]
-pub enum RucioError {
-    #[error("DID not found: {0}")]
-    DidNotFound(String),
-    #[error("DID already exists: {0}")]
-    DidAlreadyExists(String),
-    #[error("unsupported operation: {0}")]
-    UnsupportedOperation(String),
-    #[error("scope not found: {0}")]
-    ScopeNotFound(String),
-    #[error("account not found: {0}")]
-    AccountNotFound(String),
-    #[error("RSE not found: {0}")]
-    RseNotFound(String),
-    #[error("rule not found: {0}")]
-    RuleNotFound(String),
-    #[error("replica not found: {0}")]
-    ReplicaNotFound(String),
-    #[error("subscription not found: {0}")]
-    SubscriptionNotFound(String),
-    #[error("duplicate: {0}")]
-    Duplicate(String),
-    #[error("access denied: {0}")]
-    AccessDenied(String),
-    #[error("authentication failed: {0}")]
-    CannotAuthenticate(String),
-    #[error("quota exceeded: {0}")]
-    QuotaExceeded(String),
-    #[error("invalid RSE expression: {0}")]
-    InvalidRseExpression(String),
-    #[error("RSE expression resolved to empty set: {0}")]
-    RseExpressionEmpty(String),
-    #[error("invalid name: {0}")]
-    InvalidObject(String),
-    #[error("invalid value: {0}")]
-    InvalidValue(String),
-    #[error("checksum mismatch: {0}")]
-    ChecksumMismatch(String),
-    #[error("file on storage not found: {0}")]
-    SourceNotFound(String),
-    #[error("no space left on RSE: {0}")]
-    NoSpaceLeft(String),
-    #[error("storage error: {0}")]
-    StorageError(String),
-    #[error("transfer tool error: {0}")]
-    TransferToolError(String),
-    #[error("database error: {0}")]
-    DatabaseError(String),
-    #[error("transaction conflict: {0}")]
-    TxnConflict(String),
-    #[error("config error: {0}")]
-    ConfigError(String),
-    #[error("json error: {0}")]
-    JsonError(String),
-    #[error("http error: {0}")]
-    HttpError(String),
-    #[error("runtime (PJRT) error: {0}")]
-    RuntimeError(String),
-    #[error("io error: {0}")]
-    Io(String),
-    #[error("internal error: {0}")]
-    Internal(String),
+/// Declares the error enum plus its `Display` in one place (offline stand-in
+/// for the `thiserror` derive: every variant carries one detail string).
+macro_rules! rucio_error {
+    ($( $(#[$meta:meta])* $variant:ident => $prefix:literal ),+ $(,)?) => {
+        /// The crate-wide error enum.
+        #[derive(Debug, Clone, PartialEq, Eq)]
+        pub enum RucioError {
+            $( $(#[$meta])* $variant(String), )+
+        }
+
+        impl std::fmt::Display for RucioError {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                match self {
+                    $( RucioError::$variant(msg) => write!(f, concat!($prefix, "{}"), msg), )+
+                }
+            }
+        }
+    };
 }
+
+rucio_error! {
+    DidNotFound => "DID not found: ",
+    DidAlreadyExists => "DID already exists: ",
+    UnsupportedOperation => "unsupported operation: ",
+    ScopeNotFound => "scope not found: ",
+    AccountNotFound => "account not found: ",
+    RseNotFound => "RSE not found: ",
+    RuleNotFound => "rule not found: ",
+    ReplicaNotFound => "replica not found: ",
+    SubscriptionNotFound => "subscription not found: ",
+    Duplicate => "duplicate: ",
+    AccessDenied => "access denied: ",
+    CannotAuthenticate => "authentication failed: ",
+    QuotaExceeded => "quota exceeded: ",
+    InvalidRseExpression => "invalid RSE expression: ",
+    RseExpressionEmpty => "RSE expression resolved to empty set: ",
+    InvalidObject => "invalid name: ",
+    InvalidValue => "invalid value: ",
+    ChecksumMismatch => "checksum mismatch: ",
+    SourceNotFound => "file on storage not found: ",
+    NoSpaceLeft => "no space left on RSE: ",
+    StorageError => "storage error: ",
+    TransferToolError => "transfer tool error: ",
+    DatabaseError => "database error: ",
+    TxnConflict => "transaction conflict: ",
+    ConfigError => "config error: ",
+    JsonError => "json error: ",
+    HttpError => "http error: ",
+    RuntimeError => "runtime (PJRT) error: ",
+    Io => "io error: ",
+    Internal => "internal error: ",
+}
+
+impl std::error::Error for RucioError {}
 
 impl From<std::io::Error> for RucioError {
     fn from(e: std::io::Error) -> Self {
@@ -113,6 +101,15 @@ mod tests {
         assert_eq!(RucioError::Duplicate("x".into()).http_status(), 409);
         assert_eq!(RucioError::InvalidValue("x".into()).http_status(), 400);
         assert_eq!(RucioError::Internal("x".into()).http_status(), 500);
+    }
+
+    #[test]
+    fn display_prefixes_detail() {
+        assert_eq!(
+            RucioError::DidNotFound("data18:f1".into()).to_string(),
+            "DID not found: data18:f1"
+        );
+        assert_eq!(RucioError::QuotaExceeded("alice".into()).to_string(), "quota exceeded: alice");
     }
 
     #[test]

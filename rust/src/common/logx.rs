@@ -1,61 +1,124 @@
-//! Minimal `log` facade backend: leveled, timestamped stderr logging with a
-//! per-module-path filter, standing in for the td-agent → Elasticsearch
-//! pipeline of paper §4.6 (the structured *metric* side lives in
-//! [`crate::analytics::metrics`]).
+//! Minimal leveled logger: timestamped stderr logging with a global level
+//! filter, standing in for the td-agent → Elasticsearch pipeline of paper
+//! §4.6 (the structured *metric* side lives in
+//! [`crate::analytics::metrics`]). Self-contained — the `log` facade crate
+//! is unavailable offline — with [`crate::log_warn!`]-style macros for
+//! call sites.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
 
-use log::{Level, LevelFilter, Metadata, Record};
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
 
-struct StderrLogger;
-
-static INSTALLED: AtomicBool = AtomicBool::new(false);
-static LOGGER: StderrLogger = StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let lvl = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        let now = crate::common::clock::Clock::Real.now_ms();
-        eprintln!(
-            "{} {} [{}] {}",
-            crate::common::clock::format_ts(now),
-            lvl,
-            record.target(),
-            record.args()
-        );
+        }
     }
-
-    fn flush(&self) {}
 }
 
-/// Install the logger (idempotent). `verbosity`: 0=warn, 1=info, 2=debug, 3+=trace.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Install/adjust the logger (idempotent). `verbosity`: 0=warn, 1=info,
+/// 2=debug, 3+=trace.
 pub fn init(verbosity: u8) {
-    let filter = match verbosity {
-        0 => LevelFilter::Warn,
-        1 => LevelFilter::Info,
-        2 => LevelFilter::Debug,
-        _ => LevelFilter::Trace,
+    let level = match verbosity {
+        0 => Level::Warn,
+        1 => Level::Info,
+        2 => Level::Debug,
+        _ => Level::Trace,
     };
-    if INSTALLED
-        .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
-        .is_ok()
-    {
-        let _ = log::set_logger(&LOGGER);
+    MAX_LEVEL.store(level as u8, Ordering::SeqCst);
+}
+
+/// The currently enabled maximum level.
+pub fn max_level() -> Level {
+    match MAX_LEVEL.load(Ordering::SeqCst) {
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        4 => Level::Debug,
+        _ => Level::Trace,
     }
-    log::set_max_level(filter);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::SeqCst)
+}
+
+/// Emit one record (macro back-end; prefer the `log_*!` macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let now = crate::common::clock::Clock::Real.now_ms();
+    eprintln!(
+        "{} {} [{}] {}",
+        crate::common::clock::format_ts(now),
+        level.tag(),
+        target,
+        args
+    );
+}
+
+/// `log_error!("..{}", x)` — error-level record tagged with the module path.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::common::logx::log(
+            $crate::common::logx::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_warn!("..{}", x)` — warn-level record tagged with the module path.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::common::logx::log(
+            $crate::common::logx::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_info!("..{}", x)` — info-level record tagged with the module path.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::common::logx::log(
+            $crate::common::logx::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_debug!("..{}", x)` — debug-level record tagged with the module path.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::common::logx::log(
+            $crate::common::logx::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
@@ -65,9 +128,11 @@ mod tests {
     #[test]
     fn init_is_idempotent_and_sets_level() {
         init(1);
-        assert_eq!(log::max_level(), LevelFilter::Info);
+        assert_eq!(max_level(), Level::Info);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
         init(2);
-        assert_eq!(log::max_level(), LevelFilter::Debug);
-        log::info!("logger smoke test");
+        assert_eq!(max_level(), Level::Debug);
+        crate::log_info!("logger smoke test");
     }
 }

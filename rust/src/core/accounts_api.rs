@@ -1,17 +1,13 @@
 //! Accounts, identities, authentication, tokens, and the permission
 //! policy (paper §2.3 + §4.1).
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
-
+use crate::common::checksum::hmac_sha256_hex;
 use crate::common::clock::HOUR_MS;
 use crate::common::error::{Result, RucioError};
 use crate::common::idgen::hex_token;
 
 use super::types::*;
 use super::Catalog;
-
-type HmacSha256 = Hmac<Sha256>;
 
 /// Operations gated by the permission policy (paper §4.1: "each
 /// client-facing operation ... is validated through a permission
@@ -115,20 +111,15 @@ impl Catalog {
         Ok(())
     }
 
-    /// Accounts an identity may act as.
+    /// Accounts an identity may act as (non-cloning projection).
     pub fn identity_accounts(&self, identity: &str, auth_type: AuthType) -> Vec<String> {
-        self.identities
-            .scan(|i| i.identity == identity && i.auth_type == auth_type)
-            .into_iter()
-            .map(|i| i.account)
-            .collect()
+        self.identities.filter_map(|i| {
+            (i.identity == identity && i.auth_type == auth_type).then(|| i.account.clone())
+        })
     }
 
     fn hash_secret(&self, identity: &str, secret: &str) -> String {
-        let mut mac = HmacSha256::new_from_slice(format!("salt:{identity}").as_bytes()).unwrap();
-        mac.update(secret.as_bytes());
-        let out = mac.finalize().into_bytes();
-        out.iter().map(|b| format!("{b:02x}")).collect()
+        hmac_sha256_hex(format!("salt:{identity}").as_bytes(), secret.as_bytes())
     }
 
     // ------------------------------------------------------------------
@@ -226,19 +217,14 @@ impl Catalog {
         Ok(t.account)
     }
 
-    /// Drop expired tokens (housekeeping daemon path).
+    /// Drop expired tokens (housekeeping daemon path): non-cloning key
+    /// projection, then one batched removal.
     pub fn purge_expired_tokens(&self) -> usize {
         let now = self.now();
         let expired: Vec<String> = self
             .tokens
-            .scan(|t| t.expires_at < now)
-            .into_iter()
-            .map(|t| t.token)
-            .collect();
-        for tok in &expired {
-            self.tokens.remove(tok, now);
-        }
-        expired.len()
+            .filter_map(|t| (t.expires_at < now).then(|| t.token.clone()));
+        self.tokens.remove_bulk(&expired, now).len()
     }
 
     // ------------------------------------------------------------------

@@ -412,6 +412,28 @@ impl Catalog {
         })
     }
 
+    /// One page of a scope's DIDs in name order (cursor-based listing for
+    /// the NDJSON REST routes): rows strictly after `after_name`, plus
+    /// the cursor for the next page (`None` once exhausted). O(page), not
+    /// O(scope): the scope's keys are contiguous in the ordered table.
+    pub fn list_dids_page(
+        &self,
+        scope: &str,
+        after_name: Option<&str>,
+        limit: usize,
+    ) -> (Vec<Did>, Option<String>) {
+        use std::ops::Bound;
+        let lo_key = DidKey::new(scope, after_name.unwrap_or(""));
+        // First key of the next scope: "<scope>\0" sorts after <scope> and
+        // before any longer sibling, so it bounds this scope exactly.
+        let hi_key = DidKey { scope: format!("{scope}\u{0}"), name: String::new() };
+        let page = self
+            .dids
+            .range_page(Bound::Excluded(&lo_key), Bound::Excluded(&hi_key), limit);
+        let next = page.next_cursor.map(|k| k.name);
+        (page.rows, next)
+    }
+
     // ------------------------------------------------------------------
     // deletion (undertaker path)
     // ------------------------------------------------------------------
@@ -503,6 +525,35 @@ mod tests {
                 DidKey::new(scope, &name)
             })
             .collect()
+    }
+
+    #[test]
+    fn list_dids_page_walks_scope_in_order() {
+        let c = catalog();
+        c.add_scope("other", "root").unwrap();
+        add_files(&c, "data18", "f", 25);
+        add_files(&c, "other", "g", 5); // must never leak into data18 pages
+        let mut names = Vec::new();
+        let mut cursor: Option<String> = None;
+        let mut pages = 0;
+        loop {
+            let (rows, next) = c.list_dids_page("data18", cursor.as_deref(), 10);
+            assert!(rows.iter().all(|d| d.key.scope == "data18"));
+            names.extend(rows.into_iter().map(|d| d.key.name));
+            pages += 1;
+            match next {
+                Some(n) => cursor = Some(n),
+                None => break,
+            }
+            assert!(pages < 50);
+        }
+        let expect: Vec<String> = (0..25).map(|i| format!("f.{i:04}")).collect();
+        assert_eq!(names, expect, "paged walk is complete + name-ordered");
+        assert_eq!(pages, 3);
+        // empty scope: one empty page
+        c.add_scope("empty", "root").unwrap();
+        let (rows, next) = c.list_dids_page("empty", None, 10);
+        assert!(rows.is_empty() && next.is_none());
     }
 
     #[test]

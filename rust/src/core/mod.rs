@@ -105,24 +105,27 @@ pub struct Catalog {
 impl Catalog {
     pub fn new(clock: Clock, cfg: Config) -> Self {
         let seed = cfg.get_i64("common", "seed", 42) as u64;
-        let attachments = Table::new("attachments");
+        // §3.6 sharded storage: `[db] shards` sets the per-table shard
+        // count (ordering semantics are shard-count invariant).
+        let shards = cfg.get_i64("db", "shards", crate::db::DEFAULT_SHARDS as i64).max(1) as usize;
+        let attachments = Table::new("attachments").with_shards(shards);
         let att_by_parent = Index::new(|a: &Attachment| Some(a.parent.clone()));
         let att_by_child = Index::new(|a: &Attachment| Some(a.child.clone()));
         attachments.add_index(&att_by_parent).unwrap();
         attachments.add_index(&att_by_child).unwrap();
 
-        let dids = Table::new("dids");
+        let dids = Table::new("dids").with_shards(shards);
         let dids_by_expiry = Index::new(|d: &Did| d.expired_at);
         dids.add_index(&dids_by_expiry).unwrap();
 
-        let replicas = Table::new("replicas");
+        let replicas = Table::new("replicas").with_shards(shards);
         let replicas_by_did = Index::new(|r: &Replica| Some(r.did.clone()));
         let replicas_by_tombstone =
             Index::new(|r: &Replica| r.tombstone.map(|t| (r.rse.clone(), t)));
         replicas.add_index(&replicas_by_did).unwrap();
         replicas.add_index(&replicas_by_tombstone).unwrap();
 
-        let rules = Table::new("rules").with_history();
+        let rules = Table::new("rules").with_shards(shards).with_history();
         let rules_by_state = Index::new(|r: &Rule| Some(r.state));
         let rules_by_did = Index::new(|r: &Rule| Some(r.did.clone()));
         let rules_by_expiry = Index::new(|r: &Rule| r.expires_at);
@@ -130,13 +133,13 @@ impl Catalog {
         rules.add_index(&rules_by_did).unwrap();
         rules.add_index(&rules_by_expiry).unwrap();
 
-        let locks = Table::new("locks");
+        let locks = Table::new("locks").with_shards(shards);
         let locks_by_replica = Index::new(|l: &ReplicaLock| Some((l.rse.clone(), l.did.clone())));
         let locks_by_rule = Index::new(|l: &ReplicaLock| Some(l.rule_id));
         locks.add_index(&locks_by_replica).unwrap();
         locks.add_index(&locks_by_rule).unwrap();
 
-        let requests = Table::new("requests").with_history();
+        let requests = Table::new("requests").with_shards(shards).with_history();
         let requests_by_state = Index::new(|r: &TransferRequest| Some(r.state));
         let requests_by_dest = Index::new(|r: &TransferRequest| {
             if matches!(
@@ -158,20 +161,20 @@ impl Catalog {
             ids: IdGen::new(),
             rng: Mutex::new(Prng::new(seed)),
             token_salt: seed ^ 0xDEAD_BEEF_CAFE,
-            accounts: Table::new("accounts"),
-            identities: Table::new("identities"),
-            tokens: Table::new("tokens"),
-            scopes: Table::new("scopes"),
+            accounts: Table::new("accounts").with_shards(shards),
+            identities: Table::new("identities").with_shards(shards),
+            tokens: Table::new("tokens").with_shards(shards),
+            scopes: Table::new("scopes").with_shards(shards),
             dids,
             attachments,
-            name_tombstones: Table::new("name_tombstones"),
+            name_tombstones: Table::new("name_tombstones").with_shards(shards),
             att_by_parent,
             att_by_child,
             dids_by_expiry,
-            rses: Table::new("rses"),
-            distances: Table::new("distances"),
+            rses: Table::new("rses").with_shards(shards),
+            distances: Table::new("distances").with_shards(shards),
             replicas,
-            bad_replicas: Table::new("bad_replicas"),
+            bad_replicas: Table::new("bad_replicas").with_shards(shards),
             replicas_by_did,
             replicas_by_tombstone,
             rules,
@@ -184,15 +187,41 @@ impl Catalog {
             requests,
             requests_by_state,
             requests_by_dest,
-            limits: Table::new("account_limits"),
-            usages: Table::new("account_usage"),
-            subscriptions: Table::new("subscriptions"),
-            outbox: Table::new("outbox"),
-            popularity: Table::new("popularity"),
+            limits: Table::new("account_limits").with_shards(shards),
+            usages: Table::new("account_usage").with_shards(shards),
+            subscriptions: Table::new("subscriptions").with_shards(shards),
+            outbox: Table::new("outbox").with_shards(shards),
+            popularity: Table::new("popularity").with_shards(shards),
             registry: Registry::new(),
         };
+        catalog.register_tables();
         catalog.bootstrap();
         catalog
+    }
+
+    /// Wire every table into the monitoring [`Registry`] so probes and
+    /// analytics reports observe live row counts (paper §4.6).
+    fn register_tables(&self) {
+        let r = &self.registry;
+        r.register(self.accounts.name(), self.accounts.len_counter());
+        r.register(self.identities.name(), self.identities.len_counter());
+        r.register(self.tokens.name(), self.tokens.len_counter());
+        r.register(self.scopes.name(), self.scopes.len_counter());
+        r.register(self.dids.name(), self.dids.len_counter());
+        r.register(self.attachments.name(), self.attachments.len_counter());
+        r.register(self.name_tombstones.name(), self.name_tombstones.len_counter());
+        r.register(self.rses.name(), self.rses.len_counter());
+        r.register(self.distances.name(), self.distances.len_counter());
+        r.register(self.replicas.name(), self.replicas.len_counter());
+        r.register(self.bad_replicas.name(), self.bad_replicas.len_counter());
+        r.register(self.rules.name(), self.rules.len_counter());
+        r.register(self.locks.name(), self.locks.len_counter());
+        r.register(self.requests.name(), self.requests.len_counter());
+        r.register(self.limits.name(), self.limits.len_counter());
+        r.register(self.usages.name(), self.usages.len_counter());
+        r.register(self.subscriptions.name(), self.subscriptions.len_counter());
+        r.register(self.outbox.name(), self.outbox.len_counter());
+        r.register(self.popularity.name(), self.popularity.len_counter());
     }
 
     /// Default catalog for tests: real clock, empty config, plus the
@@ -298,5 +327,31 @@ mod tests {
         assert_eq!(s.files, 0);
         assert_eq!(s.replicas, 0);
         assert_eq!(s.rses, 0);
+    }
+
+    #[test]
+    fn registry_sees_live_table_counts() {
+        let c = Catalog::new_for_tests();
+        let snap = c.registry.snapshot();
+        // every table is wired in, and bootstrap rows are visible
+        assert_eq!(snap["accounts"], 1, "root account");
+        assert_eq!(snap["scopes"], 1, "root scope");
+        assert_eq!(snap["dids"], 0);
+        assert!(snap.len() >= 19, "all catalog tables registered: {snap:?}");
+        c.add_scope("data18", "root").unwrap();
+        c.add_file("data18", "f1", "root", 10, "x", None).unwrap();
+        let snap = c.registry.snapshot();
+        assert_eq!(snap["scopes"], 2);
+        assert_eq!(snap["dids"], 1);
+    }
+
+    #[test]
+    fn shard_count_config_is_respected() {
+        let mut cfg = Config::new();
+        cfg.set("db", "shards", "3");
+        let c = Catalog::new(Clock::sim_at(1_600_000_000_000), cfg);
+        assert_eq!(c.replicas.shard_count(), 3);
+        assert_eq!(c.rules.shard_count(), 3);
+        assert!(c.accounts.get(&"root".to_string()).is_some());
     }
 }

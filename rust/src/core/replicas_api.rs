@@ -2,11 +2,33 @@
 //! tombstones, access traces, bad/suspicious handling (paper §2.4, §4.3,
 //! §4.4).
 
+use std::collections::{BTreeMap, BTreeSet};
+
 use crate::common::clock::EpochMs;
 use crate::common::error::{Result, RucioError};
 
 use super::types::*;
 use super::Catalog;
+
+/// One replica in a bulk registration ([`Catalog::add_replicas_bulk`]).
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub did: DidKey,
+    pub state: ReplicaState,
+    /// Required for non-deterministic RSEs, optional otherwise.
+    pub pfn: Option<String>,
+}
+
+impl ReplicaSpec {
+    pub fn new(did: DidKey, state: ReplicaState) -> Self {
+        ReplicaSpec { did, state, pfn: None }
+    }
+
+    pub fn with_pfn(mut self, pfn: &str) -> Self {
+        self.pfn = Some(pfn.to_string());
+        self
+    }
+}
 
 impl Catalog {
     /// Register a replica for an existing file DID. For deterministic RSEs
@@ -61,6 +83,145 @@ impl Catalog {
         }
         self.metrics.incr("replicas.added", 1);
         Ok(replica)
+    }
+
+    /// Register many replicas on one RSE in a single batched commit
+    /// (paper §3.6 bulk operations; the `POST /replicas/bulk` route).
+    /// Validation happens up front and the table insert is atomic: on any
+    /// bad spec (unknown DID, collection DID, missing pfn, duplicate) the
+    /// whole call fails with no partial state. Returns the number of
+    /// replicas registered (rows move into the table — no hot-path clone;
+    /// fetch individual rows back via [`Catalog::get_replica`]).
+    pub fn add_replicas_bulk(&self, rse: &str, specs: &[ReplicaSpec]) -> Result<usize> {
+        let r = self.get_rse(rse)?;
+        let now = self.now();
+        let grace = self.cfg.get_duration_ms("reaper", "tombstone_grace", 24 * 3_600_000);
+        let mut rows: Vec<Replica> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let d = self.get_did(&spec.did)?;
+            if d.did_type != DidType::File {
+                return Err(RucioError::UnsupportedOperation(format!(
+                    "{} is not a file",
+                    spec.did
+                )));
+            }
+            let pfn = match (&spec.pfn, r.lfn2pfn(&spec.did.scope, &spec.did.name)) {
+                (Some(p), _) => p.clone(),
+                (None, Some(p)) => p,
+                (None, None) => {
+                    return Err(RucioError::InvalidValue(format!(
+                        "RSE {rse} is non-deterministic: pfn required"
+                    )))
+                }
+            };
+            rows.push(Replica {
+                rse: rse.to_string(),
+                did: spec.did.clone(),
+                bytes: d.bytes,
+                state: spec.state,
+                pfn,
+                lock_count: 0,
+                tombstone: if spec.state == ReplicaState::Available {
+                    Some(now + grace)
+                } else {
+                    None
+                },
+                accessed_at: now,
+                created_at: now,
+                error_count: 0,
+            });
+        }
+        let added = self.replicas.insert_bulk(rows, now)?;
+        for spec in specs {
+            if spec.state == ReplicaState::Available {
+                self.refresh_availability(&spec.did);
+            }
+        }
+        self.metrics.incr("replicas.added", added as u64);
+        Ok(added)
+    }
+
+    /// Remove many replicas in one batched commit (the reaper's drain
+    /// path). Missing keys are skipped; availability is re-derived once
+    /// per affected DID. Returns the removed rows.
+    pub fn remove_replicas_bulk(&self, keys: &[(String, DidKey)]) -> Vec<Replica> {
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        let now = self.now();
+        let removed = self.replicas.remove_bulk(keys, now);
+        let mut seen: BTreeSet<DidKey> = BTreeSet::new();
+        for rep in &removed {
+            if seen.insert(rep.did.clone()) {
+                self.refresh_availability(&rep.did);
+            }
+        }
+        self.metrics.incr("replicas.removed", removed.len() as u64);
+        removed
+    }
+
+    // ------------------------------------------------------------------
+    // bulk transfer-request state transitions (conveyor drain path)
+    // ------------------------------------------------------------------
+
+    /// Promote every due RETRY request back to QUEUED in one batched
+    /// commit (the conveyor submitter's pre-pass).
+    pub fn promote_due_retries(&self, now: EpochMs) -> usize {
+        let due: Vec<u64> = self
+            .requests_by_state
+            .get(&RequestState::Retry)
+            .into_iter()
+            .filter(|id| {
+                self.requests
+                    .get(id)
+                    .map(|r| r.retry_after.map(|t| t <= now).unwrap_or(true))
+                    .unwrap_or(false)
+            })
+            .collect();
+        if due.is_empty() {
+            return 0;
+        }
+        self.requests
+            .update_bulk(&due, now, |r| {
+                r.state = RequestState::Queued;
+                r.retry_after = None;
+            })
+            .len()
+    }
+
+    /// Flip a picked batch of requests to SUBMITTED with their chosen
+    /// source RSE and FTS server, in one commit.
+    pub fn mark_requests_submitted(&self, picks: &[(u64, String, usize)], now: EpochMs) {
+        if picks.is_empty() {
+            return;
+        }
+        let by_id: BTreeMap<u64, (&str, usize)> = picks
+            .iter()
+            .map(|(id, src, fts)| (*id, (src.as_str(), *fts)))
+            .collect();
+        let ids: Vec<u64> = picks.iter().map(|(id, _, _)| *id).collect();
+        self.requests.update_bulk(&ids, now, |r| {
+            if let Some((src, fts)) = by_id.get(&r.id) {
+                r.state = RequestState::Submitted;
+                r.src_rse = Some((*src).to_string());
+                r.fts_server = Some(*fts);
+                r.updated_at = now;
+            }
+        });
+    }
+
+    /// Record the FTS external ids of a submitted batch in one commit.
+    pub fn record_external_ids(&self, pairs: &[(u64, u64)], now: EpochMs) {
+        if pairs.is_empty() {
+            return;
+        }
+        let by_id: BTreeMap<u64, u64> = pairs.iter().copied().collect();
+        let ids: Vec<u64> = pairs.iter().map(|(id, _)| *id).collect();
+        self.requests.update_bulk(&ids, now, |r| {
+            if let Some(ext) = by_id.get(&r.id) {
+                r.external_id = Some(*ext);
+            }
+        });
     }
 
     pub fn get_replica(&self, rse: &str, did: &DidKey) -> Result<Replica> {
@@ -412,6 +573,69 @@ mod tests {
         c.remove_replica("B-DISK", &f1()).unwrap();
         assert_eq!(c.get_did(&f1()).unwrap().availability, Availability::Deleted);
         assert!(c.remove_replica("B-DISK", &f1()).is_err());
+    }
+
+    #[test]
+    fn add_replicas_bulk_registers_batch() {
+        let c = catalog();
+        let mut specs = Vec::new();
+        for i in 0..20 {
+            c.add_file("data18", &format!("bulk{i}"), "root", 100, "aabbccdd", None).unwrap();
+            specs.push(ReplicaSpec::new(
+                DidKey::new("data18", &format!("bulk{i}")),
+                ReplicaState::Available,
+            ));
+        }
+        let added = c.add_replicas_bulk("A-DISK", &specs).unwrap();
+        assert_eq!(added, 20);
+        assert_eq!(c.replicas.len(), 20);
+        for i in 0..20 {
+            let key = DidKey::new("data18", &format!("bulk{i}"));
+            assert_eq!(
+                c.get_did(&key).unwrap().availability,
+                Availability::Available,
+                "availability derived per DID"
+            );
+            assert!(c.get_replica("A-DISK", &key).unwrap().tombstone.is_some());
+        }
+        assert_eq!(c.metrics.counter("replicas.added"), 20);
+    }
+
+    #[test]
+    fn add_replicas_bulk_is_atomic_on_bad_spec() {
+        let c = catalog();
+        c.add_dataset("data18", "ds", "root").unwrap();
+        let specs = vec![
+            ReplicaSpec::new(f1(), ReplicaState::Available),
+            // dataset DID: invalid for replicas → whole batch must fail
+            ReplicaSpec::new(DidKey::new("data18", "ds"), ReplicaState::Available),
+        ];
+        assert!(c.add_replicas_bulk("A-DISK", &specs).is_err());
+        assert_eq!(c.replicas.len(), 0, "no partial registration");
+        // duplicate against an existing row also fails atomically
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.add_file("data18", "f2", "root", 10, "x", None).unwrap();
+        let specs = vec![
+            ReplicaSpec::new(DidKey::new("data18", "f2"), ReplicaState::Available),
+            ReplicaSpec::new(f1(), ReplicaState::Available),
+        ];
+        assert!(c.add_replicas_bulk("A-DISK", &specs).is_err());
+        assert_eq!(c.replicas.len(), 1);
+    }
+
+    #[test]
+    fn remove_replicas_bulk_refreshes_availability_once_per_did() {
+        let c = catalog();
+        c.add_replica("A-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        c.add_replica("B-DISK", &f1(), ReplicaState::Available, None).unwrap();
+        let removed = c.remove_replicas_bulk(&[
+            ("A-DISK".to_string(), f1()),
+            ("B-DISK".to_string(), f1()),
+            ("C-DISK".to_string(), f1()), // missing: skipped
+        ]);
+        assert_eq!(removed.len(), 2);
+        assert_eq!(c.replicas.len(), 0);
+        assert_eq!(c.get_did(&f1()).unwrap().availability, Availability::Deleted);
     }
 
     #[test]

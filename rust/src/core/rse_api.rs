@@ -148,10 +148,7 @@ impl RseUniverse for CatalogUniverse<'_> {
     fn all_rses(&self) -> Vec<String> {
         self.catalog
             .rses
-            .scan(|r| !r.deleted)
-            .into_iter()
-            .map(|r| r.name)
-            .collect()
+            .filter_map(|r| (!r.deleted).then(|| r.name.clone()))
     }
 
     fn attribute(&self, rse: &str, key: &str) -> Option<String> {

@@ -144,7 +144,8 @@ impl Catalog {
             self.check_quota(&spec.account, rse, *bytes)?;
         }
 
-        // Apply phase.
+        // Apply phase: the whole plan lands as batched writes (one commit
+        // per table) instead of row-at-a-time inserts.
         let rule_id = self.next_id();
         let expires_at = spec.lifetime_ms.map(|l| now + l);
         self.rules.insert(
@@ -170,9 +171,7 @@ impl Catalog {
             },
             now,
         )?;
-        for p in plan {
-            self.apply_planned_lock(rule_id, &spec.account, &spec.activity, p)?;
-        }
+        self.apply_planned_locks(rule_id, &spec.account, &spec.activity, plan)?;
         self.refresh_rule_state(rule_id);
         self.metrics.incr("rules.added", 1);
         self.notify(
@@ -266,8 +265,7 @@ impl Catalog {
         Ok(chosen)
     }
 
-    /// Materialize one planned lock: replica upsert, lock row, transfer
-    /// request (deduplicated), usage charge.
+    /// Materialize one planned lock (repair / re-evaluation paths).
     fn apply_planned_lock(
         &self,
         rule_id: u64,
@@ -275,68 +273,88 @@ impl Catalog {
         activity: &str,
         p: PlannedLock,
     ) -> Result<()> {
-        let now = self.now();
-        let replica_key = (p.rse.clone(), p.did.clone());
-        let lock_state = if p.have_available { LockState::Ok } else { LockState::Replicating };
+        self.apply_planned_locks(rule_id, account, activity, vec![p])
+    }
 
-        match self.replicas.get(&replica_key) {
-            Some(_) => {
+    /// Materialize a batch of planned locks with one commit per table:
+    /// replica protections (lock_count bump / Copying stubs), lock rows,
+    /// deduplicated transfer requests, the rule's tallies, and per-RSE
+    /// account-usage charges are each applied once per batch instead of
+    /// once per row (paper §3.6 bulk operations).
+    fn apply_planned_locks(
+        &self,
+        rule_id: u64,
+        account: &str,
+        activity: &str,
+        plan: Vec<PlannedLock>,
+    ) -> Result<()> {
+        if plan.is_empty() {
+            return Ok(());
+        }
+        let now = self.now();
+
+        // Stage phase: resolve everything (and surface errors) before any
+        // mutation, so stage-phase validation failures leave no partial
+        // state. (There are no cross-table transactions; the commit phase
+        // below orders its writes so the only realistically fallible one
+        // happens first.)
+        let mut protect: Vec<(String, DidKey)> = Vec::new();
+        let mut stubs: Vec<Replica> = Vec::new();
+        let mut lock_rows: Vec<ReplicaLock> = Vec::with_capacity(plan.len());
+        let mut request_rows: Vec<TransferRequest> = Vec::new();
+        let mut batch_dests: BTreeSet<(String, DidKey)> = BTreeSet::new();
+        let mut tally_ok = 0u32;
+        let mut tally_replicating = 0u32;
+        let mut usage: std::collections::BTreeMap<String, (i64, i64)> = Default::default();
+
+        for p in &plan {
+            let replica_key = (p.rse.clone(), p.did.clone());
+            if self.replicas.contains(&replica_key) {
                 // Protect the replica: bump lock_count, clear tombstone
                 // (§2.5: "replica locks ... lock a replica on a certain RSE").
-                self.replicas.update(&replica_key, now, |r| {
-                    r.lock_count += 1;
-                    r.tombstone = None;
-                });
-            }
-            None => {
+                protect.push(replica_key);
+            } else {
                 // New stub in Copying; a transfer will fill it.
                 let rse = self.get_rse(&p.rse)?;
                 let pfn = rse
                     .lfn2pfn(&p.did.scope, &p.did.name)
                     .unwrap_or_else(|| format!("/nondet/{}/{}", p.did.scope, p.did.name));
-                self.replicas.insert(
-                    Replica {
-                        rse: p.rse.clone(),
-                        did: p.did.clone(),
-                        bytes: p.bytes,
-                        state: ReplicaState::Copying,
-                        pfn,
-                        lock_count: 1,
-                        tombstone: None,
-                        accessed_at: now,
-                        created_at: now,
-                        error_count: 0,
-                    },
-                    now,
-                )?;
+                stubs.push(Replica {
+                    rse: p.rse.clone(),
+                    did: p.did.clone(),
+                    bytes: p.bytes,
+                    state: ReplicaState::Copying,
+                    pfn,
+                    lock_count: 1,
+                    tombstone: None,
+                    accessed_at: now,
+                    created_at: now,
+                    error_count: 0,
+                });
             }
-        }
-
-        self.locks.insert(
-            ReplicaLock {
+            let lock_state = if p.have_available { LockState::Ok } else { LockState::Replicating };
+            match lock_state {
+                LockState::Ok => tally_ok += 1,
+                _ => tally_replicating += 1,
+            }
+            lock_rows.push(ReplicaLock {
                 rule_id,
                 rse: p.rse.clone(),
                 did: p.did.clone(),
                 state: lock_state,
                 bytes: p.bytes,
-            },
-            now,
-        )?;
-        self.rules.update(&rule_id, now, |r| match lock_state {
-            LockState::Ok => r.locks_ok += 1,
-            LockState::Replicating => r.locks_replicating += 1,
-            LockState::Stuck => r.locks_stuck += 1,
-        });
-        self.charge_usage(account, &p.rse, p.bytes as i64, 1);
+            });
+            let e = usage.entry(p.rse.clone()).or_insert((0, 0));
+            e.0 += p.bytes as i64;
+            e.1 += 1;
 
-        // Transfer request, unless data is (or is becoming) available.
-        if !p.have_available && !p.have_copying {
-            let existing = self.requests_by_dest.get(&(p.rse.clone(), p.did.clone()));
-            if existing.is_empty() {
-                let req_id = self.next_id();
-                self.requests.insert(
-                    TransferRequest {
-                        id: req_id,
+            // Transfer request, unless data is (or is becoming) available.
+            // Dedup against live requests AND earlier entries of this batch.
+            if !p.have_available && !p.have_copying {
+                let dest = (p.rse.clone(), p.did.clone());
+                if self.requests_by_dest.get(&dest).is_empty() && batch_dests.insert(dest) {
+                    request_rows.push(TransferRequest {
+                        id: self.next_id(),
                         did: p.did.clone(),
                         dst_rse: p.rse.clone(),
                         rule_id,
@@ -352,11 +370,32 @@ impl Catalog {
                         updated_at: now,
                         retry_after: None,
                         last_error: None,
-                    },
-                    now,
-                )?;
-                self.metrics.incr("requests.created", 1);
+                    });
+                }
             }
+        }
+
+        // Commit phase: one batched write per table. The stub insert is
+        // the only realistically fallible commit (a racing add_replica can
+        // make a staged stub a duplicate), so it runs FIRST — if it fails,
+        // no other table has been touched yet and the plan aborts cleanly.
+        self.replicas.insert_bulk(stubs, now)?;
+        self.locks.insert_bulk(lock_rows, now)?;
+        let n_requests = request_rows.len();
+        if n_requests > 0 {
+            self.requests.insert_bulk(request_rows, now)?;
+            self.metrics.incr("requests.created", n_requests as u64);
+        }
+        self.replicas.update_bulk(&protect, now, |r| {
+            r.lock_count += 1;
+            r.tombstone = None;
+        });
+        self.rules.update(&rule_id, now, |r| {
+            r.locks_ok += tally_ok;
+            r.locks_replicating += tally_replicating;
+        });
+        for (rse, (bytes, files)) in usage {
+            self.charge_usage(account, &rse, bytes, files);
         }
         Ok(())
     }
@@ -610,17 +649,15 @@ impl Catalog {
     // rule removal + expiry (§4.3)
     // ------------------------------------------------------------------
 
-    /// Remove a rule: locks released, usage refunded, replicas tombstoned
-    /// when unprotected ("at the end of the rule lifetime replicas become
-    /// eligible for deletion").
+    /// Remove a rule: locks released in one batched commit, usage
+    /// refunded per RSE, replicas tombstoned when unprotected ("at the
+    /// end of the rule lifetime replicas become eligible for deletion").
     pub fn delete_rule(&self, rule_id: u64) -> Result<()> {
         let now = self.now();
         let rule = self.get_rule(rule_id)?;
-        for lock_key in self.locks_by_rule.get(&rule_id) {
-            if let Some(lock) = self.locks.get(&lock_key) {
-                self.release_lock(&lock, &rule.account, now, rule.purge_replicas);
-            }
-        }
+        let lock_keys = self.locks_by_rule.get(&rule_id);
+        let released = self.locks.remove_bulk(&lock_keys, now);
+        self.release_removed_locks(&released, &rule.account, now, rule.purge_replicas);
         self.rules.remove(&rule_id, now);
         self.metrics.incr("rules.deleted", 1);
         self.notify(
@@ -633,12 +670,28 @@ impl Catalog {
         Ok(())
     }
 
-    /// Release one lock: remove the row, decrement replica lock_count,
-    /// tombstone the replica if now unprotected, refund usage.
+    /// Release one lock: remove the row, then the shared post-release
+    /// bookkeeping.
     fn release_lock(&self, lock: &ReplicaLock, account: &str, now: EpochMs, purge: bool) {
         self.locks
             .remove(&(lock.rule_id, lock.rse.clone(), lock.did.clone()), now);
-        let replica_key = (lock.rse.clone(), lock.did.clone());
+        self.release_removed_locks(std::slice::from_ref(lock), account, now, purge);
+    }
+
+    /// Post-removal bookkeeping for a batch of released locks (the lock
+    /// rows themselves are already gone): replica lock_counts and
+    /// tombstones flip in one commit, never-completed Copying stubs are
+    /// dropped, and usage is refunded once per RSE instead of per row.
+    fn release_removed_locks(
+        &self,
+        locks: &[ReplicaLock],
+        account: &str,
+        now: EpochMs,
+        purge: bool,
+    ) {
+        if locks.is_empty() {
+            return;
+        }
         // §4.3: "all rule removals are configured with a 24h delay to undo
         // any potential changes" — the grace period before eligibility.
         let grace = if purge {
@@ -646,22 +699,39 @@ impl Catalog {
         } else {
             self.cfg.get_duration_ms("reaper", "tombstone_grace", 24 * 3_600_000)
         };
-        if let Some(rep) = self.replicas.get(&replica_key) {
-            let new_count = rep.lock_count.saturating_sub(1);
-            self.replicas.update(&replica_key, now, |r| {
-                r.lock_count = new_count;
-                if new_count == 0 {
-                    r.tombstone = Some(now + grace);
+        let replica_keys: Vec<(String, DidKey)> =
+            locks.iter().map(|l| (l.rse.clone(), l.did.clone())).collect();
+        let updated = self.replicas.update_bulk(&replica_keys, now, |r| {
+            r.lock_count = r.lock_count.saturating_sub(1);
+            if r.lock_count == 0 {
+                r.tombstone = Some(now + grace);
+            }
+        });
+        // A never-completed Copying stub with no locks left: drop it
+        // immediately (nothing physical exists yet).
+        let dead: Vec<(String, DidKey)> = updated
+            .iter()
+            .filter(|r| r.lock_count == 0 && r.state == ReplicaState::Copying)
+            .map(|r| (r.rse.clone(), r.did.clone()))
+            .collect();
+        if !dead.is_empty() {
+            let removed = self.replicas.remove_bulk(&dead, now);
+            let mut seen: BTreeSet<DidKey> = BTreeSet::new();
+            for rep in &removed {
+                if seen.insert(rep.did.clone()) {
+                    self.refresh_availability(&rep.did);
                 }
-            });
-            // A never-completed Copying stub with no locks left: drop it
-            // immediately (nothing physical exists yet).
-            if new_count == 0 && rep.state == ReplicaState::Copying {
-                self.replicas.remove(&replica_key, now);
-                self.refresh_availability(&lock.did);
             }
         }
-        self.charge_usage(account, &lock.rse, -(lock.bytes as i64), -1);
+        let mut usage: std::collections::BTreeMap<String, (i64, i64)> = Default::default();
+        for l in locks {
+            let e = usage.entry(l.rse.clone()).or_insert((0, 0));
+            e.0 -= l.bytes as i64;
+            e.1 -= 1;
+        }
+        for (rse, (bytes, files)) in usage {
+            self.charge_usage(account, &rse, bytes, files);
+        }
     }
 
     /// Expired rules (judge-cleaner work queue): delete up to `limit`
@@ -703,6 +773,9 @@ impl Catalog {
                 .filter(|r| self.get_rse(r).map(|x| x.availability_write).unwrap_or(false))
                 .cloned()
                 .collect();
+            // Plan across all newly reachable files, then extend the rule
+            // with one batched commit.
+            let mut plan: Vec<PlannedLock> = Vec::new();
             for f in files {
                 // Skip files the rule already covers.
                 let has_lock = self
@@ -724,22 +797,18 @@ impl Catalog {
                     &BTreeSet::new(),
                 ) {
                     for (rse, have_available, have_copying) in chosen {
-                        self.apply_planned_lock(
-                            rule_id,
-                            &rule.account,
-                            &rule.activity,
-                            PlannedLock {
-                                did: f.key.clone(),
-                                bytes: f.bytes,
-                                adler32: f.adler32.clone(),
-                                rse,
-                                have_available,
-                                have_copying,
-                            },
-                        )?;
+                        plan.push(PlannedLock {
+                            did: f.key.clone(),
+                            bytes: f.bytes,
+                            adler32: f.adler32.clone(),
+                            rse,
+                            have_available,
+                            have_copying,
+                        });
                     }
                 }
             }
+            self.apply_planned_locks(rule_id, &rule.account, &rule.activity, plan)?;
             self.refresh_rule_state(rule_id);
         }
         Ok(())

@@ -160,7 +160,7 @@ impl Catalog {
                     Err(e) => {
                         // Don't fail the whole matching sweep on one bad
                         // template (e.g. expression currently empty).
-                        log::warn!("subscription {} rule failed on {did_key}: {e}", sub.name);
+                        crate::log_warn!("subscription {} rule failed on {did_key}: {e}", sub.name);
                     }
                 }
             }

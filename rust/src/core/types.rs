@@ -359,7 +359,8 @@ impl Row for Account {
 }
 
 /// Authentication mechanism (paper §4.1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+/// `Hash` because it is part of the `Identity` table key (shard routing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum AuthType {
     UserPass,
     X509,

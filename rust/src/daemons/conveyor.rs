@@ -54,21 +54,9 @@ impl Daemon for Submitter {
         let cat = &self.ctx.catalog;
         let (worker, n_workers) = self.ctx.heartbeats.beat("submitter", &self.instance, now);
 
-        // Promote due retries back to the queue (index-driven: O(retries),
-        // not O(all requests) — see EXPERIMENTS.md §Perf).
-        for id in cat.requests_by_state.get(&RequestState::Retry) {
-            let due = cat
-                .requests
-                .get(&id)
-                .map(|r| r.retry_after.map(|t| t <= now).unwrap_or(true))
-                .unwrap_or(false);
-            if due {
-                cat.requests.update(&id, now, |r| {
-                    r.state = RequestState::Queued;
-                    r.retry_after = None;
-                });
-            }
-        }
+        // Promote due retries back to the queue in one batched commit
+        // (index-driven: O(retries), not O(all requests)).
+        cat.promote_due_retries(now);
 
         // Our shard of the queue.
         let queued: Vec<TransferRequest> = cat
@@ -82,6 +70,9 @@ impl Daemon for Submitter {
 
         let mut jobs_per_fts: Vec<Vec<(u64, TransferJob)>> =
             vec![Vec::new(); self.ctx.fts.len().max(1)];
+        // (request id, source RSE, fts index) picks, flipped to SUBMITTED
+        // in one batched commit after the selection loop.
+        let mut picks: Vec<(u64, String, usize)> = Vec::new();
         let mut processed = 0;
 
         for req in queued {
@@ -147,24 +138,23 @@ impl Daemon for Submitter {
                     activity: req.activity.clone(),
                 },
             ));
-            cat.requests.update(&req.id, now, |r| {
-                r.state = RequestState::Submitted;
-                r.src_rse = Some(src.rse.clone());
-                r.fts_server = Some(fts_idx);
-                r.updated_at = now;
-            });
+            picks.push((req.id, src.rse.clone(), fts_idx));
         }
 
-        // Bulk submission per FTS server.
+        // One batched commit flips the whole picked set to SUBMITTED.
+        cat.mark_requests_submitted(&picks, now);
+
+        // Bulk submission per FTS server; external ids land in one
+        // batched commit per server.
         for (fts_idx, batch) in jobs_per_fts.into_iter().enumerate() {
             if batch.is_empty() {
                 continue;
             }
             let (req_ids, jobs): (Vec<u64>, Vec<TransferJob>) = batch.into_iter().unzip();
             let external = self.ctx.fts[fts_idx].submit(jobs, now);
-            for (req_id, ext) in req_ids.iter().zip(external.iter()) {
-                cat.requests.update(req_id, now, |r| r.external_id = Some(*ext));
-            }
+            let pairs: Vec<(u64, u64)> =
+                req_ids.iter().copied().zip(external.iter().copied()).collect();
+            cat.record_external_ids(&pairs, now);
             cat.metrics.incr("conveyor.submitted", req_ids.len() as u64);
         }
         processed

@@ -34,7 +34,7 @@ impl Daemon for Hermes {
         let cat = &self.ctx.catalog;
         let batch = cat.outbox.scan_limit(self.bulk, |_| true);
         let n = batch.len();
-        for msg in batch {
+        for msg in &batch {
             // Email events go to the mail sink, everything to the broker.
             if msg.event_type.starts_with("email-") {
                 self.emails_sent += 1;
@@ -43,8 +43,10 @@ impl Daemon for Hermes {
                 "rucio.events",
                 Message::new(&msg.event_type, msg.payload.clone(), now),
             );
-            cat.outbox.remove(&msg.id, now);
         }
+        // Drain the delivered slice of the outbox in one batched commit.
+        let ids: Vec<u64> = batch.iter().map(|m| m.id).collect();
+        cat.outbox.remove_bulk(&ids, now);
         cat.metrics.incr("hermes.delivered", n as u64);
         cat.metrics.gauge_set("hermes.outbox_depth", cat.outbox.len() as u64);
         n

@@ -39,6 +39,8 @@ impl Daemon for Cleaner {
 
     fn tick(&mut self, now: EpochMs) -> usize {
         let _ = self.ctx.heartbeats.beat("judge-cleaner", &self.instance, now);
+        // Work queue comes off the expiry index; each rule's locks are
+        // released through the batched delete path (one commit per rule).
         self.ctx.catalog.process_expired_rules(self.bulk)
     }
 }

@@ -54,11 +54,10 @@ impl Reaper {
         }
     }
 
-    /// Delete one replica from storage + catalog. Returns true on
-    /// success; storage failures leave the replica for a later sweep
-    /// (the paper's deletion error rate).
-    fn delete_one(&self, rep: &Replica, _now: EpochMs) -> bool {
-        let cat = &self.ctx.catalog;
+    /// Delete one replica's bytes from storage. Returns true when the
+    /// catalog row may be removed; storage failures leave the replica for
+    /// a later sweep (the paper's deletion error rate).
+    fn storage_delete(&self, rep: &Replica) -> bool {
         if let Some(sys) = self.ctx.fleet.get(&rep.rse) {
             match sys.delete(&rep.pfn) {
                 Ok(()) => {}
@@ -66,12 +65,26 @@ impl Reaper {
                     // already gone from storage: clean the catalog anyway
                 }
                 Err(_) => {
-                    cat.metrics.incr("reaper.errors", 1);
+                    self.ctx.catalog.metrics.incr("reaper.errors", 1);
                     return false;
                 }
             }
         }
-        if cat.remove_replica(&rep.rse, &rep.did).is_ok() {
+        true
+    }
+
+    /// Remove the storage-deleted victims from the catalog in one batched
+    /// commit and emit the per-deletion bookkeeping. Returns the number of
+    /// rows actually removed.
+    fn commit_deletions(&self, victims: &[Replica]) -> usize {
+        if victims.is_empty() {
+            return 0;
+        }
+        let cat = &self.ctx.catalog;
+        let keys: Vec<(String, crate::core::types::DidKey)> =
+            victims.iter().map(|r| (r.rse.clone(), r.did.clone())).collect();
+        let removed = cat.remove_replicas_bulk(&keys);
+        for rep in &removed {
             cat.metrics.incr("reaper.deleted", 1);
             cat.metrics.incr("reaper.deleted_bytes", rep.bytes);
             cat.notify(
@@ -82,10 +95,8 @@ impl Reaper {
                     .with("name", rep.did.name.as_str())
                     .with("bytes", rep.bytes),
             );
-            true
-        } else {
-            false
         }
+        removed.len()
     }
 }
 
@@ -115,11 +126,14 @@ impl Daemon for Reaper {
             if eligible.is_empty() {
                 continue;
             }
+            // Storage deletes happen per file; the catalog rows for every
+            // successful delete on this RSE land in ONE batched commit.
+            let mut victims: Vec<Replica> = Vec::new();
             match self.mode_for(&rse) {
                 ReaperMode::Greedy => {
                     for rep in eligible {
-                        if self.delete_one(&rep, now) {
-                            deleted += 1;
+                        if self.storage_delete(&rep) {
+                            victims.push(rep);
                         }
                     }
                 }
@@ -138,13 +152,14 @@ impl Daemon for Reaper {
                         if free >= min_free_bytes {
                             break;
                         }
-                        if self.delete_one(&rep, now) {
+                        if self.storage_delete(&rep) {
                             free += rep.bytes;
-                            deleted += 1;
+                            victims.push(rep);
                         }
                     }
                 }
             }
+            deleted += self.commit_deletions(&victims);
         }
         deleted
     }

@@ -1,15 +1,36 @@
-//! Typed tables with secondary indexes and history logs.
+//! Typed tables with secondary indexes and history logs, stored as N-way
+//! hash-sharded ordered maps (paper §3.6: hash-based partitioning + bulk
+//! operations sustain the production mutation rates).
+//!
+//! Layout: every table key is FNV-hashed onto one of `shard_count` shards,
+//! each a `RwLock<BTreeMap>`. Single-row operations lock exactly one shard,
+//! so writers on different shards never contend; ordered reads (`scan`,
+//! `range`-style pages, `for_each`) take all shard read locks at once and
+//! k-way-merge the per-shard maps, preserving the global key order of the
+//! original single-map implementation. Batched mutations ([`Table::apply`],
+//! `insert_bulk` / `upsert_bulk` / `remove_bulk` / `update_bulk`) take all
+//! shard write locks once per call — one commit per batch instead of one
+//! lock round-trip per row.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+use std::hash::{Hash, Hasher};
+use std::ops::Bound;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::common::clock::EpochMs;
 use crate::common::error::{Result, RucioError};
+use crate::db::FnvHasher;
+
+/// Default shard count for new tables; `Catalog` overrides it from the
+/// `[db] shards` config key.
+pub const DEFAULT_SHARDS: usize = 8;
 
 /// A row stored in a [`Table`]. The key must be stable for the lifetime of
 /// the row (mutating a row's key is a delete + insert).
 pub trait Row: Clone + Send + Sync + 'static {
-    type Key: Ord + Clone + Send + Sync + 'static;
+    type Key: Ord + Clone + Hash + Send + Sync + 'static;
     fn key(&self) -> Self::Key;
 }
 
@@ -21,37 +42,125 @@ pub enum Op {
     Delete,
 }
 
+/// One operation inside a [`Batch`].
+pub enum BatchOp<V: Row> {
+    /// Insert a new row; the whole batch fails on a duplicate key.
+    Insert(V),
+    /// Insert or replace.
+    Upsert(V),
+    /// Remove by key (missing keys are skipped, not errors).
+    Remove(V::Key),
+}
+
+/// An ordered list of mutations applied in one commit ([`Table::apply`]).
+/// Per-key operation order is preserved; atomicity scope is the whole
+/// table (all shards locked for the duration of the commit), so readers
+/// never observe a half-applied batch.
+pub struct Batch<V: Row> {
+    ops: Vec<BatchOp<V>>,
+}
+
+impl<V: Row> Default for Batch<V> {
+    fn default() -> Self {
+        Batch { ops: Vec::new() }
+    }
+}
+
+impl<V: Row> Batch<V> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, row: V) -> &mut Self {
+        self.ops.push(BatchOp::Insert(row));
+        self
+    }
+
+    pub fn upsert(&mut self, row: V) -> &mut Self {
+        self.ops.push(BatchOp::Upsert(row));
+        self
+    }
+
+    pub fn remove(&mut self, key: V::Key) -> &mut Self {
+        self.ops.push(BatchOp::Remove(key));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// Outcome of a batch commit.
+pub struct BatchSummary<V: Row> {
+    pub inserted: usize,
+    pub updated: usize,
+    /// Rows removed by `Remove` ops, in op order.
+    pub removed: Vec<V>,
+}
+
+/// One page of an ordered cursor scan ([`Table::scan_page`]).
+pub struct Page<V: Row> {
+    /// Rows in global key order.
+    pub rows: Vec<V>,
+    /// Cursor for the next page: `Some(last key)` when more rows remain,
+    /// `None` when the scan is exhausted.
+    pub next_cursor: Option<V::Key>,
+}
+
 /// Maintenance hook a secondary index registers with its table.
 trait IndexMaint<V>: Send + Sync {
     fn on_insert(&self, row: &V);
     fn on_remove(&self, row: &V);
 }
 
-struct Inner<V: Row> {
+struct Shard<V: Row> {
     rows: BTreeMap<V::Key, V>,
-    history: Option<Vec<(EpochMs, Op, V)>>,
 }
 
-/// A typed, thread-safe, ordered table.
+/// A typed, thread-safe, ordered, hash-sharded table.
 pub struct Table<V: Row> {
     name: &'static str,
-    inner: RwLock<Inner<V>>,
+    shards: Vec<RwLock<Shard<V>>>,
+    /// Total live rows, maintained on every mutation: O(1) `len()` with no
+    /// locking, and the closure handed to `db::Registry` for monitoring.
+    len: Arc<AtomicUsize>,
+    history: RwLock<Option<Vec<(EpochMs, Op, V)>>>,
     indexes: RwLock<Vec<Arc<dyn IndexMaint<V>>>>,
+}
+
+fn make_shards<V: Row>(n: usize) -> Vec<RwLock<Shard<V>>> {
+    (0..n.max(1))
+        .map(|_| RwLock::new(Shard { rows: BTreeMap::new() }))
+        .collect()
 }
 
 impl<V: Row> Table<V> {
     pub fn new(name: &'static str) -> Self {
         Table {
             name,
-            inner: RwLock::new(Inner { rows: BTreeMap::new(), history: None }),
+            shards: make_shards(DEFAULT_SHARDS),
+            len: Arc::new(AtomicUsize::new(0)),
+            history: RwLock::new(None),
             indexes: RwLock::new(Vec::new()),
         }
+    }
+
+    /// Rebuild with `n` shards (builder; the table must still be empty).
+    pub fn with_shards(mut self, n: usize) -> Self {
+        assert!(self.is_empty(), "with_shards on non-empty table {}", self.name);
+        self.shards = make_shards(n);
+        self
     }
 
     /// Enable the history log (paper §3.6 "storing of deleted rows in
     /// historical tables").
     pub fn with_history(self) -> Self {
-        self.inner.write().unwrap().history = Some(Vec::new());
+        *self.history.write().unwrap() = Some(Vec::new());
         self
     }
 
@@ -59,79 +168,104 @@ impl<V: Row> Table<V> {
         self.name
     }
 
-    /// Attach a secondary index. Must be called before rows exist (indexes
-    /// do not back-fill); enforced with an error otherwise.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: &V::Key) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        let mut h = FnvHasher::default();
+        key.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    /// Attach a secondary index. Existing rows are back-filled, so indexes
+    /// can be added to live, non-empty tables; mutation is blocked for the
+    /// duration of the back-fill so no row is missed or double-counted.
     pub fn add_index<IK>(&self, index: &Index<V, IK>) -> Result<()>
     where
         IK: Ord + Clone + Send + Sync + 'static,
     {
-        if !self.inner.read().unwrap().rows.is_empty() {
-            return Err(RucioError::DatabaseError(format!(
-                "table {}: add_index on non-empty table",
-                self.name
-            )));
+        let guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        let mut indexes = self.indexes.write().unwrap();
+        for g in &guards {
+            for row in g.rows.values() {
+                index.maint.on_insert(row);
+            }
         }
-        self.indexes.write().unwrap().push(index.maint.clone());
+        indexes.push(index.maint.clone());
         Ok(())
     }
 
     pub fn len(&self) -> usize {
-        self.inner.read().unwrap().rows.len()
+        self.len.load(Ordering::Relaxed)
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// O(1) live-row counter, detached from the table's lifetime — what
+    /// [`crate::db::Registry`] stores for monitoring probes.
+    pub fn len_counter(&self) -> Arc<dyn Fn() -> usize + Send + Sync> {
+        let len = self.len.clone();
+        Arc::new(move || len.load(Ordering::Relaxed))
+    }
+
     /// Insert a new row; errors on duplicate key.
     pub fn insert(&self, row: V, now: EpochMs) -> Result<()> {
-        let mut inner = self.inner.write().unwrap();
         let key = row.key();
-        if inner.rows.contains_key(&key) {
+        let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
+        if shard.rows.contains_key(&key) {
             return Err(RucioError::Duplicate(format!("table {}: duplicate key", self.name)));
         }
         for idx in self.indexes.read().unwrap().iter() {
             idx.on_insert(&row);
         }
-        if let Some(h) = &mut inner.history {
+        if let Some(h) = self.history.write().unwrap().as_mut() {
             h.push((now, Op::Insert, row.clone()));
         }
-        inner.rows.insert(key, row);
+        shard.rows.insert(key, row);
+        self.len.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     /// Insert or replace.
     pub fn upsert(&self, row: V, now: EpochMs) {
-        let mut inner = self.inner.write().unwrap();
         let key = row.key();
+        let mut shard = self.shards[self.shard_of(&key)].write().unwrap();
         let indexes = self.indexes.read().unwrap();
-        if let Some(old) = inner.rows.get(&key) {
+        if let Some(old) = shard.rows.get(&key) {
             for idx in indexes.iter() {
                 idx.on_remove(old);
             }
+        } else {
+            self.len.fetch_add(1, Ordering::Relaxed);
         }
         for idx in indexes.iter() {
             idx.on_insert(&row);
         }
-        if let Some(h) = &mut inner.history {
+        if let Some(h) = self.history.write().unwrap().as_mut() {
             h.push((now, Op::Update, row.clone()));
         }
-        inner.rows.insert(key, row);
+        shard.rows.insert(key, row);
     }
 
     pub fn get(&self, key: &V::Key) -> Option<V> {
-        self.inner.read().unwrap().rows.get(key).cloned()
+        self.shards[self.shard_of(key)].read().unwrap().rows.get(key).cloned()
     }
 
     pub fn contains(&self, key: &V::Key) -> bool {
-        self.inner.read().unwrap().rows.contains_key(key)
+        self.shards[self.shard_of(key)].read().unwrap().rows.contains_key(key)
     }
 
     /// In-place mutation through a closure; index entries are refreshed.
     /// Returns the updated row, or `None` if absent.
     pub fn update<F: FnOnce(&mut V)>(&self, key: &V::Key, now: EpochMs, f: F) -> Option<V> {
-        let mut inner = self.inner.write().unwrap();
-        let row = inner.rows.get(key)?.clone();
+        let mut shard = self.shards[self.shard_of(key)].write().unwrap();
+        let row = shard.rows.get(key)?.clone();
         let indexes = self.indexes.read().unwrap();
         for idx in indexes.iter() {
             idx.on_remove(&row);
@@ -142,79 +276,351 @@ impl<V: Row> Table<V> {
         for idx in indexes.iter() {
             idx.on_insert(&new_row);
         }
-        if let Some(h) = &mut inner.history {
+        if let Some(h) = self.history.write().unwrap().as_mut() {
             h.push((now, Op::Update, new_row.clone()));
         }
-        inner.rows.insert(key.clone(), new_row.clone());
+        shard.rows.insert(key.clone(), new_row.clone());
         Some(new_row)
     }
 
     pub fn remove(&self, key: &V::Key, now: EpochMs) -> Option<V> {
-        let mut inner = self.inner.write().unwrap();
-        let row = inner.rows.remove(key)?;
+        let mut shard = self.shards[self.shard_of(key)].write().unwrap();
+        let row = shard.rows.remove(key)?;
+        self.len.fetch_sub(1, Ordering::Relaxed);
         for idx in self.indexes.read().unwrap().iter() {
             idx.on_remove(&row);
         }
-        if let Some(h) = &mut inner.history {
+        if let Some(h) = self.history.write().unwrap().as_mut() {
             h.push((now, Op::Delete, row.clone()));
         }
         Some(row)
     }
 
-    /// Snapshot scan with a filter (clones matching rows).
+    // ------------------------------------------------------------------
+    // batch mutation (one commit, all shards locked once)
+    // ------------------------------------------------------------------
+
+    /// Apply a batch atomically: all shard write locks are held for the
+    /// whole commit, so concurrent readers see either none or all of the
+    /// batch. `Insert` duplicates (against the table or an earlier op in
+    /// the same batch) fail the entire batch before any mutation. The
+    /// closure-free op set keeps batches send-able across layers.
+    ///
+    /// Do not touch the same table from index hooks or in between — the
+    /// commit holds every shard lock.
+    pub fn apply(&self, batch: Batch<V>, now: EpochMs) -> Result<BatchSummary<V>> {
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        // Dry-run: validate Insert ops against an overlay of the batch.
+        let mut overlay: BTreeMap<V::Key, bool> = BTreeMap::new();
+        for op in &batch.ops {
+            match op {
+                BatchOp::Insert(row) => {
+                    let k = row.key();
+                    let exists = match overlay.get(&k) {
+                        Some(e) => *e,
+                        None => guards[self.shard_of(&k)].rows.contains_key(&k),
+                    };
+                    if exists {
+                        return Err(RucioError::Duplicate(format!(
+                            "table {}: duplicate key in batch",
+                            self.name
+                        )));
+                    }
+                    overlay.insert(k, true);
+                }
+                BatchOp::Upsert(row) => {
+                    overlay.insert(row.key(), true);
+                }
+                BatchOp::Remove(k) => {
+                    overlay.insert(k.clone(), false);
+                }
+            }
+        }
+        // Commit.
+        let indexes = self.indexes.read().unwrap();
+        let mut history = self.history.write().unwrap();
+        let mut summary = BatchSummary { inserted: 0, updated: 0, removed: Vec::new() };
+        for op in batch.ops {
+            match op {
+                BatchOp::Insert(row) => {
+                    let k = row.key();
+                    let si = self.shard_of(&k);
+                    for idx in indexes.iter() {
+                        idx.on_insert(&row);
+                    }
+                    if let Some(h) = history.as_mut() {
+                        h.push((now, Op::Insert, row.clone()));
+                    }
+                    guards[si].rows.insert(k, row);
+                    self.len.fetch_add(1, Ordering::Relaxed);
+                    summary.inserted += 1;
+                }
+                BatchOp::Upsert(row) => {
+                    let k = row.key();
+                    let si = self.shard_of(&k);
+                    if let Some(old) = guards[si].rows.get(&k) {
+                        for idx in indexes.iter() {
+                            idx.on_remove(old);
+                        }
+                        summary.updated += 1;
+                    } else {
+                        self.len.fetch_add(1, Ordering::Relaxed);
+                        summary.inserted += 1;
+                    }
+                    for idx in indexes.iter() {
+                        idx.on_insert(&row);
+                    }
+                    if let Some(h) = history.as_mut() {
+                        h.push((now, Op::Update, row.clone()));
+                    }
+                    guards[si].rows.insert(k, row);
+                }
+                BatchOp::Remove(k) => {
+                    let si = self.shard_of(&k);
+                    if let Some(old) = guards[si].rows.remove(&k) {
+                        self.len.fetch_sub(1, Ordering::Relaxed);
+                        for idx in indexes.iter() {
+                            idx.on_remove(&old);
+                        }
+                        if let Some(h) = history.as_mut() {
+                            h.push((now, Op::Delete, old.clone()));
+                        }
+                        summary.removed.push(old);
+                    }
+                }
+            }
+        }
+        Ok(summary)
+    }
+
+    /// Insert many rows in one commit; the whole call fails (with no
+    /// partial state) on any duplicate key.
+    pub fn insert_bulk(&self, rows: Vec<V>, now: EpochMs) -> Result<usize> {
+        if rows.is_empty() {
+            return Ok(0);
+        }
+        let mut batch = Batch::new();
+        for row in rows {
+            batch.insert(row);
+        }
+        Ok(self.apply(batch, now)?.inserted)
+    }
+
+    /// Insert-or-replace many rows in one commit.
+    pub fn upsert_bulk(&self, rows: Vec<V>, now: EpochMs) -> usize {
+        if rows.is_empty() {
+            return 0;
+        }
+        let mut batch = Batch::new();
+        for row in rows {
+            batch.upsert(row);
+        }
+        let s = self.apply(batch, now).expect("upsert batch cannot fail");
+        s.inserted + s.updated
+    }
+
+    /// Remove many keys in one commit; missing keys are skipped. Returns
+    /// the removed rows in op order.
+    pub fn remove_bulk(&self, keys: &[V::Key], now: EpochMs) -> Vec<V> {
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        let mut batch = Batch::new();
+        for k in keys {
+            batch.remove(k.clone());
+        }
+        self.apply(batch, now).expect("remove batch cannot fail").removed
+    }
+
+    /// Apply one closure to many rows in a single commit (bulk state
+    /// transitions). Missing keys are skipped; index entries and history
+    /// are maintained per row. Returns the updated rows in key-arg order.
+    pub fn update_bulk<F: FnMut(&mut V)>(
+        &self,
+        keys: &[V::Key],
+        now: EpochMs,
+        mut f: F,
+    ) -> Vec<V> {
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        let mut guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
+        let indexes = self.indexes.read().unwrap();
+        let mut history = self.history.write().unwrap();
+        let mut out = Vec::with_capacity(keys.len());
+        for key in keys {
+            let si = self.shard_of(key);
+            let Some(row) = guards[si].rows.get(key) else { continue };
+            let row = row.clone();
+            for idx in indexes.iter() {
+                idx.on_remove(&row);
+            }
+            let mut new_row = row;
+            f(&mut new_row);
+            debug_assert!(new_row.key() == *key, "update must not change the primary key");
+            for idx in indexes.iter() {
+                idx.on_insert(&new_row);
+            }
+            if let Some(h) = history.as_mut() {
+                h.push((now, Op::Update, new_row.clone()));
+            }
+            guards[si].rows.insert(key.clone(), new_row.clone());
+            out.push(new_row);
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // ordered reads (k-way merge across shards)
+    // ------------------------------------------------------------------
+
+    /// Visit every row in global key order until `f` returns false.
+    /// Takes all shard read locks at once (consistent snapshot) and merges
+    /// the per-shard ordered maps.
+    fn merged_for_each<F: FnMut(&V) -> bool>(&self, mut f: F) {
+        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let mut iters: Vec<_> = guards.iter().map(|g| g.rows.iter()).collect();
+        let mut heap: BinaryHeap<Reverse<(&V::Key, usize)>> = BinaryHeap::new();
+        let mut heads: Vec<Option<&V>> = vec![None; iters.len()];
+        for (i, it) in iters.iter_mut().enumerate() {
+            if let Some((k, v)) = it.next() {
+                heap.push(Reverse((k, i)));
+                heads[i] = Some(v);
+            }
+        }
+        while let Some(Reverse((_k, i))) = heap.pop() {
+            let v = heads[i].take().expect("head follows heap");
+            if !f(v) {
+                return;
+            }
+            if let Some((k2, v2)) = iters[i].next() {
+                heap.push(Reverse((k2, i)));
+                heads[i] = Some(v2);
+            }
+        }
+    }
+
+    /// Snapshot scan with a filter (clones matching rows), in key order.
     pub fn scan<F: FnMut(&V) -> bool>(&self, mut pred: F) -> Vec<V> {
-        self.inner
-            .read()
-            .unwrap()
-            .rows
-            .values()
-            .filter(|v| pred(v))
-            .cloned()
-            .collect()
+        let mut out = Vec::new();
+        self.merged_for_each(|v| {
+            if pred(v) {
+                out.push(v.clone());
+            }
+            true
+        });
+        out
     }
 
     /// Scan at most `limit` matching rows (the daemon "read a batch" path —
     /// keeps reaper/conveyor scans O(batch) when combined with indexes).
     pub fn scan_limit<F: FnMut(&V) -> bool>(&self, limit: usize, mut pred: F) -> Vec<V> {
-        let inner = self.inner.read().unwrap();
         let mut out = Vec::new();
-        for v in inner.rows.values() {
+        self.merged_for_each(|v| {
             if pred(v) {
                 out.push(v.clone());
-                if out.len() >= limit {
-                    break;
-                }
             }
-        }
+            out.len() < limit
+        });
         out
     }
 
-    /// Fold over all rows without cloning.
+    /// Cursor-based pagination in key order: rows strictly after `cursor`
+    /// (all rows when `None`), up to `limit`. The returned
+    /// [`Page::next_cursor`] feeds the next call; `None` means exhausted.
+    pub fn scan_page(&self, cursor: Option<&V::Key>, limit: usize) -> Page<V> {
+        match cursor {
+            Some(c) => self.range_page(Bound::Excluded(c), Bound::Unbounded, limit),
+            None => self.range_page(Bound::Unbounded, Bound::Unbounded, limit),
+        }
+    }
+
+    /// One page of rows with keys in `(lo, hi)` bounds, in key order.
+    pub fn range_page(&self, lo: Bound<&V::Key>, hi: Bound<&V::Key>, limit: usize) -> Page<V> {
+        let limit = limit.max(1);
+        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let mut iters: Vec<_> = guards.iter().map(|g| g.rows.range((lo, hi))).collect();
+        let mut heap: BinaryHeap<Reverse<(&V::Key, usize)>> = BinaryHeap::new();
+        let mut heads: Vec<Option<&V>> = vec![None; iters.len()];
+        for (i, it) in iters.iter_mut().enumerate() {
+            if let Some((k, v)) = it.next() {
+                heap.push(Reverse((k, i)));
+                heads[i] = Some(v);
+            }
+        }
+        let mut rows: Vec<V> = Vec::new();
+        let mut next_cursor = None;
+        while let Some(Reverse((_k, i))) = heap.pop() {
+            if rows.len() >= limit {
+                next_cursor = rows.last().map(|r| r.key());
+                break;
+            }
+            let v = heads[i].take().expect("head follows heap");
+            rows.push(v.clone());
+            if let Some((k2, v2)) = iters[i].next() {
+                heap.push(Reverse((k2, i)));
+                heads[i] = Some(v2);
+            }
+        }
+        Page { rows, next_cursor }
+    }
+
+    /// Fold over all rows without cloning, in key order.
     pub fn fold<A, F: FnMut(A, &V) -> A>(&self, init: A, mut f: F) -> A {
-        let inner = self.inner.read().unwrap();
-        let mut acc = init;
-        for v in inner.rows.values() {
-            acc = f(acc, v);
-        }
-        acc
+        let mut acc = Some(init);
+        self.merged_for_each(|v| {
+            acc = Some(f(acc.take().expect("acc always present"), v));
+            true
+        });
+        acc.expect("acc always present")
     }
 
-    /// Visit every row (no clone); used by reports.
+    /// Visit every row (no clone), in key order; used by reports.
     pub fn for_each<F: FnMut(&V)>(&self, mut f: F) {
-        let inner = self.inner.read().unwrap();
-        for v in inner.rows.values() {
+        self.merged_for_each(|v| {
             f(v);
-        }
+            true
+        });
     }
 
-    /// All keys (cheap-ish snapshot for iteration patterns).
+    /// Project matching rows without cloning whole rows (read-heavy report
+    /// paths: extract only the cells you need).
+    pub fn filter_map<T, F: FnMut(&V) -> Option<T>>(&self, mut f: F) -> Vec<T> {
+        let mut out = Vec::new();
+        self.merged_for_each(|v| {
+            if let Some(t) = f(v) {
+                out.push(t);
+            }
+            true
+        });
+        out
+    }
+
+    /// Count matching rows without cloning.
+    pub fn count_where<F: FnMut(&V) -> bool>(&self, mut pred: F) -> usize {
+        let mut n = 0;
+        self.merged_for_each(|v| {
+            if pred(v) {
+                n += 1;
+            }
+            true
+        });
+        n
+    }
+
+    /// All keys in order (cheap-ish snapshot for iteration patterns).
     pub fn keys(&self) -> Vec<V::Key> {
-        self.inner.read().unwrap().rows.keys().cloned().collect()
+        let mut out = Vec::with_capacity(self.len());
+        self.merged_for_each(|v| {
+            out.push(v.key());
+            true
+        });
+        out
     }
 
     /// History snapshot (empty if history is disabled).
     pub fn history(&self) -> Vec<(EpochMs, Op, V)> {
-        self.inner.read().unwrap().history.clone().unwrap_or_default()
+        self.history.read().unwrap().clone().unwrap_or_default()
     }
 }
 
@@ -443,11 +849,20 @@ mod tests {
     }
 
     #[test]
-    fn add_index_on_nonempty_rejected() {
+    fn add_index_backfills_nonempty_table() {
         let t: Table<Item> = Table::new("items");
         t.insert(item(1, "new", "A"), 0).unwrap();
-        let idx: Index<Item, u64> = Index::new(|r: &Item| Some(r.id));
-        assert!(t.add_index(&idx).is_err());
+        t.insert(item(2, "done", "B"), 0).unwrap();
+        let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+        t.add_index(&by_state).unwrap();
+        // back-fill saw the pre-existing rows
+        assert_eq!(by_state.get(&"new"), vec![1]);
+        assert_eq!(by_state.get(&"done"), vec![2]);
+        // and the index stays live for subsequent mutations
+        t.update(&1, 1, |r| r.state = "done");
+        assert_eq!(by_state.get(&"done"), vec![1, 2]);
+        t.remove(&2, 2);
+        assert_eq!(by_state.get(&"done"), vec![1]);
     }
 
     #[test]
@@ -487,9 +902,132 @@ mod tests {
     }
 
     #[test]
+    fn scan_is_globally_ordered_across_shards() {
+        let t: Table<Item> = Table::new("items").with_shards(7);
+        // insert in a scrambled order so shard-local order != insert order
+        for i in [44u64, 3, 99, 12, 8, 71, 23, 55, 0, 67, 31] {
+            t.insert(item(i, "new", "A"), 0).unwrap();
+        }
+        let ids: Vec<u64> = t.scan(|_| true).into_iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        assert_eq!(ids, sorted, "merge scan yields global key order");
+        assert_eq!(t.keys(), sorted);
+    }
+
+    #[test]
+    fn scan_page_walks_whole_table() {
+        let t: Table<Item> = Table::new("items").with_shards(5);
+        for i in 0..23 {
+            t.insert(item(i, "new", "A"), 0).unwrap();
+        }
+        let mut seen = Vec::new();
+        let mut cursor: Option<u64> = None;
+        let mut pages = 0;
+        loop {
+            let page = t.scan_page(cursor.as_ref(), 7);
+            seen.extend(page.rows.iter().map(|r| r.id));
+            pages += 1;
+            match page.next_cursor {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+            assert!(pages < 100, "cursor must make progress");
+        }
+        assert_eq!(seen, (0..23).collect::<Vec<u64>>());
+        assert_eq!(pages, 4, "23 rows / 7 per page");
+        // empty table: one empty page, no cursor
+        let empty: Table<Item> = Table::new("e");
+        let page = empty.scan_page(None, 10);
+        assert!(page.rows.is_empty() && page.next_cursor.is_none());
+    }
+
+    #[test]
+    fn insert_bulk_is_atomic_on_duplicates() {
+        let t: Table<Item> = Table::new("items");
+        let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+        t.add_index(&by_state).unwrap();
+        t.insert(item(5, "old", "A"), 0).unwrap();
+        // batch containing a duplicate of row 5 → nothing applied
+        let err = t.insert_bulk(vec![item(1, "new", "A"), item(5, "new", "A")], 1);
+        assert!(err.is_err());
+        assert_eq!(t.len(), 1);
+        assert!(t.get(&1).is_none());
+        assert_eq!(by_state.count(&"new"), 0, "no index leak from failed batch");
+        // in-batch duplicate also rejected
+        assert!(t.insert_bulk(vec![item(2, "new", "A"), item(2, "new", "B")], 1).is_err());
+        // clean batch applies
+        assert_eq!(t.insert_bulk(vec![item(1, "new", "A"), item(2, "new", "B")], 2).unwrap(), 2);
+        assert_eq!(t.len(), 3);
+        assert_eq!(by_state.get(&"new"), vec![1, 2]);
+    }
+
+    #[test]
+    fn batch_ops_update_indexes_history_and_len() {
+        let t: Table<Item> = Table::new("items").with_history().with_shards(3);
+        let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+        t.add_index(&by_state).unwrap();
+        let mut batch = Batch::new();
+        batch.insert(item(1, "new", "A"));
+        batch.insert(item(2, "new", "B"));
+        batch.upsert(item(2, "done", "B"));
+        batch.remove(1);
+        batch.remove(42); // missing: skipped
+        let s = t.apply(batch, 7).unwrap();
+        assert_eq!((s.inserted, s.updated), (2, 1));
+        assert_eq!(s.removed.len(), 1);
+        assert_eq!(s.removed[0].id, 1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(by_state.get(&"done"), vec![2]);
+        assert_eq!(by_state.count(&"new"), 0);
+        let h = t.history();
+        let ops: Vec<Op> = h.iter().map(|(_, op, _)| *op).collect();
+        assert_eq!(ops, vec![Op::Insert, Op::Insert, Op::Update, Op::Delete]);
+    }
+
+    #[test]
+    fn update_bulk_applies_one_commit() {
+        let t: Table<Item> = Table::new("items").with_shards(4);
+        let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+        t.add_index(&by_state).unwrap();
+        for i in 0..10 {
+            t.insert(item(i, "new", "A"), 0).unwrap();
+        }
+        let keys: Vec<u64> = vec![1, 3, 5, 77]; // 77 missing → skipped
+        let updated = t.update_bulk(&keys, 1, |r| r.state = "done");
+        assert_eq!(updated.len(), 3);
+        assert_eq!(by_state.get(&"done"), vec![1, 3, 5]);
+        assert_eq!(by_state.count(&"new"), 7);
+    }
+
+    #[test]
+    fn remove_bulk_returns_removed_rows() {
+        let t: Table<Item> = Table::new("items").with_shards(4);
+        for i in 0..6 {
+            t.insert(item(i, "new", "A"), 0).unwrap();
+        }
+        let removed = t.remove_bulk(&[4, 1, 9], 1);
+        assert_eq!(removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 1]);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn len_counter_tracks_live_rows() {
+        let t: Table<Item> = Table::new("items").with_shards(4);
+        let counter = t.len_counter();
+        assert_eq!(counter(), 0);
+        t.insert_bulk((0..50).map(|i| item(i, "new", "A")).collect(), 0).unwrap();
+        assert_eq!(counter(), 50);
+        t.remove_bulk(&(0..20).collect::<Vec<u64>>(), 1);
+        assert_eq!(counter(), 30);
+        t.upsert(item(7, "done", "B"), 2); // replace: no growth
+        assert_eq!(counter(), 30);
+    }
+
+    #[test]
     fn prop_index_consistent_under_random_ops() {
         forall(60, |g| {
-            let t: Table<Item> = Table::new("items");
+            let t: Table<Item> = Table::new("items").with_shards(g.usize(1, 9));
             let states = ["a", "b", "c"];
             let by_state: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
             t.add_index(&by_state).unwrap();
@@ -529,6 +1067,117 @@ mod tests {
         });
     }
 
+    /// Shard-count invariance: a table with N shards is observationally
+    /// identical to the single-map (1-shard) layout under a randomized op
+    /// sequence — same scan order, length, history, index contents, and
+    /// cursor pagination. This is the ordered-scan-semantics guarantee the
+    /// sharding refactor must preserve.
+    #[test]
+    fn prop_sharded_table_matches_single_map() {
+        forall(40, |g| {
+            let n_shards = g.usize(2, 17);
+            let sharded: Table<Item> =
+                Table::new("sharded").with_history().with_shards(n_shards);
+            let reference: Table<Item> =
+                Table::new("reference").with_history().with_shards(1);
+            let idx_s: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+            let idx_r: Index<Item, &'static str> = Index::new(|r: &Item| Some(r.state));
+            sharded.add_index(&idx_s).unwrap();
+            reference.add_index(&idx_r).unwrap();
+            let states = ["a", "b", "c"];
+
+            for step in 0..g.usize(20, 150) {
+                let now = step as i64;
+                match g.usize(0, 5) {
+                    0 => {
+                        let row = item(g.u64(0, 40), *g.pick(&states), "X");
+                        let rs = sharded.insert(row.clone(), now).is_ok();
+                        let rr = reference.insert(row, now).is_ok();
+                        assert_eq!(rs, rr, "insert outcome diverged");
+                    }
+                    1 => {
+                        let row = item(g.u64(0, 40), *g.pick(&states), "Y");
+                        sharded.upsert(row.clone(), now);
+                        reference.upsert(row, now);
+                    }
+                    2 => {
+                        let id = g.u64(0, 40);
+                        let st = *g.pick(&states);
+                        let us = sharded.update(&id, now, |r| r.state = st);
+                        let ur = reference.update(&id, now, |r| r.state = st);
+                        assert_eq!(us.is_some(), ur.is_some());
+                    }
+                    3 => {
+                        let id = g.u64(0, 40);
+                        let rs = sharded.remove(&id, now);
+                        let rr = reference.remove(&id, now);
+                        assert_eq!(rs.is_some(), rr.is_some());
+                    }
+                    _ => {
+                        // batch: a few inserts/upserts/removes in one commit
+                        let mut bs = Batch::new();
+                        let mut br = Batch::new();
+                        for _ in 0..g.usize(1, 6) {
+                            match g.usize(0, 3) {
+                                0 => {
+                                    let row = item(g.u64(41, 80), *g.pick(&states), "Z");
+                                    bs.insert(row.clone());
+                                    br.insert(row);
+                                }
+                                1 => {
+                                    let row = item(g.u64(0, 80), *g.pick(&states), "Z");
+                                    bs.upsert(row.clone());
+                                    br.upsert(row);
+                                }
+                                _ => {
+                                    let id = g.u64(0, 80);
+                                    bs.remove(id);
+                                    br.remove(id);
+                                }
+                            }
+                        }
+                        let as_ = sharded.apply(bs, now);
+                        let ar = reference.apply(br, now);
+                        assert_eq!(as_.is_ok(), ar.is_ok(), "batch outcome diverged");
+                    }
+                }
+            }
+
+            // Observational equivalence.
+            assert_eq!(sharded.len(), reference.len());
+            assert_eq!(sharded.keys(), reference.keys(), "global key order");
+            assert_eq!(sharded.scan(|_| true), reference.scan(|_| true), "scan order + content");
+            assert_eq!(
+                sharded.scan_limit(5, |r| r.state == "a"),
+                reference.scan_limit(5, |r| r.state == "a")
+            );
+            for st in states {
+                assert_eq!(idx_s.get(&st), idx_r.get(&st), "index contents for {st}");
+            }
+            // history (same op sequence → identical logs)
+            let hs = sharded.history();
+            let hr = reference.history();
+            assert_eq!(hs.len(), hr.len());
+            for (a, b) in hs.iter().zip(hr.iter()) {
+                assert_eq!((a.0, a.1), (b.0, b.1));
+                assert_eq!(a.2, b.2);
+            }
+            // cursor pagination covers the same sequence
+            let mut paged = Vec::new();
+            let mut cursor: Option<u64> = None;
+            loop {
+                let page = sharded.scan_page(cursor.as_ref(), 4);
+                paged.extend(page.rows.into_iter().map(|r| r.id));
+                match page.next_cursor {
+                    Some(c) => cursor = Some(c),
+                    None => break,
+                }
+            }
+            let flat: Vec<u64> = reference.scan(|_| true).into_iter().map(|r| r.id).collect();
+            assert_eq!(paged, flat, "paged walk == flat ordered scan");
+        });
+    }
+
     #[test]
     fn concurrent_readers_and_writers() {
         use std::sync::Arc;
@@ -552,5 +1201,39 @@ mod tests {
         assert_eq!(t.len(), 2000);
         let done = t.scan(|r| r.state == "done");
         assert_eq!(done.len(), 4 * 167);
+    }
+
+    #[test]
+    fn concurrent_bulk_and_row_writers() {
+        use std::sync::Arc;
+        let t: Arc<Table<Item>> = Arc::new(Table::new("items").with_shards(4));
+        let mut handles = vec![];
+        for w in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                if w % 2 == 0 {
+                    // bulk writer: 10 batches of 50
+                    for b in 0..10u64 {
+                        let rows: Vec<Item> = (0..50)
+                            .map(|i| item(w * 10_000 + b * 50 + i, "new", "A"))
+                            .collect();
+                        t.insert_bulk(rows, 0).unwrap();
+                    }
+                } else {
+                    // row-at-a-time writer
+                    for i in 0..500u64 {
+                        t.insert(item(w * 10_000 + i, "new", "A"), 0).unwrap();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.len(), 2000);
+        let keys = t.keys();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
     }
 }

@@ -329,7 +329,7 @@ impl Daemon for C3po {
                     // do not rescan it every tick
                     self.last_placed.insert(ds, now);
                 }
-                Err(e) => log::warn!("c3po: placement failed for {ds}: {e}"),
+                Err(e) => crate::log_warn!("c3po: placement failed for {ds}: {e}"),
             }
         }
         placed

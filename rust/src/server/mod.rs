@@ -4,11 +4,27 @@
 //! requires a valid `X-Rucio-Auth-Token` and passes the permission policy.
 //!
 //! List responses stream as NDJSON (the paper's streamed replies).
+//!
+//! Bulk + cursor surface (paper §3.6 bulk operations):
+//! * `POST /replicas/bulk` — `{rse, replicas: [{scope, name, pfn?,
+//!   state?}]}` registers the whole batch through one batched catalog
+//!   commit; atomic (any bad entry fails the call with no partial state).
+//! * `POST /rules/bulk` — `{rules: [<rule spec>, ...]}` creates many
+//!   rules, each landing its locks/requests as batches; replies
+//!   `{rule_ids: [...]}`. Atomic: a mid-batch failure rolls back the
+//!   rules already created by the call.
+//! * `GET /rules?cursor=&limit=` and `GET /replicas?cursor=&limit=` —
+//!   cursor-paginated NDJSON over the full tables; when more pages
+//!   remain the reply carries `x-rucio-next-cursor` (pass it back as
+//!   `cursor`, percent-encoded as given; malformed cursors are 400).
+//! * `GET /dids/{scope}?cursor=&limit=` — cursor-paginated per-scope DID
+//!   listing (name-ordered); same `x-rucio-next-cursor` contract.
 
 use std::sync::Arc;
 
 use crate::common::error::{Result, RucioError};
 use crate::core::accounts_api::Action;
+use crate::core::replicas_api::ReplicaSpec;
 use crate::core::rules_api::RuleSpec;
 use crate::core::types::*;
 use crate::core::Catalog;
@@ -110,6 +126,25 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                 Some("CONTAINER") => Some(DidType::Container),
                 _ => None,
             };
+            // Cursor-paginated variant: name-ordered pages with a resume
+            // cursor in x-rucio-next-cursor. The type filter applies to
+            // each page, so a filtered page may carry fewer than `limit`
+            // rows while the cursor still advances.
+            if req.query_get("cursor").is_some() || req.query_get("limit").is_some() {
+                let limit = parse_limit(req);
+                let (rows, next) = cat.list_dids_page(scope, req.query_get("cursor"), limit);
+                let items = rows
+                    .iter()
+                    .filter(|d| !d.suppressed)
+                    .filter(|d| did_type.map(|t| d.did_type == t).unwrap_or(true))
+                    .map(did_json);
+                let mut resp = Response::ndjson(200, items);
+                if let Some(n) = next {
+                    resp = resp
+                        .with_header("x-rucio-next-cursor", &crate::httpd::percent_encode(&n));
+                }
+                return Ok(resp);
+            }
             let items = cat
                 .list_dids(scope, req.query_get("name"), did_type, false)
                 .into_iter()
@@ -141,6 +176,67 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
 
     // ---------------- replicas ----------------
+    // Bulk registration: one batched catalog commit for the whole set
+    // (registered before the param routes so the literal path wins).
+    let cat = catalog.clone();
+    r.post("/replicas/bulk", move |req| {
+        with_auth(&cat, req, |cat, _account| {
+            let body = req.body_json()?;
+            let rse = body.req_str("rse")?;
+            let arr = body
+                .get("replicas")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| RucioError::InvalidValue("replicas array required".into()))?;
+            let mut specs = Vec::with_capacity(arr.len());
+            for item in arr {
+                let did = DidKey::new(item.req_str("scope")?, item.req_str("name")?);
+                let state = match item.opt_str("state") {
+                    Some("COPYING") => ReplicaState::Copying,
+                    _ => ReplicaState::Available,
+                };
+                let mut spec = ReplicaSpec::new(did, state);
+                if let Some(pfn) = item.opt_str("pfn") {
+                    spec = spec.with_pfn(pfn);
+                }
+                specs.push(spec);
+            }
+            let added = cat.add_replicas_bulk(rse, &specs)?;
+            Ok(Response::json(201, &Json::obj().with("added", added as u64)))
+        })
+    });
+    // Cursor-paginated NDJSON list of all replicas.
+    let cat = catalog.clone();
+    r.get("/replicas", move |req| {
+        with_auth(&cat, req, |cat, _| {
+            let limit = parse_limit(req);
+            let cursor = match req.query_get("cursor") {
+                Some(raw) => Some(decode_replica_cursor(raw).ok_or_else(|| {
+                    RucioError::InvalidValue("malformed replica cursor".into())
+                })?),
+                None => None,
+            };
+            let page = cat.replicas.scan_page(cursor.as_ref(), limit);
+            let mut resp = Response::ndjson(
+                200,
+                page.rows.iter().map(|rep| {
+                    Json::obj()
+                        .with("rse", rep.rse.as_str())
+                        .with("scope", rep.did.scope.as_str())
+                        .with("name", rep.did.name.as_str())
+                        .with("pfn", rep.pfn.as_str())
+                        .with("bytes", rep.bytes)
+                        .with("state", rep.state.as_str())
+                }),
+            );
+            if let Some((rse, did)) = &page.next_cursor {
+                resp = resp.with_header(
+                    "x-rucio-next-cursor",
+                    &crate::httpd::percent_encode(&encode_replica_cursor(rse, did)),
+                );
+            }
+            Ok(resp)
+        })
+    });
     let cat = catalog.clone();
     r.get("/replicas/{scope}/{name...}", move |req| {
         with_auth(&cat, req, |cat, _| {
@@ -172,6 +268,71 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
 
     // ---------------- rules (paper §2.5) ----------------
+    // Bulk creation: each rule's locks + transfer requests land as
+    // batched commits in the core. All specs are parsed up front; if any
+    // rule fails mid-batch the already-created ones are rolled back
+    // (delete_rule fully unwinds locks + usage), so the call is atomic.
+    let cat = catalog.clone();
+    r.post("/rules/bulk", move |req| {
+        with_auth(&cat, req, |cat, account| {
+            cat.check_permission(account, Action::AddRule, None)?;
+            let body = req.body_json()?;
+            let arr = body
+                .get("rules")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| RucioError::InvalidValue("rules array required".into()))?;
+            let mut specs = Vec::with_capacity(arr.len());
+            for item in arr {
+                let did = DidKey::new(item.req_str("scope")?, item.req_str("name")?);
+                let mut spec = RuleSpec::new(
+                    account,
+                    did,
+                    item.req_str("rse_expression")?,
+                    item.opt_u64("copies").unwrap_or(1) as u32,
+                );
+                if let Some(l) = item.opt_i64("lifetime_ms") {
+                    spec = spec.with_lifetime(l);
+                }
+                if let Some(a) = item.opt_str("activity") {
+                    spec = spec.with_activity(a);
+                }
+                specs.push(spec);
+            }
+            let mut ids: Vec<u64> = Vec::with_capacity(specs.len());
+            for spec in specs {
+                match cat.add_rule(spec) {
+                    Ok(id) => ids.push(id),
+                    Err(e) => {
+                        for id in ids {
+                            let _ = cat.delete_rule(id);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            let ids: Vec<Json> = ids.into_iter().map(Json::from).collect();
+            Ok(Response::json(201, &Json::obj().with("rule_ids", Json::Arr(ids))))
+        })
+    });
+    // Cursor-paginated NDJSON list of all rules (id order).
+    let cat = catalog.clone();
+    r.get("/rules", move |req| {
+        with_auth(&cat, req, |cat, _| {
+            let limit = parse_limit(req);
+            let cursor: Option<u64> = match req.query_get("cursor") {
+                Some(raw) => Some(raw.parse().map_err(|_| {
+                    RucioError::InvalidValue("malformed rule cursor".into())
+                })?),
+                None => None,
+            };
+            let page = cat.rules.scan_page(cursor.as_ref(), limit);
+            let mut resp = Response::ndjson(200, page.rows.iter().map(rule_json));
+            if let Some(next) = page.next_cursor {
+                resp = resp.with_header("x-rucio-next-cursor", &next.to_string());
+            }
+            Ok(resp)
+        })
+    });
     let cat = catalog.clone();
     r.post("/rules", move |req| {
         with_auth(&cat, req, |cat, account| {
@@ -324,6 +485,29 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     r
 }
 
+/// Page size for cursor list routes: `limit` query param, capped so one
+/// response stays bounded.
+fn parse_limit(req: &Request) -> usize {
+    req.query_get("limit")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000)
+        .clamp(1, 10_000)
+}
+
+/// Replica-table cursors cross the wire as `rse␞scope␞name` (unit
+/// separators percent-encoded by the router contract).
+fn encode_replica_cursor(rse: &str, did: &DidKey) -> String {
+    format!("{rse}\u{1e}{}\u{1e}{}", did.scope, did.name)
+}
+
+fn decode_replica_cursor(s: &str) -> Option<(String, DidKey)> {
+    let mut parts = s.splitn(3, '\u{1e}');
+    let rse = parts.next()?;
+    let scope = parts.next()?;
+    let name = parts.next()?;
+    Some((rse.to_string(), DidKey::new(scope, name)))
+}
+
 /// Wrap a handler with token validation (§4.1: "each subsequent operation
 /// against any of the REST servers needs the valid X-Rucio-Auth-Token").
 fn with_auth<F>(catalog: &Arc<Catalog>, req: &Request, f: F) -> Response
@@ -459,6 +643,82 @@ mod tests {
         // root may delete anyone's rule; alice may delete her own
         alice.delete_rule(rid).unwrap();
         assert!(cat.get_rule(rid).is_err());
+    }
+
+    #[test]
+    fn bulk_replicas_and_rules_round_trip() {
+        let (srv, cat) = server();
+        let alice = RucioClient::connect(&srv.url(), "alice", "alice", "pw").unwrap();
+        let mut dids = Vec::new();
+        for i in 0..30 {
+            let name = format!("bulk{i:03}");
+            alice.add_file("user.alice", &name, 100, "aabbccdd").unwrap();
+            dids.push(("user.alice".to_string(), name));
+        }
+        // one request registers the whole batch
+        let added = alice.register_replicas_bulk("X-DISK", &dids).unwrap();
+        assert_eq!(added, 30);
+        assert_eq!(cat.replicas.len(), 30);
+        // a second identical call is a duplicate batch → atomic failure
+        assert!(alice.register_replicas_bulk("X-DISK", &dids).is_err());
+        assert_eq!(cat.replicas.len(), 30);
+        // bulk rules over the pre-placed replicas: instantly OK
+        let specs: Vec<(String, String, String, u32)> = dids
+            .iter()
+            .take(10)
+            .map(|(s, n)| (s.clone(), n.clone(), "X-DISK".to_string(), 1))
+            .collect();
+        let ids = alice.add_rules_bulk(&specs).unwrap();
+        assert_eq!(ids.len(), 10);
+        for id in &ids {
+            let rule = alice.get_rule(*id).unwrap();
+            assert_eq!(rule.req_str("state").unwrap(), "OK");
+        }
+    }
+
+    #[test]
+    fn cursor_paginated_lists() {
+        let (srv, cat) = server();
+        let alice = RucioClient::connect(&srv.url(), "alice", "alice", "pw").unwrap();
+        let mut dids = Vec::new();
+        for i in 0..25 {
+            let name = format!("page{i:03}");
+            alice.add_file("user.alice", &name, 10, "x").unwrap();
+            dids.push(("user.alice".to_string(), name));
+        }
+        alice.register_replicas_bulk("X-DISK", &dids).unwrap();
+
+        // paged DID walk covers the scope exactly once, in name order
+        let mut names = Vec::new();
+        let mut cursor: Option<String> = None;
+        loop {
+            let (rows, next) =
+                alice.list_dids_page("user.alice", cursor.as_deref(), 10).unwrap();
+            names.extend(rows.iter().map(|j| j.req_str("name").unwrap().to_string()));
+            match next {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+        }
+        let expect: Vec<String> = (0..25).map(|i| format!("page{i:03}")).collect();
+        assert_eq!(names, expect);
+
+        // paged replica walk sees every replica exactly once
+        let mut seen = 0;
+        let mut cursor: Option<String> = None;
+        let mut pages = 0;
+        loop {
+            let (rows, next) = alice.list_replicas_page(cursor.as_deref(), 7).unwrap();
+            seen += rows.len();
+            pages += 1;
+            match next {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+            assert!(pages < 50, "cursor must advance");
+        }
+        assert_eq!(seen as usize, cat.replicas.len());
+        assert_eq!(pages, 4, "25 replicas / 7 per page");
     }
 
     #[test]

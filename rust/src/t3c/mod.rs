@@ -216,7 +216,7 @@ impl MlpModel {
                 Some(loss)
             }
             Err(e) => {
-                log::warn!("t3c train step failed: {e}");
+                crate::log_warn!("t3c train step failed: {e}");
                 None
             }
         }
