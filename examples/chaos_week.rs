@@ -1,0 +1,132 @@
+//! Chaos week: seven simulated days of grid operations under a rolling
+//! sequence of incidents — a Tier-1 site outage, an inter-region network
+//! partition, a corruption burst, an FTS server outage, a daemon crash,
+//! a drain, and a tape-recall storm — with the system-invariant checker
+//! running every 30 virtual minutes throughout.
+//!
+//! Prints the per-day stats, the per-incident recovery report, and the
+//! invariant verdict; exits non-zero if any invariant was ever violated.
+//!
+//! Run: `cargo run --release --example chaos_week`
+
+use rucio::benchkit::Table;
+use rucio::common::clock::{HOUR_MS, MINUTE_MS};
+use rucio::common::config::Config;
+use rucio::core::types::RuleState;
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::GridSpec;
+use rucio::sim::scenario::{Event, Scenario};
+use rucio::sim::workload::WorkloadSpec;
+
+fn main() {
+    rucio::common::logx::init(0);
+    let seed = 2026;
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "2h");
+    cfg.set("heartbeat", "ttl", "45m");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 6,
+            files_per_dataset: 4,
+            median_file_bytes: 800_000_000,
+            derivations_per_day: 4,
+            analysis_accesses_per_day: 60,
+            seed: seed ^ 0xA0D,
+            ..Default::default()
+        },
+        cfg,
+    );
+    driver.enable_invariant_checks(30 * MINUTE_MS);
+
+    // The week of incidents (offsets in virtual hours from t0).
+    let week = Scenario::new("chaos week")
+        // day 1: a Tier-1 disk goes dark for 14 hours
+        .at_hours(26, Event::RseDown { rse: "DE-T1-DISK".into() })
+        .at_hours(40, Event::RseUp { rse: "DE-T1-DISK".into() })
+        // day 2: FR↔IT partition for 12 hours
+        .at_hours(50, Event::NetworkPartition { region_a: "FR".into(), region_b: "IT".into() })
+        .at_hours(62, Event::NetworkRestore { region_a: "FR".into(), region_b: "IT".into() })
+        // day 3: bit rot chews through files at a UK Tier-2
+        .at_hours(74, Event::CorruptionBurst { rse: "UK-T2-1".into(), files: 25 })
+        // day 4: one FTS server down for 8 hours (the conveyor reroutes)
+        .at_hours(98, Event::FtsDown { index: 0 })
+        .at_hours(106, Event::FtsUp { index: 0 })
+        // day 5: the conveyor submitter crashes; heartbeat failover, then
+        // an operator restarts it 3 hours later
+        .at_hours(122, Event::DaemonCrash { daemon: "conveyor-submitter".into(), which: 0 })
+        .at_hours(125, Event::DaemonRestart { daemon: "conveyor-submitter".into(), which: 0 })
+        // day 6: drain a Canadian Tier-2, and a recall storm hits the tapes
+        .at_hours(146, Event::RseDrain { rse: "CA-T2-1".into() })
+        .at_hours(148, Event::TapeRecallStorm { datasets: 10 });
+    let t0 = driver.ctx.catalog.now();
+    driver.schedule_scenario(&week);
+    driver.run_days(7, 10 * MINUTE_MS);
+
+    // ---- per-day stats
+    let mut days = Table::new(
+        "chaos week — per-day stats",
+        &["day", "files", "replicas", "done", "failed", "deleted", "TB moved"],
+    );
+    for d in &driver.days {
+        days.row(&[
+            d.day.to_string(),
+            d.files.to_string(),
+            d.replicas.to_string(),
+            d.transfers_done.to_string(),
+            d.transfers_failed.to_string(),
+            d.deletions.to_string(),
+            format!("{:.2}", d.bytes_transferred as f64 / 1e12),
+        ]);
+    }
+    days.print();
+
+    // ---- per-incident recovery
+    let mut rec = Table::new(
+        "recovery report per incident",
+        &["incident", "peak backlog", "peak stuck", "reconverged after (h)"],
+    );
+    let incidents: [(&str, i64, i64); 3] = [
+        ("T1 outage (26h–40h)", 26, 40),
+        ("FR/IT partition (50h–62h)", 50, 62),
+        ("FTS outage (98h–106h)", 98, 106),
+    ];
+    for (name, start_h, end_h) in incidents {
+        let r = driver.recovery_report(t0 + start_h * HOUR_MS, t0 + end_h * HOUR_MS);
+        rec.row(&[
+            name.to_string(),
+            r.peak_backlog.to_string(),
+            r.peak_stuck.to_string(),
+            r.time_to_reconverge_ms
+                .map(|ms| format!("{:.1}", ms as f64 / HOUR_MS as f64))
+                .unwrap_or_else(|| "never".into()),
+        ]);
+    }
+    rec.print();
+
+    // ---- verdict
+    let cat = &driver.ctx.catalog;
+    let total = cat.rules.len();
+    let ok = cat.rules_by_state.count(&RuleState::Ok);
+    println!(
+        "\nrules: {ok}/{total} OK | lost files: {} | bad declared: {} | repairs: {}",
+        cat.metrics.counter("necromancer.lost"),
+        cat.metrics.counter("replicas.declared_bad"),
+        cat.metrics.counter("rules.repaired"),
+    );
+    println!(
+        "invariant checks: {} samples, {} violations",
+        driver.samples.len(),
+        driver.violations.len()
+    );
+    if driver.violations.is_empty() {
+        println!("chaos week survived: all system invariants held throughout.");
+    } else {
+        for (t, v) in driver.violations.iter().take(10) {
+            eprintln!("violation at t={t}: {v}");
+        }
+        eprintln!("chaos week FAILED: {} invariant violations", driver.violations.len());
+        std::process::exit(1);
+    }
+}

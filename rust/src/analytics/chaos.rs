@@ -1,0 +1,153 @@
+//! Per-scenario recovery analytics: backlog sampling over a chaos run and
+//! the recovery report (time-to-reconverge, backlog depth) the scenario
+//! suite asserts on.
+//!
+//! The discrete-event driver captures a [`BacklogSample`] every invariant
+//! cycle; [`recovery_report`] condenses the series into "how deep did the
+//! backlog get, and how long after the fault cleared did the system
+//! return to its pre-fault level" — the quantities the paper's daemons
+//! (conveyor retries, judge repair, necromancer, reaper) exist to bound.
+
+use crate::common::clock::EpochMs;
+use crate::core::types::{RequestState, RuleState};
+use crate::daemons::Ctx;
+
+/// One point-in-time measurement of the work queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BacklogSample {
+    pub t: EpochMs,
+    /// Transfer requests waiting for submission.
+    pub queued: usize,
+    /// Requests in flight at FTS.
+    pub submitted: usize,
+    /// Requests in retry backoff.
+    pub retry: usize,
+    pub stuck_rules: usize,
+    pub replicating_rules: usize,
+    /// FTS-side queue depth (submitted but not yet active), all servers.
+    pub fts_queue: usize,
+    /// Bad replicas awaiting necromancer triage.
+    pub unresolved_bad: usize,
+}
+
+impl BacklogSample {
+    /// Total transfer backlog: everything not yet moved.
+    pub fn backlog(&self) -> usize {
+        self.queued + self.submitted + self.retry
+    }
+
+    /// Capture the current queue state of a deployment.
+    pub fn capture(ctx: &Ctx) -> BacklogSample {
+        let cat = &ctx.catalog;
+        BacklogSample {
+            t: cat.now(),
+            queued: cat.requests_by_state.count(&RequestState::Queued),
+            submitted: cat.requests_by_state.count(&RequestState::Submitted),
+            retry: cat.requests_by_state.count(&RequestState::Retry),
+            stuck_rules: cat.rules_by_state.count(&RuleState::Stuck),
+            replicating_rules: cat.rules_by_state.count(&RuleState::Replicating),
+            fts_queue: ctx.fts.iter().map(|f| f.queue_depth()).sum(),
+            unresolved_bad: cat.bad_replicas.count_where(|b| !b.resolved),
+        }
+    }
+}
+
+/// Condensed recovery behaviour of one chaos scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Backlog just before the fault hit (the reconvergence target).
+    pub baseline_backlog: usize,
+    pub baseline_stuck: usize,
+    /// Worst backlog observed from fault injection onward.
+    pub peak_backlog: usize,
+    pub peak_stuck: usize,
+    /// First sample time at/after `fault_cleared` where the system was
+    /// back at (or below) its pre-fault level; `None` = never recovered
+    /// within the run.
+    pub reconverged_at: Option<EpochMs>,
+    /// `reconverged_at - fault_cleared`.
+    pub time_to_reconverge_ms: Option<i64>,
+}
+
+/// Build the report from a sample series and the fault window
+/// `[fault_start, fault_cleared]` (virtual timestamps).
+pub fn recovery_report(
+    samples: &[BacklogSample],
+    fault_start: EpochMs,
+    fault_cleared: EpochMs,
+) -> RecoveryReport {
+    let baseline = samples
+        .iter()
+        .rfind(|s| s.t < fault_start)
+        .copied()
+        .unwrap_or_default();
+    // A handful of in-flight transfers is steady-state noise, not backlog.
+    let target_backlog = baseline.backlog().max(8);
+    let target_stuck = baseline.stuck_rules;
+
+    let mut peak_backlog = 0;
+    let mut peak_stuck = 0;
+    let mut reconverged_at = None;
+    for s in samples.iter().filter(|s| s.t >= fault_start) {
+        peak_backlog = peak_backlog.max(s.backlog());
+        peak_stuck = peak_stuck.max(s.stuck_rules);
+        if reconverged_at.is_none()
+            && s.t >= fault_cleared
+            && s.backlog() <= target_backlog
+            && s.stuck_rules <= target_stuck
+        {
+            reconverged_at = Some(s.t);
+        }
+    }
+    RecoveryReport {
+        baseline_backlog: baseline.backlog(),
+        baseline_stuck: baseline.stuck_rules,
+        peak_backlog,
+        peak_stuck,
+        reconverged_at,
+        time_to_reconverge_ms: reconverged_at.map(|t| t - fault_cleared),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(t: EpochMs, queued: usize, stuck: usize) -> BacklogSample {
+        BacklogSample { t, queued, stuck_rules: stuck, ..Default::default() }
+    }
+
+    #[test]
+    fn report_finds_peak_and_reconvergence() {
+        let samples = vec![
+            s(0, 2, 0),
+            s(100, 3, 0), // baseline (last pre-fault)
+            s(200, 40, 5),
+            s(300, 80, 9), // peak during fault
+            s(400, 30, 4), // fault cleared at 350; still draining
+            s(500, 6, 0),  // back under max(baseline, 8)
+            s(600, 2, 0),
+        ];
+        let r = recovery_report(&samples, 150, 350);
+        assert_eq!(r.baseline_backlog, 3);
+        assert_eq!(r.peak_backlog, 80);
+        assert_eq!(r.peak_stuck, 9);
+        assert_eq!(r.reconverged_at, Some(500));
+        assert_eq!(r.time_to_reconverge_ms, Some(150));
+    }
+
+    #[test]
+    fn unrecovered_run_reports_none() {
+        let samples = vec![s(0, 1, 0), s(200, 50, 3), s(300, 45, 3)];
+        let r = recovery_report(&samples, 100, 250);
+        assert_eq!(r.reconverged_at, None);
+        assert_eq!(r.time_to_reconverge_ms, None);
+    }
+
+    #[test]
+    fn empty_series_is_benign() {
+        let r = recovery_report(&[], 0, 0);
+        assert_eq!(r.peak_backlog, 0);
+        assert_eq!(r.reconverged_at, None);
+    }
+}

@@ -59,9 +59,29 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Smoke mode (`RUCIO_BENCH_SMOKE=1`): CI runs every bench with a
+/// handful of iterations so the harnesses can't silently rot, without
+/// paying for full measurements. Numbers printed in smoke mode are
+/// meaningless — the run only proves the bench still builds and executes.
+pub fn smoke_mode() -> bool {
+    std::env::var("RUCIO_BENCH_SMOKE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
+
+fn effective(warmup: usize, iters: usize) -> (usize, usize) {
+    if smoke_mode() {
+        (warmup.min(1), iters.clamp(1, 3))
+    } else {
+        (warmup, iters)
+    }
+}
+
 /// Time `f` with `warmup` unmeasured and `iters` measured iterations,
 /// print the row, and return the stats. `f` runs once per iteration.
+/// In smoke mode iterations are capped to a handful.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    let (warmup, iters) = effective(warmup, iters);
     for _ in 0..warmup {
         f();
     }
@@ -84,6 +104,7 @@ pub fn bench_indexed<F: FnMut(usize)>(
     iters: usize,
     mut f: F,
 ) -> BenchResult {
+    let (warmup, iters) = effective(warmup, iters);
     for i in 0..warmup {
         f(i);
     }

@@ -77,6 +77,8 @@ pub struct Catalog {
     pub rules_by_expiry: Index<Rule, EpochMs>,
     pub locks_by_replica: Index<ReplicaLock, (String, DidKey)>,
     pub locks_by_rule: Index<ReplicaLock, u64>,
+    /// All locks on a DID across rules and RSEs (lost-file cleanup).
+    pub locks_by_did: Index<ReplicaLock, DidKey>,
 
     // --- transfer requests (paper §4.2)
     pub requests: Table<TransferRequest>,
@@ -136,8 +138,10 @@ impl Catalog {
         let locks = Table::new("locks").with_shards(shards);
         let locks_by_replica = Index::new(|l: &ReplicaLock| Some((l.rse.clone(), l.did.clone())));
         let locks_by_rule = Index::new(|l: &ReplicaLock| Some(l.rule_id));
+        let locks_by_did = Index::new(|l: &ReplicaLock| Some(l.did.clone()));
         locks.add_index(&locks_by_replica).unwrap();
         locks.add_index(&locks_by_rule).unwrap();
+        locks.add_index(&locks_by_did).unwrap();
 
         let requests = Table::new("requests").with_shards(shards).with_history();
         let requests_by_state = Index::new(|r: &TransferRequest| Some(r.state));
@@ -184,6 +188,7 @@ impl Catalog {
             rules_by_expiry,
             locks_by_replica,
             locks_by_rule,
+            locks_by_did,
             requests,
             requests_by_state,
             requests_by_dest,

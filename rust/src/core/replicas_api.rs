@@ -260,12 +260,18 @@ impl Catalog {
 
     /// Rank source replicas by distance to `dst_rse` (§2.4: "distance
     /// influences the sorting of files when considering sources").
-    /// Unconnected sources are excluded.
+    /// Unconnected sources and RSEs whose read availability is switched
+    /// off (outage / decommissioning) are excluded.
     pub fn ranked_sources(&self, did: &DidKey, dst_rse: &str) -> Vec<(Replica, u32)> {
         let mut sources: Vec<(Replica, u32)> = self
             .available_replicas(did)
             .into_iter()
             .filter(|r| r.rse != dst_rse)
+            .filter(|r| {
+                self.get_rse(&r.rse)
+                    .map(|x| x.availability_read)
+                    .unwrap_or(false)
+            })
             .filter_map(|r| self.distance(&r.rse, dst_rse).map(|d| (r, d)))
             .collect();
         sources.sort_by_key(|(r, d)| (*d, r.rse.clone()));
@@ -352,6 +358,10 @@ impl Catalog {
         self.replicas.update(&(rse.to_string(), did.clone()), now, |r| {
             r.state = ReplicaState::Bad;
         });
+        // A bad replica can no longer back its locks: flip them STUCK in
+        // the same operation, so no rule ever sits in OK on top of a bad
+        // copy (system invariant; the necromancer relocates them later).
+        self.stick_locks_on_replica(rse, did, now);
         self.bad_replicas.upsert(
             BadReplica {
                 rse: rse.to_string(),

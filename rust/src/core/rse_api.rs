@@ -55,6 +55,30 @@ impl Catalog {
         Ok(())
     }
 
+    /// Drain an RSE: stop accepting new data while reads (and deletes)
+    /// continue — the first step of decommissioning and the operator
+    /// response to a degraded endpoint. Undraining restores writes. The
+    /// `drained` attribute records the intent so that outage recovery
+    /// (which restores availability wholesale) can leave a drain in place.
+    pub fn set_rse_drain(&self, name: &str, drained: bool) -> Result<()> {
+        self.get_rse(name)?;
+        self.rses.update(&name.to_string(), self.now(), |r| {
+            // Undraining never re-enables writes on an RSE that is in a
+            // full outage (read off): outage recovery restores them.
+            r.availability_write = !drained && r.availability_read;
+            r.attributes
+                .insert("drained".into(), if drained { "true" } else { "false" }.into());
+        });
+        Ok(())
+    }
+
+    /// Is the RSE administratively drained (independent of outages)?
+    pub fn rse_is_drained(&self, name: &str) -> bool {
+        self.get_rse(name)
+            .map(|r| r.attr("drained") == Some("true"))
+            .unwrap_or(false)
+    }
+
     /// Soft-delete an RSE (after decommissioning).
     pub fn delete_rse(&self, name: &str) -> Result<()> {
         self.get_rse(name)?;
@@ -243,5 +267,24 @@ mod tests {
         c.set_rse_availability("DESY", true, false, false).unwrap();
         let r = c.get_rse("DESY").unwrap();
         assert!(r.availability_read && !r.availability_write && !r.availability_delete);
+    }
+
+    #[test]
+    fn drain_round_trip_and_outage_interaction() {
+        let c = catalog_with_grid();
+        c.set_rse_drain("DESY", true).unwrap();
+        let r = c.get_rse("DESY").unwrap();
+        assert!(r.availability_read && !r.availability_write);
+        assert!(c.rse_is_drained("DESY"));
+        c.set_rse_drain("DESY", false).unwrap();
+        assert!(c.get_rse("DESY").unwrap().availability_write);
+        assert!(!c.rse_is_drained("DESY"));
+        // undraining during a full outage must not re-enable writes
+        c.set_rse_drain("GRIF", true).unwrap();
+        c.set_rse_availability("GRIF", false, false, false).unwrap();
+        c.set_rse_drain("GRIF", false).unwrap();
+        let r = c.get_rse("GRIF").unwrap();
+        assert!(!r.availability_write, "no writes while the RSE is down");
+        assert!(!c.rse_is_drained("GRIF"));
     }
 }

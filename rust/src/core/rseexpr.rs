@@ -144,6 +144,24 @@ pub enum Expr {
     Minus(Box<Expr>, Box<Expr>),
 }
 
+impl std::fmt::Display for Expr {
+    /// Canonical printer: fully parenthesized compounds, so printing is
+    /// unambiguous and `parse(print(e))` evaluates identically to `e`
+    /// (and `print(parse(s))` is a fixpoint — property-tested below).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Expr::All => write!(f, "*"),
+            Expr::Name(n) => write!(f, "{n}"),
+            Expr::AttrEq(k, v) => write!(f, "{k}={v}"),
+            Expr::AttrLt(k, n) => write!(f, "{k}<{n}"),
+            Expr::AttrGt(k, n) => write!(f, "{k}>{n}"),
+            Expr::And(a, b) => write!(f, "({a}&{b})"),
+            Expr::Or(a, b) => write!(f, "({a}|{b})"),
+            Expr::Minus(a, b) => write!(f, "({a}\\{b})"),
+        }
+    }
+}
+
 struct Parser {
     toks: Vec<Tok>,
     pos: usize,
@@ -427,6 +445,91 @@ mod tests {
             resolve("((country=FR|country=DE)&type=disk)\\(tier=2&country=DE)", &u).unwrap(),
         );
         assert_eq!(got, vec!["GRIF", "IN2P3-DISK"]);
+    }
+
+    /// Random expression tree, depth-bounded. Leaves draw fresh
+    /// identifiers (usually matching nothing) so evaluation exercises
+    /// empty sets as much as populated ones.
+    fn gen_expr(g: &mut crate::common::proptest::Gen, depth: usize) -> Expr {
+        if depth == 0 || g.chance(0.4) {
+            match g.usize(0, 5) {
+                0 => Expr::All,
+                1 => Expr::Name(g.ident(1..8)),
+                2 => Expr::AttrEq(g.ident(1..6), g.ident(1..6)),
+                3 => Expr::AttrLt(g.ident(1..6), g.u64(0, 1000) as f64),
+                _ => Expr::AttrGt(g.ident(1..6), g.u64(0, 1000) as f64),
+            }
+        } else {
+            let a = Box::new(gen_expr(g, depth - 1));
+            let b = Box::new(gen_expr(g, depth - 1));
+            match g.usize(0, 3) {
+                0 => Expr::And(a, b),
+                1 => Expr::Or(a, b),
+                _ => Expr::Minus(a, b),
+            }
+        }
+    }
+
+    #[test]
+    fn prop_ast_print_parse_round_trip() {
+        use crate::common::proptest::forall;
+        let u = universe();
+        forall(300, |g| {
+            let ast = gen_expr(g, 3);
+            let printed = ast.to_string();
+            let reparsed = parse(&printed)
+                .unwrap_or_else(|e| panic!("printed '{printed}' must reparse: {e}"));
+            assert_eq!(reparsed, ast, "parse∘print is identity for '{printed}'");
+            assert_eq!(reparsed.to_string(), printed, "printer fixpoint");
+            assert_eq!(eval(&ast, &u), eval(&reparsed, &u));
+        });
+    }
+
+    #[test]
+    fn prop_de_morgan_and_complement_laws() {
+        use crate::common::proptest::forall;
+        let u = universe();
+        let atoms = [
+            "tier=0", "tier=1", "tier=2", "country=FR", "country=DE", "type=disk", "tape",
+            "freespace>100", "*", "nomatch",
+        ];
+        forall(150, |g| {
+            let a = *g.pick(&atoms);
+            let b = *g.pick(&atoms);
+            // De Morgan with complement via '*\X'
+            assert_eq!(
+                resolve(&format!("*\\({a}|{b})"), &u).unwrap(),
+                resolve(&format!("(*\\{a})&(*\\{b})"), &u).unwrap(),
+                "¬(A∪B) = ¬A∩¬B for {a}, {b}"
+            );
+            assert_eq!(
+                resolve(&format!("*\\({a}&{b})"), &u).unwrap(),
+                resolve(&format!("(*\\{a})|(*\\{b})"), &u).unwrap(),
+                "¬(A∩B) = ¬A∪¬B for {a}, {b}"
+            );
+            // double complement
+            assert_eq!(
+                resolve(&format!("*\\(*\\{a})"), &u).unwrap(),
+                resolve(a, &u).unwrap()
+            );
+            // absorption: A | (A & B) == A
+            assert_eq!(
+                resolve(&format!("{a}|({a}&{b})"), &u).unwrap(),
+                resolve(a, &u).unwrap()
+            );
+        });
+    }
+
+    #[test]
+    fn prop_malformed_inputs_error_not_panic() {
+        use crate::common::proptest::forall;
+        let u = universe();
+        forall(500, |g| {
+            // arbitrary printable garbage: resolving must return a Result,
+            // never panic (forall turns panics into failures)
+            let s = g.string(0..16);
+            let _ = resolve(&s, &u);
+        });
     }
 
     #[test]

@@ -499,6 +499,17 @@ impl Catalog {
             .requests
             .get(&request_id)
             .ok_or_else(|| RucioError::Internal(format!("request {request_id} unknown")))?;
+        // A checksum mismatch at the source means the source copy itself
+        // is damaged (§2.4: "the replica will be flagged as suspicious"):
+        // every strike counts, and after the threshold the necromancer
+        // takes over recovery from another copy. Matched on the shared
+        // constant so destination-side checksum wording never blames a
+        // healthy source.
+        if reason.contains(crate::ftssim::REASON_SOURCE_CHECKSUM) {
+            if let Some(src) = &req.src_rse {
+                let _ = self.declare_suspicious(src, &req.did, reason);
+            }
+        }
         let max_attempts = self.cfg.get_i64("conveyor", "max_attempts", 3) as u32;
         let retry_delay = self.cfg.get_duration_ms("conveyor", "retry_delay", 600_000);
         let attempts = req.attempts + 1;
@@ -602,7 +613,37 @@ impl Catalog {
                 }
                 None => {
                     // Same-RSE delayed retry: fresh request, lock back to
-                    // Replicating.
+                    // Replicating. The replica row may be gone (the
+                    // necromancer removes bad copies while locks are
+                    // stuck): recreate the Copying stub the lock protects
+                    // so the retried transfer has a destination record.
+                    let replica_key = (lock.rse.clone(), lock.did.clone());
+                    if !self.replicas.contains(&replica_key) {
+                        let pfn = self
+                            .get_rse(&lock.rse)
+                            .ok()
+                            .and_then(|r| r.lfn2pfn(&lock.did.scope, &lock.did.name))
+                            .unwrap_or_else(|| {
+                                format!("/nondet/{}/{}", lock.did.scope, lock.did.name)
+                            });
+                        let lock_count =
+                            self.locks_by_replica.get(&replica_key).len() as u32;
+                        let _ = self.replicas.insert(
+                            Replica {
+                                rse: lock.rse.clone(),
+                                did: lock.did.clone(),
+                                bytes: lock.bytes,
+                                state: ReplicaState::Copying,
+                                pfn,
+                                lock_count,
+                                tombstone: None,
+                                accessed_at: now,
+                                created_at: now,
+                                error_count: 0,
+                            },
+                            now,
+                        );
+                    }
                     self.locks.update(&lock_key, now, |l| l.state = LockState::Replicating);
                     self.rules.update(&rule_id, now, |r| {
                         r.locks_stuck = r.locks_stuck.saturating_sub(1);
@@ -656,9 +697,12 @@ impl Catalog {
         let now = self.now();
         let rule = self.get_rule(rule_id)?;
         let lock_keys = self.locks_by_rule.get(&rule_id);
+        // Rule row goes first: the release bookkeeping below re-homes or
+        // cancels transfer requests that reference rules which no longer
+        // exist, so the rule must already be gone when it runs.
+        self.rules.remove(&rule_id, now);
         let released = self.locks.remove_bulk(&lock_keys, now);
         self.release_removed_locks(&released, &rule.account, now, rule.purge_replicas);
-        self.rules.remove(&rule_id, now);
         self.metrics.incr("rules.deleted", 1);
         self.notify(
             "rule-deleted",
@@ -731,6 +775,94 @@ impl Catalog {
         }
         for (rse, (bytes, files)) in usage {
             self.charge_usage(account, &rse, bytes, files);
+        }
+        // Transfer requests owned by a released lock's rule must not be
+        // left orphaned (system invariant: every live request references a
+        // live rule): re-home the request to a surviving replicating lock
+        // on the same replica, or cancel it.
+        for l in locks {
+            let dest = (l.rse.clone(), l.did.clone());
+            for req_id in self.requests_by_dest.get(&dest) {
+                let Some(req) = self.requests.get(&req_id) else { continue };
+                if req.rule_id != l.rule_id || self.rules.contains(&req.rule_id) {
+                    continue;
+                }
+                let heir = self
+                    .locks_by_replica
+                    .get(&dest)
+                    .into_iter()
+                    .filter_map(|k| self.locks.get(&k))
+                    .find(|x| x.state == LockState::Replicating);
+                match heir {
+                    Some(h) => {
+                        self.requests.update(&req_id, now, |r| {
+                            r.rule_id = h.rule_id;
+                            r.updated_at = now;
+                        });
+                    }
+                    None => {
+                        self.requests.update(&req_id, now, |r| {
+                            r.state = RequestState::Failed;
+                            r.last_error = Some("rule removed".into());
+                            r.updated_at = now;
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// A replica can no longer back its locks (declared bad, §4.4): flip
+    /// every non-stuck lock on it STUCK and fix the owning rules' tallies
+    /// in one place, so the lock/tally arithmetic has a single home.
+    pub(crate) fn stick_locks_on_replica(&self, rse: &str, did: &DidKey, now: EpochMs) {
+        let replica_key = (rse.to_string(), did.clone());
+        for lock_key in self.locks_by_replica.get(&replica_key) {
+            let Some(lock) = self.locks.get(&lock_key) else { continue };
+            if lock.state == LockState::Stuck {
+                continue;
+            }
+            self.locks.update(&lock_key, now, |l| l.state = LockState::Stuck);
+            self.rules.update(&lock.rule_id, now, |r| {
+                match lock.state {
+                    LockState::Ok => r.locks_ok = r.locks_ok.saturating_sub(1),
+                    LockState::Replicating => {
+                        r.locks_replicating = r.locks_replicating.saturating_sub(1)
+                    }
+                    LockState::Stuck => {}
+                }
+                r.locks_stuck += 1;
+                r.stuck_at = Some(now);
+                r.updated_at = now;
+            });
+            self.refresh_rule_state(lock.rule_id);
+        }
+    }
+
+    /// A file is permanently lost (§4.4 last-copy handling): every rule
+    /// still covering it — in particular dataset/container rules reaching
+    /// it through the hierarchy — drops its locks on the file, exactly as
+    /// if the file had been detached. Without this, ancestor rules would
+    /// cycle STUCK forever on data that no longer exists anywhere.
+    pub(crate) fn release_locks_on_lost_file(&self, did: &DidKey) {
+        let now = self.now();
+        let stranded: Vec<ReplicaLock> = self
+            .locks_by_did
+            .get(did)
+            .into_iter()
+            .filter_map(|k| self.locks.get(&k))
+            .collect();
+        for lock in stranded {
+            let Some(rule) = self.rules.get(&lock.rule_id) else { continue };
+            self.rules.update(&lock.rule_id, now, |r| match lock.state {
+                LockState::Ok => r.locks_ok = r.locks_ok.saturating_sub(1),
+                LockState::Replicating => {
+                    r.locks_replicating = r.locks_replicating.saturating_sub(1)
+                }
+                LockState::Stuck => r.locks_stuck = r.locks_stuck.saturating_sub(1),
+            });
+            self.release_lock(&lock, &rule.account, now, rule.purge_replicas);
+            self.refresh_rule_state(lock.rule_id);
         }
     }
 
@@ -1294,6 +1426,62 @@ mod tests {
         // replica stub is gone (never completed); re-arrival registers
         // nothing since the stub was dropped — done handler tolerates it.
         assert!(c.on_transfer_done(req.id).is_err() || c.get_replica("DE-A", &f).is_err());
+    }
+
+    #[test]
+    fn declare_bad_sticks_covering_locks() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        c.add_replica("FR-A", &f, ReplicaState::Available, None).unwrap();
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "FR-A", 1)).unwrap();
+        assert_eq!(c.get_rule(rid).unwrap().state, RuleState::Ok);
+        c.declare_bad("FR-A", &f, "bit rot", "ops").unwrap();
+        // no rule may sit in OK on a bad replica (system invariant)
+        let rule = c.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Stuck);
+        assert_eq!(rule.locks_stuck, 1);
+        assert_eq!(rule.locks_ok, 0);
+        assert_lock_invariant(&c, rid);
+    }
+
+    #[test]
+    fn deleted_rule_requests_rehomed_or_canceled() {
+        // Two rules share one deduplicated transfer; deleting the request's
+        // owner re-homes it to the survivor, deleting the last cancels it.
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        let r1 = c.add_rule(RuleSpec::new("root", f.clone(), "DE-A", 1)).unwrap();
+        let r2 = c.add_rule(RuleSpec::new("alice", f.clone(), "DE-A", 1)).unwrap();
+        assert_eq!(c.requests.len(), 1, "deduplicated transfer");
+        let req_id = c.requests.scan(|_| true)[0].id;
+        assert_eq!(c.requests.get(&req_id).unwrap().rule_id, r1);
+        c.delete_rule(r1).unwrap();
+        let req = c.requests.get(&req_id).unwrap();
+        assert_eq!(req.rule_id, r2, "request re-homed to the surviving rule");
+        assert_eq!(req.state, RequestState::Queued);
+        c.delete_rule(r2).unwrap();
+        let req = c.requests.get(&req_id).unwrap();
+        assert_eq!(req.state, RequestState::Failed, "no rule left: canceled");
+    }
+
+    #[test]
+    fn checksum_failure_marks_source_suspicious() {
+        let c = catalog();
+        let f = file(&c, "f1", 1000);
+        c.add_replica("FR-A", &f, ReplicaState::Available, None).unwrap();
+        c.add_rule(RuleSpec::new("root", f.clone(), "DE-A", 1)).unwrap();
+        let req = c.requests.scan(|_| true)[0].clone();
+        c.requests
+            .update(&req.id, c.now(), |r| r.src_rse = Some("FR-A".into()));
+        c.on_transfer_failed(req.id, "CHECKSUM mismatch at source").unwrap();
+        assert_eq!(
+            c.get_replica("FR-A", &f).unwrap().state,
+            ReplicaState::Suspicious,
+            "corrupt source flagged on first strike"
+        );
+        // a network error does not blame the source
+        c.on_transfer_failed(req.id, "TRANSFER network error").unwrap();
+        assert_eq!(c.get_replica("FR-A", &f).unwrap().error_count, 1);
     }
 
     #[test]

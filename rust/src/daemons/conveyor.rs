@@ -32,12 +32,23 @@ impl Submitter {
 
     /// Pick the FTS server for a request ("if there are multiple FTS
     /// servers available, Rucio is able to orchestrate transfers among
-    /// them", §1.3) — stable hash over the destination.
-    fn fts_for(&self, req: &TransferRequest) -> usize {
-        if self.ctx.fts.len() <= 1 {
-            return 0;
+    /// them", §1.3) — stable hash over the destination, restricted to the
+    /// servers currently reachable. `None` during a full FTS blackout:
+    /// the request stays queued and is submitted once a server returns.
+    fn fts_for(&self, req: &TransferRequest) -> Option<usize> {
+        let online: Vec<usize> = self
+            .ctx
+            .fts
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.is_online())
+            .map(|(i, _)| i)
+            .collect();
+        match online.len() {
+            0 => None,
+            1 => Some(online[0]),
+            n => Some(online[(crate::db::shard_hash(req.dst_rse.as_bytes()) % n as u64) as usize]),
         }
-        (crate::db::shard_hash(req.dst_rse.as_bytes()) % self.ctx.fts.len() as u64) as usize
     }
 }
 
@@ -122,7 +133,9 @@ impl Daemon for Submitter {
                 .get_replica(&req.dst_rse, &req.did)
                 .map(|r| r.pfn)
                 .unwrap_or_else(|_| format!("/lost/{}", req.did));
-            let fts_idx = self.fts_for(&req);
+            let Some(fts_idx) = self.fts_for(&req) else {
+                continue; // all FTS servers down: stay Queued (backlog)
+            };
             jobs_per_fts[fts_idx].push((
                 req.id,
                 TransferJob {

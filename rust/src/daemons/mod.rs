@@ -53,13 +53,19 @@ impl Ctx {
         fts: Vec<Arc<FtsServer>>,
         broker: Broker,
     ) -> Self {
+        // `[heartbeat] ttl` tunes the failover horizon; simulations with
+        // coarse virtual-time ticks raise it so live instances are not
+        // mistaken for dead between ticks.
+        let ttl = catalog
+            .cfg
+            .get_duration_ms("heartbeat", "ttl", heartbeat::DEFAULT_TTL_MS);
         Ctx {
             catalog,
             fleet,
             net,
             fts,
             broker,
-            heartbeats: Arc::new(heartbeat::Heartbeats::new()),
+            heartbeats: Arc::new(heartbeat::Heartbeats::with_ttl(ttl)),
         }
     }
 }

@@ -7,7 +7,6 @@
 //! dataset about the lost data."
 
 use crate::common::clock::EpochMs;
-use crate::core::types::LockState;
 #[cfg(test)]
 use crate::core::types::ReplicaState;
 use crate::db::assigned_to;
@@ -60,26 +59,9 @@ impl Daemon for Necromancer {
                 .map(|l| l.rule_id)
                 .collect();
 
-            // Mark those locks stuck so the repair logic can relocate them.
-            for lock_key in cat.locks_by_replica.get(&replica_key) {
-                if let Some(lock) = cat.locks.get(&lock_key) {
-                    if lock.state != LockState::Stuck {
-                        cat.locks.update(&lock_key, now, |l| l.state = LockState::Stuck);
-                        cat.rules.update(&lock.rule_id, now, |r| {
-                            match lock.state {
-                                LockState::Ok => r.locks_ok = r.locks_ok.saturating_sub(1),
-                                LockState::Replicating => {
-                                    r.locks_replicating = r.locks_replicating.saturating_sub(1)
-                                }
-                                LockState::Stuck => {}
-                            }
-                            r.locks_stuck += 1;
-                            r.stuck_at = Some(now);
-                        });
-                        cat.refresh_rule_state(lock.rule_id);
-                    }
-                }
-            }
+            // Mark those locks stuck so the repair logic can relocate them
+            // (a no-op when declare_bad already flipped them).
+            cat.stick_locks_on_replica(&entry.rse, &entry.did, now);
 
             let other_copies = cat
                 .available_replicas(&entry.did)
@@ -113,10 +95,14 @@ impl Daemon for Necromancer {
                         .attachments
                         .remove(&(parent.clone(), entry.did.clone()), now);
                 }
-                // Remove remaining rules+locks directly on the lost file.
+                // Remove remaining rules+locks directly on the lost file,
+                // then shed the locks ancestor (dataset/container) rules
+                // still hold on it — their data is gone; the rules shrink
+                // exactly as if the file had been detached.
                 for rule in cat.list_rules_for_did(&entry.did) {
                     let _ = cat.delete_rule(rule.id);
                 }
+                cat.release_locks_on_lost_file(&entry.did);
                 cat.refresh_availability(&entry.did);
                 cat.notify(
                     "email-lost-data",
@@ -195,6 +181,31 @@ mod tests {
             cat.outbox.scan(|_| true).into_iter().map(|m| m.event_type).collect();
         assert!(events.contains(&"email-lost-data".to_string()), "{events:?}");
         assert!(events.contains(&"lost-file".to_string()));
+        assert_eq!(cat.metrics.counter("necromancer.lost"), 1);
+    }
+
+    #[test]
+    fn lost_file_sheds_dataset_rule_locks() {
+        let (ctx, cat) = rig();
+        let f1 = seed_file(&ctx, "a1", 100);
+        let f2 = seed_file(&ctx, "a2", 100);
+        cat.add_dataset("data18", "ds", "root").unwrap();
+        let ds = DidKey::new("data18", "ds");
+        cat.attach(&ds, &f1).unwrap();
+        cat.attach(&ds, &f2).unwrap();
+        let rid = cat.add_rule(RuleSpec::new("root", ds.clone(), "SRC-DISK", 1)).unwrap();
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok);
+        assert_eq!(cat.get_account_usage("root", "SRC-DISK").bytes, 200);
+        // a1's only copy is lost; the dataset rule must not stay stuck on
+        // data that no longer exists anywhere
+        cat.declare_bad("SRC-DISK", &f1, "gone", "ops").unwrap();
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Stuck);
+        let mut necro = Necromancer::new(ctx.clone(), "n1");
+        necro.tick(cat.now());
+        let rule = cat.get_rule(rid).unwrap();
+        assert_eq!(rule.state, RuleState::Ok, "{rule:?}");
+        assert_eq!(cat.locks_by_rule.get(&rid).len(), 1, "only a2's lock remains");
+        assert_eq!(cat.get_account_usage("root", "SRC-DISK").bytes, 100);
         assert_eq!(cat.metrics.counter("necromancer.lost"), 1);
     }
 

@@ -22,9 +22,11 @@
 //! FTS deployment; the conveyor shards jobs across them.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::common::clock::EpochMs;
+use crate::common::error::RucioError;
 use crate::common::prng::Prng;
 use crate::jsonx::Json;
 use crate::mq::{Broker, Message};
@@ -32,6 +34,12 @@ use crate::netsim::Network;
 use crate::storagesim::Fleet;
 #[cfg(test)]
 use crate::storagesim::synthetic_adler32;
+
+/// Failure reason emitted when the *source* copy fails checksum
+/// verification. The rule engine blames the source replica on exactly
+/// this reason (`Catalog::on_transfer_failed`) — shared as a constant so
+/// the cross-module contract cannot drift on wording or casing.
+pub const REASON_SOURCE_CHECKSUM: &str = "CHECKSUM mismatch at source";
 
 /// Transfer request handed to FTS by the conveyor submitter.
 #[derive(Debug, Clone)]
@@ -96,6 +104,11 @@ pub struct FtsServer {
     net: Arc<Network>,
     fleet: Arc<Fleet>,
     broker: Option<Broker>,
+    /// Server reachability (chaos scenarios): while offline the engine
+    /// freezes — no starts, no progress, no completions — and the conveyor
+    /// routes submissions to the surviving servers. State is preserved, so
+    /// in-flight transfers resume where they stopped on recovery.
+    online: AtomicBool,
     inner: Mutex<Inner>,
 }
 
@@ -107,6 +120,7 @@ impl FtsServer {
             net,
             fleet,
             broker,
+            online: AtomicBool::new(true),
             inner: Mutex::new(Inner {
                 next_id: 1,
                 transfers: BTreeMap::new(),
@@ -125,6 +139,22 @@ impl FtsServer {
     pub fn with_max_active(mut self, n: usize) -> Self {
         self.max_active_per_link = n;
         self
+    }
+
+    /// Seed the quality-roll PRNG (determinism plumbing from the grid
+    /// builder).
+    pub fn with_seed(self, seed: u64) -> Self {
+        self.inner.lock().unwrap().rng = Prng::new(seed);
+        self
+    }
+
+    /// Take the server down / bring it back (chaos scenarios).
+    pub fn set_online(&self, online: bool) {
+        self.online.store(online, Ordering::Relaxed);
+    }
+
+    pub fn is_online(&self) -> bool {
+        self.online.load(Ordering::Relaxed)
     }
 
     /// Submit a batch of jobs; returns FTS transfer ids (same order).
@@ -198,6 +228,11 @@ impl FtsServer {
         let mut inner = self.inner.lock().unwrap();
         let dt_ms = (now - inner.last_advance).max(0);
         inner.last_advance = now;
+        // Downtime freezes the engine; advancing last_advance above means
+        // the outage window contributes zero transfer progress.
+        if !self.is_online() {
+            return;
+        }
 
         // 1. progress active transfers
         let active_snapshot: Vec<(String, String, u64)> = inner
@@ -240,12 +275,31 @@ impl FtsServer {
                 };
                 let Some(src_adler) = src_ok else { continue };
                 if src_adler != t.job.adler32 {
-                    finished.push((id, false, Some("CHECKSUM mismatch at source".into())));
+                    finished.push((id, false, Some(REASON_SOURCE_CHECKSUM.into())));
                     continue;
                 }
                 match self.fleet.get(&t.job.dst_rse) {
                     Some(dst_sys) => match dst_sys.put(&t.job.dst_pfn, t.job.bytes, now) {
                         Ok(()) => finished.push((id, true, None)),
+                        Err(RucioError::Duplicate(_)) => {
+                            // The destination already holds the file (e.g.
+                            // an earlier transfer landed after its request
+                            // was canceled): success iff the bytes match.
+                            // A transient stat failure stays retryable and
+                            // must not masquerade as a checksum mismatch.
+                            match dst_sys.stat(&t.job.dst_pfn) {
+                                Ok(f) if f.adler32 == t.job.adler32 => {
+                                    finished.push((id, true, None))
+                                }
+                                Ok(_) => finished.push((
+                                    id,
+                                    false,
+                                    Some("DESTINATION exists with checksum mismatch".into()),
+                                )),
+                                Err(e) => finished
+                                    .push((id, false, Some(format!("DESTINATION {e}")))),
+                            }
+                        }
                         Err(e) => finished.push((id, false, Some(format!("DESTINATION {e}")))),
                     },
                     None => finished.push((id, false, Some("DESTINATION rse unknown".into()))),
@@ -486,6 +540,43 @@ mod tests {
         let by_act = fts.submitted_by_activity();
         assert_eq!(by_act["T0 Export"], 1);
         assert_eq!(by_act["Production"], 1);
+    }
+
+    #[test]
+    fn pre_existing_matching_destination_counts_as_done() {
+        let (net, fleet, _b) = setup();
+        let fts = FtsServer::new("fts1", net, fleet.clone(), None);
+        let j = job(600, 1000);
+        seed_source(&fleet, &j);
+        // the destination file already exists with the right content
+        fleet.get("B-DISK").unwrap().put(&j.dst_pfn, j.bytes, 0).unwrap();
+        let ids = fts.submit(vec![j], 0);
+        fts.advance(0);
+        fts.advance(10_000);
+        let t = &fts.poll(&ids)[0];
+        assert_eq!(t.state, TransferState::Done, "reason={:?}", t.reason);
+    }
+
+    #[test]
+    fn downtime_freezes_progress_and_resumes() {
+        let (net, fleet, _b) = setup();
+        let fts = FtsServer::new("fts1", net, fleet.clone(), None);
+        let j = job(500, 2_000_000); // 2 MB over 1 MB/s = 2s of transfer
+        seed_source(&fleet, &j);
+        let ids = fts.submit(vec![j], 0);
+        fts.advance(0); // starts
+        fts.advance(1_000); // 1s of progress
+        fts.set_online(false);
+        // a long outage window: no progress accrues
+        fts.advance(50_000);
+        assert_eq!(fts.poll(&ids)[0].state, TransferState::Active);
+        fts.set_online(true);
+        // outage time was consumed (not banked): needs 1 more real second
+        fts.advance(50_500);
+        assert_eq!(fts.poll(&ids)[0].state, TransferState::Active);
+        fts.advance(51_100);
+        let t = &fts.poll(&ids)[0];
+        assert_eq!(t.state, TransferState::Done, "reason={:?}", t.reason);
     }
 
     #[test]

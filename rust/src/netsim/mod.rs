@@ -58,11 +58,35 @@ struct LoadState {
     active: BTreeMap<(Site, Site), usize>,
 }
 
+/// A runtime fault overlaid on a link without touching its nominal
+/// parameters (chaos scenarios: degradation, partition). Multiplies the
+/// link quality and divides its bandwidth; `quality_mult = 0` is a full
+/// partition. Clearing the fault restores the nominal link exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFault {
+    pub quality_mult: f64,
+    pub bandwidth_div: u64,
+}
+
+impl LinkFault {
+    /// Degraded link: quality scaled down, bandwidth divided.
+    pub fn degraded(quality_mult: f64, bandwidth_div: u64) -> Self {
+        LinkFault { quality_mult: quality_mult.clamp(0.0, 1.0), bandwidth_div: bandwidth_div.max(1) }
+    }
+
+    /// Full partition: nothing gets through.
+    pub fn partition() -> Self {
+        LinkFault { quality_mult: 0.0, bandwidth_div: 1 }
+    }
+}
+
 /// The network: link table + live load tracking + transfer telemetry used
 /// for dynamic distance re-evaluation (paper §2.4).
 pub struct Network {
     links: RwLock<BTreeMap<(Site, Site), Link>>,
     default_link: RwLock<Link>,
+    /// Active fault overlay per directed pair (chaos scenarios).
+    faults: RwLock<BTreeMap<(Site, Site), LinkFault>>,
     load: Mutex<LoadState>,
     /// Exponentially-weighted achieved throughput per pair (bytes/s),
     /// updated on transfer completion — the "periodic re-evaluation of the
@@ -81,6 +105,7 @@ impl Network {
         Network {
             links: RwLock::new(BTreeMap::new()),
             default_link: RwLock::new(Link::commodity()),
+            faults: RwLock::new(BTreeMap::new()),
             load: Mutex::new(LoadState::default()),
             ewma_bps: Mutex::new(BTreeMap::new()),
         }
@@ -104,12 +129,54 @@ impl Network {
     }
 
     pub fn link(&self, src: &str, dst: &str) -> Link {
-        self.links
+        let key = (src.to_string(), dst.to_string());
+        let nominal = self
+            .links
             .read()
             .unwrap()
-            .get(&(src.to_string(), dst.to_string()))
+            .get(&key)
             .cloned()
-            .unwrap_or_else(|| self.default_link.read().unwrap().clone())
+            .unwrap_or_else(|| self.default_link.read().unwrap().clone());
+        match self.faults.read().unwrap().get(&key) {
+            Some(f) => Link::new(
+                (nominal.bandwidth_bps / f.bandwidth_div.max(1)).max(1),
+                nominal.latency_ms,
+                nominal.quality * f.quality_mult,
+            ),
+            None => nominal,
+        }
+    }
+
+    /// Overlay a fault on a directed pair (degradation or partition).
+    pub fn set_fault(&self, src: &str, dst: &str, fault: LinkFault) {
+        self.faults
+            .write()
+            .unwrap()
+            .insert((src.to_string(), dst.to_string()), fault);
+    }
+
+    /// Symmetric fault convenience.
+    pub fn set_fault_bidir(&self, a: &str, b: &str, fault: LinkFault) {
+        self.set_fault(a, b, fault);
+        self.set_fault(b, a, fault);
+    }
+
+    /// Remove the fault on a directed pair; the nominal link returns.
+    pub fn clear_fault(&self, src: &str, dst: &str) {
+        self.faults
+            .write()
+            .unwrap()
+            .remove(&(src.to_string(), dst.to_string()));
+    }
+
+    pub fn clear_fault_bidir(&self, a: &str, b: &str) {
+        self.clear_fault(a, b);
+        self.clear_fault(b, a);
+    }
+
+    /// Number of directed pairs currently under a fault overlay.
+    pub fn fault_count(&self) -> usize {
+        self.faults.read().unwrap().len()
     }
 
     /// Register a transfer starting on a pair (affects fair-share).
@@ -241,5 +308,42 @@ mod tests {
     fn quality_clamped() {
         let l = Link::new(1, 1, 7.3);
         assert_eq!(l.quality, 1.0);
+    }
+
+    #[test]
+    fn fault_overlay_degrades_and_restores() {
+        let net = Network::new();
+        net.set_link("A", "B", Link::new(1000, 5, 0.9));
+        net.set_fault("A", "B", LinkFault::degraded(0.5, 4));
+        let l = net.link("A", "B");
+        assert_eq!(l.bandwidth_bps, 250);
+        assert!((l.quality - 0.45).abs() < 1e-12);
+        assert_eq!(l.latency_ms, 5);
+        assert_eq!(net.fault_count(), 1);
+        net.clear_fault("A", "B");
+        let l = net.link("A", "B");
+        assert_eq!(l.bandwidth_bps, 1000);
+        assert!((l.quality - 0.9).abs() < 1e-12);
+        assert_eq!(net.fault_count(), 0);
+    }
+
+    #[test]
+    fn partition_zeroes_quality_both_ways() {
+        let net = Network::new();
+        net.set_link_bidir("A", "B", Link::new(1000, 5, 1.0));
+        net.set_fault_bidir("A", "B", LinkFault::partition());
+        assert_eq!(net.link("A", "B").quality, 0.0);
+        assert_eq!(net.link("B", "A").quality, 0.0);
+        // bandwidth floor keeps the share computation finite
+        assert!(net.link("A", "B").bandwidth_bps >= 1);
+        net.clear_fault_bidir("A", "B");
+        assert_eq!(net.link("A", "B").quality, 1.0);
+    }
+
+    #[test]
+    fn fault_applies_to_default_link_pairs_too() {
+        let net = Network::new();
+        net.set_fault("X", "Y", LinkFault::degraded(0.0, 1));
+        assert_eq!(net.link("X", "Y").quality, 0.0);
     }
 }

@@ -1,18 +1,28 @@
 //! The discrete-event simulation driver: runs the complete stack —
 //! workload, daemons, FTS, storage, network — under virtual time and
 //! collects the series behind every paper figure.
+//!
+//! Chaos support: a scheduled [`Scenario`] timeline is applied at the
+//! right virtual instants (including daemon crash/restart, which the
+//! driver owns), the [`crate::sim::invariants`] checker runs every N
+//! virtual minutes, and [`BacklogSample`]s are captured for the
+//! per-scenario recovery report.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::analytics::chaos::{recovery_report, BacklogSample, RecoveryReport};
 use crate::common::clock::{Clock, DAY_MS, EpochMs, MINUTE_MS};
 use crate::daemons::{Ctx, Daemon};
 use crate::mq::SubId;
 use crate::sim::grid::region_of;
+use crate::sim::invariants::{self, Violation};
+use crate::sim::scenario::{Event, Scenario};
 use crate::sim::workload::Workload;
 
-/// Per-day aggregates (the figure sources).
-#[derive(Debug, Clone, Default)]
+/// Per-day aggregates (the figure sources). `PartialEq` so fixed-seed
+/// determinism can be asserted by comparing whole runs.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct DayStats {
     pub day: u32,
     /// Fig 10: total catalog volume at end of day.
@@ -40,11 +50,20 @@ pub struct DayStats {
     pub tape_recalls: u64,
 }
 
+/// One daemon instance owned by the driver. `crashed` instances stop
+/// ticking (and therefore stop heartbeating — the hash ring rebalances
+/// around them, §3.4) until restarted.
+struct DaemonSlot {
+    daemon: Box<dyn Daemon>,
+    due: EpochMs,
+    crashed: bool,
+}
+
 /// The driver owns the daemon fleet with per-daemon due times.
 pub struct Driver {
     pub ctx: Ctx,
     pub workload: Workload,
-    daemons: Vec<(Box<dyn Daemon>, EpochMs)>, // (daemon, next_due)
+    daemons: Vec<DaemonSlot>,
     fts_events: SubId,
     pub days: Vec<DayStats>,
     start: EpochMs,
@@ -52,6 +71,18 @@ pub struct Driver {
     prev_deleted: u64,
     prev_deleted_bytes: u64,
     prev_del_errors: u64,
+    /// Scheduled chaos events in absolute virtual time, sorted ascending.
+    pending_events: Vec<(EpochMs, Event)>,
+    next_event: usize,
+    /// Invariant-check cadence (virtual ms); `None` = checking disabled.
+    invariant_every_ms: Option<i64>,
+    next_check: EpochMs,
+    /// Every invariant violation observed, with the virtual time it was
+    /// seen. Chaos tests assert this stays empty.
+    pub violations: Vec<(EpochMs, Violation)>,
+    /// Backlog series captured at every invariant cycle (recovery report
+    /// input).
+    pub samples: Vec<BacklogSample>,
 }
 
 impl Driver {
@@ -60,7 +91,10 @@ impl Driver {
         let fts_events = ctx.broker.subscribe("transfer.fts", None);
         Driver {
             workload,
-            daemons: daemons.into_iter().map(|d| (d, start)).collect(),
+            daemons: daemons
+                .into_iter()
+                .map(|d| DaemonSlot { daemon: d, due: start, crashed: false })
+                .collect(),
             fts_events,
             days: Vec::new(),
             start,
@@ -68,8 +102,115 @@ impl Driver {
             prev_deleted: 0,
             prev_deleted_bytes: 0,
             prev_del_errors: 0,
+            pending_events: Vec::new(),
+            next_event: 0,
+            invariant_every_ms: None,
+            next_check: start,
+            violations: Vec::new(),
+            samples: Vec::new(),
             ctx,
         }
+    }
+
+    // ------------------------------------------------------------------
+    // chaos: scenario scheduling, daemon crash/restart, invariant checks
+    // ------------------------------------------------------------------
+
+    /// Schedule a scenario: its offsets become absolute virtual times
+    /// from "now". Multiple scenarios may be scheduled; events merge.
+    pub fn schedule_scenario(&mut self, scenario: &Scenario) {
+        let base = self.ctx.catalog.now();
+        // Drop already-applied events before re-sorting so they cannot
+        // fire twice when scenarios are scheduled mid-run.
+        self.pending_events.drain(..self.next_event);
+        self.next_event = 0;
+        for (offset, event) in &scenario.events {
+            self.pending_events.push((base + offset, event.clone()));
+        }
+        self.pending_events.sort_by_key(|(t, _)| *t);
+    }
+
+    /// Run the invariant checker (and capture a backlog sample) every
+    /// `every_ms` of virtual time. Violations accumulate in
+    /// [`Driver::violations`].
+    pub fn enable_invariant_checks(&mut self, every_ms: i64) {
+        self.invariant_every_ms = Some(every_ms.max(MINUTE_MS));
+        self.next_check = self.ctx.catalog.now();
+    }
+
+    /// Add another daemon instance to the fleet (e.g. a second conveyor
+    /// submitter for failover scenarios). It starts ticking immediately.
+    pub fn add_daemon(&mut self, daemon: Box<dyn Daemon>) {
+        let now = self.ctx.catalog.now();
+        self.daemons.push(DaemonSlot { daemon, due: now, crashed: false });
+    }
+
+    /// Crash the `which`-th instance (in fleet order) whose
+    /// [`Daemon::name`] equals `name`. Returns false when no such
+    /// instance exists.
+    pub fn crash_daemon(&mut self, name: &str, which: usize) -> bool {
+        let mut seen = 0;
+        for slot in &mut self.daemons {
+            if slot.daemon.name() == name {
+                if seen == which {
+                    slot.crashed = true;
+                    return true;
+                }
+                seen += 1;
+            }
+        }
+        false
+    }
+
+    /// Restart a crashed instance; it resumes ticking immediately.
+    pub fn restart_daemon(&mut self, name: &str, which: usize) -> bool {
+        let now = self.ctx.catalog.now();
+        let mut seen = 0;
+        for slot in &mut self.daemons {
+            if slot.daemon.name() == name {
+                if seen == which {
+                    slot.crashed = false;
+                    slot.due = now;
+                    return true;
+                }
+                seen += 1;
+            }
+        }
+        false
+    }
+
+    fn apply_due_events(&mut self, now: EpochMs) {
+        while self.next_event < self.pending_events.len()
+            && self.pending_events[self.next_event].0 <= now
+        {
+            let (_, event) = self.pending_events[self.next_event].clone();
+            self.next_event += 1;
+            match &event {
+                Event::DaemonCrash { daemon, which } => {
+                    self.crash_daemon(daemon, *which);
+                }
+                Event::DaemonRestart { daemon, which } => {
+                    self.restart_daemon(daemon, *which);
+                }
+                other => crate::sim::scenario::apply(&self.ctx, other, now),
+            }
+        }
+    }
+
+    /// Run the invariant checker + backlog sampling right now (the
+    /// end-of-run check; also called on the configured cadence).
+    pub fn check_invariants_now(&mut self) {
+        let now = self.ctx.catalog.now();
+        self.samples.push(BacklogSample::capture(&self.ctx));
+        for v in invariants::check(&self.ctx.catalog) {
+            self.violations.push((now, v));
+        }
+    }
+
+    /// Recovery report over the captured backlog series for a fault
+    /// window (virtual timestamps, as absolute times).
+    pub fn recovery_report(&self, fault_start: EpochMs, fault_cleared: EpochMs) -> RecoveryReport {
+        recovery_report(&self.samples, fault_start, fault_cleared)
     }
 
     /// The standard daemon fleet (one instance of each core daemon).
@@ -99,10 +240,15 @@ impl Driver {
         }
     }
 
-    /// Run `days` simulated days with `tick_ms` resolution.
+    /// Run `days` simulated days with `tick_ms` resolution. When
+    /// invariant checking is enabled, a final end-of-run check always
+    /// executes.
     pub fn run_days(&mut self, days: u32, tick_ms: i64) {
         for _ in 0..days {
             self.run_one_day(tick_ms.max(MINUTE_MS));
+        }
+        if self.invariant_every_ms.is_some() {
+            self.check_invariants_now();
         }
     }
 
@@ -113,13 +259,16 @@ impl Driver {
 
         while self.ctx.catalog.now() < day_end {
             let now = self.ctx.catalog.now();
+            // 0. due chaos events fire first (faults hit a consistent
+            //    catalog, exactly like a real incident between requests)
+            self.apply_due_events(now);
             // 1. workload generates activity
             self.workload.step(&self.ctx, now, tick_ms, day);
-            // 2. due daemons tick
-            for (daemon, due) in self.daemons.iter_mut() {
-                if now >= *due {
-                    daemon.tick(now);
-                    *due = now + daemon.interval_ms();
+            // 2. due daemons tick (crashed instances stay silent)
+            for slot in self.daemons.iter_mut() {
+                if !slot.crashed && now >= slot.due {
+                    slot.daemon.tick(now);
+                    slot.due = now + slot.daemon.interval_ms();
                 }
             }
             // 3. infrastructure advances
@@ -129,7 +278,14 @@ impl Driver {
             self.ctx.fleet.tick(now);
             // 4. harvest FTS events for figure accounting
             self.harvest_fts_events(&mut stats);
-            // 5. virtual time moves
+            // 5. system invariants hold at every quiescent point
+            if let Some(every) = self.invariant_every_ms {
+                if now >= self.next_check {
+                    self.check_invariants_now();
+                    self.next_check = now + every;
+                }
+            }
+            // 6. virtual time moves
             self.sim_clock().advance(tick_ms);
         }
 
@@ -239,11 +395,23 @@ impl Driver {
 }
 
 /// Convenience: build a fully-wired driver on the standard grid.
+///
+/// Seed threading: one explicit seed reproduces a whole run. `GridSpec::
+/// seed` derives the per-endpoint storage fault streams and the FTS
+/// quality rolls (see [`crate::sim::grid::build_grid`]); unless the
+/// config already pins `[common] seed`, the same value also seeds the
+/// catalog PRNG (rule placement). `WorkloadSpec::seed` drives the
+/// workload generator. With those fixed, a run is bit-for-bit
+/// deterministic — the chaos suite asserts identical per-day stats
+/// across repeated runs.
 pub fn standard_driver(
     grid: &crate::sim::grid::GridSpec,
     workload: crate::sim::workload::WorkloadSpec,
-    cfg: crate::common::config::Config,
+    mut cfg: crate::common::config::Config,
 ) -> Driver {
+    if cfg.get("common", "seed").is_none() {
+        cfg.set("common", "seed", grid.seed.to_string());
+    }
     let ctx = crate::sim::grid::build_grid(grid, Clock::sim_at(1_514_764_800_000), cfg); // 2018-01-01
     let daemons = Driver::standard_daemons(&ctx);
     let _ = Arc::strong_count(&ctx.catalog);
@@ -290,6 +458,34 @@ mod tests {
         );
         // volume grows monotonically across days (Fig 10 shape)
         assert!(driver.days[1].bytes_managed >= driver.days[0].bytes_managed / 2);
+    }
+
+    #[test]
+    fn scenario_events_fire_and_invariants_hold() {
+        let mut driver = small_driver();
+        driver.enable_invariant_checks(6 * 60 * MINUTE_MS);
+        let sc = Scenario::new("one-outage")
+            .at_hours(2, Event::RseDown { rse: "CA-T2-1".into() })
+            .at_hours(4, Event::DaemonCrash { daemon: "reaper".into(), which: 0 })
+            .at_hours(8, Event::DaemonRestart { daemon: "reaper".into(), which: 0 })
+            .at_hours(20, Event::RseUp { rse: "CA-T2-1".into() });
+        driver.schedule_scenario(&sc);
+        driver.run_days(1, 10 * MINUTE_MS);
+        // all events consumed, outage ended, checker ran, nothing broke
+        let rse = driver.ctx.catalog.get_rse("CA-T2-1").unwrap();
+        assert!(rse.availability_write && rse.availability_read);
+        assert!(!driver.ctx.fleet.get("CA-T2-1").unwrap().is_offline());
+        assert!(driver.samples.len() >= 2, "sampled: {}", driver.samples.len());
+        assert!(driver.violations.is_empty(), "{:?}", driver.violations);
+    }
+
+    #[test]
+    fn crash_and_restart_target_the_right_instance() {
+        let mut driver = small_driver();
+        assert!(driver.crash_daemon("conveyor-submitter", 0));
+        assert!(!driver.crash_daemon("conveyor-submitter", 1), "only one instance");
+        assert!(!driver.crash_daemon("no-such-daemon", 0));
+        assert!(driver.restart_daemon("conveyor-submitter", 0));
     }
 
     #[test]

@@ -108,7 +108,13 @@ pub fn build_grid(spec: &GridSpec, clock: Clock, cfg: Config) -> Ctx {
         }
         catalog.add_rse(rse).unwrap();
         let kind = if tape { StorageKind::Tape } else { StorageKind::Disk };
-        fleet.add(StorageSystem::new(name, kind, cap).with_policy(policy.clone()));
+        // Per-endpoint failure stream derived from the grid seed, so a
+        // fixed GridSpec::seed reproduces the same fault sequence.
+        fleet.add(
+            StorageSystem::new(name, kind, cap)
+                .with_policy(policy.clone())
+                .with_seed(spec.seed ^ crate::db::shard_hash(name.as_bytes())),
+        );
     };
 
     for region in REGIONS {
@@ -191,12 +197,15 @@ pub fn build_grid(spec: &GridSpec, clock: Clock, cfg: Config) -> Ctx {
     // ---- FTS servers
     let fts: Vec<Arc<FtsServer>> = (0..spec.fts_servers.max(1))
         .map(|i| {
-            Arc::new(FtsServer::new(
-                &format!("fts{}", i + 1),
-                net.clone(),
-                fleet.clone(),
-                Some(broker.clone()),
-            ))
+            Arc::new(
+                FtsServer::new(
+                    &format!("fts{}", i + 1),
+                    net.clone(),
+                    fleet.clone(),
+                    Some(broker.clone()),
+                )
+                .with_seed(spec.seed ^ (0xF75 + i as u64)),
+            )
         })
         .collect();
 

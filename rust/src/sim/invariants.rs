@@ -1,0 +1,398 @@
+//! System-invariant checker: asserts the global consistency properties
+//! the paper's bookkeeping implies (§2.5 locks/usage, §3.6 counters,
+//! §4.2 requests) hold at any quiescent point between daemon ticks.
+//!
+//! The discrete-event driver runs this every N virtual minutes and at
+//! end-of-run; chaos scenarios use it to prove that no fault sequence —
+//! outages, partitions, corruption bursts, daemon crashes — can corrupt
+//! the catalog, only delay its convergence.
+//!
+//! Invariant set:
+//! 1. **rule-lock-tallies** — each rule's `locks_ok/replicating/stuck`
+//!    counters equal the actual lock rows, and the rule state is the one
+//!    derived from them;
+//! 2. **ok-rule-backing** — no rule is `Ok` while a lock of it points at
+//!    a missing, bad, or still-copying replica;
+//! 3. **replica-lock-counts** — `replica.lock_count` equals the number of
+//!    lock rows on it, and a locked replica never carries a tombstone;
+//! 4. **usage-equals-locks** — per (account, RSE), the usage table equals
+//!    the sum of that account's rule locks ("accounts are only charged
+//!    for the files they actively set replication rules on", §2.5);
+//! 5. **live-requests** — every non-terminal transfer request references
+//!    a live rule and an existing destination RSE;
+//! 6. **counter-agreement** — every table's O(1) row counter (what the
+//!    monitoring [`crate::db::Registry`] reports) equals an actual row
+//!    count of the table.
+
+use std::collections::BTreeMap;
+
+use crate::core::types::{LockState, ReplicaState, RequestState, RuleState};
+use crate::core::Catalog;
+use crate::db::{Row, Table};
+
+/// One violated invariant, with enough detail to debug the run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// Run the full invariant set against a catalog. Returns every violation
+/// found (empty = consistent).
+pub fn check(cat: &Catalog) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_rule_lock_tallies(cat, &mut out);
+    check_ok_rule_backing(cat, &mut out);
+    check_replica_lock_counts(cat, &mut out);
+    check_usage_equals_locks(cat, &mut out);
+    check_live_requests(cat, &mut out);
+    check_counter_agreement(cat, &mut out);
+    out
+}
+
+fn check_rule_lock_tallies(cat: &Catalog, out: &mut Vec<Violation>) {
+    // (rule_id -> [ok, replicating, stuck]) from the actual lock rows.
+    let mut tallies: BTreeMap<u64, [u32; 3]> = BTreeMap::new();
+    cat.locks.for_each(|l| {
+        let t = tallies.entry(l.rule_id).or_insert([0, 0, 0]);
+        match l.state {
+            LockState::Ok => t[0] += 1,
+            LockState::Replicating => t[1] += 1,
+            LockState::Stuck => t[2] += 1,
+        }
+    });
+    cat.rules.for_each(|r| {
+        let [ok, repl, stuck] = tallies.remove(&r.id).unwrap_or([0, 0, 0]);
+        if (r.locks_ok, r.locks_replicating, r.locks_stuck) != (ok, repl, stuck) {
+            out.push(Violation {
+                invariant: "rule-lock-tallies",
+                detail: format!(
+                    "rule {} tallies ({},{},{}) != lock rows ({ok},{repl},{stuck})",
+                    r.id, r.locks_ok, r.locks_replicating, r.locks_stuck
+                ),
+            });
+        }
+        let derived = if stuck > 0 {
+            RuleState::Stuck
+        } else if repl > 0 {
+            RuleState::Replicating
+        } else {
+            RuleState::Ok
+        };
+        if r.state != derived && r.state != RuleState::Suspended {
+            out.push(Violation {
+                invariant: "rule-lock-tallies",
+                detail: format!(
+                    "rule {} state {:?} != derived {:?} from locks ({ok},{repl},{stuck})",
+                    r.id, r.state, derived
+                ),
+            });
+        }
+    });
+    // Orphan locks: a lock row whose rule no longer exists.
+    for (rule_id, t) in tallies {
+        out.push(Violation {
+            invariant: "rule-lock-tallies",
+            detail: format!("{} lock(s) reference missing rule {rule_id}", t.iter().sum::<u32>()),
+        });
+    }
+}
+
+fn check_ok_rule_backing(cat: &Catalog, out: &mut Vec<Violation>) {
+    cat.rules.for_each(|r| {
+        if r.state != RuleState::Ok {
+            return;
+        }
+        for lock_key in cat.locks_by_rule.get(&r.id) {
+            let Some(lock) = cat.locks.get(&lock_key) else { continue };
+            match cat.replicas.get(&(lock.rse.clone(), lock.did.clone())) {
+                None => out.push(Violation {
+                    invariant: "ok-rule-backing",
+                    detail: format!(
+                        "rule {} is OK but its lock on {}@{} has no replica",
+                        r.id, lock.did, lock.rse
+                    ),
+                }),
+                // Suspicious replicas are degraded but still present and
+                // readable; Bad/Copying cannot back an OK rule.
+                Some(rep)
+                    if matches!(rep.state, ReplicaState::Bad | ReplicaState::Copying) =>
+                {
+                    out.push(Violation {
+                        invariant: "ok-rule-backing",
+                        detail: format!(
+                            "rule {} is OK but replica {}@{} is {:?}",
+                            r.id, lock.did, lock.rse, rep.state
+                        ),
+                    })
+                }
+                Some(_) => {}
+            }
+        }
+    });
+}
+
+fn check_replica_lock_counts(cat: &Catalog, out: &mut Vec<Violation>) {
+    let mut counts: BTreeMap<(String, crate::core::types::DidKey), u32> = BTreeMap::new();
+    cat.locks.for_each(|l| {
+        *counts.entry((l.rse.clone(), l.did.clone())).or_insert(0) += 1;
+    });
+    cat.replicas.for_each(|r| {
+        let n = counts
+            .remove(&(r.rse.clone(), r.did.clone()))
+            .unwrap_or(0);
+        if r.lock_count != n {
+            out.push(Violation {
+                invariant: "replica-lock-counts",
+                detail: format!(
+                    "replica {}@{} lock_count {} != {} lock rows",
+                    r.did, r.rse, r.lock_count, n
+                ),
+            });
+        }
+        if r.lock_count > 0 && r.tombstone.is_some() {
+            out.push(Violation {
+                invariant: "replica-lock-counts",
+                detail: format!("locked replica {}@{} carries a tombstone", r.did, r.rse),
+            });
+        }
+    });
+    // Locks on replicas that do not exist are legitimate only in STUCK
+    // state (the necromancer removed the copy; repair will relocate).
+    for ((rse, did), _) in counts {
+        let any_non_stuck = cat
+            .locks_by_replica
+            .get(&(rse.clone(), did.clone()))
+            .into_iter()
+            .filter_map(|k| cat.locks.get(&k))
+            .any(|l| l.state != LockState::Stuck);
+        if any_non_stuck {
+            out.push(Violation {
+                invariant: "replica-lock-counts",
+                detail: format!("non-stuck lock(s) on missing replica {did}@{rse}"),
+            });
+        }
+    }
+}
+
+fn check_usage_equals_locks(cat: &Catalog, out: &mut Vec<Violation>) {
+    let mut rule_account: BTreeMap<u64, String> = BTreeMap::new();
+    cat.rules.for_each(|r| {
+        rule_account.insert(r.id, r.account.clone());
+    });
+    // (account, rse) -> (bytes, files) expected from lock rows.
+    let mut expect: BTreeMap<(String, String), (u64, u64)> = BTreeMap::new();
+    cat.locks.for_each(|l| {
+        if let Some(acc) = rule_account.get(&l.rule_id) {
+            let e = expect.entry((acc.clone(), l.rse.clone())).or_insert((0, 0));
+            e.0 += l.bytes;
+            e.1 += 1;
+        }
+    });
+    cat.usages.for_each(|u| {
+        let (bytes, files) = expect
+            .remove(&(u.account.clone(), u.rse.clone()))
+            .unwrap_or((0, 0));
+        if u.bytes != bytes || u.files != files {
+            out.push(Violation {
+                invariant: "usage-equals-locks",
+                detail: format!(
+                    "usage {}@{} = ({}, {}) but locks sum to ({bytes}, {files})",
+                    u.account, u.rse, u.bytes, u.files
+                ),
+            });
+        }
+    });
+    // Locks charged to an (account, rse) with no usage row at all.
+    for ((account, rse), (bytes, files)) in expect {
+        if bytes > 0 || files > 0 {
+            out.push(Violation {
+                invariant: "usage-equals-locks",
+                detail: format!(
+                    "locks sum to ({bytes}, {files}) for {account}@{rse} but no usage row exists"
+                ),
+            });
+        }
+    }
+}
+
+fn check_live_requests(cat: &Catalog, out: &mut Vec<Violation>) {
+    for state in [RequestState::Queued, RequestState::Submitted, RequestState::Retry] {
+        for id in cat.requests_by_state.get(&state) {
+            let Some(req) = cat.requests.get(&id) else { continue };
+            if !cat.rules.contains(&req.rule_id) {
+                out.push(Violation {
+                    invariant: "live-requests",
+                    detail: format!(
+                        "{state:?} request {} references missing rule {}",
+                        req.id, req.rule_id
+                    ),
+                });
+            }
+            if cat.rses.get(&req.dst_rse).is_none() {
+                out.push(Violation {
+                    invariant: "live-requests",
+                    detail: format!(
+                        "{state:?} request {} targets unknown RSE {}",
+                        req.id, req.dst_rse
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn check_counter_agreement(cat: &Catalog, out: &mut Vec<Violation>) {
+    fn one<V: Row>(t: &Table<V>, out: &mut Vec<Violation>) {
+        let mut actual = 0usize;
+        t.for_each(|_| actual += 1);
+        if t.len() != actual {
+            out.push(Violation {
+                invariant: "counter-agreement",
+                detail: format!("table {} counter {} != {} actual rows", t.name(), t.len(), actual),
+            });
+        }
+    }
+    one(&cat.accounts, out);
+    one(&cat.identities, out);
+    one(&cat.tokens, out);
+    one(&cat.scopes, out);
+    one(&cat.dids, out);
+    one(&cat.attachments, out);
+    one(&cat.name_tombstones, out);
+    one(&cat.rses, out);
+    one(&cat.distances, out);
+    one(&cat.replicas, out);
+    one(&cat.bad_replicas, out);
+    one(&cat.rules, out);
+    one(&cat.locks, out);
+    one(&cat.requests, out);
+    one(&cat.limits, out);
+    one(&cat.usages, out);
+    one(&cat.subscriptions, out);
+    one(&cat.outbox, out);
+    one(&cat.popularity, out);
+    // ...and the monitoring registry reports exactly those counters.
+    let snap = cat.registry.snapshot();
+    for (name, len) in [
+        ("replicas", cat.replicas.len()),
+        ("rules", cat.rules.len()),
+        ("locks", cat.locks.len()),
+        ("requests", cat.requests.len()),
+    ] {
+        if snap.get(name).copied() != Some(len) {
+            out.push(Violation {
+                invariant: "counter-agreement",
+                detail: format!("registry reports {:?} for {name}, table says {len}", snap.get(name)),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rse::Rse;
+    use crate::core::rules_api::RuleSpec;
+    use crate::core::types::DidKey;
+
+    fn catalog() -> Catalog {
+        let c = Catalog::new_for_tests();
+        let now = c.now();
+        c.add_scope("data18", "root").unwrap();
+        for name in ["A-DISK", "B-DISK"] {
+            c.add_rse(Rse::new(name, now)).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn clean_catalog_has_no_violations() {
+        let c = catalog();
+        assert_eq!(check(&c), Vec::new());
+    }
+
+    #[test]
+    fn busy_catalog_stays_consistent_through_lifecycle() {
+        let c = catalog();
+        for i in 0..5 {
+            c.add_file("data18", &format!("f{i}"), "root", 100 + i, "aabbccdd", None)
+                .unwrap();
+        }
+        c.add_replica("A-DISK", &DidKey::new("data18", "f0"), ReplicaState::Available, None)
+            .unwrap();
+        let mut rules = Vec::new();
+        for i in 0..5 {
+            rules.push(
+                c.add_rule(RuleSpec::new("root", DidKey::new("data18", &format!("f{i}")), "B-DISK", 1))
+                    .unwrap(),
+            );
+        }
+        assert_eq!(check(&c), Vec::new());
+        // drive some to completion, some to failure, one rule away
+        for (i, req) in c.requests.scan(|_| true).into_iter().enumerate() {
+            if i % 2 == 0 {
+                c.on_transfer_done(req.id).unwrap();
+            } else {
+                for _ in 0..3 {
+                    c.on_transfer_failed(req.id, "DESTINATION broken").unwrap();
+                }
+            }
+        }
+        c.delete_rule(rules[0]).unwrap();
+        assert_eq!(check(&c), Vec::new());
+    }
+
+    #[test]
+    fn tampering_is_detected() {
+        let c = catalog();
+        c.add_file("data18", "f0", "root", 100, "aabbccdd", None).unwrap();
+        let f = DidKey::new("data18", "f0");
+        c.add_replica("A-DISK", &f, ReplicaState::Available, None).unwrap();
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "A-DISK", 1)).unwrap();
+        assert_eq!(check(&c), Vec::new());
+        // break the tally behind the API's back
+        c.rules.update(&rid, c.now(), |r| r.locks_ok += 1);
+        let v = check(&c);
+        assert!(
+            v.iter().any(|x| x.invariant == "rule-lock-tallies"),
+            "tampered tallies detected: {v:?}"
+        );
+        // fix it back, then break usage
+        c.rules.update(&rid, c.now(), |r| r.locks_ok -= 1);
+        c.usages.update(&("root".to_string(), "A-DISK".to_string()), c.now(), |u| {
+            u.bytes += 7
+        });
+        let v = check(&c);
+        assert!(v.iter().any(|x| x.invariant == "usage-equals-locks"), "{v:?}");
+    }
+
+    #[test]
+    fn bad_replica_under_ok_rule_is_flagged() {
+        let c = catalog();
+        c.add_file("data18", "f0", "root", 100, "aabbccdd", None).unwrap();
+        let f = DidKey::new("data18", "f0");
+        c.add_replica("A-DISK", &f, ReplicaState::Available, None).unwrap();
+        let rid = c.add_rule(RuleSpec::new("root", f.clone(), "A-DISK", 1)).unwrap();
+        // flip the replica bad *without* the declare_bad bookkeeping
+        c.replicas.update(&("A-DISK".to_string(), f.clone()), c.now(), |r| {
+            r.state = ReplicaState::Bad
+        });
+        let v = check(&c);
+        assert!(v.iter().any(|x| x.invariant == "ok-rule-backing"), "{v:?}");
+        // the API path keeps the invariant: declare_bad sticks the locks
+        let c2 = catalog();
+        c2.add_file("data18", "f0", "root", 100, "aabbccdd", None).unwrap();
+        c2.add_replica("A-DISK", &f, ReplicaState::Available, None).unwrap();
+        let _ = c2.add_rule(RuleSpec::new("root", f.clone(), "A-DISK", 1)).unwrap();
+        c2.declare_bad("A-DISK", &f, "rot", "ops").unwrap();
+        assert_eq!(check(&c2), Vec::new());
+        let _ = rid;
+    }
+}

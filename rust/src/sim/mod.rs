@@ -1,8 +1,13 @@
 //! Simulation: the ATLAS-like grid ([`grid`]), the synthetic workload
-//! generator ([`workload`]), and the discrete-event driver ([`driver`])
+//! generator ([`workload`]), the discrete-event driver ([`driver`])
 //! that runs the full stack — catalog, daemons, FTS, network, storage —
-//! under virtual time to regenerate the paper's evaluation figures.
+//! under virtual time to regenerate the paper's evaluation figures, the
+//! chaos scenario engine ([`scenario`]) that injects declarative fault
+//! timelines into a run, and the system-invariant checker
+//! ([`invariants`]) that proves the bookkeeping survives them.
 
 pub mod driver;
 pub mod grid;
+pub mod invariants;
+pub mod scenario;
 pub mod workload;

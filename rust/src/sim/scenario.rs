@@ -1,0 +1,312 @@
+//! Chaos scenario engine: declarative fault timelines for the simulated
+//! grid.
+//!
+//! A [`Scenario`] is a list of `(virtual-time offset, Event)` pairs; the
+//! discrete-event driver ([`crate::sim::driver::Driver`]) applies each
+//! event when the simulation clock reaches it. Events cover the incident
+//! classes a production data grid lives with (Dynamo and AAA both call
+//! site outages and degraded links the *normal* operating mode):
+//!
+//! * RSE outage / recovery / drain — availability toggles in the catalog
+//!   plus a hard storage-endpoint outage;
+//! * inter-region network degradation and partition — fault overlays on
+//!   the [`crate::netsim::Network`] link table;
+//! * corruption bursts on one storage endpoint — bit rot on stored files,
+//!   detected as checksum mismatches, recovered by the necromancer;
+//! * FTS server downtime — the conveyor routes around dead servers, a
+//!   full blackout queues a backlog that drains on recovery;
+//! * daemon-instance crash/restart — the driver stops ticking the
+//!   instance, its heartbeat expires, the hash ring rebalances (§3.4);
+//! * tape-recall storms — a burst of staging rules against archived RAW
+//!   datasets, pressuring the tape robots.
+//!
+//! Events are deliberately *mechanism-level* (they flip the same toggles
+//! an operator or a real incident would), so every recovery path runs
+//! through the production code: retries, repair, failover, auditing.
+
+use crate::common::clock::{DAY_MS, EpochMs};
+use crate::core::rules_api::RuleSpec;
+use crate::core::types::DidType;
+use crate::daemons::Ctx;
+use crate::netsim::LinkFault;
+
+/// One fault (or recovery) applied at a point in virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Full site outage: catalog availability off, storage endpoint hard
+    /// down. Replicas survive on disk; transfers from/to the RSE fail.
+    RseDown { rse: String },
+    /// Recovery: availability restored, endpoint back online.
+    RseUp { rse: String },
+    /// Drain: stop placing new data on the RSE; reads/deletes continue.
+    RseDrain { rse: String },
+    /// Undrain: the RSE accepts writes again.
+    RseUndrain { rse: String },
+    /// Degrade every link between two regions: quality multiplied by
+    /// `quality_mult`, bandwidth divided by `bandwidth_div`.
+    NetworkDegrade {
+        src_region: String,
+        dst_region: String,
+        quality_mult: f64,
+        bandwidth_div: u64,
+    },
+    /// Full bidirectional partition between two regions.
+    NetworkPartition { region_a: String, region_b: String },
+    /// Clear all fault overlays between two regions (both directions).
+    NetworkRestore { region_a: String, region_b: String },
+    /// Corrupt up to `files` stored files on one endpoint (bit rot).
+    CorruptionBurst { rse: String, files: usize },
+    /// Take the `index`-th FTS server down / up.
+    FtsDown { index: usize },
+    FtsUp { index: usize },
+    /// Crash the `which`-th daemon instance whose `Daemon::name()` equals
+    /// `daemon` — it stops ticking and its heartbeat goes silent.
+    DaemonCrash { daemon: String, which: usize },
+    /// Restart a crashed instance: it resumes ticking (and beating).
+    DaemonRestart { daemon: String, which: usize },
+    /// Recall storm: staging rules for up to `datasets` archived RAW
+    /// datasets onto Tier-1 disk (activity "Staging", 7-day lifetime).
+    TapeRecallStorm { datasets: usize },
+}
+
+/// A named fault timeline. Offsets are virtual milliseconds from the
+/// moment the scenario is scheduled on a driver.
+#[derive(Debug, Clone, Default)]
+pub struct Scenario {
+    pub name: String,
+    pub events: Vec<(i64, Event)>,
+}
+
+impl Scenario {
+    pub fn new(name: &str) -> Self {
+        Scenario { name: name.to_string(), events: Vec::new() }
+    }
+
+    /// Add an event at `offset_ms` after scenario start (builder).
+    pub fn at(mut self, offset_ms: i64, event: Event) -> Self {
+        self.events.push((offset_ms, event));
+        self
+    }
+
+    /// Convenience: offset in virtual hours.
+    pub fn at_hours(self, hours: i64, event: Event) -> Self {
+        self.at(hours * crate::common::clock::HOUR_MS, event)
+    }
+}
+
+/// Sites of every RSE in a region (the network is keyed by site).
+fn region_sites(ctx: &Ctx, region: &str) -> Vec<String> {
+    ctx.catalog
+        .list_rses()
+        .into_iter()
+        .filter(|r| r.attr("region") == Some(region))
+        .map(|r| r.site().to_string())
+        .collect()
+}
+
+fn fault_region_pair(ctx: &Ctx, a: &str, b: &str, fault: Option<LinkFault>) {
+    for sa in region_sites(ctx, a) {
+        for sb in region_sites(ctx, b) {
+            if sa == sb {
+                continue;
+            }
+            match fault {
+                Some(f) => ctx.net.set_fault_bidir(&sa, &sb, f),
+                None => ctx.net.clear_fault_bidir(&sa, &sb),
+            }
+        }
+    }
+}
+
+/// Apply one deployment-level event. Daemon crash/restart events are the
+/// driver's job (it owns the daemon fleet) and are ignored here.
+pub fn apply(ctx: &Ctx, event: &Event, now: EpochMs) {
+    let cat = &ctx.catalog;
+    match event {
+        Event::RseDown { rse } => {
+            let _ = cat.set_rse_availability(rse, false, false, false);
+            if let Some(sys) = ctx.fleet.get(rse) {
+                sys.set_offline(true);
+            }
+            cat.metrics.incr("scenario.rse_down", 1);
+        }
+        Event::RseUp { rse } => {
+            // Recovery restores availability — but an administrative drain
+            // that predates (or overlaps) the outage stays in force.
+            let drained = cat.rse_is_drained(rse);
+            let _ = cat.set_rse_availability(rse, true, !drained, true);
+            if let Some(sys) = ctx.fleet.get(rse) {
+                sys.set_offline(false);
+            }
+            cat.metrics.incr("scenario.rse_up", 1);
+        }
+        Event::RseDrain { rse } => {
+            let _ = cat.set_rse_drain(rse, true);
+        }
+        Event::RseUndrain { rse } => {
+            let _ = cat.set_rse_drain(rse, false);
+        }
+        Event::NetworkDegrade { src_region, dst_region, quality_mult, bandwidth_div } => {
+            fault_region_pair(
+                ctx,
+                src_region,
+                dst_region,
+                Some(LinkFault::degraded(*quality_mult, *bandwidth_div)),
+            );
+        }
+        Event::NetworkPartition { region_a, region_b } => {
+            fault_region_pair(ctx, region_a, region_b, Some(LinkFault::partition()));
+        }
+        Event::NetworkRestore { region_a, region_b } => {
+            fault_region_pair(ctx, region_a, region_b, None);
+        }
+        Event::CorruptionBurst { rse, files } => {
+            if let Some(sys) = ctx.fleet.get(rse) {
+                let victims: Vec<String> =
+                    sys.dump().into_iter().map(|(pfn, _)| pfn).take(*files).collect();
+                for pfn in victims {
+                    sys.corrupt(&pfn);
+                }
+            }
+            cat.metrics.incr("scenario.corruption_burst", 1);
+        }
+        Event::FtsDown { index } => {
+            if let Some(fts) = ctx.fts.get(*index) {
+                fts.set_online(false);
+            }
+        }
+        Event::FtsUp { index } => {
+            if let Some(fts) = ctx.fts.get(*index) {
+                fts.set_online(true);
+            }
+        }
+        Event::DaemonCrash { .. } | Event::DaemonRestart { .. } => {
+            // handled by the driver, which owns the daemon fleet
+        }
+        Event::TapeRecallStorm { datasets } => {
+            let mut issued = 0;
+            for d in cat.list_dids("data18", Some("raw.*"), Some(DidType::Dataset), false) {
+                if issued >= *datasets {
+                    break;
+                }
+                if cat
+                    .add_rule(
+                        RuleSpec::new("root", d.key.clone(), "tier=1&type=disk", 1)
+                            .with_lifetime(7 * DAY_MS)
+                            .with_activity("Staging"),
+                    )
+                    .is_ok()
+                {
+                    issued += 1;
+                }
+            }
+            cat.metrics.incr("scenario.recall_storm_rules", issued as u64);
+        }
+    }
+    let _ = now;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::clock::{Clock, HOUR_MS};
+    use crate::common::config::Config;
+    use crate::sim::grid::{build_grid, GridSpec};
+
+    fn ctx() -> Ctx {
+        build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new())
+    }
+
+    #[test]
+    fn builder_orders_events() {
+        let sc = Scenario::new("demo")
+            .at_hours(2, Event::RseDown { rse: "DE-T1-DISK".into() })
+            .at_hours(10, Event::RseUp { rse: "DE-T1-DISK".into() });
+        assert_eq!(sc.events.len(), 2);
+        assert_eq!(sc.events[0].0, 2 * HOUR_MS);
+        assert_eq!(sc.name, "demo");
+    }
+
+    #[test]
+    fn rse_down_and_up_toggle_catalog_and_storage() {
+        let ctx = ctx();
+        apply(&ctx, &Event::RseDown { rse: "DE-T1-DISK".into() }, 0);
+        let rse = ctx.catalog.get_rse("DE-T1-DISK").unwrap();
+        assert!(!rse.availability_write && !rse.availability_read);
+        assert!(ctx.fleet.get("DE-T1-DISK").unwrap().is_offline());
+        apply(&ctx, &Event::RseUp { rse: "DE-T1-DISK".into() }, 0);
+        let rse = ctx.catalog.get_rse("DE-T1-DISK").unwrap();
+        assert!(rse.availability_write && rse.availability_read);
+        assert!(!ctx.fleet.get("DE-T1-DISK").unwrap().is_offline());
+    }
+
+    #[test]
+    fn drain_only_blocks_writes() {
+        let ctx = ctx();
+        apply(&ctx, &Event::RseDrain { rse: "FR-T1-DISK".into() }, 0);
+        let rse = ctx.catalog.get_rse("FR-T1-DISK").unwrap();
+        assert!(rse.availability_read && !rse.availability_write && rse.availability_delete);
+        assert!(!ctx.fleet.get("FR-T1-DISK").unwrap().is_offline());
+        apply(&ctx, &Event::RseUndrain { rse: "FR-T1-DISK".into() }, 0);
+        assert!(ctx.catalog.get_rse("FR-T1-DISK").unwrap().availability_write);
+    }
+
+    #[test]
+    fn rse_up_respects_standing_drain() {
+        let ctx = ctx();
+        apply(&ctx, &Event::RseDrain { rse: "DE-T2-1".into() }, 0);
+        apply(&ctx, &Event::RseDown { rse: "DE-T2-1".into() }, 0);
+        apply(&ctx, &Event::RseUp { rse: "DE-T2-1".into() }, 0);
+        let rse = ctx.catalog.get_rse("DE-T2-1").unwrap();
+        assert!(rse.availability_read && rse.availability_delete);
+        assert!(!rse.availability_write, "drain survives the outage recovery");
+        apply(&ctx, &Event::RseUndrain { rse: "DE-T2-1".into() }, 0);
+        assert!(ctx.catalog.get_rse("DE-T2-1").unwrap().availability_write);
+    }
+
+    #[test]
+    fn partition_and_restore_cover_all_region_links() {
+        let ctx = ctx();
+        apply(
+            &ctx,
+            &Event::NetworkPartition { region_a: "FR".into(), region_b: "DE".into() },
+            0,
+        );
+        assert_eq!(ctx.net.link("FR-T1-DISK", "DE-T1-DISK").quality, 0.0);
+        assert_eq!(ctx.net.link("DE-T2-1", "FR-T2-2").quality, 0.0);
+        assert!(ctx.net.fault_count() > 0);
+        apply(
+            &ctx,
+            &Event::NetworkRestore { region_a: "FR".into(), region_b: "DE".into() },
+            0,
+        );
+        assert_eq!(ctx.net.fault_count(), 0);
+        assert!(ctx.net.link("FR-T1-DISK", "DE-T1-DISK").quality > 0.5);
+    }
+
+    #[test]
+    fn fts_downtime_toggles() {
+        let ctx = ctx();
+        apply(&ctx, &Event::FtsDown { index: 0 }, 0);
+        assert!(!ctx.fts[0].is_online());
+        assert!(ctx.fts[1].is_online());
+        apply(&ctx, &Event::FtsUp { index: 0 }, 0);
+        assert!(ctx.fts[0].is_online());
+        // out-of-range indexes are ignored
+        apply(&ctx, &Event::FtsDown { index: 99 }, 0);
+    }
+
+    #[test]
+    fn recall_storm_issues_staging_rules() {
+        let ctx = ctx();
+        let cat = &ctx.catalog;
+        for i in 0..3 {
+            cat.add_dataset("data18", &format!("raw.old{i}"), "root").unwrap();
+        }
+        apply(&ctx, &Event::TapeRecallStorm { datasets: 2 }, 0);
+        assert_eq!(cat.metrics.counter("scenario.recall_storm_rules"), 2);
+        let staging = cat.rules.scan(|r| r.activity == "Staging");
+        assert_eq!(staging.len(), 2);
+        assert!(staging.iter().all(|r| r.expires_at.is_some()));
+    }
+}

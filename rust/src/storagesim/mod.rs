@@ -20,7 +20,8 @@
 //! exactly like a real Adler-32 mismatch.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, RwLock};
 
 use crate::common::checksum;
 use crate::common::clock::EpochMs;
@@ -101,7 +102,12 @@ pub struct StorageSystem {
     pub name: String,
     pub kind: StorageKind,
     pub capacity: u64,
-    pub policy: FailurePolicy,
+    /// Behind a lock so chaos scenarios can retune failure rates at
+    /// runtime (corruption bursts, degraded endpoints).
+    policy: RwLock<FailurePolicy>,
+    /// Hard outage toggle: every storage operation fails while set
+    /// (scenario engine; the files themselves survive the outage).
+    offline: AtomicBool,
     /// Tape robot staging latency (ms) for a cold file.
     pub stage_latency_ms: i64,
     inner: Mutex<Inner>,
@@ -113,7 +119,8 @@ impl StorageSystem {
             name: name.to_string(),
             kind,
             capacity,
-            policy: FailurePolicy::default(),
+            policy: RwLock::new(FailurePolicy::default()),
+            offline: AtomicBool::new(false),
             stage_latency_ms: 4 * 60 * 1000, // 4 min robot mount+seek
             inner: Mutex::new(Inner {
                 files: BTreeMap::new(),
@@ -128,9 +135,42 @@ impl StorageSystem {
         }
     }
 
-    pub fn with_policy(mut self, policy: FailurePolicy) -> Self {
-        self.policy = policy;
+    pub fn with_policy(self, policy: FailurePolicy) -> Self {
+        *self.policy.write().unwrap() = policy;
         self
+    }
+
+    /// Seed the failure-injection PRNG (determinism plumbing: the grid
+    /// builder derives this from `GridSpec::seed`). `| 1` keeps the
+    /// xorshift state non-zero.
+    pub fn with_seed(self, seed: u64) -> Self {
+        self.inner.lock().unwrap().rng_state = seed | 1;
+        self
+    }
+
+    pub fn policy(&self) -> FailurePolicy {
+        self.policy.read().unwrap().clone()
+    }
+
+    /// Swap the failure policy at runtime (chaos scenario engine).
+    pub fn set_policy(&self, policy: FailurePolicy) {
+        *self.policy.write().unwrap() = policy;
+    }
+
+    /// Take the whole endpoint down / bring it back. While offline every
+    /// put/stat/get/stage/delete fails; out-of-band helpers (`vanish`,
+    /// `plant_dark`, `corrupt`, `dump`) still work — the bits on disk do
+    /// not disappear just because the service daemons are down.
+    pub fn set_offline(&self, offline: bool) {
+        self.offline.store(offline, Ordering::Relaxed);
+    }
+
+    pub fn is_offline(&self) -> bool {
+        self.offline.load(Ordering::Relaxed)
+    }
+
+    fn offline_err(&self) -> RucioError {
+        RucioError::StorageError(format!("{}: endpoint offline", self.name))
     }
 
     fn roll(inner: &mut Inner, p: f64) -> bool {
@@ -156,9 +196,14 @@ impl StorageSystem {
     }
 
     fn put_impl(&self, pfn: &str, bytes: u64, content: Option<Vec<u8>>, now: EpochMs) -> Result<()> {
+        let policy = self.policy();
         let mut inner = self.inner.lock().unwrap();
         inner.writes += 1;
-        if Self::roll(&mut inner, self.policy.write_fail) {
+        if self.is_offline() {
+            inner.failures += 1;
+            return Err(self.offline_err());
+        }
+        if Self::roll(&mut inner, policy.write_fail) {
             inner.failures += 1;
             return Err(RucioError::StorageError(format!("{}: write failed", self.name)));
         }
@@ -173,7 +218,7 @@ impl StorageSystem {
             Some(c) => checksum::adler32_hex(c),
             None => synthetic_adler32(pfn, bytes),
         };
-        if Self::roll(&mut inner, self.policy.corrupt) {
+        if Self::roll(&mut inner, policy.corrupt) {
             // Corrupted write: stored checksum differs from the expected one.
             adler = checksum::adler32_hex(format!("CORRUPT:{pfn}").as_bytes());
         }
@@ -195,9 +240,14 @@ impl StorageSystem {
 
     /// stat(): existence + size + checksum, honoring read-failure policy.
     pub fn stat(&self, pfn: &str) -> Result<StoredFile> {
+        let policy = self.policy();
         let mut inner = self.inner.lock().unwrap();
         inner.reads += 1;
-        if Self::roll(&mut inner, self.policy.read_fail) {
+        if self.is_offline() {
+            inner.failures += 1;
+            return Err(self.offline_err());
+        }
+        if Self::roll(&mut inner, policy.read_fail) {
             inner.failures += 1;
             return Err(RucioError::StorageError(format!("{}: read failed", self.name)));
         }
@@ -226,6 +276,10 @@ impl StorageSystem {
             return Ok(now);
         }
         let mut inner = self.inner.lock().unwrap();
+        if self.is_offline() {
+            inner.failures += 1;
+            return Err(self.offline_err());
+        }
         if !inner.files.contains_key(pfn) {
             return Err(RucioError::SourceNotFound(format!("{}:{pfn}", self.name)));
         }
@@ -253,9 +307,14 @@ impl StorageSystem {
     }
 
     pub fn delete(&self, pfn: &str) -> Result<()> {
+        let policy = self.policy();
         let mut inner = self.inner.lock().unwrap();
         inner.deletes += 1;
-        if Self::roll(&mut inner, self.policy.delete_fail) {
+        if self.is_offline() {
+            inner.failures += 1;
+            return Err(self.offline_err());
+        }
+        if Self::roll(&mut inner, policy.delete_fail) {
             inner.failures += 1;
             return Err(RucioError::StorageError(format!("{}: delete denied", self.name)));
         }
@@ -431,6 +490,45 @@ mod tests {
         assert!(s.corrupt("/f"));
         let f = s.get("/f").unwrap();
         assert_ne!(f.adler32, synthetic_adler32("/f", 10));
+    }
+
+    #[test]
+    fn offline_endpoint_fails_everything_but_survives() {
+        let s = StorageSystem::new("OUT", StorageKind::Disk, 1000);
+        s.put("/f", 10, 0).unwrap();
+        s.set_offline(true);
+        assert!(s.is_offline());
+        assert!(s.put("/g", 10, 0).is_err());
+        assert!(s.stat("/f").is_err());
+        assert!(s.delete("/f").is_err());
+        assert_eq!(s.dump().len(), 1, "bits survive the outage");
+        let (_, _, _, failures) = s.op_counters();
+        assert!(failures >= 3);
+        s.set_offline(false);
+        assert_eq!(s.stat("/f").unwrap().bytes, 10);
+    }
+
+    #[test]
+    fn runtime_policy_swap_takes_effect() {
+        let s = StorageSystem::new("HOT", StorageKind::Disk, u64::MAX);
+        s.put("/a", 1, 0).unwrap();
+        s.set_policy(FailurePolicy { write_fail: 1.0, ..Default::default() });
+        assert!(s.put("/b", 1, 0).is_err());
+        s.set_policy(FailurePolicy::default());
+        s.put("/b", 1, 0).unwrap();
+        assert_eq!(s.policy().write_fail, 0.0);
+    }
+
+    #[test]
+    fn seeded_rng_reproduces_failures() {
+        let run = |seed: u64| -> Vec<bool> {
+            let s = StorageSystem::new("SEEDED", StorageKind::Disk, u64::MAX)
+                .with_policy(FailurePolicy { write_fail: 0.5, ..Default::default() })
+                .with_seed(seed);
+            (0..50).map(|i| s.put(&format!("/f{i}"), 1, 0).is_ok()).collect()
+        };
+        assert_eq!(run(99), run(99));
+        assert_ne!(run(99), run(100));
     }
 
     #[test]

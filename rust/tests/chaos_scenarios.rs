@@ -1,0 +1,378 @@
+//! Chaos scenario suite: declarative fault timelines injected into full
+//! simulated-grid runs, each asserting the complete system-invariant set
+//! (`sim::invariants`) *plus* a scenario-specific recovery property —
+//! outage backlog drains, drained RSEs stop accreting data, partitions
+//! heal, corruption is triaged, FTS blackouts queue-and-drain, daemon
+//! crashes fail over via the heartbeat hash ring, and tape-recall storms
+//! stage through the robots. A fixed seed reproduces identical per-day
+//! stats across runs, so every assertion here is exact, not statistical.
+
+use rucio::common::clock::{HOUR_MS, MINUTE_MS};
+use rucio::common::config::Config;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{DidKey, ReplicaState, RuleState};
+use rucio::sim::driver::{standard_driver, Driver};
+use rucio::sim::grid::GridSpec;
+use rucio::sim::scenario::{Event, Scenario};
+use rucio::sim::workload::WorkloadSpec;
+use rucio::storagesim::synthetic_adler32_for;
+
+/// 10 virtual minutes per discrete-event tick.
+const TICK: i64 = 10 * MINUTE_MS;
+
+/// Small chaos rig: one T2 per region, modest workload, fast reaper,
+/// heartbeat TTL sized for the coarse virtual tick, invariant checks
+/// every 2 virtual hours. Everything is seeded from `seed`.
+fn chaos_driver(seed: u64) -> Driver {
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "1h");
+    // live daemons tick every 10 virtual minutes; a 45-minute TTL keeps
+    // them alive while letting a crashed instance expire within the run
+    cfg.set("heartbeat", "ttl", "45m");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 4,
+            files_per_dataset: 4,
+            median_file_bytes: 500_000_000,
+            derivations_per_day: 3,
+            analysis_accesses_per_day: 40,
+            seed: seed ^ 0xA0D,
+            ..Default::default()
+        },
+        cfg,
+    );
+    driver.enable_invariant_checks(2 * HOUR_MS);
+    driver
+}
+
+fn assert_no_violations(d: &Driver) {
+    assert!(
+        d.violations.is_empty(),
+        "system invariants violated: {:?}",
+        d.violations.iter().take(5).collect::<Vec<_>>()
+    );
+}
+
+fn ok_fraction(d: &Driver) -> f64 {
+    let cat = &d.ctx.catalog;
+    let total = cat.rules.len().max(1);
+    cat.rules_by_state.count(&RuleState::Ok) as f64 / total as f64
+}
+
+// ---------------------------------------------------------------------
+// scenario 1: full site outage at the Tier-0 source
+// ---------------------------------------------------------------------
+
+#[test]
+fn rse_outage_backlog_drains_and_rules_reconverge() {
+    let mut d = chaos_driver(1001);
+    d.run_days(1, TICK); // warm steady state
+    let t0 = d.ctx.catalog.now();
+    let fault_start = t0 + 4 * HOUR_MS;
+    let fault_cleared = t0 + 28 * HOUR_MS;
+    d.schedule_scenario(
+        &Scenario::new("tier-0 outage")
+            .at_hours(4, Event::RseDown { rse: "CERN-PROD".into() })
+            .at_hours(28, Event::RseUp { rse: "CERN-PROD".into() }),
+    );
+    d.run_days(4, TICK);
+
+    assert_no_violations(&d);
+    // data produced during the outage never reached storage; the auditor
+    // flags it lost against the storage dump and the necromancer strips
+    // it from its datasets instead of leaving rules stuck forever
+    let lost = d.ctx.catalog.metrics.counter("necromancer.lost");
+    assert!(lost > 0, "outage uploads must surface as lost files");
+    // the grid reconverges: backlog back at pre-fault level, stuck drained
+    let report = d.recovery_report(fault_start, fault_cleared);
+    assert!(
+        report.reconverged_at.is_some(),
+        "backlog must drain after recovery: {report:?}"
+    );
+    assert!(ok_fraction(&d) > 0.5, "rules mostly OK: {}", ok_fraction(&d));
+}
+
+// ---------------------------------------------------------------------
+// scenario 2: drain — no new data, reads keep flowing
+// ---------------------------------------------------------------------
+
+#[test]
+fn drained_rse_receives_no_new_data() {
+    let mut d = chaos_driver(1002);
+    d.run_days(1, TICK);
+    let cat = d.ctx.catalog.clone();
+    let drain_at = cat.now();
+    d.schedule_scenario(
+        &Scenario::new("drain CA-T2-1").at(0, Event::RseDrain { rse: "CA-T2-1".into() }),
+    );
+    d.run_days(2, TICK);
+
+    assert_no_violations(&d);
+    let fresh = cat
+        .replicas
+        .scan(|r| r.rse == "CA-T2-1" && r.created_at > drain_at);
+    assert!(
+        fresh.is_empty(),
+        "drained RSE must not accrete data: {} fresh replicas",
+        fresh.len()
+    );
+    let rse = cat.get_rse("CA-T2-1").unwrap();
+    assert!(rse.availability_read && !rse.availability_write);
+    assert!(ok_fraction(&d) > 0.5);
+}
+
+// ---------------------------------------------------------------------
+// scenario 3: inter-region partition, then heal
+// ---------------------------------------------------------------------
+
+#[test]
+fn network_partition_heals_and_converges() {
+    let mut d = chaos_driver(1003);
+    d.run_days(1, TICK);
+    let t0 = d.ctx.catalog.now();
+    d.schedule_scenario(
+        &Scenario::new("DE/FR partition")
+            .at_hours(2, Event::NetworkPartition { region_a: "DE".into(), region_b: "FR".into() })
+            .at_hours(26, Event::NetworkRestore { region_a: "DE".into(), region_b: "FR".into() }),
+    );
+    d.run_days(3, TICK);
+
+    assert_no_violations(&d);
+    assert_eq!(d.ctx.net.fault_count(), 0, "all overlays cleared");
+    let report = d.recovery_report(t0 + 2 * HOUR_MS, t0 + 26 * HOUR_MS);
+    assert!(report.reconverged_at.is_some(), "{report:?}");
+    assert!(ok_fraction(&d) > 0.5);
+}
+
+// ---------------------------------------------------------------------
+// scenario 4: corruption burst — every copy rots; triage to lost
+// ---------------------------------------------------------------------
+
+#[test]
+fn corruption_burst_is_triaged_by_necromancer() {
+    let seed = 1004;
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "1h");
+    cfg.set("heartbeat", "ttl", "45m");
+    // one checksum strike is enough: corruption goes straight to BAD
+    cfg.set("replicas", "suspicious_threshold", "1");
+    let mut d = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 2,
+            files_per_dataset: 2,
+            derivations_per_day: 1,
+            analysis_accesses_per_day: 10,
+            seed: seed ^ 0xA0D,
+            ..Default::default()
+        },
+        cfg,
+    );
+    d.enable_invariant_checks(2 * HOUR_MS);
+    d.run_days(1, TICK);
+
+    let cat = d.ctx.catalog.clone();
+    let now = cat.now();
+    // 6 files, each with two replicas — and both copies rot
+    let mut keys = Vec::new();
+    for i in 0..6 {
+        let name = format!("chaos.rot{i:02}");
+        let bytes = 50_000_000u64;
+        let adler = synthetic_adler32_for(&name, bytes);
+        cat.add_file("data18", &name, "root", bytes, &adler, None).unwrap();
+        let key = DidKey::new("data18", &name);
+        for rse in ["UK-T1-DISK", "ND-T1-DISK"] {
+            let rep = cat.add_replica(rse, &key, ReplicaState::Available, None).unwrap();
+            let sys = d.ctx.fleet.get(rse).unwrap();
+            sys.put(&rep.pfn, bytes, now).unwrap();
+            sys.corrupt(&rep.pfn);
+        }
+        // a pin protects the (rotten) copies from the reaper, so triage —
+        // not cache eviction — has to deal with them
+        cat.add_rule(RuleSpec::new("root", key.clone(), "UK-T1-DISK|ND-T1-DISK", 2)).unwrap();
+        // pulling them to a T2 forces reads of the rotten copies
+        cat.add_rule(RuleSpec::new("root", key.clone(), "UK-T2-1", 1)).unwrap();
+        keys.push(key);
+    }
+    d.run_days(2, TICK);
+
+    assert_no_violations(&d);
+    // every file went through checksum-fail → BAD → necromancer, and with
+    // no clean copy anywhere ended as LOST with its rules cleaned up
+    let lost = cat.metrics.counter("necromancer.lost");
+    assert!(lost >= 6, "all rotten files triaged to lost, got {lost}");
+    for key in &keys {
+        assert!(
+            cat.list_rules_for_did(key).is_empty(),
+            "rules on lost {key} cleaned up"
+        );
+        assert!(cat.available_replicas(key).is_empty());
+    }
+    assert!(cat.metrics.counter("replicas.declared_bad") >= 6);
+}
+
+// ---------------------------------------------------------------------
+// scenario 5: FTS failover, then full blackout — backlog queues & drains
+// ---------------------------------------------------------------------
+
+#[test]
+fn fts_blackout_queues_backlog_then_drains() {
+    let mut d = chaos_driver(1005);
+    d.run_days(1, TICK);
+    let t0 = d.ctx.catalog.now();
+    d.schedule_scenario(
+        &Scenario::new("fts outage ladder")
+            // one server dies: the conveyor reroutes to the survivors
+            .at_hours(2, Event::FtsDown { index: 0 })
+            // total blackout: nothing can be submitted
+            .at_hours(6, Event::FtsDown { index: 1 })
+            .at_hours(6, Event::FtsDown { index: 2 })
+            // everything returns
+            .at_hours(18, Event::FtsUp { index: 0 })
+            .at_hours(18, Event::FtsUp { index: 1 })
+            .at_hours(18, Event::FtsUp { index: 2 })
+            .at_hours(19, Event::DaemonCrash { daemon: "conveyor-poller".into(), which: 0 })
+            .at_hours(22, Event::DaemonRestart { daemon: "conveyor-poller".into(), which: 0 }),
+    );
+    let before_blackout = d.ctx.fts.iter().map(|f| f.totals().0).sum::<u64>();
+    d.run_days(2, TICK);
+
+    assert_no_violations(&d);
+    let after = d.ctx.fts.iter().map(|f| f.totals().0).sum::<u64>();
+    assert!(after > before_blackout, "submissions resumed after recovery");
+    let report = d.recovery_report(t0 + 6 * HOUR_MS, t0 + 18 * HOUR_MS);
+    assert!(
+        report.peak_backlog > report.baseline_backlog.max(4),
+        "blackout builds a backlog: {report:?}"
+    );
+    assert!(report.reconverged_at.is_some(), "backlog drains: {report:?}");
+    assert!(d.ctx.fts.iter().all(|f| f.is_online()));
+    assert!(ok_fraction(&d) > 0.5);
+}
+
+// ---------------------------------------------------------------------
+// scenario 6: daemon-instance crash — heartbeat hash ring failover
+// ---------------------------------------------------------------------
+
+#[test]
+fn conveyor_failover_rebalances_and_converges() {
+    let mut d = chaos_driver(1006);
+    // a second conveyor submitter instance joins the fleet
+    let sub2 = rucio::daemons::conveyor::Submitter::new(d.ctx.clone(), "sub-2");
+    d.add_daemon(Box::new(sub2));
+    d.run_days(1, TICK);
+    let now = d.ctx.catalog.now();
+    assert_eq!(
+        d.ctx.heartbeats.live("submitter", now),
+        2,
+        "both instances beating"
+    );
+    // drop one instance's heartbeat mid-run
+    d.schedule_scenario(&Scenario::new("submitter crash").at_hours(1, Event::DaemonCrash {
+        daemon: "conveyor-submitter".into(),
+        which: 1,
+    }));
+    d.run_days(2, TICK);
+
+    assert_no_violations(&d);
+    let now = d.ctx.catalog.now();
+    assert_eq!(
+        d.ctx.heartbeats.live("submitter", now),
+        1,
+        "hash ring rebalanced to the survivor"
+    );
+    // the surviving instance owns the whole queue: rules still converge
+    assert!(ok_fraction(&d) > 0.5, "ok fraction: {}", ok_fraction(&d));
+}
+
+// ---------------------------------------------------------------------
+// scenario 7: tape-recall storm
+// ---------------------------------------------------------------------
+
+#[test]
+fn tape_recall_storm_stages_cold_data_to_disk() {
+    let mut d = chaos_driver(1007);
+    d.run_days(1, TICK);
+    let cat = d.ctx.catalog.clone();
+    let now = cat.now();
+    // cold archival datasets: tape-only replicas, pinned on tape
+    for i in 0..3 {
+        let ds_name = format!("raw.cold{i}");
+        cat.add_dataset("data18", &ds_name, "root").unwrap();
+        let ds = DidKey::new("data18", &ds_name);
+        for j in 0..3 {
+            let fname = format!("{ds_name}.f{j}");
+            let bytes = 100_000_000u64;
+            let adler = synthetic_adler32_for(&fname, bytes);
+            cat.add_file("data18", &fname, "root", bytes, &adler, None).unwrap();
+            let key = DidKey::new("data18", &fname);
+            let rep = cat.add_replica("CERN-TAPE", &key, ReplicaState::Available, None).unwrap();
+            d.ctx.fleet.get("CERN-TAPE").unwrap().put(&rep.pfn, bytes, now).unwrap();
+            cat.attach(&ds, &key).unwrap();
+        }
+        cat.close(&ds).unwrap();
+        // archival pin so the reaper leaves the cold copies alone
+        cat.add_rule(RuleSpec::new("root", ds.clone(), "CERN-TAPE", 1)).unwrap();
+    }
+    d.schedule_scenario(
+        &Scenario::new("recall storm").at_hours(2, Event::TapeRecallStorm { datasets: 50 }),
+    );
+    d.run_days(2, TICK);
+
+    assert_no_violations(&d);
+    assert!(cat.metrics.counter("scenario.recall_storm_rules") >= 3);
+    // every cold file was recalled through the robots onto T1 disk
+    for i in 0..3 {
+        for j in 0..3 {
+            let key = DidKey::new("data18", &format!("raw.cold{i}.f{j}"));
+            let on_disk = cat
+                .available_replicas(&key)
+                .iter()
+                .any(|r| !cat.get_rse(&r.rse).unwrap().is_tape);
+            assert!(on_disk, "cold file {key} must have a disk copy after the storm");
+        }
+    }
+    let staging: Vec<_> = cat.rules.scan(|r| r.activity == "Staging");
+    assert!(
+        staging.iter().all(|r| r.state == RuleState::Ok),
+        "staging rules converge: {:?}",
+        staging.iter().map(|r| r.state).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------
+// determinism: fixed seed ⇒ identical per-day stats, twice
+// ---------------------------------------------------------------------
+
+#[test]
+fn fixed_seed_reproduces_identical_day_stats() {
+    let run = |seed: u64| {
+        let mut d = chaos_driver(seed);
+        d.schedule_scenario(
+            &Scenario::new("mixed incident day")
+                .at_hours(6, Event::RseDown { rse: "ND-T2-1".into() })
+                .at_hours(12, Event::NetworkDegrade {
+                    src_region: "UK".into(),
+                    dst_region: "IT".into(),
+                    quality_mult: 0.3,
+                    bandwidth_div: 10,
+                })
+                .at_hours(30, Event::RseUp { rse: "ND-T2-1".into() })
+                .at_hours(36, Event::NetworkRestore {
+                    region_a: "UK".into(),
+                    region_b: "IT".into(),
+                }),
+        );
+        d.run_days(2, TICK);
+        assert_no_violations(&d);
+        d.days
+    };
+    let a = run(4242);
+    let b = run(4242);
+    assert_eq!(a, b, "fixed seed must reproduce identical per-day stats");
+    let c = run(4243);
+    assert_ne!(a, c, "a different seed changes the run");
+}

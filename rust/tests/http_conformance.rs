@@ -1,0 +1,340 @@
+//! In-process HTTP conformance suite for the REST surface (paper §3.3,
+//! §4.1): auth token lifecycle over userpass and x509 (including 401s on
+//! missing/expired/forged tokens), the error→status-code contract,
+//! `x-rucio-next-cursor` pagination round-trips with malformed-cursor
+//! 400s, and the atomicity of the bulk routes (`POST /replicas/bulk`
+//! all-or-nothing, `POST /rules/bulk` rollback).
+
+use std::sync::Arc;
+
+use rucio::common::clock::{Clock, HOUR_MS};
+use rucio::core::types::{AccountType, AuthType};
+use rucio::core::Catalog;
+use rucio::httpd::{HttpClient, HttpServer};
+use rucio::jsonx::Json;
+use rucio::mq::Broker;
+
+/// Server over a sim-clock catalog (so token expiry can be driven), with
+/// alice (user) + root identities and one disk RSE.
+fn server() -> (HttpServer, Arc<Catalog>) {
+    let catalog = Arc::new(Catalog::new_for_tests());
+    catalog.add_account("alice", AccountType::User, "a@x").unwrap();
+    catalog
+        .add_identity("alice", AuthType::UserPass, "alice", Some("pw"))
+        .unwrap();
+    catalog
+        .add_identity("CN=Alice Example/OU=Physics", AuthType::X509, "alice", None)
+        .unwrap();
+    catalog
+        .add_identity("root", AuthType::UserPass, "root", Some("rootpw"))
+        .unwrap();
+    catalog.add_rse(rucio::core::rse::Rse::new("X-DISK", 0)).unwrap();
+    let srv = rucio::server::serve(catalog.clone(), Broker::new(), "127.0.0.1:0", 2).unwrap();
+    (srv, catalog)
+}
+
+fn advance(cat: &Catalog, ms: i64) {
+    match &cat.clock {
+        Clock::Sim(s) => {
+            s.advance(ms);
+        }
+        _ => panic!("conformance suite needs the sim clock"),
+    }
+}
+
+/// Raw client carrying a valid alice token.
+fn authed_client(srv: &HttpServer) -> HttpClient {
+    let c = HttpClient::new(&srv.url());
+    c.set_header("x-rucio-account", "alice");
+    c.set_header("x-rucio-username", "alice");
+    c.set_header("x-rucio-password", "pw");
+    let resp = c.get("/auth/userpass").unwrap();
+    assert_eq!(resp.status, 200);
+    let token = resp.header("x-rucio-auth-token").unwrap().to_string();
+    let c = HttpClient::new(&srv.url());
+    c.set_header("x-rucio-auth-token", &token);
+    c
+}
+
+// ---------------------------------------------------------------------
+// auth token lifecycle
+// ---------------------------------------------------------------------
+
+#[test]
+fn userpass_token_lifecycle_with_expiry() {
+    let (srv, cat) = server();
+    let raw = HttpClient::new(&srv.url());
+    // no token at all → 401
+    assert_eq!(raw.get("/scopes").unwrap().status, 401);
+    // forged token → 401
+    raw.set_header("x-rucio-auth-token", "forged-token");
+    assert_eq!(raw.get("/scopes").unwrap().status, 401);
+
+    // proper login issues a working token
+    let c = authed_client(&srv);
+    assert_eq!(c.get("/scopes").unwrap().status, 200);
+
+    // tokens expire after [auth] token_lifetime (default 1h) of inactivity
+    advance(&cat, 2 * HOUR_MS);
+    let resp = c.get("/scopes").unwrap();
+    assert_eq!(resp.status, 401, "expired token must be rejected");
+    let body = resp.body_json().unwrap();
+    assert!(body.req_str("error").unwrap().contains("expired"), "{body}");
+}
+
+#[test]
+fn userpass_wrong_credentials_are_401() {
+    let (srv, _cat) = server();
+    let c = HttpClient::new(&srv.url());
+    c.set_header("x-rucio-account", "alice");
+    c.set_header("x-rucio-username", "alice");
+    c.set_header("x-rucio-password", "wrong");
+    assert_eq!(c.get("/auth/userpass").unwrap().status, 401);
+    // missing headers are a 401, not a 500
+    let c = HttpClient::new(&srv.url());
+    assert_eq!(c.get("/auth/userpass").unwrap().status, 401);
+}
+
+#[test]
+fn x509_dn_token_works() {
+    let (srv, _cat) = server();
+    let c = HttpClient::new(&srv.url());
+    c.set_header("x-rucio-account", "alice");
+    c.set_header("x-rucio-client-dn", "CN=Alice Example/OU=Physics");
+    let resp = c.get("/auth/x509").unwrap();
+    assert_eq!(resp.status, 200);
+    let token = resp.header("x-rucio-auth-token").unwrap().to_string();
+    let c = HttpClient::new(&srv.url());
+    c.set_header("x-rucio-auth-token", &token);
+    assert_eq!(c.get("/scopes").unwrap().status, 200);
+    // unknown DN → 401
+    let c = HttpClient::new(&srv.url());
+    c.set_header("x-rucio-account", "alice");
+    c.set_header("x-rucio-client-dn", "CN=Mallory");
+    assert_eq!(c.get("/auth/x509").unwrap().status, 401);
+}
+
+// ---------------------------------------------------------------------
+// error → status-code mapping
+// ---------------------------------------------------------------------
+
+#[test]
+fn error_status_code_contract() {
+    let (srv, cat) = server();
+    let c = authed_client(&srv);
+
+    // 404: nonexistent DID / rule / route
+    assert_eq!(c.get("/dids/user.alice/nope").unwrap().status, 404);
+    assert_eq!(c.get("/rules/999999").unwrap().status, 404);
+    assert_eq!(c.get("/no/such/route").unwrap().status, 404);
+    // 405: known path, wrong method
+    assert_eq!(c.delete("/ping").unwrap().status, 405);
+
+    // 201 then 409: duplicate DID
+    let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "aabbccdd");
+    assert_eq!(c.post_json("/dids/user.alice/f1", &file).unwrap().status, 201);
+    assert_eq!(c.post_json("/dids/user.alice/f1", &file).unwrap().status, 409);
+
+    // 400: invalid DID type / malformed rule id
+    let bad = Json::obj().with("type", "WEIRD");
+    assert_eq!(c.post_json("/dids/user.alice/f2", &bad).unwrap().status, 400);
+    assert_eq!(c.get("/rules/not-a-number").unwrap().status, 400);
+
+    // 403: permission denied (alice creating an RSE)
+    assert_eq!(c.post_json("/rses/EVIL", &Json::obj()).unwrap().status, 403);
+
+    // 413: quota exceeded
+    cat.set_account_limit("alice", "X-DISK", 5).unwrap();
+    let rule = Json::obj()
+        .with("scope", "user.alice")
+        .with("name", "f1")
+        .with("rse_expression", "X-DISK")
+        .with("copies", 1u64);
+    assert_eq!(c.post_json("/rules", &rule).unwrap().status, 413);
+    // error body carries the machine-readable status
+    let resp = c.post_json("/rules", &rule).unwrap();
+    assert_eq!(resp.body_json().unwrap().req_u64("status").unwrap(), 413);
+}
+
+// ---------------------------------------------------------------------
+// cursor pagination round-trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn cursor_pagination_round_trips_exactly_once() {
+    let (srv, cat) = server();
+    let c = authed_client(&srv);
+    for i in 0..23 {
+        let file = Json::obj()
+            .with("type", "FILE")
+            .with("bytes", 10u64)
+            .with("adler32", "aabbccdd");
+        assert_eq!(
+            c.post_json(&format!("/dids/user.alice/p{i:03}"), &file).unwrap().status,
+            201
+        );
+        assert_eq!(
+            c.post_json(
+                &format!("/replicas/X-DISK/user.alice/p{i:03}"),
+                &Json::obj()
+            )
+            .unwrap()
+            .status,
+            201
+        );
+    }
+
+    // DID pages: every row exactly once, in name order, cursor as given
+    let mut names: Vec<String> = Vec::new();
+    let mut cursor: Option<String> = None;
+    loop {
+        let path = match &cursor {
+            Some(cur) => format!("/dids/user.alice?limit=7&cursor={cur}"),
+            None => "/dids/user.alice?limit=7".to_string(),
+        };
+        let resp = c.get(&path).unwrap();
+        assert_eq!(resp.status, 200);
+        for row in resp.body_ndjson().unwrap() {
+            names.push(row.req_str("name").unwrap().to_string());
+        }
+        match resp.header("x-rucio-next-cursor") {
+            Some(next) => cursor = Some(next.to_string()),
+            None => break,
+        }
+    }
+    let expect: Vec<String> = (0..23).map(|i| format!("p{i:03}")).collect();
+    assert_eq!(names, expect);
+
+    // replica pages: structured cursor survives its percent-encoded trip
+    let mut seen = 0usize;
+    let mut pages = 0usize;
+    let mut cursor: Option<String> = None;
+    loop {
+        let path = match &cursor {
+            Some(cur) => format!("/replicas?limit=9&cursor={cur}"),
+            None => "/replicas?limit=9".to_string(),
+        };
+        let resp = c.get(&path).unwrap();
+        assert_eq!(resp.status, 200);
+        seen += resp.body_ndjson().unwrap().len();
+        pages += 1;
+        assert!(pages < 50, "cursor must make progress");
+        match resp.header("x-rucio-next-cursor") {
+            Some(next) => cursor = Some(next.to_string()),
+            None => break,
+        }
+    }
+    assert_eq!(seen, cat.replicas.len());
+    assert_eq!(pages, 3, "23 replicas / 9 per page");
+
+    // rule pages exist too (numeric cursor)
+    let resp = c.get("/rules?limit=5").unwrap();
+    assert_eq!(resp.status, 200);
+}
+
+#[test]
+fn malformed_cursors_are_400() {
+    let (srv, _cat) = server();
+    let c = authed_client(&srv);
+    assert_eq!(c.get("/rules?cursor=not-a-number").unwrap().status, 400);
+    assert_eq!(c.get("/replicas?cursor=garbage-without-separators").unwrap().status, 400);
+}
+
+// ---------------------------------------------------------------------
+// bulk atomicity
+// ---------------------------------------------------------------------
+
+#[test]
+fn replicas_bulk_is_all_or_nothing() {
+    let (srv, cat) = server();
+    let c = authed_client(&srv);
+    for name in ["b0", "b1"] {
+        let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+        c.post_json(&format!("/dids/user.alice/{name}"), &file).unwrap();
+    }
+    let ds = Json::obj().with("type", "DATASET");
+    c.post_json("/dids/user.alice/myds", &ds).unwrap();
+
+    // one bad entry (a dataset) fails the whole batch with no partial state
+    let body = Json::obj().with("rse", "X-DISK").with(
+        "replicas",
+        Json::Arr(vec![
+            Json::obj().with("scope", "user.alice").with("name", "b0"),
+            Json::obj().with("scope", "user.alice").with("name", "myds"),
+        ]),
+    );
+    let resp = c.post_json("/replicas/bulk", &body).unwrap();
+    assert_eq!(resp.status, 400);
+    assert_eq!(cat.replicas.len(), 0, "no partial registration");
+
+    // the clean batch lands in one call
+    let body = Json::obj().with("rse", "X-DISK").with(
+        "replicas",
+        Json::Arr(vec![
+            Json::obj().with("scope", "user.alice").with("name", "b0"),
+            Json::obj().with("scope", "user.alice").with("name", "b1"),
+        ]),
+    );
+    let resp = c.post_json("/replicas/bulk", &body).unwrap();
+    assert_eq!(resp.status, 201);
+    assert_eq!(resp.body_json().unwrap().req_u64("added").unwrap(), 2);
+    assert_eq!(cat.replicas.len(), 2);
+
+    // replaying the identical batch is a duplicate → atomic failure
+    let resp = c.post_json("/replicas/bulk", &body).unwrap();
+    assert_eq!(resp.status, 409);
+    assert_eq!(cat.replicas.len(), 2);
+}
+
+#[test]
+fn rules_bulk_rolls_back_on_mid_batch_failure() {
+    let (srv, cat) = server();
+    let c = authed_client(&srv);
+    for name in ["r0", "r1"] {
+        let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+        c.post_json(&format!("/dids/user.alice/{name}"), &file).unwrap();
+    }
+    // second spec resolves to an empty RSE set → whole call fails and the
+    // first rule (already created) is rolled back
+    let body = Json::obj().with(
+        "rules",
+        Json::Arr(vec![
+            Json::obj()
+                .with("scope", "user.alice")
+                .with("name", "r0")
+                .with("rse_expression", "X-DISK"),
+            Json::obj()
+                .with("scope", "user.alice")
+                .with("name", "r1")
+                .with("rse_expression", "tier=99"),
+        ]),
+    );
+    let resp = c.post_json("/rules/bulk", &body).unwrap();
+    assert_eq!(resp.status, 400);
+    assert_eq!(cat.rules.len(), 0, "first rule rolled back");
+    assert_eq!(cat.locks.len(), 0);
+    assert_eq!(
+        cat.requests_by_state.count(&rucio::core::types::RequestState::Queued),
+        0
+    );
+
+    // the clean batch creates both and reports ids
+    let body = Json::obj().with(
+        "rules",
+        Json::Arr(vec![
+            Json::obj()
+                .with("scope", "user.alice")
+                .with("name", "r0")
+                .with("rse_expression", "X-DISK"),
+            Json::obj()
+                .with("scope", "user.alice")
+                .with("name", "r1")
+                .with("rse_expression", "X-DISK"),
+        ]),
+    );
+    let resp = c.post_json("/rules/bulk", &body).unwrap();
+    assert_eq!(resp.status, 201);
+    let ids = resp.body_json().unwrap();
+    assert_eq!(ids.get("rule_ids").and_then(Json::as_arr).unwrap().len(), 2);
+    assert_eq!(cat.rules.len(), 2);
+}

@@ -11,20 +11,38 @@ use rucio::sim::workload::WorkloadSpec;
 
 #[test]
 fn one_week_convergence_and_monitoring() {
+    // Every PRNG stream is pinned explicitly, and `standard_driver`
+    // threads the grid seed through the catalog PRNG, the per-endpoint
+    // storage fault streams, and the FTS quality rolls. A fixed-seed run
+    // is therefore bit-for-bit deterministic (chaos_scenarios.rs asserts
+    // identical per-day stats across repeated runs), so the thresholds
+    // below are exact checks on one known trajectory, not statistical
+    // gambles over a random one.
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", "42");
     let mut driver = standard_driver(
-        &GridSpec { t2_per_region: 1, ..Default::default() },
+        &GridSpec { t2_per_region: 1, seed: 42, ..Default::default() },
         WorkloadSpec {
             raw_datasets_per_day: 6,
             derivations_per_day: 4,
             analysis_accesses_per_day: 60,
+            seed: 7,
             ..Default::default()
         },
-        Config::new(),
+        cfg,
     );
     driver.run_days(7, 10 * MINUTE_MS);
     let cat = driver.ctx.catalog.clone();
 
-    // most rules converge to OK
+    // Tolerance bands (all wide of the observed trajectory on purpose, so
+    // legitimate behaviour changes in other subsystems don't trip them):
+    // * rule volume — a week of this workload creates several hundred
+    //   rules; >50 guards against the workload silently stalling;
+    // * convergence — modelled failure rates are ~4–10% with repair
+    //   active, so OK-fraction sits far above the 0.70 floor;
+    // * failure rate — the paper reports 10–20% transfer failures at
+    //   scale; 0.35 only catches systemic breakage (e.g. a dead retry
+    //   path), not modelled flakiness.
     let total = cat.rules.len();
     let ok = cat.rules_by_state.count(&RuleState::Ok);
     assert!(total > 50, "rules created: {total}");
