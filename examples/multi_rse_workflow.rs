@@ -20,8 +20,8 @@ fn main() {
     let ctx = build_grid(&GridSpec::default(), Clock::sim_at(1_514_764_800_000), Config::new());
     let cat = ctx.catalog.clone();
 
-    // --- 1. subscriptions in action: produce a RAW dataset; the injector
-    // matches the standing "raw-tape-archival" subscription.
+    // --- 1. subscriptions in action: produce a RAW dataset; the
+    // transmogrifier matches the standing "raw-tape-archival" subscription.
     let mut wl = Workload::new(WorkloadSpec { files_per_dataset: 4, ..Default::default() });
     let mut driver = Driver::new(ctx.clone(), wl, Driver::standard_daemons(&ctx));
     // seed one RAW dataset through the workload by running a short day

@@ -122,6 +122,24 @@ pub fn problem_files(catalog: &Catalog) -> Vec<Vec<String>> {
     rows
 }
 
+/// Metadata catalog shape: per metadata key → (distinct scope-local
+/// values, total postings) out of the inverted index — what the query
+/// planner's selectivity choices look like in production
+/// (capacity-planning report).
+pub fn metadata_key_stats(catalog: &Catalog) -> Vec<Vec<String>> {
+    let mut acc: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for ((_scope, key, _value), postings) in catalog.meta_index.key_counts() {
+        let e = acc.entry(key).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += postings;
+    }
+    acc.into_iter()
+        .map(|(key, (values, postings))| {
+            vec![key, values.to_string(), postings.to_string()]
+        })
+        .collect()
+}
+
 /// Table-size report off the monitoring registry (paper §4.6: "a probe
 /// regularly checks the database" — queue depths and catalog scale).
 pub fn table_sizes(catalog: &Catalog) -> Vec<Vec<String>> {
@@ -179,5 +197,23 @@ mod tests {
         c.add_dataset("s", "ds", "root").unwrap();
         let unused = unused_datasets(&c, c.now() + 10 * WEEK_MS, default_idle_ms());
         assert_eq!(unused, vec!["s:ds"]);
+    }
+
+    #[test]
+    fn metadata_key_stats_aggregates_the_inverted_index() {
+        use crate::core::types::DidKey;
+        let c = Catalog::new_for_tests();
+        c.add_scope("s", "root").unwrap();
+        for i in 0..4 {
+            let name = format!("f{i}");
+            c.add_file("s", &name, "root", 1, "x", None).unwrap();
+            let key = DidKey::new("s", &name);
+            c.set_metadata(&key, "datatype", if i < 3 { "RAW" } else { "AOD" }).unwrap();
+            c.set_metadata(&key, "run", &(100 + i).to_string()).unwrap();
+        }
+        let stats = metadata_key_stats(&c);
+        let get = |k: &str| stats.iter().find(|r| r[0] == k).unwrap().clone();
+        assert_eq!(get("datatype"), vec!["datatype", "2", "4"]); // 2 values, 4 DIDs
+        assert_eq!(get("run"), vec!["run", "4", "4"]); // 4 distinct runs
     }
 }

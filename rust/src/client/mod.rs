@@ -11,6 +11,7 @@ use crate::jsonx::Json;
 pub struct RucioClient {
     http: HttpClient,
     pub account: String,
+    token: String,
 }
 
 impl RucioClient {
@@ -33,7 +34,13 @@ impl RucioClient {
             .header("x-rucio-auth-token")
             .ok_or_else(|| RucioError::CannotAuthenticate("no token in reply".into()))?;
         http.set_header("x-rucio-auth-token", token);
-        Ok(RucioClient { http, account: account.to_string() })
+        let token = token.to_string();
+        Ok(RucioClient { http, account: account.to_string(), token })
+    }
+
+    /// The cached auth token (for wiring raw requests in tests/tools).
+    pub fn token(&self) -> &str {
+        &self.token
     }
 
     pub fn ping(&self) -> Result<Json> {
@@ -124,6 +131,60 @@ impl RucioClient {
         limit: usize,
     ) -> Result<(Vec<Json>, Option<String>)> {
         let mut path = format!("/dids/{scope}?limit={limit}");
+        if let Some(c) = cursor {
+            path.push_str(&format!("&cursor={c}"));
+        }
+        let resp = self.http.get(&path)?;
+        if !resp.ok() {
+            return Err(http_error(&resp));
+        }
+        let next = resp.header("x-rucio-next-cursor").map(|s| s.to_string());
+        Ok((resp.body_ndjson()?, next))
+    }
+
+    // -------------- metadata & discovery --------------
+
+    /// Set metadata pairs from a JSON object: JSON types become metadata
+    /// types (string/int/float/bool).
+    pub fn set_metadata(&self, scope: &str, name: &str, meta: &Json) -> Result<()> {
+        self.expect_ok(self.http.post_json(&format!("/meta/{scope}/{name}"), meta)?)
+    }
+
+    /// The DID's typed metadata as a JSON object.
+    pub fn get_metadata(&self, scope: &str, name: &str) -> Result<Json> {
+        self.expect_json(self.http.get(&format!("/meta/{scope}/{name}"))?)
+    }
+
+    /// All DIDs of a scope matching a `meta-expr` filter (walks every
+    /// page; use [`RucioClient::list_dids_filter_page`] for one page).
+    pub fn list_dids_filter(&self, scope: &str, filter: &str) -> Result<Vec<Json>> {
+        let mut out = Vec::new();
+        let mut cursor: Option<String> = None;
+        loop {
+            let (rows, next) =
+                self.list_dids_filter_page(scope, filter, cursor.as_deref(), 1000)?;
+            out.extend(rows);
+            match next {
+                Some(c) => cursor = Some(c),
+                None => return Ok(out),
+            }
+        }
+    }
+
+    /// One page of a filtered DID listing. `filter` is a `meta-expr`
+    /// (e.g. `datatype=RAW AND run>=358000 AND name=data18*`); `cursor`
+    /// is the previous page's `x-rucio-next-cursor`.
+    pub fn list_dids_filter_page(
+        &self,
+        scope: &str,
+        filter: &str,
+        cursor: Option<&str>,
+        limit: usize,
+    ) -> Result<(Vec<Json>, Option<String>)> {
+        let mut path = format!(
+            "/dids/{scope}?limit={limit}&filter={}",
+            crate::httpd::percent_encode(filter)
+        );
         if let Some(c) = cursor {
             path.push_str(&format!("&cursor={c}"));
         }

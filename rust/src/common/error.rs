@@ -43,6 +43,7 @@ rucio_error! {
     CannotAuthenticate => "authentication failed: ",
     QuotaExceeded => "quota exceeded: ",
     InvalidRseExpression => "invalid RSE expression: ",
+    InvalidMetaExpression => "invalid metadata filter expression: ",
     RseExpressionEmpty => "RSE expression resolved to empty set: ",
     InvalidObject => "invalid name: ",
     InvalidValue => "invalid value: ",
@@ -81,8 +82,8 @@ impl RucioError {
             AccessDenied(_) => 403,
             CannotAuthenticate(_) => 401,
             QuotaExceeded(_) | NoSpaceLeft(_) => 413,
-            InvalidRseExpression(_) | RseExpressionEmpty(_) | InvalidObject(_)
-            | InvalidValue(_) | JsonError(_) | UnsupportedOperation(_) => 400,
+            InvalidRseExpression(_) | InvalidMetaExpression(_) | RseExpressionEmpty(_)
+            | InvalidObject(_) | InvalidValue(_) | JsonError(_) | UnsupportedOperation(_) => 400,
             ChecksumMismatch(_) => 422,
             _ => 500,
         }

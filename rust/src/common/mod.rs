@@ -12,6 +12,7 @@ pub mod idgen;
 pub mod logx;
 pub mod prng;
 pub mod proptest;
+pub mod regex;
 pub mod units;
 
 pub use clock::{Clock, SimClock};

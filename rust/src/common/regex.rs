@@ -1,0 +1,402 @@
+//! A small regular-expression engine (offline stand-in for the `regex`
+//! crate, which is unavailable in this environment — same approach as the
+//! in-repo `thiserror`/`sha2` substitutes).
+//!
+//! Supports the subset the catalog actually uses — naming-schema
+//! validation patterns and glob-derived matchers:
+//! anchors `^`/`$`, `.`, postfix `*`/`+`/`?`, character classes
+//! `[a-z0-9]` (with ranges and leading-`^` negation), alternation groups
+//! `(a|b)`, `\`-escapes (including `\d`/`\w`/`\s`), and literals.
+//! `{m,n}` repetition is *not* implemented and is rejected at compile
+//! time (never silently matched as a literal). Matching is unanchored
+//! unless the pattern anchors itself, like the real crate's `is_match`.
+
+use std::fmt;
+
+/// Pattern compilation error (position + message).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex error: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// One step of a compiled pattern.
+#[derive(Debug, Clone)]
+enum Node {
+    /// Literal character.
+    Char(char),
+    /// `.` — any single character.
+    Any,
+    /// Character class: (negated, ranges). Single chars are (c, c) ranges.
+    Class(bool, Vec<(char, char)>),
+    /// Alternation group `(a|b|...)`: each branch is a sub-sequence.
+    Group(Vec<Vec<Node>>),
+    /// Zero or more of the inner node.
+    Star(Box<Node>),
+    /// One or more of the inner node.
+    Plus(Box<Node>),
+    /// Zero or one of the inner node.
+    Opt(Box<Node>),
+    /// `^` / `$` anchors.
+    Start,
+    End,
+}
+
+/// A compiled regular expression.
+#[derive(Debug, Clone)]
+pub struct Regex {
+    nodes: Vec<Node>,
+}
+
+struct Parser<'a> {
+    chars: std::iter::Peekable<std::str::Chars<'a>>,
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn next(&mut self) -> Option<char> {
+        self.pos += 1;
+        self.chars.next()
+    }
+
+    fn peek(&mut self) -> Option<char> {
+        self.chars.peek().copied()
+    }
+
+    fn err(&self, msg: &str) -> Error {
+        Error(format!("{msg} at {}", self.pos))
+    }
+
+    /// Parse a `|`-separated sequence list until `)` or end of input.
+    fn alternation(&mut self, in_group: bool) -> Result<Vec<Vec<Node>>, Error> {
+        let mut branches = vec![Vec::new()];
+        loop {
+            match self.peek() {
+                None => {
+                    if in_group {
+                        return Err(self.err("unclosed group"));
+                    }
+                    return Ok(branches);
+                }
+                Some(')') if in_group => {
+                    self.next();
+                    return Ok(branches);
+                }
+                Some(')') => return Err(self.err("unmatched ')'")),
+                Some('|') => {
+                    self.next();
+                    branches.push(Vec::new());
+                }
+                Some(_) => {
+                    let node = self.atom()?;
+                    let node = self.postfix(node)?;
+                    branches.last_mut().expect("one branch always open").push(node);
+                }
+            }
+        }
+    }
+
+    fn atom(&mut self) -> Result<Node, Error> {
+        match self.next() {
+            Some('(') => Ok(Node::Group(self.alternation(true)?)),
+            Some('[') => self.class(),
+            Some('.') => Ok(Node::Any),
+            Some('^') => Ok(Node::Start),
+            Some('$') => Ok(Node::End),
+            Some('\\') => self.escape(),
+            Some(c @ ('*' | '+' | '?')) => Err(self.err(&format!("dangling '{c}'"))),
+            // `{m,n}` repetition is not implemented — erroring beats
+            // silently matching a literal brace (the `regex` crate this
+            // stands in for would repeat); escape `\{` for a literal.
+            Some(c @ ('{' | '}')) => Err(self.err(&format!(
+                "unsupported repetition syntax '{c}' (escape literal braces)"
+            ))),
+            Some(c) => Ok(Node::Char(c)),
+            None => Err(self.err("unexpected end of pattern")),
+        }
+    }
+
+    fn escape(&mut self) -> Result<Node, Error> {
+        match self.next() {
+            Some('d') => Ok(Node::Class(false, vec![('0', '9')])),
+            Some('w') => Ok(Node::Class(
+                false,
+                vec![('a', 'z'), ('A', 'Z'), ('0', '9'), ('_', '_')],
+            )),
+            Some('s') => Ok(Node::Class(
+                false,
+                vec![(' ', ' '), ('\t', '\t'), ('\n', '\n'), ('\r', '\r')],
+            )),
+            Some('n') => Ok(Node::Char('\n')),
+            Some('t') => Ok(Node::Char('\t')),
+            Some(c) => Ok(Node::Char(c)), // \. \\ \( \[ \* ... literal
+            None => Err(self.err("trailing backslash")),
+        }
+    }
+
+    fn class(&mut self) -> Result<Node, Error> {
+        let negated = if self.peek() == Some('^') {
+            self.next();
+            true
+        } else {
+            false
+        };
+        let mut ranges = Vec::new();
+        loop {
+            let c = match self.next() {
+                None => return Err(self.err("unclosed character class")),
+                Some(']') => break, // empty classes allowed: match nothing
+                Some('\\') => match self.next() {
+                    Some(e) => e,
+                    None => return Err(self.err("trailing backslash in class")),
+                },
+                Some(c) => c,
+            };
+            // range `a-z` (a trailing '-' is a literal)
+            if self.peek() == Some('-') {
+                self.next();
+                match self.peek() {
+                    Some(']') | None => {
+                        ranges.push((c, c));
+                        ranges.push(('-', '-'));
+                    }
+                    Some(hi) => {
+                        self.next();
+                        if hi < c {
+                            return Err(self.err("inverted class range"));
+                        }
+                        ranges.push((c, hi));
+                    }
+                }
+            } else {
+                ranges.push((c, c));
+            }
+        }
+        Ok(Node::Class(negated, ranges))
+    }
+
+    fn postfix(&mut self, node: Node) -> Result<Node, Error> {
+        let node = match self.peek() {
+            Some('*') => {
+                self.next();
+                Node::Star(Box::new(node))
+            }
+            Some('+') => {
+                self.next();
+                Node::Plus(Box::new(node))
+            }
+            Some('?') => {
+                self.next();
+                Node::Opt(Box::new(node))
+            }
+            _ => return Ok(node),
+        };
+        if matches!(self.peek(), Some('*' | '+' | '?')) {
+            return Err(self.err("nested quantifier"));
+        }
+        if matches!(&node, Node::Star(i) | Node::Plus(i) | Node::Opt(i)
+            if matches!(**i, Node::Start | Node::End))
+        {
+            return Err(self.err("quantified anchor"));
+        }
+        Ok(node)
+    }
+}
+
+impl Regex {
+    /// Compile a pattern. Errors mirror the real crate: malformed input
+    /// returns `Err`, it never panics.
+    pub fn new(pattern: &str) -> Result<Regex, Error> {
+        let mut p = Parser { chars: pattern.chars().peekable(), pos: 0 };
+        let branches = p.alternation(false)?;
+        let nodes = if branches.len() == 1 {
+            branches.into_iter().next().expect("one branch")
+        } else {
+            vec![Node::Group(branches)]
+        };
+        Ok(Regex { nodes })
+    }
+
+    /// Does the pattern match anywhere in `text`? (Use `^`/`$` anchors for
+    /// whole-string matching, as all in-repo patterns do.)
+    pub fn is_match(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        // Unanchored: try every start offset. A leading `^` fails all
+        // offsets except 0 via the Start node itself.
+        for start in 0..=chars.len() {
+            if match_seq(&self.nodes, 0, &chars, start, &|_pos| true) {
+                return true;
+            }
+            if matches!(self.nodes.first(), Some(Node::Start)) {
+                break; // ^-anchored: offset 0 was the only candidate
+            }
+        }
+        false
+    }
+}
+
+fn class_matches(negated: bool, ranges: &[(char, char)], c: char) -> bool {
+    let inside = ranges.iter().any(|&(lo, hi)| lo <= c && c <= hi);
+    inside != negated
+}
+
+/// Backtracking matcher: does `nodes[ni..]` match `text` starting at
+/// `pos`, with `cont` accepting the final position? Pattern depth bounds
+/// recursion (patterns are short config strings).
+fn match_seq(
+    nodes: &[Node],
+    ni: usize,
+    text: &[char],
+    pos: usize,
+    cont: &dyn Fn(usize) -> bool,
+) -> bool {
+    let Some(node) = nodes.get(ni) else {
+        return cont(pos);
+    };
+    let rest = |p: usize| match_seq(nodes, ni + 1, text, p, cont);
+    match node {
+        Node::Char(c) => text.get(pos) == Some(c) && rest(pos + 1),
+        Node::Any => pos < text.len() && rest(pos + 1),
+        Node::Class(neg, ranges) => {
+            matches!(text.get(pos), Some(&c) if class_matches(*neg, ranges, c)) && rest(pos + 1)
+        }
+        Node::Start => pos == 0 && rest(pos),
+        Node::End => pos == text.len() && rest(pos),
+        Node::Group(branches) => branches
+            .iter()
+            .any(|b| match_seq(b, 0, text, pos, &rest)),
+        Node::Opt(inner) => match_one(inner, text, pos, &rest) || rest(pos),
+        Node::Star(inner) => match_repeat(inner, text, pos, 0, &rest),
+        Node::Plus(inner) => {
+            match_one(inner, text, pos, &|p| match_repeat(inner, text, p, 0, &rest))
+        }
+    }
+}
+
+/// Match exactly one occurrence of `node`, then continue.
+fn match_one(node: &Node, text: &[char], pos: usize, cont: &dyn Fn(usize) -> bool) -> bool {
+    match_seq(std::slice::from_ref(node), 0, text, pos, cont)
+}
+
+/// Greedy `*`: consume as many repetitions as possible, backtracking one
+/// at a time. `depth` bounds pathological patterns like `(a*)*`.
+fn match_repeat(
+    node: &Node,
+    text: &[char],
+    pos: usize,
+    depth: usize,
+    cont: &dyn Fn(usize) -> bool,
+) -> bool {
+    if depth <= text.len()
+        && match_one(node, text, pos, &|p| {
+            // zero-width inner match would loop forever — force progress
+            p > pos && match_repeat(node, text, p, depth + 1, cont)
+        })
+    {
+        return true;
+    }
+    cont(pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(pat: &str, text: &str) -> bool {
+        Regex::new(pat).unwrap().is_match(text)
+    }
+
+    #[test]
+    fn literals_and_anchors() {
+        assert!(m("abc", "xxabcxx")); // unanchored
+        assert!(m("^abc$", "abc"));
+        assert!(!m("^abc$", "xabc"));
+        assert!(!m("^abc$", "abcx"));
+        assert!(m("^$", ""));
+        assert!(!m("^$", "a"));
+    }
+
+    #[test]
+    fn naming_schema_pattern() {
+        // the pattern used by the naming-schema config test
+        let re = Regex::new("^(raw|aod)\\.[0-9]+$").unwrap();
+        assert!(re.is_match("raw.001"));
+        assert!(re.is_match("aod.123456"));
+        assert!(!re.is_match("freeform"));
+        assert!(!re.is_match("raw."));
+        assert!(!re.is_match("raw.001x"));
+        assert!(!re.is_match("xraw.001"));
+    }
+
+    #[test]
+    fn glob_derived_patterns() {
+        // what glob_to_regex produces: ^raw\..*$ / ^.*\.0001$
+        assert!(m("^raw\\..*$", "raw.0002"));
+        assert!(!m("^raw\\..*$", "aod.0002"));
+        assert!(m("^.*\\.0001$", "raw.0001"));
+        assert!(m("^f\\..$", "f.1"));
+        assert!(m("^a\\{x\\}$", "a{x}"), "escaped braces are literal");
+    }
+
+    #[test]
+    fn quantifiers() {
+        assert!(m("^a*$", ""));
+        assert!(m("^a*$", "aaaa"));
+        assert!(m("^a+$", "aaa"));
+        assert!(!m("^a+$", ""));
+        assert!(m("^ab?c$", "ac"));
+        assert!(m("^ab?c$", "abc"));
+        assert!(!m("^ab?c$", "abbc"));
+        assert!(m("^(ab)+$", "ababab"));
+        assert!(!m("^(ab)+$", "ababa"));
+    }
+
+    #[test]
+    fn classes() {
+        assert!(m("^[a-z0-9]+$", "run358031"));
+        assert!(!m("^[a-z]+$", "Run"));
+        assert!(m("^[^0-9]+$", "abc-def"));
+        assert!(!m("^[^0-9]+$", "ab1"));
+        assert!(m("^\\d+$", "12345"));
+        assert!(m("^\\w+$", "data18_13TeV"));
+        assert!(m("^a[-.]b$", "a-b") && m("^a[-.]b$", "a.b"));
+    }
+
+    #[test]
+    fn alternation_backtracks() {
+        assert!(m("^(a|ab)c$", "abc"));
+        assert!(m("^(ab|a)bc$", "abc"));
+        assert!(m("^x(1|2|3)*y$", "x123321y"));
+    }
+
+    #[test]
+    fn star_backtracks_into_suffix() {
+        assert!(m("^.*\\.log$", "a.b.c.log"));
+        assert!(!m("^.*\\.log$", "a.b.c.txt"));
+        assert!(m("^a.*a$", "aba"));
+        assert!(m("^a.*a$", "aa"));
+    }
+
+    #[test]
+    fn malformed_patterns_error() {
+        for bad in [
+            "(abc", "abc)", "[abc", "*a", "+", "a**", "a\\", "[z-a]", "^*",
+            // unsupported repetition syntax must error, not match literally
+            "a{2}", "[0-9]{6}", "a{2,3}", "x}",
+        ] {
+            assert!(Regex::new(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn pathological_star_terminates() {
+        // zero-width repetition guard: must terminate, not hang
+        assert!(m("^(a*)*$", "aaaa"));
+        assert!(!m("^(a*)*b$", "aaac"));
+    }
+}

@@ -2,11 +2,14 @@
 //! (paper §2.2).
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::ops::Bound;
 
 use crate::common::clock::EpochMs;
 use crate::common::error::{Result, RucioError};
+use crate::common::regex;
 
 use super::accounts_api::validate_name;
+use super::metaexpr::{CmpOp, MetaExpr, MetaValue};
 use super::types::*;
 use super::Catalog;
 
@@ -125,8 +128,8 @@ impl Catalog {
         )?;
         self.metrics.incr("dids.added", 1);
         if is_coll {
-            // Subscription matching is asynchronous: the judge-injector
-            // consumes this event (upstream transmogrifier, §2.5).
+            // Subscription matching is asynchronous: the transmogrifier
+            // daemon consumes this event in batches (§2.5).
             self.notify(
                 "did-created",
                 crate::jsonx::Json::obj()
@@ -371,16 +374,63 @@ impl Catalog {
     // metadata (§2.2)
     // ------------------------------------------------------------------
 
+    /// Set one metadata pair with lexical typing (`"true"` → bool,
+    /// `"358031"` → int, `"13.6"` → float, else string) — the path the
+    /// CLI/REST string surface uses.
     pub fn set_metadata(&self, did: &DidKey, key: &str, value: &str) -> Result<()> {
-        self.get_did(did)?;
-        self.dids.update(did, self.now(), |d| {
-            d.meta.insert(key.to_string(), value.to_string());
-        });
+        self.set_metadata_typed(did, key, MetaValue::parse_lexical(value))
+    }
+
+    /// Set one typed metadata pair. The dids-table mutation hook mirrors
+    /// the change into the inverted index ([`Catalog::meta_index`]).
+    pub fn set_metadata_typed(&self, did: &DidKey, key: &str, value: MetaValue) -> Result<()> {
+        self.set_metadata_bulk(did, vec![(key.to_string(), value)])
+    }
+
+    /// Set many metadata pairs in one row update (one index refresh).
+    pub fn set_metadata_bulk(
+        &self,
+        did: &DidKey,
+        mut pairs: Vec<(String, MetaValue)>,
+    ) -> Result<()> {
+        for (key, value) in &mut pairs {
+            if key.is_empty() || key.len() > 64 || !key.chars().all(is_meta_key_char) {
+                return Err(RucioError::InvalidValue(format!("bad metadata key '{key}'")));
+            }
+            if super::metaexpr::is_reserved_key(key) {
+                return Err(RucioError::InvalidValue(format!(
+                    "'{key}' is reserved by the filter language"
+                )));
+            }
+            if let MetaValue::Float(f) = value {
+                if !f.is_finite() {
+                    return Err(RucioError::InvalidValue(format!(
+                        "non-finite float for metadata key '{key}'"
+                    )));
+                }
+                // canonical zero: the index order must agree with
+                // numeric equality (-0.0 == 0.0)
+                *f = super::metaexpr::canonical_f64(*f);
+            }
+        }
+        if self
+            .dids
+            .update(did, self.now(), |d| d.meta.extend(pairs))
+            .is_none()
+        {
+            return Err(RucioError::DidNotFound(did.to_string()));
+        }
+        self.metrics.incr("dids.meta_set", 1);
         Ok(())
     }
 
-    pub fn get_metadata(&self, did: &DidKey) -> Result<BTreeMap<String, String>> {
-        Ok(self.get_did(did)?.meta)
+    /// A DID's metadata map. Projects just the map out of the row under
+    /// the shard lock — it must not clone the whole `Did` (checksums,
+    /// name strings, …) to return one field.
+    pub fn get_metadata(&self, did: &DidKey) -> Result<BTreeMap<String, MetaValue>> {
+        self.dids
+            .read(did, |d| d.meta.clone())
+            .ok_or_else(|| RucioError::DidNotFound(did.to_string()))
     }
 
     /// DID lifetime: the undertaker removes DIDs past expiry.
@@ -391,11 +441,13 @@ impl Catalog {
     }
 
     // ------------------------------------------------------------------
-    // listing / search
+    // listing / search (the meta-expr query engine)
     // ------------------------------------------------------------------
 
     /// List DIDs in a scope, optionally filtered by a name glob (`*`
     /// wildcard) and type. Suppressed DIDs are hidden (§2.2) unless asked.
+    /// Routed through the `meta-expr` engine so the same planner serves
+    /// every discovery surface.
     pub fn list_dids(
         &self,
         scope: &str,
@@ -403,13 +455,227 @@ impl Catalog {
         did_type: Option<DidType>,
         include_suppressed: bool,
     ) -> Vec<Did> {
-        let re = name_glob.map(glob_to_regex);
-        self.dids.scan(|d| {
-            d.key.scope == scope
-                && (include_suppressed || !d.suppressed)
-                && did_type.map(|t| d.did_type == t).unwrap_or(true)
-                && re.as_ref().map(|r| r.is_match(&d.key.name)).unwrap_or(true)
-        })
+        let mut expr = MetaExpr::Any;
+        if let Some(glob) = name_glob {
+            expr = MetaExpr::NameGlob(glob.to_string());
+        }
+        if let Some(t) = did_type {
+            expr = MetaExpr::And(Box::new(expr), Box::new(MetaExpr::TypeIs(t)));
+        }
+        self.query_dids(scope, &expr, include_suppressed)
+    }
+
+    /// Pick the execution plan for a filter over one scope: the most
+    /// selective indexable conjunct of the normalized expression, else
+    /// the scope scan. Candidate counts are scope-local (the index leads
+    /// with the scope). Public so benches/tests can assert "the planner
+    /// chose the index".
+    pub fn plan_dids_query(&self, scope: &str, expr: &MetaExpr) -> QueryPlan {
+        self.plan_normalized(scope, &expr.normalize())
+    }
+
+    /// Planner core over an already-normalized expression (the query
+    /// executors normalize once and reuse it here — normalization clones
+    /// the AST, so it must not run twice per query).
+    fn plan_normalized(&self, scope: &str, expr: &MetaExpr) -> QueryPlan {
+        let mut best: Option<QueryPlan> = None;
+        for atom in expr.conjuncts() {
+            let cand = match atom {
+                // Numeric Eq uses the equality band (both typed
+                // representations); ordered ops use their range band.
+                MetaExpr::Cmp(key, op, value)
+                    if !matches!(op, CmpOp::Ne)
+                        && MetaValue::numeric_band(*op, value).is_some() =>
+                {
+                    let (lo, hi) = MetaValue::numeric_band(*op, value)
+                        .expect("checked in the guard");
+                    let klo = band_bound(scope, key, lo.as_ref());
+                    let khi = band_bound(scope, key, hi.as_ref());
+                    Some(QueryPlan::MetaRange {
+                        key: key.clone(),
+                        op: *op,
+                        value: value.clone(),
+                        candidates: self.meta_index.count_range(klo.as_ref(), khi.as_ref()),
+                    })
+                }
+                // Non-numeric equality (strings/bools): exact point probe.
+                MetaExpr::Cmp(key, CmpOp::Eq, value) => {
+                    let ik = (scope.to_string(), key.clone(), value.clone());
+                    Some(QueryPlan::MetaEq {
+                        key: key.clone(),
+                        value: value.clone(),
+                        candidates: self.meta_index.count(&ik),
+                    })
+                }
+                _ => None, // Ne / NOT / OR / name / type: not indexable
+            };
+            if let Some(plan) = cand {
+                if best
+                    .as_ref()
+                    .map(|b| plan.candidates() < b.candidates())
+                    .unwrap_or(true)
+                {
+                    best = Some(plan);
+                }
+            }
+        }
+        // Cost gate: an index plan does one random point lookup per
+        // candidate, a scope scan reads the scope's contiguous pages —
+        // once the best index predicate covers ≥ half of *this scope*,
+        // the scan wins. Scope sizes come O(1) off `dids_by_scope`.
+        let scope_size = self.dids_by_scope.count(&scope.to_string()).max(1);
+        match best {
+            Some(plan) if plan.candidates().saturating_mul(2) < scope_size => plan,
+            _ => QueryPlan::ScopeScan,
+        }
+    }
+
+    /// Answer a `meta-expr` filter over one scope, name-ordered. The
+    /// planner probes the inverted index when any positive equality /
+    /// numeric-range conjunct exists, and falls back to an ordered scan
+    /// over the scope's contiguous key range otherwise; both executors
+    /// apply the full expression, so results are plan-independent
+    /// (property-tested).
+    pub fn query_dids(&self, scope: &str, expr: &MetaExpr, include_suppressed: bool) -> Vec<Did> {
+        let expr = expr.normalize();
+        match self.plan_normalized(scope, &expr) {
+            QueryPlan::ScopeScan => self.query_dids_scan(scope, &expr, include_suppressed),
+            plan => {
+                self.metrics.incr("dids.query.indexed", 1);
+                let mut keys = self.plan_candidates(scope, &plan);
+                keys.sort();
+                keys.into_iter()
+                    .filter_map(|k| self.dids.get(&k))
+                    .filter(|d| (include_suppressed || !d.suppressed) && expr.matches(d))
+                    .collect()
+            }
+        }
+    }
+
+    /// The scan executor: ordered walk of the scope's contiguous key
+    /// range, applying the expression to every row. Public as the
+    /// planner-equivalence baseline for tests and the ablation bench.
+    pub fn query_dids_scan(
+        &self,
+        scope: &str,
+        expr: &MetaExpr,
+        include_suppressed: bool,
+    ) -> Vec<Did> {
+        self.metrics.incr("dids.query.scan", 1);
+        let mut out = Vec::new();
+        let mut after: Option<String> = None;
+        loop {
+            let (page, next) = self.scope_page(scope, after.as_deref(), 1024);
+            out.extend(
+                page.into_iter()
+                    .filter(|d| (include_suppressed || !d.suppressed) && expr.matches(d)),
+            );
+            match next {
+                Some(n) => after = Some(n),
+                None => return out,
+            }
+        }
+    }
+
+    /// One page of filtered results in name order: rows strictly after
+    /// `after_name` matching `expr`, plus the cursor for the next page
+    /// (`None` once exhausted) — the NDJSON `GET /dids/{scope}?filter=`
+    /// surface. A page's row fetches are bounded by the plan's remaining
+    /// candidates (index plans re-derive the candidate tail per page; the
+    /// scan plan resumes from the cursor's key position).
+    pub fn query_dids_page(
+        &self,
+        scope: &str,
+        expr: &MetaExpr,
+        after_name: Option<&str>,
+        limit: usize,
+    ) -> (Vec<Did>, Option<String>) {
+        let limit = limit.max(1);
+        let expr = expr.normalize();
+        let mut rows: Vec<Did> = Vec::with_capacity(limit.min(1024));
+        match self.plan_normalized(scope, &expr) {
+            QueryPlan::ScopeScan => {
+                self.metrics.incr("dids.query.scan", 1);
+                let mut after = after_name.map(|s| s.to_string());
+                loop {
+                    let (page, next) = self.scope_page(scope, after.as_deref(), 1024.max(limit));
+                    for d in page {
+                        if !d.suppressed && expr.matches(&d) {
+                            if rows.len() == limit {
+                                // one extra match proves another page exists
+                                let cursor = rows.last().map(|d: &Did| d.key.name.clone());
+                                return (rows, cursor);
+                            }
+                            rows.push(d);
+                        }
+                    }
+                    match next {
+                        Some(n) => after = Some(n),
+                        None => return (rows, None),
+                    }
+                }
+            }
+            plan => {
+                self.metrics.incr("dids.query.indexed", 1);
+                // Drop rows at/before the cursor *before* sorting: each
+                // page only sorts the remaining tail of the (scope-local)
+                // candidate set, so a paged walk shrinks page over page.
+                let mut keys: Vec<DidKey> = self
+                    .plan_candidates(scope, &plan)
+                    .into_iter()
+                    .filter(|k| after_name.map(|a| k.name.as_str() > a).unwrap_or(true))
+                    .collect();
+                keys.sort();
+                for k in keys {
+                    let Some(d) = self.dids.get(&k) else { continue };
+                    if !d.suppressed && expr.matches(&d) {
+                        if rows.len() == limit {
+                            let cursor = rows.last().map(|d: &Did| d.key.name.clone());
+                            return (rows, cursor);
+                        }
+                        rows.push(d);
+                    }
+                }
+                (rows, None)
+            }
+        }
+    }
+
+    /// Candidate primary keys of an index-backed plan, already
+    /// scope-local (unsorted).
+    fn plan_candidates(&self, scope: &str, plan: &QueryPlan) -> Vec<DidKey> {
+        match plan {
+            QueryPlan::MetaEq { key, value, .. } => {
+                self.meta_index.get(&(scope.to_string(), key.clone(), value.clone()))
+            }
+            QueryPlan::MetaRange { key, op, value, .. } => {
+                let (lo, hi) = MetaValue::numeric_band(*op, value)
+                    .expect("range plans are built from numeric bands");
+                let klo = band_bound(scope, key, lo.as_ref());
+                let khi = band_bound(scope, key, hi.as_ref());
+                self.meta_index.range_bounds(klo.as_ref(), khi.as_ref())
+            }
+            QueryPlan::ScopeScan => Vec::new(),
+        }
+    }
+
+    /// One raw (unfiltered) page of a scope's rows in name order. The
+    /// scope's keys are contiguous in the ordered table — "<scope>\0"
+    /// sorts after <scope> and before any longer sibling, so it bounds
+    /// the scope exactly and each page is O(page), not O(scope).
+    fn scope_page(
+        &self,
+        scope: &str,
+        after_name: Option<&str>,
+        limit: usize,
+    ) -> (Vec<Did>, Option<String>) {
+        let lo_key = DidKey::new(scope, after_name.unwrap_or(""));
+        let hi_key = DidKey { scope: format!("{scope}\u{0}"), name: String::new() };
+        let page = self
+            .dids
+            .range_page(Bound::Excluded(&lo_key), Bound::Excluded(&hi_key), limit);
+        let next = page.next_cursor.map(|k| k.name);
+        (page.rows, next)
     }
 
     /// One page of a scope's DIDs in name order (cursor-based listing for
@@ -422,16 +688,7 @@ impl Catalog {
         after_name: Option<&str>,
         limit: usize,
     ) -> (Vec<Did>, Option<String>) {
-        use std::ops::Bound;
-        let lo_key = DidKey::new(scope, after_name.unwrap_or(""));
-        // First key of the next scope: "<scope>\0" sorts after <scope> and
-        // before any longer sibling, so it bounds this scope exactly.
-        let hi_key = DidKey { scope: format!("{scope}\u{0}"), name: String::new() };
-        let page = self
-            .dids
-            .range_page(Bound::Excluded(&lo_key), Bound::Excluded(&hi_key), limit);
-        let next = page.next_cursor.map(|k| k.name);
-        (page.rows, next)
+        self.scope_page(scope, after_name, limit)
     }
 
     // ------------------------------------------------------------------
@@ -440,6 +697,9 @@ impl Catalog {
 
     /// Remove a DID from the namespace, writing a permanent name
     /// tombstone. Callers (undertaker) must have removed rules first.
+    /// The dids-table removal hook also drops every posting the DID holds
+    /// in the metadata inverted index — nothing stale may survive the row
+    /// (regression-tested below).
     pub fn erase_did(&self, did: &DidKey) -> Result<()> {
         let d = self.get_did(did)?;
         if !self.rules_by_did.get(did).is_empty() {
@@ -487,21 +747,46 @@ impl Catalog {
     }
 }
 
-fn glob_to_regex(glob: &str) -> regex::Regex {
-    let mut pattern = String::from("^");
-    for c in glob.chars() {
-        match c {
-            '*' => pattern.push_str(".*"),
-            '?' => pattern.push('.'),
-            c if "\\.+()[]{}|^$".contains(c) => {
-                pattern.push('\\');
-                pattern.push(c);
+/// The execution strategy [`Catalog::plan_dids_query`] picked for a
+/// `meta-expr`: an inverted-index probe (equality), an inverted-index
+/// numeric range, or the ordered scope scan.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryPlan {
+    MetaEq { key: String, value: MetaValue, candidates: usize },
+    MetaRange { key: String, op: CmpOp, value: MetaValue, candidates: usize },
+    ScopeScan,
+}
+
+impl QueryPlan {
+    /// Estimated candidate rows the plan touches (usize::MAX for a scan,
+    /// which is unbounded by any index).
+    pub fn candidates(&self) -> usize {
+        match self {
+            QueryPlan::MetaEq { candidates, .. } | QueryPlan::MetaRange { candidates, .. } => {
+                *candidates
             }
-            c => pattern.push(c),
+            QueryPlan::ScopeScan => usize::MAX,
         }
     }
-    pattern.push('$');
-    regex::Regex::new(&pattern).unwrap_or_else(|_| regex::Regex::new("^$").unwrap())
+
+    pub fn is_indexed(&self) -> bool {
+        !matches!(self, QueryPlan::ScopeScan)
+    }
+}
+
+fn is_meta_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')
+}
+
+/// Lift a value-space bound into the `(scope, key, value)` index-key
+/// space.
+fn band_bound(scope: &str, key: &str, b: Bound<&MetaValue>) -> Bound<(String, String, MetaValue)> {
+    match b {
+        Bound::Included(v) => Bound::Included((scope.to_string(), key.to_string(), v.clone())),
+        Bound::Excluded(v) => Bound::Excluded((scope.to_string(), key.to_string(), v.clone())),
+        // numeric bands are always closed at both ends in value space
+        Bound::Unbounded => unreachable!("numeric_band never yields unbounded edges"),
+    }
 }
 
 #[cfg(test)]
@@ -691,14 +976,249 @@ mod tests {
     }
 
     #[test]
-    fn metadata_round_trip() {
+    fn metadata_round_trip_is_lexically_typed() {
         let c = catalog();
         let files = add_files(&c, "data18", "f", 1);
         c.set_metadata(&files[0], "datatype", "RAW").unwrap();
         c.set_metadata(&files[0], "run", "358031").unwrap();
+        c.set_metadata(&files[0], "lumi", "13.6").unwrap();
+        c.set_metadata(&files[0], "good", "true").unwrap();
         let m = c.get_metadata(&files[0]).unwrap();
-        assert_eq!(m["datatype"], "RAW");
-        assert_eq!(m["run"], "358031");
+        assert_eq!(m["datatype"], MetaValue::Str("RAW".into()));
+        assert_eq!(m["run"], MetaValue::Int(358031));
+        assert_eq!(m["lumi"], MetaValue::Float(13.6));
+        assert_eq!(m["good"], MetaValue::Bool(true));
+        // missing DID: error, not a clone of anything
+        assert!(c.get_metadata(&DidKey::new("data18", "ghost")).is_err());
+        // reserved / malformed keys and non-finite floats rejected
+        assert!(c.set_metadata(&files[0], "name", "x").is_err());
+        assert!(c.set_metadata(&files[0], "type", "x").is_err());
+        // language keywords can never be queried → not storable either
+        assert!(c.set_metadata(&files[0], "or", "x").is_err());
+        assert!(c.set_metadata(&files[0], "AND", "x").is_err());
+        assert!(c.set_metadata(&files[0], "not", "x").is_err());
+        assert!(c.set_metadata(&files[0], "bad key", "x").is_err());
+        assert!(c
+            .set_metadata_typed(&files[0], "w", MetaValue::Float(f64::INFINITY))
+            .is_err());
+    }
+
+    #[test]
+    fn set_metadata_backfills_inverted_index() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 3);
+        for f in &files {
+            c.set_metadata(f, "datatype", "RAW").unwrap();
+        }
+        c.set_metadata(&files[1], "datatype", "AOD").unwrap(); // overwrite
+        let ik = |k: &str, v: MetaValue| ("data18".to_string(), k.to_string(), v);
+        let raw_key = ik("datatype", MetaValue::Str("RAW".into()));
+        let aod_key = ik("datatype", MetaValue::Str("AOD".into()));
+        assert_eq!(c.meta_index.get(&raw_key), vec![files[0].clone(), files[2].clone()]);
+        assert_eq!(c.meta_index.get(&aod_key), vec![files[1].clone()]);
+        // typed values index under distinct postings
+        c.set_metadata(&files[0], "run", "3").unwrap();
+        assert_eq!(c.meta_index.count(&ik("run", MetaValue::Int(3))), 1);
+        assert_eq!(c.meta_index.count(&ik("run", MetaValue::Str("3".into()))), 0);
+    }
+
+    #[test]
+    fn erase_did_leaves_no_stale_index_entries() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 2);
+        c.set_metadata(&files[0], "datatype", "RAW").unwrap();
+        c.set_metadata(&files[0], "run", "358031").unwrap();
+        c.set_metadata(&files[1], "datatype", "RAW").unwrap();
+        let postings_before = c.meta_index.len();
+        c.erase_did(&files[0]).unwrap();
+        // every posting of the erased DID is gone; the sibling's survive
+        assert_eq!(c.meta_index.len(), postings_before - 2);
+        let ik = |k: &str, v: MetaValue| ("data18".to_string(), k.to_string(), v);
+        assert_eq!(
+            c.meta_index.get(&ik("datatype", MetaValue::Str("RAW".into()))),
+            vec![files[1].clone()]
+        );
+        assert_eq!(c.meta_index.count(&ik("run", MetaValue::Int(358031))), 0);
+        // and no query can resurrect it
+        let expr = crate::core::metaexpr::parse("datatype=RAW").unwrap();
+        let hits = c.query_dids("data18", &expr, true);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].key, files[1]);
+    }
+
+    #[test]
+    fn planner_picks_most_selective_index() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 20);
+        for (i, f) in files.iter().enumerate() {
+            c.set_metadata(f, "datatype", if i < 5 { "RAW" } else { "AOD" }).unwrap();
+            c.set_metadata(f, "run", &(358000 + i as i64).to_string()).unwrap();
+        }
+        // equality on run=<one value> (1 row) beats datatype=RAW (5 rows);
+        // numeric equality probes the Int/Float equality band
+        let expr = crate::core::metaexpr::parse("datatype=RAW AND run=358003").unwrap();
+        match c.plan_dids_query("data18", &expr) {
+            QueryPlan::MetaRange { key, op: CmpOp::Eq, candidates, .. } => {
+                assert_eq!(key, "run");
+                assert_eq!(candidates, 1);
+            }
+            other => panic!("expected run-equality plan, got {other:?}"),
+        }
+        // string equality is an exact point probe
+        let expr = crate::core::metaexpr::parse("datatype=RAW").unwrap();
+        match c.plan_dids_query("data18", &expr) {
+            QueryPlan::MetaEq { key, candidates, .. } => {
+                assert_eq!(key, "datatype");
+                assert_eq!(candidates, 5);
+            }
+            other => panic!("expected datatype-equality plan, got {other:?}"),
+        }
+        // a numeric range plan when only ordered predicates exist
+        let expr = crate::core::metaexpr::parse("run>=358015").unwrap();
+        match c.plan_dids_query("data18", &expr) {
+            QueryPlan::MetaRange { key, candidates, .. } => {
+                assert_eq!(key, "run");
+                assert_eq!(candidates, 5);
+            }
+            other => panic!("expected range plan, got {other:?}"),
+        }
+        // nothing indexable: scope scan
+        let expr = crate::core::metaexpr::parse("name=f.*").unwrap();
+        assert_eq!(c.plan_dids_query("data18", &expr), QueryPlan::ScopeScan);
+        // NOT over equality normalizes to != — not indexable either
+        let expr = crate::core::metaexpr::parse("NOT datatype=RAW").unwrap();
+        assert_eq!(c.plan_dids_query("data18", &expr), QueryPlan::ScopeScan);
+        // cost gate: an index predicate covering most of the namespace
+        // loses to the contiguous scope scan
+        let expr = crate::core::metaexpr::parse("datatype=AOD").unwrap();
+        assert_eq!(c.plan_dids_query("data18", &expr), QueryPlan::ScopeScan);
+        assert_eq!(c.query_dids("data18", &expr, false).len(), 15);
+        // results agree regardless of plan
+        let expr =
+            crate::core::metaexpr::parse("datatype=RAW AND run>=358002 AND run<358008").unwrap();
+        let indexed = c.query_dids("data18", &expr, false);
+        let scanned = c.query_dids_scan("data18", &expr.normalize(), false);
+        assert_eq!(indexed, scanned);
+        assert_eq!(indexed.len(), 3);
+        assert!(c.metrics.counter("dids.query.indexed") >= 1);
+    }
+
+    #[test]
+    fn negative_zero_round_trips_through_store_and_index() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 1);
+        c.set_metadata(&files[0], "offset", "-0.0").unwrap();
+        // stored canonically; indexed under the same key both zeros query
+        assert_eq!(c.get_metadata(&files[0]).unwrap()["offset"], MetaValue::Float(0.0));
+        for filter in ["offset=0", "offset=0.0", "offset=-0.0", "offset>=0"] {
+            let expr = crate::core::metaexpr::parse(filter).unwrap();
+            assert_eq!(c.query_dids("data18", &expr, false).len(), 1, "{filter}");
+            assert_eq!(c.query_dids_scan("data18", &expr, false).len(), 1, "{filter}");
+        }
+    }
+
+    #[test]
+    fn indexed_query_stays_inside_scope() {
+        let c = catalog();
+        c.add_scope("mc20", "root").unwrap();
+        let a = add_files(&c, "data18", "f", 2);
+        c.add_file("mc20", "g.0000", "root", 1, "x", None).unwrap();
+        let b = DidKey::new("mc20", "g.0000");
+        for k in a.iter().chain(std::iter::once(&b)) {
+            c.set_metadata(k, "datatype", "RAW").unwrap();
+        }
+        let expr = crate::core::metaexpr::parse("datatype=RAW").unwrap();
+        assert_eq!(c.query_dids("data18", &expr, false).len(), 2);
+        assert_eq!(c.query_dids("mc20", &expr, false).len(), 1);
+    }
+
+    #[test]
+    fn query_dids_page_walks_filtered_results() {
+        let c = catalog();
+        let files = add_files(&c, "data18", "f", 30);
+        for (i, f) in files.iter().enumerate() {
+            c.set_metadata(f, "datatype", if i % 3 == 0 { "RAW" } else { "AOD" }).unwrap();
+        }
+        let expr = crate::core::metaexpr::parse("datatype=RAW").unwrap();
+        // indexed plan: walk pages of 4 over the 10 RAW dids
+        let mut names = Vec::new();
+        let mut cursor: Option<String> = None;
+        let mut pages = 0;
+        loop {
+            let (rows, next) = c.query_dids_page("data18", &expr, cursor.as_deref(), 4);
+            names.extend(rows.into_iter().map(|d| d.key.name));
+            pages += 1;
+            match next {
+                Some(n) => cursor = Some(n),
+                None => break,
+            }
+            assert!(pages < 20);
+        }
+        let flat: Vec<String> =
+            c.query_dids("data18", &expr, false).into_iter().map(|d| d.key.name).collect();
+        assert_eq!(names, flat, "paged walk == flat query");
+        assert_eq!(pages, 3, "10 matches / 4 per page");
+        // scan plan paginates identically
+        let glob = crate::core::metaexpr::parse("name=f.00*").unwrap();
+        let (rows, next) = c.query_dids_page("data18", &glob, None, 5);
+        assert_eq!(rows.len(), 5);
+        let (rows2, next2) = c.query_dids_page("data18", &glob, next.as_deref(), 5);
+        assert_eq!(rows2.len(), 5);
+        assert!(next2.is_none(), "f.0000..f.0009 is exactly 10 rows");
+        assert!(rows[4].key.name < rows2[0].key.name);
+    }
+
+    #[test]
+    fn prop_planner_equals_scan_on_random_namespaces() {
+        use crate::common::proptest::forall;
+        use crate::core::metaexpr::tests::{gen_expr, gen_row};
+        use crate::core::metaexpr::MetaSource;
+        forall(40, |g| {
+            let c = catalog();
+            // random namespace: rows with random typed metadata
+            for i in 0..g.usize(5, 60) {
+                let r = gen_row(g);
+                let name = format!("d{i:03}.{}", r.did_name());
+                match r.did_type() {
+                    DidType::File => {
+                        c.add_file("data18", &name, "root", 1, "x", None).unwrap()
+                    }
+                    DidType::Dataset => c.add_dataset("data18", &name, "root").unwrap(),
+                    DidType::Container => c.add_container("data18", &name, "root").unwrap(),
+                }
+                let key = DidKey::new("data18", &name);
+                let pairs: Vec<(String, MetaValue)> = ["datatype", "run", "lumi", "good"]
+                    .iter()
+                    .filter_map(|k| r.meta_get(k).map(|v| (k.to_string(), v.clone())))
+                    .collect();
+                c.set_metadata_bulk(&key, pairs).unwrap();
+            }
+            // random expressions: the planner's answer must equal the scan
+            for _ in 0..6 {
+                let expr = gen_expr(g, 3).normalize();
+                let via_planner = c.query_dids("data18", &expr, false);
+                let via_scan = c.query_dids_scan("data18", &expr, false);
+                assert_eq!(
+                    via_planner.iter().map(|d| &d.key).collect::<Vec<_>>(),
+                    via_scan.iter().map(|d| &d.key).collect::<Vec<_>>(),
+                    "plan {:?} diverged from scan for '{expr}'",
+                    c.plan_dids_query("data18", &expr)
+                );
+                // and the paged walk covers the same sequence
+                let mut paged = Vec::new();
+                let mut cursor: Option<String> = None;
+                loop {
+                    let (rows, next) = c.query_dids_page("data18", &expr, cursor.as_deref(), 7);
+                    paged.extend(rows.into_iter().map(|d| d.key));
+                    match next {
+                        Some(n) => cursor = Some(n),
+                        None => break,
+                    }
+                }
+                let flat: Vec<DidKey> = via_planner.into_iter().map(|d| d.key).collect();
+                assert_eq!(paged, flat, "paged walk == flat query for '{expr}'");
+            }
+        });
     }
 
     #[test]

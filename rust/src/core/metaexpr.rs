@@ -1,0 +1,1214 @@
+//! The DID metadata filter language, `meta-expr` (paper §2.2 metadata +
+//! §2.5 subscription filters): typed comparisons over a DID's metadata
+//! map, glob matching on the DID name, and type selection, combined with
+//! `AND` / `OR` / `NOT`.
+//!
+//! Grammar (recursive descent):
+//! ```text
+//! expr   := and ('OR' and)*
+//! and    := not ('AND' not)*
+//! not    := 'NOT' not | atom
+//! atom   := '(' expr ')' | '*'
+//!         | 'name' ('='|'!=') GLOB           DID-name glob (* and ?)
+//!         | 'type' ('='|'!=') DIDTYPE        FILE | DATASET | CONTAINER
+//!         | IDENT op VALUE                   typed metadata comparison
+//! op     := '=' | '!=' | '<' | '<=' | '>' | '>='
+//! VALUE  := WORD | "quoted string"           lexically typed (see below)
+//! ```
+//! `&`, `|` and `!` are accepted as operator spellings; the canonical
+//! printer emits the word forms, fully parenthesized, so
+//! `parse(print(e)) == e` (property-tested below).
+//!
+//! Values are *typed* ([`MetaValue`]): a bare `true`/`false` is a bool,
+//! `358031` an integer, `13.6` a float, anything else (or any quoted
+//! value) a string. Ordered comparisons (`<` `<=` `>` `>=`) require a
+//! numeric literal and only match numeric stored values; equality is
+//! value-based across int/float (`run=13` ≡ `run=13.0`) and type-exact
+//! otherwise. A comparison on a missing key never matches — except
+//! `!=`, which treats "absent" as "not equal".
+
+use std::cmp::Ordering;
+use std::ops::Bound;
+
+use crate::common::error::{Result, RucioError};
+
+use super::types::DidType;
+
+// ---------------------------------------------------------------------
+// typed metadata values
+// ---------------------------------------------------------------------
+
+/// A typed metadata value. The total order groups values as
+/// bool < numeric < string; integers and floats order *numerically*
+/// against each other (so one inverted-index range covers a mixed-typed
+/// numeric key), with `Int(n) < Float(n as f64)` breaking exact ties —
+/// equality therefore stays type-exact.
+#[derive(Debug, Clone)]
+pub enum MetaValue {
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl MetaValue {
+    /// Parse a raw string the way the REST/CLI surface does: lexical
+    /// typing. `"true"`/`"false"` → bool; an `i64` → int; a finite
+    /// numeric literal → float; everything else → string.
+    pub fn parse_lexical(s: &str) -> MetaValue {
+        match s {
+            "true" => return MetaValue::Bool(true),
+            "false" => return MetaValue::Bool(false),
+            _ => {}
+        }
+        if let Ok(i) = s.parse::<i64>() {
+            return MetaValue::Int(i);
+        }
+        // Guard the float path against `inf` / `nan` spellings (Rust's
+        // f64 parser accepts them; the catalog stores only finite floats).
+        if s.chars().all(|c| c.is_ascii_digit() || matches!(c, '+' | '-' | '.' | 'e' | 'E')) {
+            if let Ok(f) = s.parse::<f64>() {
+                if f.is_finite() {
+                    return MetaValue::Float(canonical_f64(f));
+                }
+            }
+        }
+        MetaValue::Str(s.to_string())
+    }
+
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, MetaValue::Int(_) | MetaValue::Float(_))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            MetaValue::Int(i) => Some(*i as f64),
+            MetaValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            MetaValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            MetaValue::Bool(_) => "bool",
+            MetaValue::Int(_) => "int",
+            MetaValue::Float(_) => "float",
+            MetaValue::Str(_) => "str",
+        }
+    }
+
+    /// The smallest value that is numerically equal to `f` under the
+    /// MetaValue order (`Int(n)` sorts before `Float(n)`): the inclusive
+    /// lower bound for `>=` / exclusive upper bound for `<` index ranges.
+    fn numeric_floor(f: f64) -> MetaValue {
+        if f.fract() == 0.0 && (i64::MIN as f64..=i64::MAX as f64).contains(&f) {
+            MetaValue::Int(f as i64)
+        } else {
+            MetaValue::Float(f)
+        }
+    }
+
+    /// Index-range bounds over the numeric band for `key OP v`, expressed
+    /// in the MetaValue total order. Evaluation uses the *same* bounds
+    /// ([`CmpOp::ord_matches`] / [`MetaValue::eq_matches`]), so a planner
+    /// range lookup and a full scan agree on every row by construction.
+    /// `Eq` yields the *equality band* `[Int(f), Float(f)]` — both typed
+    /// representations of one numeric value (so `run=13` and `run=13.0`
+    /// find the same rows regardless of which surface wrote them).
+    pub fn numeric_band(op: CmpOp, v: &MetaValue) -> Option<(Bound<MetaValue>, Bound<MetaValue>)> {
+        // `-0.0` must collapse to `0.0` here: the total order separates
+        // them (total_cmp), so an uncanonicalized `-0.0` would build an
+        // inverted Eq band (`Int(0) > Float(-0.0)`) and panic the
+        // planner's BTreeMap range. Storage canonicalizes too; this
+        // covers programmatically built expressions.
+        let f = canonical_f64(v.as_f64()?);
+        // All finite numerics sort within [Float(-inf), Float(+inf)].
+        let lo_all = Bound::Included(MetaValue::Float(f64::NEG_INFINITY));
+        let hi_all = Bound::Included(MetaValue::Float(f64::INFINITY));
+        Some(match op {
+            CmpOp::Ge => (Bound::Included(MetaValue::numeric_floor(f)), hi_all),
+            // `Float(f)` is the largest value numerically equal to f, so
+            // excluding it starts strictly above the whole equality band.
+            CmpOp::Gt => (Bound::Excluded(MetaValue::Float(f)), hi_all),
+            CmpOp::Le => (lo_all, Bound::Included(MetaValue::Float(f))),
+            CmpOp::Lt => (lo_all, Bound::Excluded(MetaValue::numeric_floor(f))),
+            CmpOp::Eq => {
+                let mut lo = MetaValue::numeric_floor(f);
+                // An exact i64 beyond 2^53 may round *up* into `f`; the
+                // query's own integer must still sit inside its equality
+                // band, so widen the lower bound down to it.
+                if let (MetaValue::Int(i), MetaValue::Int(j)) = (v, &lo) {
+                    if i < j {
+                        lo = MetaValue::Int(*i);
+                    }
+                }
+                (Bound::Included(lo), Bound::Included(MetaValue::Float(f)))
+            }
+            CmpOp::Ne => return None,
+        })
+    }
+
+    /// Equality semantics of the language: numerics compare by *exact*
+    /// value across `Int`/`Float` (the two typings of `13` are one
+    /// number, and i64s beyond f64's 2^53 integer precision never
+    /// conflate with their neighbors); everything else is type-exact.
+    /// The `Eq` index band is a superset of this relation — both
+    /// executors re-evaluate candidates with this exact test, so band
+    /// over-inclusion is filtered identically and planner≡scan holds.
+    pub fn eq_matches(&self, other: &MetaValue) -> bool {
+        use MetaValue::*;
+        match (self, other) {
+            (Int(a), Int(b)) => a == b,
+            (Float(a), Float(b)) => a == b,
+            (Int(a), Float(b)) | (Float(b), Int(a)) => {
+                // exact cross-type equality: the float must be an
+                // integer, inside i64 range, and convert to exactly `a`
+                b.fract() == 0.0
+                    && (i64::MIN as f64..i64::MAX as f64).contains(b)
+                    && *b as i64 == *a
+            }
+            _ => self == other,
+        }
+    }
+
+    fn within(&self, lo: &Bound<MetaValue>, hi: &Bound<MetaValue>) -> bool {
+        let above = match lo {
+            Bound::Included(b) => *self >= *b,
+            Bound::Excluded(b) => *self > *b,
+            Bound::Unbounded => true,
+        };
+        let below = match hi {
+            Bound::Included(b) => *self <= *b,
+            Bound::Excluded(b) => *self < *b,
+            Bound::Unbounded => true,
+        };
+        above && below
+    }
+}
+
+impl Ord for MetaValue {
+    fn cmp(&self, other: &Self) -> Ordering {
+        use MetaValue::*;
+        let class = |v: &MetaValue| match v {
+            Bool(_) => 0u8,
+            Int(_) | Float(_) => 1,
+            Str(_) => 2,
+        };
+        match (self, other) {
+            (Bool(a), Bool(b)) => a.cmp(b),
+            (Int(a), Int(b)) => a.cmp(b),
+            (Str(a), Str(b)) => a.cmp(b),
+            (Float(a), Float(b)) => a.total_cmp(b),
+            (Int(a), Float(b)) => (*a as f64).total_cmp(b).then(Ordering::Less),
+            (Float(a), Int(b)) => a.total_cmp(&(*b as f64)).then(Ordering::Greater),
+            (a, b) => class(a).cmp(&class(b)),
+        }
+    }
+}
+
+impl PartialOrd for MetaValue {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for MetaValue {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for MetaValue {}
+
+impl std::fmt::Display for MetaValue {
+    /// Canonical value printing: re-parsing the printed form with
+    /// [`MetaValue::parse_lexical`] (bare) or the expression lexer
+    /// (quoted) yields the same typed value.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetaValue::Bool(b) => write!(f, "{b}"),
+            MetaValue::Int(i) => write!(f, "{i}"),
+            MetaValue::Float(x) => {
+                if x.fract() == 0.0 {
+                    write!(f, "{x:.1}") // keep the dot so it re-parses as float
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            MetaValue::Str(s) => {
+                if is_bare_word(s) && matches!(MetaValue::parse_lexical(s), MetaValue::Str(_)) {
+                    write!(f, "{s}")
+                } else {
+                    // quoted: always a string, whatever the content
+                    write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+                }
+            }
+        }
+    }
+}
+
+/// Collapse `-0.0` to `0.0` — the two are numerically equal but
+/// distinct under `f64::total_cmp`, and the index order must agree with
+/// the equality semantics. Every storage and parse entry point runs
+/// floats through this.
+pub(crate) fn canonical_f64(f: f64) -> f64 {
+    if f == 0.0 {
+        0.0
+    } else {
+        f
+    }
+}
+
+/// Word characters the lexer accepts in a bare (unquoted) value.
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.' | '/' | '+' | ':' | '*' | '?')
+}
+
+fn is_bare_word(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(is_word_char) && !is_keyword(s)
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s.to_ascii_uppercase().as_str(),
+        "AND" | "OR" | "NOT"
+    )
+}
+
+/// Can `key` appear on the left of a comparison? The virtual keys
+/// (`name`, `type`) and the language keywords are reserved — a stored
+/// pair under such a key could never be queried (the lexer would read
+/// `or=x` as an operator) and would break the canonical printer's
+/// parse∘print contract. `set_metadata` enforces this at write time.
+pub fn is_reserved_key(key: &str) -> bool {
+    is_keyword(key) || matches!(key, "name" | "type")
+}
+
+// ---------------------------------------------------------------------
+// AST
+// ---------------------------------------------------------------------
+
+/// Comparison operators of the language.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CmpOp::Eq => "=",
+            CmpOp::Ne => "!=",
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+        }
+    }
+
+    /// Ordered-comparison semantics shared by the scan evaluator and the
+    /// index planner: non-numeric stored values never match; numeric
+    /// values match iff they fall inside [`MetaValue::numeric_band`].
+    pub fn ord_matches(&self, actual: &MetaValue, v: &MetaValue) -> bool {
+        if !actual.is_numeric() {
+            return false;
+        }
+        match MetaValue::numeric_band(*self, v) {
+            Some((lo, hi)) => actual.within(&lo, &hi),
+            None => false,
+        }
+    }
+}
+
+/// A parsed `meta-expr`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaExpr {
+    /// `*` — matches every DID.
+    Any,
+    /// `name=<glob>`: glob over the DID name (`*` and `?`).
+    NameGlob(String),
+    /// `type=FILE|DATASET|CONTAINER`.
+    TypeIs(DidType),
+    /// `key OP value` over the typed metadata map.
+    Cmp(String, CmpOp, MetaValue),
+    Not(Box<MetaExpr>),
+    And(Box<MetaExpr>, Box<MetaExpr>),
+    Or(Box<MetaExpr>, Box<MetaExpr>),
+}
+
+impl std::fmt::Display for MetaExpr {
+    /// Canonical printer: word operators, fully parenthesized compounds —
+    /// unambiguous, and a fixpoint of `print ∘ parse`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetaExpr::Any => write!(f, "*"),
+            MetaExpr::NameGlob(g) => write!(f, "name={g}"),
+            MetaExpr::TypeIs(t) => write!(f, "type={}", t.as_str()),
+            MetaExpr::Cmp(k, op, v) => write!(f, "{k}{}{v}", op.as_str()),
+            MetaExpr::Not(e) => write!(f, "NOT {e}"),
+            MetaExpr::And(a, b) => write!(f, "({a} AND {b})"),
+            MetaExpr::Or(a, b) => write!(f, "({a} OR {b})"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// lexer + parser
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Word(String),          // bare identifier or value
+    Quoted(String),        // "..." — always a string value
+    Op(CmpOp),
+    And,
+    Or,
+    Not,
+    LParen,
+    RParen,
+    Star,
+}
+
+fn lex(input: &str) -> Result<Vec<Tok>> {
+    let bytes: Vec<char> = input.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let err = |i: usize, what: &str| {
+        RucioError::InvalidMetaExpression(format!("{what} at {i} in '{input}'"))
+    };
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            '(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            '&' => {
+                toks.push(Tok::And);
+                i += 1;
+            }
+            '|' => {
+                toks.push(Tok::Or);
+                i += 1;
+            }
+            '=' => {
+                toks.push(Tok::Op(CmpOp::Eq));
+                i += 1;
+            }
+            '!' => {
+                if bytes.get(i + 1) == Some(&'=') {
+                    toks.push(Tok::Op(CmpOp::Ne));
+                    i += 2;
+                } else {
+                    toks.push(Tok::Not);
+                    i += 1;
+                }
+            }
+            '<' => {
+                if bytes.get(i + 1) == Some(&'=') {
+                    toks.push(Tok::Op(CmpOp::Le));
+                    i += 2;
+                } else {
+                    toks.push(Tok::Op(CmpOp::Lt));
+                    i += 1;
+                }
+            }
+            '>' => {
+                if bytes.get(i + 1) == Some(&'=') {
+                    toks.push(Tok::Op(CmpOp::Ge));
+                    i += 2;
+                } else {
+                    toks.push(Tok::Op(CmpOp::Gt));
+                    i += 1;
+                }
+            }
+            '"' => {
+                let mut s = String::new();
+                i += 1;
+                loop {
+                    match bytes.get(i) {
+                        None => return Err(err(i, "unterminated quote")),
+                        Some('"') => {
+                            i += 1;
+                            break;
+                        }
+                        Some('\\') => match bytes.get(i + 1) {
+                            Some(&e) => {
+                                s.push(e);
+                                i += 2;
+                            }
+                            None => return Err(err(i, "trailing backslash")),
+                        },
+                        Some(&ch) => {
+                            s.push(ch);
+                            i += 1;
+                        }
+                    }
+                }
+                toks.push(Tok::Quoted(s));
+            }
+            c if is_word_char(c) => {
+                let start = i;
+                while i < bytes.len() && is_word_char(bytes[i]) {
+                    i += 1;
+                }
+                let word: String = bytes[start..i].iter().collect();
+                match word.to_ascii_uppercase().as_str() {
+                    "AND" => toks.push(Tok::And),
+                    "OR" => toks.push(Tok::Or),
+                    "NOT" => toks.push(Tok::Not),
+                    _ if word == "*" => toks.push(Tok::Star),
+                    _ => toks.push(Tok::Word(word)),
+                }
+            }
+            other => return Err(err(i, &format!("unexpected character '{other}'"))),
+        }
+    }
+    Ok(toks)
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+    input: String,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: &str) -> RucioError {
+        RucioError::InvalidMetaExpression(format!("{msg} in '{}'", self.input))
+    }
+
+    fn expr(&mut self) -> Result<MetaExpr> {
+        let mut left = self.and()?;
+        while self.peek() == Some(&Tok::Or) {
+            self.next();
+            let right = self.and()?;
+            left = MetaExpr::Or(Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn and(&mut self) -> Result<MetaExpr> {
+        let mut left = self.not()?;
+        while self.peek() == Some(&Tok::And) {
+            self.next();
+            let right = self.not()?;
+            left = MetaExpr::And(Box::new(left), Box::new(right));
+        }
+        Ok(left)
+    }
+
+    fn not(&mut self) -> Result<MetaExpr> {
+        if self.peek() == Some(&Tok::Not) {
+            self.next();
+            return Ok(MetaExpr::Not(Box::new(self.not()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<MetaExpr> {
+        match self.next() {
+            Some(Tok::LParen) => {
+                let e = self.expr()?;
+                if self.next() != Some(Tok::RParen) {
+                    return Err(self.err("missing ')'"));
+                }
+                Ok(e)
+            }
+            Some(Tok::Star) => Ok(MetaExpr::Any),
+            Some(Tok::Word(key)) => {
+                let op = match self.next() {
+                    Some(Tok::Op(op)) => op,
+                    _ => return Err(self.err(&format!("expected comparison after '{key}'"))),
+                };
+                let (raw, quoted) = match self.next() {
+                    Some(Tok::Word(w)) => (w, false),
+                    Some(Tok::Quoted(q)) => (q, true),
+                    Some(Tok::Star) => ("*".to_string(), false),
+                    _ => {
+                        return Err(self.err(&format!(
+                            "expected value after '{key}{}'",
+                            op.as_str()
+                        )))
+                    }
+                };
+                self.typed_atom(key, op, raw, quoted)
+            }
+            other => Err(self.err(&format!("unexpected token {other:?}"))),
+        }
+    }
+
+    /// Build the atom, routing the virtual keys `name` / `type` and
+    /// enforcing operator/type compatibility.
+    fn typed_atom(&self, key: String, op: CmpOp, raw: String, quoted: bool) -> Result<MetaExpr> {
+        if key == "name" {
+            if quoted {
+                return Err(self.err("name takes a bare glob, not a quoted string"));
+            }
+            let atom = MetaExpr::NameGlob(raw);
+            return match op {
+                CmpOp::Eq => Ok(atom),
+                CmpOp::Ne => Ok(MetaExpr::Not(Box::new(atom))),
+                _ => Err(self.err("name supports only = and !=")),
+            };
+        }
+        if key == "type" {
+            let t = match raw.to_ascii_uppercase().as_str() {
+                "FILE" => DidType::File,
+                "DATASET" => DidType::Dataset,
+                "CONTAINER" => DidType::Container,
+                other => return Err(self.err(&format!("unknown DID type '{other}'"))),
+            };
+            let atom = MetaExpr::TypeIs(t);
+            return match op {
+                CmpOp::Eq => Ok(atom),
+                CmpOp::Ne => Ok(MetaExpr::Not(Box::new(atom))),
+                _ => Err(self.err("type supports only = and !=")),
+            };
+        }
+        let value = if quoted {
+            MetaValue::Str(raw)
+        } else {
+            MetaValue::parse_lexical(&raw)
+        };
+        if matches!(op, CmpOp::Lt | CmpOp::Le | CmpOp::Gt | CmpOp::Ge) && !value.is_numeric() {
+            return Err(self.err(&format!(
+                "ordered comparison on '{key}' needs a numeric literal, got {}",
+                value.type_name()
+            )));
+        }
+        Ok(MetaExpr::Cmp(key, op, value))
+    }
+}
+
+/// Parse a `meta-expr` string to an AST.
+pub fn parse(input: &str) -> Result<MetaExpr> {
+    let trimmed = input.trim();
+    if trimmed.is_empty() {
+        return Err(RucioError::InvalidMetaExpression("empty expression".into()));
+    }
+    let toks = lex(trimmed)?;
+    let mut p = Parser { toks, pos: 0, input: trimmed.to_string() };
+    let e = p.expr()?;
+    if p.pos != p.toks.len() {
+        return Err(p.err("trailing tokens"));
+    }
+    Ok(e)
+}
+
+// ---------------------------------------------------------------------
+// evaluation + normalization
+// ---------------------------------------------------------------------
+
+/// Glob matching for DID names: `*` (any run) and `?` (any one char),
+/// everything else literal. Iterative two-pointer algorithm — no
+/// backtracking blowup, no regex involved.
+pub fn glob_match(pattern: &str, text: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let t: Vec<char> = text.chars().collect();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None; // (pattern idx after *, text idx)
+    while ti < t.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = Some((pi + 1, ti));
+            pi += 1;
+        } else if let Some((sp, st)) = star {
+            // backtrack: let the last * swallow one more character
+            pi = sp;
+            ti = st + 1;
+            star = Some((sp, st + 1));
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// The row shape the evaluator needs — avoids coupling the language to
+/// the full `Did` row (the workload/tests can evaluate over lightweight
+/// views).
+pub trait MetaSource {
+    fn did_name(&self) -> &str;
+    fn did_type(&self) -> DidType;
+    fn meta_get(&self, key: &str) -> Option<&MetaValue>;
+}
+
+impl MetaSource for super::types::Did {
+    fn did_name(&self) -> &str {
+        &self.key.name
+    }
+
+    fn did_type(&self) -> DidType {
+        self.did_type
+    }
+
+    fn meta_get(&self, key: &str) -> Option<&MetaValue> {
+        self.meta.get(key)
+    }
+}
+
+impl MetaExpr {
+    /// Evaluate against one DID.
+    pub fn matches<S: MetaSource + ?Sized>(&self, did: &S) -> bool {
+        match self {
+            MetaExpr::Any => true,
+            MetaExpr::NameGlob(g) => glob_match(g, did.did_name()),
+            MetaExpr::TypeIs(t) => did.did_type() == *t,
+            MetaExpr::Cmp(key, op, v) => match did.meta_get(key) {
+                None => *op == CmpOp::Ne,
+                Some(actual) => match op {
+                    CmpOp::Eq => actual.eq_matches(v),
+                    CmpOp::Ne => !actual.eq_matches(v),
+                    ordered => ordered.ord_matches(actual, v),
+                },
+            },
+            MetaExpr::Not(e) => !e.matches(did),
+            MetaExpr::And(a, b) => a.matches(did) && b.matches(did),
+            MetaExpr::Or(a, b) => a.matches(did) || b.matches(did),
+        }
+    }
+
+    /// Negation normal form: push `NOT` inward through `AND`/`OR`
+    /// (De Morgan), cancel double negations, and flip `=`/`!=`. After
+    /// normalization `NOT` wraps only atoms it cannot flip (name globs,
+    /// type tests, ordered comparisons — those are *not* complements of
+    /// each other on missing keys). Evaluation is unchanged
+    /// (property-tested below); the planner sees more positive conjuncts.
+    pub fn normalize(&self) -> MetaExpr {
+        match self {
+            MetaExpr::And(a, b) => {
+                MetaExpr::And(Box::new(a.normalize()), Box::new(b.normalize()))
+            }
+            MetaExpr::Or(a, b) => MetaExpr::Or(Box::new(a.normalize()), Box::new(b.normalize())),
+            MetaExpr::Not(inner) => match &**inner {
+                // ¬(A ∧ B) = ¬A ∨ ¬B
+                MetaExpr::And(a, b) => MetaExpr::Or(
+                    Box::new(MetaExpr::Not(a.clone()).normalize()),
+                    Box::new(MetaExpr::Not(b.clone()).normalize()),
+                ),
+                // ¬(A ∨ B) = ¬A ∧ ¬B
+                MetaExpr::Or(a, b) => MetaExpr::And(
+                    Box::new(MetaExpr::Not(a.clone()).normalize()),
+                    Box::new(MetaExpr::Not(b.clone()).normalize()),
+                ),
+                // ¬¬A = A
+                MetaExpr::Not(e) => e.normalize(),
+                // = and != are exact complements (including missing keys)
+                MetaExpr::Cmp(k, CmpOp::Eq, v) => {
+                    MetaExpr::Cmp(k.clone(), CmpOp::Ne, v.clone())
+                }
+                MetaExpr::Cmp(k, CmpOp::Ne, v) => {
+                    MetaExpr::Cmp(k.clone(), CmpOp::Eq, v.clone())
+                }
+                // ordered comparisons are NOT complements on missing /
+                // non-numeric values — keep the NOT
+                other => MetaExpr::Not(Box::new(other.normalize())),
+            },
+            atom => atom.clone(),
+        }
+    }
+
+    /// The positive `AND`-conjuncts of the normalized expression — what
+    /// the planner inspects for indexable predicates. `a AND (b AND c)`
+    /// yields `[a, b, c]`; anything under `OR`/`NOT` is opaque.
+    pub fn conjuncts(&self) -> Vec<&MetaExpr> {
+        let mut out = Vec::new();
+        fn walk<'a>(e: &'a MetaExpr, out: &mut Vec<&'a MetaExpr>) {
+            match e {
+                MetaExpr::And(a, b) => {
+                    walk(a, out);
+                    walk(b, out);
+                }
+                other => out.push(other),
+            }
+        }
+        walk(self, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::common::proptest::{forall, Gen};
+    use std::collections::BTreeMap;
+
+    /// Lightweight evaluator row for language-level tests (also reused by
+    /// the planner≡scan property suite in `dids_api`).
+    pub struct Row {
+        name: String,
+        did_type: DidType,
+        meta: BTreeMap<String, MetaValue>,
+    }
+
+    impl MetaSource for Row {
+        fn did_name(&self) -> &str {
+            &self.name
+        }
+        fn did_type(&self) -> DidType {
+            self.did_type
+        }
+        fn meta_get(&self, key: &str) -> Option<&MetaValue> {
+            self.meta.get(key)
+        }
+    }
+
+    fn row(name: &str, t: DidType, pairs: &[(&str, MetaValue)]) -> Row {
+        Row {
+            name: name.to_string(),
+            did_type: t,
+            meta: pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        }
+    }
+
+    fn raw_dataset() -> Row {
+        row(
+            "data18_13TeV.00358031.physics_Main",
+            DidType::Dataset,
+            &[
+                ("datatype", MetaValue::Str("RAW".into())),
+                ("run", MetaValue::Int(358031)),
+                ("lumi", MetaValue::Float(13.6)),
+                ("good", MetaValue::Bool(true)),
+            ],
+        )
+    }
+
+    #[test]
+    fn lexical_typing() {
+        assert_eq!(MetaValue::parse_lexical("true"), MetaValue::Bool(true));
+        assert_eq!(MetaValue::parse_lexical("358031"), MetaValue::Int(358031));
+        assert_eq!(MetaValue::parse_lexical("-42"), MetaValue::Int(-42));
+        assert_eq!(MetaValue::parse_lexical("13.6"), MetaValue::Float(13.6));
+        assert_eq!(MetaValue::parse_lexical("1e3"), MetaValue::Float(1000.0));
+        assert_eq!(MetaValue::parse_lexical("RAW"), MetaValue::Str("RAW".into()));
+        // inf/nan spellings stay strings (catalog stores finite floats)
+        assert_eq!(MetaValue::parse_lexical("inf"), MetaValue::Str("inf".into()));
+        assert_eq!(MetaValue::parse_lexical("NaN"), MetaValue::Str("NaN".into()));
+        // negative zero collapses to canonical zero (total_cmp separates
+        // them; an uncanonical -0.0 would invert the Eq index band)
+        match MetaValue::parse_lexical("-0.0") {
+            MetaValue::Float(f) => assert!(f.is_sign_positive() && f == 0.0),
+            other => panic!("-0.0 must parse as canonical Float(0.0), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn huge_int_equality_stays_exact_beyond_f64_precision() {
+        // 2^53+3 is exactly representable in i64 but rounds UP to 2^53+4
+        // in f64 — the equality band must still contain the exact key so
+        // the planner's index probe agrees with the evaluator
+        let i = (1i64 << 53) + 3;
+        assert_ne!((i as f64) as i64, i, "test premise: f64 rounding moves the value");
+        let (lo, hi) = MetaValue::numeric_band(CmpOp::Eq, &MetaValue::Int(i)).unwrap();
+        assert!(MetaValue::Int(i).within(&lo, &hi), "exact key inside its own band");
+        assert!(MetaValue::Int(i).eq_matches(&MetaValue::Int(i)));
+        let d = row("x", DidType::File, &[("run", MetaValue::Int(i))]);
+        assert!(parse(&format!("run={i}")).unwrap().matches(&d));
+        assert!(!parse("run=1").unwrap().matches(&d));
+        // ...and neighbors that collapse to the same f64 do NOT conflate:
+        // equality is exact even where the band over-includes (the
+        // evaluator filters candidates with the exact test)
+        let tc = (1i64 << 53) as f64; // 2^53, exactly representable
+        assert!(!MetaValue::Int(i).eq_matches(&MetaValue::Int(i + 1)));
+        assert!(!MetaValue::Int(1 << 53).eq_matches(&MetaValue::Int((1 << 53) + 1)));
+        let d53 = row("x", DidType::File, &[("run", MetaValue::Int(1 << 53))]);
+        assert!(!parse(&format!("run={}", (1i64 << 53) + 1)).unwrap().matches(&d53));
+        assert!(parse(&format!("run={}", 1i64 << 53)).unwrap().matches(&d53));
+        // exact cross-type equality at the same magnitude
+        assert!(MetaValue::Int(1 << 53).eq_matches(&MetaValue::Float(tc)));
+        assert!(!MetaValue::Int((1 << 53) + 1).eq_matches(&MetaValue::Float(tc)));
+        // and != is its exact complement
+        assert!(parse(&format!("run!={}", (1i64 << 53) + 1)).unwrap().matches(&d53));
+    }
+
+    #[test]
+    fn negative_zero_filters_are_safe_and_match_zero() {
+        // `run=-0.0` must not panic the band builder and must match both
+        // typed zeros (regression: inverted BTreeMap range)
+        let (lo, hi) =
+            MetaValue::numeric_band(CmpOp::Eq, &MetaValue::Float(-0.0)).unwrap();
+        assert!(MetaValue::Int(0).within(&lo, &hi));
+        assert!(MetaValue::Float(0.0).within(&lo, &hi));
+        let d = row("x", DidType::File, &[("run", MetaValue::Int(0))]);
+        assert!(parse("run=-0.0").unwrap().matches(&d));
+        assert!(parse("run=0").unwrap().matches(&d));
+        assert!(parse("run>=-0.0").unwrap().matches(&d));
+        assert!(!parse("run<-0.0").unwrap().matches(&d));
+    }
+
+    #[test]
+    fn value_order_groups_types_and_numerics_mix() {
+        use MetaValue::*;
+        let mut vs = vec![
+            Str("a".into()),
+            Float(2.5),
+            Int(3),
+            Bool(false),
+            Int(2),
+            Float(3.0),
+            Bool(true),
+            Str("RAW".into()),
+        ];
+        vs.sort();
+        assert_eq!(
+            vs,
+            vec![
+                Bool(false),
+                Bool(true),
+                Int(2),
+                Float(2.5),
+                Int(3),
+                Float(3.0),
+                Str("RAW".into()),
+                Str("a".into()),
+            ]
+        );
+        // equality is type-exact even where the order interleaves
+        assert_ne!(Int(3), Float(3.0));
+        assert_eq!(Int(3), Int(3));
+    }
+
+    #[test]
+    fn the_issue_example_parses_and_matches() {
+        let e = parse("datatype=RAW AND run>=358000 AND name=data18_13TeV.*").unwrap();
+        assert!(e.matches(&raw_dataset()));
+        let mut other = raw_dataset();
+        other.meta.insert("run".into(), MetaValue::Int(300000));
+        assert!(!e.matches(&other));
+        let mut renamed = raw_dataset();
+        renamed.name = "mc20_13TeV.999.sim".into();
+        assert!(!e.matches(&renamed));
+    }
+
+    #[test]
+    fn operator_semantics() {
+        let d = raw_dataset();
+        for (expr, want) in [
+            ("datatype=RAW", true),
+            ("datatype=AOD", false),
+            ("datatype!=AOD", true),
+            ("run>358030", true),
+            ("run>358031", false),
+            ("run>=358031", true),
+            ("run<358032", true),
+            ("run<=358030", false),
+            ("lumi>13", true),
+            ("lumi<13.7", true),
+            ("good=true", true),
+            ("good=false", false),
+            ("missing=x", false),
+            ("missing!=x", true), // absent counts as "not equal"
+            ("datatype>5", false), // ordered op on a string value: no match
+            ("type=DATASET", true),
+            ("type=FILE", false),
+            ("type!=FILE", true),
+            ("name=*physics*", true),
+            ("name=*.00358031.*", true),
+            ("name!=*physics*", false),
+            ("*", true),
+            ("NOT datatype=AOD", true),
+            ("datatype=RAW AND (run<100 OR lumi>10)", true),
+            ("NOT (datatype=RAW AND run>=358000)", false),
+            // symbol spellings
+            ("datatype=RAW & run>=358000", true),
+            ("datatype=AOD | lumi>13", true),
+            ("!datatype=AOD", true),
+        ] {
+            let e = parse(expr).unwrap_or_else(|err| panic!("parse '{expr}': {err}"));
+            assert_eq!(e.matches(&d), want, "{expr}");
+        }
+    }
+
+    #[test]
+    fn numeric_equality_is_value_based_strings_type_exact() {
+        // one number, two typings: int-typed and float-typed stores both
+        // answer `run=3` and `run=3.0` (whatever surface wrote them)
+        for stored in [MetaValue::Int(3), MetaValue::Float(3.0)] {
+            let d = row("x", DidType::File, &[("run", stored)]);
+            assert!(parse("run=3").unwrap().matches(&d));
+            assert!(parse("run=3.0").unwrap().matches(&d));
+            assert!(!parse("run!=3").unwrap().matches(&d));
+            assert!(!parse("run=3.5").unwrap().matches(&d));
+            assert!(parse("run>=3.0").unwrap().matches(&d), "ordered ops are numeric");
+            assert!(parse("run<=3").unwrap().matches(&d));
+        }
+        // quoted values are strings even when they look numeric — and
+        // strings never numerically equal a number
+        let s = row("x", DidType::File, &[("v", MetaValue::Str("42".into()))]);
+        assert!(parse("v=\"42\"").unwrap().matches(&s));
+        assert!(!parse("v=42").unwrap().matches(&s));
+        // bools are type-exact too
+        let b = row("x", DidType::File, &[("ok", MetaValue::Bool(true))]);
+        assert!(parse("ok=true").unwrap().matches(&b));
+        assert!(!parse("ok=1").unwrap().matches(&b));
+    }
+
+    #[test]
+    fn malformed_expressions_error() {
+        for bad in [
+            "",
+            "   ",
+            "datatype=",
+            "=RAW",
+            "(datatype=RAW",
+            "datatype=RAW)",
+            "datatype=RAW AND",
+            "AND datatype=RAW",
+            "run>RAW",          // ordered op needs a numeric literal
+            "run>\"5\"",        // quoted is a string
+            "name<abc",         // name: only = and !=
+            "type=BLOB",        // unknown DID type
+            "a=b=c",
+            "datatype RAW",
+            "NOT",
+            "a=b @@ c=d",
+            "x=\"unterminated",
+        ] {
+            assert!(parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn glob_matching() {
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("*", ""));
+        assert!(glob_match("raw.*", "raw.0001"));
+        assert!(!glob_match("raw.*", "aod.0001"));
+        assert!(glob_match("*.0001", "raw.0001"));
+        assert!(glob_match("a*b*c", "a-x-b-y-c"));
+        assert!(!glob_match("a*b*c", "a-x-b-y"));
+        assert!(glob_match("f.????", "f.0001"));
+        assert!(!glob_match("f.????", "f.001"));
+        assert!(glob_match("data18_13TeV.*", "data18_13TeV.00358031.physics_Main"));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("", ""));
+    }
+
+    // ------------------------------------------------------------------
+    // property tests (mirror the rseexpr suite style)
+    // ------------------------------------------------------------------
+
+    const KEYS: &[&str] = &["datatype", "run", "lumi", "good", "stream", "events"];
+
+    fn gen_value(g: &mut Gen) -> MetaValue {
+        match g.usize(0, 5) {
+            0 => MetaValue::Bool(g.bool()),
+            1 => MetaValue::Int(g.i64(-1000, 1_000_000)),
+            2 => {
+                // keep floats in the well-behaved band (finite, printable)
+                let f = (g.i64(-100_000, 100_000) as f64) / 8.0;
+                MetaValue::Float(f)
+            }
+            3 => MetaValue::Str(g.ident(1..8)),
+            // strings that stress the printer: numeric-looking + quotable
+            _ => MetaValue::Str(match g.usize(0, 4) {
+                0 => g.u64(0, 999).to_string(),
+                1 => "true".to_string(),
+                2 => format!("has space {}", g.ident(1..4)),
+                _ => format!("q\"uote\\{}", g.ident(1..4)),
+            }),
+        }
+    }
+
+    pub fn gen_expr(g: &mut Gen, depth: usize) -> MetaExpr {
+        if depth == 0 || g.chance(0.35) {
+            match g.usize(0, 8) {
+                0 => MetaExpr::Any,
+                1 => MetaExpr::NameGlob(format!("{}*{}", g.ident(1..4), g.ident(1..4))),
+                2 => MetaExpr::TypeIs(*g.pick(&[
+                    DidType::File,
+                    DidType::Dataset,
+                    DidType::Container,
+                ])),
+                3..=5 => MetaExpr::Cmp(
+                    g.pick(KEYS).to_string(),
+                    *g.pick(&[CmpOp::Eq, CmpOp::Ne]),
+                    gen_value(g),
+                ),
+                _ => MetaExpr::Cmp(
+                    g.pick(KEYS).to_string(),
+                    *g.pick(&[CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge]),
+                    if g.bool() {
+                        MetaValue::Int(g.i64(-100, 1_000_000))
+                    } else {
+                        MetaValue::Float((g.i64(-8000, 8_000_000) as f64) / 8.0)
+                    },
+                ),
+            }
+        } else {
+            let a = Box::new(gen_expr(g, depth - 1));
+            match g.usize(0, 3) {
+                0 => MetaExpr::And(a, Box::new(gen_expr(g, depth - 1))),
+                1 => MetaExpr::Or(a, Box::new(gen_expr(g, depth - 1))),
+                _ => MetaExpr::Not(a),
+            }
+        }
+    }
+
+    pub fn gen_row(g: &mut Gen) -> Row {
+        let mut meta = BTreeMap::new();
+        for key in KEYS {
+            if g.chance(0.6) {
+                meta.insert(key.to_string(), gen_value(g));
+            }
+        }
+        Row {
+            name: format!("{}.{}", g.ident(1..6), g.u64(0, 10_000)),
+            did_type: *g.pick(&[DidType::File, DidType::Dataset, DidType::Container]),
+            meta,
+        }
+    }
+
+    #[test]
+    fn prop_print_parse_round_trip() {
+        forall(400, |g| {
+            let ast = gen_expr(g, 3);
+            let printed = ast.to_string();
+            let reparsed = parse(&printed)
+                .unwrap_or_else(|e| panic!("printed '{printed}' must reparse: {e}"));
+            assert_eq!(reparsed, ast, "parse∘print is identity for '{printed}'");
+            assert_eq!(reparsed.to_string(), printed, "printer fixpoint");
+        });
+    }
+
+    #[test]
+    fn prop_normalize_preserves_semantics_and_pushes_not_down() {
+        fn not_only_on_atoms(e: &MetaExpr) -> bool {
+            match e {
+                MetaExpr::And(a, b) | MetaExpr::Or(a, b) => {
+                    not_only_on_atoms(a) && not_only_on_atoms(b)
+                }
+                MetaExpr::Not(inner) => matches!(
+                    &**inner,
+                    MetaExpr::Any | MetaExpr::NameGlob(_) | MetaExpr::TypeIs(_)
+                        | MetaExpr::Cmp(..)
+                ),
+                _ => true,
+            }
+        }
+        forall(300, |g| {
+            let ast = gen_expr(g, 4);
+            let norm = ast.normalize();
+            assert!(not_only_on_atoms(&norm), "NOT pushed to atoms: {norm}");
+            // normalization is idempotent
+            assert_eq!(norm.normalize(), norm);
+            // and observationally equal on random rows
+            for _ in 0..8 {
+                let r = gen_row(g);
+                assert_eq!(
+                    ast.matches(&r),
+                    norm.matches(&r),
+                    "'{ast}' vs normalized '{norm}' diverge on {:?}",
+                    r.meta
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_de_morgan_laws_hold() {
+        forall(200, |g| {
+            let a = gen_expr(g, 2);
+            let b = gen_expr(g, 2);
+            let not_and = MetaExpr::Not(Box::new(MetaExpr::And(
+                Box::new(a.clone()),
+                Box::new(b.clone()),
+            )));
+            let or_nots = MetaExpr::Or(
+                Box::new(MetaExpr::Not(Box::new(a.clone()))),
+                Box::new(MetaExpr::Not(Box::new(b.clone()))),
+            );
+            let not_or = MetaExpr::Not(Box::new(MetaExpr::Or(
+                Box::new(a.clone()),
+                Box::new(b.clone()),
+            )));
+            let and_nots = MetaExpr::And(
+                Box::new(MetaExpr::Not(Box::new(a))),
+                Box::new(MetaExpr::Not(Box::new(b))),
+            );
+            for _ in 0..6 {
+                let r = gen_row(g);
+                assert_eq!(not_and.matches(&r), or_nots.matches(&r), "¬(A∧B) = ¬A∨¬B");
+                assert_eq!(not_or.matches(&r), and_nots.matches(&r), "¬(A∨B) = ¬A∧¬B");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_malformed_inputs_error_not_panic() {
+        forall(500, |g| {
+            // arbitrary printable garbage: parse must return, never panic
+            let s = g.string(0..24);
+            let _ = parse(&s);
+        });
+    }
+
+    #[test]
+    fn prop_ordered_ops_agree_with_band_bounds() {
+        // the evaluator's ordered-comparison semantics and the planner's
+        // index bounds are the same function — spot-check the equality
+        // band edges where Int/Float interleave
+        forall(200, |g| {
+            let n = g.i64(-50, 50);
+            let stored = [
+                MetaValue::Int(n),
+                MetaValue::Float(n as f64),
+                MetaValue::Float(n as f64 + 0.5),
+            ];
+            for v in [MetaValue::Int(n), MetaValue::Float(n as f64)] {
+                for op in [CmpOp::Lt, CmpOp::Le, CmpOp::Gt, CmpOp::Ge] {
+                    for s in &stored {
+                        let via_band = op.ord_matches(s, &v);
+                        let direct = {
+                            let (sf, vf) = (s.as_f64().unwrap(), v.as_f64().unwrap());
+                            match op {
+                                CmpOp::Lt => sf < vf,
+                                CmpOp::Le => sf <= vf,
+                                CmpOp::Gt => sf > vf,
+                                CmpOp::Ge => sf >= vf,
+                                _ => unreachable!(),
+                            }
+                        };
+                        assert_eq!(via_band, direct, "{s:?} {op:?} {v:?}");
+                    }
+                }
+            }
+        });
+    }
+}

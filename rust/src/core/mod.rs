@@ -11,6 +11,7 @@
 
 pub mod accounts_api;
 pub mod dids_api;
+pub mod metaexpr;
 pub mod replicas_api;
 pub mod rse;
 pub mod rse_api;
@@ -26,9 +27,10 @@ use crate::common::clock::{Clock, EpochMs};
 use crate::common::config::Config;
 use crate::common::idgen::IdGen;
 use crate::common::prng::Prng;
-use crate::db::{Index, Registry, Table};
+use crate::db::{Index, MultiIndex, Registry, Table};
 use crate::jsonx::Json;
 
+use metaexpr::MetaValue;
 use rse::{Distance, Rse};
 use subscriptions::Subscription;
 use types::*;
@@ -55,6 +57,16 @@ pub struct Catalog {
     pub att_by_parent: Index<Attachment, DidKey>,
     pub att_by_child: Index<Attachment, DidKey>,
     pub dids_by_expiry: Index<Did, EpochMs>,
+    /// DIDs per scope — O(1) scope sizes for the query planner's
+    /// index-vs-scan cost gate.
+    pub dids_by_scope: Index<Did, String>,
+    /// Per-key inverted metadata index: `(scope, key, typed value)` →
+    /// DIDs. Scope leads the index key, so the `meta-expr` planner's
+    /// equality probes and numeric ranges return *scope-local* candidate
+    /// sets — a hot value in one scope can never bloat another scope's
+    /// queries. Maintained by the table on every mutation path
+    /// (back-filled on `set_metadata`, cleaned on `erase_did`).
+    pub meta_index: MultiIndex<Did, (String, String, MetaValue)>,
 
     // --- storage (paper §2.4)
     pub rses: Table<Rse>,
@@ -119,6 +131,15 @@ impl Catalog {
         let dids = Table::new("dids").with_shards(shards);
         let dids_by_expiry = Index::new(|d: &Did| d.expired_at);
         dids.add_index(&dids_by_expiry).unwrap();
+        let dids_by_scope = Index::new(|d: &Did| Some(d.key.scope.clone()));
+        dids.add_index(&dids_by_scope).unwrap();
+        let meta_index = MultiIndex::new(|d: &Did| {
+            d.meta
+                .iter()
+                .map(|(k, v)| (d.key.scope.clone(), k.clone(), v.clone()))
+                .collect()
+        });
+        dids.add_multi_index(&meta_index).unwrap();
 
         let replicas = Table::new("replicas").with_shards(shards);
         let replicas_by_did = Index::new(|r: &Replica| Some(r.did.clone()));
@@ -175,6 +196,8 @@ impl Catalog {
             att_by_parent,
             att_by_child,
             dids_by_expiry,
+            dids_by_scope,
+            meta_index,
             rses: Table::new("rses").with_shards(shards),
             distances: Table::new("distances").with_shards(shards),
             replicas,

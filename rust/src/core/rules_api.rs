@@ -437,6 +437,28 @@ impl Catalog {
         }
     }
 
+    /// Create many rules as one atomic call: each rule's locks and
+    /// transfer requests land through the usual batched commits; a
+    /// mid-batch failure rolls back the rules already created (the
+    /// `delete_rule` unwind releases locks, refunds usage, re-tombstones),
+    /// so callers observe all rules or none. Shared by `POST /rules/bulk`
+    /// and the transmogrifier's per-subscription sweeps.
+    pub fn add_rules_bulk(&self, specs: Vec<RuleSpec>) -> Result<Vec<u64>> {
+        let mut ids: Vec<u64> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            match self.add_rule(spec) {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    for id in ids {
+                        let _ = self.delete_rule(id);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ids)
+    }
+
     pub fn get_rule(&self, rule_id: u64) -> Result<Rule> {
         self.rules
             .get(&rule_id)

@@ -1,33 +1,41 @@
 //! Subscriptions (paper §2.5): standing dataflow policies — "data
-//! placement requests for future incoming DIDs". A metadata filter is
-//! matched against every new DID; positive matches create the subscribed
-//! replication rules on behalf of the owning account.
-
-use std::collections::BTreeMap;
+//! placement requests for future incoming DIDs". Each subscription
+//! carries a `meta-expr` filter ([`crate::core::metaexpr`]) matched
+//! against new DIDs; positive matches create the subscribed replication
+//! rules on behalf of the owning account, through the bulk rule path.
 
 use crate::common::clock::EpochMs;
 use crate::common::error::{Result, RucioError};
 use crate::db::Row;
 
+use super::metaexpr::MetaExpr;
 use super::rules_api::RuleSpec;
 use super::types::*;
 use super::Catalog;
 
-/// The metadata filter of a subscription (e.g. "all RAW data coming from
-/// the detector").
+/// The filter of a subscription (e.g. "all RAW data coming from the
+/// detector"): scope + DID-type selection plus a typed `meta-expr` over
+/// name and metadata — the same language, planner and evaluator that
+/// serve `list_dids`.
 #[derive(Debug, Clone, Default)]
 pub struct SubscriptionFilter {
     /// Match DIDs in any of these scopes (empty = all scopes).
     pub scopes: Vec<String>,
-    /// Name pattern (regex, matched on the DID name).
-    pub name_pattern: Option<String>,
     /// Restrict to DID types (empty = datasets only, the usual unit).
     pub did_types: Vec<DidType>,
-    /// Required metadata key → value equalities.
-    pub meta: BTreeMap<String, String>,
+    /// `meta-expr` filter over name glob + typed metadata
+    /// (`None` = match everything the scope/type gates admit).
+    pub expr: Option<MetaExpr>,
 }
 
 impl SubscriptionFilter {
+    /// Build a filter from a `meta-expr` string (parse errors surface at
+    /// definition time, not match time).
+    pub fn with_expr(mut self, expr: &str) -> Result<Self> {
+        self.expr = Some(super::metaexpr::parse(expr)?);
+        Ok(self)
+    }
+
     pub fn matches(&self, did: &Did) -> bool {
         if !self.scopes.is_empty() && !self.scopes.iter().any(|s| *s == did.key.scope) {
             return false;
@@ -40,18 +48,7 @@ impl SubscriptionFilter {
         if !type_ok {
             return false;
         }
-        if let Some(p) = &self.name_pattern {
-            match regex::Regex::new(p) {
-                Ok(re) if re.is_match(&did.key.name) => {}
-                _ => return false,
-            }
-        }
-        for (k, v) in &self.meta {
-            if did.meta.get(k) != Some(v) {
-                return false;
-            }
-        }
-        true
+        self.expr.as_ref().map(|e| e.matches(did)).unwrap_or(true)
     }
 }
 
@@ -128,50 +125,102 @@ impl Catalog {
         Ok(())
     }
 
-    /// Match a (new) DID against all enabled subscriptions, creating the
-    /// subscribed rules ("after the creation of a DID its metadata is
-    /// matched with the filter of all subscriptions", §2.5). Returns
-    /// created rule ids. Idempotent per (subscription, did): existing
-    /// subscription rules on the DID are not duplicated.
-    pub fn match_subscriptions(&self, did_key: &DidKey) -> Result<Vec<u64>> {
-        let did = self.get_did(did_key)?;
+    /// Match a batch of (new) DIDs against all enabled subscriptions and
+    /// create the subscribed rules — the transmogrifier work unit ("after
+    /// the creation of a DID its metadata is matched with the filter of
+    /// all subscriptions", §2.5). Subscriptions are snapshotted once per
+    /// batch; each subscription's rules land through the bulk rule path,
+    /// falling back to per-rule creation when one member poisons the
+    /// batch (e.g. an expression currently resolving empty). Idempotent
+    /// per (subscription, did). Returns created rule ids.
+    pub fn transmogrify_batch(&self, keys: &[DidKey]) -> Vec<u64> {
         let mut created = Vec::new();
-        for sub in self.subscriptions.scan(|s| s.enabled) {
-            if !sub.filter.matches(&did) {
-                continue;
-            }
-            let already = self
-                .list_rules_for_did(did_key)
+        if keys.is_empty() {
+            return created;
+        }
+        let subs = self.subscriptions.scan(|s| s.enabled);
+        if subs.is_empty() {
+            return created;
+        }
+        // Fetch each DID once for the whole subscription sweep; dedup so
+        // a key repeated inside one event batch cannot double-match.
+        let mut seen = std::collections::BTreeSet::new();
+        let dids: Vec<Did> = keys
+            .iter()
+            .filter(|k| seen.insert((*k).clone()))
+            .filter_map(|k| self.dids.get(k))
+            .collect();
+        // Idempotency data, gathered once per DID instead of once per
+        // (subscription × DID): which subscriptions already rule each DID.
+        let ruled_by: Vec<std::collections::BTreeSet<u64>> = dids
+            .iter()
+            .map(|d| {
+                self.list_rules_for_did(&d.key)
+                    .iter()
+                    .filter_map(|r| r.subscription_id)
+                    .collect()
+            })
+            .collect();
+        for sub in subs {
+            let matched: Vec<&Did> = dids
                 .iter()
-                .any(|r| r.subscription_id == Some(sub.id));
-            if already {
+                .zip(&ruled_by)
+                .filter(|(d, ruled)| sub.filter.matches(d) && !ruled.contains(&sub.id))
+                .map(|(d, _)| d)
+                .collect();
+            if matched.is_empty() {
                 continue;
             }
-            self.subscriptions.update(&sub.id, self.now(), |s| s.matched += 1);
+            self.subscriptions
+                .update(&sub.id, self.now(), |s| s.matched += matched.len() as u64);
             for tpl in &sub.rules {
-                let mut spec = RuleSpec::new(&sub.account, did_key.clone(), &tpl.rse_expression, tpl.copies)
-                    .with_activity(&tpl.activity);
-                if let Some(l) = tpl.lifetime_ms {
-                    spec = spec.with_lifetime(l);
-                }
-                spec.subscription_id = Some(sub.id);
-                match self.add_rule(spec) {
-                    Ok(rule_id) => created.push(rule_id),
-                    Err(e) => {
-                        // Don't fail the whole matching sweep on one bad
-                        // template (e.g. expression currently empty).
-                        crate::log_warn!("subscription {} rule failed on {did_key}: {e}", sub.name);
+                let build_spec = |d: &Did| {
+                    let mut spec =
+                        RuleSpec::new(&sub.account, d.key.clone(), &tpl.rse_expression, tpl.copies)
+                            .with_activity(&tpl.activity);
+                    if let Some(l) = tpl.lifetime_ms {
+                        spec = spec.with_lifetime(l);
+                    }
+                    spec.subscription_id = Some(sub.id);
+                    spec
+                };
+                let specs: Vec<RuleSpec> = matched.iter().copied().map(build_spec).collect();
+                match self.add_rules_bulk(specs) {
+                    Ok(ids) => created.extend(ids),
+                    Err(_) => {
+                        // One bad member rolled the batch back — salvage
+                        // the healthy ones individually (specs rebuilt:
+                        // the common success path pays no extra clone).
+                        for &d in &matched {
+                            match self.add_rule(build_spec(d)) {
+                                Ok(id) => created.push(id),
+                                Err(e) => crate::log_warn!(
+                                    "subscription {} rule failed on {}: {e}",
+                                    sub.name,
+                                    d.key
+                                ),
+                            }
+                        }
                     }
                 }
             }
         }
-        Ok(created)
+        self.metrics.incr("subscriptions.rules_created", created.len() as u64);
+        created
+    }
+
+    /// Match one DID against all enabled subscriptions (synchronous
+    /// interactive path; the async batch path is the transmogrifier).
+    pub fn match_subscriptions(&self, did_key: &DidKey) -> Result<Vec<u64>> {
+        self.get_did(did_key)?;
+        Ok(self.transmogrify_batch(std::slice::from_ref(did_key)))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::metaexpr::parse;
     use crate::core::rse::Rse;
     use crate::core::Catalog;
 
@@ -192,9 +241,8 @@ mod tests {
     fn raw_filter() -> SubscriptionFilter {
         SubscriptionFilter {
             scopes: vec!["data18".into()],
-            name_pattern: Some("^raw\\.".into()),
             did_types: vec![],
-            meta: BTreeMap::from([("datatype".to_string(), "RAW".to_string())]),
+            expr: Some(parse("name=raw.* AND datatype=RAW").unwrap()),
         }
     }
 
@@ -221,18 +269,32 @@ mod tests {
         f.scopes = vec!["mc20".into()];
         assert!(!f.matches(&did));
         // wrong meta
-        let mut f = raw_filter();
-        f.meta.insert("datatype".into(), "AOD".into());
+        let f = SubscriptionFilter { scopes: vec!["data18".into()], ..Default::default() }
+            .with_expr("datatype=AOD")
+            .unwrap();
         assert!(!f.matches(&did));
-        // wrong name
-        let mut f = raw_filter();
-        f.name_pattern = Some("^aod\\.".into());
+        // wrong name glob
+        let f = SubscriptionFilter { scopes: vec!["data18".into()], ..Default::default() }
+            .with_expr("name=aod.*")
+            .unwrap();
         assert!(!f.matches(&did));
+        // typed predicates reach the engine: run-number window
+        c.set_metadata(&key, "run", "358031").unwrap();
+        let did = c.get_did(&key).unwrap();
+        let f = SubscriptionFilter::default().with_expr("run>=358000 AND run<359000").unwrap();
+        assert!(f.matches(&did));
         // files don't match by default (datasets only)
         c.add_file("data18", "raw.file", "root", 1, "x", None).unwrap();
-        let mut fdid = c.get_did(&DidKey::new("data18", "raw.file")).unwrap();
-        fdid.meta.insert("datatype".into(), "RAW".into());
+        let fkey = DidKey::new("data18", "raw.file");
+        c.set_metadata(&fkey, "datatype", "RAW").unwrap();
+        let fdid = c.get_did(&fkey).unwrap();
         assert!(!raw_filter().matches(&fdid));
+        // ...unless the filter opts into files
+        let mut f = raw_filter();
+        f.did_types = vec![DidType::File];
+        assert!(f.matches(&fdid));
+        // malformed expressions surface at definition time
+        assert!(SubscriptionFilter::default().with_expr("datatype=").is_err());
     }
 
     #[test]
@@ -250,7 +312,30 @@ mod tests {
         assert!(rule.subscription_id.is_some());
         // Re-matching does not duplicate.
         assert!(c.match_subscriptions(&key).unwrap().is_empty());
-        assert_eq!(c.subscriptions.get(&created[0].min(u64::MAX)).is_none(), true);
+    }
+
+    #[test]
+    fn batch_matching_sweeps_many_dids_at_once() {
+        let c = catalog();
+        c.add_subscription("raw-to-tape", "root", raw_filter(), vec![tape_rule()]).unwrap();
+        let mut keys = Vec::new();
+        for i in 0..6 {
+            let name = format!("raw.{i:03}");
+            c.add_dataset("data18", &name, "root").unwrap();
+            let key = DidKey::new("data18", &name);
+            if i % 2 == 0 {
+                c.set_metadata(&key, "datatype", "RAW").unwrap();
+            }
+            keys.push(key);
+        }
+        // duplicate keys in the batch must not double-match
+        keys.push(keys[0].clone());
+        let created = c.transmogrify_batch(&keys);
+        assert_eq!(created.len(), 3, "only the RAW-tagged half matches");
+        let sub = c.subscriptions.scan(|_| true).remove(0);
+        assert_eq!(sub.matched, 3);
+        // second sweep: idempotent
+        assert!(c.transmogrify_batch(&keys).is_empty());
     }
 
     #[test]

@@ -5,6 +5,8 @@ use std::collections::BTreeMap;
 use crate::common::clock::EpochMs;
 use crate::db::Row;
 
+use super::metaexpr::MetaValue;
+
 /// A Data IDentifier key: the `(scope, name)` tuple of paper §2.2
 /// ("The combination of scope and name must be unique").
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -67,7 +69,7 @@ impl Availability {
 }
 
 /// A DID row: file, dataset, or container.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Did {
     pub key: DidKey,
     pub did_type: DidType,
@@ -88,8 +90,10 @@ pub struct Did {
     /// Suppressed DIDs are hidden from default listings (§2.2).
     pub suppressed: bool,
     pub availability: Availability,
-    /// Generic metadata (paper §2.2 "experiment-internal metadata").
-    pub meta: BTreeMap<String, String>,
+    /// Typed metadata (paper §2.2 "experiment-internal metadata"):
+    /// string / int / float / bool values, mirrored into the catalog's
+    /// per-key inverted index for `meta-expr` discovery queries.
+    pub meta: BTreeMap<String, MetaValue>,
     pub created_at: EpochMs,
     /// Lifetime expiry for the DID itself (undertaker input).
     pub expired_at: Option<EpochMs>,

@@ -3,14 +3,15 @@
 //! * [`Repairer`] — re-evaluates STUCK rules ("rule evaluators, which
 //!   automatically re-evaluate replication rules which are stuck due to
 //!   repeated transfer errors");
-//! * [`Injector`] — matches newly created DIDs against subscriptions
-//!   (the upstream *transmogrifier*);
 //! * [`Undertaker`] — removes expired DIDs.
+//!
+//! Subscription matching (the upstream transmogrifier) lives in
+//! [`crate::daemons::transmogrifier`] — it drains `did-created` events in
+//! batches through the metadata query engine.
 
 use crate::common::clock::EpochMs;
-use crate::core::types::{DidKey, RuleState};
+use crate::core::types::RuleState;
 use crate::db::assigned_to;
-use crate::mq::SubId;
 
 use super::{Ctx, Daemon};
 
@@ -93,52 +94,6 @@ impl Daemon for Repairer {
     }
 }
 
-/// Matches new DIDs against subscriptions by consuming `did-created`
-/// events from the broker (hermes publishes the outbox there).
-pub struct Injector {
-    pub ctx: Ctx,
-    sub: SubId,
-}
-
-impl Injector {
-    pub fn new(ctx: Ctx) -> Self {
-        let sub = ctx.broker.subscribe("rucio.events", Some("did-created"));
-        Injector { ctx, sub }
-    }
-}
-
-impl Daemon for Injector {
-    fn name(&self) -> &'static str {
-        "judge-injector"
-    }
-
-    fn interval_ms(&self) -> i64 {
-        15_000
-    }
-
-    fn tick(&mut self, _now: EpochMs) -> usize {
-        let mut matched = 0;
-        loop {
-            let msgs = self.ctx.broker.poll("rucio.events", self.sub, 500);
-            if msgs.is_empty() {
-                break;
-            }
-            for m in msgs {
-                let (Some(scope), Some(name)) =
-                    (m.payload.opt_str("scope"), m.payload.opt_str("name"))
-                else {
-                    continue;
-                };
-                let key = DidKey::new(scope, name);
-                if let Ok(rules) = self.ctx.catalog.match_subscriptions(&key) {
-                    matched += rules.len();
-                }
-            }
-        }
-        matched
-    }
-}
-
 /// Removes expired DIDs: their rules are deleted, then the DID is erased
 /// (the upstream undertaker).
 pub struct Undertaker {
@@ -185,10 +140,8 @@ impl Daemon for Undertaker {
 mod tests {
     use super::*;
     use crate::core::rules_api::RuleSpec;
-    use crate::core::subscriptions::{SubscriptionFilter, SubscriptionRule};
-    use crate::core::types::{ReplicaState, RequestState};
+    use crate::core::types::{DidKey, ReplicaState, RequestState};
     use crate::daemons::conveyor::tests::{rig, seed_file};
-    use crate::daemons::hermes::Hermes;
 
     fn advance(ctx: &Ctx, ms: i64) -> EpochMs {
         if let crate::common::clock::Clock::Sim(s) = &ctx.catalog.clock {
@@ -229,31 +182,6 @@ mod tests {
         assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Replicating);
         // repair created a fresh queued request
         assert_eq!(cat.requests_by_state.count(&RequestState::Queued), 1);
-    }
-
-    #[test]
-    fn injector_matches_new_datasets_via_events() {
-        let (ctx, cat) = rig();
-        cat.add_subscription(
-            "all-datasets-to-src",
-            "root",
-            SubscriptionFilter { scopes: vec!["data18".into()], ..Default::default() },
-            vec![SubscriptionRule {
-                rse_expression: "SRC-DISK".into(),
-                copies: 1,
-                lifetime_ms: None,
-                activity: "T0 Export".into(),
-            }],
-        )
-        .unwrap();
-        let mut hermes = Hermes::new(ctx.clone());
-        let mut injector = Injector::new(ctx.clone());
-        // create a dataset → did-created event in outbox
-        cat.add_dataset("data18", "raw.stream0", "root").unwrap();
-        hermes.tick(cat.now()); // outbox → broker
-        let n = injector.tick(cat.now());
-        assert_eq!(n, 1, "one subscription rule created");
-        assert_eq!(cat.rules.len(), 1);
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod judge;
 pub mod necromancer;
 pub mod reaper;
 pub mod tracer;
+pub mod transmogrifier;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

@@ -1,0 +1,238 @@
+//! The transmogrifier (paper §2.5 / §3.4 — upstream's subscription
+//! daemon): consumes `did-created` events from the broker in batches,
+//! evaluates every enabled subscription's `meta-expr` filter against the
+//! batch through the metadata query engine, and creates the subscribed
+//! replication rules through the bulk rule path. The asynchronous half
+//! of "after the creation of a DID its metadata is matched with the
+//! filter of all subscriptions".
+
+use crate::common::clock::EpochMs;
+use crate::core::types::DidKey;
+use crate::db::{assigned_to, shard_hash};
+use crate::mq::SubId;
+
+use super::{Ctx, Daemon};
+
+pub struct Transmogrifier {
+    pub ctx: Ctx,
+    pub instance: String,
+    sub: SubId,
+    /// Events drained per broker poll — one catalog sweep per batch, so
+    /// N new DIDs cost one subscription-table snapshot, not N.
+    pub batch: usize,
+    /// Events hash-assigned to *peer* instances, retained here because
+    /// polling consumed them from this instance's subscription. If the
+    /// peer dies before processing its own copy, its heartbeat expires
+    /// within the TTL, the ring rebalances onto us, and we match these
+    /// from the buffer — at-least-once across failover (the sweep is
+    /// idempotent, so redundant processing is harmless). Entries older
+    /// than [`Transmogrifier::defer_horizon_ms`] are dropped: by then a
+    /// live peer has processed its copy, or we already took over.
+    deferred: Vec<(EpochMs, DidKey)>,
+    defer_horizon_ms: i64,
+}
+
+impl Transmogrifier {
+    pub fn new(ctx: Ctx, instance: &str) -> Self {
+        let batch = ctx.catalog.cfg.get_i64("transmogrifier", "batch", 500) as usize;
+        let ttl = ctx
+            .catalog
+            .cfg
+            .get_duration_ms("heartbeat", "ttl", crate::daemons::heartbeat::DEFAULT_TTL_MS);
+        let sub = ctx.broker.subscribe("rucio.events", Some("did-created"));
+        Transmogrifier {
+            ctx,
+            instance: instance.to_string(),
+            sub,
+            batch,
+            deferred: Vec::new(),
+            defer_horizon_ms: 2 * ttl,
+        }
+    }
+}
+
+impl Daemon for Transmogrifier {
+    fn name(&self) -> &'static str {
+        "transmogrifier"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        15_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        // Every instance sees the whole event stream (each holds its own
+        // broker subscription), so the §3.6 hash partition decides which
+        // DIDs *this* instance matches — otherwise two instances would
+        // race the idempotency check into duplicate subscription rules.
+        let (worker, n_workers) =
+            self.ctx.heartbeats.beat("transmogrifier", &self.instance, now);
+        let mut pending = std::mem::take(&mut self.deferred);
+        loop {
+            let msgs = self.ctx.broker.poll("rucio.events", self.sub, self.batch.max(1));
+            if msgs.is_empty() {
+                break;
+            }
+            pending.extend(msgs.iter().filter_map(|m| {
+                let scope = m.payload.opt_str("scope")?;
+                let name = m.payload.opt_str("name")?;
+                Some((now, DidKey::new(scope, name)))
+            }));
+        }
+        // Split by ring assignment: ours is matched now, a live peer's
+        // share goes back to the buffer (it owns its own copy) until the
+        // ring rebalances onto us or the horizon proves it handled.
+        let mut mine = Vec::new();
+        for (seen_at, key) in pending {
+            if assigned_to(shard_hash(key.to_string().as_bytes()), worker, n_workers) {
+                mine.push(key);
+            } else if now - seen_at < self.defer_horizon_ms {
+                self.deferred.push((seen_at, key));
+            }
+        }
+        // Sweep in bounded chunks so an outage backlog costs many small
+        // catalog batches, not one unbounded stop-the-world sweep.
+        let cat = &self.ctx.catalog;
+        let mut created = 0;
+        for chunk in mine.chunks(self.batch.max(1)) {
+            created += cat.transmogrify_batch(chunk).len();
+        }
+        cat.metrics.incr("transmogrifier.rules_created", created as u64);
+        created
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::metaexpr::parse;
+    use crate::core::subscriptions::{SubscriptionFilter, SubscriptionRule};
+    use crate::daemons::conveyor::tests::rig;
+    use crate::daemons::hermes::Hermes;
+
+    fn src_rule() -> SubscriptionRule {
+        SubscriptionRule {
+            rse_expression: "SRC-DISK".into(),
+            copies: 1,
+            lifetime_ms: None,
+            activity: "T0 Export".into(),
+        }
+    }
+
+    #[test]
+    fn matches_new_datasets_via_events() {
+        let (ctx, cat) = rig();
+        cat.add_subscription(
+            "all-datasets-to-src",
+            "root",
+            SubscriptionFilter { scopes: vec!["data18".into()], ..Default::default() },
+            vec![src_rule()],
+        )
+        .unwrap();
+        let mut hermes = Hermes::new(ctx.clone());
+        let mut trans = Transmogrifier::new(ctx.clone(), "t1");
+        // create a dataset → did-created event in outbox
+        cat.add_dataset("data18", "raw.stream0", "root").unwrap();
+        hermes.tick(cat.now()); // outbox → broker
+        let n = trans.tick(cat.now());
+        assert_eq!(n, 1, "one subscription rule created");
+        assert_eq!(cat.rules.len(), 1);
+        // re-ticking with no new events creates nothing
+        assert_eq!(trans.tick(cat.now()), 0);
+    }
+
+    #[test]
+    fn failover_replays_a_dead_peers_share_after_ttl() {
+        let (ctx, cat) = rig();
+        cat.add_subscription(
+            "all-datasets-to-src",
+            "root",
+            SubscriptionFilter { scopes: vec!["data18".into()], ..Default::default() },
+            vec![src_rule()],
+        )
+        .unwrap();
+        let mut t1 = Transmogrifier::new(ctx.clone(), "t1");
+        let mut t2 = Transmogrifier::new(ctx.clone(), "t2");
+        t1.tick(cat.now());
+        t2.tick(cat.now()); // ring of 2
+        let mut hermes = Hermes::new(ctx.clone());
+        for i in 0..12 {
+            cat.add_dataset("data18", &format!("ds.{i:02}"), "root").unwrap();
+        }
+        hermes.tick(cat.now());
+        // t2 crashes before processing: t1 matches only its own share and
+        // defers the peer's (already consumed from t1's subscription)
+        let c1 = t1.tick(cat.now());
+        assert!(c1 > 0 && c1 < 12, "t1 owns a strict share: {c1}");
+        assert_eq!(cat.rules.len(), c1);
+        // t2's heartbeat expires → the ring rebalances onto t1, which
+        // replays the deferred events: nothing is lost
+        let now = if let crate::common::clock::Clock::Sim(s) = &cat.clock {
+            s.advance(crate::daemons::heartbeat::DEFAULT_TTL_MS + 1_000);
+            cat.now()
+        } else {
+            unreachable!("test rig uses a sim clock")
+        };
+        let c2 = t1.tick(now);
+        assert_eq!(c1 + c2, 12, "the dead peer's share is replayed");
+        assert_eq!(cat.rules.len(), 12);
+    }
+
+    #[test]
+    fn two_instances_partition_the_stream_without_duplicates() {
+        let (ctx, cat) = rig();
+        cat.add_subscription(
+            "all-datasets-to-src",
+            "root",
+            SubscriptionFilter { scopes: vec!["data18".into()], ..Default::default() },
+            vec![src_rule()],
+        )
+        .unwrap();
+        let mut t1 = Transmogrifier::new(ctx.clone(), "t1");
+        let mut t2 = Transmogrifier::new(ctx.clone(), "t2");
+        // both instances heartbeat before any events flow → 2-way ring
+        t1.tick(cat.now());
+        t2.tick(cat.now());
+        let mut hermes = Hermes::new(ctx.clone());
+        for i in 0..12 {
+            cat.add_dataset("data18", &format!("ds.{i:02}"), "root").unwrap();
+        }
+        hermes.tick(cat.now());
+        let c1 = t1.tick(cat.now());
+        let c2 = t2.tick(cat.now());
+        assert_eq!(c1 + c2, 12, "the hash partition covers every DID exactly once");
+        assert_eq!(cat.rules.len(), 12, "no duplicate subscription rules");
+        assert!(c1 > 0 && c2 > 0, "both instances own a share: {c1}/{c2}");
+    }
+
+    #[test]
+    fn batch_of_events_matches_in_one_sweep() {
+        let (ctx, cat) = rig();
+        cat.add_subscription(
+            "raw-to-src",
+            "root",
+            SubscriptionFilter {
+                scopes: vec!["data18".into()],
+                did_types: vec![],
+                expr: Some(parse("datatype=RAW").unwrap()),
+            },
+            vec![src_rule()],
+        )
+        .unwrap();
+        let mut hermes = Hermes::new(ctx.clone());
+        let mut trans = Transmogrifier::new(ctx.clone(), "t1");
+        for i in 0..10 {
+            let name = format!("raw.{i:03}");
+            cat.add_dataset("data18", &name, "root").unwrap();
+            let key = crate::core::types::DidKey::new("data18", &name);
+            if i < 7 {
+                cat.set_metadata(&key, "datatype", "RAW").unwrap();
+            }
+        }
+        hermes.tick(cat.now());
+        // all 10 events drain in one tick; only the 7 RAW ones match
+        assert_eq!(trans.tick(cat.now()), 7);
+        assert_eq!(cat.rules.len(), 7);
+        assert_eq!(cat.metrics.counter("transmogrifier.rules_created"), 7);
+    }
+}

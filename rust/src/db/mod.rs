@@ -28,6 +28,10 @@
 //!   registered maintenance hooks (the "targeted indexes on most tables"
 //!   of §3.6). [`Table::add_index`] back-fills from live rows, so indexes
 //!   may be attached to non-empty tables.
+//! * [`MultiIndex`] — the inverted-index variant: one row posts under
+//!   many index keys (a DID under each of its metadata `(key, value)`
+//!   pairs), with ordered range lookups for the query planner's
+//!   comparison predicates.
 //! * history — optional append-only log of mutations per table (the
 //!   "storing of deleted rows in historical tables" helper of §3.6).
 //! * [`shard_hash`] / [`assigned_to`] — the hash-based work partitioning
@@ -46,7 +50,9 @@
 
 pub mod table;
 
-pub use table::{Batch, BatchOp, BatchSummary, Index, Op, Page, Row, Table, DEFAULT_SHARDS};
+pub use table::{
+    Batch, BatchOp, BatchSummary, Index, MultiIndex, Op, Page, Row, Table, DEFAULT_SHARDS,
+};
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

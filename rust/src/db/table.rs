@@ -188,14 +188,27 @@ impl<V: Row> Table<V> {
     where
         IK: Ord + Clone + Send + Sync + 'static,
     {
+        self.attach_maint(index.maint.clone())
+    }
+
+    /// Attach a multi-key (inverted) index — same back-fill and liveness
+    /// guarantees as [`Table::add_index`].
+    pub fn add_multi_index<IK>(&self, index: &MultiIndex<V, IK>) -> Result<()>
+    where
+        IK: Ord + Clone + Send + Sync + 'static,
+    {
+        self.attach_maint(index.maint.clone())
+    }
+
+    fn attach_maint(&self, maint: Arc<dyn IndexMaint<V>>) -> Result<()> {
         let guards: Vec<_> = self.shards.iter().map(|s| s.write().unwrap()).collect();
         let mut indexes = self.indexes.write().unwrap();
         for g in &guards {
             for row in g.rows.values() {
-                index.maint.on_insert(row);
+                maint.on_insert(row);
             }
         }
-        indexes.push(index.maint.clone());
+        indexes.push(maint);
         Ok(())
     }
 
@@ -255,6 +268,18 @@ impl<V: Row> Table<V> {
 
     pub fn get(&self, key: &V::Key) -> Option<V> {
         self.shards[self.shard_of(key)].read().unwrap().rows.get(key).cloned()
+    }
+
+    /// Project a row under the shard read lock without cloning the whole
+    /// row — the cheap read path when only one field is needed (e.g.
+    /// returning a DID's metadata map without copying every column).
+    pub fn read<R, F: FnOnce(&V) -> R>(&self, key: &V::Key, f: F) -> Option<R> {
+        self.shards[self.shard_of(key)]
+            .read()
+            .unwrap()
+            .rows
+            .get(key)
+            .map(f)
     }
 
     pub fn contains(&self, key: &V::Key) -> bool {
@@ -760,6 +785,146 @@ impl<V: Row, IK: Ord + Clone + Send + Sync + 'static> Index<V, IK> {
     }
 }
 
+struct MultiIndexMaintImpl<V: Row, IK: Ord> {
+    extract: Box<dyn Fn(&V) -> Vec<IK> + Send + Sync>,
+    inner: RwLock<IndexInner<V, IK>>,
+}
+
+impl<V: Row, IK: Ord + Clone + Send + Sync + 'static> IndexMaint<V> for MultiIndexMaintImpl<V, IK> {
+    fn on_insert(&self, row: &V) {
+        let iks = (self.extract)(row);
+        if iks.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.write().unwrap();
+        let pk = row.key();
+        for ik in iks {
+            inner.map.entry(ik).or_default().insert(pk.clone());
+        }
+    }
+
+    fn on_remove(&self, row: &V) {
+        let iks = (self.extract)(row);
+        if iks.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.write().unwrap();
+        let pk = row.key();
+        for ik in iks {
+            if let Some(set) = inner.map.get_mut(&ik) {
+                set.remove(&pk);
+                if set.is_empty() {
+                    inner.map.remove(&ik);
+                }
+            }
+        }
+    }
+}
+
+/// A multi-key secondary index: one row maps to *many* index keys — the
+/// inverted-index shape (paper §2.2 metadata: each `(scope, key, value)`
+/// triple of a DID's metadata map posts the DID under that triple).
+/// Maintained by the owning table exactly like [`Index`], across every
+/// mutation path (row-at-a-time, batches, `update_bulk`), so entries can
+/// never go stale relative to the rows.
+pub struct MultiIndex<V: Row, IK: Ord + Clone + Send + Sync + 'static> {
+    maint: Arc<MultiIndexMaintImpl<V, IK>>,
+}
+
+impl<V: Row, IK: Ord + Clone + Send + Sync + 'static> MultiIndex<V, IK> {
+    pub fn new<F: Fn(&V) -> Vec<IK> + Send + Sync + 'static>(extract: F) -> Self {
+        MultiIndex {
+            maint: Arc::new(MultiIndexMaintImpl {
+                extract: Box::new(extract),
+                inner: RwLock::new(IndexInner { map: BTreeMap::new() }),
+            }),
+        }
+    }
+
+    /// Primary keys posted under exactly this index key, in key order.
+    pub fn get(&self, ik: &IK) -> Vec<V::Key> {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .get(ik)
+            .map(|s| s.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Rows posted under this index key.
+    pub fn count(&self, ik: &IK) -> usize {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .get(ik)
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// Primary keys for index keys inside the given bounds, in index-key
+    /// order (the planner's range-predicate path, e.g. `run >= 358000`).
+    pub fn range_bounds(&self, lo: Bound<&IK>, hi: Bound<&IK>) -> Vec<V::Key> {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .range((lo, hi))
+            .flat_map(|(_, s)| s.iter().cloned())
+            .collect()
+    }
+
+    /// Rows posted under index keys inside the bounds (planner selectivity
+    /// estimate; O(distinct index keys in range)).
+    pub fn count_range(&self, lo: Bound<&IK>, hi: Bound<&IK>) -> usize {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .range((lo, hi))
+            .map(|(_, s)| s.len())
+            .sum()
+    }
+
+    /// Number of distinct index keys.
+    pub fn cardinality(&self) -> usize {
+        self.maint.inner.read().unwrap().map.len()
+    }
+
+    /// Total postings (row, index-key) pairs.
+    pub fn len(&self) -> usize {
+        self.maint.inner.read().unwrap().map.values().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Distinct index keys (snapshot).
+    pub fn index_keys(&self) -> Vec<IK> {
+        self.maint.inner.read().unwrap().map.keys().cloned().collect()
+    }
+
+    /// `(index key, posting count)` pairs in index-key order — one pass
+    /// under one read lock, so reports see a consistent snapshot instead
+    /// of paying a lock round-trip per key.
+    pub fn key_counts(&self) -> Vec<(IK, usize)> {
+        self.maint
+            .inner
+            .read()
+            .unwrap()
+            .map
+            .iter()
+            .map(|(k, s)| (k.clone(), s.len()))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1022,6 +1187,72 @@ mod tests {
         assert_eq!(counter(), 30);
         t.upsert(item(7, "done", "B"), 2); // replace: no growth
         assert_eq!(counter(), 30);
+    }
+
+    #[test]
+    fn read_projects_without_whole_row() {
+        let t: Table<Item> = Table::new("items");
+        t.insert(item(1, "new", "SITE-A"), 0).unwrap();
+        assert_eq!(t.read(&1, |r| r.rse.clone()), Some("SITE-A".to_string()));
+        assert_eq!(t.read(&1, |r| r.state), Some("new"));
+        assert_eq!(t.read(&2, |r| r.state), None);
+    }
+
+    #[test]
+    fn multi_index_tracks_all_mutation_paths() {
+        // index every character of `rse` — one row, many postings
+        let t: Table<Item> = Table::new("items").with_shards(3);
+        let by_char: MultiIndex<Item, char> =
+            MultiIndex::new(|r: &Item| r.rse.chars().collect());
+        t.add_multi_index(&by_char).unwrap();
+
+        t.insert(item(1, "new", "ab"), 0).unwrap();
+        t.insert(item(2, "new", "bc"), 0).unwrap();
+        assert_eq!(by_char.get(&'a'), vec![1]);
+        assert_eq!(by_char.get(&'b'), vec![1, 2]);
+        assert_eq!(by_char.count(&'c'), 1);
+        assert_eq!(by_char.len(), 4);
+        assert_eq!(by_char.cardinality(), 3);
+
+        // update refreshes every posting
+        t.update(&1, 1, |r| r.rse = "cd".into());
+        assert_eq!(by_char.get(&'a'), Vec::<u64>::new());
+        assert_eq!(by_char.get(&'c'), vec![1, 2]);
+        assert_eq!(by_char.get(&'d'), vec![1]);
+
+        // remove cleans all postings, empty posting sets disappear
+        t.remove(&2, 2);
+        assert_eq!(by_char.get(&'b'), Vec::<u64>::new());
+        assert_eq!(by_char.cardinality(), 2);
+
+        // batch ops maintain it too
+        let mut batch = Batch::new();
+        batch.insert(item(3, "new", "xy"));
+        batch.upsert(item(1, "new", "x"));
+        batch.remove(3);
+        t.apply(batch, 3).unwrap();
+        assert_eq!(by_char.get(&'x'), vec![1]);
+        assert_eq!(by_char.count(&'y'), 0);
+        assert_eq!(by_char.count(&'d'), 0);
+    }
+
+    #[test]
+    fn multi_index_backfills_and_ranges() {
+        let t: Table<Item> = Table::new("items");
+        t.insert(item(1, "new", "ac"), 0).unwrap();
+        t.insert(item(2, "new", "ce"), 0).unwrap();
+        let by_char: MultiIndex<Item, char> =
+            MultiIndex::new(|r: &Item| r.rse.chars().collect());
+        t.add_multi_index(&by_char).unwrap();
+        assert_eq!(by_char.len(), 4, "back-fill saw pre-existing rows");
+        assert_eq!(by_char.key_counts(), vec![('a', 1), ('c', 2), ('e', 1)]);
+        // range queries over index keys
+        let keys = by_char.range_bounds(Bound::Included(&'b'), Bound::Included(&'d'));
+        assert_eq!(keys, vec![1, 2]); // 'c' posts both
+        assert_eq!(by_char.count_range(Bound::Excluded(&'c'), Bound::Unbounded), 1); // 'e'
+        // empty extraction is simply not indexed
+        t.insert(item(3, "new", ""), 1).unwrap();
+        assert_eq!(by_char.len(), 4);
     }
 
     #[test]

@@ -19,11 +19,22 @@
 //!   `cursor`, percent-encoded as given; malformed cursors are 400).
 //! * `GET /dids/{scope}?cursor=&limit=` — cursor-paginated per-scope DID
 //!   listing (name-ordered); same `x-rucio-next-cursor` contract.
+//!
+//! Metadata & discovery surface (paper §2.2):
+//! * `GET /dids/{scope}?filter=<meta-expr>` — cursor NDJSON of the DIDs
+//!   matching a typed metadata filter (`datatype=RAW AND run>=358000
+//!   AND name=data18*`); answered through the query planner (inverted
+//!   index when an equality/range conjunct allows), malformed filters
+//!   are 400.
+//! * `GET /meta/{scope}/{name...}` — the DID's typed metadata map.
+//! * `POST /meta/{scope}/{name...}` — set metadata pairs from a JSON
+//!   object (JSON types map onto metadata types).
 
 use std::sync::Arc;
 
 use crate::common::error::{Result, RucioError};
 use crate::core::accounts_api::Action;
+use crate::core::metaexpr::{self, MetaValue};
 use crate::core::replicas_api::ReplicaSpec;
 use crate::core::rules_api::RuleSpec;
 use crate::core::types::*;
@@ -126,6 +137,27 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                 Some("CONTAINER") => Some(DidType::Container),
                 _ => None,
             };
+            // Discovery variant: a meta-expr filter answered through the
+            // query planner, cursor-paginated (every page is a filtered
+            // page of exactly `limit` matches until exhaustion).
+            if let Some(filter) = req.query_get("filter") {
+                let mut expr = metaexpr::parse(filter)?;
+                if let Some(t) = did_type {
+                    expr = metaexpr::MetaExpr::And(
+                        Box::new(expr),
+                        Box::new(metaexpr::MetaExpr::TypeIs(t)),
+                    );
+                }
+                let limit = parse_limit(req);
+                let (rows, next) =
+                    cat.query_dids_page(scope, &expr, req.query_get("cursor"), limit);
+                let mut resp = Response::ndjson(200, rows.iter().map(did_json));
+                if let Some(n) = next {
+                    resp = resp
+                        .with_header("x-rucio-next-cursor", &crate::httpd::percent_encode(&n));
+                }
+                return Ok(resp);
+            }
             // Cursor-paginated variant: name-ordered pages with a resume
             // cursor in x-rucio-next-cursor. The type filter applies to
             // each page, so a filtered page may carry fewer than `limit`
@@ -160,6 +192,38 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
             Ok(Response::json(200, &did_json(&d)))
         })
     });
+    // DID metadata (own prefix: the DID routes' greedy name tail would
+    // swallow a `/meta` suffix).
+    let cat = catalog.clone();
+    r.get("/meta/{scope}/{name...}", move |req| {
+        with_auth(&cat, req, |cat, _| {
+            let key = DidKey::new(req.param("scope")?, req.param("name")?);
+            let meta = cat.get_metadata(&key)?;
+            let mut obj = Json::obj();
+            for (k, v) in &meta {
+                obj.set(k, meta_value_json(v));
+            }
+            Ok(Response::json(200, &obj))
+        })
+    });
+    let cat = catalog.clone();
+    r.post("/meta/{scope}/{name...}", move |req| {
+        with_auth(&cat, req, |cat, account| {
+            let scope = req.param("scope")?;
+            let key = DidKey::new(scope, req.param("name")?);
+            cat.check_permission(account, Action::AddDid, Some(scope))?;
+            let body = req.body_json()?;
+            let obj = body
+                .as_obj()
+                .ok_or_else(|| RucioError::InvalidValue("metadata body must be an object".into()))?;
+            let mut pairs = Vec::with_capacity(obj.len());
+            for (k, v) in obj {
+                pairs.push((k.clone(), json_to_meta_value(v)?));
+            }
+            cat.set_metadata_bulk(&key, pairs)?;
+            Ok(Response::text(201, "Created"))
+        })
+    });
     let cat = catalog.clone();
     r.post("/attachments/{scope}/{name...}", move |req| {
         with_auth(&cat, req, |cat, account| {
@@ -168,8 +232,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
             let body = req.body_json()?;
             let child = DidKey::new(body.req_str("child_scope")?, body.req_str("child_name")?);
             cat.attach(&parent, &child)?;
-            // async subscription matching happens via the injector; for
-            // interactive use we match synchronously too (idempotent)
+            // async subscription matching happens via the transmogrifier;
+            // for interactive use we match synchronously too (idempotent)
             let _ = cat.match_subscriptions(&parent);
             Ok(Response::text(201, "Created"))
         })
@@ -298,19 +362,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                 }
                 specs.push(spec);
             }
-            let mut ids: Vec<u64> = Vec::with_capacity(specs.len());
-            for spec in specs {
-                match cat.add_rule(spec) {
-                    Ok(id) => ids.push(id),
-                    Err(e) => {
-                        for id in ids {
-                            let _ = cat.delete_rule(id);
-                        }
-                        return Err(e);
-                    }
-                }
-            }
-            let ids: Vec<Json> = ids.into_iter().map(Json::from).collect();
+            let ids: Vec<Json> = cat.add_rules_bulk(specs)?.into_iter().map(Json::from).collect();
             Ok(Response::json(201, &Json::obj().with("rule_ids", Json::Arr(ids))))
         })
     });
@@ -526,6 +578,32 @@ where
     }
 }
 
+/// Typed metadata → JSON (ints stay integral; JSON numbers are f64, so
+/// integer fidelity holds for |n| ≤ 2^53 — DID metadata in practice).
+fn meta_value_json(v: &MetaValue) -> Json {
+    match v {
+        MetaValue::Bool(b) => Json::Bool(*b),
+        MetaValue::Int(i) => Json::Num(*i as f64),
+        MetaValue::Float(f) => Json::Num(*f),
+        MetaValue::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+/// JSON → typed metadata: JSON types carry the intent directly (a JSON
+/// string is a string even if it looks numeric — no lexical guessing on
+/// this surface).
+fn json_to_meta_value(v: &Json) -> Result<MetaValue> {
+    match v {
+        Json::Bool(b) => Ok(MetaValue::Bool(*b)),
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e18 => Ok(MetaValue::Int(*n as i64)),
+        Json::Num(n) => Ok(MetaValue::Float(*n)),
+        Json::Str(s) => Ok(MetaValue::Str(s.clone())),
+        other => Err(RucioError::InvalidValue(format!(
+            "metadata values must be scalar, got {other:?}"
+        ))),
+    }
+}
+
 fn did_json(d: &Did) -> Json {
     Json::obj()
         .with("scope", d.key.scope.as_str())
@@ -719,6 +797,72 @@ mod tests {
         }
         assert_eq!(seen as usize, cat.replicas.len());
         assert_eq!(pages, 4, "25 replicas / 7 per page");
+    }
+
+    #[test]
+    fn metadata_filter_discovery_over_http() {
+        let (srv, cat) = server();
+        let alice = RucioClient::connect(&srv.url(), "alice", "alice", "pw").unwrap();
+        for i in 0..20 {
+            let name = format!("ds{i:03}");
+            alice.add_dataset("user.alice", &name).unwrap();
+            alice
+                .set_metadata(
+                    "user.alice",
+                    &name,
+                    &Json::obj()
+                        .with("datatype", if i % 2 == 0 { "RAW" } else { "AOD" })
+                        .with("run", 358000 + i as u64),
+                )
+                .unwrap();
+        }
+        // typed metadata round-trips through GET /meta
+        let meta = alice.get_metadata("user.alice", "ds003").unwrap();
+        assert_eq!(meta.req_str("datatype").unwrap(), "AOD");
+        assert_eq!(meta.get("run").and_then(Json::as_i64), Some(358003));
+        assert_eq!(
+            cat.get_metadata(&DidKey::new("user.alice", "ds003")).unwrap()["run"],
+            crate::core::metaexpr::MetaValue::Int(358003)
+        );
+
+        // filtered discovery: equality + run window, cursor-paged
+        let filter = "datatype=RAW AND run>=358008 AND run<358016";
+        let mut names = Vec::new();
+        let mut cursor: Option<String> = None;
+        let mut pages = 0;
+        loop {
+            let (rows, next) = alice
+                .list_dids_filter_page("user.alice", filter, cursor.as_deref(), 3)
+                .unwrap();
+            names.extend(rows.iter().map(|j| j.req_str("name").unwrap().to_string()));
+            pages += 1;
+            match next {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+            assert!(pages < 20);
+        }
+        // runs 358008..358015, even offsets → ds008 ds010 ds012 ds014
+        let expect: Vec<String> = (8..16).step_by(2).map(|i| format!("ds{i:03}")).collect();
+        assert_eq!(names, expect);
+        assert_eq!(pages, 2, "4 matches / 3 per page + exhaustion");
+        // the planner answered from the inverted index
+        assert!(cat.metrics.counter("dids.query.indexed") >= 1);
+
+        // malformed filter is a 400, not a 500
+        let raw = crate::httpd::HttpClient::new(&srv.url());
+        let tok = alice.token().to_string();
+        raw.set_header("x-rucio-auth-token", &tok);
+        let resp = raw.get("/dids/user.alice?filter=run%3E%3DRAW").unwrap();
+        assert_eq!(resp.status, 400);
+        // non-scalar metadata value rejected
+        let resp = raw
+            .post_json(
+                "/meta/user.alice/ds000",
+                &Json::obj().with("bad", Json::Arr(vec![Json::Num(1.0)])),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 400);
     }
 
     #[test]

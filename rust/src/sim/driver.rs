@@ -218,7 +218,7 @@ impl Driver {
         use crate::daemons::*;
         vec![
             Box::new(hermes::Hermes::new(ctx.clone())),
-            Box::new(judge::Injector::new(ctx.clone())),
+            Box::new(transmogrifier::Transmogrifier::new(ctx.clone(), "trans-1")),
             Box::new(conveyor::Submitter::new(ctx.clone(), "sub-1")),
             Box::new(conveyor::Receiver::new(ctx.clone())),
             Box::new(conveyor::Poller::new(ctx.clone(), "poll-1")),

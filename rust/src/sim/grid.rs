@@ -173,9 +173,11 @@ pub fn build_grid(spec: &GridSpec, clock: Clock, cfg: Config) -> Ctx {
             "tzero",
             SubscriptionFilter {
                 scopes: vec!["data18".into()],
-                name_pattern: None,
                 did_types: vec![],
-                meta: [("datatype".to_string(), "RAW".to_string())].into(),
+                expr: Some(
+                    crate::core::metaexpr::parse("datatype=RAW")
+                        .expect("static subscription filter parses"),
+                ),
             },
             vec![
                 SubscriptionRule {

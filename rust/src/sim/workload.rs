@@ -4,10 +4,15 @@
 
 use crate::common::clock::{DAY_MS, EpochMs, HOUR_MS};
 use crate::common::prng::Prng;
+use crate::core::metaexpr::{self, MetaValue};
 use crate::core::rules_api::RuleSpec;
 use crate::core::types::{DidKey, ReplicaState};
 use crate::daemons::Ctx;
 use crate::storagesim::synthetic_adler32_for;
+
+/// Detector streams tagged onto RAW datasets (metadata the discovery
+/// queries select on).
+const STREAMS: &[&str] = &["physics_Main", "physics_Late", "express_express"];
 
 /// Workload scale knobs (all per simulated day unless noted).
 #[derive(Debug, Clone)]
@@ -22,6 +27,10 @@ pub struct WorkloadSpec {
     pub derivations_per_day: usize,
     /// User analysis accesses per day (traces; Zipf over recent AODs).
     pub analysis_accesses_per_day: usize,
+    /// Data-discovery queries per day (`meta-expr` filters over the
+    /// namespace — the paper's metadata-driven lookup traffic; read-only
+    /// but exercises the query planner under the live mutation load).
+    pub discovery_queries_per_day: usize,
     /// AOD rule lifetime (drives the deletion workload).
     pub aod_lifetime_ms: i64,
     /// Days with boosted analysis (conference crunch, paper §5.3:
@@ -39,6 +48,7 @@ impl Default for WorkloadSpec {
             median_file_bytes: 2_000_000_000, // 2 GB
             derivations_per_day: 8,
             analysis_accesses_per_day: 120,
+            discovery_queries_per_day: 48,
             aod_lifetime_ms: 20 * DAY_MS,
             burst: None,
             seed: 7,
@@ -54,11 +64,13 @@ pub struct Workload {
     aod_count: u64,
     /// Recent AOD datasets (analysis targets), most recent last.
     pub aods: Vec<DidKey>,
-    /// Recent RAW datasets awaiting derivation.
-    raws: Vec<DidKey>,
+    /// Recent RAW datasets awaiting derivation, with their run numbers
+    /// (derivations inherit the run; discovery filters select on it).
+    raws: Vec<(DidKey, i64)>,
     carry_raw: f64,
     carry_der: f64,
     carry_ana: f64,
+    carry_disc: f64,
 }
 
 impl Workload {
@@ -74,6 +86,7 @@ impl Workload {
             carry_raw: 0.0,
             carry_der: 0.0,
             carry_ana: 0.0,
+            carry_disc: 0.0,
         }
     }
 
@@ -103,6 +116,13 @@ impl Workload {
             self.carry_ana -= 1.0;
             self.analyze(ctx, now);
         }
+        // Discovery surges with analysis: users find data before reading
+        // it (the conference-crunch listing storms of §5.3).
+        self.carry_disc += self.spec.discovery_queries_per_day as f64 * frac * mult;
+        while self.carry_disc >= 1.0 {
+            self.carry_disc -= 1.0;
+            self.discover(ctx);
+        }
     }
 
     fn file_size(&mut self) -> u64 {
@@ -120,7 +140,17 @@ impl Workload {
             return;
         }
         let ds = DidKey::new("data18", &ds_name);
-        let _ = cat.set_metadata(&ds, "datatype", "RAW");
+        let run = 358_000 + self.raw_count as i64;
+        let stream = STREAMS[self.rng.range_usize(0, STREAMS.len())];
+        let _ = cat.set_metadata_bulk(
+            &ds,
+            vec![
+                ("datatype".into(), MetaValue::Str("RAW".into())),
+                ("run".into(), MetaValue::Int(run)),
+                ("project".into(), MetaValue::Str("data18".into())),
+                ("stream".into(), MetaValue::Str(stream.into())),
+            ],
+        );
         let t0 = ctx.fleet.get("CERN-PROD");
         for i in 0..self.spec.files_per_dataset {
             let fname = format!("{ds_name}.f{i:04}");
@@ -144,7 +174,7 @@ impl Workload {
                 .with_lifetime(7 * DAY_MS)
                 .with_activity("T0 Export"),
         );
-        self.raws.push(ds);
+        self.raws.push((ds, run));
         if self.raws.len() > 200 {
             self.raws.remove(0);
         }
@@ -157,14 +187,21 @@ impl Workload {
         if self.raws.is_empty() {
             return;
         }
-        let raw = self.raws[self.rng.range_usize(0, self.raws.len())].clone();
+        let (raw, run) = self.raws[self.rng.range_usize(0, self.raws.len())].clone();
         self.aod_count += 1;
         let ds_name = format!("aod.{:06}", self.aod_count);
         if cat.add_dataset("mc20", &ds_name, "prod").is_err() {
             return;
         }
         let ds = DidKey::new("mc20", &ds_name);
-        let _ = cat.set_metadata(&ds, "datatype", "AOD");
+        let _ = cat.set_metadata_bulk(
+            &ds,
+            vec![
+                ("datatype".into(), MetaValue::Str("AOD".into())),
+                ("run".into(), MetaValue::Int(run)), // derivations inherit the run
+                ("project".into(), MetaValue::Str("mc20".into())),
+            ],
+        );
         // processing site: the T1 disk of a random region
         let t1s = cat
             .resolve_rse_expression("tier=1&type=disk")
@@ -240,6 +277,36 @@ impl Workload {
         }
     }
 
+    /// Data discovery: a user resolves a `meta-expr` filter against the
+    /// namespace before reading — list-by-metadata is the dominant
+    /// catalog read pattern once the namespace is large. Filters mix
+    /// indexed equality, run-number ranges, and name globs so both
+    /// planner paths stay hot under live mutation.
+    fn discover(&mut self, ctx: &Ctx) {
+        let cat = &ctx.catalog;
+        let newest_run = 358_000 + self.raw_count as i64;
+        let (scope, filter) = match self.rng.range_usize(0, 5) {
+            0 => ("data18".to_string(), "datatype=RAW".to_string()),
+            1 => {
+                let stream = STREAMS[self.rng.range_usize(0, STREAMS.len())];
+                ("data18".to_string(), format!("datatype=RAW AND stream={stream}"))
+            }
+            2 => {
+                let lo = newest_run - self.rng.range_i64(1, 40);
+                ("mc20".to_string(), format!("datatype=AOD AND run>={lo}"))
+            }
+            3 => {
+                let run = 358_000 + self.rng.range_i64(1, (self.raw_count as i64).max(2));
+                ("data18".to_string(), format!("run={run}"))
+            }
+            _ => ("mc20".to_string(), "name=aod.0* AND type=DATASET".to_string()),
+        };
+        let expr = metaexpr::parse(&filter).expect("workload filters are well-formed");
+        let hits = cat.query_dids(&scope, &expr, false);
+        cat.metrics.incr("discovery.queries", 1);
+        cat.metrics.incr("discovery.hits", hits.len() as u64);
+    }
+
     /// Occasional tape recall campaign (paper §5.3 tape numbers): request
     /// a disk copy of an old RAW dataset whose disk replicas are gone.
     pub fn recall_campaign(&mut self, ctx: &Ctx, _now: EpochMs) {
@@ -247,7 +314,7 @@ impl Workload {
         if self.raws.is_empty() {
             return;
         }
-        let raw = self.raws[self.rng.range_usize(0, self.raws.len() / 2 + 1)].clone();
+        let (raw, _run) = self.raws[self.rng.range_usize(0, self.raws.len() / 2 + 1)].clone();
         let _ = cat.add_rule(
             RuleSpec::new("prod", raw, "tier=1&type=disk", 1)
                 .with_lifetime(7 * DAY_MS)
@@ -283,6 +350,35 @@ mod tests {
         let dids = ctx.catalog.list_dids("data18", Some("raw.*"), None, false);
         assert_eq!(dids.len(), 1 + WorkloadSpec::default().files_per_dataset);
         assert!(ctx.fleet.get("CERN-PROD").unwrap().file_count() > 0);
+        // datasets carry typed metadata for the discovery engine
+        let ds = &wl.raws[0].0;
+        let meta = ctx.catalog.get_metadata(ds).unwrap();
+        assert_eq!(meta["datatype"], MetaValue::Str("RAW".into()));
+        assert_eq!(meta["run"], MetaValue::Int(358_001));
+        assert!(meta.contains_key("stream"));
+    }
+
+    #[test]
+    fn discovery_queries_run_through_the_planner() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        let mut wl = Workload::new(WorkloadSpec::default());
+        for _ in 0..5 {
+            wl.produce_raw(&ctx, 0);
+            wl.derive(&ctx, 0);
+        }
+        for _ in 0..20 {
+            wl.discover(&ctx);
+        }
+        let m = &ctx.catalog.metrics;
+        assert_eq!(m.counter("discovery.queries"), 20);
+        assert!(m.counter("discovery.hits") > 0, "filters find the produced data");
+        assert!(
+            m.counter("dids.query.indexed") > 0,
+            "metadata filters hit the inverted index"
+        );
+        // an AOD run-range filter finds the derivations with inherited runs
+        let expr = metaexpr::parse("datatype=AOD AND run>=358001").unwrap();
+        assert_eq!(ctx.catalog.query_dids("mc20", &expr, false).len(), 5);
     }
 
     #[test]
