@@ -79,6 +79,7 @@ fn main() {
                 bytes,
                 adler32: synthetic_adler32_for(&name, bytes),
                 activity: "Production".into(),
+                priority: 3,
             });
         }
         fts.submit(jobs, now)

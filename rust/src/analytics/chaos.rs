@@ -16,6 +16,8 @@ use crate::daemons::Ctx;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct BacklogSample {
     pub t: EpochMs,
+    /// Requests held back by the throttler's admission control.
+    pub waiting: usize,
     /// Transfer requests waiting for submission.
     pub queued: usize,
     /// Requests in flight at FTS.
@@ -33,7 +35,7 @@ pub struct BacklogSample {
 impl BacklogSample {
     /// Total transfer backlog: everything not yet moved.
     pub fn backlog(&self) -> usize {
-        self.queued + self.submitted + self.retry
+        self.waiting + self.queued + self.submitted + self.retry
     }
 
     /// Capture the current queue state of a deployment.
@@ -41,6 +43,7 @@ impl BacklogSample {
         let cat = &ctx.catalog;
         BacklogSample {
             t: cat.now(),
+            waiting: cat.requests_by_state.count(&RequestState::Waiting),
             queued: cat.requests_by_state.count(&RequestState::Queued),
             submitted: cat.requests_by_state.count(&RequestState::Submitted),
             retry: cat.requests_by_state.count(&RequestState::Retry),

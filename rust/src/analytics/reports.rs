@@ -140,6 +140,58 @@ pub fn metadata_key_stats(catalog: &Catalog) -> Vec<Vec<String>> {
         .collect()
 }
 
+/// Per-activity transfer service report (paper Fig 6 companion): for
+/// every transfer activity, outcome counts, moved volume, and the mean
+/// wait from request creation to its terminal state — the quantities the
+/// throttler's shares trade against each other. Rows:
+/// `[activity, done, failed, live, bytes_done, avg_wait_ms]`.
+pub fn activity_transfer_stats(catalog: &Catalog) -> Vec<Vec<String>> {
+    use crate::core::types::RequestState;
+    struct Acc {
+        done: u64,
+        failed: u64,
+        live: u64,
+        bytes_done: u64,
+        wait_ms_sum: i64,
+    }
+    let mut acc: BTreeMap<String, Acc> = BTreeMap::new();
+    catalog.requests.for_each(|r| {
+        let e = acc.entry(r.activity.clone()).or_insert(Acc {
+            done: 0,
+            failed: 0,
+            live: 0,
+            bytes_done: 0,
+            wait_ms_sum: 0,
+        });
+        match r.state {
+            RequestState::Done => {
+                e.done += 1;
+                e.bytes_done += r.bytes;
+                e.wait_ms_sum += (r.updated_at - r.created_at).max(0);
+            }
+            RequestState::Failed => {
+                e.failed += 1;
+                e.wait_ms_sum += (r.updated_at - r.created_at).max(0);
+            }
+            _ => e.live += 1,
+        }
+    });
+    acc.into_iter()
+        .map(|(activity, a)| {
+            let terminal = a.done + a.failed;
+            let avg_wait = if terminal > 0 { a.wait_ms_sum / terminal as i64 } else { 0 };
+            vec![
+                activity,
+                a.done.to_string(),
+                a.failed.to_string(),
+                a.live.to_string(),
+                a.bytes_done.to_string(),
+                avg_wait.to_string(),
+            ]
+        })
+        .collect()
+}
+
 /// Table-size report off the monitoring registry (paper §4.6: "a probe
 /// regularly checks the database" — queue depths and catalog scale).
 pub fn table_sizes(catalog: &Catalog) -> Vec<Vec<String>> {
@@ -197,6 +249,40 @@ mod tests {
         c.add_dataset("s", "ds", "root").unwrap();
         let unused = unused_datasets(&c, c.now() + 10 * WEEK_MS, default_idle_ms());
         assert_eq!(unused, vec!["s:ds"]);
+    }
+
+    #[test]
+    fn activity_stats_aggregate_outcomes_and_wait() {
+        use crate::core::rse::Rse;
+        use crate::core::rules_api::RuleSpec;
+        use crate::core::types::DidKey;
+        let c = Catalog::new_for_tests();
+        c.add_scope("s", "root").unwrap();
+        c.add_rse(Rse::new("A", c.now())).unwrap();
+        for (i, act) in [(0, "Production"), (1, "Production"), (2, "Analysis")] {
+            let name = format!("f{i}");
+            c.add_file("s", &name, "root", 100, "x", None).unwrap();
+            c.add_rule(
+                RuleSpec::new("root", DidKey::new("s", &name), "A", 1).with_activity(act),
+            )
+            .unwrap();
+        }
+        // one Production done (after a 5s wait), one failed, Analysis live
+        if let crate::common::clock::Clock::Sim(s) = &c.clock {
+            s.advance(5_000);
+        }
+        let reqs = c.requests.scan(|_| true);
+        let prod: Vec<_> = reqs.iter().filter(|r| r.activity == "Production").collect();
+        c.on_transfer_done(prod[0].id).unwrap();
+        for _ in 0..3 {
+            c.on_transfer_failed(prod[1].id, "x").unwrap();
+        }
+        let stats = activity_transfer_stats(&c);
+        let get = |a: &str| stats.iter().find(|r| r[0] == a).unwrap().clone();
+        assert_eq!(get("Production")[1..4], ["1", "1", "0"].map(String::from));
+        assert_eq!(get("Production")[4], "100", "bytes of the done transfer");
+        assert_eq!(get("Production")[5], "5000", "avg wait in ms");
+        assert_eq!(get("Analysis")[1..4], ["0", "0", "1"].map(String::from));
     }
 
     #[test]

@@ -37,6 +37,7 @@ rucio_error! {
     RseNotFound => "RSE not found: ",
     RuleNotFound => "rule not found: ",
     ReplicaNotFound => "replica not found: ",
+    RequestNotFound => "transfer request not found: ",
     SubscriptionNotFound => "subscription not found: ",
     Duplicate => "duplicate: ",
     AccessDenied => "access denied: ",
@@ -76,8 +77,8 @@ impl RucioError {
         use RucioError::*;
         match self {
             DidNotFound(_) | ScopeNotFound(_) | AccountNotFound(_) | RseNotFound(_)
-            | RuleNotFound(_) | ReplicaNotFound(_) | SubscriptionNotFound(_)
-            | SourceNotFound(_) => 404,
+            | RuleNotFound(_) | ReplicaNotFound(_) | RequestNotFound(_)
+            | SubscriptionNotFound(_) | SourceNotFound(_) => 404,
             DidAlreadyExists(_) | Duplicate(_) | TxnConflict(_) => 409,
             AccessDenied(_) => 403,
             CannotAuthenticate(_) => 401,

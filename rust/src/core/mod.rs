@@ -169,7 +169,10 @@ impl Catalog {
         let requests_by_dest = Index::new(|r: &TransferRequest| {
             if matches!(
                 r.state,
-                RequestState::Queued | RequestState::Submitted | RequestState::Retry
+                RequestState::Waiting
+                    | RequestState::Queued
+                    | RequestState::Submitted
+                    | RequestState::Retry
             ) {
                 Some((r.dst_rse.clone(), r.did.clone()))
             } else {

@@ -181,16 +181,22 @@ impl Catalog {
         if due.is_empty() {
             return 0;
         }
-        self.requests
-            .update_bulk(&due, now, |r| {
-                r.state = RequestState::Queued;
+        // State-machine gated: a request canceled (or completed) between
+        // the index snapshot and this commit must not be resurrected.
+        let mut promoted = 0;
+        self.requests.update_bulk(&due, now, |r| {
+            if let Ok(next) = request_transition(r.state, RequestEvent::RetryDue) {
+                r.state = next;
                 r.retry_after = None;
-            })
-            .len()
+                promoted += 1;
+            }
+        });
+        promoted
     }
 
     /// Flip a picked batch of requests to SUBMITTED with their chosen
-    /// source RSE and FTS server, in one commit.
+    /// source RSE and FTS server, in one commit. Only legally submittable
+    /// rows flip (the state machine guards against racing transitions).
     pub fn mark_requests_submitted(&self, picks: &[(u64, String, usize)], now: EpochMs) {
         if picks.is_empty() {
             return;
@@ -202,12 +208,122 @@ impl Catalog {
         let ids: Vec<u64> = picks.iter().map(|(id, _, _)| *id).collect();
         self.requests.update_bulk(&ids, now, |r| {
             if let Some((src, fts)) = by_id.get(&r.id) {
-                r.state = RequestState::Submitted;
-                r.src_rse = Some((*src).to_string());
-                r.fts_server = Some(*fts);
-                r.updated_at = now;
+                if let Ok(next) = request_transition(r.state, RequestEvent::Submit) {
+                    r.state = next;
+                    r.src_rse = Some((*src).to_string());
+                    r.fts_server = Some(*fts);
+                    r.updated_at = now;
+                }
             }
         });
+    }
+
+    /// Admission release (the throttler's commit path): flip a batch of
+    /// WAITING requests to QUEUED in one batched commit, recording the
+    /// throttler's estimated source as a hint on the row — later ticks
+    /// charge the link budget from the hint instead of re-ranking every
+    /// admitted request (the submitter overwrites it with its actual
+    /// pick at submission). Returns how many actually flipped.
+    pub fn release_waiting_requests(
+        &self,
+        releases: &[(u64, Option<String>)],
+        now: EpochMs,
+    ) -> usize {
+        if releases.is_empty() {
+            return 0;
+        }
+        let hints: BTreeMap<u64, &Option<String>> =
+            releases.iter().map(|(id, hint)| (*id, hint)).collect();
+        let ids: Vec<u64> = releases.iter().map(|(id, _)| *id).collect();
+        let mut released = 0;
+        self.requests.update_bulk(&ids, now, |r| {
+            if let Ok(next) = request_transition(r.state, RequestEvent::Release) {
+                r.state = next;
+                r.updated_at = now;
+                if let Some(Some(hint)) = hints.get(&r.id) {
+                    r.src_rse = Some(hint.clone());
+                }
+                released += 1;
+            }
+        });
+        self.metrics.incr("throttler.released", released as u64);
+        released
+    }
+
+    /// Record a planned multi-hop chain on a request (submitter, after
+    /// the path planner ran). The chain starts at hop 0.
+    pub fn set_request_path(&self, request_id: u64, path: Vec<String>) {
+        let now = self.now();
+        self.requests.update(&request_id, now, |r| {
+            r.path = Some(path);
+            r.hop = 0;
+            r.updated_at = now;
+        });
+        self.metrics.incr("conveyor.multihop.planned", 1);
+    }
+
+    /// Raise a request's scheduling priority (`POST /requests/{id}/boost`):
+    /// a still-WAITING request bypasses the throttler queue immediately,
+    /// and every submission from here on (the next hop, any retry, the
+    /// pending submission of a QUEUED request) carries the boosted
+    /// priority into FTS, which starts it first on a contended link.
+    /// Limitation: a job already handed to FTS keeps the priority it was
+    /// submitted with — the catalog has no handle on the transfer tool's
+    /// internal queue (matching upstream, where reshuffling an in-flight
+    /// FTS job is not possible either).
+    pub fn boost_request(&self, request_id: u64) -> Result<TransferRequest> {
+        let now = self.now();
+        let req = self
+            .requests
+            .get(&request_id)
+            .ok_or_else(|| RucioError::RequestNotFound(request_id.to_string()))?;
+        if req.state.is_terminal() {
+            return Err(RucioError::InvalidValue(format!(
+                "request {request_id} is terminal ({})",
+                req.state.as_str()
+            )));
+        }
+        self.requests.update(&request_id, now, |r| {
+            r.priority = PRIORITY_BOOSTED;
+            if let Ok(next) = request_transition(r.state, RequestEvent::Release) {
+                r.state = next;
+            }
+            r.updated_at = now;
+        });
+        self.metrics.incr("requests.boosted", 1);
+        self.requests
+            .get(&request_id)
+            .ok_or_else(|| RucioError::RequestNotFound(request_id.to_string()))
+    }
+
+    /// Ensure a staging stub exists for a multi-hop chain: an unlocked
+    /// COPYING replica at the intermediate RSE that the hop's transfer
+    /// will fill. An existing replica row (any state) is reused — with
+    /// its tombstone cleared, so a previous chain's reaper marker cannot
+    /// delete the new chain's hop source from under it (it is re-set when
+    /// this chain completes or unwinds).
+    pub fn ensure_staging_stub(&self, rse: &str, did: &DidKey) -> Result<Replica> {
+        let key = (rse.to_string(), did.clone());
+        if let Some(rep) = self.replicas.get(&key) {
+            if rep.tombstone.is_some() {
+                let now = self.now();
+                return Ok(self
+                    .replicas
+                    .update(&key, now, |r| r.tombstone = None)
+                    .unwrap_or(rep));
+            }
+            return Ok(rep);
+        }
+        // Fresh stub: born through the regular registration path (one
+        // place constructs replica rows); non-deterministic staging RSEs
+        // get a synthetic staging pfn.
+        let r = self.get_rse(rse)?;
+        let pfn = r
+            .lfn2pfn(&did.scope, &did.name)
+            .unwrap_or_else(|| format!("/staging/{}/{}", did.scope, did.name));
+        let rep = self.add_replica(rse, did, ReplicaState::Copying, Some(&pfn))?;
+        self.metrics.incr("conveyor.multihop.stubs_created", 1);
+        Ok(rep)
     }
 
     /// Record the FTS external ids of a submitted batch in one commit.

@@ -361,8 +361,11 @@ impl Catalog {
                         bytes: p.bytes,
                         adler32: p.adler32.clone(),
                         activity: activity.to_string(),
-                        state: RequestState::Queued,
+                        state: self.initial_request_state(),
                         attempts: 0,
+                        priority: PRIORITY_NORMAL,
+                        path: None,
+                        hop: 0,
                         src_rse: None,
                         external_id: None,
                         fts_server: None,
@@ -477,18 +480,65 @@ impl Catalog {
     // transfer outcome handling (§4.2 step 4: transfer-finisher)
     // ------------------------------------------------------------------
 
+    /// New requests enter through the throttler's admission state when
+    /// `[throttler] enabled` is set (paper Fig 6: activity shares gate
+    /// submission); otherwise they queue directly, exactly as before.
+    pub(crate) fn initial_request_state(&self) -> RequestState {
+        if self.cfg.get_bool("throttler", "enabled", false) {
+            RequestState::Waiting
+        } else {
+            RequestState::Queued
+        }
+    }
+
     /// A transfer finished successfully: replica becomes available, all
-    /// replicating locks on it flip to OK, covering rules update.
+    /// replicating locks on it flip to OK, covering rules update. For a
+    /// multi-hop chain this is the *final* hop (intermediate hops go
+    /// through [`Catalog::advance_hop`]); the staging replicas are
+    /// tombstoned here so the reaper collects them.
     pub fn on_transfer_done(&self, request_id: u64) -> Result<()> {
         let now = self.now();
         let req = self
             .requests
             .get(&request_id)
             .ok_or_else(|| RucioError::Internal(format!("request {request_id} unknown")))?;
+        // Validate on the snapshot for a clean error, then re-check under
+        // the row lock: a concurrent cancel must not be overwritten
+        // (terminal states accept nothing).
+        request_transition(req.state, RequestEvent::Done)?;
+        let mut applied = false;
         self.requests.update(&request_id, now, |r| {
-            r.state = RequestState::Done;
-            r.updated_at = now;
+            if let Ok(next) = request_transition(r.state, RequestEvent::Done) {
+                r.state = next;
+                r.updated_at = now;
+                // terminal rows carry no active chain (consistent with
+                // the failure and cancel paths)
+                r.path = None;
+                r.hop = 0;
+                applied = true;
+            }
         });
+        if !applied {
+            return Err(RucioError::InvalidValue(format!(
+                "request {request_id} raced to a terminal state"
+            )));
+        }
+        // Chain bookkeeping: staging replicas served their purpose —
+        // tombstone them now (reaper-collectable) unless another rule
+        // locked them in the meantime.
+        for rse in req.intermediate_rses() {
+            let key = (rse.clone(), req.did.clone());
+            let mut tombstoned = false;
+            self.replicas.update(&key, now, |r| {
+                if r.lock_count == 0 {
+                    r.tombstone = Some(now);
+                    tombstoned = true;
+                }
+            });
+            if tombstoned {
+                self.metrics.incr("conveyor.multihop.intermediates_tombstoned", 1);
+            }
+        }
         self.replica_available(&req.dst_rse, &req.did)?;
         let replica_key = (req.dst_rse.clone(), req.did.clone());
         // Orphaned arrival (rule deleted mid-flight): leave it cache-like.
@@ -535,24 +585,47 @@ impl Catalog {
         let max_attempts = self.cfg.get_i64("conveyor", "max_attempts", 3) as u32;
         let retry_delay = self.cfg.get_duration_ms("conveyor", "retry_delay", 600_000);
         let attempts = req.attempts + 1;
+        // A failed chain is abandoned: un-landed staging stubs are
+        // dropped, landed intermediates tombstoned, and the retry (if
+        // any) re-plans from scratch — the topology may have changed.
+        self.cleanup_chain_intermediates(&req, now);
         if attempts < max_attempts {
+            request_transition(req.state, RequestEvent::FailRetry)?;
+            let mut applied = false;
             self.requests.update(&request_id, now, |r| {
-                r.attempts = attempts;
-                r.state = RequestState::Retry;
-                r.retry_after = Some(now + retry_delay);
-                r.last_error = Some(reason.to_string());
-                r.updated_at = now;
-                r.external_id = None;
+                if let Ok(next) = request_transition(r.state, RequestEvent::FailRetry) {
+                    r.attempts = attempts;
+                    r.state = next;
+                    r.retry_after = Some(now + retry_delay);
+                    r.last_error = Some(reason.to_string());
+                    r.updated_at = now;
+                    r.external_id = None;
+                    r.path = None;
+                    r.hop = 0;
+                    applied = true;
+                }
             });
-            self.metrics.incr("transfers.retried", 1);
+            if applied {
+                self.metrics.incr("transfers.retried", 1);
+            }
             return Ok(());
         }
+        request_transition(req.state, RequestEvent::FailFinal)?;
+        let mut applied = false;
         self.requests.update(&request_id, now, |r| {
-            r.attempts = attempts;
-            r.state = RequestState::Failed;
-            r.last_error = Some(reason.to_string());
-            r.updated_at = now;
+            if let Ok(next) = request_transition(r.state, RequestEvent::FailFinal) {
+                r.attempts = attempts;
+                r.state = next;
+                r.last_error = Some(reason.to_string());
+                r.updated_at = now;
+                r.path = None;
+                r.hop = 0;
+                applied = true;
+            }
         });
+        if !applied {
+            return Ok(()); // raced to a terminal state; nothing to stick
+        }
         let replica_key = (req.dst_rse.clone(), req.did.clone());
         for lock_key in self.locks_by_replica.get(&replica_key) {
             let Some(lock) = self.locks.get(&lock_key) else { continue };
@@ -569,6 +642,63 @@ impl Catalog {
         }
         self.metrics.incr("transfers.failed", 1);
         Ok(())
+    }
+
+    /// An intermediate hop of a multi-hop chain landed: the staging
+    /// replica becomes available (it is the next hop's source) and the
+    /// request re-queues for the next hop's submission. Re-queued hops
+    /// bypass the throttler — the chain was admitted once.
+    pub fn advance_hop(&self, request_id: u64) -> Result<()> {
+        let now = self.now();
+        let req = self
+            .requests
+            .get(&request_id)
+            .ok_or_else(|| RucioError::Internal(format!("request {request_id} unknown")))?;
+        request_transition(req.state, RequestEvent::HopDone)?;
+        let (_, landed) = req
+            .current_hop()
+            .ok_or_else(|| RucioError::Internal(format!("request {request_id} has no chain")))?;
+        // Gate under the row lock (a racing cancel must win), then flip
+        // the landed staging replica available — if that fails, the
+        // re-queued hop finds no source and the retry path re-plans.
+        let mut applied = false;
+        self.requests.update(&request_id, now, |r| {
+            if let Ok(next) = request_transition(r.state, RequestEvent::HopDone) {
+                r.state = next;
+                r.hop += 1;
+                r.external_id = None;
+                r.fts_server = None;
+                r.updated_at = now;
+                applied = true;
+            }
+        });
+        if !applied {
+            return Err(RucioError::InvalidValue(format!(
+                "request {request_id} raced out of SUBMITTED"
+            )));
+        }
+        self.replica_available(landed, &req.did)?;
+        self.metrics.incr("conveyor.multihop.hops_done", 1);
+        Ok(())
+    }
+
+    /// Drop a chain's staging replicas: never-landed Copying stubs are
+    /// removed outright, landed copies are tombstoned for the reaper.
+    /// Replicas another rule locked in the meantime are left alone.
+    pub(crate) fn cleanup_chain_intermediates(&self, req: &TransferRequest, now: EpochMs) {
+        for rse in req.intermediate_rses() {
+            let key = (rse.clone(), req.did.clone());
+            let Some(rep) = self.replicas.get(&key) else { continue };
+            if rep.lock_count > 0 {
+                continue;
+            }
+            if rep.state == ReplicaState::Copying {
+                let _ = self.replicas.remove(&key, now);
+                self.refresh_availability(&req.did);
+            } else {
+                self.replicas.update(&key, now, |r| r.tombstone = Some(now));
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -687,8 +817,11 @@ impl Catalog {
                                 bytes: lock.bytes,
                                 adler32,
                                 activity: rule.activity.clone(),
-                                state: RequestState::Queued,
+                                state: self.initial_request_state(),
                                 attempts: 0,
+                                priority: PRIORITY_NORMAL,
+                                path: None,
+                                hop: 0,
                                 src_rse: None,
                                 external_id: None,
                                 fts_server: None,
@@ -823,10 +956,22 @@ impl Catalog {
                         });
                     }
                     None => {
+                        // Cancel: an in-flight multi-hop chain is wound
+                        // down too (stubs dropped, landed intermediates
+                        // tombstoned for the reaper). The transition gate
+                        // keeps a request that just completed terminal —
+                        // a DONE row is never flipped to FAILED.
+                        self.cleanup_chain_intermediates(&req, now);
                         self.requests.update(&req_id, now, |r| {
-                            r.state = RequestState::Failed;
-                            r.last_error = Some("rule removed".into());
-                            r.updated_at = now;
+                            if let Ok(next) =
+                                request_transition(r.state, RequestEvent::Cancel)
+                            {
+                                r.state = next;
+                                r.last_error = Some("rule removed".into());
+                                r.updated_at = now;
+                                r.path = None;
+                                r.hop = 0;
+                            }
                         });
                     }
                 }

@@ -278,9 +278,14 @@ impl Row for ReplicaLock {
     }
 }
 
-/// Transfer request lifecycle (paper §4.2 workflow steps 1–4).
+/// Transfer request lifecycle (paper §4.2 workflow steps 1–4, Fig 6's
+/// admission-controlled pipeline).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum RequestState {
+    /// Admission control: created but not yet released by the throttler
+    /// (paper Fig 6 — FTS activity shares arbitrate competing activities
+    /// before submission).
+    Waiting,
     Queued,
     Submitted,
     Done,
@@ -292,6 +297,7 @@ pub enum RequestState {
 impl RequestState {
     pub fn as_str(&self) -> &'static str {
         match self {
+            RequestState::Waiting => "WAITING",
             RequestState::Queued => "QUEUED",
             RequestState::Submitted => "SUBMITTED",
             RequestState::Done => "DONE",
@@ -299,7 +305,119 @@ impl RequestState {
             RequestState::Retry => "RETRY",
         }
     }
+
+    pub fn parse(s: &str) -> Option<RequestState> {
+        match s {
+            "WAITING" => Some(RequestState::Waiting),
+            "QUEUED" => Some(RequestState::Queued),
+            "SUBMITTED" => Some(RequestState::Submitted),
+            "DONE" => Some(RequestState::Done),
+            "FAILED" => Some(RequestState::Failed),
+            "RETRY" => Some(RequestState::Retry),
+            _ => None,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RequestState::Done | RequestState::Failed)
+    }
+
+    /// All states (transition-table exhaustiveness helper).
+    pub const ALL: [RequestState; 6] = [
+        RequestState::Waiting,
+        RequestState::Queued,
+        RequestState::Submitted,
+        RequestState::Done,
+        RequestState::Failed,
+        RequestState::Retry,
+    ];
 }
+
+/// Events driving the request state machine. Every mutation of a
+/// request's state goes through [`request_transition`], so the legal
+/// lifecycle is written down in exactly one place.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestEvent {
+    /// Throttler admission: a Waiting request is released for submission.
+    Release,
+    /// Conveyor submitter hands the request to FTS.
+    Submit,
+    /// Terminal success (the destination replica is in place).
+    Done,
+    /// A recoverable failure: back off and retry.
+    FailRetry,
+    /// A final failure: attempts exhausted (locks go STUCK).
+    FailFinal,
+    /// A Retry request's backoff elapsed; back into the queue.
+    RetryDue,
+    /// An intermediate hop of a multi-hop chain landed; re-queue for the
+    /// next hop's submission (no re-admission — the chain was admitted
+    /// once).
+    HopDone,
+    /// Administrative cancel (rule deleted, chain re-planned).
+    Cancel,
+}
+
+impl RequestEvent {
+    /// All events (transition-table exhaustiveness helper).
+    pub const ALL: [RequestEvent; 8] = [
+        RequestEvent::Release,
+        RequestEvent::Submit,
+        RequestEvent::Done,
+        RequestEvent::FailRetry,
+        RequestEvent::FailFinal,
+        RequestEvent::RetryDue,
+        RequestEvent::HopDone,
+        RequestEvent::Cancel,
+    ];
+}
+
+/// The request state-transition table. Every `(state, event)` pair either
+/// yields the successor state or an error — there are no silent no-ops,
+/// so a misrouted event (double completion, submit of an unadmitted
+/// request, anything on a terminal request) surfaces instead of
+/// corrupting tallies.
+///
+/// `Done`/`FailRetry`/`FailFinal` are accepted from every non-terminal
+/// state: completions may arrive for requests the submitter never saw
+/// (a replica landed through another channel) and failures are recorded
+/// against queued requests too (no source available).
+pub fn request_transition(
+    state: RequestState,
+    event: RequestEvent,
+) -> crate::common::error::Result<RequestState> {
+    use RequestEvent as E;
+    use RequestState as S;
+    let next = match (state, event) {
+        // admission
+        (S::Waiting, E::Release) => Some(S::Queued),
+        // submission
+        (S::Queued, E::Submit) => Some(S::Submitted),
+        // multi-hop: an intermediate hop landed, queue the next one
+        (S::Submitted, E::HopDone) => Some(S::Queued),
+        // outcomes, legal from any non-terminal state
+        (S::Waiting | S::Queued | S::Submitted | S::Retry, E::Done) => Some(S::Done),
+        (S::Waiting | S::Queued | S::Submitted | S::Retry, E::FailRetry) => Some(S::Retry),
+        (S::Waiting | S::Queued | S::Submitted | S::Retry, E::FailFinal) => Some(S::Failed),
+        // retry backoff elapsed
+        (S::Retry, E::RetryDue) => Some(S::Queued),
+        // administrative cancel of anything still live
+        (S::Waiting | S::Queued | S::Submitted | S::Retry, E::Cancel) => Some(S::Failed),
+        _ => None,
+    };
+    next.ok_or_else(|| {
+        crate::common::error::RucioError::InvalidValue(format!(
+            "illegal request transition: {} + {event:?}",
+            state.as_str()
+        ))
+    })
+}
+
+/// Default request priority (1 = lowest urgency, 5 = highest; the FTS
+/// simulator starts higher-priority jobs first within a link).
+pub const PRIORITY_NORMAL: u8 = 3;
+/// Priority applied by `POST /requests/{id}/boost`.
+pub const PRIORITY_BOOSTED: u8 = 5;
 
 /// A transfer request created by the rule engine (paper §4.2 step 1).
 #[derive(Debug, Clone)]
@@ -313,6 +431,15 @@ pub struct TransferRequest {
     pub activity: String,
     pub state: RequestState,
     pub attempts: u32,
+    /// Scheduling priority (1–5; see [`PRIORITY_NORMAL`]). The FTS
+    /// simulator starts higher-priority jobs first on a contended link.
+    pub priority: u8,
+    /// Multi-hop chain: the full planned route `[src, staging.., dst]`
+    /// when no direct source→destination link is usable. `None` for
+    /// ordinary direct transfers.
+    pub path: Option<Vec<String>>,
+    /// Index of the hop currently executing: `path[hop] → path[hop+1]`.
+    pub hop: u32,
     /// Chosen source RSE (submitter fills this).
     pub src_rse: Option<String>,
     /// FTS transfer id once submitted.
@@ -330,6 +457,38 @@ impl Row for TransferRequest {
     type Key = u64;
     fn key(&self) -> u64 {
         self.id
+    }
+}
+
+impl TransferRequest {
+    /// The `(source, destination)` of the hop currently executing: the
+    /// chain hop for multi-hop requests, `None` for direct transfers
+    /// (whose source is chosen per submission attempt).
+    pub fn current_hop(&self) -> Option<(&str, &str)> {
+        let path = self.path.as_ref()?;
+        let i = self.hop as usize;
+        match (path.get(i), path.get(i + 1)) {
+            (Some(a), Some(b)) => Some((a.as_str(), b.as_str())),
+            _ => None,
+        }
+    }
+
+    /// Is the currently executing hop the final leg into `dst_rse`?
+    /// Direct transfers are trivially on their final hop.
+    pub fn on_final_hop(&self) -> bool {
+        match &self.path {
+            Some(path) => (self.hop as usize) + 2 >= path.len(),
+            None => true,
+        }
+    }
+
+    /// The staging RSEs of a planned chain (everything strictly between
+    /// source and destination).
+    pub fn intermediate_rses(&self) -> &[String] {
+        match &self.path {
+            Some(path) if path.len() > 2 => &path[1..path.len() - 1],
+            _ => &[],
+        }
     }
 }
 
@@ -527,6 +686,140 @@ mod tests {
         assert_eq!(RequestState::Queued.as_str(), "QUEUED");
         assert_eq!(ReplicaState::Suspicious.as_str(), "SUSPICIOUS");
         assert_eq!(Availability::Lost.as_str(), "LOST");
+    }
+
+    #[test]
+    fn request_state_round_trip() {
+        for s in RequestState::ALL {
+            assert_eq!(RequestState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(RequestState::parse("NOPE"), None);
+        assert!(RequestState::Done.is_terminal());
+        assert!(RequestState::Failed.is_terminal());
+        assert!(!RequestState::Waiting.is_terminal());
+    }
+
+    /// Exhaustive check of the full `(state, event)` table: every pair is
+    /// either a legal transition to the documented successor or an error.
+    /// No silent no-ops: a legal transition never yields its own state
+    /// except the documented Retry+FailRetry (a repeated failure while
+    /// already backing off re-arms the backoff — a real action, not a
+    /// no-op).
+    #[test]
+    fn request_transition_table_is_exhaustive() {
+        use RequestEvent as E;
+        use RequestState as S;
+        let expect = |s: S, e: E| -> Option<S> {
+            match (s, e) {
+                (S::Waiting, E::Release) => Some(S::Queued),
+                (S::Queued, E::Submit) => Some(S::Submitted),
+                (S::Submitted, E::HopDone) => Some(S::Queued),
+                (S::Retry, E::RetryDue) => Some(S::Queued),
+                (S::Waiting | S::Queued | S::Submitted | S::Retry, E::Done) => Some(S::Done),
+                (S::Waiting | S::Queued | S::Submitted | S::Retry, E::FailRetry) => {
+                    Some(S::Retry)
+                }
+                (S::Waiting | S::Queued | S::Submitted | S::Retry, E::FailFinal) => {
+                    Some(S::Failed)
+                }
+                (S::Waiting | S::Queued | S::Submitted | S::Retry, E::Cancel) => {
+                    Some(S::Failed)
+                }
+                _ => None,
+            }
+        };
+        let mut legal = 0;
+        let mut illegal = 0;
+        for s in RequestState::ALL {
+            for e in RequestEvent::ALL {
+                match (request_transition(s, e), expect(s, e)) {
+                    (Ok(next), Some(want)) => {
+                        assert_eq!(next, want, "{s:?} + {e:?}");
+                        legal += 1;
+                    }
+                    (Err(_), None) => illegal += 1,
+                    (got, want) => {
+                        panic!("{s:?} + {e:?}: got {got:?}, expected {want:?}")
+                    }
+                }
+            }
+        }
+        assert_eq!(legal + illegal, RequestState::ALL.len() * RequestEvent::ALL.len());
+        // terminal states accept nothing
+        for s in [S::Done, S::Failed] {
+            for e in RequestEvent::ALL {
+                assert!(request_transition(s, e).is_err(), "{s:?} must be terminal");
+            }
+        }
+        // the only legal self-transition is Retry + FailRetry
+        for s in RequestState::ALL {
+            for e in RequestEvent::ALL {
+                if let Ok(next) = request_transition(s, e) {
+                    if next == s {
+                        assert_eq!((s, e), (S::Retry, E::FailRetry), "unexpected no-op");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Every live state reaches a terminal state, and the happy path
+    /// Waiting→Queued→Submitted→Done is exactly three transitions.
+    #[test]
+    fn request_lifecycle_paths() {
+        use RequestEvent as E;
+        use RequestState as S;
+        let mut s = S::Waiting;
+        for e in [E::Release, E::Submit, E::Done] {
+            s = request_transition(s, e).unwrap();
+        }
+        assert_eq!(s, S::Done);
+        // retry loop terminates in Failed
+        let mut s = S::Queued;
+        s = request_transition(s, E::Submit).unwrap();
+        s = request_transition(s, E::FailRetry).unwrap();
+        s = request_transition(s, E::RetryDue).unwrap();
+        s = request_transition(s, E::Submit).unwrap();
+        s = request_transition(s, E::FailFinal).unwrap();
+        assert_eq!(s, S::Failed);
+        // multi-hop: Submitted --HopDone--> Queued --Submit--> Submitted
+        let s = request_transition(S::Submitted, E::HopDone).unwrap();
+        assert_eq!(request_transition(s, E::Submit).unwrap(), S::Submitted);
+    }
+
+    #[test]
+    fn transfer_request_hop_helpers() {
+        let mut req = TransferRequest {
+            id: 1,
+            did: DidKey::new("s", "f"),
+            dst_rse: "C".into(),
+            rule_id: 1,
+            bytes: 10,
+            adler32: "x".into(),
+            activity: "Production".into(),
+            state: RequestState::Queued,
+            attempts: 0,
+            priority: PRIORITY_NORMAL,
+            path: Some(vec!["A".into(), "B".into(), "C".into()]),
+            hop: 0,
+            src_rse: None,
+            external_id: None,
+            fts_server: None,
+            created_at: 0,
+            updated_at: 0,
+            retry_after: None,
+            last_error: None,
+        };
+        assert_eq!(req.current_hop(), Some(("A", "B")));
+        assert!(!req.on_final_hop());
+        assert_eq!(req.intermediate_rses(), &["B".to_string()]);
+        req.hop = 1;
+        assert_eq!(req.current_hop(), Some(("B", "C")));
+        assert!(req.on_final_hop());
+        req.path = None;
+        assert!(req.on_final_hop());
+        assert_eq!(req.current_hop(), None);
+        assert!(req.intermediate_rses().is_empty());
     }
 }
 

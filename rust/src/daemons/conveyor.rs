@@ -7,14 +7,145 @@
 //!   as its passive workflow decreases the load on the transfer tool");
 //! * the *finisher* step — updating the associated rules — is the
 //!   `Catalog::on_transfer_{done,failed}` logic both invoke.
+//!
+//! Multi-hop routing (transfer orchestration v2): when no ranked source
+//! has a usable network link to the destination (offline, partitioned,
+//! or catalog-unconnected), the submitter plans the cheapest 2–3-hop
+//! route over the topology ([`plan_transfer_path`]), stages COPYING stub
+//! replicas at the intermediate RSEs, and chains the per-hop FTS jobs;
+//! intermediate arrivals re-queue the request for its next hop
+//! (`Catalog::advance_hop`) and the final arrival tombstones the staging
+//! copies for the reaper.
 
 use crate::common::clock::EpochMs;
-use crate::core::types::{ReplicaState, RequestState, TransferRequest};
+use crate::core::types::{DidKey, ReplicaState, RequestState, TransferRequest};
+use crate::core::Catalog;
 use crate::db::assigned_to;
 use crate::ftssim::{TransferJob, TransferState};
 use crate::mq::SubId;
+use crate::netsim::Network;
 
 use super::{Ctx, Daemon};
+
+/// A planned transfer route: the RSE chain source→…→destination plus its
+/// total distance cost (sum of per-hop catalog rankings).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedPath {
+    pub rses: Vec<String>,
+    pub cost: u32,
+}
+
+/// Is the network between two RSEs' sites usable right now (quality > 0)?
+/// Shared with the throttler so admission and submission agree on what a
+/// usable link is.
+pub(crate) fn link_usable(cat: &Catalog, net: &Network, src_rse: &str, dst_rse: &str) -> bool {
+    match (cat.get_rse(src_rse), cat.get_rse(dst_rse)) {
+        (Ok(a), Ok(b)) => net.usable(a.site(), b.site()),
+        _ => false,
+    }
+}
+
+/// Cost of one hop when it is usable: requires a catalog connection
+/// (distance ranking, `None` = unconnected), a live network link, a
+/// readable source side and a writable destination side.
+fn hop_cost(ctx: &Ctx, src: &crate::core::rse::Rse, dst: &crate::core::rse::Rse) -> Option<u32> {
+    if !src.availability_read || !dst.availability_write {
+        return None;
+    }
+    if !ctx.net.usable(src.site(), dst.site()) {
+        return None;
+    }
+    ctx.catalog.distance(&src.name, &dst.name)
+}
+
+fn consider(best: &mut Option<PlannedPath>, rses: Vec<String>, cost: u32) {
+    let better = match best {
+        None => true,
+        Some(b) => {
+            cost < b.cost
+                || (cost == b.cost && rses.len() < b.rses.len())
+                || (cost == b.cost && rses.len() == b.rses.len() && rses < b.rses)
+        }
+    };
+    if better {
+        *best = Some(PlannedPath { rses, cost });
+    }
+}
+
+/// Plan the cheapest route (up to 3 hops) from any available source
+/// replica of `did` to `dst_rse`. Every hop must be live ([`hop_cost`]);
+/// staging candidates are readable+writable non-tape RSEs. Paths are
+/// acyclic by construction (source, intermediates, and destination are
+/// pairwise distinct); ties break toward fewer hops, then
+/// lexicographically, so planning is deterministic. Returns `None` when
+/// no viable route exists.
+pub fn plan_transfer_path(ctx: &Ctx, did: &DidKey, dst_rse: &str) -> Option<PlannedPath> {
+    let cat = &ctx.catalog;
+    let dst = cat.get_rse(dst_rse).ok()?;
+    let sources: Vec<crate::core::rse::Rse> = cat
+        .available_replicas(did)
+        .into_iter()
+        .filter(|r| r.rse != dst_rse)
+        .filter_map(|r| cat.get_rse(&r.rse).ok())
+        .filter(|r| r.availability_read)
+        .collect();
+    if sources.is_empty() {
+        return None;
+    }
+    let source_names: std::collections::BTreeSet<&str> =
+        sources.iter().map(|r| r.name.as_str()).collect();
+    let mids: Vec<crate::core::rse::Rse> = cat
+        .list_rses()
+        .into_iter()
+        .filter(|r| r.name != dst_rse && !source_names.contains(r.name.as_str()))
+        .filter(|r| r.availability_read && r.availability_write && !r.is_tape && !r.deleted)
+        .collect();
+
+    let mut best: Option<PlannedPath> = None;
+    // direct + 2-hop
+    for s in &sources {
+        if let Some(c) = hop_cost(ctx, s, &dst) {
+            consider(&mut best, vec![s.name.clone(), dst.name.clone()], c);
+        }
+        for m in &mids {
+            let Some(c1) = hop_cost(ctx, s, m) else { continue };
+            if let Some(c2) = hop_cost(ctx, m, &dst) {
+                consider(
+                    &mut best,
+                    vec![s.name.clone(), m.name.clone(), dst.name.clone()],
+                    c1 + c2,
+                );
+            }
+        }
+    }
+    // 3-hop only when it could still beat the best (each hop costs ≥ 1,
+    // so a 3-hop route costs ≥ 3)
+    if best.as_ref().map(|b| b.cost > 3).unwrap_or(true) {
+        for s in &sources {
+            for m1 in &mids {
+                let Some(c1) = hop_cost(ctx, s, m1) else { continue };
+                for m2 in &mids {
+                    if m2.name == m1.name {
+                        continue;
+                    }
+                    let Some(c2) = hop_cost(ctx, m1, m2) else { continue };
+                    let Some(c3) = hop_cost(ctx, m2, &dst) else { continue };
+                    consider(
+                        &mut best,
+                        vec![
+                            s.name.clone(),
+                            m1.name.clone(),
+                            m2.name.clone(),
+                            dst.name.clone(),
+                        ],
+                        c1 + c2 + c3,
+                    );
+                }
+            }
+        }
+    }
+    best
+}
 
 /// Ranks sources and submits queued transfer requests to FTS in bunches.
 pub struct Submitter {
@@ -88,14 +219,61 @@ impl Daemon for Submitter {
 
         for req in queued {
             processed += 1;
-            // Source ranking by distance (§4.2 step 2).
-            let sources = cat.ranked_sources(&req.did, &req.dst_rse);
-            let Some((src, _dist)) = sources.first() else {
-                // No available source — count a failure attempt so it
-                // retries (it may appear later) and eventually sticks.
+            // Resolve this submission's (source replica, hop destination):
+            // an in-progress chain pins both; otherwise rank sources by
+            // distance and require a usable network link, falling back to
+            // the cheapest multi-hop route when no direct source works.
+            let picked = if let Some((hop_src, hop_dst)) =
+                req.current_hop().map(|(a, b)| (a.to_string(), b.to_string()))
+            {
+                match cat.get_replica(&hop_src, &req.did) {
+                    Ok(rep) => Some((rep, hop_dst)),
+                    Err(_) => {
+                        // the landed intermediate vanished (reaper raced
+                        // us): abandon the chain, retry re-plans
+                        let _ = cat.on_transfer_failed(req.id, "chain source vanished");
+                        continue;
+                    }
+                }
+            } else {
+                // Source ranking by distance (§4.2 step 2), partition-
+                // aware: a ranked source whose link is dead is unusable.
+                let direct = cat
+                    .ranked_sources(&req.did, &req.dst_rse)
+                    .into_iter()
+                    .find(|(r, _)| link_usable(cat, &self.ctx.net, &r.rse, &req.dst_rse));
+                match direct {
+                    Some((rep, _dist)) => Some((rep, req.dst_rse.clone())),
+                    None => match plan_transfer_path(&self.ctx, &req.did, &req.dst_rse) {
+                        Some(plan) if plan.rses.len() > 2 => {
+                            // Record the chain BEFORE staging: if a stub
+                            // fails half-way, the failure path sees the
+                            // path and winds the created stubs down
+                            // instead of leaking them.
+                            cat.set_request_path(req.id, plan.rses.clone());
+                            let staged = plan.rses[1..plan.rses.len() - 1]
+                                .iter()
+                                .all(|mid| cat.ensure_staging_stub(mid, &req.did).is_ok());
+                            if !staged {
+                                let _ = cat.on_transfer_failed(req.id, "staging stub failed");
+                                continue;
+                            }
+                            cat.get_replica(&plan.rses[0], &req.did)
+                                .ok()
+                                .map(|rep| (rep, plan.rses[1].clone()))
+                        }
+                        _ => None,
+                    },
+                }
+            };
+            let Some((src, hop_dst)) = picked else {
+                // No available source and no viable route — count a
+                // failure attempt so it retries (the topology may heal)
+                // and eventually sticks.
                 let _ = cat.on_transfer_failed(req.id, "no source replica available");
                 continue;
             };
+            let src = &src;
             // Tape sources must be staged first (§1.3: "clients will have
             // to wait for the tape robot").
             if let Ok(src_rse) = cat.get_rse(&src.rse) {
@@ -120,7 +298,7 @@ impl Daemon for Submitter {
             // source and destination storage based on protocol priorities").
             let (src_site, dst_site) = {
                 let s = cat.get_rse(&src.rse).map(|r| r.site().to_string());
-                let d = cat.get_rse(&req.dst_rse).map(|r| r.site().to_string());
+                let d = cat.get_rse(&hop_dst).map(|r| r.site().to_string());
                 match (s, d) {
                     (Ok(a), Ok(b)) => (a, b),
                     _ => {
@@ -130,7 +308,7 @@ impl Daemon for Submitter {
                 }
             };
             let dst_pfn = cat
-                .get_replica(&req.dst_rse, &req.did)
+                .get_replica(&hop_dst, &req.did)
                 .map(|r| r.pfn)
                 .unwrap_or_else(|_| format!("/lost/{}", req.did));
             let Some(fts_idx) = self.fts_for(&req) else {
@@ -141,7 +319,7 @@ impl Daemon for Submitter {
                 TransferJob {
                     request_id: req.id,
                     src_rse: src.rse.clone(),
-                    dst_rse: req.dst_rse.clone(),
+                    dst_rse: hop_dst.clone(),
                     src_site,
                     dst_site,
                     src_pfn: src.pfn.clone(),
@@ -149,6 +327,7 @@ impl Daemon for Submitter {
                     bytes: req.bytes,
                     adler32: req.adler32.clone(),
                     activity: req.activity.clone(),
+                    priority: req.priority,
                 },
             ));
             picks.push((req.id, src.rse.clone(), fts_idx));
@@ -219,7 +398,18 @@ impl Daemon for Poller {
             for t in fts.poll(&ids) {
                 match t.state {
                     TransferState::Done => {
-                        let _ = cat.on_transfer_done(t.job.request_id);
+                        // Intermediate hop of a chain → advance it; the
+                        // final hop runs the transfer-finisher.
+                        let final_hop = cat
+                            .requests
+                            .get(&t.job.request_id)
+                            .map(|r| r.on_final_hop())
+                            .unwrap_or(true);
+                        if final_hop {
+                            let _ = cat.on_transfer_done(t.job.request_id);
+                        } else {
+                            let _ = cat.advance_hop(t.job.request_id);
+                        }
                         processed += 1;
                     }
                     TransferState::Failed => {
@@ -277,9 +467,19 @@ impl Daemon for Receiver {
                 if req.state != RequestState::Submitted {
                     continue;
                 }
+                // Stale-event guard: a multi-hop request re-submits with a
+                // fresh FTS transfer per hop — an event for an earlier
+                // hop's transfer must not finish the current one.
+                if m.payload.opt_u64("transfer_id") != req.external_id {
+                    continue;
+                }
                 match m.event_type.as_str() {
                     "transfer-done" => {
-                        let _ = cat.on_transfer_done(request_id);
+                        if req.on_final_hop() {
+                            let _ = cat.on_transfer_done(request_id);
+                        } else {
+                            let _ = cat.advance_hop(request_id);
+                        }
                         processed += 1;
                     }
                     "transfer-failed" => {
@@ -479,6 +679,189 @@ pub(crate) mod tests {
         submitter.tick(cat.now());
         let req = cat.requests.scan(|_| true)[0].clone();
         assert_eq!(req.state, RequestState::Submitted, "staged tape submits");
+    }
+
+    #[test]
+    fn no_direct_link_routes_via_staging_hop() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "mh1", 1_000_000);
+        // sever SRC-DISK → DST-A in the catalog (ranking 0 = unconnected);
+        // SRC-DISK → DST-B → DST-A stays alive
+        cat.set_distance("SRC-DISK", "DST-A", 0).unwrap();
+        let rid = cat.add_rule(RuleSpec::new("root", f.clone(), "DST-A", 1)).unwrap();
+        let mut submitter = Submitter::new(ctx.clone(), "sub-1");
+        let mut poller = Poller::new(ctx.clone(), "poll-1");
+
+        submitter.tick(cat.now());
+        let req = cat.requests.scan(|_| true)[0].clone();
+        assert_eq!(req.state, RequestState::Submitted);
+        assert_eq!(
+            req.path,
+            Some(vec!["SRC-DISK".into(), "DST-B".into(), "DST-A".into()]),
+            "cheapest viable chain planned"
+        );
+        // staging stub created at the intermediate
+        assert_eq!(cat.get_replica("DST-B", &f).unwrap().state, ReplicaState::Copying);
+
+        // hop 1 lands: the intermediate becomes available, the request
+        // re-queues for hop 2 (no re-admission)
+        let now = advance(&ctx, 5_000);
+        poller.tick(now);
+        let mid = cat.requests.get(&req.id).unwrap();
+        assert_eq!(mid.state, RequestState::Queued);
+        assert_eq!(mid.hop, 1);
+        assert_eq!(cat.get_replica("DST-B", &f).unwrap().state, ReplicaState::Available);
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Replicating);
+
+        // hop 2 completes the rule; the intermediate is tombstoned
+        submitter.tick(now);
+        let now = advance(&ctx, 5_000);
+        poller.tick(now);
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok);
+        assert_eq!(cat.get_replica("DST-A", &f).unwrap().state, ReplicaState::Available);
+        let staged = cat.get_replica("DST-B", &f).unwrap();
+        assert!(staged.tombstone.is_some(), "intermediate is reaper-collectable");
+        assert_eq!(staged.lock_count, 0);
+        // physical file landed at the destination
+        let dst_pfn = cat.get_replica("DST-A", &f).unwrap().pfn;
+        assert!(ctx.fleet.get("DST-A").unwrap().stat(&dst_pfn).is_ok());
+        // nothing structurally broken
+        assert_eq!(crate::sim::invariants::check(&cat), Vec::new());
+    }
+
+    #[test]
+    fn netsim_partition_triggers_multihop() {
+        // The catalog says SRC→DST-A is connected, but the network is
+        // partitioned: the submitter must not burn retries on the dead
+        // link and instead route via DST-B.
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "mh2", 1_000);
+        ctx.net
+            .set_fault_bidir("SRC-DISK", "DST-A", crate::netsim::LinkFault::partition());
+        cat.add_rule(RuleSpec::new("root", f.clone(), "DST-A", 1)).unwrap();
+        let mut submitter = Submitter::new(ctx.clone(), "sub-1");
+        submitter.tick(cat.now());
+        let req = cat.requests.scan(|_| true)[0].clone();
+        assert_eq!(req.state, RequestState::Submitted);
+        assert_eq!(req.src_rse.as_deref(), Some("SRC-DISK"));
+        assert_eq!(
+            req.path,
+            Some(vec!["SRC-DISK".into(), "DST-B".into(), "DST-A".into()])
+        );
+    }
+
+    #[test]
+    fn deleted_rule_cancels_inflight_chain() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "mh3", 1_000_000);
+        cat.set_distance("SRC-DISK", "DST-A", 0).unwrap();
+        let rid = cat.add_rule(RuleSpec::new("root", f.clone(), "DST-A", 1)).unwrap();
+        let mut submitter = Submitter::new(ctx.clone(), "sub-1");
+        submitter.tick(cat.now());
+        let req = cat.requests.scan(|_| true)[0].clone();
+        assert!(req.path.is_some());
+        // rule removed while hop 1 is in flight: request canceled and the
+        // never-landed staging stub dropped
+        cat.delete_rule(rid).unwrap();
+        let req = cat.requests.get(&req.id).unwrap();
+        assert_eq!(req.state, RequestState::Failed);
+        assert!(req.path.is_none());
+        assert!(cat.get_replica("DST-B", &f).is_err(), "stub dropped");
+        assert_eq!(crate::sim::invariants::check(&cat), Vec::new());
+    }
+
+    /// Planner properties over random topologies: paths are acyclic,
+    /// every hop is live (catalog-connected, network-usable, readable
+    /// source / writable destination), and the planned cost never
+    /// exceeds any viable direct alternative.
+    #[test]
+    fn prop_planned_paths_are_acyclic_live_and_no_worse_than_direct() {
+        use crate::common::proptest::forall;
+        use crate::core::rse::Rse;
+        forall(40, |g| {
+            let (ctx, cat) = rig();
+            let now = cat.now();
+            // a handful of extra RSEs beyond the rig's three
+            let extra = g.usize(1, 5);
+            let mut all: Vec<String> =
+                vec!["SRC-DISK".into(), "DST-A".into(), "DST-B".into()];
+            for i in 0..extra {
+                let name = format!("X{i}");
+                cat.add_rse(Rse::new(&name, now).with_attr("site", &name)).unwrap();
+                ctx.fleet.add(crate::storagesim::StorageSystem::new(
+                    &name,
+                    crate::storagesim::StorageKind::Disk,
+                    u64::MAX,
+                ));
+                all.push(name);
+            }
+            // random connectivity: catalog rankings 0–3, some partitions
+            for a in all.clone() {
+                for b in all.clone() {
+                    if a == b {
+                        continue;
+                    }
+                    cat.set_distance(&a, &b, g.u64(0, 4) as u32).unwrap();
+                    if g.chance(0.2) {
+                        ctx.net.set_fault(&a, &b, crate::netsim::LinkFault::partition());
+                    }
+                }
+            }
+            // random read/write availability on the extras
+            for name in &all[3..] {
+                let _ = cat.set_rse_availability(name, g.bool(), g.bool(), true);
+            }
+            // the file lives on 1–2 random RSEs (never the destination)
+            let f = seed_file(&ctx, &format!("pp{}", g.case_index), 1_000);
+            if g.bool() {
+                let src2 = all[g.usize(0, all.len())].clone();
+                if src2 != "DST-A" && src2 != "SRC-DISK" {
+                    let _ = cat.add_replica(&src2, &f, ReplicaState::Available, None);
+                }
+            }
+            let Some(plan) = plan_transfer_path(&ctx, &f, "DST-A") else { return };
+
+            // acyclic: all RSEs on the path are distinct
+            let mut seen = std::collections::BTreeSet::new();
+            assert!(
+                plan.rses.iter().all(|r| seen.insert(r.clone())),
+                "cycle in {:?}",
+                plan.rses
+            );
+            assert!(plan.rses.len() >= 2 && plan.rses.len() <= 4);
+            assert_eq!(plan.rses.last().unwrap(), "DST-A");
+
+            // every hop is live, and the summed cost matches
+            let mut total = 0;
+            for w in plan.rses.windows(2) {
+                let a = cat.get_rse(&w[0]).unwrap();
+                let b = cat.get_rse(&w[1]).unwrap();
+                let c = super::hop_cost(&ctx, &a, &b);
+                assert!(c.is_some(), "dead hop {:?} in {:?}", w, plan.rses);
+                assert!(a.availability_read && b.availability_write);
+                assert!(ctx.net.usable(a.site(), b.site()));
+                total += c.unwrap();
+            }
+            assert_eq!(total, plan.cost);
+
+            // cost ≤ every viable direct alternative
+            let dst = cat.get_rse("DST-A").unwrap();
+            for rep in cat.available_replicas(&f) {
+                if rep.rse == "DST-A" {
+                    continue;
+                }
+                let Ok(src) = cat.get_rse(&rep.rse) else { continue };
+                if let Some(direct) = super::hop_cost(&ctx, &src, &dst) {
+                    assert!(
+                        plan.cost <= direct,
+                        "plan {:?} (cost {}) beats direct {} (cost {direct})",
+                        plan.rses,
+                        plan.cost,
+                        rep.rse
+                    );
+                }
+            }
+        });
     }
 
     #[test]

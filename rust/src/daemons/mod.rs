@@ -21,6 +21,7 @@ pub mod hermes;
 pub mod judge;
 pub mod necromancer;
 pub mod reaper;
+pub mod throttler;
 pub mod tracer;
 pub mod transmogrifier;
 

@@ -59,6 +59,9 @@ pub struct TransferJob {
     /// Activity share (paper Fig 6: "requests submitted to FTS split by
     /// activity").
     pub activity: String,
+    /// Scheduling priority (1–5): on a contended link, queued jobs start
+    /// highest-priority first (FIFO within a priority level).
+    pub priority: u8,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,8 +87,11 @@ pub struct Transfer {
 struct Inner {
     next_id: u64,
     transfers: BTreeMap<u64, Transfer>,
-    /// Per-link FIFO of submitted transfer ids.
-    queues: BTreeMap<(String, String), VecDeque<u64>>,
+    /// Per-link queues of submitted transfer ids, bucketed by job
+    /// priority: starts pop the head of the highest non-empty bucket —
+    /// O(log buckets) instead of scanning the whole link queue — and stay
+    /// FIFO within a priority level. Empty buckets are pruned on pop.
+    queues: BTreeMap<(String, String), BTreeMap<u8, VecDeque<u64>>>,
     /// Active ids per link (bounded by `max_active_per_link`).
     active: BTreeMap<(String, String), Vec<u64>>,
     last_advance: EpochMs,
@@ -165,6 +171,7 @@ impl FtsServer {
             let id = inner.next_id;
             inner.next_id += 1;
             let link = (job.src_site.clone(), job.dst_site.clone());
+            let priority = job.priority;
             inner.submitted_total += 1;
             *inner
                 .submitted_by_activity
@@ -183,7 +190,13 @@ impl FtsServer {
                     reason: None,
                 },
             );
-            inner.queues.entry(link).or_default().push_back(id);
+            inner
+                .queues
+                .entry(link)
+                .or_default()
+                .entry(priority)
+                .or_default()
+                .push_back(id);
             ids.push(id);
         }
         ids
@@ -206,8 +219,10 @@ impl FtsServer {
         }
         let link = (t.job.src_site.clone(), t.job.dst_site.clone());
         let was_active = t.state == TransferState::Active;
-        if let Some(q) = inner.queues.get_mut(&link) {
-            q.retain(|x| *x != id);
+        if let Some(buckets) = inner.queues.get_mut(&link) {
+            for q in buckets.values_mut() {
+                q.retain(|x| *x != id);
+            }
         }
         if let Some(a) = inner.active.get_mut(&link) {
             a.retain(|x| *x != id);
@@ -351,7 +366,9 @@ impl FtsServer {
             }
         }
 
-        // 3. start queued transfers where capacity is free
+        // 3. start queued transfers where capacity is free — per-link
+        //    concurrency cap, highest job priority first (FIFO within a
+        //    priority level)
         let links: Vec<(String, String)> = inner.queues.keys().cloned().collect();
         for link in links {
             loop {
@@ -359,9 +376,20 @@ impl FtsServer {
                 if active_n >= self.max_active_per_link {
                     break;
                 }
-                let Some(id) = inner.queues.get_mut(&link).and_then(|q| q.pop_front()) else {
-                    break;
-                };
+                let popped = inner.queues.get_mut(&link).and_then(|buckets| {
+                    let prio = buckets
+                        .iter()
+                        .rev()
+                        .find(|(_, q)| !q.is_empty())
+                        .map(|(p, _)| *p)?;
+                    let q = buckets.get_mut(&prio)?;
+                    let id = q.pop_front();
+                    if q.is_empty() {
+                        buckets.remove(&prio);
+                    }
+                    id
+                });
+                let Some(id) = popped else { break };
                 let t = inner.transfers.get_mut(&id).unwrap();
                 t.state = TransferState::Active;
                 t.started_at = Some(now);
@@ -382,12 +410,27 @@ impl FtsServer {
 
     pub fn queue_depth(&self) -> usize {
         let inner = self.inner.lock().unwrap();
-        inner.queues.values().map(|q| q.len()).sum()
+        inner
+            .queues
+            .values()
+            .map(|b| b.values().map(|q| q.len()).sum::<usize>())
+            .sum()
     }
 
     pub fn active_count(&self) -> usize {
         let inner = self.inner.lock().unwrap();
         inner.active.values().map(|v| v.len()).sum()
+    }
+
+    /// Active transfer count per directed `(src_site, dst_site)` link —
+    /// the `sim::invariants` per-link cap check reads this.
+    pub fn active_per_link(&self) -> Vec<((String, String), usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .active
+            .iter()
+            .map(|(link, ids)| (link.clone(), ids.len()))
+            .collect()
     }
 
     /// (submitted, done, failed) totals.
@@ -429,6 +472,7 @@ mod tests {
             bytes,
             adler32: synthetic_adler32(&format!("/a/f{req}"), bytes),
             activity: "Production".into(),
+            priority: 3,
         }
     }
 
@@ -485,6 +529,35 @@ mod tests {
         fts.advance(0);
         assert_eq!(fts.active_count(), 2);
         assert_eq!(fts.queue_depth(), 3);
+    }
+
+    #[test]
+    fn priority_jumps_the_link_queue() {
+        let (net, fleet, _b) = setup();
+        let fts = FtsServer::new("fts1", net, fleet.clone(), None).with_max_active(1);
+        // 3 normal jobs, then a boosted one; cap 1 ⇒ strict start order
+        let mut jobs: Vec<TransferJob> = (0..3).map(|i| job(700 + i, 1_000_000)).collect();
+        let mut hot = job(710, 1_000_000);
+        hot.priority = 5;
+        jobs.push(hot);
+        for j in &jobs {
+            seed_source(&fleet, j);
+        }
+        let ids = fts.submit(jobs, 0);
+        fts.advance(0);
+        // the boosted job starts first despite arriving last; cap holds
+        assert_eq!(fts.active_count(), 1);
+        assert_eq!(fts.active_per_link()[0].1, 1);
+        assert_eq!(fts.poll(&[ids[3]])[0].state, TransferState::Active, "boosted first");
+        assert_eq!(fts.poll(&[ids[0]])[0].state, TransferState::Submitted);
+        // when the slot frees, the rest drain in FIFO order
+        fts.advance(1_100);
+        assert_eq!(fts.poll(&[ids[3]])[0].state, TransferState::Done);
+        assert_eq!(fts.poll(&[ids[0]])[0].state, TransferState::Active);
+        assert_eq!(fts.poll(&[ids[1]])[0].state, TransferState::Submitted);
+        fts.advance(2_200);
+        assert_eq!(fts.poll(&[ids[1]])[0].state, TransferState::Active);
+        assert_eq!(fts.poll(&[ids[2]])[0].state, TransferState::Submitted);
     }
 
     #[test]

@@ -179,6 +179,14 @@ impl Network {
         self.faults.read().unwrap().len()
     }
 
+    /// Can a transfer succeed on this pair at all right now? A quality
+    /// of zero (full partition, or an explicit dead link) means no —
+    /// the conveyor's source ranking and the multi-hop path planner
+    /// route around such pairs instead of burning retries on them.
+    pub fn usable(&self, src: &str, dst: &str) -> bool {
+        self.link(src, dst).quality > 0.0
+    }
+
     /// Register a transfer starting on a pair (affects fair-share).
     pub fn acquire(&self, src: &str, dst: &str) {
         *self
@@ -334,6 +342,8 @@ mod tests {
         net.set_fault_bidir("A", "B", LinkFault::partition());
         assert_eq!(net.link("A", "B").quality, 0.0);
         assert_eq!(net.link("B", "A").quality, 0.0);
+        assert!(!net.usable("A", "B"));
+        assert!(net.usable("A", "C"), "default link is usable");
         // bandwidth floor keeps the share computation finite
         assert!(net.link("A", "B").bandwidth_bps >= 1);
         net.clear_fault_bidir("A", "B");

@@ -189,11 +189,16 @@ impl C3po {
         let mut names = Vec::new();
         let mut features = Vec::new();
         let mut mask = Vec::new();
-        // Queued requests per destination RSE (queue-pressure signal).
+        // Pending requests per destination RSE (queue-pressure signal).
+        // WAITING counts too: with the throttler enabled a flooded
+        // destination parks its backlog in admission, and placement must
+        // still see that pressure.
         let mut queued: BTreeMap<String, u32> = BTreeMap::new();
-        for id in cat.requests_by_state.get(&RequestState::Queued) {
-            if let Some(r) = cat.requests.get(&id) {
-                *queued.entry(r.dst_rse).or_insert(0) += 1;
+        for state in [RequestState::Waiting, RequestState::Queued] {
+            for id in cat.requests_by_state.get(&state) {
+                if let Some(r) = cat.requests.get(&id) {
+                    *queued.entry(r.dst_rse).or_insert(0) += 1;
+                }
             }
         }
         let ds_bytes = cat.did_bytes(dataset);

@@ -509,6 +509,61 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
         })
     });
 
+    // ---------------- transfer requests (paper §4.2 / Fig 6) ----------------
+    // Cursor-paginated NDJSON over the request table (id order), with
+    // per-page state/activity filters — the operator's view into the
+    // admission pipeline (WAITING → QUEUED → SUBMITTED → DONE/FAILED).
+    let cat = catalog.clone();
+    r.get("/requests", move |req| {
+        with_auth(&cat, req, |cat, _| {
+            let limit = parse_limit(req);
+            let cursor: Option<u64> = match req.query_get("cursor") {
+                Some(raw) => Some(raw.parse().map_err(|_| {
+                    RucioError::InvalidValue("malformed request cursor".into())
+                })?),
+                None => None,
+            };
+            let state = match req.query_get("state") {
+                Some(raw) => Some(RequestState::parse(raw).ok_or_else(|| {
+                    RucioError::InvalidValue(format!("unknown request state {raw}"))
+                })?),
+                None => None,
+            };
+            let activity = req.query_get("activity");
+            let page = cat.requests.scan_page(cursor.as_ref(), limit);
+            let items = page
+                .rows
+                .iter()
+                .filter(|t| state.map(|s| t.state == s).unwrap_or(true))
+                .filter(|t| activity.map(|a| t.activity == a).unwrap_or(true))
+                .map(request_json);
+            let mut resp = Response::ndjson(200, items);
+            if let Some(next) = page.next_cursor {
+                resp = resp.with_header("x-rucio-next-cursor", &next.to_string());
+            }
+            Ok(resp)
+        })
+    });
+    // Boost: raise a request's scheduling priority; a WAITING request
+    // bypasses the throttler immediately. Admin-only — boosting reshapes
+    // scheduling for everyone sharing the link.
+    let cat = catalog.clone();
+    r.post("/requests/{id}/boost", move |req| {
+        with_auth(&cat, req, |cat, account| {
+            if !cat.get_account(account)?.admin {
+                return Err(RucioError::AccessDenied(format!(
+                    "{account} may not boost transfer requests"
+                )));
+            }
+            let id: u64 = req
+                .param("id")?
+                .parse()
+                .map_err(|_| RucioError::InvalidValue("bad request id".into()))?;
+            let boosted = cat.boost_request(id)?;
+            Ok(Response::json(200, &request_json(&boosted)))
+        })
+    });
+
     // ---------------- traces (paper §4.6) ----------------
     let cat = catalog.clone();
     let brk = broker.clone();
@@ -614,6 +669,30 @@ fn did_json(d: &Did) -> Json {
         .with("open", d.open)
         .with("monotonic", d.monotonic)
         .with("availability", d.availability.as_str())
+}
+
+fn request_json(t: &TransferRequest) -> Json {
+    let mut j = Json::obj()
+        .with("id", t.id)
+        .with("scope", t.did.scope.as_str())
+        .with("name", t.did.name.as_str())
+        .with("dst_rse", t.dst_rse.as_str())
+        .with("rule_id", t.rule_id)
+        .with("activity", t.activity.as_str())
+        .with("state", t.state.as_str())
+        .with("priority", t.priority as u64)
+        .with("attempts", t.attempts as u64)
+        .with("bytes", t.bytes);
+    if let Some(src) = &t.src_rse {
+        j = j.with("src_rse", src.as_str());
+    }
+    if let Some(path) = &t.path {
+        j = j.with(
+            "path",
+            Json::Arr(path.iter().map(|p| Json::Str(p.clone())).collect()),
+        );
+    }
+    j
 }
 
 fn rule_json(r: &Rule) -> Json {
@@ -863,6 +942,75 @@ mod tests {
             )
             .unwrap();
         assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn request_listing_and_boost_over_http() {
+        let (srv, cat) = server();
+        let alice = RucioClient::connect(&srv.url(), "alice", "alice", "pw").unwrap();
+        // rules without replicas → queued transfer requests
+        for i in 0..5 {
+            let name = format!("req{i}");
+            alice.add_file("user.alice", &name, 100, "aabbccdd").unwrap();
+            alice.add_rule("user.alice", &name, "X-DISK", 1, None).unwrap();
+        }
+        assert_eq!(cat.requests.len(), 5);
+        let raw = crate::httpd::HttpClient::new(&srv.url());
+        let tok = alice.token().to_string();
+        raw.set_header("x-rucio-auth-token", &tok);
+
+        // cursor-paged NDJSON walk with a state filter
+        let mut seen = 0;
+        let mut url = "/requests?state=QUEUED&limit=2".to_string();
+        let mut pages = 0;
+        loop {
+            let resp = raw.get(&url).unwrap();
+            assert_eq!(resp.status, 200);
+            for j in resp.body_ndjson().unwrap() {
+                assert_eq!(j.req_str("state").unwrap(), "QUEUED");
+                assert_eq!(j.req_str("dst_rse").unwrap(), "X-DISK");
+                seen += 1;
+            }
+            pages += 1;
+            match resp.header("x-rucio-next-cursor") {
+                Some(c) => url = format!("/requests?state=QUEUED&limit=2&cursor={c}"),
+                None => break,
+            }
+            assert!(pages < 10, "cursor must advance");
+        }
+        assert_eq!(seen, 5);
+
+        // activity filter excludes everything (workload used the default)
+        let resp = raw.get("/requests?activity=NoSuchActivity").unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.body_ndjson().unwrap().is_empty());
+        // malformed state / cursor → 400
+        assert_eq!(raw.get("/requests?state=BOGUS").unwrap().status, 400);
+        assert_eq!(raw.get("/requests?cursor=xyz").unwrap().status, 400);
+
+        // boost: alice is denied, root reshapes scheduling
+        let req_id = cat.requests.scan(|_| true)[0].id;
+        let resp = raw
+            .post_json(&format!("/requests/{req_id}/boost"), &Json::obj())
+            .unwrap();
+        assert_eq!(resp.status, 403, "boost is admin-only");
+        let root = RucioClient::connect(&srv.url(), "root", "root", "rootpw").unwrap();
+        let rootraw = crate::httpd::HttpClient::new(&srv.url());
+        let roottok = root.token().to_string();
+        rootraw.set_header("x-rucio-auth-token", &roottok);
+        let resp = rootraw
+            .post_json(&format!("/requests/{req_id}/boost"), &Json::obj())
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let j = resp.body_json().unwrap();
+        assert_eq!(j.req_u64("priority").unwrap(), PRIORITY_BOOSTED as u64);
+        assert_eq!(
+            cat.requests.get(&req_id).unwrap().priority,
+            PRIORITY_BOOSTED
+        );
+        // unknown id → 404
+        let resp = rootraw.post_json("/requests/999999/boost", &Json::obj()).unwrap();
+        assert_eq!(resp.status, 404);
     }
 
     #[test]

@@ -205,6 +205,10 @@ impl Driver {
         for v in invariants::check(&self.ctx.catalog) {
             self.violations.push((now, v));
         }
+        // deployment-level: per-link FTS concurrency caps hold throughout
+        for v in invariants::check_fts_link_caps(&self.ctx) {
+            self.violations.push((now, v));
+        }
     }
 
     /// Recovery report over the captured backlog series for a fault
@@ -219,6 +223,7 @@ impl Driver {
         vec![
             Box::new(hermes::Hermes::new(ctx.clone())),
             Box::new(transmogrifier::Transmogrifier::new(ctx.clone(), "trans-1")),
+            Box::new(throttler::Throttler::new(ctx.clone(), "throt-1")),
             Box::new(conveyor::Submitter::new(ctx.clone(), "sub-1")),
             Box::new(conveyor::Receiver::new(ctx.clone())),
             Box::new(conveyor::Poller::new(ctx.clone(), "poll-1")),

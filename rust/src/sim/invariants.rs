@@ -56,6 +56,31 @@ pub fn check(cat: &Catalog) -> Vec<Violation> {
     out
 }
 
+/// Deployment-level invariant (transfer orchestration v2): on every FTS
+/// server, the number of **active** transfers per directed link never
+/// exceeds that server's configured per-link concurrency cap — however
+/// hard the throttler, a saturation storm, or a recovering backlog pushes.
+/// Needs the deployment context (FTS handles live outside the catalog),
+/// so it is a separate entry point; the chaos driver runs it alongside
+/// [`check`] on every invariant cycle.
+pub fn check_fts_link_caps(ctx: &crate::daemons::Ctx) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for fts in &ctx.fts {
+        for ((src, dst), active) in fts.active_per_link() {
+            if active > fts.max_active_per_link {
+                out.push(Violation {
+                    invariant: "fts-link-caps",
+                    detail: format!(
+                        "{}: {active} active transfers on {src}→{dst} exceed the cap {}",
+                        fts.name, fts.max_active_per_link
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
 fn check_rule_lock_tallies(cat: &Catalog, out: &mut Vec<Violation>) {
     // (rule_id -> [ok, replicating, stuck]) from the actual lock rows.
     let mut tallies: BTreeMap<u64, [u32; 3]> = BTreeMap::new();
@@ -223,7 +248,12 @@ fn check_usage_equals_locks(cat: &Catalog, out: &mut Vec<Violation>) {
 }
 
 fn check_live_requests(cat: &Catalog, out: &mut Vec<Violation>) {
-    for state in [RequestState::Queued, RequestState::Submitted, RequestState::Retry] {
+    for state in [
+        RequestState::Waiting,
+        RequestState::Queued,
+        RequestState::Submitted,
+        RequestState::Retry,
+    ] {
         for id in cat.requests_by_state.get(&state) {
             let Some(req) = cat.requests.get(&id) else { continue };
             if !cat.rules.contains(&req.rule_id) {
@@ -371,6 +401,26 @@ mod tests {
         });
         let v = check(&c);
         assert!(v.iter().any(|x| x.invariant == "usage-equals-locks"), "{v:?}");
+    }
+
+    #[test]
+    fn fts_link_cap_check_sees_overload() {
+        use crate::daemons::conveyor::tests::{rig, seed_file};
+        use crate::daemons::conveyor::Submitter;
+        use crate::daemons::Daemon;
+        let (ctx, cat) = rig();
+        for i in 0..6 {
+            let f = seed_file(&ctx, &format!("cap{i}"), 50_000_000);
+            cat.add_rule(RuleSpec::new("root", f, "DST-A", 1)).unwrap();
+        }
+        let mut submitter = Submitter::new(ctx.clone(), "s1");
+        submitter.tick(cat.now());
+        for fts in &ctx.fts {
+            fts.advance(cat.now());
+        }
+        // 6 concurrent transfers on one link, default cap 20: no violation
+        assert_eq!(check_fts_link_caps(&ctx), Vec::new());
+        assert!(ctx.fts[0].active_count() > 0);
     }
 
     #[test]

@@ -67,6 +67,16 @@ pub enum Event {
     /// Recall storm: staging rules for up to `datasets` archived RAW
     /// datasets onto Tier-1 disk (activity "Staging", 7-day lifetime).
     TapeRecallStorm { datasets: usize },
+    /// Link-saturation storm: a burst of single-activity replication
+    /// rules flooding one destination (`rse_expression`), so its inbound
+    /// links hit the throttler's admission caps and the FTS per-link
+    /// concurrency limits — the backpressure path of transfer
+    /// orchestration v2. 7-day lifetime so the flood eventually drains.
+    LinkSaturationStorm {
+        rse_expression: String,
+        datasets: usize,
+        activity: String,
+    },
 }
 
 /// A named fault timeline. Offsets are virtual milliseconds from the
@@ -183,6 +193,25 @@ pub fn apply(ctx: &Ctx, event: &Event, now: EpochMs) {
         Event::DaemonCrash { .. } | Event::DaemonRestart { .. } => {
             // handled by the driver, which owns the daemon fleet
         }
+        Event::LinkSaturationStorm { rse_expression, datasets, activity } => {
+            let mut issued = 0;
+            for d in cat.list_dids("data18", None, Some(DidType::Dataset), false) {
+                if issued >= *datasets {
+                    break;
+                }
+                if cat
+                    .add_rule(
+                        RuleSpec::new("root", d.key.clone(), rse_expression, 1)
+                            .with_lifetime(7 * DAY_MS)
+                            .with_activity(activity),
+                    )
+                    .is_ok()
+                {
+                    issued += 1;
+                }
+            }
+            cat.metrics.incr("scenario.saturation_rules", issued as u64);
+        }
         Event::TapeRecallStorm { datasets } => {
             let mut issued = 0;
             for d in cat.list_dids("data18", Some("raw.*"), Some(DidType::Dataset), false) {
@@ -294,6 +323,29 @@ mod tests {
         assert!(ctx.fts[0].is_online());
         // out-of-range indexes are ignored
         apply(&ctx, &Event::FtsDown { index: 99 }, 0);
+    }
+
+    #[test]
+    fn saturation_storm_floods_one_destination() {
+        let ctx = ctx();
+        let cat = &ctx.catalog;
+        for i in 0..4 {
+            cat.add_dataset("data18", &format!("sat.ds{i}"), "root").unwrap();
+        }
+        apply(
+            &ctx,
+            &Event::LinkSaturationStorm {
+                rse_expression: "US-T1-DISK".into(),
+                datasets: 3,
+                activity: "Production".into(),
+            },
+            0,
+        );
+        assert_eq!(cat.metrics.counter("scenario.saturation_rules"), 3);
+        let storm: Vec<_> = cat.rules.scan(|r| r.rse_expression == "US-T1-DISK");
+        assert_eq!(storm.len(), 3);
+        assert!(storm.iter().all(|r| r.activity == "Production"));
+        assert!(storm.iter().all(|r| r.expires_at.is_some()));
     }
 
     #[test]

@@ -64,11 +64,12 @@ pub fn features(
         }
         None => (1.0, 0.0, 0.0),
     };
-    let queued = cat
-        .requests_by_state
-        .get(&RequestState::Queued)
+    // Waiting counts as pressure too: an admission-held backlog on the
+    // destination is congestion the predictor must see.
+    let queued = [RequestState::Waiting, RequestState::Queued]
         .iter()
-        .filter_map(|id| cat.requests.get(id))
+        .flat_map(|s| cat.requests_by_state.get(s))
+        .filter_map(|id| cat.requests.get(&id))
         .filter(|r| r.dst_rse == dst_rse)
         .count() as f32;
     let act_prio = match activity {
@@ -288,7 +289,10 @@ impl T3c {
                 r.rule_id == rule_id
                     && matches!(
                         r.state,
-                        RequestState::Queued | RequestState::Submitted | RequestState::Retry
+                        RequestState::Waiting
+                            | RequestState::Queued
+                            | RequestState::Submitted
+                            | RequestState::Retry
                     )
             })
             .into_iter()

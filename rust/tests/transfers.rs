@@ -1,0 +1,361 @@
+//! Transfer orchestration v2, end to end: the admission-controlled
+//! request pipeline (throttler → conveyor → ftssim), the failure/retry
+//! path, multi-hop routing when no direct link exists (with staging
+//! replicas reaped afterwards), and a full chaos run combining a
+//! link-saturation storm with an inter-region partition — asserting the
+//! per-link cap invariant, non-starvation of a low-share activity, and
+//! multi-hop convergence of a partitioned rule.
+
+use std::sync::Arc;
+
+use rucio::common::clock::{Clock, EpochMs, HOUR_MS, MINUTE_MS};
+use rucio::common::config::Config;
+use rucio::core::rse::Rse;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{DidKey, ReplicaState, RequestState, RuleState};
+use rucio::core::Catalog;
+use rucio::daemons::conveyor::{Poller, Submitter};
+use rucio::daemons::reaper::Reaper;
+use rucio::daemons::throttler::Throttler;
+use rucio::daemons::{Ctx, Daemon};
+use rucio::ftssim::FtsServer;
+use rucio::mq::Broker;
+use rucio::netsim::{Link, LinkFault, Network};
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::GridSpec;
+use rucio::sim::invariants;
+use rucio::sim::scenario::{Event, Scenario};
+use rucio::sim::workload::WorkloadSpec;
+use rucio::storagesim::{synthetic_adler32_for, Fleet, StorageKind, StorageSystem};
+
+/// Throttler-enabled deployment: SRC / MID / DST disk RSEs, fast links,
+/// one FTS server.
+fn rig() -> (Ctx, Arc<Catalog>) {
+    let mut cfg = Config::new();
+    cfg.set("throttler", "enabled", "true");
+    cfg.set("throttler", "max_per_link", "2");
+    cfg.set("conveyor", "retry_delay", "1m");
+    let catalog = Arc::new(Catalog::new(Clock::sim_at(1_600_000_000_000), cfg));
+    let now = catalog.now();
+    catalog.add_scope("data18", "root").unwrap();
+    let fleet = Arc::new(Fleet::new());
+    let net = Arc::new(Network::new());
+    for name in ["SRC", "MID", "DST"] {
+        catalog
+            .add_rse(Rse::new(name, now).with_attr("site", name).with_attr("type", "disk"))
+            .unwrap();
+        fleet.add(StorageSystem::new(name, StorageKind::Disk, u64::MAX));
+    }
+    for a in ["SRC", "MID", "DST"] {
+        for b in ["SRC", "MID", "DST"] {
+            if a != b {
+                net.set_link(a, b, Link::new(100_000_000, 5, 1.0));
+            }
+        }
+    }
+    let broker = Broker::new();
+    let fts = vec![Arc::new(FtsServer::new(
+        "fts1",
+        net.clone(),
+        fleet.clone(),
+        Some(broker.clone()),
+    ))];
+    let ctx = Ctx::new(catalog.clone(), fleet, net, fts, broker);
+    (ctx, catalog)
+}
+
+/// Register a file; optionally put its bytes on the SRC endpoint.
+fn seed_file(ctx: &Ctx, name: &str, bytes: u64, put: bool) -> DidKey {
+    let cat = &ctx.catalog;
+    let adler = synthetic_adler32_for(name, bytes);
+    cat.add_file("data18", name, "root", bytes, &adler, None).unwrap();
+    let key = DidKey::new("data18", name);
+    let rep = cat.add_replica("SRC", &key, ReplicaState::Available, None).unwrap();
+    if put {
+        ctx.fleet.get("SRC").unwrap().put(&rep.pfn, bytes, cat.now()).unwrap();
+    }
+    key
+}
+
+fn advance(ctx: &Ctx, ms: i64) -> EpochMs {
+    for fts in &ctx.fts {
+        fts.advance(ctx.catalog.now());
+    }
+    if let Clock::Sim(s) = &ctx.catalog.clock {
+        s.advance(ms);
+    }
+    let now = ctx.catalog.now();
+    for fts in &ctx.fts {
+        fts.advance(now);
+    }
+    now
+}
+
+fn assert_clean(cat: &Catalog) {
+    assert_eq!(invariants::check(cat), Vec::new());
+}
+
+#[test]
+fn full_lifecycle_waiting_queued_submitted_done() {
+    let (ctx, cat) = rig();
+    let f = seed_file(&ctx, "ok1", 1_000_000, true);
+    let rid = cat.add_rule(RuleSpec::new("root", f.clone(), "DST", 1)).unwrap();
+
+    let req = cat.requests.scan(|_| true)[0].clone();
+    assert_eq!(req.state, RequestState::Waiting, "admission state first");
+
+    let mut throttler = Throttler::new(ctx.clone(), "t1");
+    let mut submitter = Submitter::new(ctx.clone(), "s1");
+    let mut poller = Poller::new(ctx.clone(), "p1");
+
+    // the submitter must not see unadmitted work
+    submitter.tick(cat.now());
+    assert_eq!(cat.requests.get(&req.id).unwrap().state, RequestState::Waiting);
+
+    // throttler admits, submitter submits
+    assert_eq!(throttler.tick(cat.now()), 1);
+    assert_eq!(cat.requests.get(&req.id).unwrap().state, RequestState::Queued);
+    submitter.tick(cat.now());
+    let sub = cat.requests.get(&req.id).unwrap();
+    assert_eq!(sub.state, RequestState::Submitted);
+    assert_eq!(sub.src_rse.as_deref(), Some("SRC"));
+    assert!(sub.external_id.is_some());
+
+    // bytes move, poller finishes the rule
+    let now = advance(&ctx, 15_000);
+    poller.tick(now);
+    assert_eq!(cat.requests.get(&req.id).unwrap().state, RequestState::Done);
+    assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok);
+    assert_eq!(cat.get_replica("DST", &f).unwrap().state, ReplicaState::Available);
+    assert_clean(&cat);
+}
+
+#[test]
+fn failure_backs_off_then_retry_succeeds() {
+    let (ctx, cat) = rig();
+    // registered in the catalog but missing on storage → SOURCE error
+    let f = seed_file(&ctx, "flaky", 1_000_000, false);
+    let rid = cat.add_rule(RuleSpec::new("root", f.clone(), "DST", 1)).unwrap();
+
+    let mut throttler = Throttler::new(ctx.clone(), "t1");
+    let mut submitter = Submitter::new(ctx.clone(), "s1");
+    let mut poller = Poller::new(ctx.clone(), "p1");
+
+    throttler.tick(cat.now());
+    submitter.tick(cat.now());
+    let now = advance(&ctx, 15_000);
+    poller.tick(now);
+    let req = cat.requests.scan(|_| true)[0].clone();
+    assert_eq!(req.state, RequestState::Retry, "source error backs off");
+    assert_eq!(req.attempts, 1);
+    assert!(req.last_error.as_deref().unwrap_or("").contains("SOURCE"));
+    assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Replicating);
+
+    // the bytes appear; after the backoff the retry drives to DONE
+    let src_pfn = cat.get_replica("SRC", &f).unwrap().pfn;
+    ctx.fleet.get("SRC").unwrap().put(&src_pfn, 1_000_000, cat.now()).unwrap();
+    let now = advance(&ctx, 61_000); // past retry_delay = 1m
+    submitter.tick(now); // promotes due retries, then submits
+    assert_eq!(cat.requests.get(&req.id).unwrap().state, RequestState::Submitted);
+    let now = advance(&ctx, 15_000);
+    poller.tick(now);
+    assert_eq!(cat.requests.get(&req.id).unwrap().state, RequestState::Done);
+    assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok);
+    assert_clean(&cat);
+}
+
+#[test]
+fn no_direct_link_multihop_chain_completes_and_is_reaped() {
+    let (ctx, cat) = rig();
+    let f = seed_file(&ctx, "far", 2_000_000, true);
+    // the network between SRC and DST is partitioned; SRC→MID→DST lives
+    ctx.net.set_fault_bidir("SRC", "DST", LinkFault::partition());
+    let rid = cat.add_rule(RuleSpec::new("root", f.clone(), "DST", 1)).unwrap();
+
+    let mut throttler = Throttler::new(ctx.clone(), "t1");
+    let mut submitter = Submitter::new(ctx.clone(), "s1");
+    let mut poller = Poller::new(ctx.clone(), "p1");
+    let mut reaper = Reaper::new(ctx.clone(), "r1");
+
+    let mut hop_seen = false;
+    for _ in 0..20 {
+        let now = ctx.catalog.now();
+        throttler.tick(now);
+        submitter.tick(now);
+        let now = advance(&ctx, 30_000);
+        poller.tick(now);
+        reaper.tick(now);
+        if let Ok(rep) = cat.get_replica("MID", &f) {
+            hop_seen = true;
+            let req = cat.requests.scan(|_| true)[0].clone();
+            assert_eq!(
+                req.path,
+                Some(vec!["SRC".into(), "MID".into(), "DST".into()]),
+                "planned chain recorded on the request"
+            );
+            assert!(rep.lock_count == 0, "staging replicas are never rule-locked");
+        }
+        if cat.get_rule(rid).unwrap().state == RuleState::Ok
+            && cat.get_replica("MID", &f).is_err()
+        {
+            break;
+        }
+    }
+    assert!(hop_seen, "the chain staged through MID");
+    assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok, "partitioned rule converges");
+    assert_eq!(cat.get_replica("DST", &f).unwrap().state, ReplicaState::Available);
+    // the intermediate replica was tombstoned on completion and reaped
+    assert!(cat.get_replica("MID", &f).is_err(), "staging copy reaped");
+    assert_eq!(ctx.fleet.get("MID").unwrap().file_count(), 0, "bytes gone too");
+    assert_clean(&cat);
+}
+
+#[test]
+fn throttler_caps_inflight_while_storm_drains() {
+    let (ctx, cat) = rig();
+    for i in 0..12 {
+        let f = seed_file(&ctx, &format!("storm{i}"), 500_000, true);
+        cat.add_rule(RuleSpec::new("root", f, "DST", 1)).unwrap();
+    }
+    let mut throttler = Throttler::new(ctx.clone(), "t1");
+    let mut submitter = Submitter::new(ctx.clone(), "s1");
+    let mut poller = Poller::new(ctx.clone(), "p1");
+    for _ in 0..30 {
+        let now = ctx.catalog.now();
+        throttler.tick(now);
+        // the admission cap (max_per_link = 2) bounds released work
+        let released = cat.requests.count_where(|r| {
+            matches!(r.state, RequestState::Queued | RequestState::Submitted)
+        });
+        assert!(released <= 2, "cap exceeded: {released}");
+        submitter.tick(now);
+        let now = advance(&ctx, 30_000);
+        poller.tick(now);
+        if cat.requests.count_where(|r| r.state == RequestState::Done) == 12 {
+            break;
+        }
+    }
+    assert_eq!(
+        cat.requests.count_where(|r| r.state == RequestState::Done),
+        12,
+        "the whole storm drains through the cap"
+    );
+    assert_clean(&cat);
+}
+
+/// The acceptance scenario: a link-saturation storm on one destination
+/// plus a DE↔FR partition, on the full simulated grid with the throttler
+/// enabled. Throughout the run the invariant set (including the FTS
+/// per-link cap check) holds; the low-share activity is not starved; and
+/// the partitioned src→dst rule converges to OK via a multi-hop chain
+/// whose staging replicas are eventually reaped.
+#[test]
+fn saturation_storm_with_partition_converges_under_caps() {
+    const TICK: i64 = 10 * MINUTE_MS;
+    let seed = 2042;
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "1h");
+    cfg.set("heartbeat", "ttl", "45m");
+    cfg.set("throttler", "enabled", "true");
+    cfg.set("throttler", "max_per_link", "6");
+    cfg.set("throttler", "share.Production", "4");
+    cfg.set("throttler", "share.Analysis", "1");
+    let mut d = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 3,
+            files_per_dataset: 3,
+            median_file_bytes: 200_000_000,
+            derivations_per_day: 2,
+            analysis_accesses_per_day: 20,
+            seed: seed ^ 0xA0D,
+            ..Default::default()
+        },
+        cfg,
+    );
+    d.enable_invariant_checks(2 * HOUR_MS);
+    d.run_days(1, TICK); // warm steady state (datasets exist for the storm)
+
+    let cat = d.ctx.catalog.clone();
+    let now = cat.now();
+
+    // A file whose only copy sits in DE, ruled onto FR while DE↔FR is
+    // partitioned: only a multi-hop chain can satisfy it.
+    let bytes = 80_000_000u64;
+    let adler = synthetic_adler32_for("part.file", bytes);
+    cat.add_file("data18", "part.file", "root", bytes, &adler, None).unwrap();
+    let pf = DidKey::new("data18", "part.file");
+    let rep = cat.add_replica("DE-T1-DISK", &pf, ReplicaState::Available, None).unwrap();
+    d.ctx.fleet.get("DE-T1-DISK").unwrap().put(&rep.pfn, bytes, now).unwrap();
+    cat.add_rule(RuleSpec::new("root", pf.clone(), "DE-T1-DISK", 1)).unwrap(); // pin source
+    let far_rule = cat
+        .add_rule(RuleSpec::new("root", pf.clone(), "FR-T1-DISK", 1).with_activity("Production"))
+        .unwrap();
+
+    // Low-share analysis pulls toward the destination the storm floods.
+    let mut analysis_rules = Vec::new();
+    for i in 0..4 {
+        let name = format!("ana.file{i}");
+        let bytes = 50_000_000u64;
+        let adler = synthetic_adler32_for(&name, bytes);
+        cat.add_file("data18", &name, "root", bytes, &adler, None).unwrap();
+        let key = DidKey::new("data18", &name);
+        let rep = cat.add_replica("CERN-PROD", &key, ReplicaState::Available, None).unwrap();
+        d.ctx.fleet.get("CERN-PROD").unwrap().put(&rep.pfn, bytes, now).unwrap();
+        cat.add_rule(RuleSpec::new("root", key.clone(), "CERN-PROD", 1)).unwrap(); // pin
+        analysis_rules.push(
+            cat.add_rule(RuleSpec::new("root", key, "US-T2-1", 1).with_activity("Analysis"))
+                .unwrap(),
+        );
+    }
+
+    d.schedule_scenario(
+        &Scenario::new("saturation storm + partition")
+            .at(0, Event::NetworkPartition { region_a: "DE".into(), region_b: "FR".into() })
+            .at(0, Event::LinkSaturationStorm {
+                rse_expression: "US-T2-1".into(),
+                datasets: 20,
+                activity: "Production".into(),
+            }),
+    );
+    d.run_days(2, TICK);
+
+    // 1. every invariant — including the FTS per-link cap — held at every
+    //    check point of the run
+    assert!(
+        d.violations.is_empty(),
+        "invariants violated: {:?}",
+        d.violations.iter().take(5).collect::<Vec<_>>()
+    );
+    assert!(cat.metrics.counter("scenario.saturation_rules") > 0, "storm fired");
+    assert!(cat.metrics.counter("throttler.released") > 0, "admission control ran");
+
+    // 2. the low-share activity was not starved: all its rules are OK
+    for rid in &analysis_rules {
+        assert_eq!(
+            cat.get_rule(*rid).unwrap().state,
+            RuleState::Ok,
+            "low-share Analysis rule {rid} starved"
+        );
+    }
+
+    // 3. the partitioned pair converged via a multi-hop chain...
+    assert!(cat.metrics.counter("conveyor.multihop.planned") > 0, "chain planned");
+    assert_eq!(
+        cat.get_rule(far_rule).unwrap().state,
+        RuleState::Ok,
+        "partitioned DE→FR rule converges via multi-hop"
+    );
+    assert_eq!(cat.get_replica("FR-T1-DISK", &pf).unwrap().state, ReplicaState::Available);
+    // ...and its staging replicas are gone again: only the pinned source
+    // and the ruled destination remain
+    let mut where_now: Vec<String> =
+        cat.list_replicas(&pf).into_iter().map(|r| r.rse).collect();
+    where_now.sort();
+    assert_eq!(
+        where_now,
+        vec!["DE-T1-DISK".to_string(), "FR-T1-DISK".to_string()],
+        "intermediate replicas eventually reaped"
+    );
+}
