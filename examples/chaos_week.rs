@@ -1,11 +1,18 @@
 //! Chaos week: seven simulated days of grid operations under a rolling
 //! sequence of incidents — a Tier-1 site outage, an inter-region network
 //! partition, a corruption burst, an FTS server outage, a daemon crash,
-//! a drain, and a tape-recall storm — with the system-invariant checker
-//! running every 30 virtual minutes throughout.
+//! a drain, a tape-recall storm, and (day 7) a full catalog process
+//! crash recovered live from the write-ahead log + snapshots — with the
+//! system-invariant checker running every 30 virtual minutes throughout.
 //!
-//! Prints the per-day stats, the per-incident recovery report, and the
-//! invariant verdict; exits non-zero if any invariant was ever violated.
+//! Durability is on for the whole week: every catalog mutation is
+//! WAL-logged and the checkpointer daemon snapshots all tables every
+//! few virtual hours, so the `ProcessCrash` event drops the in-memory
+//! catalog and cold-boots it from disk mid-run.
+//!
+//! Prints the per-day stats, the per-incident recovery report, the
+//! durability summary, and the invariant verdict; exits non-zero if any
+//! invariant was ever violated (or the crash failed to recover).
 //!
 //! Run: `cargo run --release --example chaos_week`
 
@@ -21,10 +28,14 @@ use rucio::sim::workload::WorkloadSpec;
 fn main() {
     rucio::common::logx::init(0);
     let seed = 2026;
+    let wal_dir = std::env::temp_dir().join(format!("rucio-chaos-week-{}", std::process::id()));
     let mut cfg = Config::new();
     cfg.set("common", "seed", seed.to_string());
     cfg.set("reaper", "tombstone_grace", "2h");
     cfg.set("heartbeat", "ttl", "45m");
+    // durability: WAL every mutation, checkpoint every 4 virtual hours
+    cfg.set("db", "wal_dir", wal_dir.to_string_lossy().to_string());
+    cfg.set("db", "checkpoint_interval", "4h");
     let mut driver = standard_driver(
         &GridSpec { t2_per_region: 1, seed, ..Default::default() },
         WorkloadSpec {
@@ -59,7 +70,10 @@ fn main() {
         .at_hours(125, Event::DaemonRestart { daemon: "conveyor-submitter".into(), which: 0 })
         // day 6: drain a Canadian Tier-2, and a recall storm hits the tapes
         .at_hours(146, Event::RseDrain { rse: "CA-T2-1".into() })
-        .at_hours(148, Event::TapeRecallStorm { datasets: 10 });
+        .at_hours(148, Event::TapeRecallStorm { datasets: 10 })
+        // day 7: the catalog process dies; the driver cold-boots it from
+        // WAL + snapshots and the fleet resumes against the recovered state
+        .at_hours(158, Event::ProcessCrash);
     let t0 = driver.ctx.catalog.now();
     driver.schedule_scenario(&week);
     driver.run_days(7, 10 * MINUTE_MS);
@@ -105,8 +119,30 @@ fn main() {
     }
     rec.print();
 
-    // ---- verdict
+    // ---- durability summary
     let cat = &driver.ctx.catalog;
+    let wal_bytes: u64 = cat
+        .registry
+        .wal_stats()
+        .values()
+        .map(|s| s.bytes)
+        .sum();
+    println!(
+        "\ndurability: {} process crash(es) recovered | {} rows from snapshots, \
+         {} WAL ops replayed, {} ms recovery | {} checkpoints | {:.1} MB live WAL",
+        driver.process_crashes,
+        cat.metrics.gauge("db.recovered_rows"),
+        cat.metrics.gauge("db.recovery_replayed_ops"),
+        cat.metrics.gauge("db.recovery_ms"),
+        cat.metrics.counter("checkpointer.runs"),
+        wal_bytes as f64 / 1e6,
+    );
+    if driver.process_crashes != 1 {
+        eprintln!("chaos week FAILED: ProcessCrash did not recover");
+        std::process::exit(1);
+    }
+
+    // ---- verdict
     let total = cat.rules.len();
     let ok = cat.rules_by_state.count(&RuleState::Ok);
     println!(
@@ -120,6 +156,7 @@ fn main() {
         driver.samples.len(),
         driver.violations.len()
     );
+    std::fs::remove_dir_all(&wal_dir).ok();
     if driver.violations.is_empty() {
         println!("chaos week survived: all system invariants held throughout.");
     } else {

@@ -37,6 +37,13 @@ impl IdGen {
     pub fn peek(&self) -> u64 {
         self.next.load(Ordering::Relaxed)
     }
+
+    /// Raise the high-water mark to at least `n` (never lowers it). The
+    /// catalog recovery path uses this so ids allocated before a crash
+    /// are never re-issued after it.
+    pub fn bump_to(&self, n: u64) {
+        self.next.fetch_max(n, Ordering::Relaxed);
+    }
 }
 
 /// Render an id as a 32-hex-char token body (uuid-like, no dashes), mixing
@@ -67,6 +74,16 @@ mod tests {
         assert_eq!(t1.len(), 32);
         assert_ne!(t1, t2);
         assert!(t1.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn bump_to_only_raises() {
+        let g = IdGen::new();
+        g.bump_to(100);
+        assert_eq!(g.peek(), 100);
+        g.bump_to(50);
+        assert_eq!(g.peek(), 100, "bump never lowers the mark");
+        assert_eq!(g.next(), 100);
     }
 
     #[test]

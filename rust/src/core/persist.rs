@@ -1,0 +1,1306 @@
+//! [`Durable`] (WAL/snapshot JSON codec) implementations for every
+//! catalog row type — the schema half of the §3.6 persistence layer.
+//!
+//! Encoding notes:
+//! * Plain integers ride as JSON numbers (exact below 2^53 — file sizes,
+//!   timestamps and ids never approach that). The one exception is
+//!   [`MetaValue::Int`], whose contract includes exact i64s beyond 2^53
+//!   (PR 3's planner tests) — it is string-encoded.
+//! * Floats ([`MetaValue::Float`]) use Rust's shortest-round-trip
+//!   `Display`, re-canonicalized on decode (`-0.0` → `0.0`) so the
+//!   inverted index order survives a restart byte-for-byte.
+//! * Subscription filters persist their `meta-expr` through the
+//!   canonical printer; `parse(print(e)) == e` is property-tested in
+//!   [`crate::core::metaexpr`].
+//! * Tuple keys encode as JSON arrays (the `Remove` side of the log).
+//!
+//! Every codec is exercised by the round-trip tests below and, end to
+//! end, by the crash-recovery equivalence suite in `rust/tests/recovery.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::common::error::{Result, RucioError};
+use crate::db::wal::Durable;
+use crate::jsonx::Json;
+
+use super::metaexpr::{self, MetaValue};
+use super::rse::{Distance, PathAlgorithm, Protocol, Rse};
+use super::subscriptions::{Subscription, SubscriptionFilter, SubscriptionRule};
+use super::types::*;
+
+// ---------------------------------------------------------------------
+// field helpers
+// ---------------------------------------------------------------------
+
+fn bad(what: &str) -> RucioError {
+    RucioError::JsonError(format!("persist: {what}"))
+}
+
+fn req_string(j: &Json, k: &str) -> Result<String> {
+    Ok(j.req_str(k)?.to_string())
+}
+
+fn opt_string(j: &Json, k: &str) -> Option<String> {
+    j.opt_str(k).map(str::to_string)
+}
+
+fn req_bool(j: &Json, k: &str) -> Result<bool> {
+    j.opt_bool(k).ok_or_else(|| bad(&format!("missing bool field '{k}'")))
+}
+
+fn req_u32(j: &Json, k: &str) -> Result<u32> {
+    Ok(j.req_u64(k)? as u32)
+}
+
+fn req_u8(j: &Json, k: &str) -> Result<u8> {
+    Ok(j.req_u64(k)? as u8)
+}
+
+fn arr_item<'a>(j: &'a Json, i: usize) -> Result<&'a Json> {
+    j.as_arr()
+        .and_then(|a| a.get(i))
+        .ok_or_else(|| bad(&format!("key tuple missing element {i}")))
+}
+
+fn str_item(j: &Json, i: usize) -> Result<String> {
+    arr_item(j, i)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| bad(&format!("key tuple element {i} not a string")))
+}
+
+fn u64_item(j: &Json, i: usize) -> Result<u64> {
+    arr_item(j, i)?
+        .as_u64()
+        .ok_or_else(|| bad(&format!("key tuple element {i} not a u64")))
+}
+
+// ---------------------------------------------------------------------
+// shared value codecs
+// ---------------------------------------------------------------------
+
+fn didkey_to_json(k: &DidKey) -> Json {
+    Json::obj().with("s", k.scope.as_str()).with("n", k.name.as_str())
+}
+
+fn didkey_from_json(j: &Json) -> Result<DidKey> {
+    Ok(DidKey { scope: req_string(j, "s")?, name: req_string(j, "n")? })
+}
+
+fn opt_didkey_from_json(j: Option<&Json>) -> Result<Option<DidKey>> {
+    match j {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(didkey_from_json(v)?)),
+    }
+}
+
+/// Typed metadata value: tagged so lexical typing never re-runs on
+/// recovery (a string `"358031"` must come back a string, not an int),
+/// with `Int` string-encoded for exactness past 2^53.
+fn metavalue_to_json(v: &MetaValue) -> Json {
+    match v {
+        MetaValue::Bool(b) => Json::obj().with("t", "b").with("v", *b),
+        MetaValue::Int(i) => Json::obj().with("t", "i").with("v", i.to_string()),
+        MetaValue::Float(f) => Json::obj().with("t", "f").with("v", format!("{f}")),
+        MetaValue::Str(s) => Json::obj().with("t", "s").with("v", s.as_str()),
+    }
+}
+
+fn metavalue_from_json(j: &Json) -> Result<MetaValue> {
+    match j.req_str("t")? {
+        "b" => Ok(MetaValue::Bool(req_bool(j, "v")?)),
+        "i" => {
+            let v = j.req_str("v")?;
+            Ok(MetaValue::Int(
+                v.parse::<i64>().map_err(|e| bad(&format!("bad int meta '{v}': {e}")))?,
+            ))
+        }
+        "f" => {
+            let v = j.req_str("v")?;
+            Ok(MetaValue::Float(metaexpr::canonical_f64(
+                v.parse::<f64>().map_err(|e| bad(&format!("bad float meta '{v}': {e}")))?,
+            )))
+        }
+        "s" => Ok(MetaValue::Str(req_string(j, "v")?)),
+        other => Err(bad(&format!("unknown meta value type '{other}'"))),
+    }
+}
+
+fn meta_to_json(m: &BTreeMap<String, MetaValue>) -> Json {
+    let mut out = BTreeMap::new();
+    for (k, v) in m {
+        out.insert(k.clone(), metavalue_to_json(v));
+    }
+    Json::Obj(out)
+}
+
+fn meta_from_json(j: &Json) -> Result<BTreeMap<String, MetaValue>> {
+    let obj = j.as_obj().ok_or_else(|| bad("meta must be an object"))?;
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        out.insert(k.clone(), metavalue_from_json(v)?);
+    }
+    Ok(out)
+}
+
+fn string_map_to_json(m: &BTreeMap<String, String>) -> Json {
+    let mut out = BTreeMap::new();
+    for (k, v) in m {
+        out.insert(k.clone(), Json::Str(v.clone()));
+    }
+    Json::Obj(out)
+}
+
+fn string_map_from_json(j: &Json) -> Result<BTreeMap<String, String>> {
+    let obj = j.as_obj().ok_or_else(|| bad("attribute map must be an object"))?;
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        out.insert(
+            k.clone(),
+            v.as_str().map(str::to_string).ok_or_else(|| bad("attribute not a string"))?,
+        );
+    }
+    Ok(out)
+}
+
+fn string_vec_from_json(j: &Json, what: &str) -> Result<Vec<String>> {
+    j.as_arr()
+        .ok_or_else(|| bad(&format!("{what} must be an array")))?
+        .iter()
+        .map(|x| x.as_str().map(str::to_string).ok_or_else(|| bad(&format!("{what} element"))))
+        .collect()
+}
+
+fn opt_string_vec_from_json(j: Option<&Json>, what: &str) -> Result<Option<Vec<String>>> {
+    match j {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(string_vec_from_json(v, what)?)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// enum codecs (all via the catalog's canonical string spellings)
+// ---------------------------------------------------------------------
+
+fn did_type_from(s: &str) -> Result<DidType> {
+    match s {
+        "FILE" => Ok(DidType::File),
+        "DATASET" => Ok(DidType::Dataset),
+        "CONTAINER" => Ok(DidType::Container),
+        other => Err(bad(&format!("unknown did type '{other}'"))),
+    }
+}
+
+fn availability_from(s: &str) -> Result<Availability> {
+    match s {
+        "AVAILABLE" => Ok(Availability::Available),
+        "LOST" => Ok(Availability::Lost),
+        "DELETED" => Ok(Availability::Deleted),
+        other => Err(bad(&format!("unknown availability '{other}'"))),
+    }
+}
+
+fn replica_state_from(s: &str) -> Result<ReplicaState> {
+    match s {
+        "AVAILABLE" => Ok(ReplicaState::Available),
+        "COPYING" => Ok(ReplicaState::Copying),
+        "BAD" => Ok(ReplicaState::Bad),
+        "SUSPICIOUS" => Ok(ReplicaState::Suspicious),
+        other => Err(bad(&format!("unknown replica state '{other}'"))),
+    }
+}
+
+fn rule_state_from(s: &str) -> Result<RuleState> {
+    match s {
+        "OK" => Ok(RuleState::Ok),
+        "REPLICATING" => Ok(RuleState::Replicating),
+        "STUCK" => Ok(RuleState::Stuck),
+        "SUSPENDED" => Ok(RuleState::Suspended),
+        other => Err(bad(&format!("unknown rule state '{other}'"))),
+    }
+}
+
+fn lock_state_to(s: LockState) -> &'static str {
+    match s {
+        LockState::Ok => "OK",
+        LockState::Replicating => "REPLICATING",
+        LockState::Stuck => "STUCK",
+    }
+}
+
+fn lock_state_from(s: &str) -> Result<LockState> {
+    match s {
+        "OK" => Ok(LockState::Ok),
+        "REPLICATING" => Ok(LockState::Replicating),
+        "STUCK" => Ok(LockState::Stuck),
+        other => Err(bad(&format!("unknown lock state '{other}'"))),
+    }
+}
+
+fn account_type_to(t: AccountType) -> &'static str {
+    match t {
+        AccountType::User => "USER",
+        AccountType::Group => "GROUP",
+        AccountType::Service => "SERVICE",
+    }
+}
+
+fn account_type_from(s: &str) -> Result<AccountType> {
+    match s {
+        "USER" => Ok(AccountType::User),
+        "GROUP" => Ok(AccountType::Group),
+        "SERVICE" => Ok(AccountType::Service),
+        other => Err(bad(&format!("unknown account type '{other}'"))),
+    }
+}
+
+fn auth_type_from(s: &str) -> Result<AuthType> {
+    AuthType::parse(s).ok_or_else(|| bad(&format!("unknown auth type '{s}'")))
+}
+
+fn path_algorithm_to(a: &PathAlgorithm) -> &'static str {
+    match a {
+        PathAlgorithm::HashDeterministic => "hash",
+        PathAlgorithm::FlatDeterministic => "flat",
+        PathAlgorithm::NonDeterministic => "nondet",
+    }
+}
+
+fn path_algorithm_from(s: &str) -> Result<PathAlgorithm> {
+    match s {
+        "hash" => Ok(PathAlgorithm::HashDeterministic),
+        "flat" => Ok(PathAlgorithm::FlatDeterministic),
+        "nondet" => Ok(PathAlgorithm::NonDeterministic),
+        other => Err(bad(&format!("unknown path algorithm '{other}'"))),
+    }
+}
+
+fn request_state_from(s: &str) -> Result<RequestState> {
+    RequestState::parse(s).ok_or_else(|| bad(&format!("unknown request state '{s}'")))
+}
+
+// ---------------------------------------------------------------------
+// row codecs
+// ---------------------------------------------------------------------
+
+impl Durable for Did {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("key", didkey_to_json(&self.key))
+            .with("did_type", self.did_type.as_str())
+            .with("account", self.account.as_str())
+            .with("bytes", self.bytes)
+            .with("adler32", self.adler32.as_str())
+            .with("md5", self.md5.clone())
+            .with("guid", self.guid.clone())
+            .with("open", self.open)
+            .with("monotonic", self.monotonic)
+            .with("suppressed", self.suppressed)
+            .with("availability", self.availability.as_str())
+            .with("meta", meta_to_json(&self.meta))
+            .with("created_at", self.created_at)
+            .with("expired_at", self.expired_at)
+            .with("constituent_of", self.constituent_of.as_ref().map(didkey_to_json))
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Did {
+            key: didkey_from_json(j.get("key").ok_or_else(|| bad("did without key"))?)?,
+            did_type: did_type_from(j.req_str("did_type")?)?,
+            account: req_string(j, "account")?,
+            bytes: j.req_u64("bytes")?,
+            adler32: req_string(j, "adler32")?,
+            md5: opt_string(j, "md5"),
+            guid: opt_string(j, "guid"),
+            open: req_bool(j, "open")?,
+            monotonic: req_bool(j, "monotonic")?,
+            suppressed: req_bool(j, "suppressed")?,
+            availability: availability_from(j.req_str("availability")?)?,
+            meta: meta_from_json(j.get("meta").ok_or_else(|| bad("did without meta"))?)?,
+            created_at: j.req_i64("created_at")?,
+            expired_at: j.opt_i64("expired_at"),
+            constituent_of: opt_didkey_from_json(j.get("constituent_of"))?,
+        })
+    }
+
+    fn key_to_json(key: &DidKey) -> Json {
+        didkey_to_json(key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<DidKey> {
+        didkey_from_json(j)
+    }
+}
+
+impl Durable for Attachment {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("parent", didkey_to_json(&self.parent))
+            .with("child", didkey_to_json(&self.child))
+            .with("created_at", self.created_at)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Attachment {
+            parent: didkey_from_json(j.get("parent").ok_or_else(|| bad("attachment parent"))?)?,
+            child: didkey_from_json(j.get("child").ok_or_else(|| bad("attachment child"))?)?,
+            created_at: j.req_i64("created_at")?,
+        })
+    }
+
+    fn key_to_json(key: &(DidKey, DidKey)) -> Json {
+        Json::Arr(vec![didkey_to_json(&key.0), didkey_to_json(&key.1)])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(DidKey, DidKey)> {
+        Ok((didkey_from_json(arr_item(j, 0)?)?, didkey_from_json(arr_item(j, 1)?)?))
+    }
+}
+
+impl Durable for NameTombstone {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("key", didkey_to_json(&self.key))
+            .with("deleted_at", self.deleted_at)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(NameTombstone {
+            key: didkey_from_json(j.get("key").ok_or_else(|| bad("tombstone key"))?)?,
+            deleted_at: j.req_i64("deleted_at")?,
+        })
+    }
+
+    fn key_to_json(key: &DidKey) -> Json {
+        didkey_to_json(key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<DidKey> {
+        didkey_from_json(j)
+    }
+}
+
+impl Durable for Replica {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("rse", self.rse.as_str())
+            .with("did", didkey_to_json(&self.did))
+            .with("bytes", self.bytes)
+            .with("state", self.state.as_str())
+            .with("pfn", self.pfn.as_str())
+            .with("lock_count", self.lock_count)
+            .with("tombstone", self.tombstone)
+            .with("accessed_at", self.accessed_at)
+            .with("created_at", self.created_at)
+            .with("error_count", self.error_count)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Replica {
+            rse: req_string(j, "rse")?,
+            did: didkey_from_json(j.get("did").ok_or_else(|| bad("replica did"))?)?,
+            bytes: j.req_u64("bytes")?,
+            state: replica_state_from(j.req_str("state")?)?,
+            pfn: req_string(j, "pfn")?,
+            lock_count: req_u32(j, "lock_count")?,
+            tombstone: j.opt_i64("tombstone"),
+            accessed_at: j.req_i64("accessed_at")?,
+            created_at: j.req_i64("created_at")?,
+            error_count: req_u32(j, "error_count")?,
+        })
+    }
+
+    fn key_to_json(key: &(String, DidKey)) -> Json {
+        Json::Arr(vec![Json::Str(key.0.clone()), didkey_to_json(&key.1)])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(String, DidKey)> {
+        Ok((str_item(j, 0)?, didkey_from_json(arr_item(j, 1)?)?))
+    }
+}
+
+impl Durable for Rule {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id)
+            .with("account", self.account.as_str())
+            .with("did", didkey_to_json(&self.did))
+            .with("rse_expression", self.rse_expression.as_str())
+            .with("copies", self.copies)
+            .with("state", self.state.as_str())
+            .with("locks_ok", self.locks_ok)
+            .with("locks_replicating", self.locks_replicating)
+            .with("locks_stuck", self.locks_stuck)
+            .with("expires_at", self.expires_at)
+            .with("weight", self.weight.clone())
+            .with("activity", self.activity.as_str())
+            .with("created_at", self.created_at)
+            .with("updated_at", self.updated_at)
+            .with("child_rule", self.child_rule)
+            .with("subscription_id", self.subscription_id)
+            .with("purge_replicas", self.purge_replicas)
+            .with("stuck_at", self.stuck_at)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Rule {
+            id: j.req_u64("id")?,
+            account: req_string(j, "account")?,
+            did: didkey_from_json(j.get("did").ok_or_else(|| bad("rule did"))?)?,
+            rse_expression: req_string(j, "rse_expression")?,
+            copies: req_u32(j, "copies")?,
+            state: rule_state_from(j.req_str("state")?)?,
+            locks_ok: req_u32(j, "locks_ok")?,
+            locks_replicating: req_u32(j, "locks_replicating")?,
+            locks_stuck: req_u32(j, "locks_stuck")?,
+            expires_at: j.opt_i64("expires_at"),
+            weight: opt_string(j, "weight"),
+            activity: req_string(j, "activity")?,
+            created_at: j.req_i64("created_at")?,
+            updated_at: j.req_i64("updated_at")?,
+            child_rule: j.opt_u64("child_rule"),
+            subscription_id: j.opt_u64("subscription_id"),
+            purge_replicas: req_bool(j, "purge_replicas")?,
+            stuck_at: j.opt_i64("stuck_at"),
+        })
+    }
+
+    fn key_to_json(key: &u64) -> Json {
+        Json::from(*key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<u64> {
+        j.as_u64().ok_or_else(|| bad("rule key not a u64"))
+    }
+}
+
+impl Durable for ReplicaLock {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("rule_id", self.rule_id)
+            .with("rse", self.rse.as_str())
+            .with("did", didkey_to_json(&self.did))
+            .with("state", lock_state_to(self.state))
+            .with("bytes", self.bytes)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(ReplicaLock {
+            rule_id: j.req_u64("rule_id")?,
+            rse: req_string(j, "rse")?,
+            did: didkey_from_json(j.get("did").ok_or_else(|| bad("lock did"))?)?,
+            state: lock_state_from(j.req_str("state")?)?,
+            bytes: j.req_u64("bytes")?,
+        })
+    }
+
+    fn key_to_json(key: &(u64, String, DidKey)) -> Json {
+        Json::Arr(vec![
+            Json::from(key.0),
+            Json::Str(key.1.clone()),
+            didkey_to_json(&key.2),
+        ])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(u64, String, DidKey)> {
+        Ok((u64_item(j, 0)?, str_item(j, 1)?, didkey_from_json(arr_item(j, 2)?)?))
+    }
+}
+
+impl Durable for TransferRequest {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id)
+            .with("did", didkey_to_json(&self.did))
+            .with("dst_rse", self.dst_rse.as_str())
+            .with("rule_id", self.rule_id)
+            .with("bytes", self.bytes)
+            .with("adler32", self.adler32.as_str())
+            .with("activity", self.activity.as_str())
+            .with("state", self.state.as_str())
+            .with("attempts", self.attempts)
+            .with("priority", self.priority as u32)
+            .with("path", self.path.clone())
+            .with("hop", self.hop)
+            .with("src_rse", self.src_rse.clone())
+            .with("external_id", self.external_id)
+            .with("fts_server", self.fts_server.map(|x| x as u64))
+            .with("created_at", self.created_at)
+            .with("updated_at", self.updated_at)
+            .with("retry_after", self.retry_after)
+            .with("last_error", self.last_error.clone())
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(TransferRequest {
+            id: j.req_u64("id")?,
+            did: didkey_from_json(j.get("did").ok_or_else(|| bad("request did"))?)?,
+            dst_rse: req_string(j, "dst_rse")?,
+            rule_id: j.req_u64("rule_id")?,
+            bytes: j.req_u64("bytes")?,
+            adler32: req_string(j, "adler32")?,
+            activity: req_string(j, "activity")?,
+            state: request_state_from(j.req_str("state")?)?,
+            attempts: req_u32(j, "attempts")?,
+            priority: req_u8(j, "priority")?,
+            path: opt_string_vec_from_json(j.get("path"), "request path")?,
+            hop: req_u32(j, "hop")?,
+            src_rse: opt_string(j, "src_rse"),
+            external_id: j.opt_u64("external_id"),
+            fts_server: j.opt_u64("fts_server").map(|x| x as usize),
+            created_at: j.req_i64("created_at")?,
+            updated_at: j.req_i64("updated_at")?,
+            retry_after: j.opt_i64("retry_after"),
+            last_error: opt_string(j, "last_error"),
+        })
+    }
+
+    fn key_to_json(key: &u64) -> Json {
+        Json::from(*key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<u64> {
+        j.as_u64().ok_or_else(|| bad("request key not a u64"))
+    }
+}
+
+impl Durable for Account {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("account_type", account_type_to(self.account_type))
+            .with("email", self.email.as_str())
+            .with("created_at", self.created_at)
+            .with("suspended", self.suspended)
+            .with("admin", self.admin)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Account {
+            name: req_string(j, "name")?,
+            account_type: account_type_from(j.req_str("account_type")?)?,
+            email: req_string(j, "email")?,
+            created_at: j.req_i64("created_at")?,
+            suspended: req_bool(j, "suspended")?,
+            admin: req_bool(j, "admin")?,
+        })
+    }
+
+    fn key_to_json(key: &String) -> Json {
+        Json::Str(key.clone())
+    }
+
+    fn key_from_json(j: &Json) -> Result<String> {
+        j.as_str().map(str::to_string).ok_or_else(|| bad("account key not a string"))
+    }
+}
+
+impl Durable for Identity {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("identity", self.identity.as_str())
+            .with("auth_type", self.auth_type.as_str())
+            .with("account", self.account.as_str())
+            .with("secret", self.secret.clone())
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Identity {
+            identity: req_string(j, "identity")?,
+            auth_type: auth_type_from(j.req_str("auth_type")?)?,
+            account: req_string(j, "account")?,
+            secret: opt_string(j, "secret"),
+        })
+    }
+
+    fn key_to_json(key: &(String, AuthType, String)) -> Json {
+        Json::Arr(vec![
+            Json::Str(key.0.clone()),
+            Json::Str(key.1.as_str().to_string()),
+            Json::Str(key.2.clone()),
+        ])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(String, AuthType, String)> {
+        Ok((str_item(j, 0)?, auth_type_from(&str_item(j, 1)?)?, str_item(j, 2)?))
+    }
+}
+
+impl Durable for Token {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("token", self.token.as_str())
+            .with("account", self.account.as_str())
+            .with("expires_at", self.expires_at)
+            .with("issued_at", self.issued_at)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Token {
+            token: req_string(j, "token")?,
+            account: req_string(j, "account")?,
+            expires_at: j.req_i64("expires_at")?,
+            issued_at: j.req_i64("issued_at")?,
+        })
+    }
+
+    fn key_to_json(key: &String) -> Json {
+        Json::Str(key.clone())
+    }
+
+    fn key_from_json(j: &Json) -> Result<String> {
+        j.as_str().map(str::to_string).ok_or_else(|| bad("token key not a string"))
+    }
+}
+
+impl Durable for AccountLimit {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("account", self.account.as_str())
+            .with("rse", self.rse.as_str())
+            .with("bytes", self.bytes)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(AccountLimit {
+            account: req_string(j, "account")?,
+            rse: req_string(j, "rse")?,
+            bytes: j.req_u64("bytes")?,
+        })
+    }
+
+    fn key_to_json(key: &(String, String)) -> Json {
+        Json::Arr(vec![Json::Str(key.0.clone()), Json::Str(key.1.clone())])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(String, String)> {
+        Ok((str_item(j, 0)?, str_item(j, 1)?))
+    }
+}
+
+impl Durable for AccountUsage {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("account", self.account.as_str())
+            .with("rse", self.rse.as_str())
+            .with("bytes", self.bytes)
+            .with("files", self.files)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(AccountUsage {
+            account: req_string(j, "account")?,
+            rse: req_string(j, "rse")?,
+            bytes: j.req_u64("bytes")?,
+            files: j.req_u64("files")?,
+        })
+    }
+
+    fn key_to_json(key: &(String, String)) -> Json {
+        Json::Arr(vec![Json::Str(key.0.clone()), Json::Str(key.1.clone())])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(String, String)> {
+        Ok((str_item(j, 0)?, str_item(j, 1)?))
+    }
+}
+
+impl Durable for OutboxMessage {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id)
+            .with("event_type", self.event_type.as_str())
+            .with("payload", self.payload.clone())
+            .with("created_at", self.created_at)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(OutboxMessage {
+            id: j.req_u64("id")?,
+            event_type: req_string(j, "event_type")?,
+            payload: j.get("payload").cloned().unwrap_or(Json::Null),
+            created_at: j.req_i64("created_at")?,
+        })
+    }
+
+    fn key_to_json(key: &u64) -> Json {
+        Json::from(*key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<u64> {
+        j.as_u64().ok_or_else(|| bad("outbox key not a u64"))
+    }
+}
+
+impl Durable for BadReplica {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("rse", self.rse.as_str())
+            .with("did", didkey_to_json(&self.did))
+            .with("reason", self.reason.as_str())
+            .with("declared_by", self.declared_by.as_str())
+            .with("declared_at", self.declared_at)
+            .with("resolved", self.resolved)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(BadReplica {
+            rse: req_string(j, "rse")?,
+            did: didkey_from_json(j.get("did").ok_or_else(|| bad("bad-replica did"))?)?,
+            reason: req_string(j, "reason")?,
+            declared_by: req_string(j, "declared_by")?,
+            declared_at: j.req_i64("declared_at")?,
+            resolved: req_bool(j, "resolved")?,
+        })
+    }
+
+    fn key_to_json(key: &(String, DidKey)) -> Json {
+        Json::Arr(vec![Json::Str(key.0.clone()), didkey_to_json(&key.1)])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(String, DidKey)> {
+        Ok((str_item(j, 0)?, didkey_from_json(arr_item(j, 1)?)?))
+    }
+}
+
+impl Durable for Scope {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("account", self.account.as_str())
+            .with("created_at", self.created_at)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Scope {
+            name: req_string(j, "name")?,
+            account: req_string(j, "account")?,
+            created_at: j.req_i64("created_at")?,
+        })
+    }
+
+    fn key_to_json(key: &String) -> Json {
+        Json::Str(key.clone())
+    }
+
+    fn key_from_json(j: &Json) -> Result<String> {
+        j.as_str().map(str::to_string).ok_or_else(|| bad("scope key not a string"))
+    }
+}
+
+impl Durable for Popularity {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("did", didkey_to_json(&self.did))
+            .with("accesses", self.accesses)
+            .with("last_access", self.last_access)
+            .with("window_accesses", self.window_accesses)
+            .with("window_start", self.window_start)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Popularity {
+            did: didkey_from_json(j.get("did").ok_or_else(|| bad("popularity did"))?)?,
+            accesses: j.req_u64("accesses")?,
+            last_access: j.req_i64("last_access")?,
+            window_accesses: j.req_u64("window_accesses")?,
+            window_start: j.req_i64("window_start")?,
+        })
+    }
+
+    fn key_to_json(key: &DidKey) -> Json {
+        didkey_to_json(key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<DidKey> {
+        didkey_from_json(j)
+    }
+}
+
+fn protocol_to_json(p: &Protocol) -> Json {
+    Json::obj()
+        .with("scheme", p.scheme.as_str())
+        .with("hostname", p.hostname.as_str())
+        .with("port", p.port as u32)
+        .with("prefix", p.prefix.as_str())
+        .with("read_priority", p.read_priority as u32)
+        .with("write_priority", p.write_priority as u32)
+        .with("delete_priority", p.delete_priority as u32)
+        .with("tpc_priority", p.tpc_priority as u32)
+}
+
+fn protocol_from_json(j: &Json) -> Result<Protocol> {
+    Ok(Protocol {
+        scheme: req_string(j, "scheme")?,
+        hostname: req_string(j, "hostname")?,
+        port: j.req_u64("port")? as u16,
+        prefix: req_string(j, "prefix")?,
+        read_priority: req_u8(j, "read_priority")?,
+        write_priority: req_u8(j, "write_priority")?,
+        delete_priority: req_u8(j, "delete_priority")?,
+        tpc_priority: req_u8(j, "tpc_priority")?,
+    })
+}
+
+impl Durable for Rse {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str())
+            .with("is_tape", self.is_tape)
+            .with("volatile", self.volatile)
+            .with("path_algorithm", path_algorithm_to(&self.path_algorithm))
+            .with("availability_read", self.availability_read)
+            .with("availability_write", self.availability_write)
+            .with("availability_delete", self.availability_delete)
+            .with("attributes", string_map_to_json(&self.attributes))
+            .with("protocols", Json::Arr(self.protocols.iter().map(protocol_to_json).collect()))
+            .with("created_at", self.created_at)
+            .with("deleted", self.deleted)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        let protocols = j
+            .get("protocols")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("rse without protocols"))?
+            .iter()
+            .map(protocol_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Rse {
+            name: req_string(j, "name")?,
+            is_tape: req_bool(j, "is_tape")?,
+            volatile: req_bool(j, "volatile")?,
+            path_algorithm: path_algorithm_from(j.req_str("path_algorithm")?)?,
+            availability_read: req_bool(j, "availability_read")?,
+            availability_write: req_bool(j, "availability_write")?,
+            availability_delete: req_bool(j, "availability_delete")?,
+            attributes: string_map_from_json(
+                j.get("attributes").ok_or_else(|| bad("rse without attributes"))?,
+            )?,
+            protocols,
+            created_at: j.req_i64("created_at")?,
+            deleted: req_bool(j, "deleted")?,
+        })
+    }
+
+    fn key_to_json(key: &String) -> Json {
+        Json::Str(key.clone())
+    }
+
+    fn key_from_json(j: &Json) -> Result<String> {
+        j.as_str().map(str::to_string).ok_or_else(|| bad("rse key not a string"))
+    }
+}
+
+impl Durable for Distance {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("src", self.src.as_str())
+            .with("dst", self.dst.as_str())
+            .with("ranking", self.ranking)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Distance {
+            src: req_string(j, "src")?,
+            dst: req_string(j, "dst")?,
+            ranking: req_u32(j, "ranking")?,
+        })
+    }
+
+    fn key_to_json(key: &(String, String)) -> Json {
+        Json::Arr(vec![Json::Str(key.0.clone()), Json::Str(key.1.clone())])
+    }
+
+    fn key_from_json(j: &Json) -> Result<(String, String)> {
+        Ok((str_item(j, 0)?, str_item(j, 1)?))
+    }
+}
+
+impl Durable for Subscription {
+    fn row_to_json(&self) -> Json {
+        let rules: Vec<Json> = self
+            .rules
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .with("rse_expression", r.rse_expression.as_str())
+                    .with("copies", r.copies)
+                    .with("lifetime_ms", r.lifetime_ms)
+                    .with("activity", r.activity.as_str())
+            })
+            .collect();
+        Json::obj()
+            .with("id", self.id)
+            .with("name", self.name.as_str())
+            .with("account", self.account.as_str())
+            .with("scopes", self.filter.scopes.clone())
+            .with(
+                "did_types",
+                self.filter
+                    .did_types
+                    .iter()
+                    .map(|t| t.as_str().to_string())
+                    .collect::<Vec<_>>(),
+            )
+            // the canonical printer; parse(print(e)) == e is
+            // property-tested in core::metaexpr
+            .with("expr", self.filter.expr.as_ref().map(|e| e.to_string()))
+            .with("rules", Json::Arr(rules))
+            .with("enabled", self.enabled)
+            .with("created_at", self.created_at)
+            .with("matched", self.matched)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        let did_types = j
+            .get("did_types")
+            .ok_or_else(|| bad("subscription without did_types"))
+            .and_then(|v| string_vec_from_json(v, "did_types"))?
+            .iter()
+            .map(|s| did_type_from(s))
+            .collect::<Result<Vec<_>>>()?;
+        let rules = j
+            .get("rules")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("subscription without rules"))?
+            .iter()
+            .map(|r| {
+                Ok(SubscriptionRule {
+                    rse_expression: req_string(r, "rse_expression")?,
+                    copies: req_u32(r, "copies")?,
+                    lifetime_ms: r.opt_i64("lifetime_ms"),
+                    activity: req_string(r, "activity")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Subscription {
+            id: j.req_u64("id")?,
+            name: req_string(j, "name")?,
+            account: req_string(j, "account")?,
+            filter: SubscriptionFilter {
+                scopes: j
+                    .get("scopes")
+                    .ok_or_else(|| bad("subscription without scopes"))
+                    .and_then(|v| string_vec_from_json(v, "scopes"))?,
+                did_types,
+                expr: j.opt_str("expr").map(metaexpr::parse).transpose()?,
+            },
+            rules,
+            enabled: req_bool(j, "enabled")?,
+            created_at: j.req_i64("created_at")?,
+            matched: j.req_u64("matched")?,
+        })
+    }
+
+    fn key_to_json(key: &u64) -> Json {
+        Json::from(*key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<u64> {
+        j.as_u64().ok_or_else(|| bad("subscription key not a u64"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::Row;
+
+    /// Round-trip a row through its JSON codec and assert the encoding
+    /// is a fixpoint (and the key survives independently).
+    fn rt<V: Durable>(v: &V) {
+        let j = v.row_to_json();
+        // the serialized form survives a text round-trip through jsonx
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j, "jsonx round trip for {text}");
+        let back = V::row_from_json(&j).unwrap();
+        assert_eq!(back.row_to_json(), j, "codec fixpoint");
+        assert!(back.key() == v.key(), "key survives the row codec");
+        let kj = V::key_to_json(&v.key());
+        let kb = V::key_from_json(&kj).unwrap();
+        assert!(kb == v.key(), "key codec round trip");
+    }
+
+    fn key() -> DidKey {
+        DidKey::new("data18", "raw.0001")
+    }
+
+    #[test]
+    fn did_round_trip_with_typed_meta() {
+        let mut meta = BTreeMap::new();
+        meta.insert("run".to_string(), MetaValue::Int(358_031));
+        meta.insert("big".to_string(), MetaValue::Int(i64::MAX - 1));
+        meta.insert("neg".to_string(), MetaValue::Int(i64::MIN + 1));
+        meta.insert("eff".to_string(), MetaValue::Float(0.1 + 0.2));
+        meta.insert("zero".to_string(), MetaValue::Float(-0.0));
+        meta.insert("ok".to_string(), MetaValue::Bool(true));
+        meta.insert("lexint".to_string(), MetaValue::Str("358031".to_string()));
+        let did = Did {
+            key: key(),
+            did_type: DidType::Dataset,
+            account: "root".into(),
+            bytes: 123_456_789_000,
+            adler32: "11e60398".into(),
+            md5: Some("d41d8cd98f00b204e9800998ecf8427e".into()),
+            guid: None,
+            open: true,
+            monotonic: false,
+            suppressed: false,
+            availability: Availability::Available,
+            meta,
+            created_at: 1_600_000_000_123,
+            expired_at: Some(1_700_000_000_000),
+            constituent_of: Some(DidKey::new("data18", "archive.zip")),
+        };
+        rt(&did);
+        // typed meta decodes to the same variants, not re-lexed
+        let back = Did::row_from_json(&did.row_to_json()).unwrap();
+        assert_eq!(back.meta["run"], MetaValue::Int(358_031));
+        assert_eq!(back.meta["big"], MetaValue::Int(i64::MAX - 1));
+        assert!(matches!(back.meta["lexint"], MetaValue::Str(_)), "string stays string");
+        match back.meta["zero"] {
+            MetaValue::Float(f) => assert!(f == 0.0 && f.is_sign_positive(), "-0 canonicalized"),
+            ref other => panic!("expected float, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn replica_rule_lock_request_round_trips() {
+        rt(&Replica {
+            rse: "CERN-DISK".into(),
+            did: key(),
+            bytes: 42,
+            state: ReplicaState::Copying,
+            pfn: "/data18/aa/bb/raw.0001".into(),
+            lock_count: 3,
+            tombstone: Some(1_600_000_100_000),
+            accessed_at: 7,
+            created_at: 6,
+            error_count: 1,
+        });
+        rt(&Rule {
+            id: 17,
+            account: "root".into(),
+            did: key(),
+            rse_expression: "tier=1&type=disk".into(),
+            copies: 2,
+            state: RuleState::Replicating,
+            locks_ok: 1,
+            locks_replicating: 2,
+            locks_stuck: 0,
+            expires_at: None,
+            weight: Some("freespace".into()),
+            activity: "T0 Export".into(),
+            created_at: 1,
+            updated_at: 2,
+            child_rule: Some(19),
+            subscription_id: None,
+            purge_replicas: true,
+            stuck_at: Some(99),
+        });
+        rt(&ReplicaLock {
+            rule_id: 17,
+            rse: "CERN-DISK".into(),
+            did: key(),
+            state: LockState::Stuck,
+            bytes: 42,
+        });
+        rt(&TransferRequest {
+            id: 5,
+            did: key(),
+            dst_rse: "BNL-TAPE".into(),
+            rule_id: 17,
+            bytes: 42,
+            adler32: "11e60398".into(),
+            activity: "Production".into(),
+            state: RequestState::Submitted,
+            attempts: 2,
+            priority: PRIORITY_BOOSTED,
+            path: Some(vec!["CERN-DISK".into(), "FZK-DISK".into(), "BNL-TAPE".into()]),
+            hop: 1,
+            src_rse: Some("CERN-DISK".into()),
+            external_id: Some(4242),
+            fts_server: Some(1),
+            created_at: 1,
+            updated_at: 2,
+            retry_after: None,
+            last_error: Some("checksum mismatch: boom".into()),
+        });
+        // direct transfer: no path
+        rt(&TransferRequest {
+            id: 6,
+            did: key(),
+            dst_rse: "BNL-TAPE".into(),
+            rule_id: 17,
+            bytes: 1,
+            adler32: "x".into(),
+            activity: "Analysis".into(),
+            state: RequestState::Waiting,
+            attempts: 0,
+            priority: PRIORITY_NORMAL,
+            path: None,
+            hop: 0,
+            src_rse: None,
+            external_id: None,
+            fts_server: None,
+            created_at: 0,
+            updated_at: 0,
+            retry_after: Some(50),
+            last_error: None,
+        });
+    }
+
+    #[test]
+    fn account_identity_token_quota_round_trips() {
+        rt(&Account {
+            name: "alice".into(),
+            account_type: AccountType::User,
+            email: "alice@cern.ch".into(),
+            created_at: 3,
+            suspended: false,
+            admin: false,
+        });
+        rt(&Identity {
+            identity: "CN=Alice/O=CERN".into(),
+            auth_type: AuthType::X509,
+            account: "alice".into(),
+            secret: None,
+        });
+        rt(&Identity {
+            identity: "alice".into(),
+            auth_type: AuthType::UserPass,
+            account: "alice".into(),
+            secret: Some("deadbeef".into()),
+        });
+        rt(&Token {
+            token: "alice-0123456789abcdef".into(),
+            account: "alice".into(),
+            expires_at: 10,
+            issued_at: 5,
+        });
+        rt(&AccountLimit { account: "alice".into(), rse: "CERN-DISK".into(), bytes: 1u64 << 40 });
+        rt(&AccountUsage {
+            account: "alice".into(),
+            rse: "CERN-DISK".into(),
+            bytes: 7,
+            files: 2,
+        });
+    }
+
+    #[test]
+    fn namespace_and_misc_round_trips() {
+        rt(&Attachment { parent: DidKey::new("data18", "ds"), child: key(), created_at: 1 });
+        rt(&NameTombstone { key: key(), deleted_at: 9 });
+        rt(&Scope { name: "data18".into(), account: "root".into(), created_at: 0 });
+        rt(&Popularity {
+            did: key(),
+            accesses: 12,
+            last_access: 10,
+            window_accesses: 3,
+            window_start: 8,
+        });
+        rt(&BadReplica {
+            rse: "UK-T2-1".into(),
+            did: key(),
+            reason: "bit rot".into(),
+            declared_by: "auditor".into(),
+            declared_at: 4,
+            resolved: false,
+        });
+        rt(&OutboxMessage {
+            id: 77,
+            event_type: "transfer-done".into(),
+            payload: Json::obj().with("rule_id", 17).with("nested", Json::Arr(vec![
+                Json::Null,
+                Json::Bool(true),
+                Json::Str("x\ny".into()),
+            ])),
+            created_at: 2,
+        });
+        rt(&Distance { src: "A".into(), dst: "B".into(), ranking: 3 });
+    }
+
+    #[test]
+    fn rse_round_trip_with_protocols_and_attributes() {
+        let mut rse = Rse::new("CERN-PROD", 123).with_attr("tier", "0").with_tape();
+        rse.path_algorithm = PathAlgorithm::NonDeterministic;
+        rse.availability_write = false;
+        rse.volatile = true;
+        rse.deleted = true;
+        rt(&rse);
+        let back = Rse::row_from_json(&rse.row_to_json()).unwrap();
+        assert_eq!(back.attr("tier"), Some("0"));
+        assert_eq!(back.protocols.len(), rse.protocols.len());
+        assert_eq!(back.protocols[0].port, rse.protocols[0].port);
+        assert_eq!(back.path_algorithm, PathAlgorithm::NonDeterministic);
+    }
+
+    #[test]
+    fn subscription_round_trip_with_meta_expr() {
+        let filter = SubscriptionFilter {
+            scopes: vec!["data18".into()],
+            did_types: vec![DidType::Dataset, DidType::File],
+            expr: Some(
+                metaexpr::parse("datatype=RAW AND run>=358000 AND name=data18*").unwrap(),
+            ),
+        };
+        let sub = Subscription {
+            id: 9,
+            name: "raw-to-tape".into(),
+            account: "root".into(),
+            filter,
+            rules: vec![
+                SubscriptionRule {
+                    rse_expression: "tape".into(),
+                    copies: 1,
+                    lifetime_ms: None,
+                    activity: "T0 Export".into(),
+                },
+                SubscriptionRule {
+                    rse_expression: "tier=1".into(),
+                    copies: 2,
+                    lifetime_ms: Some(86_400_000),
+                    activity: "Data Consolidation".into(),
+                },
+            ],
+            enabled: true,
+            created_at: 5,
+            matched: 42,
+        };
+        rt(&sub);
+        let back = Subscription::row_from_json(&sub.row_to_json()).unwrap();
+        assert_eq!(back.filter.expr, sub.filter.expr, "meta-expr survives via printer");
+        assert_eq!(back.rules.len(), 2);
+        assert_eq!(back.rules[1].lifetime_ms, Some(86_400_000));
+        // a filter without expr round-trips to None, not Any
+        let bare = Subscription { filter: SubscriptionFilter::default(), ..sub };
+        let back = Subscription::row_from_json(&bare.row_to_json()).unwrap();
+        assert!(back.filter.expr.is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_error_instead_of_panicking() {
+        assert!(Did::row_from_json(&Json::obj()).is_err());
+        assert!(Rule::row_from_json(&Json::obj().with("id", 1)).is_err());
+        assert!(Rse::key_from_json(&Json::Num(3.0)).is_err());
+        assert!(Replica::key_from_json(&Json::Arr(vec![Json::Str("A".into())])).is_err());
+        assert!(metavalue_from_json(&Json::obj().with("t", "i").with("v", "xx")).is_err());
+        assert!(metavalue_from_json(&Json::obj().with("t", "?").with("v", "1")).is_err());
+        assert!(did_type_from("BLOB").is_err());
+        assert!(lock_state_from("NOPE").is_err());
+        assert!(path_algorithm_from("magic").is_err());
+    }
+
+    #[test]
+    fn float_meta_values_survive_exactly() {
+        for f in [0.1 + 0.2, 1.0 / 3.0, f64::MAX, f64::MIN_POSITIVE, -123.456e-78] {
+            let v = MetaValue::Float(f);
+            let back = metavalue_from_json(&metavalue_to_json(&v)).unwrap();
+            match back {
+                MetaValue::Float(g) => assert!(g == f, "float {f} survived as {g}"),
+                other => panic!("expected float, got {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! The checkpointer daemon: periodically snapshots every catalog table
+//! through the registry's persistence handles (paper §3.6 — the
+//! persistence layer's maintenance job, analogous to a database
+//! checkpoint). Each run fences every table's WAL with a barrier
+//! record, writes a consistent per-shard snapshot atomically, truncates
+//! the log, and refreshes the `MANIFEST` id high-water mark — bounding
+//! both recovery time and log growth.
+//!
+//! Config (`[db]`): `checkpoint_interval` (default 15m) sets the tick
+//! cadence; the daemon is a no-op on catalogs without `wal_dir`.
+
+use crate::common::clock::{EpochMs, MINUTE_MS};
+use crate::daemons::{Ctx, Daemon};
+
+pub struct Checkpointer {
+    ctx: Ctx,
+    interval_ms: i64,
+}
+
+impl Checkpointer {
+    pub fn new(ctx: Ctx) -> Self {
+        let interval_ms = ctx
+            .catalog
+            .cfg
+            .get_duration_ms("db", "checkpoint_interval", 15 * MINUTE_MS);
+        Checkpointer { ctx, interval_ms }
+    }
+}
+
+impl Daemon for Checkpointer {
+    fn name(&self) -> &'static str {
+        "checkpointer"
+    }
+
+    /// One checkpoint sweep; returns the number of tables snapshotted.
+    fn tick(&mut self, _now: EpochMs) -> usize {
+        let cat = &self.ctx.catalog;
+        if !cat.durable() {
+            return 0;
+        }
+        match cat.checkpoint_all() {
+            Ok(stats) => {
+                let rows: usize = stats.values().map(|s| s.rows).sum();
+                cat.metrics.incr("checkpointer.runs", 1);
+                cat.metrics.gauge_set("checkpointer.last_rows", rows as u64);
+                stats.len()
+            }
+            Err(e) => {
+                crate::log_warn!("checkpointer: {e}");
+                cat.metrics.incr("checkpointer.errors", 1);
+                0
+            }
+        }
+    }
+
+    fn interval_ms(&self) -> i64 {
+        self.interval_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::clock::Clock;
+    use crate::common::config::Config;
+    use crate::core::Catalog;
+    use crate::ftssim::FtsServer;
+    use crate::mq::Broker;
+    use crate::netsim::Network;
+    use crate::storagesim::Fleet;
+    use std::sync::Arc;
+
+    fn ctx_with(cfg: Config) -> Ctx {
+        let catalog = Arc::new(Catalog::new(Clock::sim_at(1_600_000_000_000), cfg));
+        let fleet = Arc::new(Fleet::new());
+        let net = Arc::new(Network::new());
+        let broker = Broker::new();
+        let fts = vec![Arc::new(FtsServer::new(
+            "fts1",
+            net.clone(),
+            fleet.clone(),
+            Some(broker.clone()),
+        ))];
+        Ctx::new(catalog, fleet, net, fts, broker)
+    }
+
+    #[test]
+    fn noop_without_durability() {
+        let mut d = Checkpointer::new(ctx_with(Config::new()));
+        assert_eq!(d.tick(0), 0);
+    }
+
+    #[test]
+    fn checkpoints_every_table_when_durable() {
+        let dir = std::env::temp_dir()
+            .join(format!("rucio-ckptd-{}", std::process::id()));
+        let mut cfg = Config::new();
+        cfg.set("db", "wal_dir", dir.to_string_lossy().to_string());
+        cfg.set("db", "checkpoint_interval", "5m");
+        let ctx = ctx_with(cfg);
+        ctx.catalog.add_scope("s", "root").unwrap();
+        ctx.catalog.add_file("s", "f", "root", 1, "x", None).unwrap();
+        let mut d = Checkpointer::new(ctx.clone());
+        assert_eq!(d.interval_ms(), 5 * MINUTE_MS);
+        let n = d.tick(0);
+        assert!(n >= 19, "all catalog tables checkpointed: {n}");
+        assert_eq!(ctx.catalog.metrics.counter("checkpointer.runs"), 1);
+        // after a checkpoint, no table has uncheckpointed records
+        for (name, s) in ctx.catalog.registry.wal_stats() {
+            assert_eq!(s.records_since_checkpoint, 0, "table {name}");
+        }
+        assert!(dir.join("MANIFEST").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

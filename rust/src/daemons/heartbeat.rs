@@ -60,6 +60,18 @@ impl Heartbeats {
         (idx, live.len().max(1))
     }
 
+    /// Drop every beat older than the TTL (the driver's housekeeping
+    /// tick calls this; [`Heartbeats::beat`] also prunes lazily, so this
+    /// only matters for daemon types whose every instance went silent).
+    pub fn expire_dead(&self, now: EpochMs) {
+        let ttl = self.ttl_ms;
+        self.inner
+            .lock()
+            .unwrap()
+            .beats
+            .retain(|_, last| now - *last <= ttl);
+    }
+
     /// Live instances of a type.
     pub fn live(&self, daemon_type: &str, now: EpochMs) -> usize {
         let inner = self.inner.lock().unwrap();
@@ -113,6 +125,18 @@ mod tests {
         let (_, n) = h.beat("judge", "b", 2000);
         assert_eq!(n, 1);
         assert_eq!(h.live("judge", 2000), 1);
+    }
+
+    #[test]
+    fn expire_dead_prunes_silent_instances() {
+        let h = Heartbeats::with_ttl(1000);
+        h.beat("reaper", "a", 0);
+        h.beat("judge", "b", 0);
+        h.expire_dead(500);
+        assert_eq!(h.live("reaper", 500), 1);
+        h.expire_dead(2000);
+        assert_eq!(h.live("reaper", 2000), 0);
+        assert_eq!(h.live("judge", 2000), 0);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! giving lock-free parallelism and automatic failover.
 
 pub mod auditor;
+pub mod checkpointer;
 pub mod conveyor;
 pub mod heartbeat;
 pub mod hermes;

@@ -5,7 +5,13 @@
 //! lock-free work selection, and heavy use of bulk operations to sustain
 //! production rates (§5: ~200 Hz of interactions, millions of transfers
 //! and deletions per day). This module provides the same primitives as an
-//! in-process store:
+//! in-process store that is **durable and recoverable**: every table can
+//! attach a write-ahead log ([`wal`]), checkpoint per-shard snapshots,
+//! and cold-boot back from disk. A process crash loses at most the torn
+//! final record of each table's log (detected by checksum and discarded
+//! whole — under group commit, the default, a commit is applied all or
+//! nothing; see the crash model in [`wal`] for the per-table atomicity
+//! boundary):
 //!
 //! * [`Table`] — a typed ordered map of rows keyed by the row's primary
 //!   key ([`Row::key`]), stored as **N-way hash-sharded** `RwLock`ed
@@ -34,6 +40,14 @@
 //!   comparison predicates.
 //! * history — optional append-only log of mutations per table (the
 //!   "storing of deleted rows in historical tables" helper of §3.6).
+//!   History is in-memory only; it does not survive a restart.
+//! * **durability** — [`wal::Wal`] (length-prefixed, SHA-256-checksummed,
+//!   group-committed write-ahead log), [`Table::checkpoint`] /
+//!   [`Table::recover`] (per-shard snapshots fenced by WAL barrier
+//!   records, replay of the post-barrier suffix with full index
+//!   rebuild), and [`wal::TablePersist`] (the type-erased handle
+//!   [`Registry::checkpoint_all`] drives). Rows opt in by implementing
+//!   [`wal::Durable`] (all catalog rows do, in `core::persist`).
 //! * [`shard_hash`] / [`assigned_to`] — the hash-based work partitioning
 //!   used by every daemon type for lock-free parallelism (§3.6: "selection
 //!   of work per daemon is based on a hashing algorithm on a set of
@@ -45,13 +59,20 @@
 //! sets the shard count for every catalog table. Shard placement uses a
 //! deterministic FNV-1a over the key's `Hash` bytes, so layouts are
 //! stable across runs; the shard count is invisible to all observable
-//! behavior (ordering, history, indexes) — asserted by the
-//! shard-invariance property test in [`table`].
+//! behavior (ordering, history, indexes, recovery — snapshots carry rows,
+//! not shard layout) — asserted by the shard-invariance property test in
+//! [`table`]. Durability is configured by `[db] wal_dir` (enables the
+//! WAL), `[db] fsync` and `[db] group_commit` (see [`wal::WalOptions`]),
+//! and `[db] checkpoint_interval` (the checkpointer daemon's cadence).
 
 pub mod table;
+pub mod wal;
 
 pub use table::{
     Batch, BatchOp, BatchSummary, Index, MultiIndex, Op, Page, Row, Table, DEFAULT_SHARDS,
+};
+pub use wal::{
+    CheckpointStats, Durable, RecoverStats, TablePersist, Wal, WalOptions, WalStats,
 };
 
 use std::collections::BTreeMap;
@@ -105,13 +126,17 @@ pub fn assigned_to(key: u64, worker_idx: usize, n_workers: usize) -> bool {
     (mixed % n_workers as u64) as usize == worker_idx
 }
 
-/// Table introspection registry: table name → live row-count closure.
+/// Table introspection registry: table name → live row-count closure,
+/// plus (for durable tables) a type-erased persistence handle.
 /// The monitoring probes (paper §4.6 "a probe regularly checks the
 /// database") read queue sizes through this; `Catalog::new` wires every
-/// table in at construction.
+/// table in at construction, and — when durability is enabled — also
+/// registers each table's [`TablePersist`] handle so
+/// [`Registry::checkpoint_all`] can fence and snapshot the whole store.
 #[derive(Clone, Default)]
 pub struct Registry {
     counts: Arc<Mutex<BTreeMap<String, Arc<dyn Fn() -> usize + Send + Sync>>>>,
+    persist: Arc<Mutex<BTreeMap<String, Arc<dyn TablePersist>>>>,
 }
 
 impl Registry {
@@ -123,6 +148,14 @@ impl Registry {
         self.counts.lock().unwrap().insert(name.to_string(), counter);
     }
 
+    /// Register a durable table's persistence handle (checkpoint driver).
+    pub fn register_persist(&self, table: Arc<dyn TablePersist>) {
+        self.persist
+            .lock()
+            .unwrap()
+            .insert(table.table_name().to_string(), table);
+    }
+
     /// Snapshot of all table sizes.
     pub fn snapshot(&self) -> BTreeMap<String, usize> {
         self.counts
@@ -130,6 +163,30 @@ impl Registry {
             .unwrap()
             .iter()
             .map(|(k, f)| (k.clone(), f()))
+            .collect()
+    }
+
+    /// Checkpoint every registered durable table: per table, a WAL
+    /// barrier record fences the log, a consistent snapshot is written
+    /// atomically, and the log is truncated back to the barrier. The
+    /// registry lock is released before any IO happens.
+    pub fn checkpoint_all(&self) -> crate::common::error::Result<BTreeMap<String, CheckpointStats>> {
+        let tables: Vec<Arc<dyn TablePersist>> =
+            self.persist.lock().unwrap().values().cloned().collect();
+        let mut out = BTreeMap::new();
+        for t in tables {
+            out.insert(t.table_name().to_string(), t.checkpoint()?);
+        }
+        Ok(out)
+    }
+
+    /// Live WAL shape of every registered durable table.
+    pub fn wal_stats(&self) -> BTreeMap<String, WalStats> {
+        let tables: Vec<Arc<dyn TablePersist>> =
+            self.persist.lock().unwrap().values().cloned().collect();
+        tables
+            .into_iter()
+            .filter_map(|t| t.wal_stats().map(|s| (t.table_name().to_string(), s)))
             .collect()
     }
 }

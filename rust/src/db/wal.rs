@@ -1,0 +1,616 @@
+//! Write-ahead log + snapshot persistence for [`crate::db::Table`]
+//! (paper §3.6: the catalog is grounded in a transactional persistence
+//! layer — restart-from-disk is a routine operation, not data loss).
+//!
+//! ## On-disk format
+//!
+//! Both WAL and snapshot files are sequences of *frames*:
+//!
+//! ```text
+//! [payload length: u32 LE][SHA-256(payload): 32 bytes][payload: JSON]
+//! ```
+//!
+//! The checksum (reusing [`crate::common::checksum::sha256`]) makes a
+//! torn tail — a frame cut short by a crash mid-write — detectable: the
+//! reader stops at the first frame whose length runs past the file end
+//! or whose digest mismatches, discards everything from there on, and
+//! reports `torn = true`. A frame is the atomicity unit, so a commit
+//! (which is one frame) is never half-applied on recovery.
+//!
+//! ## Record payloads
+//!
+//! * commit — `{"k":"c","seq":N,"ops":[{"o":"u","row":…}|{"o":"r","key":…}]}`
+//!   One frame per table commit under group commit (the default): a bulk
+//!   batch of thousands of mutations costs one write (and at most one
+//!   fsync). With `group_commit = false` every op gets its own frame and
+//!   its own fsync — the ablation baseline of `benches/abl_wal_commit`.
+//! * barrier — `{"k":"b","seq":N}` — the snapshot fence written by
+//!   [`crate::db::Table::checkpoint`]: a snapshot with `ckpt = N` covers
+//!   exactly the records with `seq <= N`, so recovery replays only the
+//!   suffix `seq > N`.
+//!
+//! Snapshot files are written to a temp file and atomically renamed, so
+//! a crash mid-checkpoint leaves either the old or the new snapshot —
+//! never a torn one. After the rename the WAL is truncated back to a
+//! single barrier frame; a crash between the two steps is benign because
+//! the seq fence makes replay of pre-snapshot records a no-op.
+//!
+//! ## Crash model
+//!
+//! Atomicity is **per table commit**: one frame is applied whole or not
+//! at all (under `group_commit = false`, the unit shrinks to one op).
+//! There is no cross-table transaction marker — a catalog operation
+//! that commits to several tables (e.g. a rule touching rules, locks,
+//! replicas, requests) appends to each table's log independently, so a
+//! torn tail landing *mid-operation* can recover some tables one commit
+//! ahead of others. The simulator's `ProcessCrash` fires between driver
+//! steps (operation boundaries), where per-table recovery implies full
+//! cross-table consistency; power-loss-grade tearing mid-operation is
+//! out of scope and would need a global commit epoch.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::common::checksum;
+use crate::common::error::{Result, RucioError};
+use crate::jsonx::Json;
+
+/// Bytes of frame overhead before the payload (length + SHA-256).
+const FRAME_HEADER: usize = 4 + 32;
+
+/// A row type that can live in a durable table: JSON encodings for the
+/// row and for its primary key (the `Remove` side of the log). All
+/// catalog row types implement this in `core::persist`.
+pub trait Durable: crate::db::Row {
+    fn row_to_json(&self) -> Json;
+    fn row_from_json(j: &Json) -> Result<Self>;
+    fn key_to_json(key: &Self::Key) -> Json;
+    fn key_from_json(j: &Json) -> Result<Self::Key>;
+}
+
+/// Durability knobs, from config `[db] fsync` / `[db] group_commit`.
+#[derive(Debug, Clone, Copy)]
+pub struct WalOptions {
+    /// `fsync` after every commit frame (power-loss durability). Off by
+    /// default: the sim's crash model is process death, where the OS
+    /// page cache survives.
+    pub fsync: bool,
+    /// One frame per table commit (default) vs one frame (and fsync)
+    /// per op — the group-commit ablation switch.
+    pub group_commit: bool,
+}
+
+impl Default for WalOptions {
+    fn default() -> Self {
+        WalOptions { fsync: false, group_commit: true }
+    }
+}
+
+/// Live WAL shape, for monitoring (`analytics::reports::wal_stats`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WalStats {
+    /// Bytes currently in the log file.
+    pub bytes: u64,
+    /// Frames currently in the log file (incl. barriers).
+    pub records: u64,
+    /// Commit frames appended since the last barrier.
+    pub records_since_checkpoint: u64,
+    /// Seq of the most recent barrier (0 = never checkpointed).
+    pub last_checkpoint_seq: u64,
+    /// Next record seq to be allocated.
+    pub next_seq: u64,
+}
+
+/// Outcome of one [`crate::db::Table::checkpoint`].
+#[derive(Debug, Clone, Default)]
+pub struct CheckpointStats {
+    /// Rows written into the snapshot.
+    pub rows: usize,
+    /// Snapshot file size in bytes.
+    pub snapshot_bytes: u64,
+    /// The barrier seq fencing this snapshot.
+    pub seq: u64,
+}
+
+/// Outcome of one [`crate::db::Table::recover`].
+#[derive(Debug, Clone, Default)]
+pub struct RecoverStats {
+    /// Rows loaded from the snapshot.
+    pub snapshot_rows: usize,
+    /// The snapshot's barrier seq (0 = no snapshot found).
+    pub snapshot_seq: u64,
+    /// Commit frames replayed from the WAL suffix.
+    pub replayed_records: u64,
+    /// Individual ops applied during replay.
+    pub replayed_ops: u64,
+    /// True when a torn (truncated/corrupt) tail was detected and
+    /// discarded — the checksummed frame boundary guarantees the
+    /// discarded record was never partially applied.
+    pub torn_tail: bool,
+}
+
+/// Object-safe persistence handle a durable [`crate::db::Table`] exposes
+/// so [`crate::db::Registry::checkpoint_all`] can drive snapshots
+/// without knowing row types.
+pub trait TablePersist: Send + Sync {
+    fn table_name(&self) -> &'static str;
+    fn checkpoint(&self) -> Result<CheckpointStats>;
+    fn wal_stats(&self) -> Option<WalStats>;
+}
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+fn frame_into(out: &mut Vec<u8>, payload: &Json) {
+    let text = payload.to_string();
+    let bytes = text.as_bytes();
+    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&checksum::sha256(bytes));
+    out.extend_from_slice(bytes);
+}
+
+fn frame(payload: &Json) -> Vec<u8> {
+    let mut out = Vec::new();
+    frame_into(&mut out, payload);
+    out
+}
+
+/// One decoded WAL frame.
+#[derive(Debug, Clone)]
+pub struct WalRecord {
+    /// Record sequence number (`seq` field of the payload).
+    pub seq: u64,
+    pub payload: Json,
+    /// Byte offset just past this frame — crash-point granularity for
+    /// the torn-tail property tests.
+    pub end_offset: u64,
+}
+
+/// Result of scanning a framed file leniently (WAL semantics: a torn
+/// tail is expected after a crash and simply discarded).
+#[derive(Debug, Clone, Default)]
+pub struct WalReadResult {
+    pub records: Vec<WalRecord>,
+    /// Length of the valid prefix in bytes.
+    pub valid_bytes: u64,
+    /// True when trailing bytes after the valid prefix were discarded.
+    pub torn: bool,
+}
+
+/// Read every complete, checksum-valid frame from `path`. A missing file
+/// reads as empty. Stops (and flags `torn`) at the first incomplete or
+/// corrupt frame.
+pub fn read_records(path: &Path) -> Result<WalReadResult> {
+    if !path.exists() {
+        return Ok(WalReadResult::default());
+    }
+    let data = std::fs::read(path)?;
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        if pos == data.len() {
+            break;
+        }
+        if pos + FRAME_HEADER > data.len() {
+            break; // torn header
+        }
+        let mut len_bytes = [0u8; 4];
+        len_bytes.copy_from_slice(&data[pos..pos + 4]);
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        if pos + FRAME_HEADER + len > data.len() {
+            break; // torn payload
+        }
+        let digest = &data[pos + 4..pos + FRAME_HEADER];
+        let payload = &data[pos + FRAME_HEADER..pos + FRAME_HEADER + len];
+        if &checksum::sha256(payload)[..] != digest {
+            break; // corrupt frame: treat like a torn tail
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        let Ok(json) = Json::parse(text) else { break };
+        pos += FRAME_HEADER + len;
+        let seq = json.opt_u64("seq").unwrap_or(0);
+        records.push(WalRecord { seq, payload: json, end_offset: pos as u64 });
+    }
+    Ok(WalReadResult { records, valid_bytes: pos as u64, torn: pos < data.len() })
+}
+
+/// Read a framed file strictly (snapshot semantics: snapshots are
+/// written atomically, so a torn snapshot is corruption, not a crash
+/// artifact). Returns the payloads in order.
+pub fn read_frames(path: &Path) -> Result<Vec<Json>> {
+    let scan = read_records(path)?;
+    if scan.torn {
+        return Err(RucioError::DatabaseError(format!(
+            "{}: torn or corrupt frame at byte {}",
+            path.display(),
+            scan.valid_bytes
+        )));
+    }
+    Ok(scan.records.into_iter().map(|r| r.payload).collect())
+}
+
+/// Write `frames` to `path` atomically: temp file, optional fsync, then
+/// rename. Returns the file size. Used for snapshots and the manifest.
+pub fn write_frames_atomic(path: &Path, frames: &[Json], fsync: bool) -> Result<u64> {
+    let mut buf = Vec::new();
+    for f in frames {
+        frame_into(&mut buf, f);
+    }
+    let tmp = tmp_path(path);
+    {
+        let mut file = File::create(&tmp)?;
+        file.write_all(&buf)?;
+        if fsync {
+            file.sync_data()?;
+        }
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(buf.len() as u64)
+}
+
+/// Snapshot file for table `name` under the durability dir.
+pub fn snapshot_file(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.snap"))
+}
+
+/// WAL file for table `name` under the durability dir.
+pub fn wal_file(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.wal"))
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+// ---------------------------------------------------------------------
+// the log
+// ---------------------------------------------------------------------
+
+struct WalInner {
+    file: File,
+    bytes: u64,
+    records: u64,
+    next_seq: u64,
+    last_barrier_seq: u64,
+    records_since_barrier: u64,
+}
+
+/// A per-table append-only write-ahead log. All appends serialize on an
+/// internal mutex; tables call in while holding their shard locks, so
+/// WAL order matches commit order per key.
+pub struct Wal {
+    path: PathBuf,
+    opts: WalOptions,
+    inner: Mutex<WalInner>,
+}
+
+impl Wal {
+    /// Open (or create) the log at `path`, scanning existing frames to
+    /// restore counters. A torn tail is truncated away so new appends
+    /// always follow a valid frame.
+    pub fn open(path: &Path, opts: WalOptions) -> Result<Wal> {
+        let scan = read_records(path)?;
+        if scan.torn {
+            let f = OpenOptions::new().write(true).create(true).open(path)?;
+            f.set_len(scan.valid_bytes)?;
+        }
+        let mut next_seq = 1u64;
+        let mut last_barrier_seq = 0u64;
+        let mut records_since_barrier = 0u64;
+        for r in &scan.records {
+            next_seq = next_seq.max(r.seq + 1);
+            if r.payload.opt_str("k") == Some("b") {
+                last_barrier_seq = r.seq;
+                records_since_barrier = 0;
+            } else {
+                records_since_barrier += 1;
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Wal {
+            path: path.to_path_buf(),
+            opts,
+            inner: Mutex::new(WalInner {
+                file,
+                bytes: scan.valid_bytes,
+                records: scan.records.len() as u64,
+                next_seq,
+                last_barrier_seq,
+                records_since_barrier,
+            }),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn fsync_enabled(&self) -> bool {
+        self.opts.fsync
+    }
+
+    /// Append one already-framed record. On any IO error the file is
+    /// rolled back to the last known-good frame boundary, so a partial
+    /// append can never poison the frames that follow it — only this
+    /// one record is lost, not everything appended after it. Counters
+    /// (including the seq) advance only on success.
+    fn append_frame(inner: &mut WalInner, buf: &[u8], fsync: bool) -> Result<()> {
+        let mut res = inner.file.write_all(buf).map_err(RucioError::from);
+        if res.is_ok() && fsync {
+            res = inner.file.sync_data().map_err(RucioError::from);
+        }
+        match res {
+            Ok(()) => {
+                inner.bytes += buf.len() as u64;
+                Ok(())
+            }
+            Err(e) => {
+                let _ = inner.file.set_len(inner.bytes);
+                Err(e)
+            }
+        }
+    }
+
+    /// Append one table commit. Under group commit the whole op list is
+    /// one frame (one write, at most one fsync); otherwise each op is
+    /// its own frame with its own fsync — the per-record baseline.
+    pub fn commit(&self, ops: Vec<Json>) -> Result<()> {
+        if ops.is_empty() {
+            return Ok(());
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if self.opts.group_commit {
+            let seq = inner.next_seq;
+            let payload =
+                Json::obj().with("k", "c").with("seq", seq).with("ops", Json::Arr(ops));
+            let buf = frame(&payload);
+            Self::append_frame(&mut inner, &buf, self.opts.fsync)?;
+            inner.next_seq += 1;
+            inner.records += 1;
+            inner.records_since_barrier += 1;
+        } else {
+            for op in ops {
+                let seq = inner.next_seq;
+                let payload =
+                    Json::obj().with("k", "c").with("seq", seq).with("ops", Json::Arr(vec![op]));
+                let buf = frame(&payload);
+                Self::append_frame(&mut inner, &buf, self.opts.fsync)?;
+                inner.next_seq += 1;
+                inner.records += 1;
+                inner.records_since_barrier += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Append a snapshot barrier and return its seq. The caller must
+    /// hold the table's shard locks so the fence position is exact.
+    pub fn barrier(&self) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        let buf = frame(&Json::obj().with("k", "b").with("seq", seq));
+        Self::append_frame(&mut inner, &buf, self.opts.fsync)?;
+        inner.next_seq += 1;
+        inner.records += 1;
+        inner.last_barrier_seq = seq;
+        inner.records_since_barrier = 0;
+        Ok(seq)
+    }
+
+    /// Rewrite the log to contain only the barrier frame `seq` — called
+    /// after the snapshot fenced by that barrier has been renamed into
+    /// place. Atomic (temp file + rename); the append handle is reopened
+    /// on the new file.
+    pub fn truncate_to_barrier(&self, seq: u64) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let buf = frame(&Json::obj().with("k", "b").with("seq", seq));
+        let tmp = tmp_path(&self.path);
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&buf)?;
+            if self.opts.fsync {
+                f.sync_data()?;
+            }
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        inner.file = OpenOptions::new().append(true).open(&self.path)?;
+        inner.bytes = buf.len() as u64;
+        inner.records = 1;
+        inner.last_barrier_seq = seq;
+        inner.records_since_barrier = 0;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> WalStats {
+        let inner = self.inner.lock().unwrap();
+        WalStats {
+            bytes: inner.bytes,
+            records: inner.records,
+            records_since_checkpoint: inner.records_since_barrier,
+            last_checkpoint_seq: inner.last_barrier_seq,
+            next_seq: inner.next_seq,
+        }
+    }
+}
+
+/// Replay helper shared by table recovery and tests: the `(key, op)`
+/// view of one commit frame's ops, decoded through a [`Durable`] type.
+pub fn decode_ops<V: Durable>(record: &Json) -> Result<Vec<ReplayOp<V>>> {
+    let ops = record
+        .get("ops")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| RucioError::DatabaseError("wal commit frame without ops".into()))?;
+    let mut out = Vec::with_capacity(ops.len());
+    for op in ops {
+        match op.opt_str("o") {
+            Some("u") => {
+                let row = op
+                    .get("row")
+                    .ok_or_else(|| RucioError::DatabaseError("wal put op without row".into()))?;
+                out.push(ReplayOp::Put(V::row_from_json(row)?));
+            }
+            Some("r") => {
+                let key = op
+                    .get("key")
+                    .ok_or_else(|| RucioError::DatabaseError("wal del op without key".into()))?;
+                out.push(ReplayOp::Del(V::key_from_json(key)?));
+            }
+            other => {
+                return Err(RucioError::DatabaseError(format!(
+                    "unknown wal op kind {other:?}"
+                )));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// One decoded replay op.
+pub enum ReplayOp<V: Durable> {
+    /// Insert-or-replace (covers live inserts, upserts, and updates).
+    Put(V),
+    /// Remove by key (missing keys are no-ops on replay).
+    Del(V::Key),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        static N: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let i = N.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!("rucio-wal-{}-{name}-{i}", std::process::id()))
+    }
+
+    fn op(i: u64) -> Json {
+        Json::obj().with("o", "u").with("row", Json::obj().with("id", i))
+    }
+
+    #[test]
+    fn commit_read_round_trip() {
+        let path = tmp("rt");
+        let wal = Wal::open(&path, WalOptions::default()).unwrap();
+        wal.commit(vec![op(1), op(2)]).unwrap();
+        wal.commit(vec![op(3)]).unwrap();
+        let scan = read_records(&path).unwrap();
+        assert!(!scan.torn);
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(scan.records[0].seq, 1);
+        assert_eq!(scan.records[1].seq, 2);
+        let ops = scan.records[0].payload.get("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops.len(), 2, "group commit: one frame for the batch");
+        let stats = wal.stats();
+        assert_eq!(stats.records, 2);
+        assert_eq!(stats.records_since_checkpoint, 2);
+        assert_eq!(stats.next_seq, 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn per_record_mode_writes_one_frame_per_op() {
+        let path = tmp("per");
+        let wal =
+            Wal::open(&path, WalOptions { fsync: false, group_commit: false }).unwrap();
+        wal.commit(vec![op(1), op(2), op(3)]).unwrap();
+        let scan = read_records(&path).unwrap();
+        assert_eq!(scan.records.len(), 3);
+        assert_eq!(scan.records[2].seq, 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_detected_and_dropped_on_reopen() {
+        let path = tmp("torn");
+        let wal = Wal::open(&path, WalOptions::default()).unwrap();
+        wal.commit(vec![op(1)]).unwrap();
+        wal.commit(vec![op(2)]).unwrap();
+        let full = std::fs::metadata(&path).unwrap().len();
+        drop(wal);
+        // cut into the final frame
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 5).unwrap();
+        drop(f);
+        let scan = read_records(&path).unwrap();
+        assert!(scan.torn);
+        assert_eq!(scan.records.len(), 1, "only the complete frame survives");
+        // reopen truncates the garbage and continues the seq
+        let wal = Wal::open(&path, WalOptions::default()).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), scan.valid_bytes);
+        wal.commit(vec![op(3)]).unwrap();
+        let scan = read_records(&path).unwrap();
+        assert!(!scan.torn);
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(scan.records[1].seq, 2, "seq continues past the valid prefix");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_byte_invalidates_the_frame() {
+        let path = tmp("corrupt");
+        let wal = Wal::open(&path, WalOptions::default()).unwrap();
+        wal.commit(vec![op(1)]).unwrap();
+        wal.commit(vec![op(2)]).unwrap();
+        drop(wal);
+        let mut data = std::fs::read(&path).unwrap();
+        let last = data.len() - 3;
+        data[last] ^= 0xFF; // flip a payload byte inside the second frame
+        std::fs::write(&path, &data).unwrap();
+        let scan = read_records(&path).unwrap();
+        assert!(scan.torn, "checksum mismatch reads as a torn tail");
+        assert_eq!(scan.records.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn barrier_and_truncate_fence_the_log() {
+        let path = tmp("barrier");
+        let wal = Wal::open(&path, WalOptions::default()).unwrap();
+        wal.commit(vec![op(1)]).unwrap();
+        let seq = wal.barrier().unwrap();
+        assert_eq!(seq, 2);
+        wal.commit(vec![op(2)]).unwrap();
+        let stats = wal.stats();
+        assert_eq!(stats.last_checkpoint_seq, 2);
+        assert_eq!(stats.records_since_checkpoint, 1);
+        wal.truncate_to_barrier(seq).unwrap();
+        let scan = read_records(&path).unwrap();
+        assert_eq!(scan.records.len(), 1);
+        assert_eq!(scan.records[0].payload.opt_str("k"), Some("b"));
+        // appends continue with the pre-truncation seq counter
+        wal.commit(vec![op(3)]).unwrap();
+        let scan = read_records(&path).unwrap();
+        assert_eq!(scan.records[1].seq, 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_frames_round_trip_and_reject_corruption() {
+        let path = tmp("snap");
+        let frames =
+            vec![Json::obj().with("k", "snap").with("ckpt", 7u64), Json::obj().with("i", 0)];
+        let bytes = write_frames_atomic(&path, &frames, false).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let back = read_frames(&path).unwrap();
+        assert_eq!(back, frames);
+        // a torn snapshot is an error, not a silent partial read
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(bytes - 2).unwrap();
+        drop(f);
+        assert!(read_frames(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_reads_empty() {
+        let path = tmp("missing");
+        let scan = read_records(&path).unwrap();
+        assert!(scan.records.is_empty() && !scan.torn && scan.valid_bytes == 0);
+    }
+}

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::analytics::chaos::{recovery_report, BacklogSample, RecoveryReport};
-use crate::common::clock::{Clock, DAY_MS, EpochMs, MINUTE_MS};
+use crate::common::clock::{Clock, DAY_MS, EpochMs, HOUR_MS, MINUTE_MS};
 use crate::daemons::{Ctx, Daemon};
 use crate::mq::SubId;
 use crate::sim::grid::region_of;
@@ -83,6 +83,11 @@ pub struct Driver {
     /// Backlog series captured at every invariant cycle (recovery report
     /// input).
     pub samples: Vec<BacklogSample>,
+    /// Next housekeeping tick (token purge + heartbeat expiry), hourly.
+    next_housekeep: EpochMs,
+    /// How many `ProcessCrash` events were applied (catalog dropped and
+    /// recovered from WAL + snapshots mid-run).
+    pub process_crashes: usize,
 }
 
 impl Driver {
@@ -108,6 +113,8 @@ impl Driver {
             next_check: start,
             violations: Vec::new(),
             samples: Vec::new(),
+            next_housekeep: start,
+            process_crashes: 0,
             ctx,
         }
     }
@@ -192,7 +199,59 @@ impl Driver {
                 Event::DaemonRestart { daemon, which } => {
                     self.restart_daemon(daemon, *which);
                 }
+                Event::ProcessCrash => {
+                    self.process_crash_and_recover();
+                }
                 other => crate::sim::scenario::apply(&self.ctx, other, now),
+            }
+        }
+    }
+
+    /// Apply a whole-process crash to the catalog: drop the live
+    /// in-memory state, cold-boot a replacement from the durability
+    /// directory ([`crate::core::Catalog::open_with`], same virtual
+    /// clock and config), restart the standard daemon fleet against the
+    /// recovered catalog, and immediately run the full invariant suite.
+    /// Infrastructure outside the catalog process (storage, network,
+    /// FTS, broker, heartbeats) survives, exactly like a real server
+    /// crash. Returns false (with a warning) when durability is off or
+    /// recovery fails; a failure is also recorded as a violation so
+    /// chaos tests cannot miss it.
+    pub fn process_crash_and_recover(&mut self) -> bool {
+        if !self.ctx.catalog.durable() {
+            crate::log_warn!("ProcessCrash ignored: [db] wal_dir not configured");
+            return false;
+        }
+        let cfg = self.ctx.catalog.cfg.clone();
+        let clock = self.ctx.catalog.clock.clone(); // shared SimClock: virtual time continues
+        match crate::core::Catalog::open_with(clock, cfg) {
+            Ok(recovered) => {
+                self.ctx.catalog = Arc::new(recovered);
+                let now = self.ctx.catalog.now();
+                // The daemon fleet held handles to the dead catalog —
+                // restart it, like daemons coming back after a host reboot.
+                self.daemons = Driver::standard_daemons(&self.ctx)
+                    .into_iter()
+                    .map(|d| DaemonSlot { daemon: d, due: now, crashed: false })
+                    .collect();
+                // Catalog metrics restarted from zero: reset the
+                // day-delta baselines derived from them.
+                self.prev_deleted = 0;
+                self.prev_deleted_bytes = 0;
+                self.prev_del_errors = 0;
+                self.process_crashes += 1;
+                self.check_invariants_now();
+                true
+            }
+            Err(e) => {
+                self.violations.push((
+                    self.ctx.catalog.now(),
+                    Violation {
+                        invariant: "process-crash-recovery",
+                        detail: e.to_string(),
+                    },
+                ));
+                false
             }
         }
     }
@@ -221,6 +280,7 @@ impl Driver {
     pub fn standard_daemons(ctx: &Ctx) -> Vec<Box<dyn Daemon>> {
         use crate::daemons::*;
         vec![
+            Box::new(checkpointer::Checkpointer::new(ctx.clone())),
             Box::new(hermes::Hermes::new(ctx.clone())),
             Box::new(transmogrifier::Transmogrifier::new(ctx.clone(), "trans-1")),
             Box::new(throttler::Throttler::new(ctx.clone(), "throt-1")),
@@ -275,6 +335,19 @@ impl Driver {
                     slot.daemon.tick(now);
                     slot.due = now + slot.daemon.interval_ms();
                 }
+            }
+            // 2b. hourly housekeeping: expired auth tokens leave the
+            //     catalog, fully-silent heartbeat entries are pruned
+            if now >= self.next_housekeep {
+                let purged = self.ctx.catalog.purge_expired_tokens();
+                if purged > 0 {
+                    self.ctx
+                        .catalog
+                        .metrics
+                        .incr("housekeeping.tokens_purged", purged as u64);
+                }
+                self.ctx.heartbeats.expire_dead(now);
+                self.next_housekeep = now + HOUR_MS;
             }
             // 3. infrastructure advances
             for fts in &self.ctx.fts {

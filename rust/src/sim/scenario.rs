@@ -64,6 +64,13 @@ pub enum Event {
     DaemonCrash { daemon: String, which: usize },
     /// Restart a crashed instance: it resumes ticking (and beating).
     DaemonRestart { daemon: String, which: usize },
+    /// Crash the whole catalog process: the driver *drops* the live
+    /// in-memory catalog and cold-boots a replacement from the
+    /// durability directory (WAL + snapshots), then restarts the daemon
+    /// fleet against the recovered state and runs the full invariant
+    /// suite. Requires `[db] wal_dir`; ignored (with a warning) on
+    /// non-durable catalogs.
+    ProcessCrash,
     /// Recall storm: staging rules for up to `datasets` archived RAW
     /// datasets onto Tier-1 disk (activity "Staging", 7-day lifetime).
     TapeRecallStorm { datasets: usize },
@@ -190,8 +197,9 @@ pub fn apply(ctx: &Ctx, event: &Event, now: EpochMs) {
                 fts.set_online(true);
             }
         }
-        Event::DaemonCrash { .. } | Event::DaemonRestart { .. } => {
-            // handled by the driver, which owns the daemon fleet
+        Event::DaemonCrash { .. } | Event::DaemonRestart { .. } | Event::ProcessCrash => {
+            // handled by the driver, which owns the daemon fleet and the
+            // catalog handle
         }
         Event::LinkSaturationStorm { rse_expression, datasets, activity } => {
             let mut issued = 0;

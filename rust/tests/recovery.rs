@@ -1,0 +1,459 @@
+//! Crash-recovery end-to-end suite: the durable catalog (WAL + sharded
+//! snapshots) must make a process crash a routine restart, not data
+//! loss.
+//!
+//! * property: for random catalog mutation streams (files, datasets,
+//!   metadata, replicas, rules, transfer outcomes, erasures) with
+//!   checkpoints at arbitrary points, `Catalog::open_with` yields a
+//!   catalog *observationally equal* to the never-crashed one — ordered
+//!   scans of every table plus every secondary/multi index read;
+//! * a torn WAL tail (crash mid-write) drops exactly the torn commit —
+//!   never half of one;
+//! * the `ProcessCrash` chaos scenario drops the live catalog mid-run,
+//!   recovers from disk, and the full `sim::invariants` suite plus the
+//!   ongoing workload keep passing;
+//! * registry row counters and `add_multi_index` back-fill behave on
+//!   recovered tables (regression guards);
+//! * driver housekeeping purges expired auth tokens during a sim run.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use rucio::common::clock::{Clock, MINUTE_MS};
+use rucio::common::config::Config;
+use rucio::common::proptest::forall;
+use rucio::core::metaexpr::MetaValue;
+use rucio::core::rse::Rse;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{AuthType, Did, DidKey, RequestState, RuleState};
+use rucio::core::Catalog;
+use rucio::db::{Durable, MultiIndex, Table};
+use rucio::jsonx::Json;
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::GridSpec;
+use rucio::sim::scenario::{Event, Scenario};
+use rucio::sim::workload::WorkloadSpec;
+
+// ---------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------
+
+fn tmpdir(name: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let i = N.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir()
+        .join(format!("rucio-recovery-{}-{name}-{i}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn durable_cfg(dir: &Path) -> Config {
+    let mut cfg = Config::new();
+    cfg.set("db", "wal_dir", dir.to_string_lossy().to_string());
+    cfg
+}
+
+fn table_json<V: Durable>(t: &Table<V>) -> Vec<Json> {
+    t.scan(|_| true).iter().map(|r| r.row_to_json()).collect()
+}
+
+fn assert_table_eq<V: Durable>(name: &str, a: &Table<V>, b: &Table<V>) {
+    assert_eq!(a.len(), b.len(), "table {name}: row count diverged");
+    assert_eq!(table_json(a), table_json(b), "table {name}: ordered rows diverged");
+}
+
+/// Observational equality: every table's ordered contents plus every
+/// secondary/multi index read must agree.
+fn assert_catalogs_equal(a: &Catalog, b: &Catalog) {
+    assert_table_eq("accounts", &a.accounts, &b.accounts);
+    assert_table_eq("identities", &a.identities, &b.identities);
+    assert_table_eq("tokens", &a.tokens, &b.tokens);
+    assert_table_eq("scopes", &a.scopes, &b.scopes);
+    assert_table_eq("dids", &a.dids, &b.dids);
+    assert_table_eq("attachments", &a.attachments, &b.attachments);
+    assert_table_eq("name_tombstones", &a.name_tombstones, &b.name_tombstones);
+    assert_table_eq("rses", &a.rses, &b.rses);
+    assert_table_eq("distances", &a.distances, &b.distances);
+    assert_table_eq("replicas", &a.replicas, &b.replicas);
+    assert_table_eq("bad_replicas", &a.bad_replicas, &b.bad_replicas);
+    assert_table_eq("rules", &a.rules, &b.rules);
+    assert_table_eq("locks", &a.locks, &b.locks);
+    assert_table_eq("requests", &a.requests, &b.requests);
+    assert_table_eq("account_limits", &a.limits, &b.limits);
+    assert_table_eq("account_usage", &a.usages, &b.usages);
+    assert_table_eq("subscriptions", &a.subscriptions, &b.subscriptions);
+    assert_table_eq("outbox", &a.outbox, &b.outbox);
+    assert_table_eq("popularity", &a.popularity, &b.popularity);
+
+    // registry counters agree table by table
+    assert_eq!(a.registry.snapshot(), b.registry.snapshot(), "registry snapshots");
+
+    // secondary indexes: equality of reads
+    for st in [RuleState::Ok, RuleState::Replicating, RuleState::Stuck, RuleState::Suspended] {
+        assert_eq!(a.rules_by_state.get(&st), b.rules_by_state.get(&st), "rules_by_state {st:?}");
+    }
+    for st in RequestState::ALL {
+        assert_eq!(
+            a.requests_by_state.get(&st),
+            b.requests_by_state.get(&st),
+            "requests_by_state {st:?}"
+        );
+    }
+    assert_eq!(
+        a.requests_by_dest.index_keys(),
+        b.requests_by_dest.index_keys(),
+        "requests_by_dest keys"
+    );
+    assert_eq!(a.dids_by_scope.index_keys(), b.dids_by_scope.index_keys());
+    for scope in a.dids_by_scope.index_keys() {
+        assert_eq!(
+            a.dids_by_scope.get(&scope),
+            b.dids_by_scope.get(&scope),
+            "dids_by_scope {scope}"
+        );
+    }
+    assert_eq!(a.dids_by_expiry.index_keys(), b.dids_by_expiry.index_keys());
+    assert_eq!(a.att_by_parent.index_keys(), b.att_by_parent.index_keys());
+    assert_eq!(a.att_by_child.index_keys(), b.att_by_child.index_keys());
+    assert_eq!(a.replicas_by_did.index_keys(), b.replicas_by_did.index_keys());
+    for k in a.replicas_by_did.index_keys() {
+        assert_eq!(a.replicas_by_did.get(&k), b.replicas_by_did.get(&k), "replicas_by_did {k}");
+    }
+    assert_eq!(
+        a.replicas_by_tombstone.index_keys(),
+        b.replicas_by_tombstone.index_keys(),
+        "reaper work queue"
+    );
+    assert_eq!(a.locks_by_rule.index_keys(), b.locks_by_rule.index_keys());
+    for k in a.locks_by_rule.index_keys() {
+        assert_eq!(a.locks_by_rule.get(&k), b.locks_by_rule.get(&k), "locks_by_rule {k}");
+    }
+    assert_eq!(a.locks_by_did.index_keys(), b.locks_by_did.index_keys());
+    assert_eq!(a.locks_by_replica.index_keys(), b.locks_by_replica.index_keys());
+    assert_eq!(a.rules_by_did.index_keys(), b.rules_by_did.index_keys());
+    assert_eq!(a.rules_by_expiry.index_keys(), b.rules_by_expiry.index_keys());
+    // the PR 3 inverted metadata index, postings and counts
+    assert_eq!(a.meta_index.key_counts(), b.meta_index.key_counts(), "meta_index postings");
+}
+
+/// Seed a durable catalog with two RSEs and a scope.
+fn seeded(dir: &Path, extra: impl FnOnce(&mut Config)) -> Catalog {
+    let mut cfg = durable_cfg(dir);
+    extra(&mut cfg);
+    let c = Catalog::new(Clock::sim_at(1_600_000_000_000), cfg);
+    c.add_scope("s", "root").unwrap();
+    let now = c.now();
+    c.add_rse(Rse::new("A", now).with_attr("site", "A")).unwrap();
+    c.add_rse(Rse::new("B", now).with_attr("site", "B")).unwrap();
+    c
+}
+
+// ---------------------------------------------------------------------
+// the recovery-equivalence property
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_recovered_catalog_equals_live() {
+    forall(8, |g| {
+        let dir = tmpdir("prop");
+        let group = g.bool();
+        let shards = g.usize(1, 7);
+        let live = seeded(&dir, |cfg| {
+            cfg.set("db", "shards", shards.to_string());
+            cfg.set("db", "group_commit", if group { "true" } else { "false" });
+        });
+        let meta_keys = ["run", "datatype", "eff", "flag"];
+        let meta_vals = ["358031", "RAW", "0.35", "true", "data18_13TeV", "-7"];
+        let mut files: Vec<DidKey> = Vec::new();
+        let mut datasets: Vec<DidKey> = Vec::new();
+        for step in 0..g.usize(40, 120) {
+            // upper bound exclusive: 0..=9, so the `_` arm (checkpoint)
+            // fires on 9
+            match g.usize(0, 10) {
+                0 | 1 => {
+                    let name = format!("f{step}");
+                    live.add_file("s", &name, "root", g.u64(1, 1_000_000), "aabbccdd", None)
+                        .unwrap();
+                    files.push(DidKey::new("s", &name));
+                }
+                2 => {
+                    let name = format!("ds{step}");
+                    live.add_dataset("s", &name, "root").unwrap();
+                    let ds = DidKey::new("s", &name);
+                    for _ in 0..g.usize(0, 3) {
+                        if let Some(f) = pick(g, &files) {
+                            let _ = live.attach(&ds, &f);
+                        }
+                    }
+                    datasets.push(ds);
+                }
+                3 => {
+                    if let Some(f) = pick(g, &files) {
+                        let key = *g.pick(&meta_keys);
+                        let val = *g.pick(&meta_vals);
+                        let _ = live.set_metadata(&f, key, val);
+                    }
+                }
+                4 => {
+                    if let Some(f) = pick(g, &files) {
+                        let rse = if g.bool() { "A" } else { "B" };
+                        let _ = live.add_replica(
+                            rse,
+                            &f,
+                            rucio::core::types::ReplicaState::Available,
+                            None,
+                        );
+                    }
+                }
+                5 => {
+                    let target = if g.bool() { pick(g, &files) } else { pick(g, &datasets) };
+                    if let Some(did) = target {
+                        let rse = if g.bool() { "A" } else { "B" };
+                        let _ = live.add_rule(RuleSpec::new("root", did, rse, 1));
+                    }
+                }
+                6 => {
+                    let reqs = live.requests.keys();
+                    if !reqs.is_empty() {
+                        let id = reqs[g.usize(0, reqs.len())];
+                        if g.bool() {
+                            let _ = live.on_transfer_done(id);
+                        } else {
+                            let _ = live.on_transfer_failed(id, "simulated failure");
+                        }
+                    }
+                }
+                7 => {
+                    let rules = live.rules.keys();
+                    if !rules.is_empty() {
+                        let _ = live.delete_rule(rules[g.usize(0, rules.len())]);
+                    }
+                }
+                8 => {
+                    if let Some(f) = pick(g, &files) {
+                        let _ = live.erase_did(&f);
+                    }
+                }
+                _ => {
+                    if g.chance(0.5) {
+                        live.checkpoint_all().unwrap();
+                    }
+                }
+            }
+        }
+        // crash at an arbitrary point in the checkpoint cycle, then
+        // cold-boot from disk and compare against the survivor
+        let recovered = Catalog::open_with(
+            Clock::sim_at(live.now()),
+            live.cfg.clone(),
+        )
+        .unwrap();
+        assert_catalogs_equal(&live, &recovered);
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+fn pick(g: &mut rucio::common::proptest::Gen, keys: &[DidKey]) -> Option<DidKey> {
+    if keys.is_empty() {
+        None
+    } else {
+        Some(keys[g.usize(0, keys.len())].clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// torn WAL tail: the final record dies whole
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_did_wal_tail_is_discarded_never_half_applied() {
+    let dir = tmpdir("torn");
+    let live = seeded(&dir, |_| {});
+    for i in 0..5 {
+        live.add_file("s", &format!("f{i}"), "root", 10, "aabbccdd", None).unwrap();
+        live.set_metadata(&DidKey::new("s", &format!("f{i}")), "run", &format!("{i}"))
+            .unwrap();
+    }
+    // crash mid-write: the last dids.wal frame (f4's metadata update)
+    // loses its final byte
+    let wal_path = dir.join("dids.wal");
+    let len = std::fs::metadata(&wal_path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&wal_path).unwrap();
+    f.set_len(len - 1).unwrap();
+    drop(f);
+
+    let recovered = Catalog::open_with(Clock::sim_at(live.now()), live.cfg.clone()).unwrap();
+    assert_eq!(recovered.dids.len(), 5, "all five files survive (inserts are older frames)");
+    // f4 exists but its metadata update — the torn frame — is gone whole
+    let f4 = recovered.get_did(&DidKey::new("s", "f4")).unwrap();
+    assert!(f4.meta.is_empty(), "torn metadata commit discarded, not half-applied");
+    let f3 = recovered.get_did(&DidKey::new("s", "f3")).unwrap();
+    assert_eq!(f3.meta.get("run"), Some(&MetaValue::Int(3)), "intact frames replayed");
+    // the inverted index agrees with the recovered rows, not the lost one
+    let postings = recovered.meta_index.key_counts();
+    assert_eq!(postings.len(), 4, "four run postings: {postings:?}");
+    assert_eq!(recovered.metrics.counter("db.recovery_torn_tails"), 1);
+    // and the recovered catalog keeps appending cleanly after the cut
+    recovered
+        .set_metadata(&DidKey::new("s", "f4"), "run", "4")
+        .unwrap();
+    let again = Catalog::open_with(Clock::sim_at(recovered.now()), recovered.cfg.clone()).unwrap();
+    assert_eq!(again.meta_index.key_counts().len(), 5);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// satellite regression guards
+// ---------------------------------------------------------------------
+
+#[test]
+fn registry_snapshot_agrees_with_table_lens_after_recovery() {
+    let dir = tmpdir("registry");
+    let live = seeded(&dir, |_| {});
+    for i in 0..12 {
+        live.add_file("s", &format!("f{i}"), "root", 10, "aabbccdd", None).unwrap();
+        live.add_replica("A", &DidKey::new("s", &format!("f{i}")),
+            rucio::core::types::ReplicaState::Available, None).unwrap();
+    }
+    live.add_rule(RuleSpec::new("root", DidKey::new("s", "f0"), "B", 1)).unwrap();
+    live.checkpoint_all().unwrap();
+    live.add_file("s", "post-ckpt", "root", 1, "x", None).unwrap();
+
+    let recovered = Catalog::open_with(Clock::sim_at(live.now()), live.cfg.clone()).unwrap();
+    // the O(1) counters behind Registry::snapshot must equal actual row
+    // counts after a cold boot
+    let snap = recovered.registry.snapshot();
+    assert_eq!(snap["dids"], recovered.dids.keys().len());
+    assert_eq!(snap["replicas"], recovered.replicas.keys().len());
+    assert_eq!(snap["rules"], recovered.rules.keys().len());
+    assert_eq!(snap["requests"], recovered.requests.keys().len());
+    assert_eq!(snap["dids"], 13);
+    assert_eq!(snap, live.registry.snapshot(), "recovered counters match the live catalog");
+    // sim::invariants' counter-agreement check concurs
+    let violations = rucio::sim::invariants::check(&recovered);
+    assert!(violations.is_empty(), "{violations:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multi_index_backfill_on_recovered_table() {
+    let dir = tmpdir("backfill");
+    let live = seeded(&dir, |_| {});
+    for i in 0..6 {
+        let key = DidKey::new("s", &format!("f{i}"));
+        live.add_file("s", &format!("f{i}"), "root", 10, "aabbccdd", None).unwrap();
+        live.set_metadata(&key, "datatype", if i % 2 == 0 { "RAW" } else { "AOD" }).unwrap();
+    }
+    live.erase_did(&DidKey::new("s", "f5")).unwrap();
+    live.checkpoint_all().unwrap();
+
+    let recovered = Catalog::open_with(Clock::sim_at(live.now()), live.cfg.clone()).unwrap();
+    // a brand-new multi index attached to the *recovered* table must
+    // back-fill to exactly the built-in one (the PR 3 erase-did postings
+    // fix must survive a restart: f5's postings are gone)
+    let fresh: MultiIndex<Did, (String, String, MetaValue)> = MultiIndex::new(|d: &Did| {
+        d.meta
+            .iter()
+            .map(|(k, v)| (d.key.scope.clone(), k.clone(), v.clone()))
+            .collect()
+    });
+    recovered.dids.add_multi_index(&fresh).unwrap();
+    assert_eq!(fresh.key_counts(), recovered.meta_index.key_counts());
+    assert_eq!(fresh.len(), 5, "erased DID's postings stayed erased across the restart");
+    // and the back-filled index stays live for post-recovery mutations
+    recovered.erase_did(&DidKey::new("s", "f4")).unwrap();
+    assert_eq!(fresh.key_counts(), recovered.meta_index.key_counts());
+    assert_eq!(fresh.len(), 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// chaos: ProcessCrash mid-run + full invariant suite
+// ---------------------------------------------------------------------
+
+#[test]
+fn process_crash_chaos_recovers_and_invariants_hold() {
+    let dir = tmpdir("chaos");
+    let seed = 20_260_731;
+    let mut cfg = durable_cfg(&dir);
+    cfg.set("db", "checkpoint_interval", "2h");
+    cfg.set("reaper", "tombstone_grace", "1h");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 4,
+            files_per_dataset: 4,
+            median_file_bytes: 500_000_000,
+            derivations_per_day: 3,
+            analysis_accesses_per_day: 40,
+            seed: seed ^ 0xA0D,
+            ..Default::default()
+        },
+        cfg,
+    );
+    assert!(driver.ctx.catalog.durable());
+    driver.enable_invariant_checks(4 * 60 * MINUTE_MS);
+    // an outage brackets the crash so recovery happens under live churn
+    let sc = Scenario::new("crash mid-run")
+        .at_hours(6, Event::RseDown { rse: "CA-T2-1".into() })
+        .at_hours(30, Event::ProcessCrash)
+        .at_hours(40, Event::RseUp { rse: "CA-T2-1".into() });
+    driver.schedule_scenario(&sc);
+    driver.run_days(2, 10 * MINUTE_MS);
+
+    assert_eq!(driver.process_crashes, 1, "the catalog was dropped and recovered");
+    assert!(driver.violations.is_empty(), "{:?}", driver.violations);
+    // the recovered catalog carried real state across the crash...
+    let cat = &driver.ctx.catalog;
+    assert!(cat.metrics.gauge("db.recovered_rows") > 0, "snapshot had rows");
+    assert!(!cat.dids.is_empty(), "namespace survived");
+    // ...and the system kept operating afterwards (crash was at hour 30)
+    assert!(driver.days[1].transfers_done > 0, "day 2 transfers: {:?}", driver.days[1]);
+    assert!(
+        cat.metrics.counter("checkpointer.runs") > 0,
+        "checkpointer kept snapshotting after recovery"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn process_crash_without_durability_is_a_noop() {
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, ..Default::default() },
+        WorkloadSpec::default(),
+        Config::new(),
+    );
+    assert!(!driver.process_crash_and_recover());
+    assert_eq!(driver.process_crashes, 0);
+    assert!(driver.violations.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// housekeeping: expired tokens vanish during a sim run
+// ---------------------------------------------------------------------
+
+#[test]
+fn expired_tokens_are_purged_during_a_sim_run() {
+    let mut cfg = Config::new();
+    cfg.set("auth", "token_lifetime", "30m");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 2,
+            files_per_dataset: 2,
+            ..Default::default()
+        },
+        cfg,
+    );
+    let cat = driver.ctx.catalog.clone();
+    cat.add_identity("operator", AuthType::UserPass, "root", Some("hunter2")).unwrap();
+    let token = cat.auth_userpass("root", "operator", "hunter2").unwrap();
+    assert!(cat.validate_token(&token.token).is_ok());
+    assert_eq!(cat.tokens.len(), 1);
+
+    driver.run_days(1, 10 * MINUTE_MS);
+
+    assert_eq!(cat.tokens.len(), 0, "housekeeping purged the expired token");
+    assert!(cat.metrics.counter("housekeeping.tokens_purged") >= 1);
+    assert!(cat.validate_token(&token.token).is_err());
+}
