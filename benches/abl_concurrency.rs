@@ -1,0 +1,242 @@
+//! Ablation: the concurrent runtime (ISSUE PR 6) — how the three
+//! contention fixes scale under real OS threads:
+//!
+//! 1. **Shard grid** — 1 vs 8 vs 32 table shards under 16 concurrent
+//!    writers (no WAL, isolating the shard `RwLock`s). Full mode asserts
+//!    32 shards strictly outperform the single global lock.
+//! 2. **WAL commit path** — legacy global-mutex commits vs leader-based
+//!    group commit (`WalOptions::leader`) under the same 16 writers.
+//!    Leader mode amortizes frame IO across a commit window; the printed
+//!    mean window size (from the new `WalStats` flush counters) shows
+//!    how many commits each leader drained.
+//! 3. **REST + fleet** — end-to-end req/s against the real thread-pooled
+//!    server with the full daemon fleet live on a durable group-commit
+//!    catalog, 1 worker vs 8 workers (clients == workers: a keep-alive
+//!    connection pins its worker). Full mode asserts ≥ 2x scaling.
+//!
+//! Results are also written as `BENCH_abl_concurrency.json` in the
+//! working directory so CI can archive the perf trajectory.
+//!
+//! Under `RUCIO_BENCH_SMOKE` the sizes shrink to a harness check and
+//! all ratio assertions are skipped (timings are meaningless there).
+
+use rucio::benchkit::{section, smoke_mode};
+use rucio::client::RucioClient;
+use rucio::common::clock::Clock;
+use rucio::common::config::Config;
+use rucio::core::types::AuthType;
+use rucio::daemons::{FleetHandle, Paced};
+use rucio::db::{Durable, Row, Table, WalOptions};
+use rucio::jsonx::Json;
+use rucio::sim::driver::Driver;
+use rucio::sim::grid::{build_grid, GridSpec};
+use rucio::{Result, RucioError};
+
+#[derive(Clone, Debug)]
+struct BenchRow {
+    id: u64,
+    payload: String,
+}
+
+impl Row for BenchRow {
+    type Key = u64;
+    fn key(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Durable for BenchRow {
+    fn row_to_json(&self) -> Json {
+        Json::obj().with("id", self.id).with("payload", self.payload.as_str())
+    }
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(BenchRow { id: j.req_u64("id")?, payload: j.req_str("payload")?.to_string() })
+    }
+    fn key_to_json(key: &u64) -> Json {
+        Json::from(*key)
+    }
+    fn key_from_json(j: &Json) -> Result<u64> {
+        j.as_u64().ok_or_else(|| RucioError::JsonError("bad key".into()))
+    }
+}
+
+fn row(id: u64) -> BenchRow {
+    BenchRow { id, payload: format!("replica-{id:012}-state-AVAILABLE") }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("rucio-abl-conc-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// `writers` threads upsert `per_writer` disjoint rows each; returns
+/// aggregate upserts/sec.
+fn run_writers(t: &Table<BenchRow>, writers: usize, per_writer: usize) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..writers {
+            let t = &*t;
+            s.spawn(move || {
+                let base = (w * per_writer) as u64;
+                for i in 0..per_writer as u64 {
+                    t.upsert(row(base + i), 0);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert_eq!(t.len(), writers * per_writer, "every upsert applied");
+    (writers * per_writer) as f64 / elapsed.max(1e-9)
+}
+
+/// Ablation 1: shard count under 16 concurrent writers, no WAL.
+fn shard_grid(writers: usize, per_writer: usize, out: &mut Json) -> (f64, f64) {
+    section(&format!("Ablation: table shards under {writers} concurrent writers"));
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for shards in [1usize, 8, 32] {
+        let t: Table<BenchRow> = Table::new("bench").with_shards(shards);
+        let rate = run_writers(&t, writers, per_writer);
+        println!("{shards:>3} shards: {rate:>12.0} upserts/s");
+        out.set(&format!("shards_{shards}_ops_per_sec"), rate);
+        if shards == 1 {
+            first = rate;
+        }
+        last = rate;
+    }
+    (first, last)
+}
+
+/// Ablation 2: WAL legacy global-mutex commits vs leader group commit,
+/// same 16 writers (every upsert is one WAL commit).
+fn wal_grid(writers: usize, per_writer: usize, out: &mut Json) {
+    section(&format!("Ablation: WAL commit path under {writers} concurrent writers"));
+    for (name, leader) in [("global-mutex", false), ("leader group commit", true)] {
+        let dir = temp_dir(if leader { "leader" } else { "mutex" });
+        let t: Table<BenchRow> = Table::new("bench").with_shards(32);
+        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: true, leader }).unwrap();
+        let rate = run_writers(&t, writers, per_writer);
+        let stats = t.wal_stats().unwrap();
+        let mean_window = stats.flushed_frames as f64 / stats.flush_windows.max(1) as f64;
+        println!(
+            "{name:>20}: {rate:>12.0} upserts/s | {} windows, mean {:.1} frames/window, max {}",
+            stats.flush_windows, mean_window, stats.max_window_frames
+        );
+        let key = if leader { "wal_leader" } else { "wal_mutex" };
+        out.set(&format!("{key}_ops_per_sec"), rate);
+        out.set(&format!("{key}_mean_window_frames"), mean_window);
+
+        // durability sanity under contention: the log replays in full
+        let r: Table<BenchRow> = Table::new("bench").with_shards(32);
+        r.recover_from_dir(&dir).unwrap();
+        assert_eq!(r.len(), writers * per_writer, "recovery replays every commit");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Ablation 3: REST req/s with the daemon fleet live, 1 vs 8 workers.
+fn rest_fleet(reqs_per_client: usize, out: &mut Json) -> (f64, f64) {
+    section("Ablation: REST + live fleet, 1 vs 8 server workers");
+    let mut rates = Vec::new();
+    for workers in [1usize, 8] {
+        let dir = temp_dir(&format!("rest-{workers}"));
+        let mut cfg = Config::new();
+        cfg.set("db", "wal_dir", dir.to_string_lossy().to_string());
+        cfg.set("db", "shards", "32");
+        // Real clock: daemons and HTTP run on wall time here.
+        let spec = GridSpec { t2_per_region: 1, fts_servers: 1, ..GridSpec::default() };
+        let ctx = build_grid(&spec, Clock::Real, cfg);
+        ctx.catalog
+            .add_identity("alice", AuthType::UserPass, "alice", Some("pw"))
+            .unwrap();
+        let mut fleet = FleetHandle::spawn(Paced::fleet(Driver::standard_daemons(&ctx), 100));
+        let server = rucio::server::serve(
+            ctx.catalog.clone(),
+            ctx.broker.clone(),
+            "127.0.0.1:0",
+            workers,
+        )
+        .unwrap();
+        let url = server.url();
+
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..workers {
+                let url = url.clone();
+                s.spawn(move || {
+                    let client = RucioClient::connect(&url, "alice", "alice", "pw").unwrap();
+                    for i in 0..reqs_per_client {
+                        let name = format!("bench-w{workers}-c{c}-i{i}");
+                        match i % 4 {
+                            // mixed mix: writes (durable WAL commits) + reads
+                            0 => client.add_file("data18", &name, 1_000, "aabbccdd").unwrap(),
+                            1 => {
+                                client
+                                    .register_replica("CERN-PROD", "data18", &prev(&name), None)
+                                    .map(|_| ())
+                                    .unwrap();
+                            }
+                            2 => {
+                                client.get_did("data18", &prev(&name)).map(|_| ()).unwrap();
+                            }
+                            _ => {
+                                client.ping().map(|_| ()).unwrap();
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let elapsed = t0.elapsed().as_secs_f64();
+        let total = workers * reqs_per_client;
+        let rate = total as f64 / elapsed.max(1e-9);
+        println!("{workers} worker(s) × {reqs_per_client} reqs/client: {rate:>10.0} req/s");
+        out.set(&format!("rest_{workers}_workers_req_per_sec"), rate);
+        rates.push(rate);
+
+        drop(server);
+        fleet.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    (rates[0], rates[1])
+}
+
+/// The file the previous loop step (`i % 4 == 0`) created: replica
+/// registration and reads always target an existing DID.
+fn prev(name: &str) -> String {
+    let (head, i) = name.rsplit_once("-i").unwrap();
+    let i: usize = i.parse().unwrap();
+    format!("{head}-i{}", i - (i % 4))
+}
+
+fn main() {
+    let (writers, per_writer, reqs_per_client) =
+        if smoke_mode() { (16, 50, 40) } else { (16, 10_000, 1_200) };
+
+    let mut results = Json::obj().with("bench", "abl_concurrency");
+    let (shard1, shard32) = shard_grid(writers, per_writer, &mut results);
+    wal_grid(writers, per_writer, &mut results);
+    let (rest1, rest8) = rest_fleet(reqs_per_client, &mut results);
+
+    println!(
+        "\nshards 1→32: {:.2}x | REST workers 1→8: {:.2}x\n",
+        shard32 / shard1,
+        rest8 / rest1
+    );
+    if !smoke_mode() {
+        assert!(
+            shard32 > shard1,
+            "32 shards must beat 1 shard under {writers} writers \
+             ({shard32:.0} vs {shard1:.0} upserts/s)"
+        );
+        assert!(
+            rest8 >= 2.0 * rest1,
+            "8 REST workers must give >= 2x the 1-worker rate with the fleet live \
+             ({rest8:.0} vs {rest1:.0} req/s)"
+        );
+    }
+
+    std::fs::write("BENCH_abl_concurrency.json", results.to_string()).unwrap();
+    println!("abl_concurrency bench OK (BENCH_abl_concurrency.json written)");
+}

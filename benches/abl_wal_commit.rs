@@ -94,25 +94,25 @@ fn main() {
         &format!("{n} upserts, group commit, no fsync"),
         n,
         batch,
-        Some(WalOptions { fsync: false, group_commit: true }),
+        Some(WalOptions { fsync: false, group_commit: true, leader: true }),
     );
     let per_record = run(
         &format!("{n} upserts, per-record, no fsync"),
         n,
         batch,
-        Some(WalOptions { fsync: false, group_commit: false }),
+        Some(WalOptions { fsync: false, group_commit: false, leader: true }),
     );
     let group_fsync = run(
         &format!("{n} upserts, group commit + fsync"),
         n,
         batch,
-        Some(WalOptions { fsync: true, group_commit: true }),
+        Some(WalOptions { fsync: true, group_commit: true, leader: true }),
     );
     let per_record_fsync = run(
         &format!("{n} upserts, per-record + fsync"),
         n,
         batch,
-        Some(WalOptions { fsync: true, group_commit: false }),
+        Some(WalOptions { fsync: true, group_commit: false, leader: true }),
     );
 
     let wal_tax = group.mean_ns / baseline.mean_ns;

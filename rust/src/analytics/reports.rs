@@ -226,6 +226,42 @@ pub fn wal_stats(catalog: &Catalog) -> Vec<Vec<String>> {
     rows
 }
 
+/// Shard-lock contention report (paper §3.6 scaling companion): per
+/// table, how write traffic hits the shard locks and — for durable
+/// tables — how well WAL group commit batches it. Rows:
+/// `[table, shards, single_write_locks, bulk_commits, bulk_shards_locked,
+/// wal_flush_windows, wal_flushed_frames, wal_max_window_frames]` —
+/// all-numeric cells; the three WAL cells are `0` for non-durable
+/// tables. `flushed_frames / flush_windows` is the mean group-commit
+/// batch size; `bulk_shards_locked / bulk_commits` the mean shards a
+/// bulk mutation touched (an all-shard bulk path would pin this at the
+/// shard count). What the `benches/abl_concurrency` ablations measure,
+/// exposed as a production report.
+pub fn contention_stats(catalog: &Catalog) -> Vec<Vec<String>> {
+    let wal = catalog.registry.wal_stats();
+    catalog
+        .registry
+        .contention()
+        .into_iter()
+        .map(|(name, c)| {
+            let (fw, ff, mw) = wal
+                .get(&name)
+                .map(|w| (w.flush_windows, w.flushed_frames, w.max_window_frames))
+                .unwrap_or((0, 0, 0));
+            vec![
+                name,
+                c.shard_count.to_string(),
+                c.single_write_locks.to_string(),
+                c.bulk_commits.to_string(),
+                c.bulk_shards_locked.to_string(),
+                fw.to_string(),
+                ff.to_string(),
+                mw.to_string(),
+            ]
+        })
+        .collect()
+}
+
 /// Table-size report off the monitoring registry (paper §4.6: "a probe
 /// regularly checks the database" — queue depths and catalog scale).
 pub fn table_sizes(catalog: &Catalog) -> Vec<Vec<String>> {
@@ -337,6 +373,44 @@ mod tests {
         assert_eq!(rows.last().unwrap()[0], "_recovery");
         // non-durable catalog: empty report
         assert!(wal_stats(&Catalog::new_for_tests()).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn contention_report_tracks_locks_and_wal_windows() {
+        use crate::common::clock::Clock;
+        use crate::common::config::Config;
+        let dir = std::env::temp_dir()
+            .join(format!("rucio-contreport-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = Config::new();
+        cfg.set("db", "wal_dir", dir.to_string_lossy().to_string());
+        let c = Catalog::new(Clock::sim_at(1_600_000_000_000), cfg);
+        c.add_scope("s", "root").unwrap();
+        for i in 0..5 {
+            c.add_file("s", &format!("f{i}"), "root", 1, "x", None).unwrap();
+        }
+        let rows = contention_stats(&c);
+        assert!(rows.len() >= 19, "one row per table: {}", rows.len());
+        for r in &rows {
+            assert_eq!(r.len(), 8);
+            for cell in &r[1..] {
+                cell.parse::<u64>().expect("numeric cell");
+            }
+        }
+        let dids = rows.iter().find(|r| r[0] == "dids").unwrap();
+        assert!(dids[2].parse::<u64>().unwrap() >= 5, "5 single-row inserts");
+        assert!(dids[5].parse::<u64>().unwrap() > 0, "WAL flush windows");
+        assert!(dids[6].parse::<u64>().unwrap() > 0, "WAL flushed frames");
+
+        // non-durable catalog: contention rows present, WAL cells zero
+        let mem = Catalog::new_for_tests();
+        mem.add_scope("s", "root").unwrap();
+        mem.add_file("s", "f", "root", 1, "x", None).unwrap();
+        let rows = contention_stats(&mem);
+        let dids = rows.iter().find(|r| r[0] == "dids").unwrap();
+        assert!(dids[2].parse::<u64>().unwrap() >= 1);
+        assert_eq!(&dids[5..8], ["0", "0", "0"].map(String::from).as_slice());
         std::fs::remove_dir_all(&dir).ok();
     }
 

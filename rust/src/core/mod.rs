@@ -354,6 +354,7 @@ impl Catalog {
         WalOptions {
             fsync: self.cfg.get_bool("db", "fsync", false),
             group_commit: self.cfg.get_bool("db", "group_commit", true),
+            leader: self.cfg.get_bool("db", "wal_leader", true),
         }
     }
 
@@ -518,6 +519,7 @@ impl Catalog {
         r.register(self.subscriptions.name(), self.subscriptions.len_counter());
         r.register(self.outbox.name(), self.outbox.len_counter());
         r.register(self.popularity.name(), self.popularity.len_counter());
+        with_all_tables!(self, t => r.register_contention(t.name(), t.contention_probe()));
     }
 
     /// Default catalog for tests: real clock, empty config, plus the

@@ -85,9 +85,22 @@ pub trait Daemon: Send {
     }
 }
 
+/// Sleep `ms` in small slices, returning early when `stop` is set, so
+/// shutdown stays responsive however long the daemon interval is.
+fn sliced_sleep(ms: u64, stop: &AtomicBool) {
+    let mut remaining = ms;
+    while remaining > 0 && !stop.load(Ordering::Relaxed) {
+        let slice = remaining.min(50);
+        std::thread::sleep(std::time::Duration::from_millis(slice));
+        remaining -= slice;
+    }
+}
+
 /// Run daemons on real threads until `stop` is set (production mode,
 /// paper §5.2: "each daemon can be instantiated multiple times in
-/// parallel").
+/// parallel"). Each daemon's first tick is staggered by a deterministic
+/// per-name offset inside its interval, so a fleet started together does
+/// not thundering-herd the catalog at every interval boundary.
 pub fn run_threaded(
     daemons: Vec<Box<dyn Daemon>>,
     stop: Arc<AtomicBool>,
@@ -98,20 +111,92 @@ pub fn run_threaded(
             let stop = stop.clone();
             std::thread::spawn(move || {
                 let interval = d.interval_ms().max(10) as u64;
+                let stagger = crate::db::shard_hash(d.name().as_bytes()) % interval;
+                sliced_sleep(stagger, &stop);
                 while !stop.load(Ordering::Relaxed) {
                     let now = crate::common::clock::Clock::Real.now_ms();
                     let _ = d.tick(now);
-                    // Sleep in small slices so shutdown is responsive.
-                    let mut remaining = interval;
-                    while remaining > 0 && !stop.load(Ordering::Relaxed) {
-                        let slice = remaining.min(50);
-                        std::thread::sleep(std::time::Duration::from_millis(slice));
-                        remaining -= slice;
-                    }
+                    sliced_sleep(interval, &stop);
                 }
             })
         })
         .collect()
+}
+
+/// A running daemon fleet: the stop flag plus the thread handles
+/// [`run_threaded`] returned, joined on [`FleetHandle::shutdown`] (or
+/// drop). What production callers and the threaded soak test hold.
+pub struct FleetHandle {
+    stop: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl FleetHandle {
+    /// Spawn `daemons` with [`run_threaded`] under a fresh stop flag.
+    pub fn spawn(daemons: Vec<Box<dyn Daemon>>) -> FleetHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles = run_threaded(daemons, stop.clone());
+        FleetHandle { stop, handles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Signal every daemon thread to stop and join them all.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FleetHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Override a daemon's tick interval without touching the daemon — the
+/// threaded soak test runs the standard fleet (whose production
+/// intervals are seconds to hours) at a pace that fits a wall-clock
+/// test window.
+pub struct Paced {
+    inner: Box<dyn Daemon>,
+    interval_ms: i64,
+}
+
+impl Paced {
+    pub fn new(inner: Box<dyn Daemon>, interval_ms: i64) -> Paced {
+        Paced { inner, interval_ms }
+    }
+
+    /// Wrap a whole fleet at one interval.
+    pub fn fleet(daemons: Vec<Box<dyn Daemon>>, interval_ms: i64) -> Vec<Box<dyn Daemon>> {
+        daemons
+            .into_iter()
+            .map(|d| Box::new(Paced::new(d, interval_ms)) as Box<dyn Daemon>)
+            .collect()
+    }
+}
+
+impl Daemon for Paced {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        self.inner.tick(now)
+    }
+
+    fn interval_ms(&self) -> i64 {
+        self.interval_ms
+    }
 }
 
 #[cfg(test)]
@@ -148,6 +233,38 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        assert!(count.load(Ordering::Relaxed) >= 2);
+    }
+
+    struct SlowDaemon;
+
+    impl Daemon for SlowDaemon {
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+        fn tick(&mut self, _now: EpochMs) -> usize {
+            0
+        }
+        fn interval_ms(&self) -> i64 {
+            3_600_000
+        }
+    }
+
+    #[test]
+    fn paced_fleet_reticks_fast_and_shuts_down() {
+        let count = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let daemons: Vec<Box<dyn Daemon>> = vec![
+            Box::new(CountingDaemon { count: count.clone() }),
+            Box::new(SlowDaemon),
+        ];
+        // Paced overrides even the hour-scale interval, and the stagger
+        // (bounded by the overridden interval) cannot exceed 10 ms.
+        let mut fleet = FleetHandle::spawn(Paced::fleet(daemons, 10));
+        assert_eq!(fleet.len(), 2);
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        let t0 = std::time::Instant::now();
+        fleet.shutdown();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(2), "join stalled");
         assert!(count.load(Ordering::Relaxed) >= 2);
     }
 }

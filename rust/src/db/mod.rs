@@ -69,7 +69,8 @@ pub mod table;
 pub mod wal;
 
 pub use table::{
-    Batch, BatchOp, BatchSummary, Index, MultiIndex, Op, Page, Row, Table, DEFAULT_SHARDS,
+    Batch, BatchOp, BatchSummary, ContentionStats, Index, MultiIndex, Op, Page, Row, Table,
+    DEFAULT_SHARDS,
 };
 pub use wal::{
     CheckpointStats, Durable, RecoverStats, TablePersist, Wal, WalOptions, WalStats,
@@ -137,6 +138,7 @@ pub fn assigned_to(key: u64, worker_idx: usize, n_workers: usize) -> bool {
 pub struct Registry {
     counts: Arc<Mutex<BTreeMap<String, Arc<dyn Fn() -> usize + Send + Sync>>>>,
     persist: Arc<Mutex<BTreeMap<String, Arc<dyn TablePersist>>>>,
+    contention: Arc<Mutex<BTreeMap<String, Arc<dyn Fn() -> ContentionStats + Send + Sync>>>>,
 }
 
 impl Registry {
@@ -178,6 +180,27 @@ impl Registry {
             out.insert(t.table_name().to_string(), t.checkpoint()?);
         }
         Ok(out)
+    }
+
+    /// Register a table's shard-lock contention probe
+    /// ([`Table::contention_probe`]).
+    pub fn register_contention(
+        &self,
+        name: &str,
+        probe: Arc<dyn Fn() -> ContentionStats + Send + Sync>,
+    ) {
+        self.contention.lock().unwrap().insert(name.to_string(), probe);
+    }
+
+    /// Point-in-time shard-lock contention counters of every table with
+    /// a registered probe.
+    pub fn contention(&self) -> BTreeMap<String, ContentionStats> {
+        self.contention
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, f)| (k.clone(), f()))
+            .collect()
     }
 
     /// Live WAL shape of every registered durable table.

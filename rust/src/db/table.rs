@@ -34,7 +34,7 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::hash::{Hash, Hasher};
 use std::ops::Bound;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::common::clock::EpochMs;
@@ -168,9 +168,35 @@ struct TableCore<V: Row> {
     /// Total live rows, maintained on every mutation: O(1) `len()` with no
     /// locking, and the closure handed to `db::Registry` for monitoring.
     len: Arc<AtomicUsize>,
+    /// Mirrors `history.is_some()` so the (majority) history-off case
+    /// skips the `history` write lock entirely on every mutation.
+    history_on: AtomicBool,
     history: RwLock<Option<Vec<(EpochMs, Op, V)>>>,
     indexes: RwLock<Vec<Arc<dyn IndexMaint<V>>>>,
     wal: RwLock<Option<WalBinding<V>>>,
+    contention: Arc<ContentionCounters>,
+}
+
+/// Lock-acquisition counters for one table, shared with the monitoring
+/// registry (`analytics::reports::contention_stats`).
+#[derive(Debug, Default)]
+pub struct ContentionCounters {
+    /// Single-row mutations (each takes exactly one shard write lock).
+    pub single_write_locks: AtomicU64,
+    /// Batch commits (`apply` / `update_bulk`).
+    pub bulk_commits: AtomicU64,
+    /// Total shard write locks taken across all batch commits;
+    /// `bulk_shards_locked / bulk_commits` is the mean batch footprint.
+    pub bulk_shards_locked: AtomicU64,
+}
+
+/// A point-in-time read of [`ContentionCounters`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ContentionStats {
+    pub shard_count: u64,
+    pub single_write_locks: u64,
+    pub bulk_commits: u64,
+    pub bulk_shards_locked: u64,
 }
 
 /// A typed, thread-safe, ordered, hash-sharded table. `Table` is a cheap
@@ -199,9 +225,11 @@ impl<V: Row> Table<V> {
                 name,
                 shards: make_shards(DEFAULT_SHARDS),
                 len: Arc::new(AtomicUsize::new(0)),
+                history_on: AtomicBool::new(false),
                 history: RwLock::new(None),
                 indexes: RwLock::new(Vec::new()),
                 wal: RwLock::new(None),
+                contention: Arc::new(ContentionCounters::default()),
             }),
         }
     }
@@ -219,7 +247,20 @@ impl<V: Row> Table<V> {
     /// historical tables").
     pub fn with_history(self) -> Self {
         *self.core.history.write().unwrap() = Some(Vec::new());
+        self.core.history_on.store(true, Ordering::Release);
         self
+    }
+
+    /// Record one history entry if history is enabled — the disabled
+    /// (default) case is a single relaxed atomic load, not a write-lock
+    /// round trip on every mutation.
+    fn history_push(&self, now: EpochMs, op: Op, row: &V) {
+        if !self.core.history_on.load(Ordering::Acquire) {
+            return;
+        }
+        if let Some(h) = self.core.history.write().unwrap().as_mut() {
+            h.push((now, op, row.clone()));
+        }
     }
 
     pub fn name(&self) -> &'static str {
@@ -259,7 +300,10 @@ impl<V: Row> Table<V> {
     }
 
     fn attach_maint(&self, maint: Arc<dyn IndexMaint<V>>) -> Result<()> {
-        let guards: Vec<_> = self.core.shards.iter().map(|s| s.write().unwrap()).collect();
+        // Read locks suffice to fence the back-fill: every mutator takes
+        // its shard *write* lock before consulting `indexes`, so while
+        // all read locks are held no row can be added or removed.
+        let guards: Vec<_> = self.core.shards.iter().map(|s| s.read().unwrap()).collect();
         let mut indexes = self.core.indexes.write().unwrap();
         for g in &guards {
             for row in g.rows.values() {
@@ -283,6 +327,30 @@ impl<V: Row> Table<V> {
     pub fn len_counter(&self) -> Arc<dyn Fn() -> usize + Send + Sync> {
         let len = self.core.len.clone();
         Arc::new(move || len.load(Ordering::Relaxed))
+    }
+
+    /// Point-in-time shard-lock contention counters.
+    pub fn contention_stats(&self) -> ContentionStats {
+        let c = &self.core.contention;
+        ContentionStats {
+            shard_count: self.core.shards.len() as u64,
+            single_write_locks: c.single_write_locks.load(Ordering::Relaxed),
+            bulk_commits: c.bulk_commits.load(Ordering::Relaxed),
+            bulk_shards_locked: c.bulk_shards_locked.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Detached contention probe, the lock-traffic analogue of
+    /// [`Table::len_counter`] for [`crate::db::Registry`].
+    pub fn contention_probe(&self) -> Arc<dyn Fn() -> ContentionStats + Send + Sync> {
+        let counters = self.core.contention.clone();
+        let shard_count = self.core.shards.len() as u64;
+        Arc::new(move || ContentionStats {
+            shard_count,
+            single_write_locks: counters.single_write_locks.load(Ordering::Relaxed),
+            bulk_commits: counters.bulk_commits.load(Ordering::Relaxed),
+            bulk_shards_locked: counters.bulk_shards_locked.load(Ordering::Relaxed),
+        })
     }
 
     /// Append the ops of one commit to the WAL, if attached. Called with
@@ -309,6 +377,7 @@ impl<V: Row> Table<V> {
     pub fn insert(&self, row: V, now: EpochMs) -> Result<()> {
         let key = row.key();
         let mut shard = self.core.shards[self.shard_of(&key)].write().unwrap();
+        self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
         if shard.rows.contains_key(&key) {
             return Err(RucioError::Duplicate(format!(
                 "table {}: duplicate key",
@@ -319,9 +388,7 @@ impl<V: Row> Table<V> {
         for idx in self.core.indexes.read().unwrap().iter() {
             idx.on_insert(&row);
         }
-        if let Some(h) = self.core.history.write().unwrap().as_mut() {
-            h.push((now, Op::Insert, row.clone()));
-        }
+        self.history_push(now, Op::Insert, &row);
         shard.rows.insert(key, row);
         self.core.len.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -331,6 +398,7 @@ impl<V: Row> Table<V> {
     pub fn upsert(&self, row: V, now: EpochMs) {
         let key = row.key();
         let mut shard = self.core.shards[self.shard_of(&key)].write().unwrap();
+        self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
         self.wal_log(&[WalOpRef::Put(&row)]);
         let indexes = self.core.indexes.read().unwrap();
         if let Some(old) = shard.rows.get(&key) {
@@ -343,9 +411,7 @@ impl<V: Row> Table<V> {
         for idx in indexes.iter() {
             idx.on_insert(&row);
         }
-        if let Some(h) = self.core.history.write().unwrap().as_mut() {
-            h.push((now, Op::Update, row.clone()));
-        }
+        self.history_push(now, Op::Update, &row);
         shard.rows.insert(key, row);
     }
 
@@ -382,6 +448,7 @@ impl<V: Row> Table<V> {
     /// Returns the updated row, or `None` if absent.
     pub fn update<F: FnOnce(&mut V)>(&self, key: &V::Key, now: EpochMs, f: F) -> Option<V> {
         let mut shard = self.core.shards[self.shard_of(key)].write().unwrap();
+        self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
         let row = shard.rows.get(key)?.clone();
         let indexes = self.core.indexes.read().unwrap();
         for idx in indexes.iter() {
@@ -394,15 +461,14 @@ impl<V: Row> Table<V> {
         for idx in indexes.iter() {
             idx.on_insert(&new_row);
         }
-        if let Some(h) = self.core.history.write().unwrap().as_mut() {
-            h.push((now, Op::Update, new_row.clone()));
-        }
+        self.history_push(now, Op::Update, &new_row);
         shard.rows.insert(key.clone(), new_row.clone());
         Some(new_row)
     }
 
     pub fn remove(&self, key: &V::Key, now: EpochMs) -> Option<V> {
         let mut shard = self.core.shards[self.shard_of(key)].write().unwrap();
+        self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
         if !shard.rows.contains_key(key) {
             return None;
         }
@@ -412,28 +478,59 @@ impl<V: Row> Table<V> {
         for idx in self.core.indexes.read().unwrap().iter() {
             idx.on_remove(&row);
         }
-        if let Some(h) = self.core.history.write().unwrap().as_mut() {
-            h.push((now, Op::Delete, row.clone()));
-        }
+        self.history_push(now, Op::Delete, &row);
         Some(row)
     }
 
     // ------------------------------------------------------------------
-    // batch mutation (one commit, all shards locked once)
+    // batch mutation (one commit, touched shards locked once)
     // ------------------------------------------------------------------
 
-    /// Apply a batch atomically: all shard write locks are held for the
-    /// whole commit, so concurrent readers see either none or all of the
-    /// batch. `Insert` duplicates (against the table or an earlier op in
-    /// the same batch) fail the entire batch before any mutation. The
-    /// closure-free op set keeps batches send-able across layers. With a
-    /// WAL attached, the whole batch is one group-committed log frame —
-    /// recovery can never observe half of it.
+    /// Write-lock exactly the shards in `touched`, in ascending shard
+    /// index — the same order `checkpoint`'s all-shard cut and the
+    /// merged scans use, so bulk commits can never deadlock against
+    /// them. Returns the guards plus a shard-index → guard-position
+    /// map for `guards[slot[shard_of(key)]]` addressing.
+    #[allow(clippy::type_complexity)]
+    fn lock_touched(
+        &self,
+        touched: &BTreeSet<usize>,
+    ) -> (Vec<std::sync::RwLockWriteGuard<'_, Shard<V>>>, Vec<usize>) {
+        let mut slot = vec![usize::MAX; self.core.shards.len()];
+        let mut guards = Vec::with_capacity(touched.len());
+        for (pos, si) in touched.iter().enumerate() {
+            slot[*si] = pos;
+            guards.push(self.core.shards[*si].write().unwrap());
+        }
+        self.core.contention.bulk_commits.fetch_add(1, Ordering::Relaxed);
+        self.core
+            .contention
+            .bulk_shards_locked
+            .fetch_add(touched.len() as u64, Ordering::Relaxed);
+        (guards, slot)
+    }
+
+    /// Apply a batch atomically: the write locks of every *touched*
+    /// shard are held together for the whole commit, so concurrent
+    /// readers (which take shard locks in the same ascending order) see
+    /// either none or all of the batch — untouched shards stay free for
+    /// other writers. `Insert` duplicates (against the table or an
+    /// earlier op in the same batch) fail the entire batch before any
+    /// mutation. The closure-free op set keeps batches send-able across
+    /// layers. With a WAL attached, the whole batch is one
+    /// group-committed log frame — recovery can never observe half of it.
     ///
     /// Do not touch the same table from index hooks or in between — the
-    /// commit holds every shard lock.
+    /// commit holds every touched shard lock.
     pub fn apply(&self, batch: Batch<V>, now: EpochMs) -> Result<BatchSummary<V>> {
-        let mut guards: Vec<_> = self.core.shards.iter().map(|s| s.write().unwrap()).collect();
+        let mut touched: BTreeSet<usize> = BTreeSet::new();
+        for op in &batch.ops {
+            touched.insert(match op {
+                BatchOp::Insert(row) | BatchOp::Upsert(row) => self.shard_of(&row.key()),
+                BatchOp::Remove(k) => self.shard_of(k),
+            });
+        }
+        let (mut guards, slot) = self.lock_touched(&touched);
         // Dry-run: validate Insert ops against an overlay of the batch.
         let mut overlay: BTreeMap<V::Key, bool> = BTreeMap::new();
         for op in &batch.ops {
@@ -442,7 +539,7 @@ impl<V: Row> Table<V> {
                     let k = row.key();
                     let exists = match overlay.get(&k) {
                         Some(e) => *e,
-                        None => guards[self.shard_of(&k)].rows.contains_key(&k),
+                        None => guards[slot[self.shard_of(&k)]].rows.contains_key(&k),
                     };
                     if exists {
                         return Err(RucioError::Duplicate(format!(
@@ -473,17 +570,21 @@ impl<V: Row> Table<V> {
             self.wal_log(&refs);
         }
         let indexes = self.core.indexes.read().unwrap();
-        let mut history = self.core.history.write().unwrap();
+        let mut history = if self.core.history_on.load(Ordering::Acquire) {
+            Some(self.core.history.write().unwrap())
+        } else {
+            None
+        };
         let mut summary = BatchSummary { inserted: 0, updated: 0, removed: Vec::new() };
         for op in batch.ops {
             match op {
                 BatchOp::Insert(row) => {
                     let k = row.key();
-                    let si = self.shard_of(&k);
+                    let si = slot[self.shard_of(&k)];
                     for idx in indexes.iter() {
                         idx.on_insert(&row);
                     }
-                    if let Some(h) = history.as_mut() {
+                    if let Some(h) = history.as_mut().and_then(|g| g.as_mut()) {
                         h.push((now, Op::Insert, row.clone()));
                     }
                     guards[si].rows.insert(k, row);
@@ -492,7 +593,7 @@ impl<V: Row> Table<V> {
                 }
                 BatchOp::Upsert(row) => {
                     let k = row.key();
-                    let si = self.shard_of(&k);
+                    let si = slot[self.shard_of(&k)];
                     if let Some(old) = guards[si].rows.get(&k) {
                         for idx in indexes.iter() {
                             idx.on_remove(old);
@@ -505,19 +606,19 @@ impl<V: Row> Table<V> {
                     for idx in indexes.iter() {
                         idx.on_insert(&row);
                     }
-                    if let Some(h) = history.as_mut() {
+                    if let Some(h) = history.as_mut().and_then(|g| g.as_mut()) {
                         h.push((now, Op::Update, row.clone()));
                     }
                     guards[si].rows.insert(k, row);
                 }
                 BatchOp::Remove(k) => {
-                    let si = self.shard_of(&k);
+                    let si = slot[self.shard_of(&k)];
                     if let Some(old) = guards[si].rows.remove(&k) {
                         self.core.len.fetch_sub(1, Ordering::Relaxed);
                         for idx in indexes.iter() {
                             idx.on_remove(&old);
                         }
-                        if let Some(h) = history.as_mut() {
+                        if let Some(h) = history.as_mut().and_then(|g| g.as_mut()) {
                             h.push((now, Op::Delete, old.clone()));
                         }
                         summary.removed.push(old);
@@ -579,12 +680,17 @@ impl<V: Row> Table<V> {
         if keys.is_empty() {
             return Vec::new();
         }
-        let mut guards: Vec<_> = self.core.shards.iter().map(|s| s.write().unwrap()).collect();
+        let touched: BTreeSet<usize> = keys.iter().map(|k| self.shard_of(k)).collect();
+        let (mut guards, slot) = self.lock_touched(&touched);
         let indexes = self.core.indexes.read().unwrap();
-        let mut history = self.core.history.write().unwrap();
+        let mut history = if self.core.history_on.load(Ordering::Acquire) {
+            Some(self.core.history.write().unwrap())
+        } else {
+            None
+        };
         let mut out = Vec::with_capacity(keys.len());
         for key in keys {
-            let si = self.shard_of(key);
+            let si = slot[self.shard_of(key)];
             let Some(row) = guards[si].rows.get(key) else { continue };
             let row = row.clone();
             for idx in indexes.iter() {
@@ -596,7 +702,7 @@ impl<V: Row> Table<V> {
             for idx in indexes.iter() {
                 idx.on_insert(&new_row);
             }
-            if let Some(h) = history.as_mut() {
+            if let Some(h) = history.as_mut().and_then(|g| g.as_mut()) {
                 h.push((now, Op::Update, new_row.clone()));
             }
             guards[si].rows.insert(key.clone(), new_row.clone());
@@ -1772,6 +1878,86 @@ mod tests {
         assert_eq!(keys, sorted);
     }
 
+    #[test]
+    fn contention_counters_track_lock_traffic() {
+        let t: Table<Item> = Table::new("items").with_shards(8);
+        let probe = t.contention_probe();
+        assert_eq!(probe().single_write_locks, 0);
+        for i in 0..10 {
+            t.insert(item(i, "new", "A"), 0).unwrap();
+        }
+        t.update(&3, 1, |r| r.state = "done");
+        t.remove(&4, 2);
+        let c = t.contention_stats();
+        assert_eq!(c.shard_count, 8);
+        assert_eq!(c.single_write_locks, 12);
+        assert_eq!(c.bulk_commits, 0);
+        // a bulk commit locks at most one shard per distinct key shard
+        t.update_bulk(&[0, 1, 2], 3, |r| r.state = "done");
+        let c = probe();
+        assert_eq!(c.bulk_commits, 1);
+        assert!(c.bulk_shards_locked >= 1 && c.bulk_shards_locked <= 3);
+        // a single-key batch locks exactly one shard
+        let mut batch = Batch::new();
+        batch.upsert(item(50, "new", "B"));
+        t.apply(batch, 4).unwrap();
+        let c2 = t.contention_stats();
+        assert_eq!(c2.bulk_commits, 2);
+        assert_eq!(c2.bulk_shards_locked, c.bulk_shards_locked + 1);
+    }
+
+    #[test]
+    fn bulk_commits_on_disjoint_shards_run_concurrently_and_stay_atomic() {
+        use std::sync::Arc;
+        // Many writers issuing small batches (each locking only its
+        // touched shards) while a reader does full merged scans: every
+        // scan must observe each batch's rows all-or-nothing
+        // (batch = 3 rows with consecutive marker ids).
+        let t: Arc<Table<Item>> = Arc::new(Table::new("items").with_shards(8));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = vec![];
+        for w in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for b in 0..50u64 {
+                    let base = w * 1_000 + b * 3;
+                    let mut batch = Batch::new();
+                    for i in 0..3 {
+                        batch.insert(item(base + i, "new", "A"));
+                    }
+                    t.apply(batch, 0).unwrap();
+                }
+            }));
+        }
+        let reader = {
+            let t = t.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let ids: std::collections::BTreeSet<u64> =
+                        t.scan(|_| true).into_iter().map(|r| r.id).collect();
+                    for w in 0..4u64 {
+                        for b in 0..50u64 {
+                            let base = w * 1_000 + b * 3;
+                            let present =
+                                (0..3).filter(|i| ids.contains(&(base + i))).count();
+                            assert!(
+                                present == 0 || present == 3,
+                                "torn batch visible: {present}/3 rows of batch {base}"
+                            );
+                        }
+                    }
+                }
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        reader.join().unwrap();
+        assert_eq!(t.len(), 4 * 50 * 3);
+    }
+
     // ------------------------------------------------------------------
     // durability: WAL + checkpoint + recovery
     // ------------------------------------------------------------------
@@ -1882,7 +2068,8 @@ mod tests {
     fn recover_without_snapshot_replays_full_wal() {
         let dir = tmpdir("nosnap");
         let t: Table<DRow> = Table::new("d");
-        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: false }).unwrap();
+        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: false, leader: true })
+            .unwrap();
         t.insert(drow(1, "a"), 0).unwrap();
         t.upsert(drow(2, "b"), 0);
         t.update(&1, 1, |r| r.val = "c".into());
@@ -1933,8 +2120,9 @@ mod tests {
         forall(25, |g| {
             let dir = tmpdir("prop");
             let group = g.bool();
+            let leader = g.bool();
             let t: Table<DRow> = Table::new("d").with_shards(g.usize(1, 5));
-            t.attach_wal(&dir, WalOptions { fsync: false, group_commit: group })
+            t.attach_wal(&dir, WalOptions { fsync: false, group_commit: group, leader })
                 .unwrap();
             let mut model: BTreeMap<u64, String> = BTreeMap::new();
             // state after every commit (batch-granular under group

@@ -2,9 +2,6 @@
 //! simulation scenarios, or act as a CLI client (paper §3.2's bin/rucio
 //! and bin/rucio-admin collapsed into subcommands).
 
-use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
-
 use rucio::common::clock::{Clock, MINUTE_MS};
 use rucio::common::config::Config;
 use rucio::common::units::fmt_bytes;
@@ -76,10 +73,8 @@ fn serve(flags: &std::collections::BTreeMap<String, String>) {
     let server = rucio::server::serve(ctx.catalog.clone(), ctx.broker.clone(), bind, workers)
         .expect("bind failed");
     println!("rucio server listening on {}", server.url());
-    let stop = Arc::new(AtomicBool::new(false));
-    let daemons = Driver::standard_daemons(&ctx);
-    let handles = rucio::daemons::run_threaded(daemons, stop.clone());
-    println!("{} daemons running; Ctrl-C to stop", handles.len());
+    let fleet = rucio::daemons::FleetHandle::spawn(Driver::standard_daemons(&ctx));
+    println!("{} daemons running; Ctrl-C to stop", fleet.len());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

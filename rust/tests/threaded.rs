@@ -1,0 +1,218 @@
+//! The concurrent-runtime soak (ISSUE PR 6): the full standard daemon
+//! fleet on real OS threads + the thread-pooled REST server + concurrent
+//! clients, all against one shared durable catalog for a few wall-clock
+//! seconds — then the complete `sim::invariants` suite must come back
+//! clean on the quiesced catalog. Plus the heartbeat failover satellite:
+//! two live instances partition work; killing one hands its shard to the
+//! survivor within the TTL.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rucio::client::RucioClient;
+use rucio::common::clock::Clock;
+use rucio::common::config::Config;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{AuthType, DidKey, ReplicaState};
+use rucio::daemons::heartbeat::Heartbeats;
+use rucio::daemons::{FleetHandle, Paced};
+use rucio::db::assigned_to;
+use rucio::sim::driver::Driver;
+use rucio::sim::grid::{build_grid, GridSpec};
+use rucio::sim::invariants;
+use rucio::storagesim::synthetic_adler32_for;
+
+/// Spin until `cond` holds or `timeout` passes; true iff it held.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+#[test]
+fn threaded_soak_full_fleet_and_rest_load_end_with_clean_invariants() {
+    let dir = std::env::temp_dir().join(format!("rucio-threaded-soak-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = Config::new();
+    cfg.set("db", "wal_dir", dir.to_string_lossy().to_string());
+    cfg.set("db", "shards", "16");
+    // Real clock everywhere: daemons, HTTP, and catalog share wall time.
+    let spec = GridSpec {
+        t2_per_region: 1,
+        fts_servers: 1,
+        storage_flakiness: 0.0,
+        ..GridSpec::default()
+    };
+    let ctx = build_grid(&spec, Clock::Real, cfg);
+    ctx.catalog
+        .add_identity("alice", AuthType::UserPass, "alice", Some("pw"))
+        .unwrap();
+
+    // Seed files with real bytes on T0 storage, each pinned by a
+    // replication rule, so the fleet has genuine transfers to move
+    // while the REST load runs.
+    let now = ctx.catalog.now();
+    let t0 = ctx.fleet.get("CERN-PROD").unwrap();
+    for i in 0..8 {
+        let name = format!("seed-{i}");
+        let bytes = 1_000 + i as u64;
+        let adler = synthetic_adler32_for(&name, bytes);
+        ctx.catalog.add_file("data18", &name, "prod", bytes, &adler, None).unwrap();
+        let key = DidKey::new("data18", &name);
+        let rep = ctx
+            .catalog
+            .add_replica("CERN-PROD", &key, ReplicaState::Available, None)
+            .unwrap();
+        t0.put(&rep.pfn, bytes, now).unwrap();
+        ctx.catalog
+            .add_rule(RuleSpec::new("prod", key, "tier=1&type=disk", 1))
+            .unwrap();
+    }
+
+    let mut fleet = FleetHandle::spawn(Paced::fleet(Driver::standard_daemons(&ctx), 50));
+    assert_eq!(fleet.len(), 15, "the whole standard fleet is live");
+    let server = rucio::server::serve(
+        ctx.catalog.clone(),
+        ctx.broker.clone(),
+        "127.0.0.1:0",
+        4,
+    )
+    .unwrap();
+    let url = server.url();
+
+    // Concurrent REST clients (one per server worker): a mixed mix of
+    // writes (files, replicas, rules — each a durable WAL commit) and
+    // reads, racing the daemons on the shared catalog.
+    let n_clients = 4;
+    let per_client = 120;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let url = url.clone();
+            s.spawn(move || {
+                let client = RucioClient::connect(&url, "alice", "alice", "pw").unwrap();
+                for i in 0..per_client {
+                    let name = format!("soak-c{c}-i{i}");
+                    let prev = format!("soak-c{c}-i{}", i - (i % 5));
+                    match i % 5 {
+                        0 => client.add_file("data18", &name, 500, "aabbccdd").unwrap(),
+                        1 => {
+                            client
+                                .register_replica("CERN-PROD", "data18", &prev, None)
+                                .map(|_| ())
+                                .unwrap();
+                        }
+                        2 => {
+                            // unique per (c, i): no duplicate-rule races
+                            client
+                                .add_rule("data18", &prev, "tier=1&type=disk", 1, None)
+                                .map(|_| ())
+                                .unwrap();
+                        }
+                        3 => {
+                            client.get_did("data18", &prev).map(|_| ()).unwrap();
+                        }
+                        _ => {
+                            client.ping().map(|_| ()).unwrap();
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // Let the fleet chew on the queued transfers for a bit of wall clock.
+    std::thread::sleep(Duration::from_millis(1500));
+    drop(server);
+    fleet.shutdown();
+
+    // Quiesced: the full invariant suite must be clean.
+    let violations = invariants::check(&ctx.catalog);
+    assert!(violations.is_empty(), "invariants violated after soak: {violations:?}");
+    let caps = invariants::check_fts_link_caps(&ctx);
+    assert!(caps.is_empty(), "FTS link caps violated after soak: {caps:?}");
+
+    // The run did real work: every client op landed and the contention
+    // probes saw the traffic.
+    let total_files = n_clients * (per_client / 5);
+    assert!(
+        ctx.catalog.dids.len() >= 8 + total_files,
+        "all soak files registered"
+    );
+    assert!(ctx.catalog.rules.len() >= 8, "seed rules live");
+    let contention = ctx.catalog.registry.contention();
+    let locks: u64 = contention.values().map(|c| c.single_write_locks).sum();
+    assert!(locks > 0, "contention probes observed the load: {contention:?}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn heartbeat_failover_hands_the_dead_shard_to_the_survivor_within_ttl() {
+    const TTL_MS: i64 = 400;
+    let hb = Arc::new(Heartbeats::with_ttl(TTL_MS));
+    let stop_a = Arc::new(AtomicBool::new(false));
+    let stop_b = Arc::new(AtomicBool::new(false));
+    let a_assign = Arc::new(Mutex::new((usize::MAX, 0usize)));
+    let b_assign = Arc::new(Mutex::new((usize::MAX, 0usize)));
+
+    let spawn_beater = |instance: &'static str,
+                        stop: Arc<AtomicBool>,
+                        assign: Arc<Mutex<(usize, usize)>>| {
+        let hb = hb.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let now = Clock::Real.now_ms();
+                *assign.lock().unwrap() = hb.beat("reaper", instance, now);
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+    let ha = spawn_beater("reaper-a", stop_a.clone(), a_assign.clone());
+    let hb_thread = spawn_beater("reaper-b", stop_b.clone(), b_assign.clone());
+
+    // Phase 1: both instances live — they agree on a 2-way split.
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            a_assign.lock().unwrap().1 == 2 && b_assign.lock().unwrap().1 == 2
+        }),
+        "both instances never saw each other"
+    );
+    let (ia, _) = *a_assign.lock().unwrap();
+    let (ib, _) = *b_assign.lock().unwrap();
+    assert_ne!(ia, ib, "live instances must take distinct indexes");
+    for key in 0..500u64 {
+        let owners =
+            [ia, ib].iter().filter(|&&w| assigned_to(key, w, 2)).count();
+        assert_eq!(owners, 1, "key {key} must have exactly one owner");
+    }
+
+    // Phase 2: kill A; within the TTL the survivor owns everything.
+    stop_a.store(true, Ordering::Relaxed);
+    ha.join().unwrap();
+    let t_kill = Instant::now();
+    assert!(
+        wait_until(Duration::from_secs(5), || *b_assign.lock().unwrap() == (0, 1)),
+        "survivor never took over the dead instance's shard"
+    );
+    // TTL is 400 ms, beats every 50 ms: takeover must be prompt.
+    assert!(
+        t_kill.elapsed() < Duration::from_secs(3),
+        "takeover exceeded the TTL horizon: {:?}",
+        t_kill.elapsed()
+    );
+    let (ib, n) = *b_assign.lock().unwrap();
+    assert_eq!((ib, n), (0, 1));
+    for key in 0..500u64 {
+        assert!(assigned_to(key, ib, n), "survivor owns every key");
+    }
+    assert_eq!(hb.live("reaper", Clock::Real.now_ms()), 1);
+
+    stop_b.store(true, Ordering::Relaxed);
+    hb_thread.join().unwrap();
+}
