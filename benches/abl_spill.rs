@@ -1,0 +1,286 @@
+//! Ablation: spill-to-disk tables (paged mode) — a DID-shaped namespace
+//! under a fixed hot-row budget vs the unbounded in-memory baseline.
+//!
+//! Full mode builds a 1M-row namespace over 64 shards and pins the
+//! paged table to a 200k hot-row budget (smoke: 20k rows / 16 shards /
+//! 5k budget); eviction is driven the way the checkpointer drives it —
+//! an `enforce_budget` sweep after load and after each maintenance
+//! round, not per write. Measured phases:
+//!
+//! 1. **Load** — bulk inserts, baseline vs paged (identical until the
+//!    eviction sweep runs).
+//! 2. **Point queries** — LCG-scattered gets; the paged table serves
+//!    cold shards straight from their spill files.
+//! 3. **Range queries** — cursor pagination over the global key order,
+//!    which overlays cold shards on the fly.
+//! 4. **Sustained overwrite churn** — repeated single-row upserts over
+//!    a small key set with incremental checkpoints, WAL compaction, and
+//!    budget sweeps interleaved; hot rows must stay under budget and
+//!    the folded WAL must stay small after every maintenance round.
+//! 5. **Crash recovery** — cold boot from manifest + shard files + WAL
+//!    suffix into a fresh table.
+//!
+//! The hot-row budget assertion (`spill_stats().hot_rows <= budget`
+//! after each sweep) runs in BOTH modes — it is the CI smoke guard that
+//! paged mode actually bounds memory. Results are written to
+//! `BENCH_abl_spill.json` for artifact upload.
+
+use rucio::benchkit::{bench, bench_indexed, bench_throughput, section, smoke_mode};
+use rucio::db::{Durable, Row, Table, WalOptions};
+use rucio::jsonx::Json;
+use rucio::{Result, RucioError};
+
+/// A DID-shaped row: scope:name identity, size, checksum, state.
+#[derive(Clone, Debug)]
+struct BenchDid {
+    id: u64,
+    name: String,
+    bytes: u64,
+    adler32: String,
+    state: &'static str,
+}
+
+impl Row for BenchDid {
+    type Key = u64;
+    fn key(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Durable for BenchDid {
+    fn row_to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id)
+            .with("name", self.name.as_str())
+            .with("bytes", self.bytes)
+            .with("adler32", self.adler32.as_str())
+            .with("state", self.state)
+    }
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(BenchDid {
+            id: j.req_u64("id")?,
+            name: j.req_str("name")?.to_string(),
+            bytes: j.req_u64("bytes")?,
+            adler32: j.req_str("adler32")?.to_string(),
+            state: if j.req_str("state")? == "AVAILABLE" { "AVAILABLE" } else { "COPYING" },
+        })
+    }
+    fn key_to_json(key: &u64) -> Json {
+        Json::from(*key)
+    }
+    fn key_from_json(j: &Json) -> Result<u64> {
+        j.as_u64().ok_or_else(|| RucioError::JsonError("bad key".into()))
+    }
+}
+
+fn did(id: u64) -> BenchDid {
+    BenchDid {
+        id,
+        name: format!("data18_13TeV.{id:010}.AOD.pool.root"),
+        bytes: 1_000_000 + (id % 7) * 333_333,
+        adler32: format!("{:08x}", id ^ 0x5A5A_5A5A),
+        state: "AVAILABLE",
+    }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("rucio-abl-spill-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Deterministic LCG over `[0, n)` for scattered query keys.
+fn lcg_ids(n: u64, count: usize) -> Vec<u64> {
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    (0..count)
+        .map(|_| {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            x % n
+        })
+        .collect()
+}
+
+fn load(t: &Table<BenchDid>, n: u64, batch: usize) {
+    let mut rows = Vec::with_capacity(batch);
+    for id in 0..n {
+        rows.push(did(id));
+        if rows.len() == batch {
+            t.insert_bulk(std::mem::take(&mut rows), 0).unwrap();
+            rows.reserve(batch);
+        }
+    }
+    if !rows.is_empty() {
+        t.insert_bulk(rows, 0).unwrap();
+    }
+}
+
+/// The smoke guard: after a budget sweep the hot set fits the budget.
+fn assert_under_budget(t: &Table<BenchDid>, what: &str) {
+    let s = t.spill_stats();
+    assert!(
+        s.hot_rows <= s.budget,
+        "{what}: paged table over budget ({} hot > {} budget)",
+        s.hot_rows,
+        s.budget
+    );
+}
+
+fn main() {
+    let (n, shards, budget, batch) = if smoke_mode() {
+        (20_000u64, 16usize, 5_000usize, 2_000usize)
+    } else {
+        (1_000_000u64, 64usize, 200_000usize, 10_000usize)
+    };
+    let opts = WalOptions { fsync: false, group_commit: true, leader: true };
+    let mut results = Json::obj()
+        .with("bench", "abl_spill")
+        .with("rows", n)
+        .with("shards", shards)
+        .with("budget", budget);
+
+    section(&format!("Ablation: spill-to-disk at {n} DIDs, {shards} shards, budget {budget}"));
+
+    // -- load ---------------------------------------------------------
+    let dir_base = temp_dir("baseline");
+    let baseline: Table<BenchDid> = Table::new("dids").with_shards(shards);
+    baseline.attach_wal(&dir_base, opts).unwrap();
+    let r = bench_throughput("load: in-memory baseline", n as usize, || {
+        load(&baseline, n, batch);
+    });
+    results.set("load_baseline_ops_per_sec", r.ops_per_sec());
+    assert_eq!(baseline.len(), n as usize);
+
+    let dir_spill = temp_dir("spill");
+    let spill: Table<BenchDid> = Table::new("dids").with_shards(shards);
+    spill.attach_wal(&dir_spill, opts).unwrap();
+    let r = bench_throughput("load: paged table", n as usize, || {
+        load(&spill, n, batch);
+    });
+    results.set("load_spill_ops_per_sec", r.ops_per_sec());
+    spill.set_memory_budget(budget);
+    let r = bench_throughput("eviction sweep to budget", n as usize, || {
+        spill.enforce_budget().unwrap();
+    });
+    results.set("eviction_sweep_rows_per_sec", r.ops_per_sec());
+    assert_under_budget(&spill, "after load sweep");
+    let s = spill.spill_stats();
+    assert!(s.cold_shards > 0, "the sweep must actually spill shards: {s:?}");
+    println!(
+        "paged shape: {}/{} shards cold, {} hot + {} cold rows, {} evictions",
+        s.cold_shards, s.shard_count, s.hot_rows, s.cold_rows, s.evictions
+    );
+
+    // first checkpoints: the paged one skips cold shards
+    let ck_b = baseline.checkpoint().unwrap();
+    let ck_s = spill.checkpoint().unwrap();
+    println!(
+        "checkpoint: baseline wrote {}/{} shards | paged wrote {}/{} (cold skipped)",
+        ck_b.shards_written,
+        ck_b.shards_written + ck_b.shards_skipped,
+        ck_s.shards_written,
+        ck_s.shards_written + ck_s.shards_skipped
+    );
+    assert!(ck_s.shards_skipped >= s.cold_shards, "cold shards skipped by the checkpoint");
+
+    // -- point queries ------------------------------------------------
+    section("Point gets (LCG-scattered keys)");
+    let (warm, iters) = (20usize, 200usize);
+    let ids = lcg_ids(n, warm + iters);
+    let r = bench_indexed("get: baseline (all hot)", warm, iters, |i| {
+        assert!(baseline.get(&ids[i]).is_some());
+    });
+    results.set("point_get_baseline_ns", r.p50_ns);
+    let reads_before = spill.spill_stats().disk_reads;
+    let r = bench_indexed("get: paged (mostly cold)", warm, iters, |i| {
+        let row = spill.get(&ids[i]).unwrap();
+        assert_eq!(row.adler32, format!("{:08x}", ids[i] ^ 0x5A5A_5A5A));
+    });
+    results.set("point_get_spill_ns", r.p50_ns);
+    let disk_reads = spill.spill_stats().disk_reads - reads_before;
+    results.set("point_get_disk_reads", disk_reads);
+    println!("{disk_reads} of {} paged gets came from spill files", warm + iters);
+    assert_under_budget(&spill, "after point gets");
+
+    // -- range queries ------------------------------------------------
+    section("Range pagination (3 pages x 2000 rows)");
+    let walk = |t: &Table<BenchDid>| {
+        let mut cursor: Option<u64> = None;
+        let mut seen = 0usize;
+        for _ in 0..3 {
+            let page = t.scan_page(cursor.as_ref(), 2_000);
+            seen += page.rows.len();
+            match page.next_cursor {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+        }
+        assert_eq!(seen, 6_000.min(t.len()));
+    };
+    let r = bench("range walk: baseline", 1, 3, || walk(&baseline));
+    results.set("range_walk_baseline_ns", r.p50_ns);
+    let r = bench("range walk: paged", 1, 3, || walk(&spill));
+    results.set("range_walk_spill_ns", r.p50_ns);
+    assert_under_budget(&spill, "after range walks");
+
+    // -- sustained overwrite churn + maintenance ---------------------
+    section("Sustained overwrites with incremental checkpoints + compaction");
+    let (rounds, churn, keyspace) =
+        if smoke_mode() { (2usize, 2_000u64, 500u64) } else { (4usize, 25_000u64, 5_000u64) };
+    let mut max_wal_bytes = 0u64;
+    let t0 = std::time::Instant::now();
+    for round in 0..rounds {
+        for i in 0..churn {
+            // row-at-a-time: each upsert is one WAL record, so the
+            // compaction rounds have real folding to do
+            spill.upsert(did((i * 31 + round as u64) % keyspace), round as i64);
+        }
+        if round % 2 == 0 {
+            let cs = spill.compact_wal().unwrap();
+            assert!(
+                cs.records_after < cs.records_before,
+                "churn over {keyspace} keys must fold: {cs:?}"
+            );
+        } else {
+            spill.checkpoint().unwrap();
+        }
+        spill.enforce_budget().unwrap();
+        assert_under_budget(&spill, "after maintenance round");
+        max_wal_bytes = max_wal_bytes.max(spill.wal_stats().unwrap().bytes);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let rate = (rounds as u64 * churn) as f64 / elapsed.max(1e-9);
+    println!(
+        "{} overwrites in {rounds} rounds: {rate:.0} op/s, max WAL {} bytes after maintenance",
+        rounds as u64 * churn,
+        max_wal_bytes
+    );
+    results.set("overwrite_ops_per_sec", rate);
+    results.set("max_wal_bytes_after_maintenance", max_wal_bytes);
+
+    // -- crash recovery ----------------------------------------------
+    section("Crash recovery (manifest + shard files + WAL suffix)");
+    let recovered: Table<BenchDid> = Table::new("dids").with_shards(shards);
+    let r = bench_throughput("cold boot", n as usize, || {
+        recovered.recover_from_dir(&dir_spill).unwrap();
+    });
+    results.set("recovery_rows_per_sec", r.ops_per_sec());
+    assert_eq!(recovered.len(), n as usize, "every row survives the crash");
+    for id in lcg_ids(n, 50) {
+        assert_eq!(recovered.get(&id).map(|r| r.id), Some(id));
+    }
+    // post-boot budget enforcement bounds the recovered RSS too
+    recovered.set_memory_budget(budget);
+    recovered.enforce_budget().unwrap();
+    assert_under_budget(&recovered, "after recovery sweep");
+
+    let s = spill.spill_stats();
+    results.set("final_cold_shards", s.cold_shards);
+    results.set("final_evictions", s.evictions);
+    results.set("final_fault_ins", s.fault_ins);
+    results.set("final_disk_reads", s.disk_reads);
+
+    std::fs::remove_dir_all(&dir_base).ok();
+    std::fs::remove_dir_all(&dir_spill).ok();
+    std::fs::write("BENCH_abl_spill.json", results.to_string()).unwrap();
+    println!("\nabl_spill bench OK (BENCH_abl_spill.json written)");
+}

@@ -226,6 +226,34 @@ pub fn wal_stats(catalog: &Catalog) -> Vec<Vec<String>> {
     rows
 }
 
+/// Paged-mode report: per-table hot/cold shape off the registry's
+/// persistence handles. Empty on non-durable catalogs. Per-table rows:
+/// `[table, shards, cold_shards, hot_rows, cold_rows, budget,
+/// evictions, fault_ins, disk_reads]` — all-numeric cells. With
+/// `[db] memory_budget` unset every `budget` cell is `0` and the table
+/// is fully resident; with it set, `hot_rows <= budget` is the RSS
+/// proxy the checkpointer's eviction pass maintains.
+pub fn spill_stats(catalog: &Catalog) -> Vec<Vec<String>> {
+    catalog
+        .registry
+        .spill()
+        .into_iter()
+        .map(|(name, s)| {
+            vec![
+                name,
+                s.shard_count.to_string(),
+                s.cold_shards.to_string(),
+                s.hot_rows.to_string(),
+                s.cold_rows.to_string(),
+                s.budget.to_string(),
+                s.evictions.to_string(),
+                s.fault_ins.to_string(),
+                s.disk_reads.to_string(),
+            ]
+        })
+        .collect()
+}
+
 /// Shard-lock contention report (paper §3.6 scaling companion): per
 /// table, how write traffic hits the shard locks and — for durable
 /// tables — how well WAL group commit batches it. Rows:
@@ -373,6 +401,39 @@ mod tests {
         assert_eq!(rows.last().unwrap()[0], "_recovery");
         // non-durable catalog: empty report
         assert!(wal_stats(&Catalog::new_for_tests()).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_report_tracks_paged_mode_shape() {
+        use crate::common::clock::Clock;
+        use crate::common::config::Config;
+        let dir = std::env::temp_dir()
+            .join(format!("rucio-spillreport-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = Config::new();
+        cfg.set("db", "wal_dir", dir.to_string_lossy().to_string());
+        cfg.set("db", "memory_budget", "3");
+        let c = Catalog::new(Clock::sim_at(1_600_000_000_000), cfg);
+        c.add_scope("s", "root").unwrap();
+        for i in 0..40 {
+            c.add_file("s", &format!("f{i}"), "root", 1, "x", None).unwrap();
+        }
+        c.enforce_memory_budgets();
+        let rows = spill_stats(&c);
+        assert!(rows.len() >= 19, "one row per durable table: {}", rows.len());
+        for r in &rows {
+            assert_eq!(r.len(), 9);
+            for cell in &r[1..] {
+                cell.parse::<u64>().expect("numeric cell");
+            }
+        }
+        let dids = rows.iter().find(|r| r[0] == "dids").unwrap();
+        assert_eq!(dids[5], "3", "budget cell");
+        assert!(dids[3].parse::<u64>().unwrap() <= 3, "hot rows under budget");
+        assert!(dids[2].parse::<u64>().unwrap() > 0, "cold shards exist");
+        // non-durable catalog: empty report
+        assert!(spill_stats(&Catalog::new_for_tests()).is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -30,8 +30,8 @@ use crate::common::config::Config;
 use crate::common::error::{Result, RucioError};
 use crate::common::idgen::IdGen;
 use crate::common::prng::Prng;
-use crate::db::wal::{self, CheckpointStats, RecoverStats, WalOptions};
-use crate::db::{Index, MultiIndex, Registry, Table};
+use crate::db::wal::{self, CheckpointStats, CompactStats, RecoverStats, WalOptions};
+use crate::db::{CheckpointSweep, Index, MultiIndex, Registry, Table};
 use crate::jsonx::Json;
 
 use metaexpr::MetaValue;
@@ -361,11 +361,16 @@ impl Catalog {
     /// Attach a WAL to every table (continuing any existing log file)
     /// and register the type-erased persistence handles with the
     /// monitoring registry so `Registry::checkpoint_all` covers the
-    /// whole store.
+    /// whole store. With `[db] memory_budget` set (> 0, a per-table
+    /// hot-row count), every table runs in paged mode: the checkpointer
+    /// evicts least-recently-used shards to their snapshot files to keep
+    /// hot rows under the budget.
     fn attach_durability(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let opts = self.wal_options();
+        let budget = self.cfg.get_i64("db", "memory_budget", 0).max(0) as usize;
         with_all_tables!(self, t => t.attach_wal(dir, opts)?);
+        with_all_tables!(self, t => t.set_memory_budget(budget));
         with_all_tables!(self, t => self.registry.register_persist(Arc::new(t.clone())));
         Ok(())
     }
@@ -432,6 +437,9 @@ impl Catalog {
             .and_then(|frames| frames.first().and_then(|m| m.opt_u64("next_id")))
             .unwrap_or(1);
         catalog.ids.bump_to(manifest_next.max(catalog.max_used_id() + 1));
+        // Recovery loads every row hot; with a memory budget configured,
+        // spill back down before serving so boot RSS is bounded too.
+        catalog.enforce_memory_budgets();
         let ms = t0.elapsed().as_millis() as u64;
         catalog.metrics.gauge_set("db.recovery_ms", ms);
         catalog.metrics.gauge_set("db.recovered_rows", stats.snapshot_rows as u64);
@@ -458,23 +466,52 @@ impl Catalog {
         Catalog::open_with(Clock::real(), cfg)
     }
 
-    /// Checkpoint every table (barrier + snapshot + WAL truncation via
-    /// the registry's persistence handles) and write the `MANIFEST`
-    /// (id high-water mark — tokens embed allocated ids that no table
-    /// scan can see after expiry). The checkpointer daemon drives this
-    /// on `[db] checkpoint_interval`.
-    pub fn checkpoint_all(&self) -> Result<std::collections::BTreeMap<String, CheckpointStats>> {
+    /// Checkpoint every table (barrier + dirty-shard snapshot + WAL
+    /// truncation via the registry's persistence handles) and write the
+    /// `MANIFEST` (id high-water mark — tokens embed allocated ids that
+    /// no table scan can see after expiry). The sweep is best-effort per
+    /// table: a failing table is reported in the returned
+    /// [`CheckpointSweep`] while every other table still checkpoints.
+    /// The checkpointer daemon drives this on `[db] checkpoint_interval`.
+    pub fn checkpoint_sweep(&self) -> Result<CheckpointSweep> {
         let dir = self
             .wal_dir()
             .ok_or_else(|| RucioError::ConfigError("[db] wal_dir not configured".into()))?;
-        let stats = self.registry.checkpoint_all()?;
+        let sweep = self.registry.checkpoint_all();
         let manifest = Json::obj()
             .with("k", "manifest")
             .with("next_id", self.ids.peek())
             .with("at", self.now());
         wal::write_frames_atomic(&dir.join("MANIFEST"), &[manifest], self.wal_options().fsync)?;
         self.metrics.incr("db.checkpoints", 1);
-        Ok(stats)
+        Ok(sweep)
+    }
+
+    /// [`Catalog::checkpoint_sweep`], strict: any per-table failure is
+    /// promoted to an error (after the full sweep still ran). Returns
+    /// the stats of tables actually snapshotted; clean tables are
+    /// skipped and absent from the map.
+    pub fn checkpoint_all(&self) -> Result<std::collections::BTreeMap<String, CheckpointStats>> {
+        let sweep = self.checkpoint_sweep()?;
+        if let Some((name, e)) = sweep.errors.into_iter().next() {
+            return Err(RucioError::DatabaseError(format!(
+                "checkpoint of table {name} failed: {e}"
+            )));
+        }
+        Ok(sweep.tables)
+    }
+
+    /// Compact every table's WAL whose log has grown past `min_bytes`:
+    /// drop snapshot-covered records, fold the live suffix to the last
+    /// op per key. Driven by the checkpointer between checkpoints.
+    pub fn compact_wals(&self, min_bytes: u64) -> std::collections::BTreeMap<String, CompactStats> {
+        self.registry.compact_wals(min_bytes)
+    }
+
+    /// Evict LRU shards of over-budget tables to disk (paged mode; see
+    /// `[db] memory_budget`). Returns the number of shards evicted.
+    pub fn enforce_memory_budgets(&self) -> usize {
+        self.registry.enforce_budgets()
     }
 
     /// Highest id present in any id-keyed table (recovery fence for the
@@ -664,7 +701,13 @@ mod tests {
         c.add_scope("s", "root").unwrap();
         c.add_file("s", "f1", "root", 10, "x", None).unwrap();
         let ck = c.checkpoint_all().unwrap();
-        assert!(ck.len() >= 19, "every table checkpointed: {}", ck.len());
+        // Incremental sweeps only touch dirty tables; the mutated ones
+        // (plus everything bootstrap wrote) must be in the cut.
+        assert!(
+            ck.contains_key("dids") && ck.contains_key("accounts") && ck.contains_key("scopes"),
+            "dirty tables checkpointed: {:?}",
+            ck.keys().collect::<Vec<_>>()
+        );
         c.add_file("s", "f2", "root", 20, "y", None).unwrap(); // post-ckpt: WAL only
         let r = Catalog::open_with(Clock::sim_at(c.now()), cfg).unwrap();
         assert!(r.accounts.get(&"root".to_string()).is_some(), "bootstrap rows recovered");

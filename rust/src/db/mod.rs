@@ -73,9 +73,11 @@ pub use table::{
     DEFAULT_SHARDS,
 };
 pub use wal::{
-    CheckpointStats, Durable, RecoverStats, TablePersist, Wal, WalOptions, WalStats,
+    CheckpointStats, CompactStats, Durable, RecoverStats, SpillStats, TablePersist, Wal,
+    WalOptions, WalStats,
 };
 
+use crate::common::error::RucioError;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
@@ -127,6 +129,18 @@ pub fn assigned_to(key: u64, worker_idx: usize, n_workers: usize) -> bool {
     (mixed % n_workers as u64) as usize == worker_idx
 }
 
+/// Outcome of one [`Registry::checkpoint_all`] sweep. The sweep visits
+/// every registered table even when some fail: `tables` holds the stats
+/// of tables actually checkpointed, `skipped_clean` the tables whose
+/// on-disk snapshot was already current, and `errors` the per-table
+/// failures (the checkpointer counts these individually).
+#[derive(Default)]
+pub struct CheckpointSweep {
+    pub tables: BTreeMap<String, CheckpointStats>,
+    pub skipped_clean: Vec<String>,
+    pub errors: BTreeMap<String, RucioError>,
+}
+
 /// Table introspection registry: table name → live row-count closure,
 /// plus (for durable tables) a type-erased persistence handle.
 /// The monitoring probes (paper §4.6 "a probe regularly checks the
@@ -169,17 +183,90 @@ impl Registry {
     }
 
     /// Checkpoint every registered durable table: per table, a WAL
-    /// barrier record fences the log, a consistent snapshot is written
-    /// atomically, and the log is truncated back to the barrier. The
-    /// registry lock is released before any IO happens.
-    pub fn checkpoint_all(&self) -> crate::common::error::Result<BTreeMap<String, CheckpointStats>> {
+    /// barrier record fences the log, dirty shards get their snapshot
+    /// files rewritten, a manifest stitches the cut together, and the
+    /// log is truncated back to the barrier. The sweep never aborts
+    /// early: a failing table is recorded in [`CheckpointSweep::errors`]
+    /// and the sweep moves on, so one bad table can't leave every later
+    /// table's WAL growing unbounded. Tables whose WAL is already fenced
+    /// and whose shards are all clean are skipped entirely (recorded in
+    /// [`CheckpointSweep::skipped_clean`]) — their snapshot on disk is
+    /// current. The registry lock is released before any IO happens.
+    pub fn checkpoint_all(&self) -> CheckpointSweep {
+        let tables: Vec<Arc<dyn TablePersist>> =
+            self.persist.lock().unwrap().values().cloned().collect();
+        let mut sweep = CheckpointSweep::default();
+        for t in tables {
+            let name = t.table_name().to_string();
+            if !t.needs_checkpoint() {
+                sweep.skipped_clean.push(name);
+                continue;
+            }
+            match t.checkpoint() {
+                Ok(stats) => {
+                    sweep.tables.insert(name, stats);
+                }
+                Err(e) => {
+                    crate::log_warn!("checkpoint of table {name} failed: {e}");
+                    sweep.errors.insert(name, e);
+                }
+            }
+        }
+        sweep
+    }
+
+    /// Compact the WAL of every durable table whose log has grown past
+    /// `min_bytes` (see [`table::Table::compact_wal`]): drop
+    /// snapshot-covered records and fold the live suffix to the last op
+    /// per key. Failures are logged and skipped — compaction is an
+    /// optimization, never a correctness requirement.
+    pub fn compact_wals(&self, min_bytes: u64) -> BTreeMap<String, CompactStats> {
         let tables: Vec<Arc<dyn TablePersist>> =
             self.persist.lock().unwrap().values().cloned().collect();
         let mut out = BTreeMap::new();
         for t in tables {
-            out.insert(t.table_name().to_string(), t.checkpoint()?);
+            let Some(ws) = t.wal_stats() else { continue };
+            if ws.bytes < min_bytes {
+                continue;
+            }
+            match t.compact_wal() {
+                // Default stats mean the fold wouldn't have shrunk the
+                // log and nothing was rewritten — not a compaction.
+                Ok(stats) if stats.records_before > 0 => {
+                    out.insert(t.table_name().to_string(), stats);
+                }
+                Ok(_) => {}
+                Err(e) => crate::log_warn!("wal compaction of table {} failed: {e}", t.table_name()),
+            }
         }
-        Ok(out)
+        out
+    }
+
+    /// Enforce each durable table's hot-row budget by evicting cold
+    /// shards to disk (see [`table::Table::enforce_budget`]). Returns
+    /// the total number of shards evicted; failures are logged and the
+    /// sweep continues.
+    pub fn enforce_budgets(&self) -> usize {
+        let tables: Vec<Arc<dyn TablePersist>> =
+            self.persist.lock().unwrap().values().cloned().collect();
+        let mut evicted = 0usize;
+        for t in tables {
+            match t.enforce_budget() {
+                Ok(n) => evicted += n,
+                Err(e) => crate::log_warn!("eviction on table {} failed: {e}", t.table_name()),
+            }
+        }
+        evicted
+    }
+
+    /// Paged-mode shape of every registered durable table.
+    pub fn spill(&self) -> BTreeMap<String, SpillStats> {
+        let tables: Vec<Arc<dyn TablePersist>> =
+            self.persist.lock().unwrap().values().cloned().collect();
+        tables
+            .into_iter()
+            .map(|t| (t.table_name().to_string(), t.spill_stats()))
+            .collect()
     }
 
     /// Register a table's shard-lock contention probe

@@ -28,6 +28,21 @@
 //! handle and `Clone`), so the monitoring [`crate::db::Registry`] can
 //! hold type-erased persistence handles ([`TablePersist`]) to every
 //! catalog table and drive `checkpoint_all` without knowing row types.
+//!
+//! Paged mode (`[db] memory_budget`): a durable table can bound its
+//! resident rows. Each shard tracks a dirty bit (mutated since its
+//! snapshot file was written) and an LRU tick; [`Table::enforce_budget`]
+//! evicts least-recently-used shards — writing the shard's per-file
+//! snapshot first if dirty — until the hot-row count fits the budget.
+//! Cold shards serve point reads straight from their file through the
+//! captured [`Durable`] decoder; any mutation faults the whole shard
+//! back in under its write lock. Ordered scans overlay cold shards from
+//! disk without faulting them in. Checkpoints are incremental: only
+//! dirty shards are rewritten, and the `{name}.snap` manifest stitches
+//! the live snapshot together (see `db::wal`). Secondary indexes stay
+//! fully resident across eviction — postings are never dropped — so
+//! index-driven lookups keep working against cold shards; the budget
+//! bounds row memory, not index memory.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
@@ -35,13 +50,13 @@ use std::hash::{Hash, Hasher};
 use std::ops::Bound;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::common::clock::EpochMs;
 use crate::common::error::{Result, RucioError};
 use crate::db::wal::{
-    self, CheckpointStats, Durable, RecoverStats, ReplayOp, TablePersist, Wal, WalOptions,
-    WalStats,
+    self, CheckpointStats, CompactStats, Durable, RecoverStats, ReplayOp, SpillStats,
+    TablePersist, Wal, WalOptions, WalStats,
 };
 use crate::db::FnvHasher;
 use crate::jsonx::Json;
@@ -143,16 +158,32 @@ trait IndexMaint<V>: Send + Sync {
 
 struct Shard<V: Row> {
     rows: BTreeMap<V::Key, V>,
+    /// `Some(n)`: evicted — `rows` is empty and the shard's `n` rows
+    /// live in its spill file. Only changes under the shard write lock
+    /// (or the all-read-lock checkpoint cut, which never evicts). A cold
+    /// shard is always clean: eviction writes the file first, and any
+    /// mutation faults the shard back in before touching it.
+    cold: Option<usize>,
+    /// Mutated since this shard's snapshot file was last written. Set
+    /// under the shard write lock; atomically cleared by checkpoint /
+    /// eviction at the moment they capture the shard's content, so a
+    /// mutation landing after the capture re-dirties the shard.
+    dirty: AtomicBool,
+    /// Table-wide eviction-clock tick of the most recent access —
+    /// the "LRU-ish" ordering [`Table::enforce_budget`] evicts by.
+    last_access: AtomicU64,
 }
 
 /// The WAL attachment of a durable table: the log handle plus
-/// monomorphized encoders captured when the [`Durable`] bound was in
-/// scope, so the (bound-free) mutation paths can serialize ops.
+/// monomorphized codecs captured when the [`Durable`] bound was in
+/// scope, so the (bound-free) mutation and read paths can serialize
+/// ops and decode spill files.
 struct WalBinding<V: Row> {
     wal: Arc<Wal>,
     dir: PathBuf,
     enc_row: fn(&V) -> Json,
     enc_key: fn(&V::Key) -> Json,
+    dec_row: fn(&Json) -> Result<V>,
 }
 
 /// One to-be-logged mutation, borrowed from the commit in flight.
@@ -175,6 +206,28 @@ struct TableCore<V: Row> {
     indexes: RwLock<Vec<Arc<dyn IndexMaint<V>>>>,
     wal: RwLock<Option<WalBinding<V>>>,
     contention: Arc<ContentionCounters>,
+    /// Hot-row budget for paged mode (0 = paging off). Rows, not bytes:
+    /// the RSS proxy the checkpointer's eviction pass bounds.
+    budget: AtomicUsize,
+    /// Rows currently living only in cold (evicted) shards; `len -
+    /// cold_rows` is the hot-row count the budget is checked against.
+    cold_rows: AtomicUsize,
+    /// Monotonic access clock feeding each shard's `last_access`.
+    access_clock: AtomicU64,
+    /// Serializes snapshot/spill file IO — checkpoint, eviction, and
+    /// WAL compaction hold it across their whole file phase, so a
+    /// checkpoint's deferred write of an old cut can never clobber a
+    /// newer eviction-written shard file.
+    ckpt_io: Mutex<()>,
+    // Paged-mode telemetry (see `SpillStats`).
+    evictions: AtomicU64,
+    fault_ins: AtomicU64,
+    disk_reads: AtomicU64,
+    /// Test-only: called by `checkpoint` between dropping the shard
+    /// guards and starting the file IO, so tests can prove writers make
+    /// progress while the snapshot is being written.
+    #[cfg(test)]
+    ckpt_io_hook: RwLock<Option<Box<dyn Fn() + Send + Sync>>>,
 }
 
 /// Lock-acquisition counters for one table, shared with the monitoring
@@ -214,7 +267,14 @@ impl<V: Row> Clone for Table<V> {
 
 fn make_shards<V: Row>(n: usize) -> Vec<RwLock<Shard<V>>> {
     (0..n.max(1))
-        .map(|_| RwLock::new(Shard { rows: BTreeMap::new() }))
+        .map(|_| {
+            RwLock::new(Shard {
+                rows: BTreeMap::new(),
+                cold: None,
+                dirty: AtomicBool::new(false),
+                last_access: AtomicU64::new(0),
+            })
+        })
         .collect()
 }
 
@@ -230,6 +290,15 @@ impl<V: Row> Table<V> {
                 indexes: RwLock::new(Vec::new()),
                 wal: RwLock::new(None),
                 contention: Arc::new(ContentionCounters::default()),
+                budget: AtomicUsize::new(0),
+                cold_rows: AtomicUsize::new(0),
+                access_clock: AtomicU64::new(0),
+                ckpt_io: Mutex::new(()),
+                evictions: AtomicU64::new(0),
+                fault_ins: AtomicU64::new(0),
+                disk_reads: AtomicU64::new(0),
+                #[cfg(test)]
+                ckpt_io_hook: RwLock::new(None),
             }),
         }
     }
@@ -280,6 +349,108 @@ impl<V: Row> Table<V> {
         (h.finish() % self.core.shards.len() as u64) as usize
     }
 
+    // ------------------------------------------------------------------
+    // paged mode (spill-to-disk shards)
+    // ------------------------------------------------------------------
+
+    /// Set the hot-row budget that enables paged mode (0 disables it).
+    /// Eviction back under the budget is driven by
+    /// [`Table::enforce_budget`] — the checkpointer's job.
+    pub fn set_memory_budget(&self, rows: usize) {
+        self.core.budget.store(rows, Ordering::Relaxed);
+    }
+
+    pub fn memory_budget(&self) -> usize {
+        self.core.budget.load(Ordering::Relaxed)
+    }
+
+    /// Paged-mode shape: hot/cold split, budget, and spill counters.
+    pub fn spill_stats(&self) -> SpillStats {
+        let cold_shards = self
+            .core
+            .shards
+            .iter()
+            .filter(|s| s.read().unwrap().cold.is_some())
+            .count();
+        let cold_rows = self.core.cold_rows.load(Ordering::Relaxed);
+        SpillStats {
+            shard_count: self.core.shards.len(),
+            cold_shards,
+            hot_rows: self.len().saturating_sub(cold_rows),
+            cold_rows,
+            budget: self.core.budget.load(Ordering::Relaxed),
+            evictions: self.core.evictions.load(Ordering::Relaxed),
+            fault_ins: self.core.fault_ins.load(Ordering::Relaxed),
+            disk_reads: self.core.disk_reads.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bump the shard's LRU tick (any access, read or write).
+    fn touch(&self, shard: &Shard<V>) {
+        let t = self.core.access_clock.fetch_add(1, Ordering::Relaxed) + 1;
+        shard.last_access.store(t, Ordering::Relaxed);
+    }
+
+    /// Decode shard `i`'s spill/snapshot file through the captured
+    /// [`Durable`] codec. Missing file (or no WAL binding) reads as
+    /// empty; IO/decode errors are logged and read as empty too — shard
+    /// files are written atomically under the IO mutex, so a bad file
+    /// is corruption, not a race.
+    fn read_cold_shard(&self, i: usize) -> BTreeMap<V::Key, V> {
+        let guard = self.core.wal.read().unwrap();
+        let Some(b) = guard.as_ref() else {
+            return BTreeMap::new();
+        };
+        let path = wal::shard_snapshot_file(&b.dir, self.core.name, i);
+        let frames = match wal::read_frames(&path) {
+            Ok(f) => f,
+            Err(e) => {
+                crate::log_warn!(
+                    "table {}: reading spill file for shard {i} failed: {e}",
+                    self.core.name
+                );
+                return BTreeMap::new();
+            }
+        };
+        let mut out = BTreeMap::new();
+        for f in &frames {
+            if f.opt_str("k") != Some("shard") {
+                continue;
+            }
+            let Some(rows) = f.get("rows").and_then(Json::as_arr) else { continue };
+            for rj in rows {
+                match (b.dec_row)(rj) {
+                    Ok(row) => {
+                        out.insert(row.key(), row);
+                    }
+                    Err(e) => crate::log_warn!(
+                        "table {}: decoding a spilled row of shard {i} failed: {e}",
+                        self.core.name
+                    ),
+                }
+            }
+        }
+        out
+    }
+
+    /// Fault an evicted shard's rows back into memory. The caller holds
+    /// the shard's *write* lock and `i` is that shard's index. Indexes
+    /// kept their postings across eviction, so nothing is re-indexed.
+    fn fault_in(&self, i: usize, shard: &mut Shard<V>) {
+        let Some(n) = shard.cold.take() else { return };
+        let rows = self.read_cold_shard(i);
+        if rows.len() != n {
+            crate::log_warn!(
+                "table {}: shard {i} faulted in {} rows, expected {n}",
+                self.core.name,
+                rows.len()
+            );
+        }
+        self.core.cold_rows.fetch_sub(n, Ordering::Relaxed);
+        self.core.fault_ins.fetch_add(1, Ordering::Relaxed);
+        shard.rows = rows;
+    }
+
     /// Attach a secondary index. Existing rows are back-filled, so indexes
     /// can be added to live, non-empty tables; mutation is blocked for the
     /// duration of the back-fill so no row is missed or double-counted.
@@ -302,12 +473,19 @@ impl<V: Row> Table<V> {
     fn attach_maint(&self, maint: Arc<dyn IndexMaint<V>>) -> Result<()> {
         // Read locks suffice to fence the back-fill: every mutator takes
         // its shard *write* lock before consulting `indexes`, so while
-        // all read locks are held no row can be added or removed.
+        // all read locks are held no row can be added or removed. Cold
+        // shards back-fill from their spill files without faulting in.
         let guards: Vec<_> = self.core.shards.iter().map(|s| s.read().unwrap()).collect();
         let mut indexes = self.core.indexes.write().unwrap();
-        for g in &guards {
-            for row in g.rows.values() {
-                maint.on_insert(row);
+        for (i, g) in guards.iter().enumerate() {
+            if g.cold.is_some() {
+                for row in self.read_cold_shard(i).values() {
+                    maint.on_insert(row);
+                }
+            } else {
+                for row in g.rows.values() {
+                    maint.on_insert(row);
+                }
             }
         }
         indexes.push(maint);
@@ -376,8 +554,11 @@ impl<V: Row> Table<V> {
     /// Insert a new row; errors on duplicate key.
     pub fn insert(&self, row: V, now: EpochMs) -> Result<()> {
         let key = row.key();
-        let mut shard = self.core.shards[self.shard_of(&key)].write().unwrap();
+        let si = self.shard_of(&key);
+        let mut shard = self.core.shards[si].write().unwrap();
         self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
+        self.touch(&shard);
+        self.fault_in(si, &mut shard);
         if shard.rows.contains_key(&key) {
             return Err(RucioError::Duplicate(format!(
                 "table {}: duplicate key",
@@ -390,6 +571,7 @@ impl<V: Row> Table<V> {
         }
         self.history_push(now, Op::Insert, &row);
         shard.rows.insert(key, row);
+        shard.dirty.store(true, Ordering::Release);
         self.core.len.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -397,8 +579,11 @@ impl<V: Row> Table<V> {
     /// Insert or replace.
     pub fn upsert(&self, row: V, now: EpochMs) {
         let key = row.key();
-        let mut shard = self.core.shards[self.shard_of(&key)].write().unwrap();
+        let si = self.shard_of(&key);
+        let mut shard = self.core.shards[si].write().unwrap();
         self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
+        self.touch(&shard);
+        self.fault_in(si, &mut shard);
         self.wal_log(&[WalOpRef::Put(&row)]);
         let indexes = self.core.indexes.read().unwrap();
         if let Some(old) = shard.rows.get(&key) {
@@ -413,42 +598,55 @@ impl<V: Row> Table<V> {
         }
         self.history_push(now, Op::Update, &row);
         shard.rows.insert(key, row);
+        shard.dirty.store(true, Ordering::Release);
     }
 
     pub fn get(&self, key: &V::Key) -> Option<V> {
-        self.core.shards[self.shard_of(key)]
-            .read()
-            .unwrap()
-            .rows
-            .get(key)
-            .cloned()
+        let si = self.shard_of(key);
+        let shard = self.core.shards[si].read().unwrap();
+        self.touch(&shard);
+        if shard.cold.is_some() {
+            // Served from the spill file without faulting the shard in
+            // (cold ⇒ clean ⇒ the file is the shard's exact content).
+            self.core.disk_reads.fetch_add(1, Ordering::Relaxed);
+            return self.read_cold_shard(si).remove(key);
+        }
+        shard.rows.get(key).cloned()
     }
 
     /// Project a row under the shard read lock without cloning the whole
     /// row — the cheap read path when only one field is needed (e.g.
     /// returning a DID's metadata map without copying every column).
     pub fn read<R, F: FnOnce(&V) -> R>(&self, key: &V::Key, f: F) -> Option<R> {
-        self.core.shards[self.shard_of(key)]
-            .read()
-            .unwrap()
-            .rows
-            .get(key)
-            .map(f)
+        let si = self.shard_of(key);
+        let shard = self.core.shards[si].read().unwrap();
+        self.touch(&shard);
+        if shard.cold.is_some() {
+            self.core.disk_reads.fetch_add(1, Ordering::Relaxed);
+            return self.read_cold_shard(si).get(key).map(f);
+        }
+        shard.rows.get(key).map(f)
     }
 
     pub fn contains(&self, key: &V::Key) -> bool {
-        self.core.shards[self.shard_of(key)]
-            .read()
-            .unwrap()
-            .rows
-            .contains_key(key)
+        let si = self.shard_of(key);
+        let shard = self.core.shards[si].read().unwrap();
+        self.touch(&shard);
+        if shard.cold.is_some() {
+            self.core.disk_reads.fetch_add(1, Ordering::Relaxed);
+            return self.read_cold_shard(si).contains_key(key);
+        }
+        shard.rows.contains_key(key)
     }
 
     /// In-place mutation through a closure; index entries are refreshed.
     /// Returns the updated row, or `None` if absent.
     pub fn update<F: FnOnce(&mut V)>(&self, key: &V::Key, now: EpochMs, f: F) -> Option<V> {
-        let mut shard = self.core.shards[self.shard_of(key)].write().unwrap();
+        let si = self.shard_of(key);
+        let mut shard = self.core.shards[si].write().unwrap();
         self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
+        self.touch(&shard);
+        self.fault_in(si, &mut shard);
         let row = shard.rows.get(key)?.clone();
         let indexes = self.core.indexes.read().unwrap();
         for idx in indexes.iter() {
@@ -463,17 +661,22 @@ impl<V: Row> Table<V> {
         }
         self.history_push(now, Op::Update, &new_row);
         shard.rows.insert(key.clone(), new_row.clone());
+        shard.dirty.store(true, Ordering::Release);
         Some(new_row)
     }
 
     pub fn remove(&self, key: &V::Key, now: EpochMs) -> Option<V> {
-        let mut shard = self.core.shards[self.shard_of(key)].write().unwrap();
+        let si = self.shard_of(key);
+        let mut shard = self.core.shards[si].write().unwrap();
         self.core.contention.single_write_locks.fetch_add(1, Ordering::Relaxed);
+        self.touch(&shard);
+        self.fault_in(si, &mut shard);
         if !shard.rows.contains_key(key) {
             return None;
         }
         self.wal_log(&[WalOpRef::Del(key)]);
         let row = shard.rows.remove(key)?;
+        shard.dirty.store(true, Ordering::Release);
         self.core.len.fetch_sub(1, Ordering::Relaxed);
         for idx in self.core.indexes.read().unwrap().iter() {
             idx.on_remove(&row);
@@ -500,7 +703,15 @@ impl<V: Row> Table<V> {
         let mut guards = Vec::with_capacity(touched.len());
         for (pos, si) in touched.iter().enumerate() {
             slot[*si] = pos;
-            guards.push(self.core.shards[*si].write().unwrap());
+            let mut g = self.core.shards[*si].write().unwrap();
+            self.touch(&g);
+            self.fault_in(*si, &mut g);
+            // Conservatively dirty every touched shard: a batch that
+            // ends up not mutating one (e.g. removes of missing keys)
+            // just costs that shard one spurious rewrite next
+            // checkpoint — never a missed one.
+            g.dirty.store(true, Ordering::Release);
+            guards.push(g);
         }
         self.core.contention.bulk_commits.fetch_add(1, Ordering::Relaxed);
         self.core
@@ -721,8 +932,11 @@ impl<V: Row> Table<V> {
 
     /// Insert-or-replace during recovery: maintains indexes and the row
     /// counter but writes neither history nor WAL (the row came *from*
-    /// the log).
-    fn load_row(&self, row: V) {
+    /// the log). `mark_dirty = false` is the snapshot-load fast path
+    /// when the shard layout matches the manifest — the row is landing
+    /// exactly where its shard file already has it, so the shard stays
+    /// clean and incremental checkpoints survive the restart.
+    fn load_row(&self, row: V, mark_dirty: bool) {
         let key = row.key();
         let mut shard = self.core.shards[self.shard_of(&key)].write().unwrap();
         let indexes = self.core.indexes.read().unwrap();
@@ -737,12 +951,16 @@ impl<V: Row> Table<V> {
             idx.on_insert(&row);
         }
         shard.rows.insert(key, row);
+        if mark_dirty {
+            shard.dirty.store(true, Ordering::Release);
+        }
     }
 
     /// Remove during recovery (missing keys are no-ops).
     fn unload_row(&self, key: &V::Key) {
         let mut shard = self.core.shards[self.shard_of(key)].write().unwrap();
         if let Some(old) = shard.rows.remove(key) {
+            shard.dirty.store(true, Ordering::Release);
             self.core.len.fetch_sub(1, Ordering::Relaxed);
             for idx in self.core.indexes.read().unwrap().iter() {
                 idx.on_remove(&old);
@@ -754,12 +972,32 @@ impl<V: Row> Table<V> {
     // ordered reads (k-way merge across shards)
     // ------------------------------------------------------------------
 
+    /// Load every cold shard's spill content into owned maps (indexed by
+    /// shard) so ordered scans can merge hot and cold shards uniformly
+    /// without faulting anything in. Caller holds all shard read locks.
+    fn cold_overlay(
+        &self,
+        guards: &[std::sync::RwLockReadGuard<'_, Shard<V>>],
+    ) -> Vec<Option<BTreeMap<V::Key, V>>> {
+        guards
+            .iter()
+            .enumerate()
+            .map(|(i, g)| g.cold.map(|_| self.read_cold_shard(i)))
+            .collect()
+    }
+
     /// Visit every row in global key order until `f` returns false.
     /// Takes all shard read locks at once (consistent snapshot) and merges
-    /// the per-shard ordered maps.
+    /// the per-shard ordered maps; cold shards merge from their spill
+    /// files.
     fn merged_for_each<F: FnMut(&V) -> bool>(&self, mut f: F) {
         let guards: Vec<_> = self.core.shards.iter().map(|s| s.read().unwrap()).collect();
-        let mut iters: Vec<_> = guards.iter().map(|g| g.rows.iter()).collect();
+        let cold = self.cold_overlay(&guards);
+        let mut iters: Vec<_> = guards
+            .iter()
+            .zip(cold.iter())
+            .map(|(g, c)| c.as_ref().unwrap_or(&g.rows).iter())
+            .collect();
         let mut heap: BinaryHeap<Reverse<(&V::Key, usize)>> = BinaryHeap::new();
         let mut heads: Vec<Option<&V>> = vec![None; iters.len()];
         for (i, it) in iters.iter_mut().enumerate() {
@@ -819,7 +1057,12 @@ impl<V: Row> Table<V> {
     pub fn range_page(&self, lo: Bound<&V::Key>, hi: Bound<&V::Key>, limit: usize) -> Page<V> {
         let limit = limit.max(1);
         let guards: Vec<_> = self.core.shards.iter().map(|s| s.read().unwrap()).collect();
-        let mut iters: Vec<_> = guards.iter().map(|g| g.rows.range((lo, hi))).collect();
+        let cold = self.cold_overlay(&guards);
+        let mut iters: Vec<_> = guards
+            .iter()
+            .zip(cold.iter())
+            .map(|(g, c)| c.as_ref().unwrap_or(&g.rows).range((lo, hi)))
+            .collect();
         let mut heap: BinaryHeap<Reverse<(&V::Key, usize)>> = BinaryHeap::new();
         let mut heads: Vec<Option<&V>> = vec![None; iters.len()];
         for (i, it) in iters.iter_mut().enumerate() {
@@ -922,53 +1165,299 @@ impl<V: Durable> Table<V> {
             dir: dir.to_path_buf(),
             enc_row: V::row_to_json,
             enc_key: V::key_to_json,
+            dec_row: V::row_from_json,
         });
         Ok(())
     }
 
-    /// Write a per-shard snapshot fenced by a WAL barrier, then truncate
-    /// the log back to the barrier. All shard read locks are held for
-    /// the duration, so the snapshot is a consistent cut and the barrier
-    /// position is exact. Requires an attached WAL.
+    /// Clone the WAL handle + dir out of the binding, or error: every
+    /// checkpoint-path operation needs both.
+    fn wal_binding(&self, what: &str) -> Result<(Arc<Wal>, PathBuf)> {
+        let guard = self.core.wal.read().unwrap();
+        let binding = guard.as_ref().ok_or_else(|| {
+            RucioError::DatabaseError(format!(
+                "table {}: {what} requires an attached WAL",
+                self.core.name
+            ))
+        })?;
+        Ok((binding.wal.clone(), binding.dir.clone()))
+    }
+
+    /// Write an incremental snapshot fenced by a WAL barrier, then
+    /// truncate the log to the barrier (plus any later records). Only
+    /// *dirty* shards are serialized and rewritten; clean and cold
+    /// shards keep their existing files, and the `{name}.snap` manifest
+    /// stitches the cut together. The shard read locks are held only
+    /// across the barrier and the in-memory serialization — the file IO
+    /// happens after they drop, so writers are never stalled behind the
+    /// disk. A mutation landing between the cut and the file write
+    /// re-dirties its shard (the write captures pre-mutation content,
+    /// which the preserved WAL suffix replays over). Requires an
+    /// attached WAL.
     pub fn checkpoint(&self) -> Result<CheckpointStats> {
-        let (wal_handle, dir) = {
-            let guard = self.core.wal.read().unwrap();
-            let binding = guard.as_ref().ok_or_else(|| {
-                RucioError::DatabaseError(format!(
-                    "table {}: checkpoint requires an attached WAL",
-                    self.core.name
-                ))
-            })?;
-            (binding.wal.clone(), binding.dir.clone())
-        };
+        let (wal_handle, dir) = self.wal_binding("checkpoint")?;
+        // Serialize the file phase against eviction and compaction: an
+        // eviction-written shard file is newer than this cut and must
+        // not be clobbered by our deferred write of older content.
+        let _io = self.core.ckpt_io.lock().unwrap();
         let guards: Vec<_> = self.core.shards.iter().map(|s| s.read().unwrap()).collect();
         let seq = wal_handle.barrier()?;
-        let mut frames = Vec::with_capacity(guards.len() + 1);
+        let fsync = wal_handle.fsync_enabled();
+        let mut shard_rows = Vec::with_capacity(guards.len());
+        let mut rows_total = 0usize;
+        let mut to_write: Vec<(usize, Json)> = Vec::new();
+        for (i, g) in guards.iter().enumerate() {
+            let n = g.cold.unwrap_or_else(|| g.rows.len());
+            shard_rows.push(n);
+            rows_total += n;
+            if g.cold.is_some() {
+                continue; // cold ⇒ clean ⇒ the spill file is current
+            }
+            let dirty = g.dirty.swap(false, Ordering::AcqRel);
+            let have_file =
+                || wal::shard_snapshot_file(&dir, self.core.name, i).exists();
+            if dirty || (n > 0 && !have_file()) {
+                let rows: Vec<Json> = g.rows.values().map(|r| r.row_to_json()).collect();
+                to_write.push((
+                    i,
+                    Json::obj().with("k", "shard").with("i", i).with("rows", Json::Arr(rows)),
+                ));
+            }
+        }
+        drop(guards);
+        #[cfg(test)]
+        if let Some(hook) = self.core.ckpt_io_hook.read().unwrap().as_ref() {
+            hook();
+        }
+        let mut snapshot_bytes = 0u64;
+        for (i, frame) in &to_write {
+            let path = wal::shard_snapshot_file(&dir, self.core.name, *i);
+            if let Err(e) = wal::write_frames_atomic(&path, std::slice::from_ref(frame), fsync) {
+                // Put the dirty bits back so the next sweep retries
+                // every shard of this cut (re-marking already-written
+                // ones only costs a spurious rewrite). The WAL is not
+                // truncated, so nothing is lost.
+                for (j, _) in &to_write {
+                    self.core.shards[*j].read().unwrap().dirty.store(true, Ordering::Release);
+                }
+                return Err(e);
+            }
+            snapshot_bytes += std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        }
+        // The manifest is written after the shard files: a crash in
+        // between leaves the old manifest pointing at shard files that
+        // are at least as new as its fence — idempotent replay of the
+        // old WAL suffix recovers exactly.
+        let mut frames = Vec::with_capacity(shard_rows.len() + 1);
         frames.push(
             Json::obj()
                 .with("k", "snap")
                 .with("table", self.core.name)
                 .with("ckpt", seq)
-                .with("shards", guards.len()),
+                .with("shards", shard_rows.len()),
         );
-        let mut rows_total = 0usize;
-        for (i, g) in guards.iter().enumerate() {
-            let rows: Vec<Json> = g.rows.values().map(|r| r.row_to_json()).collect();
-            rows_total += rows.len();
-            frames.push(Json::obj().with("k", "shard").with("i", i).with("rows", Json::Arr(rows)));
+        for (i, n) in shard_rows.iter().enumerate() {
+            frames.push(Json::obj().with("k", "shardref").with("i", i).with("rows", *n));
         }
         let snap = wal::snapshot_file(&dir, self.core.name);
-        let snapshot_bytes = wal::write_frames_atomic(&snap, &frames, wal_handle.fsync_enabled())?;
+        snapshot_bytes += wal::write_frames_atomic(&snap, &frames, fsync)?;
+        wal::remove_orphan_shard_files(&dir, self.core.name, shard_rows.len());
         wal_handle.truncate_to_barrier(seq)?;
-        drop(guards);
-        Ok(CheckpointStats { rows: rows_total, snapshot_bytes, seq })
+        Ok(CheckpointStats {
+            rows: rows_total,
+            snapshot_bytes,
+            seq,
+            shards_written: to_write.len(),
+            shards_skipped: shard_rows.len() - to_write.len(),
+        })
+    }
+
+    /// Would a checkpoint change what's on disk? True when the WAL has
+    /// records past the last barrier or any shard is dirty (e.g. a
+    /// failed checkpoint restored dirty bits after the barrier moved).
+    pub fn needs_checkpoint(&self) -> bool {
+        let Some(stats) = self.wal_stats() else { return false };
+        if stats.records_since_checkpoint > 0 {
+            return true;
+        }
+        self.core
+            .shards
+            .iter()
+            .any(|s| s.read().unwrap().dirty.load(Ordering::Acquire))
+    }
+
+    /// Evict least-recently-used shards until the hot-row count fits the
+    /// budget ([`Table::set_memory_budget`]; no-op at 0 or with no WAL
+    /// attached). A dirty shard (or one with no file yet) gets its spill
+    /// file written before its rows are dropped, so cold shards can
+    /// always be served from disk and recovery stays exact whether or
+    /// not a checkpoint intervened — shard files written here are newer
+    /// than the manifest's fence, which idempotent full-row replay
+    /// tolerates. Returns the number of shards evicted.
+    pub fn enforce_budget(&self) -> Result<usize> {
+        let budget = self.core.budget.load(Ordering::Relaxed);
+        if budget == 0 {
+            return Ok(0);
+        }
+        let hot = self.len().saturating_sub(self.core.cold_rows.load(Ordering::Relaxed));
+        if hot <= budget {
+            return Ok(0);
+        }
+        let Ok((wal_handle, dir)) = self.wal_binding("enforce_budget") else {
+            return Ok(0); // paging without a WAL: nowhere to spill
+        };
+        let fsync = wal_handle.fsync_enabled();
+        let _io = self.core.ckpt_io.lock().unwrap();
+        // Coldest-first over the currently-hot shards. The ticks are a
+        // racy snapshot — LRU-ish is all eviction needs.
+        let mut order: Vec<(u64, usize)> = Vec::new();
+        for (i, s) in self.core.shards.iter().enumerate() {
+            let g = s.read().unwrap();
+            if g.cold.is_none() && !g.rows.is_empty() {
+                order.push((g.last_access.load(Ordering::Relaxed), i));
+            }
+        }
+        order.sort_unstable();
+        let mut hot = hot;
+        let mut evicted = 0usize;
+        for (_, i) in order {
+            if hot <= budget {
+                break;
+            }
+            let mut g = self.core.shards[i].write().unwrap();
+            if g.cold.is_some() || g.rows.is_empty() {
+                continue; // changed while we were sorting
+            }
+            let n = g.rows.len();
+            let path = wal::shard_snapshot_file(&dir, self.core.name, i);
+            if g.dirty.load(Ordering::Acquire) || !path.exists() {
+                let rows: Vec<Json> = g.rows.values().map(|r| r.row_to_json()).collect();
+                let frame =
+                    Json::obj().with("k", "shard").with("i", i).with("rows", Json::Arr(rows));
+                wal::write_frames_atomic(&path, std::slice::from_ref(&frame), fsync)?;
+                g.dirty.store(false, Ordering::Release);
+            }
+            g.rows = BTreeMap::new();
+            g.cold = Some(n);
+            self.core.cold_rows.fetch_add(n, Ordering::Relaxed);
+            self.core.evictions.fetch_add(1, Ordering::Relaxed);
+            hot -= n.min(hot);
+            evicted += 1;
+        }
+        Ok(evicted)
+    }
+
+    /// Fold the WAL down to at most one barrier plus one commit frame:
+    /// records at or before the on-disk manifest's fence are dropped
+    /// (the snapshot covers them), and of the rest only the *final* op
+    /// per key survives — ops are full-row puts and deletes, so
+    /// last-write-wins folding preserves replay semantics exactly. This
+    /// bounds log growth between checkpoints without paying a snapshot
+    /// rewrite; overwrite-heavy tables (request state machines, usage
+    /// counters) shrink the most. Leaves the log untouched when the
+    /// fold wouldn't shrink it.
+    pub fn compact_wal(&self) -> Result<CompactStats> {
+        let (wal_handle, dir) = self.wal_binding("compact_wal")?;
+        let _io = self.core.ckpt_io.lock().unwrap();
+        let snap = wal::snapshot_file(&dir, self.core.name);
+        let snap_seq = match wal::read_frames(&snap) {
+            Ok(frames) => frames.first().and_then(|h| h.opt_u64("ckpt")).unwrap_or(0),
+            Err(_) => 0, // unreadable manifest: fold conservatively from seq 0
+        };
+        let mut decode_err: Option<RucioError> = None;
+        let mut ops_dropped = 0u64;
+        let result = wal_handle.rewrite_locked(|records| {
+            let mut last: BTreeMap<V::Key, (usize, Json)> = BTreeMap::new();
+            let mut max_seq = 0u64;
+            let mut ops_seen = 0u64;
+            let mut order = 0usize;
+            for rec in records {
+                if rec.payload.opt_str("k") != Some("c") {
+                    continue; // barriers are re-derived below
+                }
+                let Some(ops) = rec.payload.get("ops").and_then(Json::as_arr) else {
+                    continue;
+                };
+                ops_seen += ops.len() as u64;
+                if rec.seq <= snap_seq {
+                    continue; // covered by the snapshot
+                }
+                max_seq = max_seq.max(rec.seq);
+                for op in ops {
+                    let key = match op.opt_str("o") {
+                        Some("u") => op
+                            .get("row")
+                            .ok_or_else(|| {
+                                RucioError::DatabaseError("wal put op without row".into())
+                            })
+                            .and_then(V::row_from_json)
+                            .map(|r| r.key()),
+                        Some("r") => op
+                            .get("key")
+                            .ok_or_else(|| {
+                                RucioError::DatabaseError("wal del op without key".into())
+                            })
+                            .and_then(V::key_from_json),
+                        other => Err(RucioError::DatabaseError(format!(
+                            "unknown wal op kind {other:?}"
+                        ))),
+                    };
+                    match key {
+                        Ok(k) => {
+                            last.insert(k, (order, op.clone()));
+                            order += 1;
+                        }
+                        Err(e) => {
+                            decode_err = Some(e);
+                            return None;
+                        }
+                    }
+                }
+            }
+            let mut payloads = Vec::new();
+            if snap_seq > 0 {
+                payloads.push(Json::obj().with("k", "b").with("seq", snap_seq));
+            }
+            if !last.is_empty() {
+                let mut ops: Vec<(usize, Json)> = last.into_values().collect();
+                ops.sort_unstable_by_key(|(o, _)| *o);
+                let ops: Vec<Json> = ops.into_iter().map(|(_, op)| op).collect();
+                ops_seen -= ops.len() as u64;
+                payloads
+                    .push(Json::obj().with("k", "c").with("seq", max_seq).with("ops", Json::Arr(ops)));
+            }
+            if payloads.len() >= records.len() && ops_seen == 0 {
+                return None; // nothing to gain
+            }
+            ops_dropped = ops_seen;
+            Some(payloads)
+        })?;
+        if let Some(e) = decode_err {
+            return Err(e);
+        }
+        let mut stats = CompactStats::default();
+        if let Some((bytes_before, records_before, bytes_after, records_after)) = result {
+            stats.bytes_before = bytes_before;
+            stats.records_before = records_before;
+            stats.bytes_after = bytes_after;
+            stats.records_after = records_after;
+            stats.ops_dropped = ops_dropped;
+        }
+        Ok(stats)
     }
 
     /// Cold-boot this (empty) table from a snapshot plus the WAL suffix
     /// after the snapshot's barrier. Missing files read as empty — a
-    /// fresh directory recovers to a fresh table. Every index already
-    /// attached is rebuilt through the normal maintenance hooks; a torn
-    /// final WAL record is detected by checksum and discarded whole.
+    /// fresh directory recovers to a fresh table. Two snapshot layouts
+    /// are understood: the current manifest (`shardref` frames pointing
+    /// at per-shard files) and the legacy inline form (`shard` frames
+    /// with rows embedded). When the manifest's shard count matches this
+    /// table's, snapshot rows land with their shards left *clean*, so a
+    /// post-recovery checkpoint skips them; any other path (legacy,
+    /// re-sharded layout, WAL replay) marks shards dirty. Every index
+    /// already attached is rebuilt through the normal maintenance hooks;
+    /// a torn final WAL record is detected by checksum and discarded
+    /// whole.
     pub fn recover(&self, snapshot: &Path, wal_path: &Path) -> Result<RecoverStats> {
         if !self.is_empty() {
             return Err(RucioError::DatabaseError(format!(
@@ -990,19 +1479,54 @@ impl<V: Durable> Table<V> {
                 )));
             }
             stats.snapshot_seq = header.opt_u64("ckpt").unwrap_or(0);
+            let manifest_shards = header.opt_u64("shards").unwrap_or(0) as usize;
+            let same_layout = manifest_shards == self.core.shards.len();
+            let mut shardrefs = false;
             for shard_frame in it {
-                if shard_frame.opt_str("k") != Some("shard") {
-                    continue;
+                match shard_frame.opt_str("k") {
+                    Some("shardref") => shardrefs = true,
+                    // Legacy inline layout: rows embedded in the
+                    // manifest itself, no per-shard files on disk —
+                    // shards must come up dirty so the next checkpoint
+                    // materializes them.
+                    Some("shard") => {
+                        let rows =
+                            shard_frame.get("rows").and_then(Json::as_arr).ok_or_else(|| {
+                                RucioError::DatabaseError(format!(
+                                    "table {}: snapshot shard without rows",
+                                    self.core.name
+                                ))
+                            })?;
+                        for rj in rows {
+                            self.load_row(V::row_from_json(rj)?, true);
+                            stats.snapshot_rows += 1;
+                        }
+                    }
+                    _ => continue,
                 }
-                let rows = shard_frame.get("rows").and_then(Json::as_arr).ok_or_else(|| {
-                    RucioError::DatabaseError(format!(
-                        "table {}: snapshot shard without rows",
-                        self.core.name
-                    ))
-                })?;
-                for rj in rows {
-                    self.load_row(V::row_from_json(rj)?);
-                    stats.snapshot_rows += 1;
+            }
+            if shardrefs {
+                let dir = snapshot.parent().unwrap_or_else(|| Path::new("."));
+                for i in 0..manifest_shards {
+                    let path = wal::shard_snapshot_file(dir, self.core.name, i);
+                    if !path.exists() {
+                        continue; // empty shard at checkpoint time
+                    }
+                    for frame in wal::read_frames(&path)? {
+                        if frame.opt_str("k") != Some("shard") {
+                            continue;
+                        }
+                        let rows = frame.get("rows").and_then(Json::as_arr).ok_or_else(|| {
+                            RucioError::DatabaseError(format!(
+                                "table {}: shard file without rows",
+                                self.core.name
+                            ))
+                        })?;
+                        for rj in rows {
+                            self.load_row(V::row_from_json(rj)?, !same_layout);
+                            stats.snapshot_rows += 1;
+                        }
+                    }
                 }
             }
         }
@@ -1019,7 +1543,7 @@ impl<V: Durable> Table<V> {
                 stats.replayed_records += 1;
                 for op in wal::decode_ops::<V>(&rec.payload)? {
                     match op {
-                        ReplayOp::Put(row) => self.load_row(row),
+                        ReplayOp::Put(row) => self.load_row(row, true),
                         ReplayOp::Del(key) => self.unload_row(&key),
                     }
                     stats.replayed_ops += 1;
@@ -1054,6 +1578,22 @@ impl<V: Durable> TablePersist for Table<V> {
 
     fn wal_stats(&self) -> Option<WalStats> {
         Table::wal_stats(self)
+    }
+
+    fn needs_checkpoint(&self) -> bool {
+        Table::needs_checkpoint(self)
+    }
+
+    fn compact_wal(&self) -> Result<CompactStats> {
+        Table::compact_wal(self)
+    }
+
+    fn enforce_budget(&self) -> Result<usize> {
+        Table::enforce_budget(self)
+    }
+
+    fn spill_stats(&self) -> SpillStats {
+        Table::spill_stats(self)
     }
 }
 
@@ -2193,6 +2733,344 @@ mod tests {
                 states.contains(&recovered),
                 "recovered state must equal a commit prefix (got {recovered:?})"
             );
+            std::fs::remove_dir_all(&dir).ok();
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // paged mode: spill-to-disk, incremental checkpoints, WAL compaction
+    // ------------------------------------------------------------------
+
+    /// Satellite regression: `Table::checkpoint` must not hold shard
+    /// read locks through the snapshot file IO. The test-only
+    /// `ckpt_io_hook` parks a checkpoint thread *inside* its IO phase;
+    /// a concurrent writer must still commit while it is parked — under
+    /// the old hold-locks-through-IO code this test deadlocks the
+    /// writer until the (blocked) IO finishes.
+    #[test]
+    fn writers_progress_during_checkpoint_io() {
+        use std::sync::atomic::AtomicBool;
+        let dir = tmpdir("ckptio");
+        let t: Table<DRow> = Table::new("d").with_shards(4);
+        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: false, leader: true })
+            .unwrap();
+        for i in 0..20 {
+            t.insert(drow(i, "a"), 0).unwrap();
+        }
+        let in_io = Arc::new(AtomicBool::new(false));
+        let release = Arc::new(AtomicBool::new(false));
+        {
+            let in_io = in_io.clone();
+            let release = release.clone();
+            *t.core.ckpt_io_hook.write().unwrap() = Some(Box::new(move || {
+                in_io.store(true, Ordering::SeqCst);
+                while !release.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            }));
+        }
+        let ckpt = {
+            let t = t.clone();
+            std::thread::spawn(move || t.checkpoint())
+        };
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !in_io.load(Ordering::SeqCst) {
+            assert!(std::time::Instant::now() < deadline, "checkpoint never reached its IO phase");
+            std::thread::yield_now();
+        }
+        // The snapshot IO is now parked. A writer must make progress.
+        let writer = {
+            let t = t.clone();
+            std::thread::spawn(move || {
+                t.insert(drow(100, "w"), 1).unwrap();
+                assert!(t.update(&3, 1, |r| r.val = "w".into()).is_some());
+            })
+        };
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while t.get(&100).is_none() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "writer blocked behind checkpoint IO (shard locks held through IO?)"
+            );
+            std::thread::yield_now();
+        }
+        assert!(!release.load(Ordering::SeqCst), "writer committed while IO was parked");
+        release.store(true, Ordering::SeqCst);
+        writer.join().unwrap();
+        ckpt.join().unwrap().unwrap();
+        *t.core.ckpt_io_hook.write().unwrap() = None;
+        // Nothing lost: the mid-checkpoint commits sit past the barrier
+        // and replay from the preserved WAL suffix.
+        let r: Table<DRow> = Table::new("d").with_shards(4);
+        r.recover_from_dir(&dir).unwrap();
+        assert_eq!(contents(&r), contents(&t));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Tentpole basics: with a hot-row budget set, `enforce_budget`
+    /// spills least-recently-used shards to per-shard files, and the
+    /// table keeps serving exact point reads, ordered scans, and cursor
+    /// pagination over the hot/cold mix.
+    #[test]
+    fn spill_evicts_cold_shards_and_serves_reads_from_disk() {
+        let dir = tmpdir("spill");
+        let t: Table<DRow> = Table::new("d").with_shards(4);
+        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: false, leader: true })
+            .unwrap();
+        for i in 0..40 {
+            t.insert(drow(i, &format!("v{i}")), 0).unwrap();
+        }
+        assert_eq!(t.enforce_budget().unwrap(), 0, "no budget, no eviction");
+        t.set_memory_budget(10);
+        assert_eq!(t.memory_budget(), 10);
+        let evicted = t.enforce_budget().unwrap();
+        assert!(evicted >= 1, "over budget: some shard must spill");
+        let s = t.spill_stats();
+        assert_eq!(s.shard_count, 4);
+        assert_eq!(s.budget, 10);
+        assert_eq!(s.cold_shards, evicted);
+        assert_eq!(s.hot_rows + s.cold_rows, 40);
+        assert!(s.hot_rows <= 10, "eviction reached the budget: {} hot", s.hot_rows);
+        assert_eq!(s.evictions, evicted as u64);
+        // a second pass has nothing left to do
+        assert_eq!(t.enforce_budget().unwrap(), 0);
+        // len / keys / point reads see through the hot/cold split
+        assert_eq!(t.len(), 40);
+        assert_eq!(t.keys(), (0..40).collect::<Vec<_>>());
+        for i in 0..40 {
+            assert_eq!(t.get(&i).unwrap().val, format!("v{i}"));
+            assert!(t.contains(&i));
+            assert_eq!(t.read(&i, |r| r.val.clone()).unwrap(), format!("v{i}"));
+        }
+        assert!(t.get(&999).is_none());
+        assert!(t.spill_stats().disk_reads > 0, "cold point reads served from spill files");
+        // ordered scans overlay the cold shards
+        assert_eq!(contents(&t), (0..40).map(|i| (i, format!("v{i}"))).collect());
+        // cursor pagination walks the same global order
+        let mut paged = Vec::new();
+        let mut cursor: Option<u64> = None;
+        loop {
+            let page = t.scan_page(cursor.as_ref(), 7);
+            paged.extend(page.rows.into_iter().map(|r| r.id));
+            match page.next_cursor {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+        }
+        assert_eq!(paged, (0..40).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Mutating a row in a cold shard faults the shard back in and
+    /// marks it dirty; the next checkpoint is incremental — it rewrites
+    /// exactly the dirty shard and skips the cold (clean) ones — and
+    /// recovery still sees the whole table.
+    #[test]
+    fn spill_faults_in_on_mutation_and_checkpoints_incrementally() {
+        let dir = tmpdir("fault");
+        let t: Table<DRow> = Table::new("d").with_shards(4);
+        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: false, leader: true })
+            .unwrap();
+        for i in 0..40 {
+            t.insert(drow(i, &format!("v{i}")), 0).unwrap();
+        }
+        let occupied = t
+            .core
+            .shards
+            .iter()
+            .filter(|s| !s.read().unwrap().rows.is_empty())
+            .count();
+        let ck = t.checkpoint().unwrap();
+        assert_eq!(ck.rows, 40);
+        assert_eq!(ck.shards_written, occupied, "first checkpoint writes every dirty shard");
+        // Evict everything evictable, then find a key that actually
+        // went cold (a 1-row shard may stay hot at budget 1).
+        t.set_memory_budget(1);
+        t.enforce_budget().unwrap();
+        let s = t.spill_stats();
+        assert!(s.cold_shards + 1 >= occupied, "nearly all shards evicted: {s:?}");
+        assert!(s.hot_rows <= 1);
+        let cold_key = (0..40u64)
+            .find(|k| t.core.shards[t.shard_of(k)].read().unwrap().cold.is_some())
+            .expect("some key lives in a cold shard");
+        assert!(t.update(&cold_key, 1, |r| r.val = "mut".into()).is_some());
+        let s2 = t.spill_stats();
+        assert!(s2.fault_ins >= 1, "mutation faulted the cold shard in: {s2:?}");
+        assert_eq!(s2.cold_shards, s.cold_shards - 1);
+        assert_eq!(t.get(&cold_key).unwrap().val, "mut");
+        // Incremental sweep: only the faulted (dirty) shard rewrites.
+        let ck2 = t.checkpoint().unwrap();
+        assert_eq!(ck2.rows, 40);
+        assert_eq!(ck2.shards_written, 1, "only the mutated shard was rewritten");
+        assert_eq!(ck2.shards_skipped, 3);
+        // Recovery sees hot and cold rows alike.
+        let r: Table<DRow> = Table::new("d").with_shards(4);
+        let stats = r.recover_from_dir(&dir).unwrap();
+        assert_eq!(stats.snapshot_rows, 40);
+        assert_eq!(contents(&r), contents(&t));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// WAL compaction folds overwrite churn down to the last op per key
+    /// and the folded log replays to the same state — with and without
+    /// a checkpoint fence in front, and as a no-op when there is
+    /// nothing to gain.
+    #[test]
+    fn compact_wal_folds_churn_and_preserves_recovery() {
+        let dir = tmpdir("fold");
+        let t: Table<DRow> = Table::new("d").with_shards(3);
+        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: false, leader: true })
+            .unwrap();
+        for round in 0..20u64 {
+            for id in 0..5 {
+                t.upsert(drow(id, &format!("r{round}")), round as i64);
+            }
+        }
+        t.remove(&4, 99);
+        let before = t.wal_stats().unwrap();
+        assert!(before.records >= 100);
+        let cs = t.compact_wal().unwrap();
+        assert_eq!(cs.records_before, before.records);
+        assert_eq!(cs.records_after, 1, "one folded commit, no fence yet");
+        assert!(cs.ops_dropped >= 95, "churn dropped: {}", cs.ops_dropped);
+        assert!(cs.bytes_after < cs.bytes_before);
+        let r: Table<DRow> = Table::new("d");
+        r.recover_from_dir(&dir).unwrap();
+        assert_eq!(contents(&r), contents(&t));
+
+        // After a checkpoint, compaction drops fenced records and
+        // re-emits the fence barrier so recovery skips snapshot-covered
+        // commits exactly as before.
+        t.checkpoint().unwrap();
+        for round in 0..10u64 {
+            t.upsert(drow(1, &format!("s{round}")), 200 + round as i64);
+        }
+        let cs2 = t.compact_wal().unwrap();
+        assert_eq!(cs2.records_after, 2, "fence barrier + one folded commit");
+        assert!(cs2.ops_dropped >= 9);
+        let r2: Table<DRow> = Table::new("d").with_shards(5);
+        r2.recover_from_dir(&dir).unwrap();
+        assert_eq!(contents(&r2), contents(&t));
+        // Compacting the already-folded log gains nothing → no rewrite.
+        let cs3 = t.compact_wal().unwrap();
+        assert_eq!(cs3.records_before, 0, "no-gain fold leaves the log alone");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A checkpoint of a partially-spilled table round-trips through
+    /// recovery even into a different shard layout, and the first
+    /// checkpoint under the new layout removes the old layout's
+    /// orphaned shard files.
+    #[test]
+    fn spilled_checkpoint_recovers_across_shard_layouts() {
+        let dir = tmpdir("relayout");
+        let t: Table<DRow> = Table::new("d").with_shards(8);
+        t.attach_wal(&dir, WalOptions { fsync: false, group_commit: false, leader: true })
+            .unwrap();
+        for i in 0..60 {
+            t.insert(drow(i, &format!("v{i}")), 0).unwrap();
+        }
+        t.set_memory_budget(20);
+        t.enforce_budget().unwrap();
+        assert!(t.spill_stats().cold_shards > 0);
+        let ck = t.checkpoint().unwrap();
+        assert_eq!(ck.rows, 60);
+        assert!(ck.shards_skipped >= t.spill_stats().cold_shards, "cold shards not rewritten");
+        // a post-checkpoint commit rides the WAL suffix
+        t.upsert(drow(100, "x"), 5);
+        // Recover into a 3-shard layout: per-shard snapshot rows are
+        // re-placed by hash and the suffix replays on top.
+        let r: Table<DRow> = Table::new("d").with_shards(3);
+        let stats = r.recover_from_dir(&dir).unwrap();
+        assert_eq!(stats.snapshot_rows, 60);
+        assert_eq!(r.len(), 61);
+        assert_eq!(contents(&r), contents(&t));
+        // The new layout's first checkpoint rewrites its (re-placed,
+        // dirty) shards and drops the 8-shard layout's extra files.
+        r.attach_wal(&dir, WalOptions { fsync: false, group_commit: false, leader: true })
+            .unwrap();
+        let occupied = r
+            .core
+            .shards
+            .iter()
+            .filter(|s| !s.read().unwrap().rows.is_empty())
+            .count();
+        let ck2 = r.checkpoint().unwrap();
+        assert_eq!(ck2.rows, 61);
+        assert_eq!(ck2.shards_written, occupied);
+        assert_eq!(ck2.shards_written + ck2.shards_skipped, 3);
+        for i in 3..8 {
+            assert!(
+                !walmod::shard_snapshot_file(&dir, "d", i).exists(),
+                "orphan shard file {i} removed"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Model property: a paged table under an aggressive budget (with
+    /// eviction interleaved into the op stream) is observationally
+    /// identical to the plain in-memory table — the spill layer must
+    /// never change what a reader sees.
+    #[test]
+    fn prop_paged_table_matches_in_memory() {
+        forall(20, |g| {
+            let dir = tmpdir("pagedprop");
+            let paged: Table<DRow> = Table::new("d").with_shards(g.usize(2, 8));
+            paged
+                .attach_wal(&dir, WalOptions { fsync: false, group_commit: g.bool(), leader: true })
+                .unwrap();
+            paged.set_memory_budget(g.usize(1, 10));
+            let mut model: BTreeMap<u64, String> = BTreeMap::new();
+            for step in 0..g.usize(20, 120) {
+                let now = step as i64;
+                let id = g.u64(0, 25);
+                match g.usize(0, 5) {
+                    0 => {
+                        let val = g.ident(1..6);
+                        paged.upsert(drow(id, &val), now);
+                        model.insert(id, val);
+                    }
+                    1 => {
+                        paged.remove(&id, now);
+                        model.remove(&id);
+                    }
+                    2 => {
+                        let val = g.ident(1..6);
+                        let pm = paged.update(&id, now, |r| r.val = val.clone());
+                        assert_eq!(pm.is_some(), model.contains_key(&id));
+                        if model.contains_key(&id) {
+                            model.insert(id, val);
+                        }
+                    }
+                    3 => {
+                        // reads must agree mid-stream, hot or cold
+                        assert_eq!(paged.get(&id).map(|r| r.val), model.get(&id).cloned());
+                        assert_eq!(paged.contains(&id), model.contains_key(&id));
+                    }
+                    _ => {
+                        paged.enforce_budget().unwrap();
+                        if g.chance(0.3) {
+                            paged.checkpoint().unwrap();
+                        }
+                    }
+                }
+            }
+            paged.enforce_budget().unwrap();
+            let want: BTreeMap<u64, String> = model.clone();
+            assert_eq!(contents(&paged), want, "paged scan == model");
+            assert_eq!(paged.len(), model.len());
+            assert_eq!(paged.keys(), model.keys().copied().collect::<Vec<_>>());
+            let budget = paged.memory_budget();
+            let s = paged.spill_stats();
+            assert!(
+                s.hot_rows <= budget || s.cold_shards + 1 >= s.shard_count,
+                "budget enforced where possible: {s:?}"
+            );
+            // and the whole thing still recovers exactly
+            let r: Table<DRow> = Table::new("d").with_shards(4);
+            r.recover_from_dir(&dir).unwrap();
+            assert_eq!(contents(&r), want);
             std::fs::remove_dir_all(&dir).ok();
         });
     }

@@ -31,9 +31,25 @@
 //!
 //! Snapshot files are written to a temp file and atomically renamed, so
 //! a crash mid-checkpoint leaves either the old or the new snapshot —
-//! never a torn one. After the rename the WAL is truncated back to a
-//! single barrier frame; a crash between the two steps is benign because
-//! the seq fence makes replay of pre-snapshot records a no-op.
+//! never a torn one. After the rename the WAL is truncated down to the
+//! barrier frame plus any records committed after the fence (writers
+//! run concurrently with the snapshot's file IO); a crash between the
+//! two steps is benign because the seq fence makes replay of
+//! pre-snapshot records a no-op.
+//!
+//! ## Snapshot layout (paged / incremental)
+//!
+//! A table's snapshot is one *manifest* file (`{name}.snap`: a header
+//! frame plus one `shardref` frame per shard) stitching together
+//! per-shard row files (`{name}.shard{i}.snap`, one `shard` frame
+//! each). Checkpoints rewrite only the shard files whose shard was
+//! mutated since its file was last written; eviction (paged mode)
+//! reuses the same files as its spill store. Shard files may be newer
+//! than the manifest — eviction writes them between checkpoints — which
+//! is safe because replay ops are full-row puts/deletes: replaying the
+//! WAL suffix from the manifest's fence over a newer shard image is
+//! idempotent. Pre-manifest snapshots (a single file with inline
+//! `shard` frames) still recover.
 //!
 //! ## Crash model
 //!
@@ -123,12 +139,53 @@ pub struct WalStats {
 /// Outcome of one [`crate::db::Table::checkpoint`].
 #[derive(Debug, Clone, Default)]
 pub struct CheckpointStats {
-    /// Rows written into the snapshot.
+    /// Live rows covered by the snapshot (hot and cold, written or
+    /// skipped-clean).
     pub rows: usize,
-    /// Snapshot file size in bytes.
+    /// Bytes written this checkpoint (dirty shard files + manifest).
     pub snapshot_bytes: u64,
     /// The barrier seq fencing this snapshot.
     pub seq: u64,
+    /// Shard files rewritten because their shard was dirty.
+    pub shards_written: usize,
+    /// Shards skipped because their on-disk file was still current.
+    pub shards_skipped: usize,
+}
+
+/// Outcome of one [`crate::db::Table::compact_wal`].
+#[derive(Debug, Clone, Default)]
+pub struct CompactStats {
+    /// Frames in the log before / after the fold.
+    pub records_before: u64,
+    pub records_after: u64,
+    /// Log size in bytes before / after the fold.
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+    /// Individual ops superseded by a later op on the same key (or
+    /// already covered by the snapshot fence) and dropped.
+    pub ops_dropped: u64,
+}
+
+/// Paged-mode shape of one table, for monitoring and the memory-budget
+/// smoke assertions (`analytics::reports::spill_stats`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Total shards in the table.
+    pub shard_count: usize,
+    /// Shards currently evicted to their spill files.
+    pub cold_shards: usize,
+    /// Rows resident in memory — the RSS proxy the budget bounds.
+    pub hot_rows: usize,
+    /// Rows living only in spill files.
+    pub cold_rows: usize,
+    /// Hot-row budget (0 = paging off).
+    pub budget: usize,
+    /// Shard evictions since attach.
+    pub evictions: u64,
+    /// Cold shards faulted back into memory by a mutation.
+    pub fault_ins: u64,
+    /// Point reads served straight from a cold shard's file.
+    pub disk_reads: u64,
 }
 
 /// Outcome of one [`crate::db::Table::recover`].
@@ -155,6 +212,26 @@ pub trait TablePersist: Send + Sync {
     fn table_name(&self) -> &'static str;
     fn checkpoint(&self) -> Result<CheckpointStats>;
     fn wal_stats(&self) -> Option<WalStats>;
+    /// True when a checkpoint would change what's on disk: WAL records
+    /// since the last barrier, or a shard dirtied since its file was
+    /// written. Clean tables skip the snapshot sweep entirely.
+    fn needs_checkpoint(&self) -> bool {
+        true
+    }
+    /// Fold the WAL down to the final op per key (see
+    /// [`crate::db::Table::compact_wal`]). Default: no-op.
+    fn compact_wal(&self) -> Result<CompactStats> {
+        Ok(CompactStats::default())
+    }
+    /// Evict least-recently-used shards until the hot-row count fits the
+    /// memory budget. Returns shards evicted. Default: no-op.
+    fn enforce_budget(&self) -> Result<usize> {
+        Ok(0)
+    }
+    /// Paged-mode shape (hot/cold rows, budget, eviction counters).
+    fn spill_stats(&self) -> SpillStats {
+        SpillStats::default()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -268,9 +345,34 @@ pub fn write_frames_atomic(path: &Path, frames: &[Json], fsync: bool) -> Result<
     Ok(buf.len() as u64)
 }
 
-/// Snapshot file for table `name` under the durability dir.
+/// Snapshot manifest for table `name` under the durability dir (also
+/// the whole snapshot in the pre-manifest format).
 pub fn snapshot_file(dir: &Path, name: &str) -> PathBuf {
     dir.join(format!("{name}.snap"))
+}
+
+/// Per-shard snapshot/spill file for shard `i` of table `name`.
+pub fn shard_snapshot_file(dir: &Path, name: &str, i: usize) -> PathBuf {
+    dir.join(format!("{name}.shard{i}.snap"))
+}
+
+/// Remove shard files left behind by an older, wider shard layout
+/// (indices at or past `shard_count`). Best-effort: IO errors on the
+/// directory scan read as "nothing to remove".
+pub fn remove_orphan_shard_files(dir: &Path, name: &str, shard_count: usize) {
+    let prefix = format!("{name}.shard");
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let file_name = entry.file_name();
+        let Some(fname) = file_name.to_str() else { continue };
+        let Some(rest) = fname.strip_prefix(&prefix) else { continue };
+        let Some(idx) = rest.strip_suffix(".snap") else { continue };
+        if let Ok(i) = idx.parse::<usize>() {
+            if i >= shard_count {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
 }
 
 /// WAL file for table `name` under the durability dir.
@@ -612,14 +714,15 @@ impl Wal {
         Ok(seq)
     }
 
-    /// Rewrite the log to contain only the barrier frame `seq` — called
-    /// after the snapshot fenced by that barrier has been renamed into
-    /// place. Atomic (temp file + rename); the append handle is reopened
-    /// on the new file. The caller holds the table's shard locks, so
-    /// staging is empty and no leader is in flight.
-    pub fn truncate_to_barrier(&self, seq: u64) -> Result<()> {
-        let mut fs = self.file.lock().unwrap();
-        let buf = frame(&Json::obj().with("k", "b").with("seq", seq));
+    /// Replace the log's contents with `payloads`, atomically (temp file
+    /// + rename), reopening the append handle on the new file and
+    /// rebuilding the counters. The caller holds the file mutex (owns
+    /// `fs`), so no flush can interleave.
+    fn replace_locked(&self, fs: &mut FileState, payloads: &[Json]) -> Result<()> {
+        let mut buf = Vec::new();
+        for p in payloads {
+            frame_into(&mut buf, p);
+        }
         let tmp = tmp_path(&self.path);
         {
             let mut f = File::create(&tmp)?;
@@ -631,10 +734,57 @@ impl Wal {
         std::fs::rename(&tmp, &self.path)?;
         fs.file = OpenOptions::new().append(true).open(&self.path)?;
         fs.bytes = buf.len() as u64;
-        fs.records = 1;
-        fs.last_barrier_seq = seq;
+        fs.records = payloads.len() as u64;
+        fs.last_barrier_seq = 0;
         fs.records_since_barrier = 0;
+        for p in payloads {
+            if p.opt_str("k") == Some("b") {
+                fs.last_barrier_seq = p.opt_u64("seq").unwrap_or(0);
+                fs.records_since_barrier = 0;
+            } else {
+                fs.records_since_barrier += 1;
+            }
+        }
         Ok(())
+    }
+
+    /// Compact the log after a checkpoint: drop everything the barrier
+    /// `seq` fences off, keeping the barrier frame plus any records
+    /// appended after it — writers commit concurrently with the
+    /// snapshot's file IO, and those suffix records are NOT covered by
+    /// the snapshot. Atomic (temp file + rename); the append handle is
+    /// reopened on the new file. The file mutex is held for the whole
+    /// rewrite, so no flush is in flight and the on-disk file is exactly
+    /// the flushed prefix; frames staged but unflushed (all with seq >
+    /// `seq`) append to the reopened handle afterwards.
+    pub fn truncate_to_barrier(&self, seq: u64) -> Result<()> {
+        let mut fs = self.file.lock().unwrap();
+        let scan = read_records(&self.path)?;
+        let mut payloads = vec![Json::obj().with("k", "b").with("seq", seq)];
+        payloads.extend(scan.records.into_iter().filter(|r| r.seq > seq).map(|r| r.payload));
+        self.replace_locked(&mut fs, &payloads)
+    }
+
+    /// Rewrite the live log in place: `rewrite` maps the current records
+    /// to replacement payloads, or returns `None` to leave the log
+    /// untouched. Runs entirely under the file mutex with an atomic
+    /// temp-file + rename swap, so concurrent committers simply wait and
+    /// then append to the rewritten file. Seq allocation is untouched —
+    /// callers must only drop or fold *existing* records, never renumber
+    /// or invent seqs. Returns `(bytes_before, records_before,
+    /// bytes_after, records_after)` when a rewrite happened.
+    pub fn rewrite_locked<F>(&self, rewrite: F) -> Result<Option<(u64, u64, u64, u64)>>
+    where
+        F: FnOnce(&[WalRecord]) -> Option<Vec<Json>>,
+    {
+        let mut fs = self.file.lock().unwrap();
+        let scan = read_records(&self.path)?;
+        let (bytes_before, records_before) = (fs.bytes, fs.records);
+        let Some(payloads) = rewrite(&scan.records) else {
+            return Ok(None);
+        };
+        self.replace_locked(&mut fs, &payloads)?;
+        Ok(Some((bytes_before, records_before, fs.bytes, fs.records)))
     }
 
     pub fn stats(&self) -> WalStats {
@@ -797,12 +947,47 @@ mod tests {
         assert_eq!(stats.last_checkpoint_seq, 2);
         assert_eq!(stats.records_since_checkpoint, 1);
         wal.truncate_to_barrier(seq).unwrap();
+        // The commit appended *after* the barrier is not covered by the
+        // snapshot the barrier fences — truncation must keep it.
         let scan = read_records(&path).unwrap();
-        assert_eq!(scan.records.len(), 1);
+        assert_eq!(scan.records.len(), 2);
         assert_eq!(scan.records[0].payload.opt_str("k"), Some("b"));
+        assert_eq!(scan.records[1].seq, 3);
+        assert_eq!(wal.stats().records_since_checkpoint, 1);
         // appends continue with the pre-truncation seq counter
         wal.commit(vec![op(3)]).unwrap();
         let scan = read_records(&path).unwrap();
+        assert_eq!(scan.records[2].seq, 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rewrite_locked_folds_and_preserves_counters() {
+        let path = tmp("rewrite");
+        let wal = Wal::open(&path, WalOptions::default()).unwrap();
+        wal.commit(vec![op(1)]).unwrap();
+        wal.commit(vec![op(2)]).unwrap();
+        wal.commit(vec![op(3)]).unwrap();
+        // fold the three commits down to the last one
+        let res = wal
+            .rewrite_locked(|records| {
+                Some(vec![records.last().unwrap().payload.clone()])
+            })
+            .unwrap()
+            .unwrap();
+        assert_eq!((res.1, res.3), (3, 1), "records 3 -> 1");
+        assert!(res.2 < res.0, "bytes shrank");
+        let stats = wal.stats();
+        assert_eq!(stats.records, 1);
+        assert_eq!(stats.records_since_checkpoint, 1);
+        assert_eq!(stats.next_seq, 4, "seq allocation untouched");
+        // a `None` rewrite leaves the log alone
+        assert!(wal.rewrite_locked(|_| None).unwrap().is_none());
+        // appends continue on the rewritten file
+        wal.commit(vec![op(4)]).unwrap();
+        let scan = read_records(&path).unwrap();
+        assert!(!scan.torn);
+        assert_eq!(scan.records.len(), 2);
         assert_eq!(scan.records[1].seq, 4);
         std::fs::remove_file(&path).ok();
     }

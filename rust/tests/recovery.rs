@@ -14,6 +14,11 @@
 //!   ongoing workload keep passing;
 //! * registry row counters and `add_multi_index` back-fill behave on
 //!   recovered tables (regression guards);
+//! * paged mode (spill-to-disk under `[db] memory_budget`): crashes at
+//!   arbitrary WAL cut points mid-incremental-checkpoint-cycle and
+//!   mid-compaction recover to a commit prefix / fold boundary, and a
+//!   budget-bounded catalog is observationally equal to an unbounded
+//!   one fed identical ops;
 //! * driver housekeeping purges expired auth tokens during a sim run.
 
 use std::path::{Path, PathBuf};
@@ -365,6 +370,202 @@ fn multi_index_backfill_on_recovered_table() {
     assert_eq!(fresh.key_counts(), recovered.meta_index.key_counts());
     assert_eq!(fresh.len(), 4);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// paged mode: spill-to-disk, incremental checkpoints, WAL compaction
+// ---------------------------------------------------------------------
+
+/// Crash mid-incremental-checkpoint cycle. With paged mode on, shard
+/// spill files are routinely *newer* than the manifest's fence —
+/// evictions rewrite them between checkpoints. Cutting the dids WAL at
+/// an arbitrary byte at or past the last maintenance point must
+/// recover exactly a commit-prefix state: the newer shard images plus
+/// idempotent full-row replay can neither invent nor lose a commit.
+#[test]
+fn prop_crash_mid_incremental_checkpoint_recovers_a_commit_prefix() {
+    forall(10, |g| {
+        let dir = tmpdir("incr");
+        let live = seeded(&dir, |cfg| {
+            cfg.set("db", "shards", "4");
+            cfg.set("db", "memory_budget", "6");
+        });
+        let wal_bytes = || live.registry.wal_stats()["dids"].bytes;
+        // dids states at commit granularity; `floor` tracks the WAL
+        // length at the last maintenance op — spill files on disk only
+        // reflect commits at or before it, so cuts at or past the
+        // floor keep "recovered == some commit prefix" exact.
+        let mut states: Vec<Vec<Json>> = vec![table_json(&live.dids)];
+        let mut names: Vec<String> = Vec::new();
+        let mut floor = 0u64;
+        for step in 0..g.usize(15, 60) {
+            match g.usize(0, 6) {
+                0 | 1 | 2 => {
+                    let name = format!("f{step}");
+                    live.add_file("s", &name, "root", 10, "aabbccdd", None).unwrap();
+                    names.push(name);
+                    states.push(table_json(&live.dids));
+                }
+                3 => {
+                    if !names.is_empty() {
+                        let name = names[g.usize(0, names.len())].clone();
+                        live.set_metadata(&DidKey::new("s", &name), "run", "358031").unwrap();
+                        states.push(table_json(&live.dids));
+                    }
+                }
+                4 => {
+                    // incremental checkpoint: only dirty shards rewrite
+                    live.checkpoint_all().unwrap();
+                    floor = wal_bytes();
+                }
+                _ => {
+                    // evictions write shard files newer than the fence
+                    live.enforce_memory_budgets();
+                    floor = wal_bytes();
+                }
+            }
+        }
+        // crash: cut the dids WAL at an arbitrary byte past the floor
+        let wal_path = dir.join("dids.wal");
+        let len = std::fs::metadata(&wal_path).unwrap().len();
+        if len > floor {
+            let cut = g.u64(floor, len + 1);
+            std::fs::OpenOptions::new().write(true).open(&wal_path).unwrap().set_len(cut).unwrap();
+        }
+        let recovered = Catalog::open_with(Clock::sim_at(live.now()), live.cfg.clone()).unwrap();
+        let got = table_json(&recovered.dids);
+        assert!(states.contains(&got), "recovered dids must equal a commit prefix");
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// Crash mid-compaction. After the WAL is folded down to
+/// `[barrier][one commit]`, an arbitrary-byte cut must recover to
+/// either the snapshot-fence state or the fully-folded final state —
+/// the fold collapses intermediate states by design, but must never
+/// *expose* one (or half a folded commit).
+#[test]
+fn prop_crash_mid_compaction_recovers_a_fold_boundary() {
+    forall(12, |g| {
+        let dir = tmpdir("fold");
+        let live = seeded(&dir, |_| {});
+        let limits =
+            |c: &Catalog| (c.get_account_limit("root", "A"), c.get_account_limit("root", "B"));
+        // optionally fence some early churn behind a checkpoint
+        let mut fenced = (None, None);
+        if g.chance(0.6) {
+            for i in 0..g.u64(1, 20) {
+                live.set_account_limit("root", "A", i).unwrap();
+            }
+            live.checkpoint_all().unwrap();
+            fenced = limits(&live);
+        }
+        for _ in 0..g.usize(10, 60) {
+            let rse = if g.bool() { "A" } else { "B" };
+            live.set_account_limit("root", rse, g.u64(0, 1_000_000)).unwrap();
+        }
+        let final_state = limits(&live);
+        let folds = live.compact_wals(0);
+        let cs = &folds["account_limits"];
+        assert!(cs.records_after <= 2, "fold leaves at most barrier + one commit: {cs:?}");
+        assert!(cs.ops_dropped > 0, "overwrite churn folded away: {cs:?}");
+        // crash at an arbitrary byte of the folded log
+        let wal_path = dir.join("account_limits.wal");
+        let len = std::fs::metadata(&wal_path).unwrap().len();
+        let cut = g.u64(0, len + 1);
+        std::fs::OpenOptions::new().write(true).open(&wal_path).unwrap().set_len(cut).unwrap();
+        let recovered = Catalog::open_with(Clock::sim_at(live.now()), live.cfg.clone()).unwrap();
+        let got = limits(&recovered);
+        assert!(
+            got == final_state || got == fenced,
+            "recovered {got:?} must be the fence {fenced:?} or the fold {final_state:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// Spill ≡ memory: a paged catalog under an aggressive hot-row budget,
+/// with maintenance (incremental checkpoints + evictions) interleaved
+/// into the op stream, is observationally equal to an unbounded
+/// catalog fed the identical ops — and so is its cold-booted recovery.
+#[test]
+fn prop_paged_catalog_equals_unbounded_catalog() {
+    forall(6, |g| {
+        let dir_p = tmpdir("paged");
+        let dir_u = tmpdir("unbounded");
+        let paged = seeded(&dir_p, |cfg| {
+            cfg.set("db", "shards", "4");
+            cfg.set("db", "memory_budget", "5");
+        });
+        let plain = seeded(&dir_u, |cfg| cfg.set("db", "shards", "4"));
+        let mut files: Vec<DidKey> = Vec::new();
+        for step in 0..g.usize(30, 90) {
+            match g.usize(0, 8) {
+                0 | 1 | 2 => {
+                    let name = format!("f{step}");
+                    let size = g.u64(1, 1_000_000);
+                    paged.add_file("s", &name, "root", size, "aabbccdd", None).unwrap();
+                    plain.add_file("s", &name, "root", size, "aabbccdd", None).unwrap();
+                    files.push(DidKey::new("s", &name));
+                }
+                3 => {
+                    if let Some(f) = pick(g, &files) {
+                        let rp = paged.set_metadata(&f, "run", "358031").is_ok();
+                        let ru = plain.set_metadata(&f, "run", "358031").is_ok();
+                        assert_eq!(rp, ru, "set_metadata outcome diverged");
+                    }
+                }
+                4 => {
+                    if let Some(f) = pick(g, &files) {
+                        let rse = if g.bool() { "A" } else { "B" };
+                        let st = rucio::core::types::ReplicaState::Available;
+                        let rp = paged.add_replica(rse, &f, st, None).is_ok();
+                        let ru = plain.add_replica(rse, &f, st, None).is_ok();
+                        assert_eq!(rp, ru, "add_replica outcome diverged");
+                    }
+                }
+                5 => {
+                    if let Some(f) = pick(g, &files) {
+                        let rse = if g.bool() { "A" } else { "B" };
+                        let rp = paged.add_rule(RuleSpec::new("root", f.clone(), rse, 1)).is_ok();
+                        let ru = plain.add_rule(RuleSpec::new("root", f, rse, 1)).is_ok();
+                        assert_eq!(rp, ru, "add_rule outcome diverged");
+                    }
+                }
+                6 => {
+                    if let Some(f) = pick(g, &files) {
+                        let rp = paged.erase_did(&f).is_ok();
+                        let ru = plain.erase_did(&f).is_ok();
+                        assert_eq!(rp, ru, "erase_did outcome diverged");
+                    }
+                }
+                _ => {
+                    // maintenance on the paged side only: it must never
+                    // change what readers observe
+                    if g.bool() {
+                        paged.checkpoint_all().unwrap();
+                    }
+                    paged.enforce_memory_budgets();
+                }
+            }
+        }
+        paged.enforce_memory_budgets();
+        assert_catalogs_equal(&paged, &plain);
+        // the budget actually bounds every table's hot set
+        let spill = paged.registry.spill();
+        for (name, s) in &spill {
+            assert!(s.hot_rows <= s.budget, "table {name} over budget after enforcement: {s:?}");
+        }
+        assert!(
+            spill.values().any(|s| s.evictions > 0),
+            "the property must exercise eviction: {spill:?}"
+        );
+        // cold boot of the paged catalog matches too
+        let recovered = Catalog::open_with(Clock::sim_at(paged.now()), paged.cfg.clone()).unwrap();
+        assert_catalogs_equal(&recovered, &plain);
+        std::fs::remove_dir_all(&dir_p).ok();
+        std::fs::remove_dir_all(&dir_u).ok();
+    });
 }
 
 // ---------------------------------------------------------------------
