@@ -1,0 +1,132 @@
+//! Ablation: the auth hot path under account churn — userpass login and
+//! token validation throughput at 1k / 100k provisioned accounts, and
+//! the `(identity, auth_type)` secondary-index lookup against the O(n)
+//! full-table scan it replaced.
+//!
+//! The property under test is *flatness*: with the index, the per-login
+//! cost must not grow with the account population (within 2x from 1k to
+//! 100k accounts), while the scan baseline degrades linearly and shows
+//! why the index exists. Results are written as
+//! `BENCH_abl_auth_churn.json` for the CI artifact upload.
+//!
+//! Sizes shrink under `RUCIO_BENCH_SMOKE` (harness check only — the
+//! numbers are meaningless there and the assertions are skipped).
+
+use rucio::benchkit::{bench_indexed, section, smoke_mode, BenchResult};
+use rucio::common::clock::Clock;
+use rucio::common::config::Config;
+use rucio::core::types::{AccountType, AuthType};
+use rucio::core::Catalog;
+use rucio::jsonx::Json;
+
+/// A catalog with `n` user accounts, each carrying a userpass identity
+/// (`u<i>` / password `pw-<i>`).
+fn rig(n: usize) -> Catalog {
+    let cat = Catalog::new(Clock::sim_at(1_600_000_000_000), Config::new());
+    for i in 0..n {
+        let name = format!("u{i:06}");
+        cat.add_account(&name, AccountType::User, "").unwrap();
+        cat.add_identity(&name, AuthType::UserPass, &name, Some(&format!("pw-{i}")))
+            .unwrap();
+    }
+    cat
+}
+
+/// The pre-index login lookup: a full scan of the identities table for
+/// the `(identity, auth_type)` pair. Kept here (not in the core) purely
+/// as the ablation baseline.
+fn scan_lookup(cat: &Catalog, identity: &str, account: &str) -> bool {
+    cat.identities
+        .filter_map(|row| {
+            (row.identity == identity && row.auth_type == AuthType::UserPass)
+                .then(|| row.account.clone())
+        })
+        .iter()
+        .any(|a| a == account)
+}
+
+fn main() {
+    section("Ablation: auth churn — login/validate throughput vs account count");
+    let sizes: Vec<usize> = if smoke_mode() { vec![100, 400] } else { vec![1_000, 100_000] };
+    let (warmup, iters) = (50, 1_000);
+
+    let mut results = Json::obj().with("bench", "abl_auth_churn");
+    let mut logins: Vec<(usize, BenchResult)> = Vec::new();
+
+    for &n in &sizes {
+        let cat = rig(n);
+        let names: Vec<String> = (0..n).map(|i| format!("u{i:06}")).collect();
+
+        // --- login: credential check + token issue (indexed path) -----
+        let login = bench_indexed(&format!("login ({n} accounts)"), warmup, iters, |i| {
+            let k = i % n;
+            cat.auth_userpass(&names[k], &names[k], &format!("pw-{k}")).unwrap();
+        });
+        results.set(&format!("login_{n}_per_op_ns"), login.mean_ns);
+        results.set(&format!("login_{n}_ops_per_sec"), login.ops_per_sec());
+
+        // --- validate: the per-request hot path ------------------------
+        let tokens: Vec<String> = (0..256)
+            .map(|i| {
+                let k = i % n;
+                cat.auth_userpass(&names[k], &names[k], &format!("pw-{k}")).unwrap().token
+            })
+            .collect();
+        let validate = bench_indexed(&format!("validate ({n} accounts)"), warmup, iters, |i| {
+            cat.validate_token(&tokens[i % tokens.len()]).unwrap();
+        });
+        results.set(&format!("validate_{n}_per_op_ns"), validate.mean_ns);
+        results.set(&format!("validate_{n}_ops_per_sec"), validate.ops_per_sec());
+
+        // --- identity lookup: secondary index vs O(n) scan -------------
+        let indexed = bench_indexed(&format!("lookup indexed ({n})"), warmup, iters, |i| {
+            let k = i % n;
+            let hit = cat
+                .identities_by_key
+                .get(&(names[k].clone(), AuthType::UserPass))
+                .iter()
+                .any(|(_, _, a)| a == &names[k]);
+            assert!(hit);
+        });
+        let scan_iters = iters.min(200);
+        let scan = bench_indexed(&format!("lookup scan ({n})"), 5, scan_iters, |i| {
+            let k = i % n;
+            assert!(scan_lookup(&cat, &names[k], &names[k]));
+        });
+        results.set(&format!("lookup_indexed_{n}_per_op_ns"), indexed.mean_ns);
+        results.set(&format!("lookup_scan_{n}_per_op_ns"), scan.mean_ns);
+
+        if !smoke_mode() {
+            assert!(
+                indexed.mean_ns < scan.mean_ns,
+                "index lookup must beat the full scan at {n} accounts \
+                 ({:.0} vs {:.0} ns/op)",
+                indexed.mean_ns,
+                scan.mean_ns
+            );
+        }
+        logins.push((n, login));
+        println!();
+    }
+
+    // Flatness: login cost must not follow the account population.
+    let (n0, small) = &logins[0];
+    let (n1, large) = &logins[logins.len() - 1];
+    let growth = large.mean_ns / small.mean_ns.max(1e-9);
+    println!(
+        "login cost {n0} → {n1} accounts: {growth:.2}x \
+         ({:.0} vs {:.0} logins/s)",
+        small.ops_per_sec(),
+        large.ops_per_sec()
+    );
+    if !smoke_mode() {
+        assert!(
+            growth < 2.0,
+            "indexed login must stay flat (within 2x) from {n0} to {n1} accounts \
+             (got {growth:.2}x)"
+        );
+    }
+
+    std::fs::write("BENCH_abl_auth_churn.json", results.to_string()).unwrap();
+    println!("abl_auth_churn bench OK (BENCH_abl_auth_churn.json written)");
+}

@@ -23,7 +23,7 @@ use rucio::core::types::RuleState;
 use rucio::sim::driver::standard_driver;
 use rucio::sim::grid::GridSpec;
 use rucio::sim::scenario::{Event, Scenario};
-use rucio::sim::workload::WorkloadSpec;
+use rucio::sim::workload::{MultiVoSpec, WorkloadSpec};
 
 fn main() {
     rucio::common::logx::init(0);
@@ -36,6 +36,11 @@ fn main() {
     // durability: WAL every mutation, checkpoint every 4 virtual hours
     cfg.set("db", "wal_dir", wal_dir.to_string_lossy().to_string());
     cfg.set("db", "checkpoint_interval", "4h");
+    // three tenants share the instance; the throttler splits link slots
+    // across them 3:2:1 before the per-activity shares apply
+    cfg.set("throttler", "vo_share.atlas", "3");
+    cfg.set("throttler", "vo_share.cms", "2");
+    cfg.set("throttler", "vo_share.belle", "1");
     let mut driver = standard_driver(
         &GridSpec { t2_per_region: 1, seed, ..Default::default() },
         WorkloadSpec {
@@ -44,6 +49,13 @@ fn main() {
             median_file_bytes: 800_000_000,
             derivations_per_day: 4,
             analysis_accesses_per_day: 60,
+            multi_vo: Some(MultiVoSpec {
+                vos: vec!["atlas".into(), "cms".into(), "belle".into()],
+                accounts_per_vo: 400,
+                rules_per_day: 48,
+                logins_per_day: 96,
+                zipf_theta: 1.2,
+            }),
             seed: seed ^ 0xA0D,
             ..Default::default()
         },
@@ -151,6 +163,12 @@ fn main() {
         cat.metrics.counter("replicas.declared_bad"),
         cat.metrics.counter("rules.repaired"),
     );
+    let roll = cat.vo_usage();
+    let tenants: Vec<String> = roll
+        .iter()
+        .map(|(vo, (b, f))| format!("{vo}: {:.1} GB / {f} files", *b as f64 / 1e9))
+        .collect();
+    println!("per-VO usage: {}", tenants.join(" | "));
     println!(
         "invariant checks: {} samples, {} violations",
         driver.samples.len(),

@@ -104,6 +104,21 @@ pub fn account_accounting(catalog: &Catalog) -> Vec<Vec<String>> {
     rows
 }
 
+/// VO usage accounting (multi-tenant management report): per (VO, RSE)
+/// → (bytes, files) rolled up from account usage via each account's VO.
+/// Rows: `[vo, rse, bytes, files]`, plus one `[vo, *, bytes, files]`
+/// total row per VO.
+pub fn vo_accounting(catalog: &Catalog) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for ((vo, rse), (bytes, files)) in catalog.vo_usage_by_rse() {
+        rows.push(vec![vo, rse, bytes.to_string(), files.to_string()]);
+    }
+    for (vo, (bytes, files)) in catalog.vo_usage() {
+        rows.push(vec![vo, "*".to_string(), bytes.to_string(), files.to_string()]);
+    }
+    rows
+}
+
 /// Weekly "suspicious and lost files" list (site-admin report).
 pub fn problem_files(catalog: &Catalog) -> Vec<Vec<String>> {
     let mut rows = Vec::new();
@@ -381,6 +396,34 @@ mod tests {
         assert_eq!(get("Production")[4], "100", "bytes of the done transfer");
         assert_eq!(get("Production")[5], "5000", "avg wait in ms");
         assert_eq!(get("Analysis")[1..4], ["0", "0", "1"].map(String::from));
+    }
+
+    #[test]
+    fn vo_accounting_rolls_up_by_tenant() {
+        use crate::core::rse::Rse;
+        use crate::core::rules_api::RuleSpec;
+        use crate::core::types::{AccountType, DidKey, ReplicaState};
+        let c = Catalog::new_for_tests();
+        c.add_rse(Rse::new("A", c.now())).unwrap();
+        c.add_account_vo("at1", AccountType::User, "", "atlas").unwrap();
+        c.add_scope("s-atlas", "at1").unwrap();
+        c.add_file("s-atlas", "f", "at1", 70, "x", None).unwrap();
+        c.add_replica("A", &DidKey::new("s-atlas", "f"), ReplicaState::Available, None)
+            .unwrap();
+        c.add_rule(RuleSpec::new("at1", DidKey::new("s-atlas", "f"), "A", 1)).unwrap();
+        let rows = vo_accounting(&c);
+        assert!(rows.contains(&vec![
+            "atlas".to_string(),
+            "A".to_string(),
+            "70".to_string(),
+            "1".to_string()
+        ]));
+        assert!(rows.contains(&vec![
+            "atlas".to_string(),
+            "*".to_string(),
+            "70".to_string(),
+            "1".to_string()
+        ]));
     }
 
     #[test]

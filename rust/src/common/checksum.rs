@@ -245,9 +245,39 @@ pub fn hmac_sha256_hex(key: &[u8], msg: &[u8]) -> String {
     hmac_sha256(key, msg).iter().map(|b| format!("{b:02x}")).collect()
 }
 
+/// Constant-time equality for secret material (HMAC signatures, token
+/// secrets). An early-exit `==` leaks the length of the matching prefix
+/// through timing; this XOR-accumulates over every byte so comparison
+/// time depends only on the input lengths. Length mismatch still returns
+/// early — lengths of hex digests are public.
+pub fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b.iter()) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn constant_time_eq_matches_plain_eq() {
+        assert!(constant_time_eq(b"", b""));
+        assert!(constant_time_eq(b"abcdef", b"abcdef"));
+        assert!(!constant_time_eq(b"abcdef", b"abcdeg"));
+        assert!(!constant_time_eq(b"abcdef", b"Xbcdef"));
+        assert!(!constant_time_eq(b"short", b"longer"));
+        let h1 = hmac_sha256_hex(b"k", b"m");
+        let h2 = hmac_sha256_hex(b"k", b"m");
+        let h3 = hmac_sha256_hex(b"k", b"n");
+        assert!(constant_time_eq(h1.as_bytes(), h2.as_bytes()));
+        assert!(!constant_time_eq(h1.as_bytes(), h3.as_bytes()));
+    }
 
     // RFC 1321 appendix A.5 test suite.
     #[test]

@@ -1,7 +1,36 @@
 //! Accounts, identities, authentication, tokens, and the permission
-//! policy (paper §2.3 + §4.1).
+//! policy (paper §2.3 + §4.1), extended with multi-VO tenancy (the
+//! ESCAPE data-lake deployment model: one catalog, many communities).
+//!
+//! # Multi-VO model
+//!
+//! Every account, scope, and token carries a `vo` (virtual
+//! organisation). Scopes inherit the VO of their owning account, tokens
+//! pin the VO of the account at issue time, and the permission layer
+//! rejects any scope-targeted action that crosses a VO boundary. Admins
+//! are VO-scoped: an `admin` account administers only its own VO, except
+//! admins of the default VO ([`DEFAULT_VO`]) who operate the whole
+//! instance (the `root` super-admin). A VO can be switched off with
+//! config `[vo] active.<name> = false`; token issue *and* every
+//! validation re-check it, so deactivation revokes an entire community
+//! at once.
+//!
+//! Fair shares nest per-VO: the throttler runs a two-level deficit
+//! round-robin per network link — the outer level splits link slots
+//! across VOs by `[throttler] vo_share.<vo>` weights, the inner level
+//! splits each VO's allocation across activities by
+//! `[throttler] share.<activity>`. A small VO with a large share weight
+//! is therefore protected from a large VO's backlog no matter which
+//! activities either runs.
+//!
+//! # Auth hot path
+//!
+//! Logins resolve identities through the `(identity, auth_type)`
+//! secondary index (or a primary-key point get when the account is
+//! already known) — never a table scan — and secret comparisons
+//! (SSH signatures, token equality) use constant-time equality.
 
-use crate::common::checksum::hmac_sha256_hex;
+use crate::common::checksum::{constant_time_eq, hmac_sha256_hex};
 use crate::common::clock::HOUR_MS;
 use crate::common::error::{Result, RucioError};
 use crate::common::idgen::hex_token;
@@ -35,8 +64,21 @@ impl Catalog {
     // accounts
     // ------------------------------------------------------------------
 
+    /// Create an account in the default VO (single-tenant deployments).
     pub fn add_account(&self, name: &str, account_type: AccountType, email: &str) -> Result<()> {
+        self.add_account_vo(name, account_type, email, DEFAULT_VO)
+    }
+
+    /// Create an account inside a VO; the home scope inherits the VO.
+    pub fn add_account_vo(
+        &self,
+        name: &str,
+        account_type: AccountType,
+        email: &str,
+        vo: &str,
+    ) -> Result<()> {
         validate_name(name, 25)?;
+        validate_name(vo, 25)?;
         let now = self.now();
         self.accounts.insert(
             Account {
@@ -46,6 +88,7 @@ impl Catalog {
                 created_at: now,
                 suspended: false,
                 admin: false,
+                vo: vo.to_string(),
             },
             now,
         )?;
@@ -56,11 +99,27 @@ impl Catalog {
             AccountType::Service => name.to_string(),
         };
         let _ = self.scopes.insert(
-            Scope { name: scope_name, account: name.to_string(), created_at: now },
+            Scope {
+                name: scope_name,
+                account: name.to_string(),
+                created_at: now,
+                vo: vo.to_string(),
+            },
             now,
         );
         self.metrics.incr("accounts.added", 1);
         Ok(())
+    }
+
+    /// Is a VO accepting logins? Config `[vo] active.<name> = false`
+    /// deactivates a whole community (checked at issue *and* validation).
+    pub fn vo_active(&self, vo: &str) -> bool {
+        self.cfg.get_bool("vo", &format!("active.{vo}"), true)
+    }
+
+    /// VO of an account (the tenant every action is attributed to).
+    pub fn account_vo(&self, account: &str) -> Result<String> {
+        Ok(self.get_account(account)?.vo)
     }
 
     pub fn get_account(&self, name: &str) -> Result<Account> {
@@ -111,11 +170,40 @@ impl Catalog {
         Ok(())
     }
 
-    /// Accounts an identity may act as (non-cloning projection).
+    /// Unmap an identity from an account (index maintenance mirrors
+    /// [`Catalog::add_identity`]).
+    pub fn remove_identity(
+        &self,
+        identity: &str,
+        auth_type: AuthType,
+        account: &str,
+    ) -> Result<()> {
+        self.identities
+            .remove(
+                &(identity.to_string(), auth_type, account.to_string()),
+                self.now(),
+            )
+            .ok_or_else(|| {
+                RucioError::InvalidObject(format!("no {} identity {identity} for {account}", auth_type.as_str()))
+            })?;
+        Ok(())
+    }
+
+    /// Accounts an identity may act as — an `(identity, auth_type)`
+    /// index probe; the primary key's third component is the account.
     pub fn identity_accounts(&self, identity: &str, auth_type: AuthType) -> Vec<String> {
-        self.identities.filter_map(|i| {
-            (i.identity == identity && i.auth_type == auth_type).then(|| i.account.clone())
-        })
+        self.identities_by_key
+            .get(&(identity.to_string(), auth_type))
+            .into_iter()
+            .map(|(_, _, account)| account)
+            .collect()
+    }
+
+    /// Point lookup of one identity row on the login path: the primary
+    /// key is `(identity, auth_type, account)`, so when the account is
+    /// named by the client this is a single O(log n) get — no scan.
+    fn identity_for(&self, identity: &str, auth_type: AuthType, account: &str) -> Option<Identity> {
+        self.identities.get(&(identity.to_string(), auth_type, account.to_string()))
     }
 
     fn hash_secret(&self, identity: &str, secret: &str) -> String {
@@ -128,15 +216,14 @@ impl Catalog {
 
     /// Username/password authentication (native implementation, §4.1).
     pub fn auth_userpass(&self, account: &str, username: &str, password: &str) -> Result<Token> {
-        let matches = self.identities.scan(|i| {
-            i.identity == username && i.auth_type == AuthType::UserPass && i.account == account
-        });
-        let Some(id) = matches.first() else {
+        let Some(id) = self.identity_for(username, AuthType::UserPass, account) else {
             return Err(RucioError::CannotAuthenticate(format!(
                 "no userpass identity {username} for account {account}"
             )));
         };
-        if id.secret.as_deref() != Some(self.hash_secret(username, password).as_str()) {
+        let supplied = self.hash_secret(username, password);
+        let stored = id.secret.as_deref().unwrap_or("");
+        if !constant_time_eq(stored.as_bytes(), supplied.as_bytes()) {
             return Err(RucioError::CannotAuthenticate("wrong credentials".into()));
         }
         self.issue_token(account)
@@ -157,14 +244,11 @@ impl Catalog {
     /// here the "signature" is an HMAC with the registered key material
     /// (cryptographic transport is out of scope for the simulation).
     pub fn auth_ssh(&self, account: &str, key_id: &str, signature: &str) -> Result<Token> {
-        let matches = self.identities.scan(|i| {
-            i.identity == key_id && i.auth_type == AuthType::Ssh && i.account == account
-        });
-        let Some(id) = matches.first() else {
+        let Some(id) = self.identity_for(key_id, AuthType::Ssh, account) else {
             return Err(RucioError::CannotAuthenticate(format!("unknown ssh key {key_id}")));
         };
         let expected = self.hash_secret(key_id, id.secret.as_deref().unwrap_or(""));
-        if signature != expected {
+        if !constant_time_eq(signature.as_bytes(), expected.as_bytes()) {
             return Err(RucioError::CannotAuthenticate("bad ssh signature".into()));
         }
         self.issue_token(account)
@@ -176,10 +260,15 @@ impl Catalog {
     }
 
     fn auth_by_identity(&self, account: &str, identity: &str, t: AuthType) -> Result<Token> {
-        let ok = self
-            .identities
-            .scan(|i| i.identity == identity && i.auth_type == t && i.account == account);
-        if ok.is_empty() {
+        // `(identity, auth_type)` index probe instead of a table scan:
+        // the candidate set is every account this identity maps to, and
+        // the primary key carries the account name.
+        let can_act = self
+            .identities_by_key
+            .get(&(identity.to_string(), t))
+            .iter()
+            .any(|(_, _, a)| a == account);
+        if !can_act {
             return Err(RucioError::CannotAuthenticate(format!(
                 "identity {identity} cannot act as {account}"
             )));
@@ -192,6 +281,9 @@ impl Catalog {
         if acc.suspended {
             return Err(RucioError::CannotAuthenticate(format!("account {account} suspended")));
         }
+        if !self.vo_active(&acc.vo) {
+            return Err(RucioError::CannotAuthenticate(format!("VO {} inactive", acc.vo)));
+        }
         let now = self.now();
         let lifetime = self.cfg.get_duration_ms("auth", "token_lifetime", HOUR_MS);
         let token = Token {
@@ -199,6 +291,7 @@ impl Catalog {
             account: account.to_string(),
             expires_at: now + lifetime,
             issued_at: now,
+            vo: acc.vo,
         };
         self.tokens.insert(token.clone(), now)?;
         self.metrics.incr("auth.tokens_issued", 1);
@@ -206,15 +299,41 @@ impl Catalog {
     }
 
     /// Validate an `X-Rucio-Auth-Token`; returns the account.
+    ///
+    /// Every validation — not only issue — re-checks account suspension
+    /// and VO active status, so suspending an account (or deactivating a
+    /// VO) revokes its outstanding tokens immediately instead of leaving
+    /// them live until expiry.
     pub fn validate_token(&self, token: &str) -> Result<String> {
+        self.validate_token_vo(token).map(|(account, _vo)| account)
+    }
+
+    /// [`Catalog::validate_token`] returning `(account, vo)` — the REST
+    /// layer needs the VO on every request for tenant isolation.
+    pub fn validate_token_vo(&self, token: &str) -> Result<(String, String)> {
         let t = self
             .tokens
             .get(&token.to_string())
             .ok_or_else(|| RucioError::CannotAuthenticate("unknown token".into()))?;
+        // defense in depth: the final equality on the secret is constant
+        // time even though the point get already matched on the key
+        if !constant_time_eq(t.token.as_bytes(), token.as_bytes()) {
+            return Err(RucioError::CannotAuthenticate("unknown token".into()));
+        }
         if t.expires_at < self.now() {
             return Err(RucioError::CannotAuthenticate("token expired".into()));
         }
-        Ok(t.account)
+        let acc = self.get_account(&t.account)?;
+        if acc.suspended {
+            return Err(RucioError::CannotAuthenticate(format!(
+                "account {} suspended",
+                t.account
+            )));
+        }
+        if !self.vo_active(&acc.vo) {
+            return Err(RucioError::CannotAuthenticate(format!("VO {} inactive", acc.vo)));
+        }
+        Ok((t.account, acc.vo))
     }
 
     /// Drop expired tokens (housekeeping daemon path): non-cloning key
@@ -238,6 +357,19 @@ impl Catalog {
     /// config keys `permissions.<action> = admin|any`.
     pub fn check_permission(&self, account: &str, action: Action, scope: Option<&str>) -> Result<()> {
         let acc = self.get_account(account)?;
+        // Tenant isolation precedes everything, including the admin
+        // bypass: a scope-targeted action must stay inside the caller's
+        // VO. Only default-VO admins (the instance operators) cross.
+        if let Some(s) = scope {
+            if let Some(sc) = self.scopes.get(&s.to_string()) {
+                if sc.vo != acc.vo && !(acc.admin && acc.vo == DEFAULT_VO) {
+                    return Err(RucioError::AccessDenied(format!(
+                        "{account} (VO {}) may not {action:?} on scope {s} (VO {})",
+                        acc.vo, sc.vo
+                    )));
+                }
+            }
+        }
         if acc.admin {
             return Ok(());
         }
@@ -386,6 +518,64 @@ mod tests {
         let c = catalog_with_alice();
         c.suspend_account("alice").unwrap();
         assert!(c.auth_userpass("alice", "alice", "hunter2").is_err());
+    }
+
+    #[test]
+    fn suspension_revokes_outstanding_tokens() {
+        let c = catalog_with_alice();
+        let tok = c.auth_userpass("alice", "alice", "hunter2").unwrap();
+        assert_eq!(c.validate_token(&tok.token).unwrap(), "alice");
+        c.suspend_account("alice").unwrap();
+        // the already-issued token dies with the suspension, immediately
+        assert!(c.validate_token(&tok.token).is_err());
+    }
+
+    #[test]
+    fn vo_deactivation_revokes_tokens_and_logins() {
+        let mut c = Catalog::new_for_tests();
+        c.add_account_vo("carol", AccountType::User, "c@x", "cms").unwrap();
+        c.add_identity("carol", AuthType::UserPass, "carol", Some("pw")).unwrap();
+        let tok = c.auth_userpass("carol", "carol", "pw").unwrap();
+        assert_eq!(tok.vo, "cms");
+        assert_eq!(c.validate_token_vo(&tok.token).unwrap(), ("carol".into(), "cms".into()));
+        c.cfg.set("vo", "active.cms", "false");
+        assert!(c.validate_token(&tok.token).is_err(), "existing token revoked");
+        assert!(c.auth_userpass("carol", "carol", "pw").is_err(), "new logins refused");
+    }
+
+    #[test]
+    fn identity_index_maintained_across_add_and_remove() {
+        let c = catalog_with_alice();
+        c.add_account("prod", AccountType::Service, "p@x").unwrap();
+        let dn = "/DC=ch/CN=Alice";
+        c.add_identity(dn, AuthType::X509, "alice", None).unwrap();
+        c.add_identity(dn, AuthType::X509, "prod", None).unwrap();
+        let probe = (dn.to_string(), AuthType::X509);
+        assert_eq!(c.identities_by_key.count(&probe), 2);
+        assert!(c.auth_x509("prod", dn).is_ok());
+        c.remove_identity(dn, AuthType::X509, "prod").unwrap();
+        assert_eq!(c.identities_by_key.count(&probe), 1, "index entry removed");
+        assert!(c.auth_x509("prod", dn).is_err(), "removed mapping no longer authenticates");
+        assert!(c.auth_x509("alice", dn).is_ok(), "sibling mapping untouched");
+        assert!(c.remove_identity(dn, AuthType::X509, "prod").is_err(), "double remove");
+        // userpass entries live under a distinct index key
+        assert_eq!(c.identities_by_key.count(&("alice".into(), AuthType::UserPass)), 1);
+    }
+
+    #[test]
+    fn cross_vo_permissions_denied() {
+        let c = Catalog::new_for_tests();
+        c.add_account_vo("a1", AccountType::User, "a@x", "atlas").unwrap();
+        c.add_account_vo("c1", AccountType::User, "c@x", "cms").unwrap();
+        // own-VO scope writes work; foreign-VO scope writes are denied
+        assert!(c.check_permission("a1", Action::AddDid, Some("user.a1")).is_ok());
+        assert!(c.check_permission("c1", Action::AddDid, Some("user.a1")).is_err());
+        // a VO admin stays confined to its VO...
+        c.set_admin("c1", true).unwrap();
+        assert!(c.check_permission("c1", Action::AddDid, Some("user.a1")).is_err());
+        assert!(c.check_permission("c1", Action::AddDid, Some("user.c1")).is_ok());
+        // ...while the default-VO root crosses (instance operator)
+        assert!(c.check_permission("root", Action::AddDid, Some("user.a1")).is_ok());
     }
 
     #[test]

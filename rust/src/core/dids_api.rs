@@ -24,10 +24,16 @@ impl Catalog {
 
     pub fn add_scope(&self, scope: &str, account: &str) -> Result<()> {
         validate_name(scope, 30)?;
-        self.get_account(account)?;
+        // the scope inherits the VO of its owning account (tenant boundary)
+        let owner = self.get_account(account)?;
         let now = self.now();
         self.scopes.insert(
-            Scope { name: scope.to_string(), account: account.to_string(), created_at: now },
+            Scope {
+                name: scope.to_string(),
+                account: account.to_string(),
+                created_at: now,
+                vo: owner.vo,
+            },
             now,
         )?;
         Ok(())

@@ -51,6 +51,9 @@ pub struct Catalog {
     // --- accounts & auth (paper §2.3, §4.1)
     pub accounts: Table<Account>,
     pub identities: Table<Identity>,
+    /// Login hot path: `(identity, auth_type)` → candidate identity rows,
+    /// so authentication never scans the whole identities table.
+    pub identities_by_key: Index<Identity, (String, AuthType)>,
     pub tokens: Table<Token>,
 
     // --- namespace (paper §2.2)
@@ -286,6 +289,11 @@ impl Catalog {
         requests.add_index(&requests_by_state).unwrap();
         requests.add_index(&requests_by_dest).unwrap();
 
+        let identities = Table::new("identities").with_shards(shards);
+        let identities_by_key =
+            Index::new(|i: &Identity| Some((i.identity.clone(), i.auth_type)));
+        identities.add_index(&identities_by_key).unwrap();
+
         let catalog = Catalog {
             clock,
             cfg,
@@ -294,7 +302,8 @@ impl Catalog {
             rng: Mutex::new(Prng::new(seed)),
             token_salt: seed ^ 0xDEAD_BEEF_CAFE,
             accounts: Table::new("accounts").with_shards(shards),
-            identities: Table::new("identities").with_shards(shards),
+            identities,
+            identities_by_key,
             tokens: Table::new("tokens").with_shards(shards),
             scopes: Table::new("scopes").with_shards(shards),
             dids,
@@ -577,11 +586,17 @@ impl Catalog {
                 created_at: now,
                 suspended: false,
                 admin: true,
+                vo: DEFAULT_VO.into(),
             },
             now,
         );
         let _ = self.scopes.insert(
-            Scope { name: "root".into(), account: "root".into(), created_at: now },
+            Scope {
+                name: "root".into(),
+                account: "root".into(),
+                created_at: now,
+                vo: DEFAULT_VO.into(),
+            },
             now,
         );
     }

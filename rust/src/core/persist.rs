@@ -573,6 +573,7 @@ impl Durable for Account {
             .with("created_at", self.created_at)
             .with("suspended", self.suspended)
             .with("admin", self.admin)
+            .with("vo", self.vo.as_str())
     }
 
     fn row_from_json(j: &Json) -> Result<Self> {
@@ -583,6 +584,8 @@ impl Durable for Account {
             created_at: j.req_i64("created_at")?,
             suspended: req_bool(j, "suspended")?,
             admin: req_bool(j, "admin")?,
+            // pre-multi-VO WALs/snapshots carry no vo: default VO
+            vo: opt_string(j, "vo").unwrap_or_else(|| DEFAULT_VO.to_string()),
         })
     }
 
@@ -633,6 +636,7 @@ impl Durable for Token {
             .with("account", self.account.as_str())
             .with("expires_at", self.expires_at)
             .with("issued_at", self.issued_at)
+            .with("vo", self.vo.as_str())
     }
 
     fn row_from_json(j: &Json) -> Result<Self> {
@@ -641,6 +645,7 @@ impl Durable for Token {
             account: req_string(j, "account")?,
             expires_at: j.req_i64("expires_at")?,
             issued_at: j.req_i64("issued_at")?,
+            vo: opt_string(j, "vo").unwrap_or_else(|| DEFAULT_VO.to_string()),
         })
     }
 
@@ -769,6 +774,7 @@ impl Durable for Scope {
             .with("name", self.name.as_str())
             .with("account", self.account.as_str())
             .with("created_at", self.created_at)
+            .with("vo", self.vo.as_str())
     }
 
     fn row_from_json(j: &Json) -> Result<Self> {
@@ -776,6 +782,7 @@ impl Durable for Scope {
             name: req_string(j, "name")?,
             account: req_string(j, "account")?,
             created_at: j.req_i64("created_at")?,
+            vo: opt_string(j, "vo").unwrap_or_else(|| DEFAULT_VO.to_string()),
         })
     }
 
@@ -1160,6 +1167,7 @@ mod tests {
             created_at: 3,
             suspended: false,
             admin: false,
+            vo: "atlas".into(),
         });
         rt(&Identity {
             identity: "CN=Alice/O=CERN".into(),
@@ -1178,6 +1186,7 @@ mod tests {
             account: "alice".into(),
             expires_at: 10,
             issued_at: 5,
+            vo: "atlas".into(),
         });
         rt(&AccountLimit { account: "alice".into(), rse: "CERN-DISK".into(), bytes: 1u64 << 40 });
         rt(&AccountUsage {
@@ -1188,11 +1197,42 @@ mod tests {
         });
     }
 
+    /// WALs and snapshots written before the multi-VO change carry no
+    /// `vo` key: accounts, tokens, and scopes must decode into the
+    /// default VO rather than failing recovery.
+    #[test]
+    fn pre_multi_vo_rows_decode_into_default_vo() {
+        let acc = Account::row_from_json(
+            &Json::parse(
+                concat!(
+                    r#"{"name":"alice","account_type":"USER","email":"","#,
+                    r#""created_at":1,"suspended":false,"admin":false}"#
+                ),
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(acc.vo, crate::core::types::DEFAULT_VO);
+        let tok = Token::row_from_json(
+            &Json::parse(
+                r#"{"token":"alice-01","account":"alice","expires_at":10,"issued_at":5}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(tok.vo, crate::core::types::DEFAULT_VO);
+        let sc = Scope::row_from_json(
+            &Json::parse(r#"{"name":"data18","account":"root","created_at":0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sc.vo, crate::core::types::DEFAULT_VO);
+    }
+
     #[test]
     fn namespace_and_misc_round_trips() {
         rt(&Attachment { parent: DidKey::new("data18", "ds"), child: key(), created_at: 1 });
         rt(&NameTombstone { key: key(), deleted_at: 9 });
-        rt(&Scope { name: "data18".into(), account: "root".into(), created_at: 0 });
+        rt(&Scope { name: "data18".into(), account: "root".into(), created_at: 0, vo: "def".into() });
         rt(&Popularity {
             did: key(),
             accesses: 12,

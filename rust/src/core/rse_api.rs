@@ -1,13 +1,15 @@
 //! RSE registry operations: registration, attributes, protocols,
-//! distances, and RSE-expression resolution (paper §2.4).
+//! distances, RSE-expression resolution (paper §2.4), and the per-VO
+//! usage rollups multi-tenant accounting is built on.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::common::error::{Result, RucioError};
 
 use super::accounts_api::validate_name;
 use super::rse::{ranking_from_throughput, Distance, Rse};
 use super::rseexpr::{self, RseUniverse};
+use super::types::DEFAULT_VO;
 use super::Catalog;
 
 impl Catalog {
@@ -162,6 +164,45 @@ impl Catalog {
         }
         updated
     }
+
+    // ------------------------------------------------------------------
+    // per-VO rollups (multi-tenant accounting)
+    // ------------------------------------------------------------------
+
+    /// Per-VO usage rollup: account usage rows summed by the owning
+    /// account's VO. Usage rows whose account vanished are attributed to
+    /// the default VO so nothing silently drops out of the totals.
+    pub fn vo_usage(&self) -> BTreeMap<String, (u64, u64)> {
+        let mut out: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        for ((vo, _), (bytes, files)) in self.vo_usage_by_rse() {
+            let e = out.entry(vo).or_insert((0, 0));
+            e.0 += bytes;
+            e.1 += files;
+        }
+        out
+    }
+
+    /// Per-(VO, RSE) usage rollup — the tenant-level view that quota
+    /// reports and the multi-VO invariants are built on.
+    pub fn vo_usage_by_rse(&self) -> BTreeMap<(String, String), (u64, u64)> {
+        let mut account_vo: BTreeMap<String, String> = BTreeMap::new();
+        let mut out: BTreeMap<(String, String), (u64, u64)> = BTreeMap::new();
+        self.usages.for_each(|u| {
+            let vo = account_vo
+                .entry(u.account.clone())
+                .or_insert_with(|| {
+                    self.accounts
+                        .get(&u.account)
+                        .map(|a| a.vo)
+                        .unwrap_or_else(|| DEFAULT_VO.to_string())
+                })
+                .clone();
+            let e = out.entry((vo, u.rse.clone())).or_insert((0, 0));
+            e.0 += u.bytes;
+            e.1 += u.files;
+        });
+        out
+    }
 }
 
 struct CatalogUniverse<'a> {
@@ -267,6 +308,37 @@ mod tests {
         c.set_rse_availability("DESY", true, false, false).unwrap();
         let r = c.get_rse("DESY").unwrap();
         assert!(r.availability_read && !r.availability_write && !r.availability_delete);
+    }
+
+    #[test]
+    fn vo_usage_rolls_up_by_tenant() {
+        use crate::core::rules_api::RuleSpec;
+        use crate::core::types::{AccountType, DidKey, ReplicaState};
+        let c = Catalog::new_for_tests();
+        let now = c.now();
+        c.add_rse(Rse::new("DISK-1", now)).unwrap();
+        c.add_account_vo("at1", AccountType::User, "", "atlas").unwrap();
+        c.add_account_vo("cm1", AccountType::User, "", "cms").unwrap();
+        c.add_scope("s-atlas", "at1").unwrap();
+        c.add_scope("s-cms", "cm1").unwrap();
+        for (scope, owner, n) in [("s-atlas", "at1", 2), ("s-cms", "cm1", 1)] {
+            for i in 0..n {
+                let key = DidKey::new(scope, &format!("f{i}"));
+                c.add_file(scope, &format!("f{i}"), owner, 100, "aabbccdd", None).unwrap();
+                c.add_replica("DISK-1", &key, ReplicaState::Available, None).unwrap();
+                c.add_rule(RuleSpec::new(owner, key, "DISK-1", 1)).unwrap();
+            }
+        }
+        let roll = c.vo_usage();
+        assert_eq!(roll.get("atlas"), Some(&(200, 2)));
+        assert_eq!(roll.get("cms"), Some(&(100, 1)));
+        let by_rse = c.vo_usage_by_rse();
+        assert_eq!(by_rse.get(&("atlas".into(), "DISK-1".into())), Some(&(200, 2)));
+        // Σ per-VO == global
+        let total: u64 = roll.values().map(|(b, _)| *b).sum();
+        let mut global = 0;
+        c.usages.for_each(|u| global += u.bytes);
+        assert_eq!(total, global);
     }
 
     #[test]

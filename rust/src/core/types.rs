@@ -501,6 +501,10 @@ pub enum AccountType {
     Service,
 }
 
+/// The default virtual organisation: single-VO deployments run every
+/// account under it (Rucio's convention for the pre-multi-VO world).
+pub const DEFAULT_VO: &str = "def";
+
 #[derive(Debug, Clone)]
 pub struct Account {
     pub name: String,
@@ -510,8 +514,12 @@ pub struct Account {
     /// Suspended accounts cannot authenticate.
     pub suspended: bool,
     /// Admin accounts bypass the default permission policy ("privileged
-    /// accounts can circumvent this restriction", §2.3).
+    /// accounts can circumvent this restriction", §2.3). Admin is scoped
+    /// to the account's VO unless the VO is [`DEFAULT_VO`].
     pub admin: bool,
+    /// Virtual organisation the account belongs to (multi-VO tenancy,
+    /// ESCAPE data-lake deployment model).
+    pub vo: String,
 }
 
 impl Row for Account {
@@ -577,6 +585,9 @@ pub struct Token {
     pub account: String,
     pub expires_at: EpochMs,
     pub issued_at: EpochMs,
+    /// VO of the issuing account, pinned at issue time so every later
+    /// validation can enforce tenant isolation without a second lookup.
+    pub vo: String,
 }
 
 impl Row for Token {
@@ -830,6 +841,9 @@ pub struct Scope {
     pub name: String,
     pub account: String,
     pub created_at: EpochMs,
+    /// VO owning the scope; scope names are globally unique but every
+    /// scope belongs to exactly one VO (tenant isolation boundary).
+    pub vo: String,
 }
 
 impl Row for Scope {

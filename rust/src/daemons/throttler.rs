@@ -10,13 +10,18 @@
 //! * a **per-link cap** (`[throttler] max_per_link`): released-but-not-
 //!   terminal requests on a link never exceed it, so a storm on one
 //!   destination cannot bury FTS or starve other links;
-//! * **weighted activity shares** (`[throttler] share.<activity>`,
-//!   default weight 1.0) arbitrated by **deficit round robin**: every
-//!   waiting activity accrues credit proportional to its weight and the
-//!   highest-credit activity releases first. A nonzero-share activity can
-//!   be outpaced but never starved — its deficit grows every tick until
-//!   it wins a slot (bounded wait; property-tested below). Zero-share
-//!   activities are administratively blocked.
+//! * **two-level weighted fair shares** arbitrated by **deficit round
+//!   robin**. The outer level splits each link's free slots across
+//!   **VOs** (`[throttler] vo_share.<vo>`, default weight 1.0) so one
+//!   tenant's backlog cannot crowd out another's; the inner level splits
+//!   each VO's allocation across **activities**
+//!   (`[throttler] share.<activity>`, default weight 1.0). At both
+//!   levels every waiting party accrues credit proportional to its
+//!   weight and the highest-credit party releases first: a nonzero-share
+//!   VO or activity can be outpaced but never starved — its deficit
+//!   grows every tick until it wins a slot (bounded wait;
+//!   property-tested below). Zero-share entries are administratively
+//!   blocked. A request's VO is that of its DID's scope.
 //!
 //! The source of a waiting request is not yet assigned (the submitter
 //! ranks sources at submission time), so the link is *estimated* from
@@ -43,9 +48,12 @@ pub struct Throttler {
     pub bulk: usize,
     /// Released-but-unfinished cap per (src, dst) link.
     pub max_per_link: usize,
-    /// DRR credit per (src, dst, activity); persists across ticks so a
-    /// low-share activity's claim grows until it is served.
-    deficits: BTreeMap<(String, String, String), f64>,
+    /// Inner-level DRR credit per (src, dst, vo, activity); persists
+    /// across ticks so a low-share activity's claim grows until served.
+    act_deficits: BTreeMap<(String, String, String, String), f64>,
+    /// Outer-level DRR credit per (src, dst, vo): the VO fair share is
+    /// settled before any activity inside the VO is considered.
+    vo_deficits: BTreeMap<(String, String, String), f64>,
 }
 
 impl Throttler {
@@ -58,7 +66,8 @@ impl Throttler {
             instance: instance.to_string(),
             bulk,
             max_per_link,
-            deficits: BTreeMap::new(),
+            act_deficits: BTreeMap::new(),
+            vo_deficits: BTreeMap::new(),
         }
     }
 
@@ -69,6 +78,16 @@ impl Throttler {
             .catalog
             .cfg
             .get_f64("throttler", &format!("share.{activity}"), 1.0)
+            .max(0.0)
+    }
+
+    /// Configured weight of a VO (`[throttler] vo_share.<vo>`); unknown
+    /// VOs weigh 1.0, negative configs clamp to 0.
+    fn vo_share(&self, vo: &str) -> f64 {
+        self.ctx
+            .catalog
+            .cfg
+            .get_f64("throttler", &format!("vo_share.{vo}"), 1.0)
             .max(0.0)
     }
 
@@ -93,94 +112,200 @@ impl Throttler {
             .map(|(r, _)| r.rse.clone())
     }
 
-    /// Weighted deficit-round-robin release for one link: up to `free`
-    /// requests come off the per-activity FIFOs, highest accumulated
-    /// credit first.
+    /// Two-level weighted deficit-round-robin release for one link: up to
+    /// `free` requests come off the per-activity FIFOs. The outer level
+    /// picks the VO with the highest accumulated credit, the inner level
+    /// the highest-credit activity inside it — so tenants are isolated
+    /// from each other's activity mix, and the split is work-conserving
+    /// (a VO that drains hands its unused slots to the others).
     fn drr_release(
         &mut self,
         link: &LinkKey,
-        queues: &mut BTreeMap<String, VecDeque<u64>>,
+        queues: &mut BTreeMap<String, BTreeMap<String, VecDeque<u64>>>,
         mut free: usize,
         released: &mut Vec<(u64, Option<String>)>,
     ) {
-        // One quantum per accrual for every waiting activity, scaled so an
-        // uncontended link drains in a single round.
+        // One quantum per accrual at both levels for every waiting party,
+        // scaled so an uncontended link drains in a single round. The
+        // activity quantum is scaled against the VO's expected cut of the
+        // free slots, not the whole link.
+        #[allow(clippy::too_many_arguments)]
         fn accrue(
-            deficits: &mut BTreeMap<(String, String, String), f64>,
+            vo_deficits: &mut BTreeMap<(String, String, String), f64>,
+            act_deficits: &mut BTreeMap<(String, String, String, String), f64>,
             link: &LinkKey,
-            queues: &BTreeMap<String, VecDeque<u64>>,
-            weights: &BTreeMap<String, f64>,
+            queues: &BTreeMap<String, BTreeMap<String, VecDeque<u64>>>,
+            vo_weights: &BTreeMap<String, f64>,
+            act_weights: &BTreeMap<(String, String), f64>,
             free: usize,
-            total_w: f64,
+            total_vo_w: f64,
         ) {
-            let scale = (free as f64 / total_w).max(1.0);
-            for (act, q) in queues {
-                if q.is_empty() {
+            let vo_scale = (free as f64 / total_vo_w).max(1.0);
+            for (vo, acts) in queues {
+                if acts.values().all(|q| q.is_empty()) {
                     continue;
                 }
-                let w = weights[act];
-                if w > 0.0 {
-                    *deficits
-                        .entry((link.0.clone(), link.1.clone(), act.clone()))
-                        .or_insert(0.0) += w * scale;
+                let vw = vo_weights[vo];
+                if vw <= 0.0 {
+                    continue;
+                }
+                *vo_deficits
+                    .entry((link.0.clone(), link.1.clone(), vo.clone()))
+                    .or_insert(0.0) += vw * vo_scale;
+                let free_vo = (free as f64 * vw / total_vo_w).max(1.0);
+                let total_act_w: f64 = acts
+                    .iter()
+                    .filter(|(_, q)| !q.is_empty())
+                    .map(|(a, _)| act_weights[&(vo.clone(), a.clone())])
+                    .sum();
+                if total_act_w <= 0.0 {
+                    continue;
+                }
+                let act_scale = (free_vo / total_act_w).max(1.0);
+                for (act, q) in acts {
+                    if q.is_empty() {
+                        continue;
+                    }
+                    let w = act_weights[&(vo.clone(), act.clone())];
+                    if w > 0.0 {
+                        *act_deficits
+                            .entry((link.0.clone(), link.1.clone(), vo.clone(), act.clone()))
+                            .or_insert(0.0) += w * act_scale;
+                    }
                 }
             }
         }
 
-        let weights: BTreeMap<String, f64> =
-            queues.keys().map(|a| (a.clone(), self.share(a))).collect();
-        let total_w: f64 = queues
-            .iter()
-            .filter(|(_, q)| !q.is_empty())
-            .map(|(a, _)| weights[a])
-            .sum();
-        if total_w <= 0.0 {
-            return; // every waiting activity is administratively blocked
+        let mut vo_weights: BTreeMap<String, f64> = BTreeMap::new();
+        let mut act_weights: BTreeMap<(String, String), f64> = BTreeMap::new();
+        for (vo, acts) in queues.iter() {
+            vo_weights.insert(vo.clone(), self.vo_share(vo));
+            for act in acts.keys() {
+                act_weights.insert((vo.clone(), act.clone()), self.share(act));
+            }
         }
-        accrue(&mut self.deficits, link, queues, &weights, free, total_w);
+        let total_vo_w: f64 = queues
+            .iter()
+            .filter(|(_, acts)| acts.values().any(|q| !q.is_empty()))
+            .map(|(vo, _)| vo_weights[vo])
+            .sum();
+        if total_vo_w <= 0.0 {
+            return; // every waiting VO is administratively blocked
+        }
+        accrue(
+            &mut self.vo_deficits,
+            &mut self.act_deficits,
+            link,
+            queues,
+            &vo_weights,
+            &act_weights,
+            free,
+            total_vo_w,
+        );
         let mut topups = 0;
         while free > 0 {
-            // the waiting activity with the largest credit ≥ 1
-            let best = queues
-                .iter()
-                .filter(|(_, q)| !q.is_empty())
-                .map(|(act, _)| {
-                    let d = self
-                        .deficits
-                        .get(&(link.0.clone(), link.1.clone(), act.clone()))
+            // the claimable (vo, activity) pair: VO credit decides first,
+            // activity credit second, both must be ≥ 1; exact ties break
+            // toward the lexicographically smaller name
+            let mut best: Option<(f64, f64, String, String)> = None;
+            for (vo, acts) in queues.iter() {
+                let vd = self
+                    .vo_deficits
+                    .get(&(link.0.clone(), link.1.clone(), vo.clone()))
+                    .copied()
+                    .unwrap_or(0.0);
+                if vd < 1.0 {
+                    continue;
+                }
+                for (act, q) in acts {
+                    if q.is_empty() {
+                        continue;
+                    }
+                    let ad = self
+                        .act_deficits
+                        .get(&(link.0.clone(), link.1.clone(), vo.clone(), act.clone()))
                         .copied()
                         .unwrap_or(0.0);
-                    (d, act.clone())
-                })
-                .filter(|(d, _)| *d >= 1.0)
-                .max_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+                    if ad < 1.0 {
+                        continue;
+                    }
+                    let cand = (vd, ad, vo.clone(), act.clone());
+                    best = Some(match best.take() {
+                        None => cand,
+                        Some(cur) => {
+                            let ord = cand
+                                .0
+                                .total_cmp(&cur.0)
+                                .then(cand.1.total_cmp(&cur.1))
+                                .then(cur.2.cmp(&cand.2))
+                                .then(cur.3.cmp(&cand.3));
+                            if ord == std::cmp::Ordering::Greater {
+                                cand
+                            } else {
+                                cur
+                            }
+                        }
+                    });
+                }
+            }
             match best {
-                Some((_, act)) => {
-                    if let Some(id) = queues.get_mut(&act).and_then(|q| q.pop_front()) {
+                Some((_, _, vo, act)) => {
+                    if let Some(id) = queues
+                        .get_mut(&vo)
+                        .and_then(|m| m.get_mut(&act))
+                        .and_then(|q| q.pop_front())
+                    {
                         released.push((id, Some(link.0.clone())));
                         free -= 1;
                     }
-                    let key = (link.0.clone(), link.1.clone(), act.clone());
-                    if let Some(d) = self.deficits.get_mut(&key) {
+                    let vkey = (link.0.clone(), link.1.clone(), vo.clone());
+                    let akey = (link.0.clone(), link.1.clone(), vo.clone(), act.clone());
+                    if let Some(d) = self.vo_deficits.get_mut(&vkey) {
+                        *d -= 1.0;
+                    }
+                    if let Some(d) = self.act_deficits.get_mut(&akey) {
                         *d -= 1.0;
                     }
                     // classic DRR: an emptied queue forfeits leftover credit
-                    if queues.get(&act).map(|q| q.is_empty()).unwrap_or(true) {
-                        self.deficits.remove(&key);
+                    let acts = queues.get(&vo);
+                    if acts
+                        .and_then(|m| m.get(&act))
+                        .map(|q| q.is_empty())
+                        .unwrap_or(true)
+                    {
+                        self.act_deficits.remove(&akey);
+                    }
+                    if acts
+                        .map(|m| m.values().all(|q| q.is_empty()))
+                        .unwrap_or(true)
+                    {
+                        self.vo_deficits.remove(&vkey);
                     }
                 }
                 None => {
-                    // nothing claimable: stop when no waiting activity can
+                    // nothing claimable: stop when no waiting pair can
                     // ever accrue credit, otherwise top up (bounded — the
                     // deficits persist across ticks regardless)
-                    let claimable = queues
-                        .iter()
-                        .any(|(a, q)| !q.is_empty() && weights[a] > 0.0);
+                    let claimable = queues.iter().any(|(vo, acts)| {
+                        vo_weights[vo] > 0.0
+                            && acts.iter().any(|(a, q)| {
+                                !q.is_empty() && act_weights[&(vo.clone(), a.clone())] > 0.0
+                            })
+                    });
                     topups += 1;
                     if !claimable || topups > 1024 {
                         break;
                     }
-                    accrue(&mut self.deficits, link, queues, &weights, free, total_w);
+                    accrue(
+                        &mut self.vo_deficits,
+                        &mut self.act_deficits,
+                        link,
+                        queues,
+                        &vo_weights,
+                        &act_weights,
+                        free,
+                        total_vo_w,
+                    );
                 }
             }
         }
@@ -225,7 +350,11 @@ impl Daemon for Throttler {
         // its actual source at submission time. Unrankable sources are
         // released unconditionally — the submitter owns that failure.
         let mut released: Vec<(u64, Option<String>)> = Vec::new();
-        let mut per_link: BTreeMap<LinkKey, BTreeMap<String, VecDeque<u64>>> = BTreeMap::new();
+        let mut per_link: BTreeMap<LinkKey, BTreeMap<String, BTreeMap<String, VecDeque<u64>>>> =
+            BTreeMap::new();
+        // per-tick scope → VO cache: a backlog touches few scopes, so the
+        // VO attribution costs one point get per distinct scope
+        let mut scope_vo: BTreeMap<String, String> = BTreeMap::new();
         for req in &waiting {
             if released.len() >= self.bulk {
                 break; // release budget spent; the rest next tick
@@ -246,12 +375,27 @@ impl Daemon for Throttler {
                 }
             };
             match est {
-                Some(src) => per_link
-                    .entry((src, req.dst_rse.clone()))
-                    .or_default()
-                    .entry(req.activity.clone())
-                    .or_default()
-                    .push_back(req.id),
+                Some(src) => {
+                    let vo = scope_vo
+                        .entry(req.did.scope.clone())
+                        .or_insert_with(|| {
+                            cat.scopes
+                                .get(&req.did.scope)
+                                .map(|s| s.vo)
+                                .unwrap_or_else(|| {
+                                    crate::core::types::DEFAULT_VO.to_string()
+                                })
+                        })
+                        .clone();
+                    per_link
+                        .entry((src, req.dst_rse.clone()))
+                        .or_default()
+                        .entry(vo)
+                        .or_default()
+                        .entry(req.activity.clone())
+                        .or_default()
+                        .push_back(req.id)
+                }
                 None => released.push((req.id, None)),
             }
         }
@@ -311,7 +455,7 @@ impl Daemon for Throttler {
 mod tests {
     use super::*;
     use crate::core::rules_api::RuleSpec;
-    use crate::core::types::{DidKey, ReplicaState};
+    use crate::core::types::{AccountType, DidKey, ReplicaState};
     use crate::core::Catalog;
     use crate::daemons::Ctx;
     use crate::ftssim::FtsServer;
@@ -360,10 +504,14 @@ mod tests {
     }
 
     fn seed_request(ctx: &Ctx, name: &str, dst: &str, activity: &str) -> u64 {
+        seed_request_in(ctx, "data18", name, dst, activity)
+    }
+
+    fn seed_request_in(ctx: &Ctx, scope: &str, name: &str, dst: &str, activity: &str) -> u64 {
         let cat = &ctx.catalog;
         let adler = crate::storagesim::synthetic_adler32_for(name, 100);
-        cat.add_file("data18", name, "root", 100, &adler, None).unwrap();
-        let key = DidKey::new("data18", name);
+        cat.add_file(scope, name, "root", 100, &adler, None).unwrap();
+        let key = DidKey::new(scope, name);
         let rep = cat.add_replica("SRC", &key, ReplicaState::Available, None).unwrap();
         ctx.fleet.get("SRC").unwrap().put(&rep.pfn, 100, cat.now()).unwrap();
         cat.add_rule(RuleSpec::new("root", key.clone(), dst, 1).with_activity(activity))
@@ -429,6 +577,47 @@ mod tests {
         let prod = queued.iter().filter(|r| r.activity == "Production").count();
         let ana = queued.iter().filter(|r| r.activity == "Analysis").count();
         assert_eq!((prod, ana), (3, 1), "3:1 share split");
+    }
+
+    #[test]
+    fn vo_shares_split_the_link_before_activities() {
+        let (ctx, cat) = rig(&[
+            ("max_per_link", "4"),
+            ("vo_share.atlas", "3"),
+            ("vo_share.cms", "1"),
+        ]);
+        cat.add_account_vo("at1", AccountType::User, "", "atlas").unwrap();
+        cat.add_account_vo("cm1", AccountType::User, "", "cms").unwrap();
+        cat.add_scope("s-atlas", "at1").unwrap();
+        cat.add_scope("s-cms", "cm1").unwrap();
+        for i in 0..8 {
+            seed_request_in(&ctx, "s-atlas", &format!("a{i}"), "DST-A", "Production");
+            seed_request_in(&ctx, "s-cms", &format!("c{i}"), "DST-A", "Production");
+        }
+        let mut t = Throttler::new(ctx.clone(), "t1");
+        assert_eq!(t.tick(cat.now()), 4);
+        let queued = cat.requests.scan(|r| r.state == RequestState::Queued);
+        let atlas = queued.iter().filter(|r| r.did.scope == "s-atlas").count();
+        let cms = queued.iter().filter(|r| r.did.scope == "s-cms").count();
+        assert_eq!((atlas, cms), (3, 1), "3:1 VO share split");
+    }
+
+    #[test]
+    fn zero_share_vo_is_blocked_nonzero_vo_proceeds() {
+        let (ctx, cat) = rig(&[("max_per_link", "8"), ("vo_share.cms", "0")]);
+        cat.add_account_vo("cm1", AccountType::User, "", "cms").unwrap();
+        cat.add_scope("s-cms", "cm1").unwrap();
+        for i in 0..3 {
+            seed_request_in(&ctx, "s-cms", &format!("c{i}"), "DST-A", "Production");
+            seed_request(&ctx, &format!("g{i}"), "DST-A", "Production");
+        }
+        let mut t = Throttler::new(ctx.clone(), "t1");
+        assert_eq!(t.tick(cat.now()), 3, "only the active VO's requests");
+        assert!(cat
+            .requests
+            .scan(|r| r.did.scope == "s-cms")
+            .iter()
+            .all(|r| r.state == RequestState::Waiting));
     }
 
     #[test]

@@ -83,20 +83,34 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // ---------------- scopes ----------------
     let cat = catalog.clone();
     r.post("/scopes/{scope}", move |req| {
-        with_auth(&cat, req, |cat, account| {
-            cat.check_permission(account, Action::AddScope, None)?;
+        with_auth(&cat, req, |cat, auth| {
+            cat.check_permission(&auth.account, Action::AddScope, None)?;
             let body = req.body_json().unwrap_or(Json::obj());
-            let owner = body.opt_str("account").unwrap_or(account);
+            let owner = body.opt_str("account").unwrap_or(&auth.account);
+            // the new scope inherits the owner's VO — which must be the
+            // caller's own unless the caller operates the instance
+            if !auth.operator && cat.account_vo(owner)? != auth.vo {
+                return Err(RucioError::AccessDenied(format!(
+                    "cannot create a scope for {owner} outside VO {}",
+                    auth.vo
+                )));
+            }
             cat.add_scope(req.param("scope")?, owner)?;
             Ok(Response::text(201, "Created"))
         })
     });
     let cat = catalog.clone();
     r.get("/scopes", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
+            // list is VO-filtered: foreign tenants' namespaces stay dark
+            let scopes = if auth.operator {
+                cat.list_scopes()
+            } else {
+                cat.scopes.filter_map(|s| (s.vo == auth.vo).then(|| s.name.clone()))
+            };
             Ok(Response::ndjson(
                 200,
-                cat.list_scopes().into_iter().map(|s| Json::obj().with("scope", s)),
+                scopes.into_iter().map(|s| Json::obj().with("scope", s)),
             ))
         })
     });
@@ -104,9 +118,10 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // ---------------- DIDs (paper §2.2) ----------------
     let cat = catalog.clone();
     r.post("/dids/{scope}/{name...}", move |req| {
-        with_auth(&cat, req, |cat, account| {
+        with_auth(&cat, req, |cat, auth| {
             let scope = req.param("scope")?;
             let name = req.param("name")?;
+            let account = auth.account.as_str();
             cat.check_permission(account, Action::AddDid, Some(scope))?;
             let body = req.body_json()?;
             match body.opt_str("type").unwrap_or("FILE") {
@@ -129,8 +144,9 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.get("/dids/{scope}", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
             let scope = req.param("scope")?;
+            guard_scope(cat, auth, scope)?;
             let did_type = match req.query_get("type") {
                 Some("FILE") => Some(DidType::File),
                 Some("DATASET") => Some(DidType::Dataset),
@@ -186,7 +202,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.get("/dids/{scope}/{name...}", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
+            guard_scope(cat, auth, req.param("scope")?)?;
             let key = DidKey::new(req.param("scope")?, req.param("name")?);
             let d = cat.get_did(&key)?;
             Ok(Response::json(200, &did_json(&d)))
@@ -196,7 +213,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // swallow a `/meta` suffix).
     let cat = catalog.clone();
     r.get("/meta/{scope}/{name...}", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
+            guard_scope(cat, auth, req.param("scope")?)?;
             let key = DidKey::new(req.param("scope")?, req.param("name")?);
             let meta = cat.get_metadata(&key)?;
             let mut obj = Json::obj();
@@ -208,10 +226,10 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.post("/meta/{scope}/{name...}", move |req| {
-        with_auth(&cat, req, |cat, account| {
+        with_auth(&cat, req, |cat, auth| {
             let scope = req.param("scope")?;
             let key = DidKey::new(scope, req.param("name")?);
-            cat.check_permission(account, Action::AddDid, Some(scope))?;
+            cat.check_permission(&auth.account, Action::AddDid, Some(scope))?;
             let body = req.body_json()?;
             let obj = body
                 .as_obj()
@@ -226,11 +244,13 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.post("/attachments/{scope}/{name...}", move |req| {
-        with_auth(&cat, req, |cat, account| {
+        with_auth(&cat, req, |cat, auth| {
             let parent = DidKey::new(req.param("scope")?, req.param("name")?);
-            cat.check_permission(account, Action::AttachDid, Some(&parent.scope))?;
+            cat.check_permission(&auth.account, Action::AttachDid, Some(&parent.scope))?;
             let body = req.body_json()?;
             let child = DidKey::new(body.req_str("child_scope")?, body.req_str("child_name")?);
+            // both endpoints of an attachment must live in the caller's VO
+            guard_scope(cat, auth, &child.scope)?;
             cat.attach(&parent, &child)?;
             // async subscription matching happens via the transmogrifier;
             // for interactive use we match synchronously too (idempotent)
@@ -244,7 +264,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // (registered before the param routes so the literal path wins).
     let cat = catalog.clone();
     r.post("/replicas/bulk", move |req| {
-        with_auth(&cat, req, |cat, _account| {
+        with_auth(&cat, req, |cat, auth| {
             let body = req.body_json()?;
             let rse = body.req_str("rse")?;
             let arr = body
@@ -254,6 +274,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
             let mut specs = Vec::with_capacity(arr.len());
             for item in arr {
                 let did = DidKey::new(item.req_str("scope")?, item.req_str("name")?);
+                guard_scope(cat, auth, &did.scope)?;
                 let state = match item.opt_str("state") {
                     Some("COPYING") => ReplicaState::Copying,
                     _ => ReplicaState::Available,
@@ -271,7 +292,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // Cursor-paginated NDJSON list of all replicas.
     let cat = catalog.clone();
     r.get("/replicas", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
             let limit = parse_limit(req);
             let cursor = match req.query_get("cursor") {
                 Some(raw) => Some(decode_replica_cursor(raw).ok_or_else(|| {
@@ -280,17 +301,23 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                 None => None,
             };
             let page = cat.replicas.scan_page(cursor.as_ref(), limit);
+            // VO filter applies per page (like the DID type filter): a
+            // filtered page may be short while the cursor still advances
+            let vos = ScopeVoCache::new(cat);
             let mut resp = Response::ndjson(
                 200,
-                page.rows.iter().map(|rep| {
-                    Json::obj()
-                        .with("rse", rep.rse.as_str())
-                        .with("scope", rep.did.scope.as_str())
-                        .with("name", rep.did.name.as_str())
-                        .with("pfn", rep.pfn.as_str())
-                        .with("bytes", rep.bytes)
-                        .with("state", rep.state.as_str())
-                }),
+                page.rows
+                    .iter()
+                    .filter(|rep| vos.visible(auth, &rep.did.scope))
+                    .map(|rep| {
+                        Json::obj()
+                            .with("rse", rep.rse.as_str())
+                            .with("scope", rep.did.scope.as_str())
+                            .with("name", rep.did.name.as_str())
+                            .with("pfn", rep.pfn.as_str())
+                            .with("bytes", rep.bytes)
+                            .with("state", rep.state.as_str())
+                    }),
             );
             if let Some((rse, did)) = &page.next_cursor {
                 resp = resp.with_header(
@@ -303,7 +330,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.get("/replicas/{scope}/{name...}", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
+            guard_scope(cat, auth, req.param("scope")?)?;
             let key = DidKey::new(req.param("scope")?, req.param("name")?);
             cat.get_did(&key)?;
             let items = cat.list_replicas(&key).into_iter().map(|r| {
@@ -318,7 +346,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.post("/replicas/{rse}/{scope}/{name...}", move |req| {
-        with_auth(&cat, req, |cat, _account| {
+        with_auth(&cat, req, |cat, auth| {
+            guard_scope(cat, auth, req.param("scope")?)?;
             let key = DidKey::new(req.param("scope")?, req.param("name")?);
             let body = req.body_json().unwrap_or(Json::obj());
             let rep = cat.add_replica(
@@ -338,7 +367,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // (delete_rule fully unwinds locks + usage), so the call is atomic.
     let cat = catalog.clone();
     r.post("/rules/bulk", move |req| {
-        with_auth(&cat, req, |cat, account| {
+        with_auth(&cat, req, |cat, auth| {
+            let account = auth.account.as_str();
             cat.check_permission(account, Action::AddRule, None)?;
             let body = req.body_json()?;
             let arr = body
@@ -348,6 +378,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
             let mut specs = Vec::with_capacity(arr.len());
             for item in arr {
                 let did = DidKey::new(item.req_str("scope")?, item.req_str("name")?);
+                guard_scope(cat, auth, &did.scope)?;
                 let mut spec = RuleSpec::new(
                     account,
                     did,
@@ -369,7 +400,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // Cursor-paginated NDJSON list of all rules (id order).
     let cat = catalog.clone();
     r.get("/rules", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
             let limit = parse_limit(req);
             let cursor: Option<u64> = match req.query_get("cursor") {
                 Some(raw) => Some(raw.parse().map_err(|_| {
@@ -378,7 +409,14 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                 None => None,
             };
             let page = cat.rules.scan_page(cursor.as_ref(), limit);
-            let mut resp = Response::ndjson(200, page.rows.iter().map(rule_json));
+            let vos = ScopeVoCache::new(cat);
+            let mut resp = Response::ndjson(
+                200,
+                page.rows
+                    .iter()
+                    .filter(|r| vos.visible(auth, &r.did.scope))
+                    .map(rule_json),
+            );
             if let Some(next) = page.next_cursor {
                 resp = resp.with_header("x-rucio-next-cursor", &next.to_string());
             }
@@ -387,10 +425,12 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.post("/rules", move |req| {
-        with_auth(&cat, req, |cat, account| {
+        with_auth(&cat, req, |cat, auth| {
+            let account = auth.account.as_str();
             cat.check_permission(account, Action::AddRule, None)?;
             let body = req.body_json()?;
             let did = DidKey::new(body.req_str("scope")?, body.req_str("name")?);
+            guard_scope(cat, auth, &did.scope)?;
             let mut spec = RuleSpec::new(
                 account,
                 did,
@@ -409,27 +449,30 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.get("/rules/{id}", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
             let id: u64 = req
                 .param("id")?
                 .parse()
                 .map_err(|_| RucioError::InvalidValue("bad rule id".into()))?;
             let rule = cat.get_rule(id)?;
+            guard_scope(cat, auth, &rule.did.scope)?;
             Ok(Response::json(200, &rule_json(&rule)))
         })
     });
     let cat = catalog.clone();
     r.delete("/rules/{id}", move |req| {
-        with_auth(&cat, req, |cat, account| {
+        with_auth(&cat, req, |cat, auth| {
             let id: u64 = req
                 .param("id")?
                 .parse()
                 .map_err(|_| RucioError::InvalidValue("bad rule id".into()))?;
             let rule = cat.get_rule(id)?;
-            let acc = cat.get_account(account)?;
-            if rule.account != account && !acc.admin {
+            guard_scope(cat, auth, &rule.did.scope)?;
+            let acc = cat.get_account(&auth.account)?;
+            if rule.account != auth.account && !acc.admin {
                 return Err(RucioError::AccessDenied(format!(
-                    "{account} does not own rule {id}"
+                    "{} does not own rule {id}",
+                    auth.account
                 )));
             }
             cat.delete_rule(id)?;
@@ -438,7 +481,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.get("/dids/{scope}/{name...}/rules", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
+            guard_scope(cat, auth, req.param("scope")?)?;
             let key = DidKey::new(req.param("scope")?, req.param("name")?);
             let items = cat.list_rules_for_did(&key).into_iter().map(|r| rule_json(&r));
             Ok(Response::ndjson(200, items))
@@ -448,8 +492,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // ---------------- RSEs (admin) ----------------
     let cat = catalog.clone();
     r.post("/rses/{rse}", move |req| {
-        with_auth(&cat, req, |cat, account| {
-            cat.check_permission(account, Action::AddRse, None)?;
+        with_auth(&cat, req, |cat, auth| {
+            cat.check_permission(&auth.account, Action::AddRse, None)?;
             let name = req.param("rse")?;
             let body = req.body_json().unwrap_or(Json::obj());
             let mut rse = crate::core::rse::Rse::new(name, cat.now());
@@ -469,7 +513,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.get("/rses", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        // RSEs are shared data-lake infrastructure, visible to every VO
+        with_auth(&cat, req, |cat, _auth| {
             let items = cat.list_rses().into_iter().map(|r| {
                 Json::obj()
                     .with("rse", r.name.as_str())
@@ -483,15 +528,27 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // ---------------- accounts / usage ----------------
     let cat = catalog.clone();
     r.post("/accounts/{name}", move |req| {
-        with_auth(&cat, req, |cat, account| {
-            cat.check_permission(account, Action::AddAccount, None)?;
+        with_auth(&cat, req, |cat, auth| {
+            cat.check_permission(&auth.account, Action::AddAccount, None)?;
             let body = req.body_json()?;
             let t = match body.opt_str("type").unwrap_or("USER") {
                 "GROUP" => AccountType::Group,
                 "SERVICE" => AccountType::Service,
                 _ => AccountType::User,
             };
-            cat.add_account(req.param("name")?, t, body.opt_str("email").unwrap_or(""))?;
+            // a VO admin provisions accounts inside its own VO only; the
+            // instance operator may name any VO in the body
+            let vo = match body.opt_str("vo") {
+                Some(v) if auth.operator => v.to_string(),
+                Some(v) if v != auth.vo => {
+                    return Err(RucioError::AccessDenied(format!(
+                        "{} may not create accounts in VO {v}",
+                        auth.account
+                    )))
+                }
+                _ => auth.vo.clone(),
+            };
+            cat.add_account_vo(req.param("name")?, t, body.opt_str("email").unwrap_or(""), &vo)?;
             if let Some(pw) = body.opt_str("password") {
                 cat.add_identity(req.param("name")?, AuthType::UserPass, req.param("name")?, Some(pw))?;
             }
@@ -500,8 +557,16 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     });
     let cat = catalog.clone();
     r.get("/accounts/{name}/usage/{rse}", move |req| {
-        with_auth(&cat, req, |cat, _| {
-            let u = cat.get_account_usage(req.param("name")?, req.param("rse")?);
+        with_auth(&cat, req, |cat, auth| {
+            let name = req.param("name")?;
+            // usage is tenant-private: foreign-VO accounts are invisible
+            if !auth.operator && cat.account_vo(name).ok().as_deref() != Some(auth.vo.as_str()) {
+                return Err(RucioError::AccessDenied(format!(
+                    "account {name} is outside VO {}",
+                    auth.vo
+                )));
+            }
+            let u = cat.get_account_usage(name, req.param("rse")?);
             Ok(Response::json(
                 200,
                 &Json::obj().with("bytes", u.bytes).with("files", u.files),
@@ -515,7 +580,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // admission pipeline (WAITING → QUEUED → SUBMITTED → DONE/FAILED).
     let cat = catalog.clone();
     r.get("/requests", move |req| {
-        with_auth(&cat, req, |cat, _| {
+        with_auth(&cat, req, |cat, auth| {
             let limit = parse_limit(req);
             let cursor: Option<u64> = match req.query_get("cursor") {
                 Some(raw) => Some(raw.parse().map_err(|_| {
@@ -531,11 +596,13 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
             };
             let activity = req.query_get("activity");
             let page = cat.requests.scan_page(cursor.as_ref(), limit);
+            let vos = ScopeVoCache::new(cat);
             let items = page
                 .rows
                 .iter()
                 .filter(|t| state.map(|s| t.state == s).unwrap_or(true))
                 .filter(|t| activity.map(|a| t.activity == a).unwrap_or(true))
+                .filter(|t| vos.visible(auth, &t.did.scope))
                 .map(request_json);
             let mut resp = Response::ndjson(200, items);
             if let Some(next) = page.next_cursor {
@@ -549,16 +616,21 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     // scheduling for everyone sharing the link.
     let cat = catalog.clone();
     r.post("/requests/{id}/boost", move |req| {
-        with_auth(&cat, req, |cat, account| {
-            if !cat.get_account(account)?.admin {
+        with_auth(&cat, req, |cat, auth| {
+            if !cat.get_account(&auth.account)?.admin {
                 return Err(RucioError::AccessDenied(format!(
-                    "{account} may not boost transfer requests"
+                    "{} may not boost transfer requests",
+                    auth.account
                 )));
             }
             let id: u64 = req
                 .param("id")?
                 .parse()
                 .map_err(|_| RucioError::InvalidValue("bad request id".into()))?;
+            // a VO admin reshapes scheduling for its own tenant only
+            if let Some(t) = cat.requests.get(&id) {
+                guard_scope(cat, auth, &t.did.scope)?;
+            }
             let boosted = cat.boost_request(id)?;
             Ok(Response::json(200, &request_json(&boosted)))
         })
@@ -615,21 +687,81 @@ fn decode_replica_cursor(s: &str) -> Option<(String, DidKey)> {
     Some((rse.to_string(), DidKey::new(scope, name)))
 }
 
+/// Authenticated request context: the account, its VO, and whether the
+/// caller operates the whole instance (default-VO admin) and may cross
+/// tenant boundaries.
+pub struct Auth {
+    pub account: String,
+    pub vo: String,
+    pub operator: bool,
+}
+
 /// Wrap a handler with token validation (§4.1: "each subsequent operation
 /// against any of the REST servers needs the valid X-Rucio-Auth-Token").
+/// The token pins the VO; every route receives it for tenant isolation.
 fn with_auth<F>(catalog: &Arc<Catalog>, req: &Request, f: F) -> Response
 where
-    F: FnOnce(&Catalog, &str) -> Result<Response>,
+    F: FnOnce(&Catalog, &Auth) -> Result<Response>,
 {
     let Some(token) = req.header("x-rucio-auth-token") else {
         return Response::error(&RucioError::CannotAuthenticate("missing token".into()));
     };
-    match catalog.validate_token(token) {
-        Ok(account) => match f(catalog, &account) {
-            Ok(resp) => resp,
-            Err(e) => Response::error(&e),
-        },
+    match catalog.validate_token_vo(token) {
+        Ok((account, vo)) => {
+            let operator = vo == DEFAULT_VO
+                && catalog.get_account(&account).map(|a| a.admin).unwrap_or(false);
+            let auth = Auth { account, vo, operator };
+            match f(catalog, &auth) {
+                Ok(resp) => resp,
+                Err(e) => Response::error(&e),
+            }
+        }
         Err(e) => Response::error(&e),
+    }
+}
+
+/// Tenant guard for scope-addressed routes: a scope owned by a foreign
+/// VO is off limits (403) unless the caller is an instance operator.
+/// Unknown scopes fall through so the route's own lookup reports 404 —
+/// nonexistence leaks nothing.
+fn guard_scope(cat: &Catalog, auth: &Auth, scope: &str) -> Result<()> {
+    if auth.operator {
+        return Ok(());
+    }
+    match cat.scopes.get(&scope.to_string()) {
+        Some(s) if s.vo != auth.vo => Err(RucioError::AccessDenied(format!(
+            "scope {scope} belongs to VO {}, caller is in VO {}",
+            s.vo, auth.vo
+        ))),
+        _ => Ok(()),
+    }
+}
+
+/// Memoised scope → VO resolution for row filtering on the global list
+/// routes (replicas, rules, requests stream thousands of rows per page;
+/// each distinct scope is resolved once).
+struct ScopeVoCache<'a> {
+    cat: &'a Catalog,
+    cache: std::cell::RefCell<std::collections::BTreeMap<String, Option<String>>>,
+}
+
+impl<'a> ScopeVoCache<'a> {
+    fn new(cat: &'a Catalog) -> Self {
+        Self { cat, cache: std::cell::RefCell::new(std::collections::BTreeMap::new()) }
+    }
+
+    /// Is a row under `scope` visible to the caller? Rows whose scope no
+    /// longer resolves stay visible to operators only.
+    fn visible(&self, auth: &Auth, scope: &str) -> bool {
+        if auth.operator {
+            return true;
+        }
+        let mut cache = self.cache.borrow_mut();
+        let vo = cache
+            .entry(scope.to_string())
+            .or_insert_with(|| self.cat.scopes.get(&scope.to_string()).map(|s| s.vo))
+            .clone();
+        vo.as_deref() == Some(auth.vo.as_str())
     }
 }
 

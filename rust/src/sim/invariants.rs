@@ -22,7 +22,15 @@
 //!    a live rule and an existing destination RSE;
 //! 6. **counter-agreement** — every table's O(1) row counter (what the
 //!    monitoring [`crate::db::Registry`] reports) equals an actual row
-//!    count of the table.
+//!    count of the table;
+//! 7. **vo-isolation** — no row leaks across tenants: every scope lives
+//!    in its owning account's VO and every token is pinned to its
+//!    account's VO (the query layer filters by scope VO, so a consistent
+//!    scope→VO mapping is exactly what "no query path returns
+//!    foreign-VO rows" rests on);
+//! 8. **vo-usage-rollup** — global usage equals the Σ of per-VO usage
+//!    equals the Σ of per-VO lock charges (rule → account → VO), so
+//!    tenant accounting never loses or double-counts a byte.
 
 use std::collections::BTreeMap;
 
@@ -53,6 +61,8 @@ pub fn check(cat: &Catalog) -> Vec<Violation> {
     check_usage_equals_locks(cat, &mut out);
     check_live_requests(cat, &mut out);
     check_counter_agreement(cat, &mut out);
+    check_vo_isolation(cat, &mut out);
+    check_vo_usage_rollup(cat, &mut out);
     out
 }
 
@@ -247,6 +257,96 @@ fn check_usage_equals_locks(cat: &Catalog, out: &mut Vec<Violation>) {
     }
 }
 
+fn check_vo_isolation(cat: &Catalog, out: &mut Vec<Violation>) {
+    let mut account_vo: BTreeMap<String, String> = BTreeMap::new();
+    cat.accounts.for_each(|a| {
+        account_vo.insert(a.name.clone(), a.vo.clone());
+    });
+    cat.scopes.for_each(|s| match account_vo.get(&s.account) {
+        Some(vo) if *vo == s.vo => {}
+        Some(vo) => out.push(Violation {
+            invariant: "vo-isolation",
+            detail: format!(
+                "scope {} is in VO {} but its owner {} is in VO {vo}",
+                s.name, s.vo, s.account
+            ),
+        }),
+        None => out.push(Violation {
+            invariant: "vo-isolation",
+            detail: format!("scope {} owned by missing account {}", s.name, s.account),
+        }),
+    });
+    cat.tokens.for_each(|t| match account_vo.get(&t.account) {
+        Some(vo) if *vo == t.vo => {}
+        Some(vo) => out.push(Violation {
+            invariant: "vo-isolation",
+            detail: format!(
+                "token of {} is pinned to VO {} but the account is in VO {vo}",
+                t.account, t.vo
+            ),
+        }),
+        None => out.push(Violation {
+            invariant: "vo-isolation",
+            detail: format!("token references missing account {}", t.account),
+        }),
+    });
+}
+
+fn check_vo_usage_rollup(cat: &Catalog, out: &mut Vec<Violation>) {
+    // Global totals straight off the usage rows.
+    let (mut g_bytes, mut g_files) = (0u64, 0u64);
+    cat.usages.for_each(|u| {
+        g_bytes += u.bytes;
+        g_files += u.files;
+    });
+    let roll = cat.vo_usage();
+    let v_bytes: u64 = roll.values().map(|(b, _)| *b).sum();
+    let v_files: u64 = roll.values().map(|(_, f)| *f).sum();
+    if (g_bytes, g_files) != (v_bytes, v_files) {
+        out.push(Violation {
+            invariant: "vo-usage-rollup",
+            detail: format!(
+                "global usage ({g_bytes} B, {g_files} files) != Σ per-VO usage \
+                 ({v_bytes} B, {v_files} files)"
+            ),
+        });
+    }
+    // Per-VO lock charges: rule → account → VO.
+    let mut account_vo: BTreeMap<String, String> = BTreeMap::new();
+    cat.accounts.for_each(|a| {
+        account_vo.insert(a.name.clone(), a.vo.clone());
+    });
+    let mut rule_vo: BTreeMap<u64, String> = BTreeMap::new();
+    cat.rules.for_each(|r| {
+        let vo = account_vo
+            .get(&r.account)
+            .cloned()
+            .unwrap_or_else(|| crate::core::types::DEFAULT_VO.to_string());
+        rule_vo.insert(r.id, vo);
+    });
+    let mut lock_roll: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    cat.locks.for_each(|l| {
+        if let Some(vo) = rule_vo.get(&l.rule_id) {
+            let e = lock_roll.entry(vo.clone()).or_insert((0, 0));
+            e.0 += l.bytes;
+            e.1 += 1;
+        }
+    });
+    for vo in roll.keys().chain(lock_roll.keys()).collect::<std::collections::BTreeSet<_>>() {
+        let u = roll.get(vo.as_str()).copied().unwrap_or((0, 0));
+        let l = lock_roll.get(vo.as_str()).copied().unwrap_or((0, 0));
+        if u != l {
+            out.push(Violation {
+                invariant: "vo-usage-rollup",
+                detail: format!(
+                    "VO {vo}: usage rollup ({}, {}) != lock charges ({}, {})",
+                    u.0, u.1, l.0, l.1
+                ),
+            });
+        }
+    }
+}
+
 fn check_live_requests(cat: &Catalog, out: &mut Vec<Violation>) {
     for state in [
         RequestState::Waiting,
@@ -401,6 +501,35 @@ mod tests {
         });
         let v = check(&c);
         assert!(v.iter().any(|x| x.invariant == "usage-equals-locks"), "{v:?}");
+    }
+
+    #[test]
+    fn multi_vo_catalog_consistent_and_leaks_detected() {
+        use crate::core::types::AccountType;
+        let c = catalog();
+        c.add_account_vo("at1", AccountType::User, "", "atlas").unwrap();
+        c.add_account_vo("cm1", AccountType::User, "", "cms").unwrap();
+        c.add_scope("s-atlas", "at1").unwrap();
+        c.add_scope("s-cms", "cm1").unwrap();
+        for (scope, owner) in [("s-atlas", "at1"), ("s-cms", "cm1")] {
+            c.add_file(scope, "f0", owner, 100, "aabbccdd", None).unwrap();
+            c.add_replica("A-DISK", &DidKey::new(scope, "f0"), ReplicaState::Available, None)
+                .unwrap();
+            c.add_rule(RuleSpec::new(owner, DidKey::new(scope, "f0"), "A-DISK", 1)).unwrap();
+        }
+        c.add_identity("at1", crate::core::types::AuthType::UserPass, "at1", Some("pw"))
+            .unwrap();
+        c.auth_userpass("at1", "at1", "pw").unwrap();
+        assert_eq!(check(&c), Vec::new());
+        // a scope drifting out of its owner's VO is a tenant leak
+        c.scopes.update(&"s-cms".to_string(), c.now(), |s| s.vo = "atlas".into());
+        let v = check(&c);
+        assert!(v.iter().any(|x| x.invariant == "vo-isolation"), "{v:?}");
+        c.scopes.update(&"s-cms".to_string(), c.now(), |s| s.vo = "cms".into());
+        // an account switching VO under live usage breaks the rollup
+        c.accounts.update(&"cm1".to_string(), c.now(), |a| a.vo = "atlas".into());
+        let v = check(&c);
+        assert!(v.iter().any(|x| x.invariant == "vo-isolation"), "{v:?}");
     }
 
     #[test]

@@ -14,6 +14,38 @@ use crate::storagesim::synthetic_adler32_for;
 /// queries select on).
 const STREAMS: &[&str] = &["physics_Main", "physics_Late", "express_express"];
 
+/// Multi-VO tenant population: several virtual organisations sharing one
+/// catalog (the multi-VO operation mode), with heavy-tailed request
+/// rates across them — the workload the per-VO throttler shares and the
+/// tenant-isolation invariants are exercised against.
+#[derive(Debug, Clone)]
+pub struct MultiVoSpec {
+    /// Tenant names (3–5 in the acceptance runs).
+    pub vos: Vec<String>,
+    /// Accounts provisioned per VO (each with a home scope and a
+    /// userpass identity); thousands in total at default scale.
+    pub accounts_per_vo: usize,
+    /// Replication rules created per day across the population.
+    pub rules_per_day: usize,
+    /// Logins (token issues + validations) per day — auth churn.
+    pub logins_per_day: usize,
+    /// Zipf exponent for the VO pick: low-rank VOs dominate the request
+    /// stream (heavy tail), the rest trickle.
+    pub zipf_theta: f64,
+}
+
+impl Default for MultiVoSpec {
+    fn default() -> Self {
+        MultiVoSpec {
+            vos: vec!["atlas".into(), "cms".into(), "belle".into()],
+            accounts_per_vo: 700,
+            rules_per_day: 96,
+            logins_per_day: 192,
+            zipf_theta: 1.2,
+        }
+    }
+}
+
 /// Workload scale knobs (all per simulated day unless noted).
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
@@ -37,6 +69,9 @@ pub struct WorkloadSpec {
     /// "few bursts with the exception of weeks leading up to physics
     /// conferences") as (start_day, end_day, multiplier).
     pub burst: Option<(u32, u32, f64)>,
+    /// Multi-VO tenant population riding on top of the ATLAS-shaped
+    /// flow; `None` keeps the classic single-tenant workload.
+    pub multi_vo: Option<MultiVoSpec>,
     pub seed: u64,
 }
 
@@ -51,6 +86,7 @@ impl Default for WorkloadSpec {
             discovery_queries_per_day: 48,
             aod_lifetime_ms: 20 * DAY_MS,
             burst: None,
+            multi_vo: None,
             seed: 7,
         }
     }
@@ -71,6 +107,12 @@ pub struct Workload {
     carry_der: f64,
     carry_ana: f64,
     carry_disc: f64,
+    /// Provisioned tenant accounts as (vo, account, home scope); empty
+    /// until the first step of a multi-VO workload.
+    pub vo_accounts: Vec<(String, String, String)>,
+    vo_files: u64,
+    carry_vo_rules: f64,
+    carry_vo_logins: f64,
 }
 
 impl Workload {
@@ -87,6 +129,10 @@ impl Workload {
             carry_der: 0.0,
             carry_ana: 0.0,
             carry_disc: 0.0,
+            vo_accounts: Vec::new(),
+            vo_files: 0,
+            carry_vo_rules: 0.0,
+            carry_vo_logins: 0.0,
         }
     }
 
@@ -122,6 +168,109 @@ impl Workload {
         while self.carry_disc >= 1.0 {
             self.carry_disc -= 1.0;
             self.discover(ctx);
+        }
+        if self.spec.multi_vo.is_some() {
+            self.step_multi_vo(ctx, now, frac);
+        }
+    }
+
+    /// Multi-VO tenant traffic: provision the population on first use,
+    /// then drive Zipf-skewed per-tenant rule creation and auth churn.
+    fn step_multi_vo(&mut self, ctx: &Ctx, now: EpochMs, frac: f64) {
+        let mv = self.spec.multi_vo.clone().expect("checked by caller");
+        if self.vo_accounts.is_empty() {
+            self.provision_vos(ctx, &mv);
+        }
+        self.carry_vo_rules += mv.rules_per_day as f64 * frac;
+        while self.carry_vo_rules >= 1.0 {
+            self.carry_vo_rules -= 1.0;
+            self.vo_rule(ctx, now, &mv);
+        }
+        self.carry_vo_logins += mv.logins_per_day as f64 * frac;
+        while self.carry_vo_logins >= 1.0 {
+            self.carry_vo_logins -= 1.0;
+            self.vo_login(ctx, &mv);
+        }
+    }
+
+    fn provision_vos(&mut self, ctx: &Ctx, mv: &MultiVoSpec) {
+        let cat = &ctx.catalog;
+        for vo in &mv.vos {
+            for i in 0..mv.accounts_per_vo {
+                let name = format!("{vo}{i:04}");
+                if cat
+                    .add_account_vo(&name, crate::core::types::AccountType::User, "", vo)
+                    .is_err()
+                {
+                    continue; // already provisioned (recovered run)
+                }
+                let _ = cat.add_identity(
+                    &name,
+                    crate::core::types::AuthType::UserPass,
+                    &name,
+                    Some(&format!("pw-{name}")),
+                );
+                self.vo_accounts
+                    .push((vo.clone(), name.clone(), format!("user.{name}")));
+            }
+        }
+    }
+
+    /// Zipf-pick a tenant account: the VO rank is heavy-tailed (first
+    /// VOs dominate), the account within it uniform.
+    fn pick_vo_account(&mut self, mv: &MultiVoSpec) -> Option<(String, String, String)> {
+        if self.vo_accounts.is_empty() {
+            return None;
+        }
+        let vo_rank = self.rng.zipf(mv.vos.len(), mv.zipf_theta);
+        let start = vo_rank * mv.accounts_per_vo;
+        let in_vo: Vec<&(String, String, String)> = self
+            .vo_accounts
+            .iter()
+            .skip(start)
+            .take(mv.accounts_per_vo)
+            .collect();
+        if in_vo.is_empty() {
+            return Some(self.vo_accounts[0].clone());
+        }
+        Some(in_vo[self.rng.range_usize(0, in_vo.len())].clone())
+    }
+
+    /// One tenant replication: a file lands in the account's home scope
+    /// at the T0 and a rule fans it to the T2s — per-VO usage, locks,
+    /// and throttler traffic all attributed to the tenant.
+    fn vo_rule(&mut self, ctx: &Ctx, now: EpochMs, mv: &MultiVoSpec) {
+        let cat = &ctx.catalog;
+        let Some((_vo, account, scope)) = self.pick_vo_account(mv) else { return };
+        self.vo_files += 1;
+        let fname = format!("user.f{:07}", self.vo_files);
+        let bytes = (self.file_size() / 16).max(1);
+        let adler = synthetic_adler32_for(&fname, bytes);
+        if cat.add_file(&scope, &fname, &account, bytes, &adler, None).is_err() {
+            return;
+        }
+        let key = DidKey::new(&scope, &fname);
+        if let Ok(rep) = cat.add_replica("CERN-PROD", &key, ReplicaState::Available, None) {
+            if let Some(sys) = ctx.fleet.get("CERN-PROD") {
+                let _ = sys.put(&rep.pfn, bytes, now);
+            }
+        }
+        let activity = if self.vo_files % 3 == 0 { "Production" } else { "Analysis" };
+        let _ = cat.add_rule(
+            RuleSpec::new(&account, key, "tier=2", 1)
+                .with_lifetime(self.spec.aod_lifetime_ms)
+                .with_activity(activity),
+        );
+    }
+
+    /// One tenant login: issue a token via userpass and validate it —
+    /// the auth hot path under churn (housekeeping purges the expiry
+    /// backlog every virtual hour).
+    fn vo_login(&mut self, ctx: &Ctx, mv: &MultiVoSpec) {
+        let cat = &ctx.catalog;
+        let Some((_vo, account, _scope)) = self.pick_vo_account(mv) else { return };
+        if let Ok(token) = cat.auth_userpass(&account, &account, &format!("pw-{account}")) {
+            let _ = cat.validate_token(&token.token);
         }
     }
 
@@ -412,6 +561,42 @@ mod tests {
         // carry accumulation is float-based: allow the off-by-one ulp case
         assert!((3..=4).contains(&raws), "raws={raws}");
         assert!((1..=2).contains(&aods), "aods={aods}");
+    }
+
+    #[test]
+    fn multi_vo_population_generates_tenant_traffic() {
+        let ctx = build_grid(&GridSpec::default(), Clock::sim_at(0), Config::new());
+        let mut wl = Workload::new(WorkloadSpec {
+            raw_datasets_per_day: 0,
+            derivations_per_day: 0,
+            analysis_accesses_per_day: 0,
+            discovery_queries_per_day: 0,
+            multi_vo: Some(MultiVoSpec {
+                vos: vec!["atlas".into(), "cms".into(), "belle".into()],
+                accounts_per_vo: 40,
+                rules_per_day: 240,
+                logins_per_day: 120,
+                zipf_theta: 1.1,
+            }),
+            ..Default::default()
+        });
+        for h in 0..24 {
+            wl.step(&ctx, h * HOUR_MS, HOUR_MS, 0);
+        }
+        let cat = &ctx.catalog;
+        assert_eq!(wl.vo_accounts.len(), 120, "3 VOs × 40 accounts");
+        // the Zipf head dominates but the tail is present: usage shows
+        // up attributed to more than one tenant
+        let roll = cat.vo_usage();
+        assert!(!roll.is_empty(), "tenant usage accumulated: {roll:?}");
+        assert!(
+            roll.keys().all(|vo| ["atlas", "cms", "belle"].contains(&vo.as_str())),
+            "only tenant VOs in the rollup: {roll:?}"
+        );
+        assert!(cat.metrics.counter("auth.tokens_issued") > 0, "login churn ran");
+        // tenant isolation + rollup invariants hold under the generator
+        let v = crate::sim::invariants::check(cat);
+        assert_eq!(v, Vec::new());
     }
 
     #[test]

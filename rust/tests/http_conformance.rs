@@ -2,12 +2,15 @@
 //! §4.1): auth token lifecycle over userpass and x509 (including 401s on
 //! missing/expired/forged tokens), the error→status-code contract,
 //! `x-rucio-next-cursor` pagination round-trips with malformed-cursor
-//! 400s, and the atomicity of the bulk routes (`POST /replicas/bulk`
-//! all-or-nothing, `POST /rules/bulk` rollback).
+//! 400s, the atomicity of the bulk routes (`POST /replicas/bulk`
+//! all-or-nothing, `POST /rules/bulk` rollback), the cross-VO tenant
+//! isolation matrix (every scope-addressed route × a foreign-VO token),
+//! and the token-churn property (no interleaving of issue / expiry /
+//! purge ever validates a stale token).
 
 use std::sync::Arc;
 
-use rucio::common::clock::{Clock, HOUR_MS};
+use rucio::common::clock::{Clock, HOUR_MS, MINUTE_MS};
 use rucio::core::types::{AccountType, AuthType};
 use rucio::core::Catalog;
 use rucio::httpd::{HttpClient, HttpServer};
@@ -42,18 +45,23 @@ fn advance(cat: &Catalog, ms: i64) {
     }
 }
 
-/// Raw client carrying a valid alice token.
-fn authed_client(srv: &HttpServer) -> HttpClient {
+/// Userpass login for `account`; returns a client carrying the token.
+fn login(srv: &HttpServer, account: &str, password: &str) -> HttpClient {
     let c = HttpClient::new(&srv.url());
-    c.set_header("x-rucio-account", "alice");
-    c.set_header("x-rucio-username", "alice");
-    c.set_header("x-rucio-password", "pw");
+    c.set_header("x-rucio-account", account);
+    c.set_header("x-rucio-username", account);
+    c.set_header("x-rucio-password", password);
     let resp = c.get("/auth/userpass").unwrap();
     assert_eq!(resp.status, 200);
     let token = resp.header("x-rucio-auth-token").unwrap().to_string();
     let c = HttpClient::new(&srv.url());
     c.set_header("x-rucio-auth-token", &token);
     c
+}
+
+/// Raw client carrying a valid alice token.
+fn authed_client(srv: &HttpServer) -> HttpClient {
+    login(srv, "alice", "pw")
 }
 
 // ---------------------------------------------------------------------
@@ -337,4 +345,220 @@ fn rules_bulk_rolls_back_on_mid_batch_failure() {
     let ids = resp.body_json().unwrap();
     assert_eq!(ids.get("rule_ids").and_then(Json::as_arr).unwrap().len(), 2);
     assert_eq!(cat.rules.len(), 2);
+}
+
+// ---------------------------------------------------------------------
+// multi-VO tenant isolation
+// ---------------------------------------------------------------------
+
+/// Provision two tenants (atlas / cms) on the shared instance, each with
+/// a userpass identity (password "pw") and the home scope that
+/// `add_account_vo` creates.
+fn two_tenants(cat: &Catalog) {
+    for (acct, vo) in [("at1", "atlas"), ("cm1", "cms")] {
+        cat.add_account_vo(acct, AccountType::User, "", vo).unwrap();
+        cat.add_identity(acct, AuthType::UserPass, acct, Some("pw")).unwrap();
+    }
+}
+
+#[test]
+fn cross_vo_isolation_matrix() {
+    let (srv, cat) = server();
+    two_tenants(&cat);
+    let at = login(&srv, "at1", "pw");
+    let cm = login(&srv, "cm1", "pw");
+
+    // Each tenant provisions data in its home scope — every own-VO write
+    // route answers 2xx.
+    let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+    let mut rule_id = std::collections::BTreeMap::new();
+    for (c, scope) in [(&at, "user.at1"), (&cm, "user.cm1")] {
+        assert_eq!(c.post_json(&format!("/dids/{scope}/f1"), &file).unwrap().status, 201);
+        let ds = Json::obj().with("type", "DATASET");
+        assert_eq!(c.post_json(&format!("/dids/{scope}/ds"), &ds).unwrap().status, 201);
+        let att = Json::obj().with("child_scope", scope).with("child_name", "f1");
+        assert_eq!(c.post_json(&format!("/attachments/{scope}/ds"), &att).unwrap().status, 201);
+        assert_eq!(
+            c.post_json(&format!("/replicas/X-DISK/{scope}/f1"), &Json::obj()).unwrap().status,
+            201
+        );
+        let rule = Json::obj()
+            .with("scope", scope)
+            .with("name", "f1")
+            .with("rse_expression", "X-DISK");
+        let resp = c.post_json("/rules", &rule).unwrap();
+        assert_eq!(resp.status, 201);
+        rule_id.insert(scope, resp.body_json().unwrap().req_u64("rule_id").unwrap());
+        let meta = Json::obj().with("campaign", "mc26");
+        assert_eq!(c.post_json(&format!("/meta/{scope}/f1"), &meta).unwrap().status, 201);
+    }
+    let at_rule = rule_id["user.at1"];
+
+    // The matrix: every scope-addressed route × the foreign-VO token
+    // → 403. cms may neither read nor write anything under user.at1.
+    assert_eq!(cm.get("/dids/user.at1").unwrap().status, 403);
+    assert_eq!(cm.get("/dids/user.at1/f1").unwrap().status, 403);
+    assert_eq!(cm.get("/meta/user.at1/f1").unwrap().status, 403);
+    assert_eq!(
+        cm.post_json("/meta/user.at1/f1", &Json::obj().with("k", "v")).unwrap().status,
+        403
+    );
+    assert_eq!(cm.post_json("/dids/user.at1/sneak", &file).unwrap().status, 403);
+    let att = Json::obj().with("child_scope", "user.at1").with("child_name", "f1");
+    assert_eq!(cm.post_json("/attachments/user.at1/ds", &att).unwrap().status, 403);
+    assert_eq!(cm.get("/replicas/user.at1/f1").unwrap().status, 403);
+    assert_eq!(
+        cm.post_json("/replicas/X-DISK/user.at1/f1", &Json::obj()).unwrap().status,
+        403
+    );
+    let bulk = Json::obj().with("rse", "X-DISK").with(
+        "replicas",
+        Json::Arr(vec![Json::obj().with("scope", "user.at1").with("name", "f1")]),
+    );
+    assert_eq!(cm.post_json("/replicas/bulk", &bulk).unwrap().status, 403);
+    let rule = Json::obj()
+        .with("scope", "user.at1")
+        .with("name", "f1")
+        .with("rse_expression", "X-DISK");
+    assert_eq!(cm.post_json("/rules", &rule).unwrap().status, 403);
+    let bulk = Json::obj().with("rules", Json::Arr(vec![rule.clone()]));
+    assert_eq!(cm.post_json("/rules/bulk", &bulk).unwrap().status, 403);
+    assert_eq!(cm.get(&format!("/rules/{at_rule}")).unwrap().status, 403);
+    assert_eq!(cm.delete(&format!("/rules/{at_rule}")).unwrap().status, 403);
+    assert_eq!(cm.get("/dids/user.at1/f1/rules").unwrap().status, 403);
+    assert_eq!(cm.get("/accounts/at1/usage/X-DISK").unwrap().status, 403);
+    // admin-gated provisioning routes refuse a plain foreign tenant too
+    let acc = Json::obj().with("vo", "atlas");
+    assert_eq!(cm.post_json("/accounts/sneak", &acc).unwrap().status, 403);
+    let sc = Json::obj().with("account", "at1");
+    assert_eq!(cm.post_json("/scopes/s-sneak", &sc).unwrap().status, 403);
+
+    // Guard precedence: a foreign scope 403s even for names that do not
+    // exist (no existence oracle), while an unknown scope is a plain 404.
+    assert_eq!(cm.get("/dids/user.at1/no-such-name").unwrap().status, 403);
+    assert_eq!(cm.get("/dids/no.such.scope/x").unwrap().status, 404);
+
+    // Own-VO reads on the same routes are 2xx.
+    assert_eq!(at.get("/dids/user.at1").unwrap().status, 200);
+    assert_eq!(at.get("/dids/user.at1/f1").unwrap().status, 200);
+    assert_eq!(at.get("/meta/user.at1/f1").unwrap().status, 200);
+    assert_eq!(at.get("/replicas/user.at1/f1").unwrap().status, 200);
+    assert_eq!(at.get(&format!("/rules/{at_rule}")).unwrap().status, 200);
+    assert_eq!(at.get("/dids/user.at1/f1/rules").unwrap().status, 200);
+    assert_eq!(at.get("/accounts/at1/usage/X-DISK").unwrap().status, 200);
+
+    // List routes filter rather than 403: cms sees its own rows and no
+    // atlas rows on /scopes, /replicas and /rules.
+    let scopes: Vec<String> = cm
+        .get("/scopes")
+        .unwrap()
+        .body_ndjson()
+        .unwrap()
+        .iter()
+        .map(|r| r.req_str("scope").unwrap().to_string())
+        .collect();
+    assert!(scopes.contains(&"user.cm1".to_string()), "{scopes:?}");
+    assert!(!scopes.contains(&"user.at1".to_string()), "{scopes:?}");
+    let reps = cm.get("/replicas").unwrap().body_ndjson().unwrap();
+    assert!(reps.iter().all(|r| r.req_str("scope").unwrap() != "user.at1"));
+    assert!(reps.iter().any(|r| r.req_str("scope").unwrap() == "user.cm1"));
+    let rules = cm.get("/rules").unwrap().body_ndjson().unwrap();
+    assert!(rules.iter().all(|r| r.req_str("scope").unwrap() != "user.at1"));
+    assert!(rules.iter().any(|r| r.req_str("scope").unwrap() == "user.cm1"));
+
+    // The default-VO admin is the instance operator and crosses tenants.
+    let root = login(&srv, "root", "rootpw");
+    let scopes: Vec<String> = root
+        .get("/scopes")
+        .unwrap()
+        .body_ndjson()
+        .unwrap()
+        .iter()
+        .map(|r| r.req_str("scope").unwrap().to_string())
+        .collect();
+    assert!(scopes.contains(&"user.at1".to_string()));
+    assert!(scopes.contains(&"user.cm1".to_string()));
+    assert_eq!(root.get("/dids/user.at1/f1").unwrap().status, 200);
+    assert_eq!(root.get("/dids/user.cm1/f1").unwrap().status, 200);
+
+    // The owner can still tear down its own rule.
+    assert_eq!(at.delete(&format!("/rules/{at_rule}")).unwrap().status, 200);
+}
+
+// ---------------------------------------------------------------------
+// token revocation + churn
+// ---------------------------------------------------------------------
+
+#[test]
+fn suspending_an_account_revokes_its_live_tokens() {
+    let (srv, cat) = server();
+    let c = authed_client(&srv);
+    assert_eq!(c.get("/scopes").unwrap().status, 200);
+
+    // suspension must bite on the very next validation, not at expiry
+    cat.suspend_account("alice").unwrap();
+    let resp = c.get("/scopes").unwrap();
+    assert_eq!(resp.status, 401, "old token must die with the account");
+    assert!(
+        resp.body_json().unwrap().req_str("error").unwrap().contains("suspended"),
+    );
+    // and re-authentication is refused too
+    let raw = HttpClient::new(&srv.url());
+    raw.set_header("x-rucio-account", "alice");
+    raw.set_header("x-rucio-username", "alice");
+    raw.set_header("x-rucio-password", "pw");
+    assert_eq!(raw.get("/auth/userpass").unwrap().status, 401);
+}
+
+#[test]
+fn token_churn_never_validates_stale_tokens() {
+    let (srv, cat) = server();
+    // Interleave issue / expire / purge over six 40-minute rounds (token
+    // lifetime is 1h): after every step, every live token must validate
+    // and every expired one must 401 — whether or not housekeeping has
+    // purged its row yet.
+    let mut live: Vec<(String, i64)> = Vec::new();
+    let mut dead: Vec<String> = Vec::new();
+    for round in 0..6 {
+        for _ in 0..2 {
+            let c = HttpClient::new(&srv.url());
+            c.set_header("x-rucio-account", "alice");
+            c.set_header("x-rucio-username", "alice");
+            c.set_header("x-rucio-password", "pw");
+            let resp = c.get("/auth/userpass").unwrap();
+            assert_eq!(resp.status, 200);
+            let token = resp.header("x-rucio-auth-token").unwrap().to_string();
+            live.push((token, cat.now() + HOUR_MS));
+        }
+        advance(&cat, 40 * MINUTE_MS);
+        let now = cat.now();
+        let (expired, still): (Vec<(String, i64)>, Vec<(String, i64)>) =
+            live.into_iter().partition(|(_, exp)| *exp < now);
+        live = still;
+        dead.extend(expired.into_iter().map(|(t, _)| t));
+        if round % 2 == 1 {
+            cat.purge_expired_tokens();
+        }
+        for (token, _) in &live {
+            let c = HttpClient::new(&srv.url());
+            c.set_header("x-rucio-auth-token", token);
+            assert_eq!(c.get("/scopes").unwrap().status, 200, "live token rejected");
+        }
+        for token in &dead {
+            let c = HttpClient::new(&srv.url());
+            c.set_header("x-rucio-auth-token", token);
+            assert_eq!(c.get("/scopes").unwrap().status, 401, "stale token accepted");
+        }
+    }
+    assert!(!dead.is_empty(), "the interleaving must actually expire tokens");
+
+    // final sweep: everything still outstanding expires and purges away
+    advance(&cat, 2 * HOUR_MS);
+    assert_eq!(cat.purge_expired_tokens(), live.len());
+    assert_eq!(cat.tokens.len(), 0);
+    for (token, _) in &live {
+        let c = HttpClient::new(&srv.url());
+        c.set_header("x-rucio-auth-token", token);
+        assert_eq!(c.get("/scopes").unwrap().status, 401);
+    }
 }
