@@ -1,0 +1,154 @@
+//! Ablation: campaign-scale catalog operations — the two hot paths a
+//! planned-load campaign leans on.
+//!
+//! 1. **Reprocessing rule injection** — `add_rules_bulk` in campaign-
+//!    sized batches over a grid catalog of datasets whose replicas
+//!    already satisfy the destination (pure rule+lock materialization,
+//!    the §3 bulk-API throughput the paper's end-of-year reprocessing
+//!    depends on).
+//! 2. **Deletion rate** — a mass-deletion sweep end to end: bulk expiry
+//!    (`set_rule_expiration_bulk`), judge processing of the expired
+//!    rules, then greedy reaper sweeps until the storage is clean —
+//!    files/s and bytes/s against the paper's §4.3 deletion-rate tables.
+//!
+//! Full mode: 2000 datasets x 10 files (smoke: 60 x 5). Results are
+//! written to `BENCH_abl_campaign.json` for artifact upload.
+
+use rucio::benchkit::{bench_throughput, section, smoke_mode};
+use rucio::common::clock::{Clock, HOUR_MS};
+use rucio::common::config::Config;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{DidKey, ReplicaState};
+use rucio::daemons::{reaper::Reaper, Daemon};
+use rucio::jsonx::Json;
+use rucio::sim::grid::{build_grid, GridSpec};
+use rucio::storagesim::synthetic_adler32_for;
+
+const RSE: &str = "DE-T1-DISK";
+
+fn main() {
+    let (datasets, files_per, batch) =
+        if smoke_mode() { (60usize, 5usize, 20usize) } else { (2_000usize, 10usize, 100usize) };
+    let total_files = datasets * files_per;
+    let file_bytes = 1_000_000u64;
+    let mut results = Json::obj()
+        .with("bench", "abl_campaign")
+        .with("datasets", datasets as u64)
+        .with("files_per_dataset", files_per as u64)
+        .with("batch", batch as u64);
+
+    section(&format!(
+        "Ablation: campaign ops at {datasets} datasets x {files_per} files (batch {batch})"
+    ));
+
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", "11");
+    cfg.set("reaper", "tombstone_grace", "1h");
+    let ctx = build_grid(
+        &GridSpec { t2_per_region: 1, seed: 11, ..Default::default() },
+        Clock::sim_at(1_514_764_800_000),
+        cfg,
+    );
+    let cat = ctx.catalog.clone();
+    let sys = ctx.fleet.get(RSE).expect("grid RSE");
+
+    // -- corpus: datasets with replicas already resident on the target --
+    let now = cat.now();
+    let mut ds_keys: Vec<DidKey> = Vec::with_capacity(datasets);
+    for d in 0..datasets {
+        let ds = format!("repro.{d:05}");
+        cat.add_dataset("data18", &ds, "prod").unwrap();
+        let ds_key = DidKey::new("data18", &ds);
+        for f in 0..files_per {
+            let name = format!("repro.{d:05}.f{f}");
+            let adler = synthetic_adler32_for(&name, file_bytes);
+            cat.add_file("data18", &name, "prod", file_bytes, &adler, None).unwrap();
+            let key = DidKey::new("data18", &name);
+            cat.attach(&ds_key, &key).unwrap();
+            let rep = cat.add_replica(RSE, &key, ReplicaState::Available, None).unwrap();
+            sys.put(&rep.pfn, file_bytes, now).unwrap();
+        }
+        ds_keys.push(ds_key);
+    }
+    println!("corpus: {datasets} datasets, {total_files} files on {RSE}");
+
+    // -- 1. reprocessing rule injection --------------------------------
+    section("Reprocessing: bulk rule injection");
+    let mut rule_ids: Vec<u64> = Vec::with_capacity(datasets);
+    // the corpus satisfies every rule, so injection is pure rule+lock
+    // materialization — no transfer machinery on the timed path
+    let r = bench_throughput("add_rules_bulk (campaign batches)", datasets, || {
+        for chunk in ds_keys.chunks(batch) {
+            let specs: Vec<RuleSpec> = chunk
+                .iter()
+                .map(|k| RuleSpec::new("prod", k.clone(), RSE, 1).with_activity("Reprocessing"))
+                .collect();
+            rule_ids.extend(cat.add_rules_bulk(specs).unwrap());
+        }
+    });
+    results.set("rule_inject_rules_per_sec", r.ops_per_sec());
+    let locks: usize = rule_ids.iter().map(|id| cat.locks_by_rule.count(id)).sum();
+    assert_eq!(rule_ids.len(), datasets);
+    assert_eq!(locks, total_files, "one lock per file per rule");
+    results.set("locks_created", locks as u64);
+    println!("locks materialized: {locks}");
+
+    // -- 2. mass deletion: expiry -> judge -> reaper -------------------
+    section("Mass deletion: bulk expiry, judge, reaper sweeps");
+    let t_expire = cat.now() - 1;
+    let r = bench_throughput("set_rule_expiration_bulk", rule_ids.len(), || {
+        let n = cat.set_rule_expiration_bulk(&rule_ids, Some(t_expire));
+        assert_eq!(n, rule_ids.len());
+    });
+    results.set("expiry_bulk_rules_per_sec", r.ops_per_sec());
+
+    let t0 = std::time::Instant::now();
+    let mut judged = 0usize;
+    loop {
+        let n = cat.process_expired_rules(1_000);
+        if n == 0 {
+            break;
+        }
+        judged += n;
+    }
+    let judge_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(judged, rule_ids.len(), "every expired rule judged away");
+    results.set("judge_rules_per_sec", judged as f64 / judge_secs.max(1e-9));
+    println!("judge: {judged} expired rules in {judge_secs:.3}s");
+
+    // past the tombstone grace, then sweep until the storage is clean
+    if let Clock::Sim(s) = &cat.clock {
+        s.advance(2 * HOUR_MS);
+    }
+    let mut reaper = Reaper::new(ctx.clone(), "bench-1");
+    let t0 = std::time::Instant::now();
+    let mut deleted = 0usize;
+    while deleted < total_files {
+        let now = cat.now();
+        let n = reaper.tick(now);
+        if n == 0 {
+            if let Clock::Sim(s) = &cat.clock {
+                s.advance(30_000);
+            }
+            continue;
+        }
+        deleted += n;
+    }
+    let reap_secs = t0.elapsed().as_secs_f64();
+    let files_per_sec = deleted as f64 / reap_secs.max(1e-9);
+    assert_eq!(sys.file_count(), 0, "storage fully reaped");
+    assert_eq!(cat.metrics.counter("reaper.deleted"), total_files as u64);
+    results.set("deletion_files_per_sec", files_per_sec);
+    results.set(
+        "deletion_bytes_per_sec",
+        cat.metrics.counter("reaper.deleted_bytes") as f64 / reap_secs.max(1e-9),
+    );
+    results.set("deleted_files", deleted as u64);
+    println!(
+        "reaper: {deleted} files ({:.1} MB) in {reap_secs:.3}s = {files_per_sec:.0} files/s",
+        cat.metrics.counter("reaper.deleted_bytes") as f64 / 1e6
+    );
+
+    std::fs::write("BENCH_abl_campaign.json", results.to_string()).unwrap();
+    println!("\nabl_campaign bench OK (BENCH_abl_campaign.json written)");
+}

@@ -1,0 +1,204 @@
+//! Campaign analytics: the per-campaign report emitted by the
+//! [`crate::sim::campaign`] engine — time-to-complete, backlog/lock-count
+//! curves, per-link utilization, deletion rate, and recall-wave depth.
+//! These are the quantities the paper reports for its planned-load
+//! operations (end-of-year reprocessing, the §4.3 deletion-rate tables,
+//! §1.3 tape recall waves), condensed the same way
+//! [`crate::analytics::chaos`] condenses incident recovery.
+
+use std::collections::BTreeMap;
+
+use crate::analytics::chaos::BacklogSample;
+use crate::common::clock::{EpochMs, HOUR_MS};
+
+/// One point on a campaign's progress curves, captured by the driver's
+/// `run_span` observe hook every sampling interval.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CampaignSample {
+    pub t: EpochMs,
+    /// The standard work-queue snapshot (waiting/queued/submitted/retry…).
+    pub backlog: BacklogSample,
+    /// Total lock rows in the catalog (the lock-count curve).
+    pub locks_total: usize,
+    /// Campaign rules not yet `Ok` (0 = converged).
+    pub rules_pending: usize,
+    /// Cumulative reaper deletions at this instant (files / bytes).
+    pub deleted_files: u64,
+    pub deleted_bytes: u64,
+    /// Outstanding tape recall queue depth across the fleet.
+    pub staging_depth: usize,
+    /// Hottest single FTS link at this instant (active transfers).
+    pub peak_link_active: usize,
+}
+
+/// The condensed outcome of one campaign run. `PartialEq` so fixed-seed
+/// determinism can be asserted by comparing whole reports.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CampaignReport {
+    pub name: String,
+    /// "reprocessing" | "mass-deletion" | "tape-carousel".
+    pub kind: String,
+    pub started_at: EpochMs,
+    pub finished_at: EpochMs,
+    /// Did the campaign converge within its day budget?
+    pub completed: bool,
+    /// Virtual time from launch to convergence (`None` = never).
+    pub time_to_complete_ms: Option<i64>,
+    /// Rules injected by the campaign (reprocessing / carousel waves).
+    pub rules_created: usize,
+    /// Rule batches that failed outright (rolled back by
+    /// `add_rules_bulk`) — non-zero means the catalog refused load.
+    pub batches_failed: usize,
+    /// Locks created for the campaign's rules.
+    pub locks_created: usize,
+    /// DIDs the campaign targeted (datasets matched by the filter).
+    pub datasets_targeted: usize,
+    /// Rules the campaign expired (mass deletion).
+    pub rules_expired: usize,
+    /// Reaper work attributed to the campaign window.
+    pub deleted_files: u64,
+    pub deleted_bytes: u64,
+    /// Deletion throughput over the campaign window (files/hour).
+    pub deletion_rate_per_hour: f64,
+    /// Curve extremes.
+    pub peak_backlog: usize,
+    pub peak_locks: usize,
+    /// Tape carousel: waves executed and the deepest recall queue seen.
+    pub waves: usize,
+    pub max_wave_depth: usize,
+    /// Peak concurrent transfers observed per (src_site, dst_site) link.
+    pub per_link_peak: BTreeMap<(String, String), usize>,
+    /// The FTS per-link concurrency cap in force during the run.
+    pub link_cap: usize,
+    /// True if any sample saw a link above the cap (must stay false).
+    pub link_cap_exceeded: bool,
+    /// The full sampled curves.
+    pub samples: Vec<CampaignSample>,
+}
+
+impl CampaignReport {
+    /// Worst per-link concurrency across the whole run.
+    pub fn peak_link_active(&self) -> usize {
+        self.per_link_peak.values().copied().max().unwrap_or(0)
+    }
+
+    /// One summary row (shared layout with [`report_table`]).
+    pub fn summary_row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            self.kind.clone(),
+            self.datasets_targeted.to_string(),
+            self.rules_created.to_string(),
+            self.locks_created.to_string(),
+            self.time_to_complete_ms
+                .map(|ms| format!("{:.1}", ms as f64 / HOUR_MS as f64))
+                .unwrap_or_else(|| "never".into()),
+            self.deleted_files.to_string(),
+            format!("{:.0}", self.deletion_rate_per_hour),
+            self.peak_backlog.to_string(),
+            self.max_wave_depth.to_string(),
+            format!("{}/{}", self.peak_link_active(), self.link_cap),
+        ]
+    }
+
+    /// The summary header matching [`CampaignReport::summary_row`].
+    pub fn summary_header() -> Vec<&'static str> {
+        vec![
+            "campaign",
+            "kind",
+            "datasets",
+            "rules",
+            "locks",
+            "t-complete (h)",
+            "deleted",
+            "del/h",
+            "peak backlog",
+            "wave depth",
+            "link peak/cap",
+        ]
+    }
+}
+
+/// Season summary: one row per campaign (CSV-able like the §4.6 report
+/// lists).
+pub fn report_table(reports: &[CampaignReport]) -> Vec<Vec<String>> {
+    let mut rows = vec![CampaignReport::summary_header()
+        .into_iter()
+        .map(String::from)
+        .collect::<Vec<_>>()];
+    for r in reports {
+        rows.push(r.summary_row());
+    }
+    rows
+}
+
+/// A campaign's progress curves as CSV rows (plot source for the
+/// backlog/lock-count/deletion-rate/wave-depth figures).
+pub fn curves_csv(report: &CampaignReport) -> String {
+    let mut out = String::from(
+        "t_ms,backlog,locks_total,rules_pending,deleted_files,deleted_bytes,\
+         staging_depth,peak_link_active\n",
+    );
+    for s in &report.samples {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            s.t - report.started_at,
+            s.backlog.backlog(),
+            s.locks_total,
+            s.rules_pending,
+            s.deleted_files,
+            s.deleted_bytes,
+            s.staging_depth,
+            s.peak_link_active,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: EpochMs, locks: usize) -> CampaignSample {
+        CampaignSample { t, locks_total: locks, ..Default::default() }
+    }
+
+    #[test]
+    fn summary_and_curves_render() {
+        let mut per_link_peak = BTreeMap::new();
+        per_link_peak.insert(("A".to_string(), "B".to_string()), 7);
+        let r = CampaignReport {
+            name: "reprocess-raw".into(),
+            kind: "reprocessing".into(),
+            started_at: 1000,
+            finished_at: 1000 + 2 * HOUR_MS,
+            completed: true,
+            time_to_complete_ms: Some(2 * HOUR_MS),
+            rules_created: 40,
+            locks_created: 320,
+            datasets_targeted: 40,
+            deletion_rate_per_hour: 12.5,
+            per_link_peak,
+            link_cap: 20,
+            samples: vec![sample(1000, 10), sample(2000, 300)],
+            ..Default::default()
+        };
+        assert_eq!(r.peak_link_active(), 7);
+        let rows = report_table(std::slice::from_ref(&r));
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), rows[1].len(), "header and row widths match");
+        assert_eq!(rows[1][5], "2.0", "time-to-complete in hours");
+        let csv = curves_csv(&r);
+        assert_eq!(csv.lines().count(), 3, "header + 2 samples");
+        assert!(csv.lines().nth(2).unwrap().starts_with("1000,"), "t relative to start");
+    }
+
+    #[test]
+    fn reports_compare_for_determinism() {
+        let a = CampaignReport { name: "x".into(), rules_created: 5, ..Default::default() };
+        let b = CampaignReport { name: "x".into(), rules_created: 5, ..Default::default() };
+        assert_eq!(a, b);
+        let c = CampaignReport { name: "x".into(), rules_created: 6, ..Default::default() };
+        assert_ne!(a, c);
+    }
+}

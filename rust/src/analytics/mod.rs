@@ -2,6 +2,7 @@
 //! report/accounting pipelines (CSV lists) — the Graphite/Elasticsearch/
 //! Hadoop stack collapsed to in-process equivalents.
 
+pub mod campaigns;
 pub mod chaos;
 pub mod metrics;
 pub mod reports;

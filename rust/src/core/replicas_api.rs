@@ -420,6 +420,18 @@ impl Catalog {
         }
     }
 
+    /// Record a *write* access (upload/put traces): refreshes the replica
+    /// access timestamp — so freshly written data is not an immediate LRU
+    /// victim — without bumping DID popularity. Popularity is a *read*
+    /// signal (§4.3 LRU deletion, §6.1 placement); folding writes into it
+    /// would inflate the very data that has never been read.
+    pub fn touch_replica_access(&self, rse: &str, did: &DidKey) {
+        let now = self.now();
+        self.replicas.update(&(rse.to_string(), did.clone()), now, |r| {
+            r.accessed_at = now;
+        });
+    }
+
     pub(crate) fn touch_popularity(&self, did: &DidKey, now: EpochMs) {
         let window = self.cfg.get_duration_ms("popularity", "window", 14 * 24 * 3_600_000);
         if self.popularity.contains(did) {

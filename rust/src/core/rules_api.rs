@@ -1033,6 +1033,25 @@ impl Catalog {
         }
     }
 
+    /// Campaign-scale expiry: point many rules' lifetimes at `expires_at`
+    /// in one pass (mass-deletion sweeps, §4.3 deletion-rate tables). The
+    /// `rules_by_expiry` index follows each update, so the judge-cleaner's
+    /// next `process_expired_rules` sweep picks the whole batch up.
+    /// Unknown rule ids are skipped; returns the number of rules updated.
+    pub fn set_rule_expiration_bulk(
+        &self,
+        rule_ids: &[u64],
+        expires_at: Option<EpochMs>,
+    ) -> usize {
+        let now = self.now();
+        let updated = self
+            .rules
+            .update_bulk(rule_ids, now, |r| r.expires_at = expires_at)
+            .len();
+        self.metrics.incr("rules.expiry_bulk_updates", updated as u64);
+        updated
+    }
+
     /// Expired rules (judge-cleaner work queue): delete up to `limit`
     /// rules whose expiry passed.
     pub fn process_expired_rules(&self, limit: usize) -> usize {

@@ -126,6 +126,7 @@ impl Daemon for Reaper {
             if eligible.is_empty() {
                 continue;
             }
+            cat.metrics.incr("reaper.sweeps", 1);
             // Storage deletes happen per file; the catalog rows for every
             // successful delete on this RSE land in ONE batched commit.
             let mut victims: Vec<Replica> = Vec::new();
@@ -141,7 +142,11 @@ impl Daemon for Reaper {
                     let Some(sys) = self.ctx.fleet.get(&rse.name) else { continue };
                     let mut free = sys.free();
                     if free >= min_free_bytes {
-                        continue; // plenty of space: keep caches warm
+                        // plenty of space: keep caches warm. Counted so
+                        // mass-deletion campaigns can verify the
+                        // watermark actually held mid-sweep.
+                        cat.metrics.incr("reaper.watermark_holds", 1);
+                        continue;
                     }
                     // LRU order (§4.3: "selection of files to remove is
                     // automatically derived from their popularity ...
@@ -155,6 +160,7 @@ impl Daemon for Reaper {
                         if self.storage_delete(&rep) {
                             free += rep.bytes;
                             victims.push(rep);
+                            cat.metrics.incr("reaper.lru_evicted", 1);
                         }
                     }
                 }

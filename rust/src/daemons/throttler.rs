@@ -445,6 +445,18 @@ impl Daemon for Throttler {
         }
 
         let n = cat.release_waiting_requests(&released, now);
+        // Per-activity release accounting: campaign reports read these to
+        // show how admission paced a flood (e.g. a tape-carousel's
+        // "Staging" waves against the per-link caps).
+        let mut by_activity: BTreeMap<String, u64> = BTreeMap::new();
+        for (id, _) in &released {
+            if let Some(req) = cat.requests.get(id) {
+                *by_activity.entry(req.activity).or_insert(0) += 1;
+            }
+        }
+        for (activity, count) in by_activity {
+            cat.metrics.incr(&format!("throttler.released.{activity}"), count);
+        }
         cat.metrics
             .gauge_set("throttler.waiting", cat.requests_by_state.count(&RequestState::Waiting) as u64);
         n

@@ -71,9 +71,15 @@ impl Daemon for Tracer {
                 ) else {
                     continue;
                 };
-                self.ctx
-                    .catalog
-                    .touch_replica(rse, &DidKey::new(scope, name));
+                let did = DidKey::new(scope, name);
+                // Popularity is a READ signal: only job-input / download
+                // traces bump it. Write traces (upload/put) still refresh
+                // the access timestamp so fresh data isn't an LRU victim,
+                // but must not skew C3PO placement or reaper victim order.
+                match m.event_type.as_str() {
+                    "download" | "get" => self.ctx.catalog.touch_replica(rse, &did),
+                    _ => self.ctx.catalog.touch_replica_access(rse, &did),
+                }
                 processed += 1;
             }
         }
@@ -120,6 +126,32 @@ mod tests {
         assert_eq!(tracer.tick(cat.now()), 2);
         assert_eq!(cat.popularity.get(&f).unwrap().accesses, 2);
         let _ = ReplicaState::Available;
+    }
+
+    #[test]
+    fn write_traces_refresh_timestamp_without_popularity() {
+        let (ctx, cat) = rig();
+        let f = seed_file(&ctx, "f1", 100);
+        let mut tracer = Tracer::new(ctx.clone());
+        // establish a read-popularity baseline of 1
+        emit_trace(&ctx.broker, cat.now(), "download", "SRC-DISK", "data18", "f1");
+        assert_eq!(tracer.tick(cat.now()), 1);
+        assert_eq!(cat.popularity.get(&f).unwrap().accesses, 1);
+        let before = cat.get_replica("SRC-DISK", &f).unwrap().accessed_at;
+        if let crate::common::clock::Clock::Sim(s) = &cat.clock {
+            s.advance(60_000);
+        }
+        // a write trace must NOT look like a read
+        emit_trace(&ctx.broker, cat.now(), "upload", "SRC-DISK", "data18", "f1");
+        emit_trace(&ctx.broker, cat.now(), "put", "SRC-DISK", "data18", "f1");
+        assert_eq!(tracer.tick(cat.now()), 2);
+        assert_eq!(
+            cat.popularity.get(&f).unwrap().accesses,
+            1,
+            "upload/put traces must not inflate read popularity"
+        );
+        let after = cat.get_replica("SRC-DISK", &f).unwrap().accessed_at;
+        assert!(after > before, "write traces still refresh the access timestamp");
     }
 
     #[test]

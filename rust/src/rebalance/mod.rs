@@ -33,6 +33,11 @@ pub struct Bb8 {
     pub ctx: Ctx,
     /// Max bytes moved per day (config `bb8.max_daily_bytes`).
     pub max_daily_bytes: u64,
+    /// Give up on a move whose child rule has not converged after this
+    /// long (config `bb8.abandon_timeout`): the child is deleted, the
+    /// original rule unpinned, and its bytes credited back to the daily
+    /// budget.
+    pub abandon_timeout_ms: i64,
     day_start: EpochMs,
     moved_today: u64,
     pub in_flight: Vec<Move>,
@@ -43,9 +48,12 @@ impl Bb8 {
     pub fn new(ctx: Ctx) -> Self {
         let max_daily =
             ctx.catalog.cfg.get_bytes("bb8", "max_daily_bytes", 50 * crate::common::units::TB);
+        let abandon_timeout_ms =
+            ctx.catalog.cfg.get_duration_ms("bb8", "abandon_timeout", 2 * DAY_MS);
         Bb8 {
             ctx,
             max_daily_bytes: max_daily,
+            abandon_timeout_ms,
             day_start: 0,
             moved_today: 0,
             in_flight: Vec::new(),
@@ -133,8 +141,14 @@ impl Bb8 {
     }
 
     /// Finish moves whose child rule is OK: delete the original rule
-    /// (freeing the source replicas for the reaper).
-    pub fn finalize_moves(&mut self) -> usize {
+    /// (freeing the source replicas for the reaper). Moves whose child
+    /// has not converged within `bb8.abandon_timeout` are abandoned —
+    /// the failed child is deleted, the original rule unpinned, and the
+    /// scheduled bytes credited back to today's budget, so a STUCK child
+    /// can neither pin its source forever nor eat the daily cap. A child
+    /// that vanished outright (expired mid-move) is counted as lost and
+    /// the source rule left eligible for the next pass.
+    pub fn finalize_moves(&mut self, now: EpochMs) -> usize {
         let cat = self.ctx.catalog.clone();
         let mut done = 0;
         let mut remaining = Vec::new();
@@ -145,10 +159,19 @@ impl Bb8 {
                     done += 1;
                     cat.metrics.incr("bb8.moves_completed", 1);
                 }
+                Some(_) if now - mv.started_at > self.abandon_timeout_ms => {
+                    let _ = cat.delete_rule(mv.new_rule);
+                    cat.rules.update(&mv.old_rule, now, |r| r.child_rule = None);
+                    self.moved_today = self.moved_today.saturating_sub(mv.bytes);
+                    cat.metrics.incr("bb8.moves_abandoned", 1);
+                }
                 Some(_) => remaining.push(mv),
                 None => {
-                    // child vanished (expired?) — drop the link
-                    cat.rules.update(&mv.old_rule, cat.now(), |r| r.child_rule = None);
+                    // child vanished (expired?) — drop the link; the rule
+                    // becomes movable again on the next pass
+                    cat.rules.update(&mv.old_rule, now, |r| r.child_rule = None);
+                    self.moved_today = self.moved_today.saturating_sub(mv.bytes);
+                    cat.metrics.incr("bb8.moves_lost", 1);
                 }
             }
         }
@@ -249,7 +272,7 @@ impl Daemon for Bb8 {
             self.day_start = now;
             self.moved_today = 0;
         }
-        let finalized = self.finalize_moves();
+        let finalized = self.finalize_moves(now);
         let started = if self.moved_today < self.max_daily_bytes {
             self.background_pass(now)
         } else {
@@ -307,14 +330,14 @@ mod tests {
         let old = cat.get_rule(mv.old_rule).unwrap();
         assert_eq!(old.child_rule, Some(mv.new_rule));
         // original rule NOT deleted while the child replicates
-        assert_eq!(bb8.finalize_moves(), 0);
+        assert_eq!(bb8.finalize_moves(cat.now()), 0);
         assert!(cat.get_rule(mv.old_rule).is_ok());
         // child's destination excludes the source
         let child = cat.get_rule(mv.new_rule).unwrap();
         assert!(child.rse_expression.contains("\\SRC-DISK"));
         // complete transfers → finalize deletes the original
         drive_transfers(&ctx);
-        let done = bb8.finalize_moves();
+        let done = bb8.finalize_moves(cat.now());
         assert!(done >= 1);
         assert!(cat.get_rule(mv.old_rule).is_err(), "original removed after move");
     }
@@ -327,7 +350,7 @@ mod tests {
         assert_eq!(moved, 3, "all resident rules scheduled away");
         assert!(!cat.get_rse("SRC-DISK").unwrap().availability_write);
         drive_transfers(&ctx);
-        bb8.finalize_moves();
+        bb8.finalize_moves(cat.now());
         // no rule keeps locks on the drained RSE
         let mut locks_on_src = 0;
         cat.locks.for_each(|l| {
@@ -344,6 +367,65 @@ mod tests {
         let cat = ctx.catalog.clone();
         let moved = bb8.manual("SRC-DISK", 1500, cat.now()).unwrap();
         assert_eq!(moved, 2, "two 1000-byte rules cover 1500 bytes");
+    }
+
+    #[test]
+    fn stuck_child_abandoned_after_timeout() {
+        let (ctx, mut bb8) = unbalanced();
+        let cat = ctx.catalog.clone();
+        bb8.max_daily_bytes = 1000; // exactly one move fits the budget
+        assert_eq!(bb8.background_pass(cat.now()), 1);
+        let mv = bb8.in_flight[0].clone();
+        let budget_before = bb8.moved_today;
+        // force the child rule STUCK: exhaust every transfer attempt
+        for req in cat.requests.scan(|r| r.rule_id == mv.new_rule) {
+            for _ in 0..3 {
+                cat.on_transfer_failed(req.id, "dest refused").unwrap();
+            }
+        }
+        assert_eq!(cat.get_rule(mv.new_rule).unwrap().state, RuleState::Stuck);
+        // within the abandon window the move stays pending
+        assert_eq!(bb8.finalize_moves(cat.now()), 0);
+        assert_eq!(bb8.in_flight.len(), 1, "stuck move still pending inside the window");
+        // past the window: child deleted, source unpinned, budget refunded
+        let later = cat.now() + bb8.abandon_timeout_ms + 1;
+        assert_eq!(bb8.finalize_moves(later), 0);
+        assert!(
+            !bb8.in_flight.iter().any(|m| m.old_rule == mv.old_rule),
+            "abandoned move leaves in_flight"
+        );
+        assert!(cat.get_rule(mv.new_rule).is_err(), "failed child rule removed");
+        assert_eq!(cat.get_rule(mv.old_rule).unwrap().child_rule, None);
+        assert!(bb8.moved_today < budget_before, "scheduled bytes credited back");
+        assert_eq!(cat.metrics.counter("bb8.moves_abandoned"), 1);
+        // the source rule is movable again on the next pass
+        assert!(bb8.background_pass(cat.now()) >= 1, "rule re-eligible after abandon");
+    }
+
+    #[test]
+    fn vanished_child_counted_lost_and_rule_retried() {
+        let (ctx, mut bb8) = unbalanced();
+        let cat = ctx.catalog.clone();
+        bb8.max_daily_bytes = 1000; // exactly one move fits the budget
+        assert_eq!(bb8.background_pass(cat.now()), 1);
+        let mv = bb8.in_flight[0].clone();
+        let budget_before = bb8.moved_today;
+        // the child rule expires mid-move (judge-cleaner sweep)
+        cat.rules.update(&mv.new_rule, cat.now(), |r| r.expires_at = Some(cat.now() - 1));
+        assert_eq!(cat.process_expired_rules(10), 1);
+        assert!(cat.get_rule(mv.new_rule).is_err());
+        assert_eq!(bb8.finalize_moves(cat.now()), 0);
+        assert_eq!(cat.metrics.counter("bb8.moves_lost"), 1);
+        assert!(
+            !bb8.in_flight.iter().any(|m| m.old_rule == mv.old_rule),
+            "lost move is dropped from in_flight"
+        );
+        assert_eq!(cat.get_rule(mv.old_rule).unwrap().child_rule, None);
+        assert!(bb8.moved_today < budget_before, "lost bytes credited back");
+        // the stranded rule is picked up again by the next pass
+        let retried = bb8.background_pass(cat.now());
+        assert!(retried >= 1, "source rule eligible for retry after loss");
+        assert!(bb8.in_flight.iter().any(|m| m.old_rule == mv.old_rule));
     }
 
     #[test]

@@ -1,0 +1,604 @@
+//! The declarative campaign engine: typed, planned-load operations the
+//! paper describes running against the real system — end-of-year
+//! **reprocessing** (bulk rule creation over an entire datatype),
+//! **mass deletion** (lifetime-expiry sweeps feeding the §4.3 reapers),
+//! and the **tape carousel** (staged recall waves through the tape
+//! systems, paced by throttler activity shares and per-link FTS caps).
+//!
+//! A [`CampaignSpec`] names the operation; [`run_campaign`] executes it
+//! on a fully-wired [`Driver`] under virtual time via
+//! [`Driver::run_span`], sampling the backlog/lock/deletion/recall
+//! curves as it goes, and condenses the run into a
+//! [`CampaignReport`]. Campaigns use only the virtual clock and the
+//! catalog's own bulk APIs, so a fixed-seed run is bit-for-bit
+//! reproducible — the standing test suite compares whole reports.
+
+use std::collections::BTreeMap;
+
+use crate::analytics::campaigns::{CampaignReport, CampaignSample};
+use crate::analytics::chaos::BacklogSample;
+use crate::common::clock::{EpochMs, HOUR_MS, MINUTE_MS};
+use crate::common::error::Result;
+use crate::core::metaexpr;
+use crate::core::rules_api::RuleSpec;
+use crate::core::types::{DidKey, RuleState};
+use crate::daemons::Ctx;
+use crate::sim::driver::Driver;
+
+/// What a campaign does. Every variant selects its victim datasets with
+/// a metadata expression (e.g. `datatype=RAW&project=data18`) evaluated
+/// through the catalog's meta-expression index.
+#[derive(Debug, Clone)]
+pub enum CampaignKind {
+    /// Bulk rule creation over every matching dataset: one rule per
+    /// dataset on `destination`, injected through `add_rules_bulk` in
+    /// batches of `batch`. The campaign completes when every created
+    /// rule reaches `Ok`.
+    Reprocessing {
+        scope: String,
+        filter: String,
+        destination: String,
+        copies: u32,
+        lifetime_ms: Option<i64>,
+        batch: usize,
+    },
+    /// Lifetime-expiry sweep: every rule protecting a matching dataset
+    /// is expired in bulk; the judge removes the rules, tombstones flow
+    /// to the reapers (greedy and non-greedy alike), and the campaign
+    /// completes when the expired rules are gone and the replica
+    /// population of the targeted data has converged — zero everywhere,
+    /// or stable where non-greedy caches legitimately keep it.
+    MassDeletion { scope: String, filter: String },
+    /// Staged recall waves: matching tape-resident datasets are
+    /// processed `wave_datasets` at a time — each wave pre-stages its
+    /// files on the tape systems (batched through the staging queue)
+    /// and pins them to `destination` with short-lived rules. A wave
+    /// must fully land before the next starts, so the stage-in flood is
+    /// paced by the throttler's activity shares and never outruns the
+    /// per-link FTS caps.
+    TapeCarousel {
+        scope: String,
+        filter: String,
+        destination: String,
+        lifetime_ms: i64,
+        wave_datasets: usize,
+    },
+}
+
+impl CampaignKind {
+    fn label(&self) -> &'static str {
+        match self {
+            CampaignKind::Reprocessing { .. } => "reprocessing",
+            CampaignKind::MassDeletion { .. } => "mass-deletion",
+            CampaignKind::TapeCarousel { .. } => "tape-carousel",
+        }
+    }
+}
+
+/// One declarative campaign: the operation plus its execution envelope.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// Account owning any rules the campaign creates.
+    pub account: String,
+    /// Activity for created rules' transfers (throttler share key).
+    pub activity: String,
+    pub kind: CampaignKind,
+    /// Virtual-time budget; a campaign that has not converged when the
+    /// budget runs out is reported with `completed = false`.
+    pub budget_hours: i64,
+    /// Simulation tick resolution while the campaign runs.
+    pub tick_ms: i64,
+    /// Curve-sampling cadence.
+    pub sample_every_ms: i64,
+}
+
+impl CampaignSpec {
+    fn envelope(name: &str, account: &str, activity: &str, kind: CampaignKind) -> Self {
+        CampaignSpec {
+            name: name.to_string(),
+            account: account.to_string(),
+            activity: activity.to_string(),
+            kind,
+            budget_hours: 7 * 24,
+            tick_ms: 10 * MINUTE_MS,
+            sample_every_ms: 30 * MINUTE_MS,
+        }
+    }
+
+    /// Reprocessing campaign over `scope` datasets matching `filter`.
+    pub fn reprocessing(name: &str, scope: &str, filter: &str, destination: &str) -> Self {
+        Self::envelope(
+            name,
+            "prod",
+            "Reprocessing",
+            CampaignKind::Reprocessing {
+                scope: scope.to_string(),
+                filter: filter.to_string(),
+                destination: destination.to_string(),
+                copies: 1,
+                lifetime_ms: None,
+                batch: 100,
+            },
+        )
+    }
+
+    /// Mass-deletion campaign over `scope` datasets matching `filter`.
+    pub fn mass_deletion(name: &str, scope: &str, filter: &str) -> Self {
+        Self::envelope(
+            name,
+            "prod",
+            "Production",
+            CampaignKind::MassDeletion { scope: scope.to_string(), filter: filter.to_string() },
+        )
+    }
+
+    /// Tape-carousel recall of `scope` datasets matching `filter`, in
+    /// waves of `wave_datasets`, pinned to `destination` for 7 days.
+    pub fn tape_carousel(
+        name: &str,
+        scope: &str,
+        filter: &str,
+        destination: &str,
+        wave_datasets: usize,
+    ) -> Self {
+        Self::envelope(
+            name,
+            "prod",
+            "Staging",
+            CampaignKind::TapeCarousel {
+                scope: scope.to_string(),
+                filter: filter.to_string(),
+                destination: destination.to_string(),
+                lifetime_ms: 7 * 24 * HOUR_MS,
+                wave_datasets: wave_datasets.max(1),
+            },
+        )
+    }
+
+    pub fn with_budget_hours(mut self, hours: i64) -> Self {
+        self.budget_hours = hours.max(1);
+        self
+    }
+
+    pub fn with_cadence(mut self, tick_ms: i64, sample_every_ms: i64) -> Self {
+        self.tick_ms = tick_ms.max(MINUTE_MS);
+        self.sample_every_ms = sample_every_ms.max(self.tick_ms);
+        self
+    }
+
+    pub fn with_account(mut self, account: &str) -> Self {
+        self.account = account.to_string();
+        self
+    }
+
+    pub fn with_activity(mut self, activity: &str) -> Self {
+        self.activity = activity.to_string();
+        self
+    }
+}
+
+/// Curve accumulator shared by every campaign kind: samples on the
+/// driver's observe cadence, tracks per-link peaks against the FTS cap,
+/// and baselines the reaper counters so deletion work is attributed to
+/// the campaign window.
+struct Curves {
+    samples: Vec<CampaignSample>,
+    per_link_peak: BTreeMap<(String, String), usize>,
+    link_cap: usize,
+    cap_exceeded: bool,
+    start_deleted: u64,
+    start_deleted_bytes: u64,
+}
+
+impl Curves {
+    fn new(ctx: &Ctx) -> Curves {
+        Curves {
+            samples: Vec::new(),
+            per_link_peak: BTreeMap::new(),
+            link_cap: ctx.fts.iter().map(|f| f.max_active_per_link).max().unwrap_or(0),
+            cap_exceeded: false,
+            start_deleted: ctx.catalog.metrics.counter("reaper.deleted"),
+            start_deleted_bytes: ctx.catalog.metrics.counter("reaper.deleted_bytes"),
+        }
+    }
+
+    fn observe(&mut self, ctx: &Ctx, rules_pending: usize) {
+        let cat = &ctx.catalog;
+        let mut peak_link_active = 0;
+        for fts in &ctx.fts {
+            for (link, n) in fts.active_per_link() {
+                peak_link_active = peak_link_active.max(n);
+                if n > fts.max_active_per_link {
+                    self.cap_exceeded = true;
+                }
+                let e = self.per_link_peak.entry(link).or_insert(0);
+                *e = (*e).max(n);
+            }
+        }
+        self.samples.push(CampaignSample {
+            t: cat.now(),
+            backlog: BacklogSample::capture(ctx),
+            locks_total: cat.locks.len(),
+            rules_pending,
+            deleted_files: cat.metrics.counter("reaper.deleted") - self.start_deleted,
+            deleted_bytes: cat.metrics.counter("reaper.deleted_bytes") - self.start_deleted_bytes,
+            staging_depth: ctx.fleet.staging_depth(),
+            peak_link_active,
+        });
+    }
+
+    /// Fold the curves into a report skeleton.
+    fn into_report(self, spec: &CampaignSpec, started_at: EpochMs, ctx: &Ctx) -> CampaignReport {
+        let peak_backlog = self.samples.iter().map(|s| s.backlog.backlog()).max().unwrap_or(0);
+        let peak_locks = self.samples.iter().map(|s| s.locks_total).max().unwrap_or(0);
+        let max_wave_depth = self.samples.iter().map(|s| s.staging_depth).max().unwrap_or(0);
+        let finished_at = ctx.catalog.now();
+        let deleted_files = ctx.catalog.metrics.counter("reaper.deleted") - self.start_deleted;
+        let deleted_bytes =
+            ctx.catalog.metrics.counter("reaper.deleted_bytes") - self.start_deleted_bytes;
+        let hours = ((finished_at - started_at) as f64 / HOUR_MS as f64).max(1e-9);
+        CampaignReport {
+            name: spec.name.clone(),
+            kind: spec.kind.label().to_string(),
+            started_at,
+            finished_at,
+            deleted_files,
+            deleted_bytes,
+            deletion_rate_per_hour: deleted_files as f64 / hours,
+            peak_backlog,
+            peak_locks,
+            max_wave_depth,
+            per_link_peak: self.per_link_peak,
+            link_cap: self.link_cap,
+            link_cap_exceeded: self.cap_exceeded,
+            samples: self.samples,
+            ..Default::default()
+        }
+    }
+}
+
+/// Campaign rules not yet converged: `Ok` and *vanished* rules (judged
+/// away, expired) both count as settled.
+fn pending_rules(ctx: &Ctx, rule_ids: &[u64]) -> usize {
+    rule_ids
+        .iter()
+        .filter(|id| ctx.catalog.rules.get(id).map(|r| r.state != RuleState::Ok).unwrap_or(false))
+        .count()
+}
+
+/// Rules still present in the catalog (mass-deletion convergence).
+fn surviving_rules(ctx: &Ctx, rule_ids: &[u64]) -> usize {
+    rule_ids.iter().filter(|id| ctx.catalog.rules.get(id).is_some()).count()
+}
+
+/// Datasets in `scope` matching `filter` (collections only — campaign
+/// granularity is the dataset, as in the paper's operational workflows).
+fn select_datasets(ctx: &Ctx, scope: &str, filter: &str) -> Result<Vec<DidKey>> {
+    let expr = metaexpr::parse(filter)?;
+    Ok(ctx
+        .catalog
+        .query_dids(scope, &expr, false)
+        .into_iter()
+        .filter(|d| d.did_type.is_collection())
+        .map(|d| d.key)
+        .collect())
+}
+
+/// Execute one campaign on the driver. The driver's background workload,
+/// daemon fleet, and (when enabled) invariant checking keep running —
+/// campaigns are planned load *on top of* normal traffic, not a bench
+/// harness in a vacuum.
+pub fn run_campaign(driver: &mut Driver, spec: &CampaignSpec) -> Result<CampaignReport> {
+    match spec.kind.clone() {
+        CampaignKind::Reprocessing { scope, filter, destination, copies, lifetime_ms, batch } => {
+            run_reprocessing(
+                driver,
+                spec,
+                &scope,
+                &filter,
+                &destination,
+                copies,
+                lifetime_ms,
+                batch,
+            )
+        }
+        CampaignKind::MassDeletion { scope, filter } => {
+            run_mass_deletion(driver, spec, &scope, &filter)
+        }
+        CampaignKind::TapeCarousel { scope, filter, destination, lifetime_ms, wave_datasets } => {
+            run_tape_carousel(
+                driver,
+                spec,
+                &scope,
+                &filter,
+                &destination,
+                lifetime_ms,
+                wave_datasets,
+            )
+        }
+    }
+}
+
+/// Run a sequence of campaigns back to back (a "season"), returning one
+/// report per campaign.
+pub fn run_season(driver: &mut Driver, specs: &[CampaignSpec]) -> Result<Vec<CampaignReport>> {
+    let mut reports = Vec::with_capacity(specs.len());
+    for spec in specs {
+        reports.push(run_campaign(driver, spec)?);
+    }
+    Ok(reports)
+}
+
+/// Drive chunk size: coarse enough to amortize completion checks, fine
+/// enough that `time_to_complete` is meaningful.
+fn chunk_ms(spec: &CampaignSpec) -> i64 {
+    HOUR_MS.max(spec.tick_ms)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_reprocessing(
+    driver: &mut Driver,
+    spec: &CampaignSpec,
+    scope: &str,
+    filter: &str,
+    destination: &str,
+    copies: u32,
+    lifetime_ms: Option<i64>,
+    batch: usize,
+) -> Result<CampaignReport> {
+    let started_at = driver.ctx.catalog.now();
+    let deadline = started_at + spec.budget_hours * HOUR_MS;
+    let datasets = select_datasets(&driver.ctx, scope, filter)?;
+    let mut curves = Curves::new(&driver.ctx);
+
+    // Inject the rules in bulk batches. A failed batch rolls back atomically
+    // inside `add_rules_bulk`; the campaign records it and carries on.
+    let mut rule_ids: Vec<u64> = Vec::with_capacity(datasets.len());
+    let mut batches_failed = 0;
+    for chunk in datasets.chunks(batch.max(1)) {
+        let specs: Vec<RuleSpec> = chunk
+            .iter()
+            .map(|key| {
+                let mut rs = RuleSpec::new(&spec.account, key.clone(), destination, copies)
+                    .with_activity(&spec.activity);
+                if let Some(ms) = lifetime_ms {
+                    rs = rs.with_lifetime(ms);
+                }
+                rs
+            })
+            .collect();
+        match driver.ctx.catalog.add_rules_bulk(specs) {
+            Ok(ids) => rule_ids.extend(ids),
+            Err(_) => batches_failed += 1,
+        }
+    }
+    let locks_created: usize =
+        rule_ids.iter().map(|id| driver.ctx.catalog.locks_by_rule.count(id)).sum();
+
+    // Drive the stack until every campaign rule settles (or budget ends).
+    let mut completed_at = None;
+    while driver.ctx.catalog.now() < deadline {
+        if pending_rules(&driver.ctx, &rule_ids) == 0 {
+            completed_at = Some(driver.ctx.catalog.now());
+            break;
+        }
+        driver.run_span(chunk_ms(spec), spec.tick_ms, spec.sample_every_ms, |ctx| {
+            let pending = pending_rules(ctx, &rule_ids);
+            curves.observe(ctx, pending);
+        });
+    }
+    if completed_at.is_none() && pending_rules(&driver.ctx, &rule_ids) == 0 {
+        completed_at = Some(driver.ctx.catalog.now());
+    }
+    curves.observe(&driver.ctx, pending_rules(&driver.ctx, &rule_ids));
+
+    let mut report = curves.into_report(spec, started_at, &driver.ctx);
+    report.datasets_targeted = datasets.len();
+    report.rules_created = rule_ids.len();
+    report.batches_failed = batches_failed;
+    report.locks_created = locks_created;
+    report.completed = completed_at.is_some();
+    report.time_to_complete_ms = completed_at.map(|t| t - started_at);
+    Ok(report)
+}
+
+fn run_mass_deletion(
+    driver: &mut Driver,
+    spec: &CampaignSpec,
+    scope: &str,
+    filter: &str,
+) -> Result<CampaignReport> {
+    let started_at = driver.ctx.catalog.now();
+    let deadline = started_at + spec.budget_hours * HOUR_MS;
+    let datasets = select_datasets(&driver.ctx, scope, filter)?;
+    let mut curves = Curves::new(&driver.ctx);
+    let cat = driver.ctx.catalog.clone();
+
+    // Every rule protecting the targeted datasets expires *now*; the
+    // judge processes the expiries, tombstones land, reapers sweep.
+    let mut rule_ids: Vec<u64> = Vec::new();
+    for key in &datasets {
+        for rule in cat.list_rules_for_did(key) {
+            rule_ids.push(rule.id);
+        }
+    }
+    rule_ids.sort_unstable();
+    rule_ids.dedup();
+    let rules_expired = cat.set_rule_expiration_bulk(&rule_ids, Some(started_at - 1));
+
+    // Replicas of the targeted files: convergence means zero left, or an
+    // unchanged population once deletion *can* have happened (after the
+    // tombstone grace) — non-greedy reapers legitimately cache the rest.
+    let target_files = |ctx: &Ctx| -> usize {
+        datasets
+            .iter()
+            .flat_map(|d| ctx.catalog.list_content(d, false))
+            .map(|f| ctx.catalog.list_replicas(&f.key).len())
+            .sum()
+    };
+    let grace_ms = cat.cfg.get_duration_ms("reaper", "tombstone_grace", 24 * HOUR_MS);
+
+    let mut completed_at = None;
+    let mut prev_remaining = usize::MAX;
+    while driver.ctx.catalog.now() < deadline {
+        driver.run_span(chunk_ms(spec), spec.tick_ms, spec.sample_every_ms, |ctx| {
+            let pending = surviving_rules(ctx, &rule_ids);
+            curves.observe(ctx, pending);
+        });
+        if surviving_rules(&driver.ctx, &rule_ids) > 0 {
+            continue;
+        }
+        let remaining = target_files(&driver.ctx);
+        let grace_over = driver.ctx.catalog.now() >= started_at + grace_ms;
+        if remaining == 0 || (grace_over && remaining == prev_remaining) {
+            completed_at = Some(driver.ctx.catalog.now());
+            break;
+        }
+        prev_remaining = remaining;
+    }
+    curves.observe(&driver.ctx, surviving_rules(&driver.ctx, &rule_ids));
+
+    let mut report = curves.into_report(spec, started_at, &driver.ctx);
+    report.datasets_targeted = datasets.len();
+    report.rules_expired = rules_expired;
+    report.completed = completed_at.is_some();
+    report.time_to_complete_ms = completed_at.map(|t| t - started_at);
+    Ok(report)
+}
+
+fn run_tape_carousel(
+    driver: &mut Driver,
+    spec: &CampaignSpec,
+    scope: &str,
+    filter: &str,
+    destination: &str,
+    lifetime_ms: i64,
+    wave_datasets: usize,
+) -> Result<CampaignReport> {
+    let started_at = driver.ctx.catalog.now();
+    let deadline = started_at + spec.budget_hours * HOUR_MS;
+    let cat = driver.ctx.catalog.clone();
+    let mut curves = Curves::new(&driver.ctx);
+
+    // Tape-resident matching datasets, with their per-tape-RSE file PFNs
+    // (the stage-in work of each wave).
+    let mut carousel: Vec<(DidKey, BTreeMap<String, Vec<String>>)> = Vec::new();
+    for key in select_datasets(&driver.ctx, scope, filter)? {
+        let mut tape_pfns: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for file in cat.list_content(&key, false) {
+            for rep in cat.list_replicas(&file.key) {
+                let on_tape = cat.get_rse(&rep.rse).map(|r| r.is_tape).unwrap_or(false);
+                if on_tape {
+                    tape_pfns.entry(rep.rse.clone()).or_default().push(rep.pfn.clone());
+                }
+            }
+        }
+        if !tape_pfns.is_empty() {
+            carousel.push((key, tape_pfns));
+        }
+    }
+
+    let mut rules_created = 0;
+    let mut locks_created = 0;
+    let mut batches_failed = 0;
+    let mut waves = 0;
+    let mut all_landed = true;
+    'waves: for wave in carousel.chunks(wave_datasets) {
+        waves += 1;
+        let now = driver.ctx.catalog.now();
+        // Pre-stage the wave's files: one batched recall per tape system,
+        // so the robot queue (and its 30s-per-file contention) is shared
+        // by the whole wave, exactly like a real carousel slot.
+        for (_, tape_pfns) in wave {
+            for (rse, pfns) in tape_pfns {
+                if let Some(sys) = driver.ctx.fleet.get(rse) {
+                    sys.stage_batch(pfns, now);
+                }
+            }
+        }
+        // Pin the wave to disk with short-lived Staging rules.
+        let specs: Vec<RuleSpec> = wave
+            .iter()
+            .map(|(key, _)| {
+                RuleSpec::new(&spec.account, key.clone(), destination, 1)
+                    .with_activity(&spec.activity)
+                    .with_lifetime(lifetime_ms)
+            })
+            .collect();
+        let wave_rules = match cat.add_rules_bulk(specs) {
+            Ok(ids) => ids,
+            Err(_) => {
+                batches_failed += 1;
+                continue;
+            }
+        };
+        locks_created += wave_rules.iter().map(|id| cat.locks_by_rule.count(id)).sum::<usize>();
+        rules_created += wave_rules.len();
+
+        // The next wave starts only when this one has fully landed.
+        loop {
+            if pending_rules(&driver.ctx, &wave_rules) == 0 {
+                break;
+            }
+            if driver.ctx.catalog.now() >= deadline {
+                all_landed = false;
+                break 'waves;
+            }
+            driver.run_span(chunk_ms(spec), spec.tick_ms, spec.sample_every_ms, |ctx| {
+                let pending = pending_rules(ctx, &wave_rules);
+                curves.observe(ctx, pending);
+            });
+        }
+    }
+    curves.observe(&driver.ctx, 0);
+
+    let mut report = curves.into_report(spec, started_at, &driver.ctx);
+    report.datasets_targeted = carousel.len();
+    report.rules_created = rules_created;
+    report.locks_created = locks_created;
+    report.batches_failed = batches_failed;
+    report.waves = waves;
+    report.completed = all_landed;
+    report.time_to_complete_ms = all_landed.then(|| driver.ctx.catalog.now() - started_at);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builders_fill_envelopes() {
+        let r = CampaignSpec::reprocessing("r", "data18", "datatype=RAW", "tier=1&type=disk")
+            .with_budget_hours(12)
+            .with_cadence(MINUTE_MS, 5 * MINUTE_MS)
+            .with_account("tzero")
+            .with_activity("Data Rebalancing");
+        assert_eq!(r.budget_hours, 12);
+        assert_eq!(r.tick_ms, MINUTE_MS);
+        assert_eq!(r.sample_every_ms, 5 * MINUTE_MS);
+        assert_eq!(r.account, "tzero");
+        assert_eq!(r.activity, "Data Rebalancing");
+        assert_eq!(r.kind.label(), "reprocessing");
+
+        let d = CampaignSpec::mass_deletion("d", "mc20", "datatype=AOD");
+        assert_eq!(d.kind.label(), "mass-deletion");
+        assert_eq!(d.budget_hours, 7 * 24, "default week budget");
+
+        let c = CampaignSpec::tape_carousel("c", "data18", "datatype=RAW", "tier=1&type=disk", 0);
+        match c.kind {
+            CampaignKind::TapeCarousel { wave_datasets, .. } => {
+                assert_eq!(wave_datasets, 1, "wave size clamped to >= 1")
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn cadence_clamps_sampling_to_tick() {
+        let s = CampaignSpec::mass_deletion("d", "mc20", "datatype=AOD")
+            .with_cadence(10 * MINUTE_MS, MINUTE_MS);
+        assert_eq!(s.sample_every_ms, 10 * MINUTE_MS, "cannot sample finer than the tick");
+    }
+}

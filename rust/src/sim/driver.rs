@@ -323,48 +323,7 @@ impl Driver {
         let day_end = self.ctx.catalog.now() + DAY_MS;
 
         while self.ctx.catalog.now() < day_end {
-            let now = self.ctx.catalog.now();
-            // 0. due chaos events fire first (faults hit a consistent
-            //    catalog, exactly like a real incident between requests)
-            self.apply_due_events(now);
-            // 1. workload generates activity
-            self.workload.step(&self.ctx, now, tick_ms, day);
-            // 2. due daemons tick (crashed instances stay silent)
-            for slot in self.daemons.iter_mut() {
-                if !slot.crashed && now >= slot.due {
-                    slot.daemon.tick(now);
-                    slot.due = now + slot.daemon.interval_ms();
-                }
-            }
-            // 2b. hourly housekeeping: expired auth tokens leave the
-            //     catalog, fully-silent heartbeat entries are pruned
-            if now >= self.next_housekeep {
-                let purged = self.ctx.catalog.purge_expired_tokens();
-                if purged > 0 {
-                    self.ctx
-                        .catalog
-                        .metrics
-                        .incr("housekeeping.tokens_purged", purged as u64);
-                }
-                self.ctx.heartbeats.expire_dead(now);
-                self.next_housekeep = now + HOUR_MS;
-            }
-            // 3. infrastructure advances
-            for fts in &self.ctx.fts {
-                fts.advance(now);
-            }
-            self.ctx.fleet.tick(now);
-            // 4. harvest FTS events for figure accounting
-            self.harvest_fts_events(&mut stats);
-            // 5. system invariants hold at every quiescent point
-            if let Some(every) = self.invariant_every_ms {
-                if now >= self.next_check {
-                    self.check_invariants_now();
-                    self.next_check = now + every;
-                }
-            }
-            // 6. virtual time moves
-            self.sim_clock().advance(tick_ms);
+            self.step_once(tick_ms, day, &mut stats);
         }
 
         // periodic tape recall campaign (every 5th day)
@@ -374,6 +333,85 @@ impl Driver {
 
         self.finish_day(&mut stats);
         self.days.push(stats);
+    }
+
+    /// One simulation tick: chaos events, workload, daemons, housekeeping,
+    /// infrastructure, event harvest, invariant cadence, clock advance.
+    /// Shared by the daily loop and [`Driver::run_span`].
+    fn step_once(&mut self, tick_ms: i64, day: u32, stats: &mut DayStats) {
+        let now = self.ctx.catalog.now();
+        // 0. due chaos events fire first (faults hit a consistent
+        //    catalog, exactly like a real incident between requests)
+        self.apply_due_events(now);
+        // 1. workload generates activity
+        self.workload.step(&self.ctx, now, tick_ms, day);
+        // 2. due daemons tick (crashed instances stay silent)
+        for slot in self.daemons.iter_mut() {
+            if !slot.crashed && now >= slot.due {
+                slot.daemon.tick(now);
+                slot.due = now + slot.daemon.interval_ms();
+            }
+        }
+        // 2b. hourly housekeeping: expired auth tokens leave the
+        //     catalog, fully-silent heartbeat entries are pruned
+        if now >= self.next_housekeep {
+            let purged = self.ctx.catalog.purge_expired_tokens();
+            if purged > 0 {
+                self.ctx
+                    .catalog
+                    .metrics
+                    .incr("housekeeping.tokens_purged", purged as u64);
+            }
+            self.ctx.heartbeats.expire_dead(now);
+            self.next_housekeep = now + HOUR_MS;
+        }
+        // 3. infrastructure advances
+        for fts in &self.ctx.fts {
+            fts.advance(now);
+        }
+        self.ctx.fleet.tick(now);
+        // 4. harvest FTS events for figure accounting
+        self.harvest_fts_events(stats);
+        // 5. system invariants hold at every quiescent point
+        if let Some(every) = self.invariant_every_ms {
+            if now >= self.next_check {
+                self.check_invariants_now();
+                self.next_check = now + every;
+            }
+        }
+        // 6. virtual time moves
+        self.sim_clock().advance(tick_ms);
+    }
+
+    /// Campaign hook: run the full stack for an arbitrary virtual span —
+    /// not day-aligned — invoking `observe(&ctx)` every `observe_every_ms`
+    /// so a campaign runner can sample its backlog/lock/deletion curves
+    /// between daemon ticks. Invariant checking (when enabled) and the
+    /// background workload keep running exactly as in [`Driver::run_days`];
+    /// the span's transfer/deletion aggregates are returned as a
+    /// [`DayStats`] (its `day` field is the current day index) without
+    /// being pushed onto [`Driver::days`].
+    pub fn run_span<F: FnMut(&Ctx)>(
+        &mut self,
+        duration_ms: i64,
+        tick_ms: i64,
+        observe_every_ms: i64,
+        mut observe: F,
+    ) -> DayStats {
+        let day = self.days.len() as u32;
+        let mut stats = DayStats { day, ..Default::default() };
+        let tick_ms = tick_ms.max(MINUTE_MS);
+        let end = self.ctx.catalog.now() + duration_ms;
+        let mut next_obs = self.ctx.catalog.now();
+        while self.ctx.catalog.now() < end {
+            self.step_once(tick_ms, day, &mut stats);
+            if self.ctx.catalog.now() >= next_obs {
+                observe(&self.ctx);
+                next_obs = self.ctx.catalog.now() + observe_every_ms.max(tick_ms);
+            }
+        }
+        self.finish_day(&mut stats);
+        stats
     }
 
     fn harvest_fts_events(&mut self, stats: &mut DayStats) {

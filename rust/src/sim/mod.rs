@@ -6,6 +6,7 @@
 //! timelines into a run, and the system-invariant checker
 //! ([`invariants`]) that proves the bookkeeping survives them.
 
+pub mod campaign;
 pub mod driver;
 pub mod grid;
 pub mod invariants;

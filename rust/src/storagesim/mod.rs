@@ -289,6 +289,43 @@ impl StorageSystem {
         Ok(ready)
     }
 
+    /// Batch staging (tape-carousel waves): queue many recalls under one
+    /// robot pass. Returns `(pfn, ready_at)` for every file accepted —
+    /// unknown pfns and already-staged files are skipped rather than
+    /// failing the wave. Queue contention accumulates across the batch
+    /// exactly as per-file [`StorageSystem::stage`] calls would, so a
+    /// deep wave pays the same linear robot delay.
+    pub fn stage_batch(&self, pfns: &[String], now: EpochMs) -> Vec<(String, EpochMs)> {
+        if self.kind != StorageKind::Tape {
+            return pfns.iter().map(|p| (p.clone(), now)).collect();
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if self.is_offline() {
+            inner.failures += 1;
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(pfns.len());
+        for pfn in pfns {
+            match inner.files.get(pfn) {
+                Some(f) if f.staged => out.push((pfn.clone(), now)),
+                Some(_) => {
+                    let ready =
+                        now + self.stage_latency_ms + (inner.staging_queue.len() as i64) * 30_000;
+                    inner.staging_queue.push((pfn.clone(), ready));
+                    out.push((pfn.clone(), ready));
+                }
+                None => {}
+            }
+        }
+        out
+    }
+
+    /// Outstanding recall queue depth (files staged but not yet ready) —
+    /// the tape-carousel wave-depth signal.
+    pub fn staging_depth(&self) -> usize {
+        self.inner.lock().unwrap().staging_queue.len()
+    }
+
     /// Advance staging: mark files whose ready time has passed as staged.
     pub fn tick(&self, now: EpochMs) {
         let mut inner = self.inner.lock().unwrap();
@@ -459,6 +496,33 @@ mod tests {
     }
 
     #[test]
+    fn stage_batch_queues_wave_with_contention() {
+        let s = StorageSystem::new("TAPE", StorageKind::Tape, 10_000);
+        for i in 0..4 {
+            s.put(&format!("/t/w{i}"), 100, 0).unwrap();
+        }
+        // one file already warm: batch must not re-queue it
+        let warm = s.stage("/t/w0", 0).unwrap();
+        s.tick(warm);
+        let wave: Vec<String> = (0..4).map(|i| format!("/t/w{i}")).collect();
+        let mut batch = wave.clone();
+        batch.push("/t/ghost".into()); // unknown pfn skipped, not fatal
+        let ready = s.stage_batch(&batch, 1000);
+        assert_eq!(ready.len(), 4, "ghost skipped, four known files accepted");
+        assert_eq!(ready[0], ("/t/w0".into(), 1000), "warm file ready immediately");
+        // robot contention accumulates linearly across the cold tail
+        let cold: Vec<i64> = ready[1..].iter().map(|(_, t)| *t).collect();
+        assert!(cold.windows(2).all(|w| w[1] == w[0] + 30_000), "{cold:?}");
+        assert_eq!(s.staging_depth(), 3);
+        let last = *cold.last().unwrap();
+        s.tick(last);
+        assert_eq!(s.staging_depth(), 0);
+        for p in &wave {
+            assert!(s.get(p).is_ok(), "{p} staged after the wave drains");
+        }
+    }
+
+    #[test]
     fn staging_queue_adds_contention_delay() {
         let s = StorageSystem::new("TAPE", StorageKind::Tape, 10_000);
         s.put("/t/a", 1, 0).unwrap();
@@ -589,6 +653,18 @@ impl Fleet {
         for s in self.systems.read().unwrap().values() {
             s.tick(now);
         }
+    }
+
+    /// Total outstanding recall depth across every tape endpoint (the
+    /// carousel wave-depth curve).
+    pub fn staging_depth(&self) -> usize {
+        self.systems
+            .read()
+            .unwrap()
+            .values()
+            .filter(|s| s.kind == StorageKind::Tape)
+            .map(|s| s.staging_depth())
+            .sum()
     }
 }
 

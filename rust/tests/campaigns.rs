@@ -1,0 +1,292 @@
+//! Campaign-scale scenario pack (standing e2e suite): the declarative
+//! campaign engine runs a reprocessing, a mass deletion, and a tape
+//! carousel against a live grid with the full invariant suite on a
+//! cadence, and
+//!
+//! * a fixed seed makes the whole season bit-for-bit reproducible — two
+//!   runs produce *identical* campaign reports;
+//! * invariants stay clean at every checkpoint of every campaign;
+//! * the carousel's recall waves never drive any FTS link above its
+//!   per-link cap, and the batched stage-in queue is actually exercised;
+//! * a mass-deletion campaign over a non-greedy (cache) RSE respects the
+//!   free-space watermark mid-sweep and evicts in LRU order when the
+//!   only popularity signal is read traces.
+
+use rucio::common::clock::MINUTE_MS;
+use rucio::common::config::Config;
+use rucio::core::rse::Rse;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{DidKey, ReplicaState, RuleState};
+use rucio::daemons::tracer::emit_trace;
+use rucio::daemons::Ctx;
+use rucio::sim::campaign::{run_campaign, run_season, CampaignSpec};
+use rucio::sim::driver::{standard_driver, Driver};
+use rucio::sim::grid::GridSpec;
+use rucio::sim::workload::WorkloadSpec;
+use rucio::storagesim::{synthetic_adler32_for, StorageKind, StorageSystem};
+
+// ---------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------
+
+fn build_driver(seed: u64) -> Driver {
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "1h");
+    cfg.set("throttler", "enabled", "true");
+    cfg.set("throttler", "share.Staging", "0.3");
+    cfg.set("throttler", "share.Reprocessing", "0.3");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 3,
+            files_per_dataset: 3,
+            median_file_bytes: 300_000_000,
+            derivations_per_day: 2,
+            analysis_accesses_per_day: 20,
+            seed: seed ^ 0xCA4,
+            ..Default::default()
+        },
+        cfg,
+    );
+    driver.enable_invariant_checks(30 * MINUTE_MS);
+    driver
+}
+
+/// Same grid, but with the background workload silenced: tests that
+/// assert exact counters (staging queue drained, LRU victim counts) use
+/// this so the only traffic is the campaign's own.
+fn quiet_driver(seed: u64) -> Driver {
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "1h");
+    cfg.set("throttler", "enabled", "true");
+    cfg.set("throttler", "share.Staging", "0.3");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 0,
+            files_per_dataset: 0,
+            median_file_bytes: 1,
+            derivations_per_day: 0,
+            analysis_accesses_per_day: 0,
+            seed,
+            ..Default::default()
+        },
+        cfg,
+    );
+    driver.enable_invariant_checks(30 * MINUTE_MS);
+    driver
+}
+
+/// Seed `n` datasets whose only replicas live on one tape RSE (an old
+/// archive: the disk copies are long gone), tagged `datatype=<tag>` for
+/// campaign selection and pinned there by an Ok rule.
+fn seed_cold_archive(ctx: &Ctx, tape_rse: &str, tag: &str, n: usize, files_per: usize) {
+    let cat = &ctx.catalog;
+    let now = cat.now();
+    let sys = ctx.fleet.get(tape_rse).expect("tape system exists");
+    for d in 0..n {
+        let ds = format!("cold.{d:03}");
+        cat.add_dataset("data18", &ds, "prod").unwrap();
+        let ds_key = DidKey::new("data18", &ds);
+        cat.set_metadata(&ds_key, "datatype", tag).unwrap();
+        for f in 0..files_per {
+            let name = format!("cold.{d:03}.f{f}");
+            let bytes = 200_000_000;
+            let adler = synthetic_adler32_for(&name, bytes);
+            cat.add_file("data18", &name, "prod", bytes, &adler, None).unwrap();
+            let key = DidKey::new("data18", &name);
+            cat.attach(&ds_key, &key).unwrap();
+            let rep = cat.add_replica(tape_rse, &key, ReplicaState::Available, None).unwrap();
+            // a put on a Tape system lands the file *unstaged* — reads
+            // must go through the staging queue, like a real archive
+            sys.put(&rep.pfn, bytes, now).unwrap();
+        }
+        let rid = cat
+            .add_rule(RuleSpec::new("prod", ds_key.clone(), tape_rse, 1))
+            .unwrap();
+        assert_eq!(cat.get_rule(rid).unwrap().state, RuleState::Ok, "archive pin satisfied");
+    }
+}
+
+fn season_specs() -> [CampaignSpec; 3] {
+    [
+        CampaignSpec::reprocessing("reprocess-raw", "data18", "datatype=RAW", "tier=2")
+            .with_budget_hours(48),
+        CampaignSpec::mass_deletion("sweep-aod", "mc20", "datatype=AOD").with_budget_hours(24),
+        CampaignSpec::tape_carousel("carousel-cold", "data18", "datatype=COLD", "tier=2", 2)
+            .with_budget_hours(48),
+    ]
+}
+
+fn run_season_once(seed: u64) -> (Vec<rucio::analytics::campaigns::CampaignReport>, usize) {
+    let mut driver = build_driver(seed);
+    seed_cold_archive(&driver.ctx, "DE-T1-TAPE", "COLD", 4, 3);
+    driver.run_days(1, 10 * MINUTE_MS); // warm-up: RAW lands, AODs derive
+    let reports = run_season(&mut driver, &season_specs()).expect("season runs");
+    driver.check_invariants_now();
+    (reports, driver.violations.len())
+}
+
+// ---------------------------------------------------------------------
+// determinism + invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn fixed_seed_season_reports_are_identical() {
+    let (a, va) = run_season_once(4242);
+    let (b, vb) = run_season_once(4242);
+    assert_eq!(va, 0, "first run: invariants clean at every checkpoint");
+    assert_eq!(vb, 0, "second run: invariants clean at every checkpoint");
+    assert_eq!(a.len(), 3);
+    assert_eq!(a, b, "same seed must reproduce the campaign reports bit-for-bit");
+
+    let repro = &a[0];
+    assert_eq!(repro.kind, "reprocessing");
+    assert!(repro.completed, "reprocessing converged: {repro:?}");
+    assert!(repro.rules_created > 0, "bulk rules were injected");
+    assert!(repro.locks_created >= repro.rules_created, "locks materialized per rule");
+    assert_eq!(repro.batches_failed, 0);
+
+    let sweep = &a[1];
+    assert_eq!(sweep.kind, "mass-deletion");
+    assert!(sweep.completed, "deletion sweep converged: {sweep:?}");
+
+    let carousel = &a[2];
+    assert_eq!(carousel.kind, "tape-carousel");
+    assert!(carousel.completed, "carousel landed every wave: {carousel:?}");
+    assert_eq!(carousel.waves, 2, "4 cold datasets in waves of 2");
+    assert!(!carousel.link_cap_exceeded, "no link ever above its FTS cap");
+
+    // reports carry the sampled curves for plotting
+    for r in &a {
+        assert!(!r.samples.is_empty() || r.time_to_complete_ms == Some(0), "{} sampled", r.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// carousel: link caps + batched staging
+// ---------------------------------------------------------------------
+
+#[test]
+fn carousel_waves_respect_link_caps_and_stage_batches() {
+    // Quiet grid: with no background traffic, every staging-queue entry
+    // belongs to the carousel, so "the robot queue drained" is exact.
+    let mut driver = quiet_driver(99);
+    seed_cold_archive(&driver.ctx, "FR-T1-TAPE", "COLD", 4, 3);
+    driver.run_days(1, 10 * MINUTE_MS);
+
+    let spec =
+        CampaignSpec::tape_carousel("carousel-cold", "data18", "datatype=COLD", "tier=2", 2)
+            .with_budget_hours(48)
+            .with_cadence(MINUTE_MS, MINUTE_MS); // fine-grained: catch the recall queue in flight
+    let report = run_campaign(&mut driver, &spec).expect("carousel runs");
+    driver.check_invariants_now();
+
+    assert!(report.completed, "every wave landed: {report:?}");
+    assert_eq!(report.waves, 2);
+    assert_eq!(report.rules_created, 4, "one recall rule per dataset");
+    assert!(
+        report.max_wave_depth > 0,
+        "the batched stage-in queue was actually exercised: {report:?}"
+    );
+    assert!(report.link_cap > 0);
+    assert!(!report.link_cap_exceeded, "per-link FTS caps held throughout");
+    assert!(
+        report.peak_link_active() <= report.link_cap,
+        "peak {} vs cap {}",
+        report.peak_link_active(),
+        report.link_cap
+    );
+    assert!(
+        driver.violations.is_empty(),
+        "invariants (incl. fts-link-caps) clean: {:?}",
+        driver.violations
+    );
+    // the recall queue drained: nothing left pending on the robot
+    assert_eq!(driver.ctx.fleet.staging_depth(), 0);
+}
+
+// ---------------------------------------------------------------------
+// satellite: non-greedy reaper under a mass-deletion campaign
+// ---------------------------------------------------------------------
+
+#[test]
+fn non_greedy_reaper_holds_watermark_under_mass_deletion() {
+    // quiet grid: this test watches one cache RSE, not the workload
+    let mut driver = quiet_driver(7);
+    let ctx = driver.ctx.clone();
+    let cat = ctx.catalog.clone();
+
+    // A small non-greedy cache: capacity 10k, watermark 4k free.
+    let now = cat.now();
+    cat.add_rse(
+        Rse::new("CACHE", now).with_attr("greedy", "false").with_attr("min_free", "4000"),
+    )
+    .unwrap();
+    ctx.fleet.add(StorageSystem::new("CACHE", StorageKind::Disk, 10_000));
+
+    // One dataset of six 1500-byte files, pinned to the cache.
+    cat.add_dataset("data18", "tmp.cache", "prod").unwrap();
+    let ds_key = DidKey::new("data18", "tmp.cache");
+    cat.set_metadata(&ds_key, "datatype", "TMP").unwrap();
+    let keys: Vec<DidKey> = (0..6)
+        .map(|i| {
+            let name = format!("tmp.f{i}");
+            let adler = synthetic_adler32_for(&name, 1500);
+            cat.add_file("data18", &name, "prod", 1500, &adler, None).unwrap();
+            let key = DidKey::new("data18", &name);
+            cat.attach(&ds_key, &key).unwrap();
+            let rep = cat.add_replica("CACHE", &key, ReplicaState::Available, None).unwrap();
+            ctx.fleet.get("CACHE").unwrap().put(&rep.pfn, 1500, cat.now()).unwrap();
+            key
+        })
+        .collect();
+    cat.add_rule(RuleSpec::new("prod", ds_key.clone(), "CACHE", 1)).unwrap();
+
+    // Age the cache, then read f3..f5 — popularity comes ONLY from these
+    // read traces, folded by the tracer daemon during the sim run.
+    driver.run_span(2 * 3_600_000, MINUTE_MS, 30 * MINUTE_MS, |_| {});
+    for key in &keys[3..] {
+        emit_trace(&ctx.broker, cat.now(), "download", "CACHE", "data18", &key.name);
+    }
+    driver.run_span(10 * MINUTE_MS, MINUTE_MS, 10 * MINUTE_MS, |_| {});
+    for key in &keys[3..] {
+        let rep = cat.get_replica("CACHE", key).unwrap();
+        assert!(rep.accessed_at > now, "read trace refreshed {}", key.name);
+    }
+
+    // Mass-deletion campaign over the cache dataset: the pin expires, all
+    // six replicas become deletable — but the non-greedy reaper must only
+    // evict down to the watermark, oldest-access first.
+    let spec = CampaignSpec::mass_deletion("sweep-cache", "data18", "datatype=TMP")
+        .with_budget_hours(24);
+    let report = run_campaign(&mut driver, &spec).expect("sweep runs");
+    driver.check_invariants_now();
+
+    assert!(report.completed, "sweep converged: {report:?}");
+    assert_eq!(report.rules_expired, 1, "the cache pin was expired");
+    assert!(driver.violations.is_empty(), "{:?}", driver.violations);
+
+    // Watermark respected mid-sweep: used 9000/free 1000 → evict exactly
+    // two 1500-byte files to reach free >= 4000, then STOP even though
+    // four deletable replicas remain cached.
+    let free = ctx.fleet.get("CACHE").unwrap().free();
+    assert!(free >= 4000, "watermark reached: free={free}");
+    assert_eq!(cat.metrics.counter("reaper.lru_evicted"), 2, "stopped at the watermark");
+    assert!(
+        cat.metrics.counter("reaper.watermark_holds") >= 1,
+        "later sweeps held at the watermark with deletable replicas still cached"
+    );
+    assert!(cat.metrics.counter("reaper.sweeps") >= 2, "multiple sweeps ran");
+
+    // LRU honored: every read-traced file survives; both victims come
+    // from the never-read cohort.
+    for key in &keys[3..] {
+        assert!(cat.get_replica("CACHE", key).is_ok(), "recently-read {} survives", key.name);
+    }
+    let untouched_left =
+        keys[..3].iter().filter(|k| cat.get_replica("CACHE", k).is_ok()).count();
+    assert_eq!(untouched_left, 1, "two oldest-access files were the victims");
+}
