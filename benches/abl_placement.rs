@@ -1,0 +1,187 @@
+//! Ablation: heat-driven dynamic placement vs a static catalog.
+//!
+//! A flash-crowd workload reads one dataset that starts with a single
+//! replica at a T1. With the heat-driven C3PO daemon enabled, the decayed
+//! heat signal crosses the placement threshold within a few access
+//! windows and a cache replica appears near the crowd; with placement
+//! disabled every read keeps paying the wide-area transfer. Two runs of
+//! the identical driver (only `[c3po] enabled` differs) measure
+//!
+//! 1. **time to first local replica** — sim-ms from the first read until
+//!    a read is served by a non-origin replica (static: never), and
+//! 2. **transfer bytes saved** — WAN read bytes avoided, net of the
+//!    bytes spent creating the cache replica itself.
+//!
+//! Full mode: 3 days, 8 files x 256 MB (smoke: 1 day, 4 files). Results
+//! are written to `BENCH_abl_placement.json` for artifact upload.
+
+use rucio::benchkit::{section, smoke_mode};
+use rucio::common::clock::{DAY_MS, MINUTE_MS};
+use rucio::common::config::Config;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{DidKey, ReplicaState};
+use rucio::jsonx::Json;
+use rucio::sim::driver::standard_driver;
+use rucio::sim::grid::GridSpec;
+use rucio::sim::workload::WorkloadSpec;
+use rucio::storagesim::synthetic_adler32_for;
+
+/// The dataset's only replica lives here at t0.
+const SRC: &str = "DE-T1-DISK";
+
+struct RunOut {
+    remote_reads: u64,
+    local_reads: u64,
+    wan_bytes: u64,
+    /// Sim-ms from the window start to the first locally-served read.
+    ttfl_ms: Option<i64>,
+    /// Bytes moved by the transfer machinery (cache creation cost).
+    transfer_bytes: u64,
+    placements: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    heat_on: bool,
+    window_days: i64,
+    tick_ms: i64,
+    obs_ms: i64,
+    reads_per_obs: usize,
+    files_per: usize,
+    file_bytes: u64,
+) -> RunOut {
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", "7");
+    cfg.set("c3po", "enabled", if heat_on { "true" } else { "false" });
+    let workload = WorkloadSpec {
+        raw_datasets_per_day: 0,
+        derivations_per_day: 0,
+        analysis_accesses_per_day: 0,
+        discovery_queries_per_day: 0,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, storage_flakiness: 0.0, seed: 7, ..Default::default() },
+        workload,
+        cfg,
+    );
+    let ctx = driver.ctx.clone();
+    let cat = ctx.catalog.clone();
+    let sys = ctx.fleet.get(SRC).expect("grid RSE");
+
+    // -- corpus: one dataset, resident only at the origin, pinned there --
+    let now = cat.now();
+    cat.add_dataset("data18", "crowd.ds", "prod").unwrap();
+    let ds = DidKey::new("data18", "crowd.ds");
+    let mut files: Vec<DidKey> = Vec::with_capacity(files_per);
+    for f in 0..files_per {
+        let name = format!("crowd.f{f}");
+        let adler = synthetic_adler32_for(&name, file_bytes);
+        cat.add_file("data18", &name, "prod", file_bytes, &adler, None).unwrap();
+        let key = DidKey::new("data18", &name);
+        cat.attach(&ds, &key).unwrap();
+        let rep = cat.add_replica(SRC, &key, ReplicaState::Available, None).unwrap();
+        sys.put(&rep.pfn, file_bytes, now).unwrap();
+        files.push(key);
+    }
+    cat.add_rule(RuleSpec::new("prod", ds.clone(), SRC, 1)).unwrap();
+
+    // -- the crowd: round-robin reads on the driver's observation cadence
+    let t0 = cat.now();
+    let (mut remote_reads, mut local_reads, mut wan_bytes) = (0u64, 0u64, 0u64);
+    let mut ttfl_ms: Option<i64> = None;
+    let mut idx = 0usize;
+    let stats = driver.run_span(window_days * DAY_MS, tick_ms, obs_ms, |c| {
+        let cat = &c.catalog;
+        let read_now = cat.now();
+        for _ in 0..reads_per_obs {
+            let key = &files[idx % files.len()];
+            idx += 1;
+            match cat.available_replicas(key).into_iter().find(|r| r.rse != SRC) {
+                Some(cached) => {
+                    local_reads += 1;
+                    ttfl_ms.get_or_insert(read_now - t0);
+                    cat.touch_replica(&cached.rse, key);
+                }
+                None => {
+                    remote_reads += 1;
+                    wan_bytes += file_bytes;
+                    cat.touch_replica(SRC, key);
+                }
+            }
+        }
+    });
+
+    RunOut {
+        remote_reads,
+        local_reads,
+        wan_bytes,
+        ttfl_ms,
+        transfer_bytes: stats.bytes_transferred,
+        placements: cat.metrics.counter("c3po.placements"),
+    }
+}
+
+fn main() {
+    let (days, tick_ms, files_per, reads_per_obs) = if smoke_mode() {
+        (1i64, 10 * MINUTE_MS, 4usize, 4usize)
+    } else {
+        (3i64, 5 * MINUTE_MS, 8usize, 6usize)
+    };
+    let file_bytes = 256_000_000u64;
+    let obs_ms = 30 * MINUTE_MS;
+    let window_ms = days * DAY_MS;
+
+    section(&format!(
+        "Ablation: heat-driven placement vs static, {days}d window, {files_per} x 256 MB"
+    ));
+    let stat = run(false, days, tick_ms, obs_ms, reads_per_obs, files_per, file_bytes);
+    println!(
+        "static:      {} remote reads, {:.1} GB over the WAN, local replica: never",
+        stat.remote_reads,
+        stat.wan_bytes as f64 / 1e9
+    );
+    let heat = run(true, days, tick_ms, obs_ms, reads_per_obs, files_per, file_bytes);
+    println!(
+        "heat-driven: {} remote / {} local reads, {:.1} GB WAN + {:.1} GB cache fill, \
+         first local read after {:.1}h",
+        heat.remote_reads,
+        heat.local_reads,
+        heat.wan_bytes as f64 / 1e9,
+        heat.transfer_bytes as f64 / 1e9,
+        heat.ttfl_ms.unwrap_or(window_ms) as f64 / 3_600_000.0
+    );
+
+    // net savings: WAN reads avoided minus the cache-fill cost
+    let static_total = stat.wan_bytes + stat.transfer_bytes;
+    let heat_total = heat.wan_bytes + heat.transfer_bytes;
+    let saved = static_total as i64 - heat_total as i64;
+    println!("transfer bytes saved: {:.2} GB", saved as f64 / 1e9);
+
+    assert_eq!(stat.local_reads, 0, "static run must never see a cache replica");
+    assert!(stat.ttfl_ms.is_none());
+    assert!(heat.placements >= 1, "heat daemon placed at least one cache replica");
+    assert!(heat.ttfl_ms.is_some(), "crowd reads went local within the window");
+    assert!(heat.local_reads > 0);
+    assert!(saved > 0, "heat-driven placement must save transfer bytes net of cache fill");
+
+    let results = Json::obj()
+        .with("bench", "abl_placement")
+        .with("window_ms", window_ms)
+        .with("files", files_per as u64)
+        .with("file_bytes", file_bytes)
+        .with("static_remote_reads", stat.remote_reads)
+        .with("static_wan_bytes", stat.wan_bytes)
+        .with("heat_remote_reads", heat.remote_reads)
+        .with("heat_local_reads", heat.local_reads)
+        .with("heat_wan_bytes", heat.wan_bytes)
+        .with("heat_cache_fill_bytes", heat.transfer_bytes)
+        .with("heat_placements", heat.placements)
+        .with("time_to_first_local_ms", heat.ttfl_ms.unwrap_or(window_ms))
+        .with("static_time_to_first_local_ms", window_ms)
+        .with("static_ever_local", false)
+        .with("bytes_saved", saved);
+    std::fs::write("BENCH_abl_placement.json", results.to_string()).unwrap();
+    println!("\nabl_placement bench OK (BENCH_abl_placement.json written)");
+}

@@ -305,6 +305,76 @@ pub fn contention_stats(catalog: &Catalog) -> Vec<Vec<String>> {
         .collect()
 }
 
+/// Dynamic-placement report (paper §6.1/§6.2): where the C3PO cache
+/// rules and BB8 rebalancing moves currently sit. Per-RSE-expression
+/// rows `[rse, cache_rules, cache_bytes, moves_in, moves_out]`, plus a
+/// final `[_heat, rows, hot_rows, total_accesses, max_score]` sentinel
+/// row describing the demand signal itself (`hot_rows` counts DIDs
+/// whose decayed score is at least `hot_floor` as of `now`).
+pub fn placement_stats(catalog: &Catalog, now: EpochMs, hot_floor: f64) -> Vec<Vec<String>> {
+    #[derive(Default)]
+    struct Acc {
+        cache_rules: u64,
+        cache_bytes: u64,
+        moves_in: u64,
+        moves_out: u64,
+    }
+    let mut acc: BTreeMap<String, Acc> = BTreeMap::new();
+    catalog.rules.for_each(|r| {
+        if r.activity != crate::placement::CACHE_ACTIVITY {
+            return;
+        }
+        let e = acc.entry(r.rse_expression.clone()).or_default();
+        e.cache_rules += 1;
+        for lock_key in catalog.locks_by_rule.get(&r.id) {
+            if let Some(lock) = catalog.locks.get(&lock_key) {
+                e.cache_bytes += lock.bytes;
+            }
+        }
+    });
+    // moves need a second (collected) pass: the child rule lives in the
+    // same table the closure above iterates
+    for parent in catalog.rules.scan(|r| r.child_rule.is_some()) {
+        acc.entry(parent.rse_expression.clone()).or_default().moves_out += 1;
+        if let Some(child) = parent.child_rule.and_then(|id| catalog.rules.get(&id)) {
+            acc.entry(child.rse_expression.clone()).or_default().moves_in += 1;
+        }
+    }
+    let mut rows: Vec<Vec<String>> = acc
+        .into_iter()
+        .map(|(rse, a)| {
+            vec![
+                rse,
+                a.cache_rules.to_string(),
+                a.cache_bytes.to_string(),
+                a.moves_in.to_string(),
+                a.moves_out.to_string(),
+            ]
+        })
+        .collect();
+    let half_life = catalog.heat_half_life_ms();
+    let (mut n, mut hot, mut accesses, mut max_score) = (0u64, 0u64, 0u64, 0.0f64);
+    catalog.heat.for_each(|h| {
+        n += 1;
+        accesses += h.accesses;
+        let s = h.score_at(now, half_life);
+        if s >= hot_floor {
+            hot += 1;
+        }
+        if s > max_score {
+            max_score = s;
+        }
+    });
+    rows.push(vec![
+        "_heat".to_string(),
+        n.to_string(),
+        hot.to_string(),
+        accesses.to_string(),
+        format!("{max_score:.3}"),
+    ]);
+    rows
+}
+
 /// Table-size report off the monitoring registry (paper §4.6: "a probe
 /// regularly checks the database" — queue depths and catalog scale).
 pub fn table_sizes(catalog: &Catalog) -> Vec<Vec<String>> {
@@ -362,6 +432,41 @@ mod tests {
         c.add_dataset("s", "ds", "root").unwrap();
         let unused = unused_datasets(&c, c.now() + 10 * WEEK_MS, default_idle_ms());
         assert_eq!(unused, vec!["s:ds"]);
+    }
+
+    #[test]
+    fn placement_stats_count_caches_moves_and_heat() {
+        use crate::core::rse::Rse;
+        use crate::core::rules_api::RuleSpec;
+        use crate::core::types::{DidKey, ReplicaState};
+        let c = Catalog::new_for_tests();
+        c.add_scope("s", "root").unwrap();
+        c.add_rse(Rse::new("A", c.now())).unwrap();
+        c.add_rse(Rse::new("B", c.now())).unwrap();
+        c.add_file("s", "f", "root", 100, "x", None).unwrap();
+        let key = DidKey::new("s", "f");
+        c.add_replica("A", &key, ReplicaState::Available, None).unwrap();
+        let pinned = c.add_rule(RuleSpec::new("root", key.clone(), "A", 1)).unwrap();
+        let cache = c
+            .add_rule(
+                RuleSpec::new("root", key.clone(), "B", 1)
+                    .with_activity(crate::placement::CACHE_ACTIVITY),
+            )
+            .unwrap();
+        // a live move: the pinned rule points at the cache rule as its child
+        c.rules.update(&pinned, c.now(), |r| r.child_rule = Some(cache));
+        c.touch_replica("A", &key);
+        c.touch_replica("A", &key);
+
+        let rows = placement_stats(&c, c.now(), 1.5);
+        assert_eq!(
+            rows,
+            vec![
+                vec!["A".to_string(), "0".into(), "0".into(), "0".into(), "1".into()],
+                vec!["B".to_string(), "1".into(), "100".into(), "1".into(), "0".into()],
+                vec!["_heat".to_string(), "1".into(), "1".into(), "2".into(), "2.000".into()],
+            ]
+        );
     }
 
     #[test]

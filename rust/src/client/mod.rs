@@ -338,7 +338,17 @@ impl RucioClient {
     }
 }
 
+/// Rebuild a `RucioError` from an error response. Enveloped bodies
+/// (`{"error": {"code", "message"}}`) round-trip the exact server-side
+/// variant; anything else falls back to a status-based guess.
 fn http_error(resp: &crate::httpd::Response) -> RucioError {
+    if let Ok(body) = resp.body_json() {
+        if let Some(env) = body.get("error") {
+            if let (Some(code), Some(msg)) = (env.opt_str("code"), env.opt_str("message")) {
+                return RucioError::from_code(code, msg.to_string());
+            }
+        }
+    }
     let body = String::from_utf8_lossy(&resp.body);
     match resp.status {
         401 => RucioError::CannotAuthenticate(body.into_owned()),

@@ -25,6 +25,27 @@ macro_rules! rucio_error {
                 }
             }
         }
+
+        impl RucioError {
+            /// Stable machine-readable error code: the variant name,
+            /// mirroring upstream Rucio's exception-class strings. The
+            /// REST error envelope carries it as `error.code`.
+            pub fn code(&self) -> &'static str {
+                match self {
+                    $( RucioError::$variant(_) => stringify!($variant), )+
+                }
+            }
+
+            /// Rebuild an error from its wire code (the envelope's
+            /// `error.code`): the client regains the exact variant the
+            /// server raised. Unknown codes become `HttpError`.
+            pub fn from_code(code: &str, message: String) -> RucioError {
+                match code {
+                    $( stringify!($variant) => RucioError::$variant(message), )+
+                    _ => RucioError::HttpError(message),
+                }
+            }
+        }
     };
 }
 
@@ -58,6 +79,8 @@ rucio_error! {
     ConfigError => "config error: ",
     JsonError => "json error: ",
     HttpError => "http error: ",
+    RouteNotFound => "no such route: ",
+    MethodNotAllowed => "method not allowed: ",
     RuntimeError => "runtime (PJRT) error: ",
     Io => "io error: ",
     Internal => "internal error: ",
@@ -78,7 +101,8 @@ impl RucioError {
         match self {
             DidNotFound(_) | ScopeNotFound(_) | AccountNotFound(_) | RseNotFound(_)
             | RuleNotFound(_) | ReplicaNotFound(_) | RequestNotFound(_)
-            | SubscriptionNotFound(_) | SourceNotFound(_) => 404,
+            | SubscriptionNotFound(_) | SourceNotFound(_) | RouteNotFound(_) => 404,
+            MethodNotAllowed(_) => 405,
             DidAlreadyExists(_) | Duplicate(_) | TxnConflict(_) => 409,
             AccessDenied(_) => 403,
             CannotAuthenticate(_) => 401,
@@ -112,6 +136,31 @@ mod tests {
             "DID not found: data18:f1"
         );
         assert_eq!(RucioError::QuotaExceeded("alice".into()).to_string(), "quota exceeded: alice");
+    }
+
+    #[test]
+    fn codes_are_variant_names() {
+        assert_eq!(RucioError::DidNotFound("x".into()).code(), "DidNotFound");
+        assert_eq!(RucioError::AccessDenied("x".into()).code(), "AccessDenied");
+        assert_eq!(RucioError::Internal("x".into()).code(), "Internal");
+    }
+
+    #[test]
+    fn codes_round_trip_through_from_code() {
+        let variants = [
+            RucioError::DidNotFound("x".into()),
+            RucioError::QuotaExceeded("x".into()),
+            RucioError::MethodNotAllowed("x".into()),
+        ];
+        for e in variants {
+            let back = RucioError::from_code(e.code(), "x".into());
+            assert_eq!(back, e);
+            assert_eq!(back.http_status(), e.http_status());
+        }
+        assert!(matches!(
+            RucioError::from_code("NoSuchCode", "x".into()),
+            RucioError::HttpError(_)
+        ));
     }
 
     #[test]

@@ -118,6 +118,8 @@ pub struct Catalog {
 
     // --- popularity (traces, §4.3/§6.1)
     pub popularity: Table<Popularity>,
+    /// Decayed access heat per DID (§6.1 placement signal; see [`Heat`]).
+    pub heat: Table<Heat>,
 
     /// Table registry for monitoring probes.
     pub registry: Registry,
@@ -202,6 +204,10 @@ macro_rules! with_all_tables {
         }
         {
             let $t = &$cat.popularity;
+            $body
+        }
+        {
+            let $t = &$cat.heat;
             $body
         }
     }};
@@ -336,6 +342,7 @@ impl Catalog {
             subscriptions: Table::new("subscriptions").with_shards(shards),
             outbox: Table::new("outbox").with_shards(shards),
             popularity: Table::new("popularity").with_shards(shards),
+            heat: Table::new("heat").with_shards(shards),
             registry: Registry::new(),
         };
         catalog.register_tables();
@@ -565,6 +572,7 @@ impl Catalog {
         r.register(self.subscriptions.name(), self.subscriptions.len_counter());
         r.register(self.outbox.name(), self.outbox.len_counter());
         r.register(self.popularity.name(), self.popularity.len_counter());
+        r.register(self.heat.name(), self.heat.len_counter());
         with_all_tables!(self, t => r.register_contention(t.name(), t.contention_probe()));
     }
 
@@ -687,7 +695,7 @@ mod tests {
         assert_eq!(snap["accounts"], 1, "root account");
         assert_eq!(snap["scopes"], 1, "root scope");
         assert_eq!(snap["dids"], 0);
-        assert!(snap.len() >= 19, "all catalog tables registered: {snap:?}");
+        assert!(snap.len() >= 20, "all catalog tables registered: {snap:?}");
         c.add_scope("data18", "root").unwrap();
         c.add_file("data18", "f1", "root", 10, "x", None).unwrap();
         let snap = c.registry.snapshot();

@@ -824,6 +824,35 @@ impl Durable for Popularity {
     }
 }
 
+impl Durable for Heat {
+    fn row_to_json(&self) -> Json {
+        // f64 scores survive the round trip exactly: the JSON writer
+        // emits Rust's shortest-round-trip representation.
+        Json::obj()
+            .with("did", didkey_to_json(&self.did))
+            .with("score", self.score)
+            .with("updated_at", self.updated_at)
+            .with("accesses", self.accesses)
+    }
+
+    fn row_from_json(j: &Json) -> Result<Self> {
+        Ok(Heat {
+            did: didkey_from_json(j.get("did").ok_or_else(|| bad("heat did"))?)?,
+            score: j.get("score").and_then(Json::as_f64).ok_or_else(|| bad("heat score"))?,
+            updated_at: j.req_i64("updated_at")?,
+            accesses: j.req_u64("accesses")?,
+        })
+    }
+
+    fn key_to_json(key: &DidKey) -> Json {
+        didkey_to_json(key)
+    }
+
+    fn key_from_json(j: &Json) -> Result<DidKey> {
+        didkey_from_json(j)
+    }
+}
+
 fn protocol_to_json(p: &Protocol) -> Json {
     Json::obj()
         .with("scheme", p.scheme.as_str())
@@ -1240,6 +1269,8 @@ mod tests {
             window_accesses: 3,
             window_start: 8,
         });
+        // a fractional (decayed) score must survive the text round trip
+        rt(&Heat { did: key(), score: 4.734_621_993_117, updated_at: 11, accesses: 12 });
         rt(&BadReplica {
             rse: "UK-T2-1".into(),
             did: key(),

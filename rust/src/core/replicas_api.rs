@@ -457,6 +457,54 @@ impl Catalog {
                 now,
             );
         }
+        self.touch_heat(did, now);
+    }
+
+    /// Fold one read access into the decayed heat score. Always called
+    /// from [`Catalog::touch_popularity`] so the lifetime access tallies
+    /// of the two tables stay in lock-step (a checked invariant).
+    fn touch_heat(&self, did: &DidKey, now: EpochMs) {
+        let half_life = self.heat_half_life_ms();
+        if self.heat.contains(did) {
+            self.heat.update(did, now, |h| {
+                h.score = decay_score(h.score, h.updated_at, now, half_life) + 1.0;
+                h.updated_at = now;
+                h.accesses += 1;
+            });
+        } else {
+            let _ = self.heat.insert(
+                Heat { did: did.clone(), score: 1.0, updated_at: now, accesses: 1 },
+                now,
+            );
+        }
+    }
+
+    /// The configured heat half-life (`[heat] half_life`, default 24h).
+    pub fn heat_half_life_ms(&self) -> i64 {
+        self.cfg.get_duration_ms("heat", "half_life", 24 * 3_600_000)
+    }
+
+    /// Current decayed heat score for a DID (0.0 if never read).
+    pub fn heat_score(&self, did: &DidKey, now: EpochMs) -> f64 {
+        let half_life = self.heat_half_life_ms();
+        self.heat.get(did).map(|h| h.score_at(now, half_life)).unwrap_or(0.0)
+    }
+
+    /// The `n` hottest DIDs by decayed score at `now`, hottest first
+    /// (score ties broken by DID for determinism). Entries whose score
+    /// has decayed below `floor` are skipped.
+    pub fn hottest_dids(&self, now: EpochMs, n: usize, floor: f64) -> Vec<(DidKey, f64)> {
+        let half_life = self.heat_half_life_ms();
+        let mut hot: Vec<(DidKey, f64)> = self.heat.fold(Vec::new(), |mut acc, h| {
+            let s = h.score_at(now, half_life);
+            if s >= floor {
+                acc.push((h.did.clone(), s));
+            }
+            acc
+        });
+        hot.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then_with(|| a.0.cmp(&b.0)));
+        hot.truncate(n);
+        hot
     }
 
     /// Declare a replica suspicious (download failure, checksum mismatch).

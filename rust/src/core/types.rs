@@ -871,3 +871,40 @@ impl Row for Popularity {
         self.did.clone()
     }
 }
+
+/// Decayed per-DID access heat (paper §6.1: C3PO's demand signal). Fed
+/// by the same read-trace path as [`Popularity`], but the score halves
+/// every `[heat] half_life` so it tracks *current* demand, while
+/// `Popularity.accesses` keeps the lifetime tally. The two are updated
+/// together, so `Heat.accesses == Popularity.accesses` is an invariant.
+#[derive(Debug, Clone)]
+pub struct Heat {
+    pub did: DidKey,
+    /// Decayed score as of `updated_at`: one unit per read access,
+    /// exponentially halved per half-life since then.
+    pub score: f64,
+    pub updated_at: EpochMs,
+    /// Lifetime read accesses folded into this score.
+    pub accesses: u64,
+}
+
+impl Heat {
+    /// The score decayed forward to `now` (pure; does not mutate).
+    pub fn score_at(&self, now: EpochMs, half_life_ms: i64) -> f64 {
+        decay_score(self.score, self.updated_at, now, half_life_ms)
+    }
+}
+
+/// Exponential half-life decay of an access score from `then` to `now`.
+pub fn decay_score(score: f64, then: EpochMs, now: EpochMs, half_life_ms: i64) -> f64 {
+    let dt = (now - then).max(0) as f64;
+    let hl = (half_life_ms.max(1)) as f64;
+    score * (-dt / hl).exp2()
+}
+
+impl Row for Heat {
+    type Key = DidKey;
+    fn key(&self) -> DidKey {
+        self.did.clone()
+    }
+}

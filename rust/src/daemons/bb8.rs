@@ -1,0 +1,172 @@
+//! Fleet-resident rebalancing daemon (paper §6.2): wraps
+//! [`crate::rebalance::Bb8`] so background equalization and move
+//! finalization run on the driver cadence, and adds the decommission
+//! lifecycle: an operator (or the REST `POST /rses/{rse}/decommission`
+//! route) flags an RSE with the `decommission` attribute, and this
+//! daemon drives it `pending` → `draining` → `done` — first shot drains
+//! every movable rule and disables writes, later ticks catch rules that
+//! became movable afterwards, and the flag flips to `done` once no lock
+//! pins the RSE any more.
+
+use crate::common::clock::EpochMs;
+use crate::rebalance::Bb8;
+
+use super::{Ctx, Daemon};
+
+/// `decommission` RSE-attribute states the daemon recognises.
+pub const DECOM_PENDING: &str = "pending";
+pub const DECOM_DRAINING: &str = "draining";
+pub const DECOM_DONE: &str = "done";
+
+pub struct Bb8Daemon {
+    inner: Bb8,
+    /// Master switch (`[bb8] enabled`).
+    pub enabled: bool,
+}
+
+impl Bb8Daemon {
+    pub fn new(ctx: Ctx) -> Self {
+        let enabled = ctx.catalog.cfg.get_bool("bb8", "enabled", true);
+        Bb8Daemon { inner: Bb8::new(ctx), enabled }
+    }
+
+    /// Advance every flagged RSE one step through the decommission
+    /// lifecycle. Returns the number of moves scheduled.
+    fn drain_decommissions(&mut self, now: EpochMs) -> usize {
+        let cat = self.inner.ctx.catalog.clone();
+        let mut scheduled = 0;
+        for rse in cat.list_rses() {
+            match rse.attr("decommission") {
+                Some(DECOM_PENDING) => match self.inner.decommission(&rse.name, now) {
+                    Ok(moved) => {
+                        let _ = cat.set_rse_attribute(&rse.name, "decommission", DECOM_DRAINING);
+                        scheduled += moved;
+                    }
+                    Err(e) => {
+                        crate::log_warn!("bb8: decommission of {} failed: {e}", rse.name)
+                    }
+                },
+                Some(DECOM_DRAINING) => {
+                    // stragglers: rules that became movable since the
+                    // first pass (replication finished, moves abandoned)
+                    scheduled += self.inner.drain_pass(&rse.name, now);
+                    let mut locks_left = 0usize;
+                    cat.locks.for_each(|l| {
+                        if l.rse == rse.name {
+                            locks_left += 1;
+                        }
+                    });
+                    if locks_left == 0 {
+                        let _ = cat.set_rse_attribute(&rse.name, "decommission", DECOM_DONE);
+                        cat.metrics.incr("bb8.decommissions_completed", 1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        scheduled
+    }
+}
+
+impl Daemon for Bb8Daemon {
+    fn name(&self) -> &'static str {
+        "bb8"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        300_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        // inner tick: day-budget rollover, finalize in-flight moves,
+        // budget-gated background equalization over `bb8=true` RSEs
+        let inner = self.inner.tick(now);
+        inner + self.drain_decommissions(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rules_api::RuleSpec;
+    use crate::core::types::RequestState;
+    use crate::daemons::conveyor::tests::{rig, seed_file};
+
+    /// Three rules wholly resident on SRC-DISK, each with alternative
+    /// destinations (no `bb8=true` attrs: background mode stays off).
+    fn resident() -> Ctx {
+        let (ctx, cat) = rig();
+        for i in 0..3 {
+            let f = seed_file(&ctx, &format!("d{i}"), 1000);
+            cat.add_rule(RuleSpec::new("root", f, "SRC-DISK|DST-A|DST-B", 1)).unwrap();
+        }
+        ctx
+    }
+
+    fn drive_transfers(ctx: &Ctx) {
+        let cat = &ctx.catalog;
+        loop {
+            let queued = cat.requests_by_state.get(&RequestState::Queued);
+            if queued.is_empty() {
+                break;
+            }
+            for id in queued {
+                cat.on_transfer_done(id).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn decommission_lifecycle_pending_draining_done() {
+        let ctx = resident();
+        let cat = ctx.catalog.clone();
+        cat.set_rse_attribute("SRC-DISK", "decommission", DECOM_PENDING).unwrap();
+        let mut d = Bb8Daemon::new(ctx.clone());
+        let scheduled = d.tick(cat.now());
+        assert_eq!(scheduled, 3, "all resident rules scheduled away");
+        let rse = cat.get_rse("SRC-DISK").unwrap();
+        assert_eq!(rse.attr("decommission"), Some(DECOM_DRAINING));
+        assert!(!rse.availability_write, "draining RSE refuses writes");
+        // transfers complete → next tick finalizes and flips to done
+        drive_transfers(&ctx);
+        d.tick(cat.now());
+        assert_eq!(
+            cat.get_rse("SRC-DISK").unwrap().attr("decommission"),
+            Some(DECOM_DONE)
+        );
+        assert_eq!(cat.metrics.counter("bb8.decommissions_completed"), 1);
+        let mut locks_on_src = 0;
+        cat.locks.for_each(|l| {
+            if l.rse == "SRC-DISK" {
+                locks_on_src += 1;
+            }
+        });
+        assert_eq!(locks_on_src, 0);
+    }
+
+    #[test]
+    fn unflagged_fleet_tick_is_a_no_op() {
+        let ctx = resident();
+        let cat = ctx.catalog.clone();
+        let mut d = Bb8Daemon::new(ctx);
+        assert_eq!(d.tick(cat.now()), 0, "no bb8 attrs, no decommission flags");
+        assert!(cat.rules.scan(|r| r.activity == "Data Rebalancing").is_empty());
+    }
+
+    #[test]
+    fn disabled_daemon_ignores_flags() {
+        let ctx = resident();
+        let cat = ctx.catalog.clone();
+        cat.set_rse_attribute("SRC-DISK", "decommission", DECOM_PENDING).unwrap();
+        let mut d = Bb8Daemon::new(ctx);
+        d.enabled = false;
+        assert_eq!(d.tick(cat.now()), 0);
+        assert_eq!(
+            cat.get_rse("SRC-DISK").unwrap().attr("decommission"),
+            Some(DECOM_PENDING)
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! Heat-driven dynamic placement daemon (paper §6.1): the fleet-resident
+//! face of [`crate::placement::C3po`]. Where the library module selects
+//! by raw popularity-window counts, this daemon consumes the *decayed*
+//! per-DID heat table — fed by the tracer's read traces, halving every
+//! `[heat] half_life` — so placement follows current demand and lets go
+//! of yesterday's crowd. Every replica it creates is a cache: the rule
+//! carries a lifetime (reaper reclaims it once the heat passes) and the
+//! total bytes pinned by live cache rules are capped by
+//! `[c3po] cache_budget_bytes`.
+
+use std::collections::BTreeSet;
+
+use crate::common::clock::EpochMs;
+use crate::common::units::TB;
+use crate::core::types::DidType;
+use crate::core::Catalog;
+use crate::placement::{C3po, RefScorer, Scorer, CACHE_ACTIVITY};
+
+use super::{Ctx, Daemon};
+
+/// The standing heat-driven placement daemon.
+pub struct HeatC3po {
+    inner: C3po,
+    /// Decayed heat score at which a dataset becomes placement-eligible
+    /// (`[c3po] heat_threshold`).
+    pub heat_threshold: f64,
+    /// Max total bytes live cache rules may pin
+    /// (`[c3po] cache_budget_bytes`).
+    pub budget_bytes: u64,
+    /// Master switch (`[c3po] enabled`).
+    pub enabled: bool,
+}
+
+impl HeatC3po {
+    pub fn new(ctx: Ctx) -> Self {
+        Self::with_scorer(ctx, Box::new(RefScorer))
+    }
+
+    pub fn with_scorer(ctx: Ctx, scorer: Box<dyn Scorer>) -> Self {
+        let cfg = &ctx.catalog.cfg;
+        let heat_threshold = cfg.get_f64("c3po", "heat_threshold", 4.0);
+        let budget_bytes = cfg.get_bytes("c3po", "cache_budget_bytes", 20 * TB);
+        let enabled = cfg.get_bool("c3po", "enabled", true);
+        HeatC3po { inner: C3po::new(ctx, scorer), heat_threshold, budget_bytes, enabled }
+    }
+
+    /// Bytes currently pinned by live cache rules (sum of their locks).
+    pub fn cache_bytes(cat: &Catalog) -> u64 {
+        let mut cache_rules: BTreeSet<u64> = BTreeSet::new();
+        cat.rules.for_each(|r| {
+            if r.activity == CACHE_ACTIVITY {
+                cache_rules.insert(r.id);
+            }
+        });
+        let mut total = 0u64;
+        cat.locks.for_each(|l| {
+            if cache_rules.contains(&l.rule_id) {
+                total += l.bytes;
+            }
+        });
+        total
+    }
+}
+
+impl Daemon for HeatC3po {
+    fn name(&self) -> &'static str {
+        "c3po"
+    }
+
+    fn interval_ms(&self) -> i64 {
+        60_000
+    }
+
+    fn tick(&mut self, now: EpochMs) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let cat = self.inner.ctx.catalog.clone();
+        let mut pinned = Self::cache_bytes(&cat);
+        if pinned >= self.budget_bytes {
+            cat.metrics.incr("c3po.budget_deferrals", 1);
+            return 0;
+        }
+        // Over-scan relative to per_tick: some of the hottest DIDs are
+        // files (heat tracks every read), cooling down, or over budget.
+        let scan = self.inner.per_tick.saturating_mul(4).max(8);
+        let mut placed = 0;
+        for (did, _score) in cat.hottest_dids(now, scan, self.heat_threshold) {
+            if placed >= self.inner.per_tick {
+                break;
+            }
+            if self.inner.in_cooldown(&did, now) {
+                continue;
+            }
+            let Ok(d) = cat.get_did(&did) else { continue };
+            if d.did_type != DidType::Dataset {
+                continue;
+            }
+            let ds_bytes = cat.did_bytes(&did);
+            if pinned.saturating_add(ds_bytes) > self.budget_bytes {
+                cat.metrics.incr("c3po.budget_deferrals", 1);
+                continue;
+            }
+            match self.inner.place(&did, now) {
+                Ok(Some(_)) => {
+                    pinned += ds_bytes;
+                    placed += 1;
+                }
+                Ok(None) => {
+                    // replica cap reached or no candidate RSE: cool the
+                    // dataset down so it is not rescanned every tick
+                    self.inner.mark_cooldown(&did, now);
+                }
+                Err(e) => crate::log_warn!("c3po: placement failed for {did}: {e}"),
+            }
+        }
+        placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rse::Rse;
+    use crate::core::types::DidKey;
+    use crate::daemons::conveyor::tests::{rig, seed_file};
+    use crate::storagesim::{StorageKind, StorageSystem};
+
+    /// A dataset read often enough that its decayed heat clears the
+    /// default threshold, plus a spacious candidate RSE.
+    fn hot_rig() -> (Ctx, DidKey) {
+        let (ctx, cat) = rig();
+        let now = cat.now();
+        cat.add_rse(Rse::new("BIG-DISK", now).with_attr("site", "BIG-DISK")).unwrap();
+        ctx.fleet.add(StorageSystem::new("BIG-DISK", StorageKind::Disk, 1_000_000_000));
+        cat.add_dataset("data18", "hot.ds", "root").unwrap();
+        let ds = DidKey::new("data18", "hot.ds");
+        let f = seed_file(&ctx, "hot.f1", 500);
+        cat.attach(&ds, &f).unwrap();
+        for _ in 0..6 {
+            cat.touch_replica("SRC-DISK", &f);
+        }
+        (ctx, ds)
+    }
+
+    #[test]
+    fn hot_dataset_gets_an_expiring_cache_rule() {
+        let (ctx, ds) = hot_rig();
+        let cat = ctx.catalog.clone();
+        assert!(cat.heat_score(&ds, cat.now()) >= 4.0, "rig is hot");
+        let mut d = HeatC3po::new(ctx);
+        assert_eq!(d.tick(cat.now()), 1);
+        let cache: Vec<_> = cat.rules.scan(|r| r.activity == CACHE_ACTIVITY);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache[0].did, ds);
+        assert!(cache[0].expires_at.is_some(), "caches always expire");
+        assert_eq!(cat.metrics.counter("c3po.placements"), 1);
+        // cooldown: the same dataset is not re-placed next tick
+        assert_eq!(d.tick(cat.now()), 0);
+    }
+
+    #[test]
+    fn cold_dataset_is_ignored() {
+        let (ctx, cat) = rig();
+        cat.add_dataset("data18", "cold.ds", "root").unwrap();
+        let ds = DidKey::new("data18", "cold.ds");
+        let f = seed_file(&ctx, "cold.f1", 100);
+        cat.attach(&ds, &f).unwrap();
+        cat.touch_replica("SRC-DISK", &f); // heat 1 < threshold 4
+        let mut d = HeatC3po::new(ctx);
+        assert_eq!(d.tick(cat.now()), 0);
+        assert!(cat.rules.scan(|r| r.activity == CACHE_ACTIVITY).is_empty());
+    }
+
+    #[test]
+    fn exhausted_budget_defers_placement() {
+        let (ctx, _ds) = hot_rig();
+        let cat = ctx.catalog.clone();
+        let mut d = HeatC3po::new(ctx);
+        d.budget_bytes = 0;
+        assert_eq!(d.tick(cat.now()), 0);
+        assert!(cat.rules.scan(|r| r.activity == CACHE_ACTIVITY).is_empty());
+        assert!(cat.metrics.counter("c3po.budget_deferrals") >= 1);
+    }
+
+    #[test]
+    fn disabled_daemon_is_inert() {
+        let (ctx, _ds) = hot_rig();
+        let cat = ctx.catalog.clone();
+        let mut d = HeatC3po::new(ctx);
+        d.enabled = false;
+        assert_eq!(d.tick(cat.now()), 0);
+    }
+}

@@ -15,6 +15,8 @@
 //! giving lock-free parallelism and automatic failover.
 
 pub mod auditor;
+pub mod bb8;
+pub mod c3po;
 pub mod checkpointer;
 pub mod conveyor;
 pub mod heartbeat;

@@ -118,10 +118,17 @@ impl Response {
         r
     }
 
+    /// The unified REST error envelope: every error path answers
+    /// `{"error": {"code": "<RucioError variant>", "message": "<detail>"}}`
+    /// with the status from the single [`RucioError::http_status`]
+    /// mapping — there is exactly one place errors turn into bodies.
     pub fn error(e: &RucioError) -> Self {
-        let body = crate::jsonx::Json::obj()
-            .with("error", format!("{e}"))
-            .with("status", e.http_status() as u64);
+        let body = crate::jsonx::Json::obj().with(
+            "error",
+            crate::jsonx::Json::obj()
+                .with("code", e.code())
+                .with("message", format!("{e}")),
+        );
         Response::json(e.http_status(), &body)
     }
 
@@ -362,7 +369,10 @@ mod tests {
         let e = RucioError::DidNotFound("scope:name".into());
         let r = Response::error(&e);
         assert_eq!(r.status, 404);
-        assert!(String::from_utf8_lossy(&r.body).contains("scope:name"));
+        let body = r.body_json().unwrap();
+        let env = body.get("error").expect("error envelope");
+        assert_eq!(env.opt_str("code"), Some("DidNotFound"));
+        assert!(env.opt_str("message").unwrap().contains("scope:name"));
 
         let nd = Response::ndjson(
             200,

@@ -4,6 +4,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use super::{Request, Response};
+use crate::common::error::RucioError;
 
 /// A route handler. Receives the request with `params` filled in.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
@@ -84,10 +85,15 @@ impl Router {
                 }
             }
         }
+        // Unmatched requests answer with the same error envelope as the
+        // route handlers: one body shape for every error on the surface.
         if path_matched {
-            Response::text(405, "method not allowed")
+            Response::error(&RucioError::MethodNotAllowed(format!(
+                "{} {}",
+                req.method, req.path
+            )))
         } else {
-            Response::text(404, "not found")
+            Response::error(&RucioError::RouteNotFound(req.path.clone()))
         }
     }
 }
@@ -98,13 +104,23 @@ fn match_segments(pattern: &[String], path: &[&str]) -> Option<BTreeMap<String, 
     for (i, seg) in pattern.iter().enumerate() {
         if seg.starts_with('{') && seg.ends_with("...}") {
             // Greedy tail: bind the remaining path (must be non-empty).
+            // Pattern segments after the tail (`/dids/{scope}/{name...}/rules`)
+            // anchor at the end of the path; the tail binds what is between.
             let name = &seg[1..seg.len() - 4];
-            if pi >= path.len() {
+            let suffix = &pattern[i + 1..];
+            if path.len() < pi + 1 + suffix.len() {
                 return None;
             }
-            params.insert(name.to_string(), path[pi..].join("/"));
-            // Tail must be the final pattern segment.
-            return if i == pattern.len() - 1 { Some(params) } else { None };
+            let tail_end = path.len() - suffix.len();
+            for (s, p) in suffix.iter().zip(&path[tail_end..]) {
+                if s.starts_with('{') && s.ends_with('}') && !s.ends_with("...}") {
+                    params.insert(s[1..s.len() - 1].to_string(), p.to_string());
+                } else if s != p {
+                    return None;
+                }
+            }
+            params.insert(name.to_string(), path[pi..tail_end].join("/"));
+            return Some(params);
         }
         if pi >= path.len() {
             return None;
@@ -144,6 +160,9 @@ mod tests {
         r.get("/replicas/{scope}/{name...}", |rq| {
             Response::text(200, &rq.params["name"].clone())
         });
+        r.get("/x/{scope}/{name...}/rules", |rq| {
+            Response::text(200, &format!("rules:{}", rq.params["name"]))
+        });
         r
     }
 
@@ -167,6 +186,19 @@ mod tests {
         let r = router();
         let resp = r.dispatch(req("GET", "/replicas/user.alice/some/deep/name"));
         assert_eq!(resp.body, b"some/deep/name");
+    }
+
+    #[test]
+    fn literal_suffix_after_greedy_tail_anchors_at_the_end() {
+        let r = router();
+        // single-segment name
+        let resp = r.dispatch(req("GET", "/x/data18/raw.001/rules"));
+        assert_eq!(resp.body, b"rules:raw.001");
+        // slashed name keeps the suffix anchored at the path's end
+        let resp = r.dispatch(req("GET", "/x/data18/a/b/c/rules"));
+        assert_eq!(resp.body, b"rules:a/b/c");
+        // no suffix → no match (the tail must leave room for it)
+        assert_eq!(r.dispatch(req("GET", "/x/data18/raw.001")).status, 404);
     }
 
     #[test]

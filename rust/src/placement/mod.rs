@@ -26,6 +26,12 @@ use crate::daemons::{Ctx, Daemon};
 /// Shared feature dimension (must equal `python/compile/kernels/score.py`).
 pub const N_FEATURES: usize = 8;
 
+/// Rule activity tag on every replica the placement loop creates. The
+/// cache contract hangs off it: rules with this activity always carry a
+/// lifetime (checked by `sim::invariants`), so the reaper reclaims cold
+/// caches once the heat passes.
+pub const CACHE_ACTIVITY: &str = "Dynamic Placement";
+
 /// Default scoring weights: free space and closeness dominate; queue
 /// depth, recent placements, and link load repel.
 pub const DEFAULT_WEIGHTS: [f32; N_FEATURES] = [2.0, 1.0, -1.0, -0.5, 0.3, 1.5, -0.5, 0.0];
@@ -283,7 +289,7 @@ impl C3po {
         let rule_id = cat.add_rule(
             RuleSpec::new("root", dataset.clone(), &rse, 1)
                 .with_lifetime(self.lifetime_ms)
-                .with_activity("Dynamic Placement"),
+                .with_activity(CACHE_ACTIVITY),
         )?;
         self.last_placed.insert(dataset.clone(), now);
         let entry = self.recent_per_rse.entry(rse.clone()).or_insert((now, 0));
@@ -311,6 +317,20 @@ impl C3po {
         );
         cat.metrics.incr("c3po.placements", 1);
         Ok(Some(rule_id))
+    }
+
+    /// Start the per-dataset cool-down clock without placing (used by the
+    /// fleet daemon when a placement attempt yields no candidates, so the
+    /// dataset is not rescanned every tick).
+    pub fn mark_cooldown(&mut self, did: &DidKey, now: EpochMs) {
+        self.last_placed.insert(did.clone(), now);
+    }
+
+    /// Whether the dataset is still inside its placement cool-down.
+    pub fn in_cooldown(&self, did: &DidKey, now: EpochMs) -> bool {
+        self.last_placed
+            .get(did)
+            .is_some_and(|t| now - *t < self.cooldown_ms)
     }
 }
 

@@ -224,18 +224,27 @@ impl Bb8 {
         started
     }
 
-    /// Decommission mode: drain everything off `rse` (paper: "selects all
-    /// data resident on the RSE and moves it to a different RSE, following
-    /// the original RSE expression policies"). Also disables writes.
-    pub fn decommission(&mut self, rse: &str, now: EpochMs) -> Result<usize> {
-        let cat = self.ctx.catalog.clone();
-        cat.set_rse_availability(rse, true, false, true)?;
+    /// Schedule every currently-movable rule off `rse`. One shot of the
+    /// decommission drain; the fleet daemon re-runs it on later ticks to
+    /// catch rules that became movable afterwards (replication finished,
+    /// a move was abandoned or lost).
+    pub fn drain_pass(&mut self, rse: &str, now: EpochMs) -> usize {
         let mut moved = 0;
         for rule in self.movable_rules(rse) {
             if self.move_rule(&rule, rse, now).is_ok() {
                 moved += 1;
             }
         }
+        moved
+    }
+
+    /// Decommission mode: drain everything off `rse` (paper: "selects all
+    /// data resident on the RSE and moves it to a different RSE, following
+    /// the original RSE expression policies"). Also disables writes.
+    pub fn decommission(&mut self, rse: &str, now: EpochMs) -> Result<usize> {
+        let cat = self.ctx.catalog.clone();
+        cat.set_rse_availability(rse, true, false, true)?;
+        let moved = self.drain_pass(rse, now);
         cat.metrics.incr("bb8.decommissions", 1);
         Ok(moved)
     }

@@ -167,12 +167,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                 let limit = parse_limit(req);
                 let (rows, next) =
                     cat.query_dids_page(scope, &expr, req.query_get("cursor"), limit);
-                let mut resp = Response::ndjson(200, rows.iter().map(did_json));
-                if let Some(n) = next {
-                    resp = resp
-                        .with_header("x-rucio-next-cursor", &crate::httpd::percent_encode(&n));
-                }
-                return Ok(resp);
+                let resp = Response::ndjson(200, rows.iter().map(did_json));
+                return Ok(with_next_cursor(resp, next));
             }
             // Cursor-paginated variant: name-ordered pages with a resume
             // cursor in x-rucio-next-cursor. The type filter applies to
@@ -186,18 +182,50 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                     .filter(|d| !d.suppressed)
                     .filter(|d| did_type.map(|t| d.did_type == t).unwrap_or(true))
                     .map(did_json);
-                let mut resp = Response::ndjson(200, items);
-                if let Some(n) = next {
-                    resp = resp
-                        .with_header("x-rucio-next-cursor", &crate::httpd::percent_encode(&n));
-                }
-                return Ok(resp);
+                return Ok(with_next_cursor(Response::ndjson(200, items), next));
             }
             let items = cat
                 .list_dids(scope, req.query_get("name"), did_type, false)
                 .into_iter()
                 .map(|d| did_json(&d));
             Ok(Response::ndjson(200, items))
+        })
+    });
+    // Suffix routes must register before the bare DID route: dispatch is
+    // first-match-wins and the greedy name tail would swallow the suffix.
+    let cat = catalog.clone();
+    r.get("/dids/{scope}/{name...}/rules", move |req| {
+        with_auth(&cat, req, |cat, auth| {
+            guard_scope(cat, auth, req.param("scope")?)?;
+            let key = DidKey::new(req.param("scope")?, req.param("name")?);
+            let items = cat.list_rules_for_did(&key).into_iter().map(|r| rule_json(&r));
+            Ok(Response::ndjson(200, items))
+        })
+    });
+    // Popularity / heat read-out (paper §6.1): the tracer-fed demand
+    // signal behind the C3PO placement daemon, decayed to "now".
+    let cat = catalog.clone();
+    r.get("/dids/{scope}/{name...}/popularity", move |req| {
+        with_auth(&cat, req, |cat, auth| {
+            guard_scope(cat, auth, req.param("scope")?)?;
+            let key = DidKey::new(req.param("scope")?, req.param("name")?);
+            cat.get_did(&key)?;
+            let now = cat.now();
+            let pop = cat.popularity.get(&key);
+            let mut j = Json::obj()
+                .with("scope", key.scope.as_str())
+                .with("name", key.name.as_str())
+                .with("heat_score", cat.heat_score(&key, now))
+                .with("heat_half_life_ms", cat.heat_half_life_ms())
+                .with("accesses", pop.as_ref().map(|p| p.accesses).unwrap_or(0))
+                .with(
+                    "window_accesses",
+                    pop.as_ref().map(|p| p.window_accesses).unwrap_or(0),
+                );
+            if let Some(p) = &pop {
+                j = j.with("last_access", p.last_access);
+            }
+            Ok(Response::json(200, &j))
         })
     });
     let cat = catalog.clone();
@@ -304,7 +332,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
             // VO filter applies per page (like the DID type filter): a
             // filtered page may be short while the cursor still advances
             let vos = ScopeVoCache::new(cat);
-            let mut resp = Response::ndjson(
+            let resp = Response::ndjson(
                 200,
                 page.rows
                     .iter()
@@ -319,13 +347,11 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                             .with("state", rep.state.as_str())
                     }),
             );
-            if let Some((rse, did)) = &page.next_cursor {
-                resp = resp.with_header(
-                    "x-rucio-next-cursor",
-                    &crate::httpd::percent_encode(&encode_replica_cursor(rse, did)),
-                );
-            }
-            Ok(resp)
+            let next = page
+                .next_cursor
+                .as_ref()
+                .map(|(rse, did)| encode_replica_cursor(rse, did));
+            Ok(with_next_cursor(resp, next))
         })
     });
     let cat = catalog.clone();
@@ -402,25 +428,17 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     r.get("/rules", move |req| {
         with_auth(&cat, req, |cat, auth| {
             let limit = parse_limit(req);
-            let cursor: Option<u64> = match req.query_get("cursor") {
-                Some(raw) => Some(raw.parse().map_err(|_| {
-                    RucioError::InvalidValue("malformed rule cursor".into())
-                })?),
-                None => None,
-            };
+            let cursor = parse_id_cursor(req, "rule")?;
             let page = cat.rules.scan_page(cursor.as_ref(), limit);
             let vos = ScopeVoCache::new(cat);
-            let mut resp = Response::ndjson(
+            let resp = Response::ndjson(
                 200,
                 page.rows
                     .iter()
                     .filter(|r| vos.visible(auth, &r.did.scope))
                     .map(rule_json),
             );
-            if let Some(next) = page.next_cursor {
-                resp = resp.with_header("x-rucio-next-cursor", &next.to_string());
-            }
-            Ok(resp)
+            Ok(with_next_cursor(resp, page.next_cursor.map(|n| n.to_string())))
         })
     });
     let cat = catalog.clone();
@@ -479,16 +497,6 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
             Ok(Response::text(200, "OK"))
         })
     });
-    let cat = catalog.clone();
-    r.get("/dids/{scope}/{name...}/rules", move |req| {
-        with_auth(&cat, req, |cat, auth| {
-            guard_scope(cat, auth, req.param("scope")?)?;
-            let key = DidKey::new(req.param("scope")?, req.param("name")?);
-            let items = cat.list_rules_for_did(&key).into_iter().map(|r| rule_json(&r));
-            Ok(Response::ndjson(200, items))
-        })
-    });
-
     // ---------------- RSEs (admin) ----------------
     let cat = catalog.clone();
     r.post("/rses/{rse}", move |req| {
@@ -522,6 +530,107 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                     .with("deterministic", r.path_algorithm != crate::core::rse::PathAlgorithm::NonDeterministic)
             });
             Ok(Response::ndjson(200, items))
+        })
+    });
+    // Flag an RSE for decommissioning: the BB8 daemon drains it in the
+    // background (pending → draining → done). Admin-only like /boost —
+    // and instance-operator only, because an RSE is shared
+    // infrastructure across every tenant VO.
+    let cat = catalog.clone();
+    r.post("/rses/{rse}/decommission", move |req| {
+        with_auth(&cat, req, |cat, auth| {
+            if !cat.get_account(&auth.account)?.admin {
+                return Err(RucioError::AccessDenied(format!(
+                    "{} may not decommission RSEs",
+                    auth.account
+                )));
+            }
+            if !auth.operator {
+                return Err(RucioError::AccessDenied(format!(
+                    "decommissioning shared infrastructure takes the instance \
+                     operator; {} administers VO {} only",
+                    auth.account, auth.vo
+                )));
+            }
+            let name = req.param("rse")?;
+            let rse = cat.get_rse(name)?;
+            let state = match rse.attr("decommission") {
+                // already on its way (or done): report, never restart
+                Some(s) => s.to_string(),
+                None => {
+                    cat.set_rse_attribute(
+                        name,
+                        "decommission",
+                        crate::daemons::bb8::DECOM_PENDING,
+                    )?;
+                    crate::daemons::bb8::DECOM_PENDING.to_string()
+                }
+            };
+            Ok(Response::json(
+                202,
+                &Json::obj().with("rse", name).with("decommission", state),
+            ))
+        })
+    });
+
+    // ---------------- rebalancing (paper §6.2) ----------------
+    // Operator view of live rebalancing: every parent→child rule move
+    // still in flight plus the decommission ledger, derived entirely
+    // from the catalog — no daemon handle involved.
+    let cat = catalog.clone();
+    r.get("/rebalance/status", move |req| {
+        with_auth(&cat, req, |cat, auth| {
+            if !auth.operator {
+                return Err(RucioError::AccessDenied(format!(
+                    "rebalance status spans every tenant; {} is scoped to VO {}",
+                    auth.account, auth.vo
+                )));
+            }
+            let parents = cat.rules.scan(|r| r.child_rule.is_some());
+            let mut moves = Vec::new();
+            let mut bytes_pending = 0u64;
+            for parent in &parents {
+                let child_id = parent.child_rule.unwrap();
+                let Some(child) = cat.get_rule(child_id).ok() else { continue };
+                if child.state == RuleState::Ok {
+                    continue; // landed; awaiting finalize_moves
+                }
+                let mut pending = 0u64;
+                for lock_key in cat.locks_by_rule.get(&child_id) {
+                    let Some(lock) = cat.locks.get(&lock_key) else { continue };
+                    if lock.state != LockState::Ok {
+                        pending += lock.bytes;
+                    }
+                }
+                bytes_pending += pending;
+                moves.push(
+                    Json::obj()
+                        .with("rule_id", parent.id)
+                        .with("child_rule_id", child_id)
+                        .with("scope", parent.did.scope.as_str())
+                        .with("name", parent.did.name.as_str())
+                        .with("from", parent.rse_expression.as_str())
+                        .with("to", child.rse_expression.as_str())
+                        .with("bytes_pending", pending),
+                );
+            }
+            let decommissions: Vec<Json> = cat
+                .list_rses()
+                .into_iter()
+                .filter_map(|r| {
+                    r.attr("decommission").map(|s| {
+                        Json::obj().with("rse", r.name.as_str()).with("state", s)
+                    })
+                })
+                .collect();
+            Ok(Response::json(
+                200,
+                &Json::obj()
+                    .with("live_moves", moves.len())
+                    .with("bytes_pending", bytes_pending)
+                    .with("moves", Json::Arr(moves))
+                    .with("decommissions", Json::Arr(decommissions)),
+            ))
         })
     });
 
@@ -582,12 +691,7 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
     r.get("/requests", move |req| {
         with_auth(&cat, req, |cat, auth| {
             let limit = parse_limit(req);
-            let cursor: Option<u64> = match req.query_get("cursor") {
-                Some(raw) => Some(raw.parse().map_err(|_| {
-                    RucioError::InvalidValue("malformed request cursor".into())
-                })?),
-                None => None,
-            };
+            let cursor = parse_id_cursor(req, "request")?;
             let state = match req.query_get("state") {
                 Some(raw) => Some(RequestState::parse(raw).ok_or_else(|| {
                     RucioError::InvalidValue(format!("unknown request state {raw}"))
@@ -604,11 +708,8 @@ pub fn build_router(catalog: Arc<Catalog>, broker: Broker) -> Router {
                 .filter(|t| activity.map(|a| t.activity == a).unwrap_or(true))
                 .filter(|t| vos.visible(auth, &t.did.scope))
                 .map(request_json);
-            let mut resp = Response::ndjson(200, items);
-            if let Some(next) = page.next_cursor {
-                resp = resp.with_header("x-rucio-next-cursor", &next.to_string());
-            }
-            Ok(resp)
+            let resp = Response::ndjson(200, items);
+            Ok(with_next_cursor(resp, page.next_cursor.map(|n| n.to_string())))
         })
     });
     // Boost: raise a request's scheduling priority; a WAITING request
@@ -671,6 +772,28 @@ fn parse_limit(req: &Request) -> usize {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1000)
         .clamp(1, 10_000)
+}
+
+/// Every paginated list route resumes through the same header: the
+/// opaque cursor crosses the wire percent-encoded in
+/// `x-rucio-next-cursor` and comes back verbatim as `cursor`.
+fn with_next_cursor(resp: Response, next: Option<String>) -> Response {
+    match next {
+        Some(n) => resp.with_header("x-rucio-next-cursor", &crate::httpd::percent_encode(&n)),
+        None => resp,
+    }
+}
+
+/// Numeric-id cursor shared by `/rules` and `/requests`: the row id the
+/// previous page stopped at; anything else is a 400.
+fn parse_id_cursor(req: &Request, what: &str) -> Result<Option<u64>> {
+    match req.query_get("cursor") {
+        Some(raw) => raw
+            .parse()
+            .map(Some)
+            .map_err(|_| RucioError::InvalidValue(format!("malformed {what} cursor"))),
+        None => Ok(None),
+    }
 }
 
 /// Replica-table cursors cross the wire as `rse␞scope␞name` (unit

@@ -295,6 +295,8 @@ impl Driver {
             Box::new(tracer::DistanceUpdater { ctx: ctx.clone() }),
             Box::new(necromancer::Necromancer::new(ctx.clone(), "necro-1")),
             Box::new(auditor::Auditor::new(ctx.clone(), "aud-1")),
+            Box::new(c3po::HeatC3po::new(ctx.clone())),
+            Box::new(bb8::Bb8Daemon::new(ctx.clone())),
         ]
     }
 

@@ -30,7 +30,15 @@
 //!    foreign-VO rows" rests on);
 //! 8. **vo-usage-rollup** — global usage equals the Σ of per-VO usage
 //!    equals the Σ of per-VO lock charges (rule → account → VO), so
-//!    tenant accounting never loses or double-counts a byte.
+//!    tenant accounting never loses or double-counts a byte;
+//! 9. **cache-rule-backing** — every C3PO cache replica is rule-backed:
+//!    each "Dynamic Placement" rule carries a lifetime (so the reaper can
+//!    reclaim cold caches) and its locks point at real replicas, i.e. the
+//!    heat-driven placement loop never leaks unaccounted cache copies;
+//! 10. **heat-agreement** — the decayed heat table and the lifetime
+//!    popularity table agree: both are fed by the same read-trace path,
+//!    so they hold rows for exactly the same DIDs and identical raw
+//!    access tallies.
 
 use std::collections::BTreeMap;
 
@@ -63,6 +71,8 @@ pub fn check(cat: &Catalog) -> Vec<Violation> {
     check_counter_agreement(cat, &mut out);
     check_vo_isolation(cat, &mut out);
     check_vo_usage_rollup(cat, &mut out);
+    check_cache_rule_backing(cat, &mut out);
+    check_heat_agreement(cat, &mut out);
     out
 }
 
@@ -408,6 +418,7 @@ fn check_counter_agreement(cat: &Catalog, out: &mut Vec<Violation>) {
     one(&cat.subscriptions, out);
     one(&cat.outbox, out);
     one(&cat.popularity, out);
+    one(&cat.heat, out);
     // ...and the monitoring registry reports exactly those counters.
     let snap = cat.registry.snapshot();
     for (name, len) in [
@@ -422,6 +433,81 @@ fn check_counter_agreement(cat: &Catalog, out: &mut Vec<Violation>) {
                 detail: format!("registry reports {:?} for {name}, table says {len}", snap.get(name)),
             });
         }
+    }
+}
+
+/// C3PO cache replicas are always rule-backed (§6.1): every rule the
+/// placement daemon issued (activity "Dynamic Placement") must carry an
+/// expiry — that is the whole reclamation contract with the reaper — and
+/// each of its non-stuck locks must point at an existing replica row, so
+/// a cache copy can never outlive its rule unaccounted.
+fn check_cache_rule_backing(cat: &Catalog, out: &mut Vec<Violation>) {
+    cat.rules.for_each(|r| {
+        if r.activity != crate::placement::CACHE_ACTIVITY {
+            return;
+        }
+        if r.expires_at.is_none() {
+            out.push(Violation {
+                invariant: "cache-rule-backing",
+                detail: format!(
+                    "cache rule {} on {} has no lifetime — the reaper can never reclaim it",
+                    r.id, r.rse_expression
+                ),
+            });
+        }
+        for lock_key in cat.locks_by_rule.get(&r.id) {
+            let Some(lock) = cat.locks.get(&lock_key) else { continue };
+            if lock.state != LockState::Stuck
+                && cat.replicas.get(&(lock.rse.clone(), lock.did.clone())).is_none()
+            {
+                out.push(Violation {
+                    invariant: "cache-rule-backing",
+                    detail: format!(
+                        "cache rule {} lock on {}@{} has no replica behind it",
+                        r.id, lock.did, lock.rse
+                    ),
+                });
+            }
+        }
+    });
+}
+
+/// The decayed heat table and the lifetime popularity table are fed by
+/// the same read-trace path, in lock-step: they must cover exactly the
+/// same DIDs with identical raw access tallies, and every heat score
+/// must be a finite non-negative number.
+fn check_heat_agreement(cat: &Catalog, out: &mut Vec<Violation>) {
+    let mut pop: BTreeMap<crate::core::types::DidKey, u64> = BTreeMap::new();
+    cat.popularity.for_each(|p| {
+        pop.insert(p.did.clone(), p.accesses);
+    });
+    cat.heat.for_each(|h| {
+        match pop.remove(&h.did) {
+            Some(accesses) if accesses == h.accesses => {}
+            Some(accesses) => out.push(Violation {
+                invariant: "heat-agreement",
+                detail: format!(
+                    "{}: heat counts {} accesses but popularity counts {accesses}",
+                    h.did, h.accesses
+                ),
+            }),
+            None => out.push(Violation {
+                invariant: "heat-agreement",
+                detail: format!("{} has a heat row but no popularity row", h.did),
+            }),
+        }
+        if !h.score.is_finite() || h.score < 0.0 {
+            out.push(Violation {
+                invariant: "heat-agreement",
+                detail: format!("{} has a degenerate heat score {}", h.did, h.score),
+            });
+        }
+    });
+    for (did, _) in pop {
+        out.push(Violation {
+            invariant: "heat-agreement",
+            detail: format!("{did} has a popularity row but no heat row"),
+        });
     }
 }
 

@@ -74,6 +74,13 @@ pub enum Event {
     /// Recall storm: staging rules for up to `datasets` archived RAW
     /// datasets onto Tier-1 disk (activity "Staging", 7-day lifetime).
     TapeRecallStorm { datasets: usize },
+    /// Flash crowd: one dataset goes viral — a burst of `accesses` read
+    /// traces against its files lands at once (round-robin over the
+    /// files, each read served from a live replica). The tracer folds
+    /// the burst into popularity + decayed heat, and the C3PO daemon
+    /// converts the heat into short-lived cache replicas that the reaper
+    /// reclaims once the crowd passes.
+    FlashCrowd { scope: String, name: String, accesses: usize },
     /// Link-saturation storm: a burst of single-activity replication
     /// rules flooding one destination (`rse_expression`), so its inbound
     /// links hit the throttler's admission caps and the FTS per-link
@@ -200,6 +207,29 @@ pub fn apply(ctx: &Ctx, event: &Event, now: EpochMs) {
         Event::DaemonCrash { .. } | Event::DaemonRestart { .. } | Event::ProcessCrash => {
             // handled by the driver, which owns the daemon fleet and the
             // catalog handle
+        }
+        Event::FlashCrowd { scope, name, accesses } => {
+            let ds = crate::core::types::DidKey::new(scope, name);
+            let files = cat.resolve_files(&ds);
+            let mut emitted = 0usize;
+            if !files.is_empty() {
+                for i in 0..*accesses {
+                    let f = &files[i % files.len()];
+                    let Some(rep) = cat.available_replicas(&f.key).into_iter().next() else {
+                        continue;
+                    };
+                    crate::daemons::tracer::emit_trace(
+                        &ctx.broker,
+                        now,
+                        "download",
+                        &rep.rse,
+                        &f.key.scope,
+                        &f.key.name,
+                    );
+                    emitted += 1;
+                }
+            }
+            cat.metrics.incr("scenario.flash_crowd_traces", emitted as u64);
         }
         Event::LinkSaturationStorm { rse_expression, datasets, activity } => {
             let mut issued = 0;
@@ -354,6 +384,35 @@ mod tests {
         assert_eq!(storm.len(), 3);
         assert!(storm.iter().all(|r| r.activity == "Production"));
         assert!(storm.iter().all(|r| r.expires_at.is_some()));
+    }
+
+    #[test]
+    fn flash_crowd_drives_heat_through_the_tracer() {
+        use crate::core::types::{DidKey, ReplicaState};
+        use crate::daemons::tracer::Tracer;
+        use crate::daemons::Daemon;
+        let ctx = ctx();
+        let cat = &ctx.catalog;
+        // subscribe before the burst so the tracer sees every message
+        let mut tracer = Tracer::new(ctx.clone());
+        cat.add_dataset("data18", "viral.ds", "root").unwrap();
+        let ds = DidKey::new("data18", "viral.ds");
+        for i in 0..2 {
+            cat.add_file("data18", &format!("viral.f{i}"), "root", 100, "aabbccdd", None)
+                .unwrap();
+            let f = DidKey::new("data18", &format!("viral.f{i}"));
+            cat.attach(&ds, &f).unwrap();
+            cat.add_replica("DE-T1-DISK", &f, ReplicaState::Available, None).unwrap();
+        }
+        apply(
+            &ctx,
+            &Event::FlashCrowd { scope: "data18".into(), name: "viral.ds".into(), accesses: 10 },
+            cat.now(),
+        );
+        assert_eq!(cat.metrics.counter("scenario.flash_crowd_traces"), 10);
+        assert_eq!(tracer.tick(cat.now()), 10);
+        assert_eq!(cat.popularity.get(&ds).unwrap().accesses, 10);
+        assert!(cat.heat_score(&ds, cat.now()) >= 9.0, "the dataset is hot");
     }
 
     #[test]

@@ -87,7 +87,9 @@ fn userpass_token_lifecycle_with_expiry() {
     let resp = c.get("/scopes").unwrap();
     assert_eq!(resp.status, 401, "expired token must be rejected");
     let body = resp.body_json().unwrap();
-    assert!(body.req_str("error").unwrap().contains("expired"), "{body}");
+    let env = body.get("error").expect("error envelope");
+    assert_eq!(env.req_str("code").unwrap(), "CannotAuthenticate");
+    assert!(env.req_str("message").unwrap().contains("expired"), "{body}");
 }
 
 #[test]
@@ -159,9 +161,12 @@ fn error_status_code_contract() {
         .with("rse_expression", "X-DISK")
         .with("copies", 1u64);
     assert_eq!(c.post_json("/rules", &rule).unwrap().status, 413);
-    // error body carries the machine-readable status
+    // error body carries the machine-readable envelope
     let resp = c.post_json("/rules", &rule).unwrap();
-    assert_eq!(resp.body_json().unwrap().req_u64("status").unwrap(), 413);
+    let body = resp.body_json().unwrap();
+    let env = body.get("error").expect("error envelope");
+    assert_eq!(env.req_str("code").unwrap(), "QuotaExceeded");
+    assert!(env.req_str("message").unwrap().contains("quota"), "{body}");
 }
 
 // ---------------------------------------------------------------------
@@ -244,8 +249,222 @@ fn cursor_pagination_round_trips_exactly_once() {
 fn malformed_cursors_are_400() {
     let (srv, _cat) = server();
     let c = authed_client(&srv);
-    assert_eq!(c.get("/rules?cursor=not-a-number").unwrap().status, 400);
-    assert_eq!(c.get("/replicas?cursor=garbage-without-separators").unwrap().status, 400);
+    // every structured-cursor route rejects garbage with the envelope
+    for path in [
+        "/rules?cursor=not-a-number",
+        "/requests?cursor=not-a-number",
+        "/replicas?cursor=garbage-without-separators",
+    ] {
+        assert_envelope(&c.get(path).unwrap(), 400, "InvalidValue");
+    }
+}
+
+/// Walk a paginated NDJSON route page by page; returns (rows, pages).
+fn walk_pages(c: &HttpClient, base: &str, limit: usize) -> (usize, usize) {
+    let sep = if base.contains('?') { '&' } else { '?' };
+    let (mut rows, mut pages) = (0usize, 0usize);
+    let mut cursor: Option<String> = None;
+    loop {
+        let path = match &cursor {
+            Some(cur) => format!("{base}{sep}limit={limit}&cursor={cur}"),
+            None => format!("{base}{sep}limit={limit}"),
+        };
+        let resp = c.get(&path).unwrap();
+        assert_eq!(resp.status, 200, "{path}");
+        let page = resp.body_ndjson().unwrap();
+        assert!(page.len() <= limit, "page overflows limit on {path}");
+        rows += page.len();
+        pages += 1;
+        assert!(pages < 100, "cursor must make progress on {base}");
+        match resp.header("x-rucio-next-cursor") {
+            Some(next) => cursor = Some(next.to_string()),
+            None => break,
+        }
+    }
+    (rows, pages)
+}
+
+#[test]
+fn pagination_contract_holds_on_all_four_cursor_routes() {
+    let (srv, _cat) = server();
+    let c = authed_client(&srv);
+    // 12 files with replicas (rules over them complete instantly), plus
+    // 6 replica-less files whose rules stay as queued transfer requests.
+    for i in 0..12 {
+        let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+        assert_eq!(c.post_json(&format!("/dids/user.alice/p{i:02}"), &file).unwrap().status, 201);
+        assert_eq!(
+            c.post_json(&format!("/replicas/X-DISK/user.alice/p{i:02}"), &Json::obj())
+                .unwrap()
+                .status,
+            201
+        );
+        let rule = Json::obj()
+            .with("scope", "user.alice")
+            .with("name", format!("p{i:02}"))
+            .with("rse_expression", "X-DISK");
+        assert_eq!(c.post_json("/rules", &rule).unwrap().status, 201);
+    }
+    for i in 0..6 {
+        let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+        assert_eq!(c.post_json(&format!("/dids/user.alice/q{i:02}"), &file).unwrap().status, 201);
+        let rule = Json::obj()
+            .with("scope", "user.alice")
+            .with("name", format!("q{i:02}"))
+            .with("rse_expression", "X-DISK");
+        assert_eq!(c.post_json("/rules", &rule).unwrap().status, 201);
+    }
+
+    // Same limit/cursor params, same header, exactly-once coverage —
+    // on every one of the four routes.
+    assert_eq!(walk_pages(&c, "/dids/user.alice", 5), (18, 4));
+    assert_eq!(walk_pages(&c, "/replicas", 5), (12, 3));
+    assert_eq!(walk_pages(&c, "/rules", 5), (18, 4));
+    assert_eq!(walk_pages(&c, "/requests", 5), (6, 2));
+    // the shared limit clamp: limit=0 is lifted to 1, not a crash
+    let resp = c.get("/dids/user.alice?limit=0").unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body_ndjson().unwrap().len(), 1);
+}
+
+// ---------------------------------------------------------------------
+// error envelope shape
+// ---------------------------------------------------------------------
+
+/// Assert one error response: the expected status plus the uniform
+/// `{"error": {"code", "message"}}` body — and nothing else in it.
+fn assert_envelope(resp: &rucio::httpd::Response, status: u16, code: &str) {
+    assert_eq!(resp.status, status, "{}", String::from_utf8_lossy(&resp.body));
+    let body = resp.body_json().unwrap();
+    assert_eq!(body.as_obj().map(|o| o.len()), Some(1), "envelope only: {body}");
+    let env = body.get("error").expect("error envelope");
+    assert_eq!(env.req_str("code").unwrap(), code, "{body}");
+    assert!(!env.req_str("message").unwrap().is_empty(), "{body}");
+}
+
+#[test]
+fn every_error_path_answers_the_same_envelope() {
+    let (srv, cat) = server();
+    // unauthenticated: missing and forged tokens
+    let raw = HttpClient::new(&srv.url());
+    assert_envelope(&raw.get("/scopes").unwrap(), 401, "CannotAuthenticate");
+    raw.set_header("x-rucio-auth-token", "forged");
+    assert_envelope(&raw.get("/scopes").unwrap(), 401, "CannotAuthenticate");
+
+    let c = authed_client(&srv);
+    // 404s (missing DID / rule / route) and 405 (wrong method): even the
+    // router's own fallbacks speak the envelope
+    assert_envelope(&c.get("/dids/user.alice/nope").unwrap(), 404, "DidNotFound");
+    assert_envelope(&c.get("/rules/999999").unwrap(), 404, "RuleNotFound");
+    assert_envelope(&c.get("/no/such/route").unwrap(), 404, "RouteNotFound");
+    assert_envelope(&c.delete("/ping").unwrap(), 405, "MethodNotAllowed");
+    // 400s: bad DID type, bad id, malformed metadata filter
+    let bad = Json::obj().with("type", "WEIRD");
+    assert_envelope(&c.post_json("/dids/user.alice/w", &bad).unwrap(), 400, "InvalidValue");
+    assert_envelope(&c.get("/rules/not-a-number").unwrap(), 400, "InvalidValue");
+    assert_envelope(
+        &c.get("/dids/user.alice?filter=run%3E%3DRAW").unwrap(),
+        400,
+        "InvalidMetaExpression",
+    );
+    // 403 / 409 / 413
+    assert_envelope(&c.post_json("/rses/EVIL", &Json::obj()).unwrap(), 403, "AccessDenied");
+    let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+    assert_eq!(c.post_json("/dids/user.alice/f1", &file).unwrap().status, 201);
+    assert_envelope(&c.post_json("/dids/user.alice/f1", &file).unwrap(), 409, "Duplicate");
+    cat.set_account_limit("alice", "X-DISK", 5).unwrap();
+    let rule = Json::obj()
+        .with("scope", "user.alice")
+        .with("name", "f1")
+        .with("rse_expression", "X-DISK")
+        .with("copies", 1u64);
+    assert_envelope(&c.post_json("/rules", &rule).unwrap(), 413, "QuotaExceeded");
+}
+
+// ---------------------------------------------------------------------
+// placement & rebalancing surface
+// ---------------------------------------------------------------------
+
+#[test]
+fn popularity_route_reports_the_heat_signal() {
+    let (srv, cat) = server();
+    let c = authed_client(&srv);
+    let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+    assert_eq!(c.post_json("/dids/user.alice/hot", &file).unwrap().status, 201);
+
+    // never read → zeroed signal
+    let resp = c.get("/dids/user.alice/hot/popularity").unwrap();
+    assert_eq!(resp.status, 200);
+    let j = resp.body_json().unwrap();
+    assert_eq!(j.req_u64("accesses").unwrap(), 0);
+    assert_eq!(j.get("heat_score").and_then(Json::as_f64), Some(0.0));
+
+    // three accesses land in both counters and the decayed score
+    let key = rucio::core::types::DidKey::new("user.alice", "hot");
+    for _ in 0..3 {
+        cat.touch_replica("X-DISK", &key);
+    }
+    let j = c.get("/dids/user.alice/hot/popularity").unwrap().body_json().unwrap();
+    assert_eq!(j.req_u64("accesses").unwrap(), 3);
+    let score = j.get("heat_score").and_then(Json::as_f64).unwrap();
+    assert!(score > 2.9 && score <= 3.0, "fresh heat ≈ 3, got {score}");
+    assert!(j.req_u64("heat_half_life_ms").unwrap() > 0);
+
+    // unknown name under an owned scope is a plain 404
+    assert_envelope(&c.get("/dids/user.alice/cold/popularity").unwrap(), 404, "DidNotFound");
+}
+
+#[test]
+fn new_routes_hold_the_tenant_and_admin_gates() {
+    let (srv, cat) = server();
+    two_tenants(&cat);
+    let at = login(&srv, "at1", "pw");
+    let cm = login(&srv, "cm1", "pw");
+    let root = login(&srv, "root", "rootpw");
+    let file = Json::obj().with("type", "FILE").with("bytes", 10u64).with("adler32", "x");
+    assert_eq!(at.post_json("/dids/user.at1/f1", &file).unwrap().status, 201);
+
+    // popularity: guarded like every scope-addressed read — foreign VO
+    // 403s even for names that don't exist, own VO and the operator read
+    assert_envelope(&cm.get("/dids/user.at1/f1/popularity").unwrap(), 403, "AccessDenied");
+    assert_envelope(&cm.get("/dids/user.at1/ghost/popularity").unwrap(), 403, "AccessDenied");
+    assert_eq!(at.get("/dids/user.at1/f1/popularity").unwrap().status, 200);
+    assert_eq!(root.get("/dids/user.at1/f1/popularity").unwrap().status, 200);
+
+    // rebalance status spans every tenant → instance operator only
+    assert_envelope(&at.get("/rebalance/status").unwrap(), 403, "AccessDenied");
+    assert_envelope(&cm.get("/rebalance/status").unwrap(), 403, "AccessDenied");
+    let j = root.get("/rebalance/status").unwrap().body_json().unwrap();
+    assert_eq!(j.req_u64("live_moves").unwrap(), 0);
+    assert!(j.get("decommissions").and_then(Json::as_arr).unwrap().is_empty());
+
+    // decommission: plain tenants and VO admins are refused, the
+    // operator flags the RSE for the BB8 daemon
+    assert_envelope(
+        &cm.post_json("/rses/X-DISK/decommission", &Json::obj()).unwrap(),
+        403,
+        "AccessDenied",
+    );
+    assert_envelope(
+        &root.post_json("/rses/GHOST-RSE/decommission", &Json::obj()).unwrap(),
+        404,
+        "RseNotFound",
+    );
+    let resp = root.post_json("/rses/X-DISK/decommission", &Json::obj()).unwrap();
+    assert_eq!(resp.status, 202);
+    assert_eq!(resp.body_json().unwrap().req_str("decommission").unwrap(), "pending");
+    assert_eq!(cat.get_rse("X-DISK").unwrap().attr("decommission"), Some("pending"));
+    // flagging again never restarts the lifecycle
+    cat.set_rse_attribute("X-DISK", "decommission", "draining").unwrap();
+    let resp = root.post_json("/rses/X-DISK/decommission", &Json::obj()).unwrap();
+    assert_eq!(resp.status, 202);
+    assert_eq!(resp.body_json().unwrap().req_str("decommission").unwrap(), "draining");
+    // and the ledger shows up in the status view
+    let j = root.get("/rebalance/status").unwrap().body_json().unwrap();
+    let decoms = j.get("decommissions").and_then(Json::as_arr).unwrap();
+    assert_eq!(decoms.len(), 1);
+    assert_eq!(decoms[0].req_str("rse").unwrap(), "X-DISK");
+    assert_eq!(decoms[0].req_str("state").unwrap(), "draining");
 }
 
 // ---------------------------------------------------------------------
@@ -499,8 +718,10 @@ fn suspending_an_account_revokes_its_live_tokens() {
     cat.suspend_account("alice").unwrap();
     let resp = c.get("/scopes").unwrap();
     assert_eq!(resp.status, 401, "old token must die with the account");
+    let body = resp.body_json().unwrap();
     assert!(
-        resp.body_json().unwrap().req_str("error").unwrap().contains("suspended"),
+        body.get("error").unwrap().req_str("message").unwrap().contains("suspended"),
+        "{body}"
     );
     // and re-authentication is refused too
     let raw = HttpClient::new(&srv.url());

@@ -1,0 +1,201 @@
+//! End-to-end dynamic placement & rebalancing: the heat-driven C3PO
+//! daemon and the BB8 decommission lifecycle running inside the full
+//! simulated grid with the complete invariant suite on (including the
+//! cache-rule-backing and heat-agreement invariants). A flash crowd
+//! makes one dataset go viral: caches must appear while the crowd is
+//! hot, and be reaped — rules expired, copies deleted — once it passes.
+
+use rucio::common::clock::{HOUR_MS, MINUTE_MS};
+use rucio::common::config::Config;
+use rucio::core::rules_api::RuleSpec;
+use rucio::core::types::{DidKey, ReplicaState};
+use rucio::placement::CACHE_ACTIVITY;
+use rucio::sim::driver::{standard_driver, Driver};
+use rucio::sim::grid::GridSpec;
+use rucio::sim::scenario::{Event, Scenario};
+use rucio::sim::workload::WorkloadSpec;
+use rucio::storagesim::synthetic_adler32_for;
+
+/// 10 virtual minutes per discrete-event tick.
+const TICK: i64 = 10 * MINUTE_MS;
+
+/// Placement rig: small grid, modest workload, invariant checks every 2
+/// virtual hours. Caches live 36 virtual hours and heat halves every 6,
+/// so one crowd's caches are created and reaped inside a few days.
+fn placement_driver(seed: u64) -> Driver {
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "1h");
+    cfg.set("heartbeat", "ttl", "45m");
+    cfg.set("c3po", "lifetime", "36h");
+    cfg.set("heat", "half_life", "6h");
+    let mut driver = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 2,
+            files_per_dataset: 2,
+            derivations_per_day: 1,
+            analysis_accesses_per_day: 10,
+            seed: seed ^ 0xA0D,
+            ..Default::default()
+        },
+        cfg,
+    );
+    driver.enable_invariant_checks(2 * HOUR_MS);
+    driver
+}
+
+fn assert_no_violations(d: &Driver) {
+    assert!(
+        d.violations.is_empty(),
+        "system invariants violated: {:?}",
+        d.violations.iter().take(5).collect::<Vec<_>>()
+    );
+}
+
+/// A closed 3-file dataset resident (and pinned) on DE-T1-DISK.
+fn seed_viral_dataset(d: &Driver) -> (DidKey, Vec<DidKey>) {
+    let cat = d.ctx.catalog.clone();
+    let now = cat.now();
+    cat.add_dataset("data18", "viral.ds", "root").unwrap();
+    let ds = DidKey::new("data18", "viral.ds");
+    let mut files = Vec::new();
+    for j in 0..3 {
+        let fname = format!("viral.f{j}");
+        let bytes = 50_000_000u64;
+        let adler = synthetic_adler32_for(&fname, bytes);
+        cat.add_file("data18", &fname, "root", bytes, &adler, None).unwrap();
+        let key = DidKey::new("data18", &fname);
+        let rep = cat.add_replica("DE-T1-DISK", &key, ReplicaState::Available, None).unwrap();
+        d.ctx.fleet.get("DE-T1-DISK").unwrap().put(&rep.pfn, bytes, now).unwrap();
+        cat.attach(&ds, &key).unwrap();
+        files.push(key);
+    }
+    cat.close(&ds).unwrap();
+    // origin pin: the reaper must not garbage-collect the only source
+    cat.add_rule(RuleSpec::new("root", ds.clone(), "DE-T1-DISK", 1)).unwrap();
+    (ds, files)
+}
+
+/// Three read bursts against the viral dataset inside one day.
+fn crowd() -> Scenario {
+    let burst = |accesses| Event::FlashCrowd {
+        scope: "data18".into(),
+        name: "viral.ds".into(),
+        accesses,
+    };
+    Scenario::new("flash crowd")
+        .at_hours(2, burst(30))
+        .at_hours(5, burst(30))
+        .at_hours(8, burst(30))
+}
+
+#[test]
+fn flash_crowd_caches_are_created_then_reaped() {
+    let mut d = placement_driver(2001);
+    let (ds, files) = seed_viral_dataset(&d);
+    d.run_days(1, TICK); // warm steady state
+    d.schedule_scenario(&crowd());
+    d.run_days(1, TICK); // the crowd day
+
+    let cat = d.ctx.catalog.clone();
+    let caches: Vec<_> = cat.rules.scan(|r| r.activity == CACHE_ACTIVITY && r.did == ds);
+    assert!(!caches.is_empty(), "heat must trigger a cache placement during the crowd");
+    assert!(caches.iter().all(|r| r.expires_at.is_some()), "caches always expire");
+    assert_ne!(caches[0].rse_expression, "DE-T1-DISK", "cache lands off the origin");
+    assert!(cat.metrics.counter("c3po.placements") >= 1);
+
+    // the crowd passes: heat decays, rules expire, the reaper reclaims
+    d.run_days(3, TICK);
+    assert_no_violations(&d);
+    assert!(
+        cat.rules.scan(|r| r.activity == CACHE_ACTIVITY && r.did == ds).is_empty(),
+        "cache rules reaped after the crowd"
+    );
+    for f in &files {
+        let extra: Vec<String> = cat
+            .available_replicas(f)
+            .into_iter()
+            .map(|r| r.rse)
+            .filter(|rse| rse != "DE-T1-DISK")
+            .collect();
+        assert!(extra.is_empty(), "cache copies of {f} reclaimed, found {extra:?}");
+    }
+}
+
+#[test]
+fn flagged_rse_decommissions_to_done() {
+    let seed = 2002u64;
+    let mut cfg = Config::new();
+    cfg.set("common", "seed", seed.to_string());
+    cfg.set("reaper", "tombstone_grace", "1h");
+    cfg.set("heartbeat", "ttl", "45m");
+    // quiet grid: only the seeded data, so the drain can finish fully
+    let mut d = standard_driver(
+        &GridSpec { t2_per_region: 1, seed, ..Default::default() },
+        WorkloadSpec {
+            raw_datasets_per_day: 0,
+            files_per_dataset: 1,
+            derivations_per_day: 0,
+            analysis_accesses_per_day: 0,
+            seed: seed ^ 0xA0D,
+            ..Default::default()
+        },
+        cfg,
+    );
+    d.enable_invariant_checks(2 * HOUR_MS);
+    let cat = d.ctx.catalog.clone();
+    let now = cat.now();
+    let mut keys = Vec::new();
+    for i in 0..2 {
+        let name = format!("decom.f{i}");
+        let bytes = 20_000_000u64;
+        let adler = synthetic_adler32_for(&name, bytes);
+        cat.add_file("data18", &name, "root", bytes, &adler, None).unwrap();
+        let key = DidKey::new("data18", &name);
+        let rep = cat.add_replica("CA-T2-1", &key, ReplicaState::Available, None).unwrap();
+        d.ctx.fleet.get("CA-T2-1").unwrap().put(&rep.pfn, bytes, now).unwrap();
+        cat.add_rule(RuleSpec::new("root", key.clone(), "CA-T2-1|DE-T1-DISK", 1)).unwrap();
+        keys.push(key);
+    }
+    cat.set_rse_attribute("CA-T2-1", "decommission", "pending").unwrap();
+    d.run_days(2, TICK);
+
+    assert_no_violations(&d);
+    let rse = cat.get_rse("CA-T2-1").unwrap();
+    assert_eq!(rse.attr("decommission"), Some("done"));
+    assert!(!rse.availability_write, "decommissioned RSE refuses writes");
+    let mut locks_left = 0;
+    cat.locks.for_each(|l| {
+        if l.rse == "CA-T2-1" {
+            locks_left += 1;
+        }
+    });
+    assert_eq!(locks_left, 0, "nothing pins the decommissioned RSE");
+    for key in &keys {
+        assert!(
+            cat.available_replicas(key).iter().any(|r| r.rse == "DE-T1-DISK"),
+            "{key} moved off the decommissioned RSE"
+        );
+    }
+    assert_eq!(cat.metrics.counter("bb8.decommissions"), 1);
+    assert_eq!(cat.metrics.counter("bb8.decommissions_completed"), 1);
+}
+
+#[test]
+fn placement_runs_are_deterministic_for_a_fixed_seed() {
+    let run = |seed: u64| {
+        let mut d = placement_driver(seed);
+        seed_viral_dataset(&d);
+        d.run_days(1, TICK);
+        d.schedule_scenario(&crowd());
+        d.run_days(2, TICK);
+        assert_no_violations(&d);
+        let placements = d.ctx.catalog.metrics.counter("c3po.placements");
+        (d.days, placements)
+    };
+    let a = run(4321);
+    let b = run(4321);
+    assert_eq!(a, b, "fixed seed must reproduce identical placement runs");
+    assert!(a.1 >= 1, "the crowd produced at least one placement");
+}

@@ -76,7 +76,7 @@ fn threaded_soak_full_fleet_and_rest_load_end_with_clean_invariants() {
     }
 
     let mut fleet = FleetHandle::spawn(Paced::fleet(Driver::standard_daemons(&ctx), 50));
-    assert_eq!(fleet.len(), 15, "the whole standard fleet is live");
+    assert_eq!(fleet.len(), 17, "the whole standard fleet is live");
     let server = rucio::server::serve(
         ctx.catalog.clone(),
         ctx.broker.clone(),
